@@ -1,0 +1,67 @@
+//! Quickstart: boot a small TARRAGON cluster, serve a handful of requests,
+//! and print the generated tokens plus latency metrics.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tarragon::config::Config;
+use tarragon::coordinator::cluster::{Cluster, LaunchOptions};
+use tarragon::modelcfg::{weights::Weights, Manifest};
+use tarragon::workload::Request;
+
+fn main() {
+    // 1. Load the AOT artifacts produced by `make artifacts`.
+    let dir = Manifest::default_dir();
+    let manifest = Arc::new(Manifest::load(&dir).expect("run `make artifacts` first"));
+    let weights = Weights::load(&manifest).expect("weights");
+    println!(
+        "model: {} layers, hidden {}, {} experts (top-{}), vocab {}",
+        manifest.model.layers,
+        manifest.model.hidden,
+        manifest.model.experts,
+        manifest.model.top_k,
+        manifest.model.vocab
+    );
+
+    // 2. A tiny cluster: 2 attention workers, 2 expert workers, plus the
+    //    checkpoint store, orchestrator and gateway.
+    let mut cfg = Config::default();
+    cfg.cluster.num_aws = 2;
+    cfg.cluster.num_ews = 2;
+    cfg.transport.worker_extra_init = Duration::from_millis(10);
+
+    // 3. Three requests with different prompts/lengths.
+    let schedule = vec![
+        Request { id: 0, arrival_s: 0.0, prompt: vec![1, 2, 3, 4], max_new_tokens: 12 },
+        Request { id: 1, arrival_s: 0.05, prompt: (10..30).collect(), max_new_tokens: 16 },
+        Request { id: 2, arrival_s: 0.1, prompt: vec![100, 200, 300], max_new_tokens: 8 },
+    ];
+
+    println!("launching cluster (worker init is the paper's T_w)...");
+    let cluster = Cluster::launch(
+        cfg,
+        manifest,
+        weights,
+        schedule,
+        LaunchOptions::default(),
+    );
+    assert!(cluster.wait_done(Duration::from_secs(120)), "did not finish");
+
+    for id in 0..3u64 {
+        println!("request {id}: tokens {:?}", cluster.gw.generated_of(id));
+    }
+    let report = cluster.finish(1.0);
+    let ttft = report.analysis.ttft();
+    let tbt = report.analysis.tbt();
+    println!(
+        "finished {}/{} | TTFT median {:.1} ms | TBT median {:.2} ms | {:.0} tok/s",
+        report.finished,
+        report.submitted,
+        ttft.median_ms,
+        tbt.median_ms,
+        report.analysis.throughput_tps
+    );
+}

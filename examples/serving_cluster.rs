@@ -1,0 +1,56 @@
+//! End-to-end serving driver (the repo's validation workload): load the
+//! model artifacts, serve a Poisson stream of batched requests on the full
+//! decoupled cluster, and report latency/throughput — optionally under an
+//! injected failure.
+//!
+//! Run with:
+//!   cargo run --release --example serving_cluster -- \
+//!       [--rps 3] [--duration 15] [--workload sharegpt|random] \
+//!       [--aws 2] [--ews 2] [--kill-ew-at 6.0]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Duration;
+
+use tarragon::config::WorkloadKind;
+use tarragon::experiments::common::{run_serving, FailureSpec, ServeSpec, SystemKind};
+use tarragon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let rps = args.f64_or("rps", 3.0).unwrap();
+    let duration = args.f64_or("duration", 15.0).unwrap();
+    let wl = WorkloadKind::parse(&args.str_or("workload", "sharegpt")).expect("workload");
+    let mut spec = ServeSpec::new(SystemKind::Tarragon, wl, rps, duration);
+    spec.num_aws = args.usize_or("aws", 2).unwrap();
+    spec.num_ews = args.usize_or("ews", 2).unwrap();
+    spec.drain_timeout = Duration::from_secs(180);
+    if let Some(t) = args.str_opt("kill-ew-at").and_then(|s| s.parse::<f64>().ok()) {
+        spec.failure = Some(FailureSpec::KillEw { at_secs: t, idx: 0 });
+    }
+    args.finish().expect("args");
+
+    println!(
+        "serving {} workload at {} RPS for {}s on {} AWs + {} EWs{}",
+        args.str_or("workload", "sharegpt"),
+        rps,
+        duration,
+        spec.num_aws,
+        spec.num_ews,
+        if spec.failure.is_some() { " (with EW failure injection)" } else { "" }
+    );
+    let out = run_serving(&spec);
+    let a = &out.analysis;
+    let ttft = a.ttft();
+    let tbt = a.tbt();
+    println!("── results ───────────────────────────────────────────");
+    println!("requests:   {}/{} finished", out.finished, out.submitted);
+    println!("tokens:     {} total, {:.0} tok/s", a.total_tokens, a.throughput_tps);
+    println!("TTFT:       median {:.1} ms, p95 {:.1} ms", ttft.median_ms, ttft.p95_ms);
+    println!("TBT:        median {:.2} ms, p95 {:.2} ms", tbt.median_ms, tbt.p95_ms);
+    println!("max stall:  {:.3} s", a.max_token_gap_s);
+    if out.aw_failures + out.ew_failures > 0 {
+        println!("failures:   {} AW, {} EW (all self-healed)", out.aw_failures, out.ew_failures);
+    }
+    assert!(out.finished > 0, "no requests completed");
+}

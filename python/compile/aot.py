@@ -1,0 +1,199 @@
+"""AOT pipeline: lower every artifact to HLO text + emit weights/manifest.
+
+Run once at build time (`make artifacts`); Python never runs on the request
+path. Outputs under ``artifacts/``:
+
+  manifest.json     model config, buckets, artifact specs, weight table
+  weights.bin       all parameters as one little-endian f32 blob
+  golden.json       reference generation fixture (prompt -> token ids),
+                    produced by the pure-jnp oracle; the Rust integration
+                    suite replays it through the full cluster
+  *.hlo.txt         one HLO-text module per (artifact kind, shape bucket)
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import MODEL, BUCKETS, WEIGHT_SEED, model_dict, buckets_dict
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text via stablehlo (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_artifact_plan():
+    """Every artifact: (name, kind, bucket, jax fn, input specs, output specs).
+
+    Input order here *is* the call ABI the Rust runtime uses.
+    """
+    m = MODEL
+    h, kvh, d, s, e, f, v = (m.hidden, m.kv_heads, m.head_dim, m.max_seq,
+                             m.experts, m.ffn, m.vocab)
+    plan = []
+
+    attn_w = [
+        _io("wq", (h, h)), _io("wk", (h, kvh * d)), _io("wv", (h, kvh * d)),
+        _io("wo", (h, h)), _io("ln1", (h,)), _io("ln2", (h,)),
+    ]
+    attn_w_specs = [spec((h, h)), spec((h, kvh * d)), spec((h, kvh * d)),
+                    spec((h, h)), spec((h,)), spec((h,))]
+
+    for t in BUCKETS.prefill_t:
+        plan.append(dict(
+            name=f"attn_prefill_t{t}", kind="attn_prefill", bucket=t,
+            fn=model.attn_prefill,
+            in_specs=[spec((t, h))] + attn_w_specs,
+            inputs=[_io("x", (t, h))] + attn_w,
+            outputs=[_io("h", (t, h)), _io("g", (t, h)),
+                     _io("k", (t, kvh, d)), _io("v", (t, kvh, d))],
+        ))
+
+    for b in BUCKETS.decode_b:
+        plan.append(dict(
+            name=f"attn_decode_b{b}", kind="attn_decode", bucket=b,
+            fn=model.attn_decode,
+            in_specs=[spec((b, h)), spec((b, s, kvh, d)), spec((b, s, kvh, d)),
+                      spec((b,), jnp.int32)] + attn_w_specs,
+            inputs=[_io("x", (b, h)), _io("k_cache", (b, s, kvh, d)),
+                    _io("v_cache", (b, s, kvh, d)), _io("pos", (b,), I32)]
+                   + attn_w,
+            outputs=[_io("h", (b, h)), _io("g", (b, h)),
+                     _io("k_new", (b, kvh, d)), _io("v_new", (b, kvh, d))],
+        ))
+
+    for b in BUCKETS.router_b(MODEL):
+        plan.append(dict(
+            name=f"router_b{b}", kind="router", bucket=b,
+            fn=model.router,
+            in_specs=[spec((b, h)), spec((h, e))],
+            inputs=[_io("g", (b, h)), _io("wg", (h, e))],
+            outputs=[_io("probs", (b, e))],
+        ))
+
+    for b in BUCKETS.expert_b:
+        plan.append(dict(
+            name=f"expert_b{b}", kind="expert", bucket=b,
+            fn=model.expert_ffn,
+            in_specs=[spec((b, h)), spec((h, f)), spec((h, f)), spec((f, h))],
+            inputs=[_io("x", (b, h)), _io("w1", (h, f)), _io("w3", (h, f)),
+                    _io("w2", (f, h))],
+            outputs=[_io("y", (b, h))],
+        ))
+
+    for b in BUCKETS.lm_head_b:
+        plan.append(dict(
+            name=f"lm_head_b{b}", kind="lm_head", bucket=b,
+            fn=model.lm_head,
+            in_specs=[spec((b, h)), spec((h,)), spec((h, v))],
+            inputs=[_io("h", (b, h)), _io("ln_f", (h,)), _io("wlm", (h, v))],
+            outputs=[_io("logits", (b, v))],
+        ))
+    return plan
+
+
+def write_weights(out_dir: str, weights: dict) -> dict:
+    """Concatenate all tensors into weights.bin; return the offset table."""
+    table = []
+    offset = 0
+    blob_path = os.path.join(out_dir, "weights.bin")
+    with open(blob_path, "wb") as fh:
+        for name, arr in weights.items():
+            data = np.ascontiguousarray(arr, dtype=np.float32).tobytes()
+            fh.write(data)
+            table.append({
+                "name": name, "shape": list(arr.shape),
+                "offset": offset, "nbytes": len(data), "dtype": F32,
+            })
+            offset += len(data)
+    return {"file": "weights.bin", "total_bytes": offset, "tensors": table}
+
+
+def write_golden(out_dir: str, weights: dict):
+    """Golden generation fixture for the Rust integration tests."""
+    cases = []
+    for prompt, n_dec in [([1, 2, 3, 4, 5, 6, 7, 8], 12),
+                          ([42, 17, 300, 9], 8)]:
+        ids = model.reference_generate(prompt, n_dec, weights)
+        cases.append({"prompt": prompt, "generated": ids})
+    with open(os.path.join(out_dir, "golden.json"), "w") as fh:
+        json.dump({"cases": cases}, fh, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--skip-golden", action="store_true",
+                    help="skip the (slow) golden-fixture generation")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    weights = model.generate_weights(WEIGHT_SEED)
+    weight_meta = write_weights(out_dir, weights)
+    print(f"weights.bin: {weight_meta['total_bytes']} bytes, "
+          f"{len(weight_meta['tensors'])} tensors")
+
+    artifacts_meta = []
+    for art in build_artifact_plan():
+        t0 = time.time()
+        lowered = jax.jit(art["fn"]).lower(*art["in_specs"])
+        text = to_hlo_text(lowered)
+        fname = art["name"] + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        artifacts_meta.append({
+            "name": art["name"], "kind": art["kind"], "bucket": art["bucket"],
+            "file": fname, "inputs": art["inputs"], "outputs": art["outputs"],
+        })
+        print(f"  {art['name']:<20} {len(text):>9} chars  "
+              f"({time.time() - t0:.2f}s)")
+
+    manifest = {
+        "version": 1,
+        "model": model_dict(),
+        "buckets": buckets_dict(),
+        "weight_seed": WEIGHT_SEED,
+        "artifacts": artifacts_meta,
+        "weights": weight_meta,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"manifest.json: {len(artifacts_meta)} artifacts")
+
+    if not args.skip_golden:
+        t0 = time.time()
+        write_golden(out_dir, weights)
+        print(f"golden.json ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Single source of truth for the model configuration and artifact buckets.
+
+The Rust runtime consumes these values through ``artifacts/manifest.json``
+emitted by ``aot.py``; nothing on the Rust side hard-codes dimensions.
+
+The configuration is a scaled-down Mixtral-8x7B ("mixtral-tiny") preserving
+the structural ratios the paper's arguments depend on (see DESIGN.md §1):
+8 experts / top-2 routing, SwiGLU FFN, GQA with a 4:1 head ratio so the
+KV-checkpoint-to-expert-traffic ratio matches Appendix C (12.5%).
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the MoE transformer served by the cluster."""
+
+    layers: int = 4
+    hidden: int = 128
+    heads: int = 4
+    kv_heads: int = 1
+    ffn: int = 256           # SwiGLU intermediate size
+    experts: int = 8
+    top_k: int = 2
+    vocab: int = 512
+    max_seq: int = 160       # prompt <= 96, decode <= 128 fit with headroom
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class Buckets:
+    """Static shape buckets each artifact is AOT-compiled for.
+
+    HLO is static-shape; the Rust coordinator pads each call to the smallest
+    bucket that fits and slices the result (see rust/src/runtime).
+    """
+
+    prefill_t: List[int] = field(default_factory=lambda: [32, 96])
+    decode_b: List[int] = field(default_factory=lambda: [1, 2, 4, 8])
+    # expert buckets double as the Fig. 13(b) latency-vs-batch sweep points
+    expert_b: List[int] = field(
+        default_factory=lambda: [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    )
+    lm_head_b: List[int] = field(default_factory=lambda: [1, 2, 4, 8])
+
+    def router_b(self, cfg: ModelConfig, prefill: List[int] = None) -> List[int]:
+        """Router runs on decode batches and on whole prefill prompts."""
+        pre = self.prefill_t if prefill is None else prefill
+        return sorted(set(self.decode_b) | set(pre))
+
+
+MODEL = ModelConfig()
+BUCKETS = Buckets()
+
+# Seed for deterministic weight generation; shared with python tests so the
+# pytest oracle and the Rust runtime see identical parameters.
+WEIGHT_SEED = 0x7A44A60  # "tarragon"
+
+
+def model_dict() -> dict:
+    d = asdict(MODEL)
+    d["head_dim"] = MODEL.head_dim
+    d["kv_dim"] = MODEL.kv_dim
+    return d
+
+
+def buckets_dict() -> dict:
+    return {
+        "prefill_t": BUCKETS.prefill_t,
+        "decode_b": BUCKETS.decode_b,
+        "expert_b": BUCKETS.expert_b,
+        "router_b": BUCKETS.router_b(MODEL),
+        "lm_head_b": BUCKETS.lm_head_b,
+    }

@@ -1,0 +1,191 @@
+"""L1 Pallas kernels: flash-style attention (prefill + decode).
+
+The paper's AW hot-spot is vLLM's paged-attention CUDA kernel. The TPU
+rethink (DESIGN.md §7):
+
+- *decode*: flash-decoding — the grid walks KV-cache blocks resident in
+  HBM, staging one [block_s, kv, d] tile into VMEM per step and keeping an
+  online-softmax state (running max / denominator / f32 accumulator) in
+  scratch, so nothing of size S*S is ever materialized. The current token's
+  K/V (not yet written to the cache) are folded into the online softmax in
+  the final grid step — this is what lets the Rust AW run attention and
+  cache-append as a single artifact call.
+- *prefill*: classic flash attention with a causal mask, grid over
+  (head, q-block, k-block).
+
+Both kernels use `interpret=True` (CPU PJRT cannot run Mosaic custom-calls;
+interpret-mode lowers to plain HLO the Rust runtime executes).
+
+Masking uses -1e30 rather than -inf so fully-masked tiles stay NaN-free.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Decode: one query token per request against a padded KV cache
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(q_ref, kc_ref, vc_ref, kn_ref, vn_ref, pos_ref,
+                   o_ref, m_scr, l_scr, acc_scr, *, block_s, group, scale):
+    s_idx = pl.program_id(1)
+    n_s = pl.num_programs(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                     # [heads, d]
+    k = kc_ref[0]                    # [block_s, kv, d]
+    v = vc_ref[0]
+    pos = pos_ref[0]                 # scalar: valid cache length for this row
+    base = s_idx * block_s
+
+    kx = jnp.repeat(k, group, axis=1)   # [block_s, heads, d]  (GQA broadcast)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("hd,shd->hs", q, kx) * scale        # [heads, block_s]
+    valid = (base + jax.lax.iota(jnp.int32, block_s)) < pos  # [block_s]
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("hs,shd->hd", p, vx)
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        # Fold in the current token's K/V (logically at cache index `pos`).
+        k_cur = jnp.repeat(kn_ref[0], group, axis=0)   # [heads, d]
+        v_cur = jnp.repeat(vn_ref[0], group, axis=0)
+        s_cur = jnp.sum(q * k_cur, axis=-1) * scale    # [heads]
+        m_fin = jnp.maximum(m_scr[...], s_cur)
+        alpha2 = jnp.exp(m_scr[...] - m_fin)
+        e_cur = jnp.exp(s_cur - m_fin)
+        denom = l_scr[...] * alpha2 + e_cur
+        out = acc_scr[...] * alpha2[:, None] + e_cur[:, None] * v_cur
+        o_ref[0] = out / denom[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, block_s: int = 32):
+    """Flash-decoding. See kernels/ref.py::decode_attention_ref for shapes."""
+    b, heads, d = q.shape
+    s = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    group = heads // kv
+    bs = min(block_s, s)
+    while s % bs != 0:
+        bs -= 1
+    grid = (b, s // bs)
+    kernel = functools.partial(
+        _decode_kernel, block_s=bs, group=group, scale=1.0 / (d ** 0.5)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, heads, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, kv, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, bs, kv, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, kv, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, kv, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, si: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, heads, d), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, heads, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((heads,), jnp.float32),
+            pltpu.VMEM((heads,), jnp.float32),
+            pltpu.VMEM((heads, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k_cache, v_cache, k_new, v_new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: causal flash attention over the whole prompt
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                    *, block_q, block_k, scale):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[:, 0, :]               # [block_q, d]
+    k = k_ref[:, 0, :]               # [block_k, d]
+    v = v_ref[:, 0, :]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    causal = q_pos[:, None] >= k_pos[None, :]
+    scores = jnp.where(causal, scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    p = jnp.where(causal, p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[:, 0, :] = acc_scr[...] / l_scr[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(q, k, v, block_q: int = 32, block_k: int = 32):
+    """Causal flash attention. q: [T,heads,d], k/v: [T,kv,d] -> [T,heads,d]."""
+    t, heads, d = q.shape
+    kv = k.shape[1]
+    group = heads // kv
+    bq = min(block_q, t)
+    while t % bq != 0:
+        bq -= 1
+    bk = min(block_k, t)
+    while t % bk != 0:
+        bk -= 1
+    grid = (heads, t // bq, t // bk)
+    kernel = functools.partial(
+        _prefill_kernel, block_q=bq, block_k=bk, scale=1.0 / (d ** 0.5)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, d), lambda h, iq, ik: (iq, h, 0)),
+            pl.BlockSpec((bk, 1, d), lambda h, iq, ik: (ik, h // group, 0)),
+            pl.BlockSpec((bk, 1, d), lambda h, iq, ik: (ik, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, d), lambda h, iq, ik: (iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, heads, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: tiled SwiGLU expert FFN.
+
+This is the EW-side compute hot-spot of the paper (libtorch CUDA FFN in the
+original). Rethought for TPU rather than ported (DESIGN.md §7):
+
+- the grid tiles (batch, ffn) so each step stages an x-tile plus one
+  column-tile of w1/w3 (and the matching row-tile of w2) from HBM into
+  VMEM via BlockSpec — the TPU analogue of the paper's threadblock tiling;
+- both matmuls and the SwiGLU gate are fused in one kernel so the [bm, bf]
+  activation tile never round-trips to HBM;
+- the output tile is accumulated in f32 across the ffn grid axis
+  (revisited output block), which is the canonical Pallas reduction.
+
+``interpret=True`` is mandatory here: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel to plain HLO that the
+Rust runtime's CPU client can run (see /opt/xla-example/README.md).
+
+VMEM budget at full scale (H=4096, F=14336, bm=128, bf=512, bf16):
+x-tile 1 MiB + w1/w3 tiles 4 MiB each + w2 tile 4 MiB + acc 1 MiB
+≈ 14 MiB < 16 MiB VMEM with double-buffering of the weight streams
+disabled, or bf=256 with it enabled. At mixtral-tiny scale the tiles are
+chosen with the same divisibility rules so the structure is identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One (m, f) grid step: o[m] += swiglu(x[m] @ w1[:, f], x[m] @ w3[:, f]) @ w2[f, :]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                       # [bm, H]
+    a = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)  # [bm, bf]
+    g = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)  # [bm, bf]
+    h = (a * (1.0 / (1.0 + jnp.exp(-a)))) * g                        # SwiGLU gate
+    o_ref[...] += jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (power-of-2 dims)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f"))
+def swiglu_ffn(x, w1, w3, w2, block_m: int = 64, block_f: int = 128):
+    """SwiGLU FFN as a Pallas call. Shapes: x [B,H], w1/w3 [H,F], w2 [F,H]."""
+    b, h = x.shape
+    f = w1.shape[1]
+    bm = pick_block(b, block_m)
+    bf = pick_block(f, block_f)
+    grid = (b // bm, f // bf)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda m, fi: (m, 0)),   # x tile
+            pl.BlockSpec((h, bf), lambda m, fi: (0, fi)),  # w1 column tile
+            pl.BlockSpec((h, bf), lambda m, fi: (0, fi)),  # w3 column tile
+            pl.BlockSpec((bf, h), lambda m, fi: (fi, 0)),  # w2 row tile
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda m, fi: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2)

@@ -1,0 +1,106 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness).
+
+These functions are the ground truth the pytest + hypothesis suites compare
+the Pallas kernels against. They are deliberately written in the most
+obvious dense form (materializing full score matrices etc.) so that any
+cleverness lives only in the kernels.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    """SiLU / swish activation."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def swiglu_ffn_ref(x, w1, w3, w2):
+    """SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2.
+
+    x: [B, H], w1: [H, F], w3: [H, F], w2: [F, H] -> [B, H]
+    """
+    a = x @ w1
+    g = x @ w3
+    return (silu(a) * g) @ w2
+
+
+def rms_norm_ref(x, gamma, eps=1e-5):
+    """RMSNorm over the last axis. x: [..., H], gamma: [H]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma
+
+
+def rope_ref(x, positions, theta=10000.0):
+    """Rotary embedding (rotate-half convention).
+
+    x: [..., n_heads, head_dim]; positions broadcastable to x.shape[:-2].
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def prefill_attention_ref(q, k, v):
+    """Causal multi-head attention over a full prompt (GQA: kv broadcast).
+
+    q: [T, n_heads, d], k, v: [T, n_kv, d] -> [T, n_heads, d]
+    """
+    t, n_heads, d = q.shape
+    n_kv = k.shape[1]
+    group = n_heads // n_kv
+    kx = jnp.repeat(k, group, axis=1)  # [T, n_heads, d]
+    vx = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.einsum("qhd,khd->hqk", q, kx) * scale  # [n_heads, T, T]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, vx)
+
+
+def decode_attention_ref(q, k_cache, v_cache, k_new, v_new, pos):
+    """Single-token attention against a padded KV cache.
+
+    q:       [B, n_heads, d]   query for the current token
+    k_cache: [B, S, n_kv, d]   valid entries are [0, pos_b) per batch row
+    v_cache: [B, S, n_kv, d]
+    k_new:   [B, n_kv, d]      current token's projections (not yet in cache)
+    v_new:   [B, n_kv, d]
+    pos:     [B] int32         number of valid cache entries per row
+    returns  [B, n_heads, d]
+    """
+    b, n_heads, d = q.shape
+    s = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    kx = jnp.repeat(k_cache, group, axis=2)               # [B, S, n_heads, d]
+    vx = jnp.repeat(v_cache, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, kx) * scale   # [B, n_heads, S]
+    idx = jnp.arange(s)[None, :]                          # [1, S]
+    valid = idx < pos[:, None]                            # [B, S]
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    k_cur = jnp.repeat(k_new, group, axis=1)              # [B, n_heads, d]
+    v_cur = jnp.repeat(v_new, group, axis=1)
+    s_cur = jnp.einsum("bhd,bhd->bh", q, k_cur) * scale   # [B, n_heads]
+    m = jnp.maximum(jnp.max(scores, axis=-1), s_cur)      # [B, n_heads]
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[:, None, :], e, 0.0)
+    e_cur = jnp.exp(s_cur - m)
+    denom = jnp.sum(e, axis=-1) + e_cur
+    out = jnp.einsum("bhs,bshd->bhd", e, vx) + e_cur[..., None] * v_cur
+    return out / denom[..., None]
+
+
+def router_ref(g, wg):
+    """Gating network: softmax over expert logits. g: [B, H], wg: [H, E]."""
+    logits = g @ wg
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

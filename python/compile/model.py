@@ -1,0 +1,225 @@
+"""L2: the MoE transformer compute graph, decomposed into per-role entry
+points that are each AOT-lowered to one HLO artifact (see aot.py).
+
+The decomposition mirrors the paper's decoupled attention-expert deployment:
+
+- ``attn_prefill`` / ``attn_decode`` run on Attention Workers. One call is
+  one transformer layer's attention sub-block *including* RMSNorm, RoPE,
+  residual add, and the post-attention norm (``g``), so the Rust AW makes a
+  single artifact call per layer per step and never does tensor math beyond
+  expert-output accumulation.
+- ``router`` produces the gating distribution; top-k selection happens in
+  the Rust coordinator (it is control flow, not compute, and the ERT lookup
+  that follows is the paper's contribution).
+- ``expert_ffn`` (the L1 Pallas kernel) runs on Expert Workers.
+- ``lm_head`` maps the final hidden state to logits.
+
+All functions take weights as *runtime arguments* so a single artifact
+serves every layer / expert; the Rust runtime uploads the weight blobs once
+per worker at init (part of T_w).
+
+``reference_generate`` is the pure-jnp end-to-end oracle used by the pytest
+suite and to produce the golden-token fixture the Rust integration tests
+compare against.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import MODEL
+from .kernels.attention import decode_attention, prefill_attention
+from .kernels.expert_ffn import swiglu_ffn
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks (lowered inline into each artifact)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma):
+    return ref.rms_norm_ref(x, gamma, eps=MODEL.rms_eps)
+
+
+def rope(x, positions):
+    return ref.rope_ref(x, positions, theta=MODEL.rope_theta)
+
+
+def _project_qkv(n, wq, wk, wv):
+    """n: [N, H] -> q [N, heads, d], k/v [N, kv_heads, d]."""
+    m = MODEL
+    num = n.shape[0]
+    q = (n @ wq).reshape(num, m.heads, m.head_dim)
+    k = (n @ wk).reshape(num, m.kv_heads, m.head_dim)
+    v = (n @ wv).reshape(num, m.kv_heads, m.head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Artifact entry points
+# ---------------------------------------------------------------------------
+
+def attn_prefill(x, wq, wk, wv, wo, ln1, ln2):
+    """One layer's attention sub-block over a whole prompt.
+
+    x: [T, H] token embeddings (or previous layer's hidden states).
+    Returns (h, g, k, v):
+      h [T, H]  hidden after residual add (input to next layer),
+      g [T, H]  post-attention RMSNorm (router / expert input),
+      k [T, kv, d], v [T, kv, d]  KV-cache entries for positions 0..T-1.
+    """
+    t = x.shape[0]
+    n = rms_norm(x, ln1)
+    q, k, v = _project_qkv(n, wq, wk, wv)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    attn = prefill_attention(q, k, v)                    # L1 Pallas kernel
+    h = x + attn.reshape(t, MODEL.hidden) @ wo
+    g = rms_norm(h, ln2)
+    return h, g, k, v
+
+
+def attn_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, ln1, ln2):
+    """One layer's attention sub-block for one decode step of a batch.
+
+    x: [B, H]; k_cache/v_cache: [B, S, kv, d] (valid prefix length pos[b]);
+    pos: [B] int32. Returns (h, g, k_new, v_new); the Rust AW writes
+    k_new/v_new into its cache at index pos[b] after the call.
+    """
+    b = x.shape[0]
+    n = rms_norm(x, ln1)
+    q, k_new, v_new = _project_qkv(n, wq, wk, wv)
+    q = rope(q, pos)
+    k_new = rope(k_new, pos)
+    attn = decode_attention(q, k_cache, v_cache, k_new, v_new, pos)  # L1
+    h = x + attn.reshape(b, MODEL.hidden) @ wo
+    g = rms_norm(h, ln2)
+    return h, g, k_new, v_new
+
+
+def router(g, wg):
+    """Gating network: g [B, H], wg [H, E] -> probs [B, E] (softmax)."""
+    return ref.router_ref(g, wg)
+
+
+def expert_ffn(x, w1, w3, w2):
+    """One expert's SwiGLU FFN over a token batch (the L1 Pallas kernel)."""
+    return swiglu_ffn(x, w1, w3, w2)
+
+
+def lm_head(h, ln_f, wlm):
+    """Final norm + vocabulary projection. h: [B, H] -> logits [B, V]."""
+    return rms_norm(h, ln_f) @ wlm
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def generate_weights(seed: int) -> dict:
+    """Deterministic synthetic weights; shared by pytest and `make artifacts`.
+
+    Returns a dict name -> np.float32 array (insertion-ordered). The naming
+    convention is consumed by the Rust manifest loader (modelcfg::weights).
+    """
+    m = MODEL
+    rng = np.random.default_rng(seed)
+
+    def mat(rows, cols, scale=None):
+        s = scale if scale is not None else 1.0 / np.sqrt(rows)
+        return (rng.standard_normal((rows, cols)) * s).astype(np.float32)
+
+    w = {}
+    w["embed"] = mat(m.vocab, m.hidden, scale=1.0)
+    for layer in range(m.layers):
+        p = f"layer{layer}."
+        w[p + "wq"] = mat(m.hidden, m.hidden)
+        w[p + "wk"] = mat(m.hidden, m.kv_dim)
+        w[p + "wv"] = mat(m.hidden, m.kv_dim)
+        w[p + "wo"] = mat(m.hidden, m.hidden)
+        w[p + "ln1"] = np.ones(m.hidden, dtype=np.float32)
+        w[p + "ln2"] = np.ones(m.hidden, dtype=np.float32)
+        w[p + "router"] = mat(m.hidden, m.experts)
+        for e in range(m.experts):
+            q = f"{p}expert{e}."
+            w[q + "w1"] = mat(m.hidden, m.ffn)
+            w[q + "w3"] = mat(m.hidden, m.ffn)
+            w[q + "w2"] = mat(m.ffn, m.hidden)
+    w["ln_f"] = np.ones(m.hidden, dtype=np.float32)
+    w["lm_head"] = mat(m.hidden, m.vocab)
+    return w
+
+
+def layer_weights(w: dict, layer: int):
+    p = f"layer{layer}."
+    return tuple(
+        jnp.asarray(w[p + k]) for k in ("wq", "wk", "wv", "wo", "ln1", "ln2")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp end-to-end oracle (tests + golden fixture)
+# ---------------------------------------------------------------------------
+
+def _moe_block(g, w, layer):
+    """Dense reference MoE: route each row to its top-k experts."""
+    m = MODEL
+    probs = router(g, jnp.asarray(w[f"layer{layer}.router"]))  # [N, E]
+    topv, topi = jax.lax.top_k(probs, m.top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)        # renormalize
+    out = jnp.zeros_like(g)
+    for e in range(m.experts):
+        pe = f"layer{layer}.expert{e}."
+        y = ref.swiglu_ffn_ref(
+            g, jnp.asarray(w[pe + "w1"]), jnp.asarray(w[pe + "w3"]),
+            jnp.asarray(w[pe + "w2"]))
+        weight = jnp.sum(jnp.where(topi == e, topv, 0.0), axis=-1)  # [N]
+        out = out + weight[:, None] * y
+    return out
+
+
+def reference_generate(prompt_ids, n_decode: int, w: dict):
+    """Greedy generation with the dense reference pipeline.
+
+    prompt_ids: list[int]; returns list[int] of n_decode generated ids.
+    Mirrors exactly what the Rust cluster computes (same top-k tie-break:
+    jax.lax.top_k is stable by index, as is the Rust router).
+    """
+    m = MODEL
+    embed = jnp.asarray(w["embed"])
+    t = len(prompt_ids)
+    x = embed[jnp.asarray(prompt_ids, dtype=jnp.int32)]        # [T, H]
+
+    k_caches = []   # per layer, growing [cur_len, kv, d]
+    v_caches = []
+    for layer in range(m.layers):
+        h, g, k, v = attn_prefill(x, *layer_weights(w, layer))
+        moe = _moe_block(g, w, layer)
+        x = h + moe
+        k_caches.append(k)
+        v_caches.append(v)
+
+    out_ids = []
+    last = x[-1:]                                               # [1, H]
+    logits = lm_head(last, jnp.asarray(w["ln_f"]), jnp.asarray(w["lm_head"]))
+    next_id = int(jnp.argmax(logits[0]))
+    out_ids.append(next_id)
+
+    for step in range(1, n_decode):
+        pos = t + step - 1                                      # cache length
+        x = embed[jnp.asarray([next_id], dtype=jnp.int32)]      # [1, H]
+        for layer in range(m.layers):
+            kc = k_caches[layer][None, ...]                     # [1, pos, kv, d]
+            vc = v_caches[layer][None, ...]
+            h, g, k_new, v_new = attn_decode(
+                x, kc, vc, jnp.asarray([pos], dtype=jnp.int32),
+                *layer_weights(w, layer))
+            k_caches[layer] = jnp.concatenate([k_caches[layer], k_new], axis=0)
+            v_caches[layer] = jnp.concatenate([v_caches[layer], v_new], axis=0)
+            moe = _moe_block(g, w, layer)
+            x = h + moe
+        logits = lm_head(x, jnp.asarray(w["ln_f"]), jnp.asarray(w["lm_head"]))
+        next_id = int(jnp.argmax(logits[0]))
+        out_ids.append(next_id)
+    return out_ids

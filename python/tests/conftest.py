@@ -1,0 +1,22 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Tests are run from python/ (see Makefile); make the package importable
+# regardless of the invocation directory.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model  # noqa: E402
+from compile.configs import WEIGHT_SEED  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def weights():
+    return model.generate_weights(WEIGHT_SEED)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

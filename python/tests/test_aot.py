@@ -1,0 +1,95 @@
+"""AOT pipeline: artifact plan coverage, manifest/weights integrity."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import MODEL, BUCKETS, WEIGHT_SEED
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return aot.build_artifact_plan()
+
+
+def test_plan_covers_every_bucket(plan):
+    names = {a["name"] for a in plan}
+    for t in BUCKETS.prefill_t:
+        assert f"attn_prefill_t{t}" in names
+    for b in BUCKETS.decode_b:
+        assert f"attn_decode_b{b}" in names
+    for b in BUCKETS.expert_b:
+        assert f"expert_b{b}" in names
+    for b in BUCKETS.router_b(MODEL):
+        assert f"router_b{b}" in names
+    for b in BUCKETS.lm_head_b:
+        assert f"lm_head_b{b}" in names
+    assert len(names) == len(plan), "duplicate artifact names"
+
+
+def test_plan_io_specs_match_fn_signature(plan):
+    """Lowering each entry with its in_specs must produce outputs whose
+    shapes match the declared output specs (the Rust-side ABI)."""
+    for art in plan:
+        out = jax.eval_shape(art["fn"], *art["in_specs"])
+        flat = out if isinstance(out, tuple) else (out,)
+        assert len(flat) == len(art["outputs"]), art["name"]
+        for got, want in zip(flat, art["outputs"]):
+            assert list(got.shape) == want["shape"], (art["name"], want["name"])
+
+
+def test_hlo_text_emission(tmp_path):
+    """Lower one small artifact end-to-end and sanity-check the HLO text."""
+    art = [a for a in aot.build_artifact_plan() if a["name"] == "router_b1"][0]
+    lowered = jax.jit(art["fn"]).lower(*art["in_specs"])
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "ROOT" in text
+    # return_tuple=True: the root must be a tuple so the Rust side can
+    # uniformly unwrap outputs.
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_write_weights_roundtrip(tmp_path):
+    w = model.generate_weights(WEIGHT_SEED)
+    meta = aot.write_weights(str(tmp_path), w)
+    blob = np.fromfile(tmp_path / "weights.bin", dtype=np.float32)
+    assert meta["total_bytes"] == blob.nbytes
+    # Reconstruct a few tensors from the offset table and compare.
+    table = {t["name"]: t for t in meta["tensors"]}
+    for name in ("embed", "layer0.wq", "layer1.expert3.w2", "lm_head"):
+        t = table[name]
+        start = t["offset"] // 4
+        n = int(np.prod(t["shape"]))
+        np.testing.assert_array_equal(
+            blob[start:start + n].reshape(t["shape"]), w[name])
+
+
+def test_weight_table_is_dense_and_ordered(tmp_path):
+    w = model.generate_weights(WEIGHT_SEED)
+    meta = aot.write_weights(str(tmp_path), w)
+    offset = 0
+    for t in meta["tensors"]:
+        assert t["offset"] == offset, "weight blob must be densely packed"
+        assert t["nbytes"] == int(np.prod(t["shape"])) * 4
+        offset += t["nbytes"]
+
+
+def test_artifacts_dir_manifest_consistent():
+    """If `make artifacts` has run, the manifest must describe every file."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(mpath))
+    assert manifest["model"]["hidden"] == MODEL.hidden
+    assert manifest["model"]["layers"] == MODEL.layers
+    for art in manifest["artifacts"]:
+        path = os.path.join(art_dir, art["file"])
+        assert os.path.exists(path), art["file"]
+        assert os.path.getsize(path) > 0
+    wpath = os.path.join(art_dir, manifest["weights"]["file"])
+    assert os.path.getsize(wpath) == manifest["weights"]["total_bytes"]

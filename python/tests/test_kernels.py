@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps the shape space (batch sizes, sequence lengths, head
+configurations, block sizes) and asserts allclose against kernels/ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, prefill_attention
+from compile.kernels.expert_ffn import swiglu_ffn, pick_block
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU expert FFN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 4, 8, 16, 64, 256]),
+    h=st.sampled_from([32, 128]),
+    f=st.sampled_from([64, 256]),
+    block_m=st.sampled_from([1, 8, 64]),
+    block_f=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_matches_ref(b, h, f, block_m, block_f, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, b, h)
+    w1 = _arr(rng, h, f, scale=h ** -0.5)
+    w3 = _arr(rng, h, f, scale=h ** -0.5)
+    w2 = _arr(rng, f, h, scale=f ** -0.5)
+    got = swiglu_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3),
+                     jnp.asarray(w2), block_m=block_m, block_f=block_f)
+    want = ref.swiglu_ffn_ref(jnp.asarray(x), jnp.asarray(w1),
+                              jnp.asarray(w3), jnp.asarray(w2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_swiglu_extreme_values():
+    """Gate saturation must not produce NaN/Inf."""
+    rng = np.random.default_rng(0)
+    x = _arr(rng, 4, 32, scale=50.0)  # drives silu into both tails
+    w1 = _arr(rng, 32, 64)
+    w3 = _arr(rng, 32, 64)
+    w2 = _arr(rng, 64, 32)
+    got = np.asarray(swiglu_ffn(*map(jnp.asarray, (x, w1, w3, w2))))
+    want = np.asarray(ref.swiglu_ffn_ref(*map(jnp.asarray, (x, w1, w3, w2))))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_pick_block_divides():
+    for dim in (1, 2, 4, 96, 128, 160, 256):
+        for pref in (1, 32, 64, 128):
+            b = pick_block(dim, pref)
+            assert dim % b == 0 and 1 <= b <= min(dim, pref)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (flash-decoding vs dense oracle)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    heads_kv=st.sampled_from([(4, 1), (4, 2), (2, 2), (8, 1)]),
+    s=st.sampled_from([32, 96, 160]),
+    block_s=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, heads_kv, s, block_s, seed):
+    heads, kv = heads_kv
+    d = 16
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, b, heads, d)
+    kc = _arr(rng, b, s, kv, d)
+    vc = _arr(rng, b, s, kv, d)
+    kn = _arr(rng, b, kv, d)
+    vn = _arr(rng, b, kv, d)
+    pos = rng.integers(0, s + 1, size=(b,)).astype(np.int32)
+    args = tuple(map(jnp.asarray, (q, kc, vc, kn, vn, pos)))
+    got = decode_attention(*args, block_s=block_s)
+    want = ref.decode_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_decode_attention_empty_cache():
+    """pos=0: output must equal v_new exactly (only the current token)."""
+    rng = np.random.default_rng(7)
+    b, heads, kv, d, s = 2, 4, 1, 16, 32
+    q = _arr(rng, b, heads, d)
+    kc = np.zeros((b, s, kv, d), np.float32)
+    vc = np.zeros((b, s, kv, d), np.float32)
+    kn = _arr(rng, b, kv, d)
+    vn = _arr(rng, b, kv, d)
+    pos = np.zeros(b, np.int32)
+    got = np.asarray(decode_attention(*map(jnp.asarray, (q, kc, vc, kn, vn, pos))))
+    want = np.repeat(vn, heads // kv, axis=1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_decode_attention_ignores_garbage_beyond_pos():
+    """Cache contents past pos must not affect the result."""
+    rng = np.random.default_rng(8)
+    b, heads, kv, d, s = 2, 4, 1, 16, 64
+    q = _arr(rng, b, heads, d)
+    kc = _arr(rng, b, s, kv, d)
+    vc = _arr(rng, b, s, kv, d)
+    kn = _arr(rng, b, kv, d)
+    vn = _arr(rng, b, kv, d)
+    pos = np.array([5, 40], np.int32)
+    base = np.asarray(decode_attention(*map(jnp.asarray, (q, kc, vc, kn, vn, pos))))
+    kc2, vc2 = kc.copy(), vc.copy()
+    for i, p in enumerate(pos):
+        kc2[i, p:] = 1e6
+        vc2[i, p:] = -1e6
+    poisoned = np.asarray(
+        decode_attention(*map(jnp.asarray, (q, kc2, vc2, kn, vn, pos))))
+    np.testing.assert_allclose(base, poisoned, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention (causal flash vs dense oracle)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([4, 32, 96]),
+    heads_kv=st.sampled_from([(4, 1), (4, 2), (2, 1)]),
+    blocks=st.sampled_from([(8, 8), (32, 32), (16, 32)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_attention_matches_ref(t, heads_kv, blocks, seed):
+    heads, kv = heads_kv
+    d = 16
+    bq, bk = blocks
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, t, heads, d)
+    k = _arr(rng, t, kv, d)
+    v = _arr(rng, t, kv, d)
+    got = prefill_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            block_q=bq, block_k=bk)
+    want = ref.prefill_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_prefill_is_causal():
+    """Future tokens must not influence earlier outputs."""
+    rng = np.random.default_rng(9)
+    t, heads, kv, d = 32, 4, 1, 16
+    q = _arr(rng, t, heads, d)
+    k = _arr(rng, t, kv, d)
+    v = _arr(rng, t, kv, d)
+    full = np.asarray(prefill_attention(*map(jnp.asarray, (q, k, v))))
+    # Perturb the tail; the first half of the outputs must be unchanged.
+    k2, v2 = k.copy(), v.copy()
+    k2[t // 2:] += 100.0
+    v2[t // 2:] -= 100.0
+    pert = np.asarray(prefill_attention(*map(jnp.asarray, (q, k2, v2))))
+    np.testing.assert_allclose(full[: t // 2], pert[: t // 2], **TOL)
+
+
+def test_prefill_first_token_is_v0():
+    rng = np.random.default_rng(10)
+    t, heads, kv, d = 8, 2, 1, 16
+    q = _arr(rng, t, heads, d)
+    k = _arr(rng, t, kv, d)
+    v = _arr(rng, t, kv, d)
+    out = np.asarray(prefill_attention(*map(jnp.asarray, (q, k, v))))
+    want = np.repeat(v[:1], heads // kv, axis=1)[0]
+    np.testing.assert_allclose(out[0], want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Decode == prefill consistency (the invariant the AW recovery path relies on)
+# ---------------------------------------------------------------------------
+
+def test_decode_step_extends_prefill():
+    """Attention for token T computed via decode over a cache built by
+    prefill must equal row T of a T+1-token prefill."""
+    rng = np.random.default_rng(11)
+    t, heads, kv, d = 16, 4, 1, 16
+    q_all = _arr(rng, t + 1, heads, d)
+    k_all = _arr(rng, t + 1, kv, d)
+    v_all = _arr(rng, t + 1, kv, d)
+    full = np.asarray(prefill_attention(
+        jnp.asarray(q_all), jnp.asarray(k_all), jnp.asarray(v_all)))
+    s = 32  # padded cache
+    kc = np.zeros((1, s, kv, d), np.float32)
+    vc = np.zeros((1, s, kv, d), np.float32)
+    kc[0, :t] = k_all[:t]
+    vc[0, :t] = v_all[:t]
+    got = np.asarray(decode_attention(
+        jnp.asarray(q_all[t:t + 1]), jnp.asarray(kc), jnp.asarray(vc),
+        jnp.asarray(k_all[t:t + 1]), jnp.asarray(v_all[t:t + 1]),
+        jnp.asarray(np.array([t], np.int32))))
+    np.testing.assert_allclose(got[0], full[t], **TOL)

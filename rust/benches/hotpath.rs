@@ -1,0 +1,119 @@
+//! Micro-benchmarks of the L3 hot paths (custom harness; criterion is not
+//! available offline). One section per paper-relevant cost center:
+//!
+//! - ERT resolution + top-k gating + dispatch grouping (per-layer routing)
+//! - KV batch assembly (the per-layer gather on the decode path)
+//! - checkpoint segment read + streamer queueing
+//! - JSON/manifest parse (startup path)
+//! - transport post/recv round-trip
+//!
+//! Run: cargo bench --offline  (or: cargo bench --bench hotpath)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tarragon::config::TransportConfig;
+use tarragon::coordinator::ert::Ert;
+use tarragon::coordinator::router::{self, ExpertGroups};
+use tarragon::kvcache::{BatchAssembler, RequestKv};
+use tarragon::modelcfg::ModelSpec;
+use tarragon::proto::ClusterMsg;
+use tarragon::tensor::Tensor;
+use tarragon::testing::bench::{bench, black_box};
+use tarragon::transport::{link::TrafficClass, Fabric, NodeId, Plane};
+use tarragon::util::rng::Pcg;
+
+fn model() -> ModelSpec {
+    ModelSpec {
+        layers: 4,
+        hidden: 128,
+        heads: 4,
+        kv_heads: 1,
+        head_dim: 32,
+        ffn: 256,
+        experts: 8,
+        top_k: 2,
+        vocab: 512,
+        max_seq: 160,
+    }
+}
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==");
+    let m = model();
+    let mut rng = Pcg::seeded(42);
+
+    // --- routing: top-k + grouping over a decode batch ------------------
+    let b = 8;
+    let probs = Tensor::new(
+        vec![b, m.experts],
+        (0..b * m.experts).map(|_| rng.f32()).collect(),
+    );
+    bench("router: top-2 select + group (B=8)", 100, 5000, || {
+        let routes = router::select_top_k(&probs, b, m.top_k);
+        black_box(ExpertGroups::from_routes(&routes));
+    });
+
+    // --- ERT resolution --------------------------------------------------
+    let mut ert = Ert::initial(m.experts, 4, true);
+    bench("ert: resolve 8 experts", 100, 10000, || {
+        for e in 0..m.experts {
+            black_box(ert.resolve(e));
+        }
+    });
+    ert.mark_dead(1);
+    bench("ert: resolve with failover (1 dead)", 100, 10000, || {
+        for e in 0..m.experts {
+            black_box(ert.resolve(e));
+        }
+    });
+
+    // --- KV batch assembly (per layer per decode step) -------------------
+    let mut kvs: Vec<RequestKv> = (0..b)
+        .map(|_| {
+            let mut kv = RequestKv::new(&m);
+            kv.set_len(96);
+            kv
+        })
+        .collect();
+    for kv in kvs.iter_mut() {
+        for pos in 0..96 {
+            kv.write(0, pos, &vec![1.0; 32], &vec![2.0; 32]);
+        }
+    }
+    let mut asm = BatchAssembler::new(&m);
+    bench("kvcache: gather batch B=8 S=160 (one layer)", 20, 2000, || {
+        let refs: Vec<&RequestKv> = kvs.iter().collect();
+        black_box(asm.gather(&refs, 0, b, m.kv_heads, m.head_dim));
+    });
+
+    // --- checkpoint segment path ----------------------------------------
+    let kv = &kvs[0];
+    bench("kvcache: read one segment", 100, 10000, || {
+        black_box(kv.read_segment(0, 40));
+    });
+
+    // --- transport round trip ---------------------------------------------
+    let fabric: Arc<Fabric<ClusterMsg>> = Fabric::new(TransportConfig {
+        latency: Duration::ZERO,
+        bandwidth_bps: 1e12,
+        worker_extra_init: Duration::ZERO,
+    });
+    let (inbox, _h) = fabric.register(NodeId::Ew(0));
+    let (_i2, _h2) = fabric.register(NodeId::Aw(0));
+    let qp = fabric.qp(NodeId::Aw(0), NodeId::Ew(0), Plane::Data).unwrap();
+    bench("transport: post + recv (zero-latency link)", 100, 5000, || {
+        qp.post(ClusterMsg::ActiveBeacon { active: true }, 48, TrafficClass::Control)
+            .unwrap();
+        black_box(inbox.recv(Duration::from_millis(10)).unwrap());
+    });
+
+    // --- manifest parse (startup) -----------------------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        bench("json: parse manifest.json", 5, 200, || {
+            black_box(tarragon::util::json::Json::parse(&text).unwrap());
+        });
+    }
+
+    println!("== done ==");
+}

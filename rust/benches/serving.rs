@@ -1,0 +1,120 @@
+//! End-to-end serving benchmarks — one per paper table/figure family:
+//! steady-state decode throughput (Fig. 11), artifact execution costs
+//! (Table 1 inputs / Fig. 13b), and checkpoint-path overhead (§7.4).
+//! Custom harness (criterion is unavailable offline).
+//!
+//! Run: cargo bench --offline --bench serving
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tarragon::config::Config;
+use tarragon::coordinator::cluster::{Cluster, LaunchOptions};
+use tarragon::modelcfg::{weights::Weights, Manifest};
+use tarragon::runtime::{ArgValue, Device, DeviceRole};
+use tarragon::tensor::Tensor;
+use tarragon::testing::bench::{bench, once};
+use tarragon::workload::Request;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    let manifest = Arc::new(manifest);
+    let weights = Weights::load(&manifest).expect("weights");
+    let m = manifest.model.clone();
+
+    println!("== artifact execution (Table 1 inputs / Fig. 13b) ==");
+    let device = Device::spawn(
+        "bench",
+        manifest.clone(),
+        weights.clone(),
+        DeviceRole::Monolithic.plan(&manifest),
+        Duration::ZERO,
+    )
+    .expect("device");
+
+    let b = *manifest.buckets.decode_b.last().unwrap();
+    let s = m.max_seq;
+    let kv_shape = vec![b, s, m.kv_heads, m.head_dim];
+    let kc = Tensor::zeros(kv_shape.clone());
+    let vc = Tensor::zeros(kv_shape);
+    bench(&format!("attn_decode_b{b} (S={s})"), 5, 100, || {
+        let mut args = vec![
+            ArgValue::f32(Tensor::zeros(vec![b, m.hidden])),
+            ArgValue::f32(kc.clone()),
+            ArgValue::f32(vc.clone()),
+            ArgValue::i32(vec![64; b]),
+        ];
+        for wname in ["wq", "wk", "wv", "wo", "ln1", "ln2"] {
+            args.push(ArgValue::weight(format!("layer0.{wname}")));
+        }
+        device.execute(&format!("attn_decode_b{b}"), args).unwrap();
+    });
+
+    let t = *manifest.buckets.prefill_t.last().unwrap();
+    bench(&format!("attn_prefill_t{t}"), 3, 50, || {
+        let mut args = vec![ArgValue::f32(Tensor::zeros(vec![t, m.hidden]))];
+        for wname in ["wq", "wk", "wv", "wo", "ln1", "ln2"] {
+            args.push(ArgValue::weight(format!("layer0.{wname}")));
+        }
+        device.execute(&format!("attn_prefill_t{t}"), args).unwrap();
+    });
+
+    for &eb in &[1usize, 16, 256] {
+        bench(&format!("expert_b{eb} (SwiGLU Pallas kernel)"), 5, 100, || {
+            device
+                .execute(
+                    &format!("expert_b{eb}"),
+                    vec![
+                        ArgValue::f32(Tensor::zeros(vec![eb, m.hidden])),
+                        ArgValue::weight("layer0.expert0.w1"),
+                        ArgValue::weight("layer0.expert0.w3"),
+                        ArgValue::weight("layer0.expert0.w2"),
+                    ],
+                )
+                .unwrap();
+        });
+    }
+    device.shutdown();
+
+    println!("\n== end-to-end cluster (Fig. 11-style throughput) ==");
+    let schedule: Vec<Request> = (0..6u64)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.05 * i as f64,
+            prompt: vec![1 + i as u32; 8],
+            max_new_tokens: 48,
+        })
+        .collect();
+    let mut cfg = Config::default();
+    cfg.cluster.num_aws = 2;
+    cfg.cluster.num_ews = 2;
+    cfg.transport.worker_extra_init = Duration::from_millis(10);
+
+    once("cluster bring-up (2 AW + 2 EW, T_w)", || {
+        let c = Cluster::launch(
+            cfg.clone(),
+            manifest.clone(),
+            weights.clone(),
+            vec![],
+            LaunchOptions::default(),
+        );
+        c.finish(1.0);
+    });
+
+    let c = Cluster::launch(cfg, manifest, weights, schedule, LaunchOptions::default());
+    let t0 = std::time::Instant::now();
+    assert!(c.wait_done(Duration::from_secs(300)));
+    let wall = t0.elapsed();
+    let report = c.finish(1.0);
+    println!(
+        "decode throughput: {:.0} tok/s ({} tokens in {:.2}s, TBT median {:.2} ms)",
+        report.analysis.total_tokens as f64 / wall.as_secs_f64(),
+        report.analysis.total_tokens,
+        wall.as_secs_f64(),
+        report.analysis.tbt().median_ms,
+    );
+}

@@ -1,0 +1,153 @@
+//! Shared compute path for the monolithic baselines: one full MoE
+//! transformer layer (attention + gating + local expert FFNs + combine)
+//! executed on a single device — no AW/EW decoupling, experts run where
+//! the attention ran, exactly like a vLLM-style monolithic worker.
+
+use crate::coordinator::router::{self, ExpertGroups};
+use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::modelcfg::{Buckets, Manifest};
+use crate::runtime::{ArgValue, Device, DeviceError};
+use crate::tensor::{ops, Tensor};
+
+/// One decode step of one layer for a batch, entirely local.
+/// `x` is [bucket, H]; rows beyond `n_valid` are padding.
+#[allow(clippy::too_many_arguments)]
+pub fn local_decode_layer(
+    device: &Device,
+    manifest: &Manifest,
+    asm: &mut BatchAssembler,
+    kvs: &mut [&mut RequestKv],
+    layer: usize,
+    x: &Tensor,
+    bucket: usize,
+    n_valid: usize,
+) -> Result<Tensor, DeviceError> {
+    let m = &manifest.model;
+    let (kc, vc, pos) = {
+        let refs: Vec<&RequestKv> = kvs.iter().map(|k| &**k).collect();
+        asm.gather(&refs, layer, bucket, m.kv_heads, m.head_dim)
+    };
+    let mut args = vec![
+        ArgValue::f32(x.clone()),
+        ArgValue::f32(kc),
+        ArgValue::f32(vc),
+        ArgValue::I32(pos, vec![bucket]),
+    ];
+    args.extend(attn_weight_args(layer));
+    let outs = device.execute(&format!("attn_decode_b{bucket}"), args)?;
+    let (h, g, k_new, v_new) = unpack4(outs);
+    for (i, kv) in kvs.iter_mut().enumerate().take(n_valid) {
+        let cur = kv.len();
+        kv.write(layer, cur, k_new.row(i), v_new.row(i));
+    }
+    let mut h = h;
+    local_moe(device, manifest, layer, &g, &mut h, n_valid)?;
+    Ok(h)
+}
+
+/// One prefill layer for a single request, entirely local.
+pub fn local_prefill_layer(
+    device: &Device,
+    manifest: &Manifest,
+    kv: &mut RequestKv,
+    layer: usize,
+    x: &Tensor,
+    bucket: usize,
+    p_len: usize,
+) -> Result<Tensor, DeviceError> {
+    let mut args = vec![ArgValue::f32(x.clone())];
+    args.extend(attn_weight_args(layer));
+    let outs = device.execute(&format!("attn_prefill_t{bucket}"), args)?;
+    let (h, g, k, v) = unpack4(outs);
+    for posn in 0..p_len {
+        kv.write(layer, posn, k.row(posn), v.row(posn));
+    }
+    let mut h = h;
+    local_moe(device, manifest, layer, &g, &mut h, p_len)?;
+    for i in p_len..bucket {
+        h.row_mut(i).fill(0.0);
+    }
+    Ok(h)
+}
+
+/// Gating + local expert execution + weighted combine for `n_valid` rows.
+pub fn local_moe(
+    device: &Device,
+    manifest: &Manifest,
+    layer: usize,
+    g: &Tensor,
+    h: &mut Tensor,
+    n_valid: usize,
+) -> Result<(), DeviceError> {
+    let m = &manifest.model;
+    let bucket = g.rows();
+    let probs = device.execute(
+        &format!("router_b{bucket}"),
+        vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+    )?;
+    let routes = router::select_top_k(&probs[0], n_valid, m.top_k);
+    let groups = ExpertGroups::from_routes(&routes);
+    let hidden = m.hidden;
+    for (&expert, rows) in &groups.groups {
+        let n = rows.len();
+        let eb = Buckets::fit(&manifest.buckets.expert_b, n)
+            .unwrap_or(*manifest.buckets.expert_b.last().unwrap());
+        let mut data = vec![0.0f32; eb * hidden];
+        for (j, &(row, _)) in rows.iter().enumerate() {
+            data[j * hidden..(j + 1) * hidden].copy_from_slice(g.row(row));
+        }
+        let outs = device.execute(
+            &format!("expert_b{eb}"),
+            vec![
+                ArgValue::f32(Tensor::new(vec![eb, hidden], data)),
+                ArgValue::weight(format!("layer{layer}.expert{expert}.w1")),
+                ArgValue::weight(format!("layer{layer}.expert{expert}.w3")),
+                ArgValue::weight(format!("layer{layer}.expert{expert}.w2")),
+            ],
+        )?;
+        for (j, &(row, w)) in rows.iter().enumerate() {
+            ops::axpy_row(h.row_mut(row), w, outs[0].row(j));
+        }
+    }
+    Ok(())
+}
+
+pub fn lm_head_tokens(
+    device: &Device,
+    manifest: &Manifest,
+    rows: &[&[f32]],
+) -> Result<Vec<u32>, DeviceError> {
+    let m = &manifest.model;
+    let b = rows.len();
+    let bucket = Buckets::fit(&manifest.buckets.lm_head_b, b)
+        .unwrap_or(*manifest.buckets.lm_head_b.last().unwrap());
+    let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+    for (i, r) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(r);
+    }
+    let outs = device.execute(
+        &format!("lm_head_b{bucket}"),
+        vec![ArgValue::f32(x), ArgValue::weight("ln_f"), ArgValue::weight("lm_head")],
+    )?;
+    Ok((0..b).map(|i| ops::argmax(outs[0].row(i)) as u32).collect())
+}
+
+pub fn attn_weight_args(layer: usize) -> Vec<ArgValue> {
+    vec![
+        ArgValue::weight(format!("layer{layer}.wq")),
+        ArgValue::weight(format!("layer{layer}.wk")),
+        ArgValue::weight(format!("layer{layer}.wv")),
+        ArgValue::weight(format!("layer{layer}.wo")),
+        ArgValue::weight(format!("layer{layer}.ln1")),
+        ArgValue::weight(format!("layer{layer}.ln2")),
+    ]
+}
+
+pub fn unpack4(mut outs: Vec<Tensor>) -> (Tensor, Tensor, Tensor, Tensor) {
+    assert_eq!(outs.len(), 4);
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let g = outs.pop().unwrap();
+    let h = outs.pop().unwrap();
+    (h, g, k, v)
+}

@@ -1,0 +1,48 @@
+//! MegaScale-Infer-like baseline: the decoupled attention-expert
+//! deployment *without* TARRAGON's resilience. A single worker failure
+//! triggers the coarse-grained recovery of §2.2: the whole job is torn
+//! down, every worker re-initializes (T_w), and all in-flight requests
+//! replay prefill + decoding from scratch.
+
+use crate::config::{Config, ResilienceConfig};
+use crate::coordinator::cluster::LaunchOptions;
+use crate::coordinator::orchestrator::RecoveryMode;
+
+/// Derive the MegaScale-like configuration from a base config: identical
+/// cluster layout and transport, resilience features disabled (static
+/// expert binding — the paper's Alt-3).
+pub fn megascale_config(mut base: Config) -> Config {
+    let probe = base.resilience.probe_interval;
+    let ccl = base.resilience.ccl_abort_timeout;
+    base.resilience = ResilienceConfig::variant("alt3").expect("alt3");
+    // Keep timing knobs consistent with the base run.
+    base.resilience.probe_interval = probe;
+    base.resilience.ccl_abort_timeout = ccl;
+    base
+}
+
+/// Launch options for the baseline: coarse restart on any failure.
+pub fn megascale_options() -> LaunchOptions {
+    LaunchOptions { mode: RecoveryMode::CoarseRestart, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_disables_all_resilience() {
+        let c = megascale_config(Config::default());
+        assert!(!c.resilience.checkpointing);
+        assert!(!c.resilience.detection);
+        assert!(!c.resilience.dynamic_ert);
+        assert!(!c.resilience.shadow_experts);
+        assert!(!c.resilience.partial_batch);
+        assert_eq!(c.cluster.num_aws, Config::default().cluster.num_aws);
+    }
+
+    #[test]
+    fn options_use_coarse_restart() {
+        assert_eq!(megascale_options().mode, RecoveryMode::CoarseRestart);
+    }
+}

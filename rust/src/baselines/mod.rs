@@ -1,0 +1,20 @@
+//! Baseline systems the paper evaluates against (§7.1):
+//!
+//! - [`megascale`]: MegaScale-Infer-like decoupled deployment — the same
+//!   AW/EW datapath as TARRAGON but with static expert binding, no
+//!   checkpointing, no failure detection, no shadow experts, no partial
+//!   batches, and coarse-grained restart on any failure. Implemented as a
+//!   configuration of the TARRAGON cluster (resilience variant "alt3" +
+//!   `RecoveryMode::CoarseRestart`), which is exactly what the paper's
+//!   ablation Alt-3 observes.
+//! - [`vllm`]: monolithic vLLM-like engines — one model replica over a
+//!   TP-style worker group (`vllm_tp`) or a layer-pipelined stage chain
+//!   (`vllm_pp`). Both run attention *and* experts locally (no AW/EW
+//!   decoupling) and restart wholesale on failure.
+
+pub mod common;
+pub mod megascale;
+pub mod vllm;
+
+pub use megascale::megascale_config;
+pub use vllm::{VllmEngine, VllmKind, VllmReport};

@@ -1,0 +1,574 @@
+//! Monolithic vLLM-like baselines (§7.1).
+//!
+//! - **vLLM-TP**: one model replica executed by a TP-style worker group.
+//!   On our testbed the group is one device; the per-layer tensor-parallel
+//!   collectives (2 all-reduces per layer over NVLink) are modeled as a
+//!   latency penalty. No AW/EW hop: at low load TBT beats the decoupled
+//!   systems (no network round-trip), but the single replica saturates
+//!   far earlier — the Fig. 10/11 shape.
+//! - **vLLM-PP**: the same model as a pipeline of stage threads (one
+//!   stage per layer at our scale; the paper's 16 stages over 32 layers).
+//!   Each stage owns its own device and the KV cache of its layer;
+//!   microbatches travel through the pipe, so each token pays the full
+//!   pipeline traversal while bubbles cap utilization — the paper's
+//!   consistently-worse TBT/TTFT.
+
+use super::common;
+use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::metrics::{EventKind, EventLog, RunAnalysis};
+use crate::modelcfg::{weights::Weights, Buckets, Manifest};
+use crate::runtime::{Device, DeviceRole};
+use crate::tensor::Tensor;
+use crate::workload::Request;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VllmKind {
+    Tp,
+    Pp,
+}
+
+#[derive(Clone)]
+pub struct VllmOptions {
+    pub kind: VllmKind,
+    /// Simulated TP degree (collective latency scale), paper: 16.
+    pub tp_degree: usize,
+    /// One NVLink all-reduce hop latency at our message sizes.
+    pub allreduce_latency: Duration,
+    pub decode_batch: usize,
+    pub max_resident: usize,
+    /// Extra init latency per worker (matches cluster config).
+    pub worker_extra_init: Duration,
+    pub drain_timeout: Duration,
+}
+
+impl Default for VllmOptions {
+    fn default() -> Self {
+        VllmOptions {
+            kind: VllmKind::Tp,
+            tp_degree: 16,
+            allreduce_latency: Duration::from_micros(15),
+            decode_batch: 8,
+            max_resident: 32,
+            worker_extra_init: Duration::from_millis(500),
+            drain_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+pub struct VllmReport {
+    pub analysis: RunAnalysis,
+    pub submitted: usize,
+    pub finished: usize,
+    /// Worker init time (the baseline's T_w contribution).
+    pub init_total: Duration,
+    pub generated: HashMap<u64, Vec<u32>>,
+}
+
+pub struct VllmEngine;
+
+impl VllmEngine {
+    /// Run a schedule to completion (or drain timeout) and report.
+    pub fn run(
+        manifest: Arc<Manifest>,
+        weights: Weights,
+        schedule: Vec<Request>,
+        opts: VllmOptions,
+    ) -> VllmReport {
+        match opts.kind {
+            VllmKind::Tp => run_tp(manifest, weights, schedule, opts),
+            VllmKind::Pp => run_pp(manifest, weights, schedule, opts),
+        }
+    }
+}
+
+struct EngineReq {
+    prompt: Vec<u32>,
+    max_new: u32,
+    kv: RequestKv,
+    next_input: u32,
+    generated: u32,
+}
+
+// ---------------------------------------------------------------------------
+// vLLM-TP
+// ---------------------------------------------------------------------------
+
+fn run_tp(
+    manifest: Arc<Manifest>,
+    weights: Weights,
+    schedule: Vec<Request>,
+    opts: VllmOptions,
+) -> VllmReport {
+    let device = Device::spawn(
+        "vllm-tp",
+        manifest.clone(),
+        weights.clone(),
+        DeviceRole::Monolithic.plan(&manifest),
+        opts.worker_extra_init,
+    )
+    .expect("vllm-tp device");
+    let init_total = device.init.total;
+    let events = EventLog::new();
+    let m = manifest.model.clone();
+    // Per-layer TP cost: 2 all-reduces (attention output + MoE combine),
+    // each log2(tp) hops (ring/tree collective over NVLink).
+    let hops = (opts.tp_degree as f64).log2().max(1.0);
+    let coll = Duration::from_secs_f64(2.0 * opts.allreduce_latency.as_secs_f64() * hops);
+
+    let mut asm = BatchAssembler::new(&m);
+    let mut reqs: HashMap<u64, EngineReq> = HashMap::new();
+    let mut pending: VecDeque<u64> = VecDeque::new();
+    let mut active: VecDeque<u64> = VecDeque::new();
+    let mut generated: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut finished = 0usize;
+    let mut submitted = 0usize;
+    let start = Instant::now();
+    let mut next = 0usize;
+    let last_arrival = schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        while next < schedule.len() && schedule[next].arrival_s <= now {
+            let r = &schedule[next];
+            next += 1;
+            events.record(EventKind::Submitted, r.id, 0, 0);
+            submitted += 1;
+            reqs.insert(
+                r.id,
+                EngineReq {
+                    prompt: r.prompt.clone(),
+                    max_new: r.max_new_tokens as u32,
+                    kv: RequestKv::new(&m),
+                    next_input: 0,
+                    generated: 0,
+                },
+            );
+            pending.push_back(r.id);
+        }
+
+        // Admit one prefill per iteration (prefill-first policy, like the
+        // TARRAGON AW, for a fair comparison).
+        if let Some(id) = pending.pop_front() {
+            if active.len() >= opts.max_resident {
+                pending.push_front(id);
+            } else {
+                let token = {
+                    let req = reqs.get_mut(&id).unwrap();
+                    tp_prefill(&device, &manifest, &weights, req, coll)
+                };
+                match token {
+                    Some(t) => {
+                        events.record(EventKind::Token, id, 0, 0);
+                        generated.entry(id).or_default().push(t);
+                        let req = reqs.get_mut(&id).unwrap();
+                        req.generated = 1;
+                        req.next_input = t;
+                        if req.generated >= req.max_new {
+                            events.record(EventKind::Finished, id, 0, 0);
+                            finished += 1;
+                            reqs.remove(&id);
+                        } else {
+                            active.push_back(id);
+                        }
+                    }
+                    None => {
+                        reqs.remove(&id); // prompt too long for any bucket
+                    }
+                }
+                continue;
+            }
+        }
+
+        if !active.is_empty() {
+            let batch: Vec<u64> = active.iter().copied().take(opts.decode_batch).collect();
+            for _ in 0..batch.len() {
+                let id = active.pop_front().unwrap();
+                active.push_back(id);
+            }
+            let tokens = tp_decode_step(&device, &manifest, &weights, &mut asm, &mut reqs, &batch, coll);
+            for (i, id) in batch.iter().enumerate() {
+                let req = reqs.get_mut(id).unwrap();
+                let index = req.generated;
+                req.next_input = tokens[i];
+                req.generated += 1;
+                let done = req.generated >= req.max_new;
+                events.record(EventKind::Token, *id, index, 0);
+                generated.entry(*id).or_default().push(tokens[i]);
+                if done {
+                    events.record(EventKind::Finished, *id, 0, 0);
+                    finished += 1;
+                    active.retain(|&r| r != *id);
+                    reqs.remove(id);
+                }
+            }
+        } else if pending.is_empty() {
+            if next >= schedule.len() && reqs.is_empty() {
+                break;
+            }
+            if next >= schedule.len() && now > last_arrival + opts.drain_timeout.as_secs_f64() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    device.shutdown();
+    VllmReport {
+        analysis: RunAnalysis::from_log(&events, 1.0),
+        submitted,
+        finished,
+        init_total,
+        generated,
+    }
+}
+
+fn embed(weights: &Weights, hidden: usize, ids: &[u32], bucket: usize) -> Tensor {
+    let mut x = Tensor::zeros(vec![bucket, hidden]);
+    for (i, &tok) in ids.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(weights.embed_row(tok as usize));
+    }
+    x
+}
+
+fn tp_prefill(
+    device: &Device,
+    manifest: &Manifest,
+    weights: &Weights,
+    req: &mut EngineReq,
+    coll: Duration,
+) -> Option<u32> {
+    let m = &manifest.model;
+    let p_len = req.prompt.len();
+    let bucket = Buckets::fit(&manifest.buckets.prefill_t, p_len)?;
+    let mut x = embed(weights, m.hidden, &req.prompt, bucket);
+    for layer in 0..m.layers {
+        x = common::local_prefill_layer(device, manifest, &mut req.kv, layer, &x, bucket, p_len)
+            .ok()?;
+        std::thread::sleep(coll); // TP collectives
+    }
+    req.kv.set_len(p_len);
+    let tokens = common::lm_head_tokens(device, manifest, &[x.row(p_len - 1)]).ok()?;
+    Some(tokens[0])
+}
+
+fn tp_decode_step(
+    device: &Device,
+    manifest: &Manifest,
+    weights: &Weights,
+    asm: &mut BatchAssembler,
+    reqs: &mut HashMap<u64, EngineReq>,
+    batch: &[u64],
+    coll: Duration,
+) -> Vec<u32> {
+    let m = &manifest.model;
+    let b = batch.len();
+    let bucket = Buckets::fit(&manifest.buckets.decode_b, b).expect("decode bucket");
+    let inputs: Vec<u32> = batch.iter().map(|id| reqs[id].next_input).collect();
+    let mut x = embed(weights, m.hidden, &inputs, bucket);
+    for layer in 0..m.layers {
+        // Split borrows: take the KVs out for the layer call.
+        let mut kvs: Vec<&mut RequestKv> = Vec::with_capacity(b);
+        let mut taken: Vec<(u64, RequestKv)> = Vec::new();
+        for id in batch {
+            let kv = std::mem::replace(&mut reqs.get_mut(id).unwrap().kv, RequestKv::new(m));
+            taken.push((*id, kv));
+        }
+        for (_, kv) in taken.iter_mut() {
+            kvs.push(kv);
+        }
+        let out = common::local_decode_layer(device, manifest, asm, &mut kvs, layer, &x, bucket, b);
+        drop(kvs);
+        for (id, kv) in taken {
+            reqs.get_mut(&id).unwrap().kv = kv;
+        }
+        x = out.expect("tp decode layer");
+        std::thread::sleep(coll);
+    }
+    for id in batch {
+        let req = reqs.get_mut(id).unwrap();
+        let len = req.kv.len() + 1;
+        req.kv.set_len(len);
+    }
+    let rows: Vec<&[f32]> = (0..b).map(|i| x.row(i)).collect();
+    common::lm_head_tokens(device, manifest, &rows).expect("lm head")
+}
+
+// ---------------------------------------------------------------------------
+// vLLM-PP: stage threads, one per layer
+// ---------------------------------------------------------------------------
+
+enum PpJob {
+    Prefill { id: u64, x: Tensor, p_len: usize, bucket: usize },
+    Decode { batch: Vec<u64>, inputs: Vec<u32>, x: Tensor, bucket: usize },
+    Retire { id: u64 },
+    Stop,
+}
+
+fn run_pp(
+    manifest: Arc<Manifest>,
+    weights: Weights,
+    schedule: Vec<Request>,
+    opts: VllmOptions,
+) -> VllmReport {
+    let m = manifest.model.clone();
+    let stages = m.layers;
+    // Stage devices in parallel (restart storms hit all of them too).
+    let mut devices: Vec<Device> = {
+        let mut joins = Vec::new();
+        for s in 0..stages {
+            let manifest = manifest.clone();
+            let weights = weights.clone();
+            let extra = opts.worker_extra_init;
+            joins.push(std::thread::spawn(move || {
+                Device::spawn(
+                    format!("vllm-pp{s}"),
+                    manifest.clone(),
+                    weights,
+                    DeviceRole::Monolithic.plan(&manifest),
+                    extra,
+                )
+                .expect("pp device")
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("pp device join")).collect()
+    };
+    let init_total = devices.iter().map(|d| d.init.total).max().unwrap_or_default();
+
+    // Wire the pipe: driver -> stage0 -> ... -> stageN-1 -> driver.
+    let mut senders: Vec<mpsc::Sender<PpJob>> = Vec::new();
+    let mut receivers: Vec<mpsc::Receiver<PpJob>> = Vec::new();
+    for _ in 0..=stages {
+        let (tx, rx) = mpsc::channel::<PpJob>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // stage s consumes receivers[s], sends into senders[s+1].
+    let mut stage_threads = Vec::new();
+    let mut rx_iter = receivers.into_iter();
+    let first_rx = rx_iter.next().unwrap();
+    let mut rxs: Vec<mpsc::Receiver<PpJob>> = rx_iter.collect(); // stages..  (last one is driver's)
+    let driver_rx = rxs.pop().unwrap();
+    let mut stage_rxs = vec![first_rx];
+    stage_rxs.extend(rxs);
+
+    for (s, rx) in stage_rxs.into_iter().enumerate() {
+        let device = devices.remove(0);
+        let next_tx = senders[s + 1].clone();
+        let manifest = manifest.clone();
+        let model = m.clone();
+        stage_threads.push(
+            std::thread::Builder::new()
+                .name(format!("pp-stage{s}"))
+                .spawn(move || {
+                    let mut kvs: HashMap<u64, RequestKv> = HashMap::new();
+                    let mut asm = BatchAssembler::new(&model);
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            PpJob::Stop => {
+                                let _ = next_tx.send(PpJob::Stop);
+                                break;
+                            }
+                            PpJob::Retire { id } => {
+                                kvs.remove(&id);
+                                let _ = next_tx.send(PpJob::Retire { id });
+                            }
+                            PpJob::Prefill { id, x, p_len, bucket } => {
+                                let kv = kvs.entry(id).or_insert_with(|| RequestKv::new(&model));
+                                // Each stage holds only its own layer (layer
+                                // index == stage index here).
+                                let out = common::local_prefill_layer(
+                                    &device, &manifest, kv, s, &x, bucket, p_len,
+                                )
+                                .expect("pp prefill layer");
+                                kv.set_len(p_len);
+                                let _ = next_tx.send(PpJob::Prefill { id, x: out, p_len, bucket });
+                            }
+                            PpJob::Decode { batch, inputs, x, bucket } => {
+                                let mut kv_refs: Vec<&mut RequestKv> = Vec::new();
+                                let mut taken: Vec<(u64, RequestKv)> = Vec::new();
+                                for id in &batch {
+                                    let kv = kvs
+                                        .remove(id)
+                                        .unwrap_or_else(|| RequestKv::new(&model));
+                                    taken.push((*id, kv));
+                                }
+                                for (_, kv) in taken.iter_mut() {
+                                    kv_refs.push(kv);
+                                }
+                                let out = common::local_decode_layer(
+                                    &device, &manifest, &mut asm, &mut kv_refs, s, &x, bucket,
+                                    batch.len(),
+                                )
+                                .expect("pp decode layer");
+                                drop(kv_refs);
+                                for (id, mut kv) in taken {
+                                    let len = kv.len() + 1;
+                                    kv.set_len(len);
+                                    kvs.insert(id, kv);
+                                }
+                                let _ = next_tx.send(PpJob::Decode { batch, inputs, x: out, bucket });
+                            }
+                        }
+                    }
+                    device.shutdown();
+                })
+                .expect("pp stage thread"),
+        );
+    }
+    let stage0_tx = senders[0].clone();
+
+    // KV length bookkeeping quirk: stage kvs advance by set_len in the
+    // stage; prefill sets len = p_len; decode increments. The driver only
+    // tracks generation counts.
+
+    // lm-head device: reuse stage-(N-1)'s? Stages own theirs; the driver
+    // needs one for lm_head. Spawn a small attention-role device.
+    let head_device = Device::spawn(
+        "vllm-pp-head",
+        manifest.clone(),
+        weights.clone(),
+        DeviceRole::Attention.plan(&manifest),
+        Duration::ZERO,
+    )
+    .expect("pp head device");
+
+    let events = EventLog::new();
+    let mut meta: HashMap<u64, (u32, u32)> = HashMap::new(); // id -> (generated, max_new)
+    let mut next_input: HashMap<u64, u32> = HashMap::new();
+    let mut prompts: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut generated: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut pending: VecDeque<u64> = VecDeque::new();
+    let mut ready: VecDeque<u64> = VecDeque::new(); // decodable, not in flight
+    let mut in_flight = 0usize;
+    let max_in_flight = stages; // classic pipeline depth
+    let mut finished = 0usize;
+    let mut submitted = 0usize;
+    let start = Instant::now();
+    let mut next = 0usize;
+    let last_arrival = schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        while next < schedule.len() && schedule[next].arrival_s <= now {
+            let r = &schedule[next];
+            next += 1;
+            events.record(EventKind::Submitted, r.id, 0, 0);
+            submitted += 1;
+            meta.insert(r.id, (0, r.max_new_tokens as u32));
+            prompts.insert(r.id, r.prompt.clone());
+            pending.push_back(r.id);
+        }
+
+        // Inject work while the pipe has room.
+        while in_flight < max_in_flight {
+            if let Some(id) = pending.pop_front() {
+                let prompt = prompts[&id].clone();
+                if let Some(bucket) = Buckets::fit(&manifest.buckets.prefill_t, prompt.len()) {
+                    let x = embed(&weights, m.hidden, &prompt, bucket);
+                    let _ = stage0_tx.send(PpJob::Prefill { id, x, p_len: prompt.len(), bucket });
+                    in_flight += 1;
+                } else {
+                    meta.remove(&id);
+                }
+                continue;
+            }
+            if ready.is_empty() {
+                break;
+            }
+            let batch: Vec<u64> = {
+                let n = ready.len().min(opts.decode_batch);
+                (0..n).map(|_| ready.pop_front().unwrap()).collect()
+            };
+            let bucket = Buckets::fit(&manifest.buckets.decode_b, batch.len()).expect("bucket");
+            let inputs: Vec<u32> = batch.iter().map(|id| next_input[id]).collect();
+            let x = embed(&weights, m.hidden, &inputs, bucket);
+            let _ = stage0_tx.send(PpJob::Decode { batch, inputs, x, bucket });
+            in_flight += 1;
+        }
+
+        // Drain completed jobs from the end of the pipe.
+        match driver_rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(PpJob::Prefill { id, x, p_len, bucket: _ }) => {
+                in_flight -= 1;
+                let tokens =
+                    common::lm_head_tokens(&head_device, &manifest, &[x.row(p_len - 1)])
+                        .expect("pp lm head");
+                let t = tokens[0];
+                events.record(EventKind::Token, id, 0, 0);
+                generated.entry(id).or_default().push(t);
+                next_input.insert(id, t);
+                let (g, mx) = meta.get_mut(&id).map(|v| {
+                    v.0 = 1;
+                    *v
+                }).unwrap();
+                if g >= mx {
+                    events.record(EventKind::Finished, id, 0, 0);
+                    finished += 1;
+                    let _ = stage0_tx.send(PpJob::Retire { id });
+                    in_flight += 1; // retire occupies a slot through the pipe
+                } else {
+                    ready.push_back(id);
+                }
+            }
+            Ok(PpJob::Decode { batch, inputs: _, x, bucket: _ }) => {
+                in_flight -= 1;
+                let rows: Vec<&[f32]> = (0..batch.len()).map(|i| x.row(i)).collect();
+                let tokens =
+                    common::lm_head_tokens(&head_device, &manifest, &rows).expect("pp lm head");
+                for (i, id) in batch.iter().enumerate() {
+                    let t = tokens[i];
+                    let (g, mx) = {
+                        let v = meta.get_mut(id).unwrap();
+                        let idx = v.0;
+                        v.0 += 1;
+                        (idx, v.1)
+                    };
+                    events.record(EventKind::Token, *id, g, 0);
+                    generated.entry(*id).or_default().push(t);
+                    next_input.insert(*id, t);
+                    if g + 1 >= mx {
+                        events.record(EventKind::Finished, *id, 0, 0);
+                        finished += 1;
+                        let _ = stage0_tx.send(PpJob::Retire { id: *id });
+                        in_flight += 1;
+                    } else {
+                        ready.push_back(*id);
+                    }
+                }
+            }
+            Ok(PpJob::Retire { .. }) => {
+                in_flight -= 1;
+            }
+            Ok(PpJob::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+
+        // Exit conditions.
+        let all_done = next >= schedule.len()
+            && pending.is_empty()
+            && ready.is_empty()
+            && in_flight == 0;
+        if all_done {
+            break;
+        }
+        if next >= schedule.len()
+            && now > last_arrival + opts.drain_timeout.as_secs_f64()
+        {
+            break;
+        }
+    }
+    let _ = stage0_tx.send(PpJob::Stop);
+    for t in stage_threads {
+        let _ = t.join();
+    }
+    head_device.shutdown();
+    VllmReport {
+        analysis: RunAnalysis::from_log(&events, 1.0),
+        submitted,
+        finished,
+        init_total,
+        generated,
+    }
+}

@@ -1,0 +1,15 @@
+//! KV-cache checkpointing and restoration (§6).
+//!
+//! - [`store`]: the checkpoint-store service — a dedicated node that
+//!   receives one-sided segment writes with sequence-number ordering and
+//!   "async log + commit record" semantics, and serves per-request state
+//!   back during recovery.
+//! - [`streamer`]: the AW-side queue that turns freshly appended KV
+//!   segments into asynchronous writes, flushed opportunistically into
+//!   data-plane idle gaps (§6.1, Fig. 8).
+
+pub mod store;
+pub mod streamer;
+
+pub use store::{CkptStore, StoreLog};
+pub use streamer::CkptStreamer;

@@ -1,0 +1,337 @@
+//! The checkpoint store: per-request segment logs + commit records.
+//!
+//! Commit semantics (§6.1): a commit record for position `p` is accepted
+//! only if every (pos < p, layer) segment of the request is present — the
+//! "async log + commit record" design that tolerates out-of-order
+//! one-sided writes. Recovery (§6.2) reads the latest accepted commit and
+//! the segment prefix it covers.
+//!
+//! The store's state machine is a plain struct ([`StoreLog`]) so it can be
+//! unit-tested without threads; the service loop in `cluster` drives it
+//! from fabric messages.
+
+use crate::proto::{ClusterMsg, CommitMeta, RestoreData, SegmentMsg};
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+struct RequestLog {
+    /// (pos, layer) -> segment data (K||V).
+    segments: HashMap<(u32, u16), Vec<f32>>,
+    /// Latest accepted commit.
+    committed: Option<CommitMeta>,
+    /// Commits held back because segments were missing (replayed on the
+    /// next segment arrival).
+    pending_commits: Vec<CommitMeta>,
+    /// Which AW currently owns the request (for failure mapping).
+    owner_aw: u32,
+}
+
+/// Pure checkpoint-store state.
+#[derive(Debug, Default)]
+pub struct StoreLog {
+    layers: u16,
+    reqs: HashMap<u64, RequestLog>,
+    /// Counters for the §7.4 experiments.
+    pub segments_received: u64,
+    pub commits_accepted: u64,
+    pub commits_deferred: u64,
+    pub bytes_received: u64,
+}
+
+impl StoreLog {
+    pub fn new(layers: usize) -> StoreLog {
+        StoreLog { layers: layers as u16, ..Default::default() }
+    }
+
+    /// Ingest one segment write.
+    pub fn segment(&mut self, owner_aw: u32, s: SegmentMsg) {
+        self.segments_received += 1;
+        self.bytes_received += (s.data.len() * 4) as u64;
+        let r = self.reqs.entry(s.request).or_default();
+        r.owner_aw = owner_aw;
+        r.segments.insert((s.pos, s.layer), s.data);
+        // Try deferred commits newest-first.
+        if !r.pending_commits.is_empty() {
+            let pending = std::mem::take(&mut r.pending_commits);
+            let layers = self.layers;
+            let rlog = self.reqs.get_mut(&s.request).unwrap();
+            for c in pending {
+                if Self::complete_prefix(rlog, c.committed_pos, layers) {
+                    Self::accept(rlog, c);
+                    self.commits_accepted += 1;
+                } else {
+                    rlog.pending_commits.push(c);
+                }
+            }
+        }
+    }
+
+    /// Ingest a commit record.
+    pub fn commit(&mut self, owner_aw: u32, c: CommitMeta) {
+        let layers = self.layers;
+        let r = self.reqs.entry(c.request).or_default();
+        r.owner_aw = owner_aw;
+        if Self::complete_prefix(r, c.committed_pos, layers) {
+            Self::accept(r, c);
+            self.commits_accepted += 1;
+        } else {
+            self.commits_deferred += 1;
+            r.pending_commits.push(c);
+        }
+    }
+
+    fn complete_prefix(r: &RequestLog, upto: u32, layers: u16) -> bool {
+        for pos in 0..upto {
+            for layer in 0..layers {
+                if !r.segments.contains_key(&(pos, layer)) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn accept(r: &mut RequestLog, c: CommitMeta) {
+        let newer = r
+            .committed
+            .as_ref()
+            .map(|old| c.committed_pos >= old.committed_pos)
+            .unwrap_or(true);
+        if newer {
+            r.committed = Some(c);
+        }
+    }
+
+    /// Latest accepted commit for a request.
+    pub fn committed(&self, request: u64) -> Option<&CommitMeta> {
+        self.reqs.get(&request).and_then(|r| r.committed.as_ref())
+    }
+
+    /// All committed, unfinished requests owned by a (failed) AW — what the
+    /// orchestrator redistributes (§6.2).
+    pub fn active_of(&self, aw: u32) -> Vec<CommitMeta> {
+        let mut v: Vec<CommitMeta> = self
+            .reqs
+            .values()
+            .filter(|r| r.owner_aw == aw)
+            .filter_map(|r| r.committed.clone())
+            .filter(|c| c.generated < c.max_new_tokens)
+            .collect();
+        v.sort_by_key(|c| c.request);
+        v
+    }
+
+    /// Record a migration (the adopting AW now owns the request).
+    pub fn rebind(&mut self, request: u64, new_aw: u32) {
+        if let Some(r) = self.reqs.get_mut(&request) {
+            r.owner_aw = new_aw;
+        }
+    }
+
+    /// Build the restoration payload for a request: the committed prefix
+    /// across all layers. Returns None if nothing is committed.
+    pub fn restore_data(&self, request: u64) -> Option<RestoreData> {
+        let r = self.reqs.get(&request)?;
+        let meta = r.committed.clone()?;
+        let mut segments = Vec::with_capacity(meta.committed_pos as usize * self.layers as usize);
+        for pos in 0..meta.committed_pos {
+            for layer in 0..self.layers {
+                let data = r.segments.get(&(pos, layer))?.clone();
+                segments.push((pos, layer, data));
+            }
+        }
+        Some(RestoreData { meta, segments })
+    }
+
+    /// Drop a finished request's state (bucket reclamation).
+    pub fn forget(&mut self, request: u64) {
+        self.reqs.remove(&request);
+    }
+
+    pub fn num_requests(&self) -> usize {
+        self.reqs.len()
+    }
+}
+
+/// Store message handler used by the service loop: returns the reply (if
+/// any) to post back.
+pub struct CkptStore {
+    pub log: StoreLog,
+}
+
+impl CkptStore {
+    pub fn new(layers: usize) -> CkptStore {
+        CkptStore { log: StoreLog::new(layers) }
+    }
+
+    /// Handle one inbound message; `from_aw` is the sender when it is an
+    /// AW. Returns messages to send back: (destination AW index or None for
+    /// orchestrator, message).
+    pub fn handle(&mut self, from: crate::transport::NodeId, msg: ClusterMsg) -> Vec<(crate::transport::NodeId, ClusterMsg)> {
+        use crate::transport::NodeId;
+        match msg {
+            ClusterMsg::CkptSegment(s) => {
+                if let NodeId::Aw(aw) = from {
+                    self.log.segment(aw, s);
+                }
+                vec![]
+            }
+            ClusterMsg::CkptCommit(c) => {
+                if let NodeId::Aw(aw) = from {
+                    if c.generated >= c.max_new_tokens {
+                        // Finished: final commit then reclaim.
+                        self.log.commit(aw, c.clone());
+                        self.log.forget(c.request);
+                    } else {
+                        self.log.commit(aw, c);
+                    }
+                }
+                vec![]
+            }
+            ClusterMsg::RestorePull { request } => {
+                if let Some(data) = self.log.restore_data(request) {
+                    if let NodeId::Aw(aw) = from {
+                        self.log.rebind(request, aw);
+                    }
+                    vec![(from, ClusterMsg::Restore(data))]
+                } else {
+                    vec![]
+                }
+            }
+            ClusterMsg::QueryActive { aw } => {
+                let reqs = self.log.active_of(aw);
+                vec![(NodeId::Orchestrator, ClusterMsg::ActiveReqs { aw, reqs })]
+            }
+            _ => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(req: u64, pos: u32, layer: u16) -> SegmentMsg {
+        SegmentMsg { request: req, pos, layer, data: vec![pos as f32 + layer as f32; 8] }
+    }
+
+    fn commit(req: u64, pos: u32, gen: u32) -> CommitMeta {
+        CommitMeta {
+            request: req,
+            committed_pos: pos,
+            last_token: 42,
+            generated: gen,
+            max_new_tokens: 100,
+            prompt_len: 4,
+        }
+    }
+
+    #[test]
+    fn commit_requires_complete_prefix() {
+        let mut log = StoreLog::new(2);
+        log.segment(0, seg(1, 0, 0));
+        // layer 1 of pos 0 missing -> commit deferred
+        log.commit(0, commit(1, 1, 1));
+        assert!(log.committed(1).is_none());
+        assert_eq!(log.commits_deferred, 1);
+        // late segment arrives (out-of-order one-sided write)
+        log.segment(0, seg(1, 0, 1));
+        assert_eq!(log.committed(1).unwrap().committed_pos, 1);
+        assert_eq!(log.commits_accepted, 1);
+    }
+
+    #[test]
+    fn commits_are_monotonic() {
+        let mut log = StoreLog::new(1);
+        log.segment(0, seg(2, 0, 0));
+        log.segment(0, seg(2, 1, 0));
+        log.commit(0, commit(2, 2, 2));
+        log.commit(0, commit(2, 1, 1)); // stale commit must not regress
+        assert_eq!(log.committed(2).unwrap().committed_pos, 2);
+    }
+
+    #[test]
+    fn restore_covers_committed_prefix_only() {
+        let mut log = StoreLog::new(2);
+        for pos in 0..3 {
+            for layer in 0..2 {
+                log.segment(7, seg(9, pos, layer));
+            }
+        }
+        log.commit(7, commit(9, 2, 5)); // only 2 positions committed
+        let data = log.restore_data(9).unwrap();
+        assert_eq!(data.meta.committed_pos, 2);
+        assert_eq!(data.segments.len(), 4); // 2 pos x 2 layers
+        assert!(data.segments.iter().all(|(p, _, _)| *p < 2));
+    }
+
+    #[test]
+    fn active_of_maps_owner_and_skips_finished() {
+        let mut log = StoreLog::new(1);
+        log.segment(3, seg(10, 0, 0));
+        log.commit(3, commit(10, 1, 1));
+        log.segment(3, seg(11, 0, 0));
+        let mut done = commit(11, 1, 100); // generated == max
+        done.max_new_tokens = 100;
+        log.commit(3, done);
+        log.segment(4, seg(12, 0, 0));
+        log.commit(4, commit(12, 1, 1));
+
+        let of3 = log.active_of(3);
+        assert_eq!(of3.len(), 1);
+        assert_eq!(of3[0].request, 10);
+        assert_eq!(log.active_of(4).len(), 1);
+        assert!(log.active_of(9).is_empty());
+    }
+
+    #[test]
+    fn rebind_moves_ownership() {
+        let mut log = StoreLog::new(1);
+        log.segment(0, seg(5, 0, 0));
+        log.commit(0, commit(5, 1, 1));
+        log.rebind(5, 2);
+        assert!(log.active_of(0).is_empty());
+        assert_eq!(log.active_of(2).len(), 1);
+    }
+
+    #[test]
+    fn handler_roundtrip() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(1);
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(1, 0, 0)));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(1, 1, 1)));
+        // Orchestrator asks who was on aw0
+        let replies = store.handle(NodeId::Orchestrator, ClusterMsg::QueryActive { aw: 0 });
+        assert_eq!(replies.len(), 1);
+        match &replies[0] {
+            (NodeId::Orchestrator, ClusterMsg::ActiveReqs { aw, reqs }) => {
+                assert_eq!(*aw, 0);
+                assert_eq!(reqs.len(), 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // New AW pulls the state
+        let replies = store.handle(NodeId::Aw(3), ClusterMsg::RestorePull { request: 1 });
+        match &replies[0] {
+            (NodeId::Aw(3), ClusterMsg::Restore(d)) => {
+                assert_eq!(d.meta.committed_pos, 1);
+                assert_eq!(d.segments.len(), 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Ownership moved
+        assert!(store.log.active_of(0).is_empty());
+        assert_eq!(store.log.active_of(3).len(), 1);
+    }
+
+    #[test]
+    fn finished_requests_are_reclaimed() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(1);
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(8, 0, 0)));
+        let mut c = commit(8, 1, 100);
+        c.max_new_tokens = 100;
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(c));
+        assert_eq!(store.log.num_requests(), 0);
+    }
+}

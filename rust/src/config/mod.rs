@@ -1,0 +1,392 @@
+//! Typed configuration for the whole stack: cluster layout, resilience
+//! features (individually switchable for the Fig. 15 ablations), transport
+//! timing model, and workload parameters. Loadable from a TOML-subset file
+//! (`util::toml`) or built programmatically by the harnesses.
+
+use crate::util::toml::{self, Value};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Toml(#[from] toml::TomlError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+/// Cluster layout (paper §7.1: 8 AWs + 8 EWs; checkpoint store on its own
+/// node).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub num_aws: usize,
+    pub num_ews: usize,
+    /// Max decode batch per AW step (continuous batching cap).
+    pub decode_batch: usize,
+    /// Max concurrent requests resident on one AW (admission cap).
+    pub max_resident: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { num_aws: 4, num_ews: 4, decode_batch: 8, max_resident: 16 }
+    }
+}
+
+/// Resilience feature switches. Defaults = full TARRAGON. The Fig. 15
+/// ablation variants:
+///   Alt-1 = checkpointing off;
+///   Alt-2 = Alt-1 + failure detection off;
+///   Alt-3 = Alt-2 + dynamic ERT off (static expert binding, i.e. a
+///           MegaScale-Infer-like baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Asynchronous incremental KV-cache checkpointing (§6.1).
+    pub checkpointing: bool,
+    /// §7.4 baseline: Pause-Checkpoint-Resume every N generated tokens
+    /// (0 = disabled). When set, the AW stalls and synchronously snapshots
+    /// every resident request's full KV cache instead of streaming
+    /// incrementally.
+    pub pause_ckpt_every: usize,
+    /// Lightweight failure detection: implicit heartbeats + probes (§5).
+    pub detection: bool,
+    /// Dynamic ERT remapping (§4.2); off = static expert binding.
+    pub dynamic_ert: bool,
+    /// Shadow experts pre-loaded in residual EW memory (§5.3).
+    pub shadow_experts: bool,
+    /// EW-side partial batches on AW silence (§5.2).
+    pub partial_batch: bool,
+    /// Background provisioning of replacement workers (§5.4).
+    pub provisioning: bool,
+    /// Explicit probe interval (paper: 10 ms).
+    pub probe_interval: Duration,
+    /// Data-plane silence before issuing an explicit probe.
+    pub silence_window: Duration,
+    /// Consecutive probe timeouts before declaring fail-stop (App. E: 3).
+    pub probe_retries: u32,
+    /// Per-probe response timeout.
+    pub probe_timeout: Duration,
+    /// EW waits at most this long for missing AW dispatches before
+    /// proceeding with a partial batch.
+    pub partial_batch_wait: Duration,
+    /// Minimum batch fraction that preserves GPU efficiency (§5.2 (ii)).
+    pub min_batch_fraction: f64,
+    /// With detection disabled (baselines), a worker whose collective
+    /// wait exceeds this reports a fatal communicator error — the NCCL
+    /// abort-timeout analogue that triggers coarse-grained restart.
+    pub ccl_abort_timeout: Duration,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            checkpointing: true,
+            pause_ckpt_every: 0,
+            detection: true,
+            dynamic_ert: true,
+            shadow_experts: true,
+            partial_batch: true,
+            provisioning: true,
+            probe_interval: Duration::from_millis(10),
+            silence_window: Duration::from_millis(10),
+            probe_retries: 3,
+            probe_timeout: Duration::from_millis(15),
+            partial_batch_wait: Duration::from_millis(4),
+            min_batch_fraction: 0.5,
+            ccl_abort_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Fig. 15 variants by name: "tarragon", "alt1", "alt2", "alt3".
+    pub fn variant(name: &str) -> Option<ResilienceConfig> {
+        let mut c = ResilienceConfig::default();
+        match name {
+            "tarragon" => {}
+            "alt1" => {
+                c.checkpointing = false;
+            }
+            "alt2" => {
+                c.checkpointing = false;
+                c.detection = false;
+            }
+            "alt3" => {
+                c.checkpointing = false;
+                c.detection = false;
+                c.dynamic_ert = false;
+                c.shadow_experts = false;
+                c.partial_batch = false;
+            }
+            _ => return None,
+        }
+        Some(c)
+    }
+}
+
+/// Simulated interconnect timing (DESIGN.md §3: models the 400 Gbps RDMA
+/// fabric at our message scale; per-link serialization produces the bursty
+/// utilization the Fig. 8 experiment measures).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportConfig {
+    /// One-way propagation latency per message.
+    pub latency: Duration,
+    /// Link bandwidth in bytes/second (serialization delay = size/bw).
+    pub bandwidth_bps: f64,
+    /// Extra cold-start delay when (re)initializing a worker, on top of
+    /// the *real* artifact-compile + weight-upload time. Models container
+    /// start + CUDA context init that our testbed doesn't pay natively.
+    pub worker_extra_init: Duration,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            latency: Duration::from_micros(20),
+            bandwidth_bps: 1.0e9,
+            worker_extra_init: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Workload shape (§7.1): ShareGPT-like heterogeneous lengths or the
+/// fixed-length "Random" decoding-heavy workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    ShareGpt,
+    Random,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "sharegpt" => Some(WorkloadKind::ShareGpt),
+            "random" => Some(WorkloadKind::Random),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub kind: WorkloadKind,
+    /// Poisson arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Total requests to issue (0 = unbounded until duration elapses).
+    pub num_requests: usize,
+    /// Run duration cap in seconds.
+    pub duration_secs: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            kind: WorkloadKind::Random,
+            rate_rps: 10.0,
+            num_requests: 0,
+            duration_secs: 20.0,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub resilience: ResilienceConfig,
+    pub transport: TransportConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Config, ConfigError> {
+        let map = toml::parse(text)?;
+        let mut c = Config::default();
+        c.apply(&map)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    fn apply(&mut self, m: &BTreeMap<String, Value>) -> Result<(), ConfigError> {
+        let get_usize = |key: &str, cur: usize| -> Result<usize, ConfigError> {
+            match m.get(key) {
+                None => Ok(cur),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| bad(key)),
+            }
+        };
+        let get_f64 = |key: &str, cur: f64| -> Result<f64, ConfigError> {
+            match m.get(key) {
+                None => Ok(cur),
+                Some(v) => v.as_f64().ok_or_else(|| bad(key)),
+            }
+        };
+        let get_bool = |key: &str, cur: bool| -> Result<bool, ConfigError> {
+            match m.get(key) {
+                None => Ok(cur),
+                Some(v) => v.as_bool().ok_or_else(|| bad(key)),
+            }
+        };
+        let get_ms = |key: &str, cur: Duration| -> Result<Duration, ConfigError> {
+            match m.get(key) {
+                None => Ok(cur),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|&f| f >= 0.0)
+                    .map(Duration::from_secs_f64)
+                    .map(|_| Duration::from_secs_f64(v.as_f64().unwrap() / 1000.0))
+                    .ok_or_else(|| bad(key)),
+            }
+        };
+
+        let cl = &mut self.cluster;
+        cl.num_aws = get_usize("cluster.num_aws", cl.num_aws)?;
+        cl.num_ews = get_usize("cluster.num_ews", cl.num_ews)?;
+        cl.decode_batch = get_usize("cluster.decode_batch", cl.decode_batch)?;
+        cl.max_resident = get_usize("cluster.max_resident", cl.max_resident)?;
+
+        let r = &mut self.resilience;
+        r.checkpointing = get_bool("resilience.checkpointing", r.checkpointing)?;
+        r.pause_ckpt_every = get_usize("resilience.pause_ckpt_every", r.pause_ckpt_every)?;
+        r.detection = get_bool("resilience.detection", r.detection)?;
+        r.dynamic_ert = get_bool("resilience.dynamic_ert", r.dynamic_ert)?;
+        r.shadow_experts = get_bool("resilience.shadow_experts", r.shadow_experts)?;
+        r.partial_batch = get_bool("resilience.partial_batch", r.partial_batch)?;
+        r.provisioning = get_bool("resilience.provisioning", r.provisioning)?;
+        r.probe_interval = get_ms("resilience.probe_interval_ms", r.probe_interval)?;
+        r.silence_window = get_ms("resilience.silence_window_ms", r.silence_window)?;
+        r.probe_timeout = get_ms("resilience.probe_timeout_ms", r.probe_timeout)?;
+        r.partial_batch_wait =
+            get_ms("resilience.partial_batch_wait_ms", r.partial_batch_wait)?;
+        r.probe_retries =
+            get_usize("resilience.probe_retries", r.probe_retries as usize)? as u32;
+        r.min_batch_fraction =
+            get_f64("resilience.min_batch_fraction", r.min_batch_fraction)?;
+
+        let t = &mut self.transport;
+        t.latency = get_ms("transport.latency_ms", t.latency)?;
+        t.bandwidth_bps = get_f64("transport.bandwidth_gbps", t.bandwidth_bps / 1e9)? * 1e9;
+        t.worker_extra_init =
+            get_ms("transport.worker_extra_init_ms", t.worker_extra_init)?;
+
+        let w = &mut self.workload;
+        if let Some(v) = m.get("workload.kind") {
+            let s = v.as_str().ok_or_else(|| bad("workload.kind"))?;
+            w.kind = WorkloadKind::parse(s)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown workload '{s}'")))?;
+        }
+        w.rate_rps = get_f64("workload.rate_rps", w.rate_rps)?;
+        w.num_requests = get_usize("workload.num_requests", w.num_requests)?;
+        w.duration_secs = get_f64("workload.duration_secs", w.duration_secs)?;
+        w.seed = get_usize("workload.seed", w.seed as usize)? as u64;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.cluster.num_aws == 0 || self.cluster.num_ews == 0 {
+            return Err(ConfigError::Invalid("need at least 1 AW and 1 EW".into()));
+        }
+        if self.cluster.decode_batch == 0 {
+            return Err(ConfigError::Invalid("decode_batch must be >= 1".into()));
+        }
+        if self.cluster.max_resident < self.cluster.decode_batch {
+            return Err(ConfigError::Invalid(
+                "max_resident must be >= decode_batch".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.resilience.min_batch_fraction) {
+            return Err(ConfigError::Invalid(
+                "min_batch_fraction must be in [0,1]".into(),
+            ));
+        }
+        if self.workload.rate_rps <= 0.0 {
+            return Err(ConfigError::Invalid("rate_rps must be > 0".into()));
+        }
+        if self.transport.bandwidth_bps <= 0.0 {
+            return Err(ConfigError::Invalid("bandwidth must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+fn bad(key: &str) -> ConfigError {
+    ConfigError::Invalid(format!("bad value for '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_file() {
+        let cfg = Config::from_toml_str(
+            r#"
+[cluster]
+num_aws = 8
+num_ews = 8
+decode_batch = 4
+max_resident = 32
+
+[resilience]
+checkpointing = false
+probe_interval_ms = 5
+min_batch_fraction = 0.25
+
+[transport]
+latency_ms = 0.05
+bandwidth_gbps = 2.5
+
+[workload]
+kind = "sharegpt"
+rate_rps = 50
+duration_secs = 30
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.num_aws, 8);
+        assert!(!cfg.resilience.checkpointing);
+        assert_eq!(cfg.resilience.probe_interval, Duration::from_millis(5));
+        assert_eq!(cfg.resilience.min_batch_fraction, 0.25);
+        assert_eq!(cfg.transport.bandwidth_bps, 2.5e9);
+        assert_eq!(cfg.workload.kind, WorkloadKind::ShareGpt);
+        assert_eq!(cfg.workload.rate_rps, 50.0);
+    }
+
+    #[test]
+    fn ablation_variants() {
+        let t = ResilienceConfig::variant("tarragon").unwrap();
+        assert!(t.checkpointing && t.detection && t.dynamic_ert);
+        let a1 = ResilienceConfig::variant("alt1").unwrap();
+        assert!(!a1.checkpointing && a1.detection);
+        let a2 = ResilienceConfig::variant("alt2").unwrap();
+        assert!(!a2.checkpointing && !a2.detection && a2.dynamic_ert);
+        let a3 = ResilienceConfig::variant("alt3").unwrap();
+        assert!(!a3.dynamic_ert && !a3.shadow_experts && !a3.partial_batch);
+        assert!(ResilienceConfig::variant("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(Config::from_toml_str("[cluster]\nnum_aws = 0\n").is_err());
+        assert!(Config::from_toml_str("[workload]\nrate_rps = -1\n").is_err());
+        assert!(Config::from_toml_str("[workload]\nkind = \"bogus\"\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\ndecode_batch = 0\n").is_err());
+    }
+}

@@ -1,0 +1,605 @@
+//! Attention Worker (AW): the stateful side of the decoupled deployment.
+//!
+//! Owns a PJRT device with the attention/router/lm-head artifacts, the
+//! per-request KV caches, a [`Refe`] forwarding engine for all EW traffic,
+//! and the asynchronous checkpoint streamer (§6.1).
+//!
+//! Execution is layer-wise synchronized (§2.2.1): one prefill or one
+//! batched decode step walks all L layers, calling the attention artifact
+//! then scattering/gathering expert work through REFE at every layer.
+//! After each generated token the AW queues one KV segment per layer plus
+//! a commit record; the streamer flushes them into link idle gaps.
+//!
+//! Recovery paths:
+//! - *adopting* a failed AW's request (§6.2): `AdoptRequest` → pull from
+//!   the checkpoint store → install KV prefix → resume decoding from the
+//!   committed token, in-place, without touching other requests;
+//! - replay-based baselines for Fig. 12 are implemented here too
+//!   (`install_replayed`): sequential (prefill + token-by-token decode)
+//!   and parallel (one prefill over prompt+generated) reconstruction.
+
+use super::refe::{Refe, RefeError};
+use super::router::{self, ExpertGroups};
+use crate::config::Config;
+use crate::coordinator::ert::Ert;
+use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::modelcfg::{weights::Weights, Buckets, Manifest};
+use crate::proto::{ClusterMsg, CommitMeta, RequestMeta, SegmentMsg, HDR_BYTES};
+use crate::runtime::{ArgValue, Device, DeviceRole};
+use crate::tensor::{ops, Tensor};
+use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
+use crate::checkpoint::CkptStreamer;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct AwParams {
+    pub idx: u32,
+    pub cfg: Config,
+    pub ert: Ert,
+    pub manifest: Arc<Manifest>,
+    pub weights: Weights,
+    pub fabric: Arc<Fabric<ClusterMsg>>,
+    pub stop: Arc<AtomicBool>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqPhase {
+    Prefill,
+    Decode,
+}
+
+struct Req {
+    meta: RequestMeta,
+    kv: RequestKv,
+    phase: ReqPhase,
+    /// Token id to embed next (last emitted token during decode).
+    next_input: u32,
+    generated: u32,
+}
+
+pub struct AwWorker {
+    idx: u32,
+    node: NodeId,
+    cfg: Config,
+    manifest: Arc<Manifest>,
+    weights: Weights,
+    device: Device,
+    inbox: Inbox<ClusterMsg>,
+    handle: NodeHandle,
+    refe: Refe,
+    streamer: CkptStreamer,
+    store_qp: Qp<ClusterMsg>,
+    gw_qp: Qp<ClusterMsg>,
+    reqs: HashMap<u64, Req>,
+    prefill_q: VecDeque<u64>,
+    active: VecDeque<u64>,
+    deferred: Vec<Envelope<ClusterMsg>>,
+    asm: BatchAssembler,
+    was_active: bool,
+    stop: Arc<AtomicBool>,
+    pub steps: u64,
+}
+
+/// Spawn an AW worker thread; blocks until initialized (T_w) and returns
+/// (thread handle, device handle).
+pub fn spawn(params: AwParams) -> (std::thread::JoinHandle<()>, Device) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let idx = params.idx;
+    let h = std::thread::Builder::new()
+        .name(format!("aw-{idx}"))
+        .spawn(move || {
+            let mut w = match AwWorker::init(params) {
+                Ok(w) => w,
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            };
+            let _ = tx.send(Ok(w.device.clone()));
+            w.run();
+        })
+        .expect("spawn aw thread");
+    let device = rx.recv().expect("aw init channel").expect("aw init");
+    (h, device)
+}
+
+impl AwWorker {
+    fn init(p: AwParams) -> Result<AwWorker, String> {
+        let node = NodeId::Aw(p.idx);
+        let (inbox, handle) = p.fabric.register(node);
+        let device = Device::spawn(
+            format!("aw{}", p.idx),
+            p.manifest.clone(),
+            p.weights.clone(),
+            DeviceRole::Attention.plan(&p.manifest),
+            p.cfg.transport.worker_extra_init,
+        )
+        .map_err(|e| e.to_string())?;
+        let refe = Refe::new(p.idx, p.ert, p.cfg.resilience.clone(), p.fabric.clone());
+        let store_qp = p.fabric.qp(node, NodeId::Store, Plane::Data).map_err(|e| e.to_string())?;
+        let gw_qp = p.fabric.qp(node, NodeId::Gateway, Plane::Control).map_err(|e| e.to_string())?;
+        let streamer = CkptStreamer::new(p.cfg.resilience.checkpointing, 4096);
+        let asm = BatchAssembler::new(&p.manifest.model);
+        Ok(AwWorker {
+            idx: p.idx,
+            node,
+            cfg: p.cfg,
+            manifest: p.manifest,
+            weights: p.weights,
+            device,
+            inbox,
+            handle,
+            refe,
+            streamer,
+            store_qp,
+            gw_qp,
+            reqs: HashMap::new(),
+            prefill_q: VecDeque::new(),
+            active: VecDeque::new(),
+            deferred: Vec::new(),
+            asm,
+            was_active: false,
+            stop: p.stop,
+            steps: 0,
+        })
+    }
+
+    fn alive(&self) -> bool {
+        !self.stop.load(Ordering::Relaxed) && self.handle.is_alive() && !self.device.is_dead()
+    }
+
+    fn run(&mut self) {
+        while self.alive() {
+            // 1. Handle everything pending (admin, new requests, restores).
+            let deferred = std::mem::take(&mut self.deferred);
+            for env in deferred {
+                self.handle_msg(env);
+            }
+            while let Ok(env) = self.inbox.recv(Duration::ZERO) {
+                self.handle_msg(env);
+            }
+
+            // 2. Activity beacon on transitions (EW batching membership).
+            let is_active = !self.prefill_q.is_empty() || !self.active.is_empty();
+            if is_active != self.was_active {
+                self.refe.broadcast_active(is_active);
+                self.was_active = is_active;
+            }
+
+            // 3. Work: prefill first (admission), then one decode step.
+            let result = if let Some(id) = self.prefill_q.pop_front() {
+                self.prefill(id)
+            } else if !self.active.is_empty() {
+                self.decode_step()
+            } else {
+                // Idle: flush checkpoints, nap briefly.
+                self.flush_ckpt();
+                match self.inbox.recv(Duration::from_millis(2)) {
+                    Ok(env) => self.handle_msg(env),
+                    Err(_) => {}
+                }
+                Ok(())
+            };
+
+            match result {
+                Ok(()) => {}
+                Err(StepError::Fatal) => break,
+                Err(StepError::Stalled) => {
+                    // Unroutable/CCL abort: the orchestrator decides what
+                    // happens next (coarse restart in baseline mode). Hold
+                    // position; retry after a beat.
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+            // 4. Opportunistic checkpoint flush (§6.1).
+            self.flush_ckpt();
+            // §7.4 baseline: Pause-Checkpoint-Resume (global synchronous
+            // snapshot every N decode steps; blocks token generation while
+            // the full KV state drains over the link).
+            let every = self.cfg.resilience.pause_ckpt_every;
+            if every > 0 && self.steps > 0 && self.steps % every as u64 == 0 {
+                self.pause_checkpoint_resume();
+            }
+        }
+        self.device.kill();
+    }
+
+    fn flush_ckpt(&mut self) {
+        self.streamer.flush(&self.store_qp, self.handle.egress());
+    }
+
+    /// Training-style global snapshot (§7.4 baseline): serialize every
+    /// resident request's entire KV cache to the store and *wait* for the
+    /// link to drain before resuming decode.
+    fn pause_checkpoint_resume(&mut self) {
+        let ids: Vec<u64> = self.reqs.keys().copied().collect();
+        for id in ids {
+            let (len, layers) = {
+                let req = &self.reqs[&id];
+                (req.kv.len(), req.kv.layers())
+            };
+            for layer in 0..layers {
+                for pos in 0..len {
+                    let data = self.reqs[&id].kv.read_segment(layer, pos);
+                    let msg = ClusterMsg::CkptSegment(SegmentMsg {
+                        request: id,
+                        pos: pos as u32,
+                        layer: layer as u16,
+                        data,
+                    });
+                    let bytes = msg.wire_bytes();
+                    let _ = self.store_qp.post(msg, bytes, TrafficClass::Checkpoint);
+                }
+            }
+            let req = &self.reqs[&id];
+            let msg = ClusterMsg::CkptCommit(CommitMeta {
+                request: id,
+                committed_pos: req.kv.len() as u32,
+                last_token: req.next_input,
+                generated: req.generated,
+                max_new_tokens: req.meta.max_new_tokens,
+                prompt_len: req.meta.prompt.len() as u32,
+            });
+            let bytes = msg.wire_bytes();
+            let _ = self.store_qp.post(msg, bytes, TrafficClass::Checkpoint);
+        }
+        // Pause until the snapshot is fully on the wire.
+        let busy = self.handle.egress().busy_for();
+        if !busy.is_zero() {
+            std::thread::sleep(busy);
+        }
+    }
+
+    fn handle_msg(&mut self, env: Envelope<ClusterMsg>) {
+        match env.msg {
+            ClusterMsg::NewRequest(meta) => {
+                let id = meta.id;
+                let kv = RequestKv::new(&self.manifest.model);
+                self.reqs.insert(
+                    id,
+                    Req { meta, kv, phase: ReqPhase::Prefill, next_input: 0, generated: 0 },
+                );
+                self.prefill_q.push_back(id);
+            }
+            ClusterMsg::ErtUpdate { version, table } => {
+                self.refe.ert.apply(version, table);
+            }
+            ClusterMsg::AdoptRequest { meta } => {
+                // §6.2: pull the request's durable state from the store.
+                let _ = self.store_qp.post(
+                    ClusterMsg::RestorePull { request: meta.request },
+                    HDR_BYTES,
+                    TrafficClass::Control,
+                );
+            }
+            ClusterMsg::Restore(data) => self.install_restored(data),
+            ClusterMsg::Return(_) => {} // stale (failover already handled)
+            _ => {}
+        }
+    }
+
+    /// §6.2 request-level restoration: install the committed KV prefix and
+    /// resume decoding as if the request had always been here.
+    fn install_restored(&mut self, data: crate::proto::RestoreData) {
+        let m = &self.manifest.model;
+        let meta = data.meta;
+        if self.reqs.contains_key(&meta.request) {
+            return; // duplicate restore (idempotent)
+        }
+        let mut kv = RequestKv::new(m);
+        for (pos, layer, seg) in &data.segments {
+            kv.write_segment(*layer as usize, *pos as usize, seg);
+        }
+        kv.set_len(meta.committed_pos as usize);
+        let id = meta.request;
+        self.reqs.insert(
+            id,
+            Req {
+                meta: RequestMeta {
+                    id,
+                    prompt: Vec::new(), // not needed: KV is restored
+                    max_new_tokens: meta.max_new_tokens,
+                },
+                kv,
+                phase: ReqPhase::Decode,
+                next_input: meta.last_token,
+                generated: meta.generated,
+            },
+        );
+        self.active.push_back(id);
+    }
+
+    // ---------------------------------------------------------------------
+    // Prefill
+    // ---------------------------------------------------------------------
+
+    fn prefill(&mut self, id: u64) -> Result<(), StepError> {
+        let m = self.manifest.model.clone();
+        let req = match self.reqs.get(&id) {
+            Some(r) => r,
+            None => return Ok(()),
+        };
+        let prompt = req.meta.prompt.clone();
+        let p_len = prompt.len();
+        let bucket = match Buckets::fit(&self.manifest.buckets.prefill_t, p_len) {
+            Some(b) => b,
+            None => {
+                // Prompt exceeds the largest bucket: reject (admission bug).
+                self.reqs.remove(&id);
+                return Ok(());
+            }
+        };
+
+        // Embed prompt (+ zero pad rows).
+        let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+        for (i, &tok) in prompt.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.weights.embed_row(tok as usize));
+        }
+
+        for layer in 0..m.layers {
+            let outs = self
+                .device
+                .execute(&format!("attn_prefill_t{bucket}"), attn_args_prefill(x.clone(), layer))
+                .map_err(|_| StepError::Fatal)?;
+            let (h, g, k, v) = unpack4(outs);
+            // KV cache + checkpoint segments for all prompt positions.
+            {
+                let req = self.reqs.get_mut(&id).unwrap();
+                for pos in 0..p_len {
+                    req.kv.write(layer, pos, k.row(pos), v.row(pos));
+                    self.streamer.push_segment(SegmentMsg {
+                        request: id,
+                        pos: pos as u32,
+                        layer: layer as u16,
+                        data: req.kv.read_segment(layer, pos),
+                    });
+                }
+            }
+            // Route + expert I/O on the valid rows.
+            let probs = self
+                .device
+                .execute(
+                    &format!("router_b{bucket}"),
+                    vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+                )
+                .map_err(|_| StepError::Fatal)?;
+            let routes = router::select_top_k(&probs[0], p_len, m.top_k);
+            let groups = ExpertGroups::from_routes(&routes);
+            let mut h = h;
+            self.expert_io(layer as u32, &g, &groups, &mut h)?;
+            // Zero the pad rows to keep them inert for the next layer.
+            for pos in p_len..bucket {
+                h.row_mut(pos).fill(0.0);
+            }
+            x = h;
+            self.flush_ckpt();
+        }
+
+        // First token from the last prompt position.
+        let last = Tensor::from_rows(&[x.row(p_len - 1)]);
+        let token = self.lm_head(&[last])?[0];
+        {
+            let req = self.reqs.get_mut(&id).unwrap();
+            req.kv.set_len(p_len);
+            req.phase = ReqPhase::Decode;
+            req.next_input = token;
+            req.generated = 1;
+        }
+        self.emit_token(id, 0, token);
+        self.commit(id);
+        let req = &self.reqs[&id];
+        if req.generated >= req.meta.max_new_tokens {
+            self.finish(id);
+        } else {
+            self.active.push_back(id);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // Decode
+    // ---------------------------------------------------------------------
+
+    fn decode_step(&mut self) -> Result<(), StepError> {
+        self.steps += 1;
+        let m = self.manifest.model.clone();
+        let batch: Vec<u64> = self
+            .active
+            .iter()
+            .copied()
+            .take(self.cfg.cluster.decode_batch)
+            .collect();
+        let b = batch.len();
+        if b == 0 {
+            return Ok(());
+        }
+        // Rotate so other actives get the next step.
+        for _ in 0..b {
+            let id = self.active.pop_front().unwrap();
+            self.active.push_back(id);
+        }
+        let bucket = Buckets::fit(&self.manifest.buckets.decode_b, b).ok_or(StepError::Fatal)?;
+
+        // Embed last tokens.
+        let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+        for (i, id) in batch.iter().enumerate() {
+            let tok = self.reqs[id].next_input as usize;
+            x.row_mut(i).copy_from_slice(self.weights.embed_row(tok));
+        }
+
+        for layer in 0..m.layers {
+            // Gather the batched KV cache.
+            let (kc, vc, pos) = {
+                let kvs: Vec<&RequestKv> = batch.iter().map(|id| &self.reqs[id].kv).collect();
+                self.asm.gather(&kvs, layer, bucket, m.kv_heads, m.head_dim)
+            };
+            let mut args = vec![
+                ArgValue::f32(x.clone()),
+                ArgValue::f32(kc),
+                ArgValue::f32(vc),
+                ArgValue::I32(pos, vec![bucket]),
+            ];
+            args.extend(attn_weight_args(layer));
+            let outs = self
+                .device
+                .execute(&format!("attn_decode_b{bucket}"), args)
+                .map_err(|_| StepError::Fatal)?;
+            let (h, g, k_new, v_new) = unpack4(outs);
+            // Append KV + queue segments.
+            for (i, id) in batch.iter().enumerate() {
+                let req = self.reqs.get_mut(id).unwrap();
+                let cur = req.kv.len();
+                req.kv.write(layer, cur, k_new.row(i), v_new.row(i));
+                self.streamer.push_segment(SegmentMsg {
+                    request: *id,
+                    pos: cur as u32,
+                    layer: layer as u16,
+                    data: req.kv.read_segment(layer, cur),
+                });
+            }
+            // Route + expert I/O.
+            let probs = self
+                .device
+                .execute(
+                    &format!("router_b{bucket}"),
+                    vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+                )
+                .map_err(|_| StepError::Fatal)?;
+            let routes = router::select_top_k(&probs[0], b, m.top_k);
+            let groups = ExpertGroups::from_routes(&routes);
+            let mut h = h;
+            self.expert_io(layer as u32, &g, &groups, &mut h)?;
+            for i in b..bucket {
+                h.row_mut(i).fill(0.0);
+            }
+            x = h;
+        }
+
+        // Advance lengths, emit tokens, commit.
+        let rows: Vec<Tensor> = (0..b).map(|i| Tensor::from_rows(&[x.row(i)])).collect();
+        let tokens = self.lm_head(&rows)?;
+        for (i, id) in batch.iter().enumerate() {
+            let (index, token) = {
+                let req = self.reqs.get_mut(id).unwrap();
+                let new_len = req.kv.len() + 1;
+                req.kv.set_len(new_len);
+                let index = req.generated;
+                req.next_input = tokens[i];
+                req.generated += 1;
+                (index, tokens[i])
+            };
+            self.emit_token(*id, index, token);
+            self.commit(*id);
+            let req = &self.reqs[id];
+            if req.generated >= req.meta.max_new_tokens {
+                self.finish(*id);
+            }
+        }
+        Ok(())
+    }
+
+    fn expert_io(
+        &mut self,
+        layer: u32,
+        g: &Tensor,
+        groups: &ExpertGroups,
+        h: &mut Tensor,
+    ) -> Result<(), StepError> {
+        match self.refe.expert_io(layer, g, groups, h, &self.inbox, &mut self.deferred) {
+            Ok(()) => Ok(()),
+            Err(RefeError::LocalDown) => Err(StepError::Fatal),
+            Err(RefeError::Unroutable { .. }) | Err(RefeError::CclAbort(_)) => {
+                Err(StepError::Stalled)
+            }
+        }
+    }
+
+    /// lm_head over single-row tensors (bucketed as one batch).
+    fn lm_head(&mut self, rows: &[Tensor]) -> Result<Vec<u32>, StepError> {
+        let m = &self.manifest.model;
+        let b = rows.len();
+        let bucket = Buckets::fit(&self.manifest.buckets.lm_head_b, b).ok_or(StepError::Fatal)?;
+        let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+        for (i, r) in rows.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(r.row(0));
+        }
+        let outs = self
+            .device
+            .execute(
+                &format!("lm_head_b{bucket}"),
+                vec![
+                    ArgValue::f32(x),
+                    ArgValue::weight("ln_f"),
+                    ArgValue::weight("lm_head"),
+                ],
+            )
+            .map_err(|_| StepError::Fatal)?;
+        Ok((0..b).map(|i| ops::argmax(outs[0].row(i)) as u32).collect())
+    }
+
+    fn emit_token(&mut self, id: u64, index: u32, token: u32) {
+        let _ = self.gw_qp.post(
+            ClusterMsg::Token { request: id, index, token, worker: self.idx },
+            HDR_BYTES,
+            TrafficClass::Control,
+        );
+    }
+
+    fn commit(&mut self, id: u64) {
+        let req = &self.reqs[&id];
+        self.streamer.push_commit(CommitMeta {
+            request: id,
+            committed_pos: req.kv.len() as u32,
+            last_token: req.next_input,
+            generated: req.generated,
+            max_new_tokens: req.meta.max_new_tokens,
+            prompt_len: req.meta.prompt.len() as u32,
+        });
+    }
+
+    fn finish(&mut self, id: u64) {
+        let _ = self.gw_qp.post(
+            ClusterMsg::Finished { request: id, worker: self.idx },
+            HDR_BYTES,
+            TrafficClass::Control,
+        );
+        self.active.retain(|&r| r != id);
+        self.reqs.remove(&id);
+    }
+}
+
+#[derive(Debug)]
+enum StepError {
+    /// This worker is dead (device or node killed).
+    Fatal,
+    /// Forward progress blocked (unroutable expert / CCL abort).
+    Stalled,
+}
+
+fn attn_weight_args(layer: usize) -> Vec<ArgValue> {
+    vec![
+        ArgValue::weight(format!("layer{layer}.wq")),
+        ArgValue::weight(format!("layer{layer}.wk")),
+        ArgValue::weight(format!("layer{layer}.wv")),
+        ArgValue::weight(format!("layer{layer}.wo")),
+        ArgValue::weight(format!("layer{layer}.ln1")),
+        ArgValue::weight(format!("layer{layer}.ln2")),
+    ]
+}
+
+fn attn_args_prefill(x: Tensor, layer: usize) -> Vec<ArgValue> {
+    let mut args = vec![ArgValue::f32(x)];
+    args.extend(attn_weight_args(layer));
+    args
+}
+
+fn unpack4(mut outs: Vec<Tensor>) -> (Tensor, Tensor, Tensor, Tensor) {
+    assert_eq!(outs.len(), 4);
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let g = outs.pop().unwrap();
+    let h = outs.pop().unwrap();
+    (h, g, k, v)
+}

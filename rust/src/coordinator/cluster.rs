@@ -1,0 +1,355 @@
+//! Cluster assembly: builds the fabric, spawns the checkpoint store,
+//! orchestrator, gateway, AWs and EWs, and exposes the fault-injection
+//! and reporting API the experiments use.
+
+use super::aw::{self, AwParams};
+use super::ert::Ert;
+use super::ew::{self, EwParams};
+use super::gateway::{self, GatewayParams, GatewayShared};
+use super::orchestrator::{self, OrchParams, OrchState, RecoveryMode};
+use crate::checkpoint::store::CkptStore;
+use crate::config::Config;
+use crate::metrics::{EventLog, RunAnalysis};
+use crate::modelcfg::{weights::Weights, Manifest};
+use crate::proto::ClusterMsg;
+use crate::runtime::Device;
+use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane};
+use crate::workload::Request;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Spawner: creates workers on demand (initial bring-up, background
+/// provisioning, coarse restarts). Owned by the cluster, shared with the
+/// orchestrator.
+pub struct Spawner {
+    pub fabric: Arc<Fabric<ClusterMsg>>,
+    pub manifest: Arc<Manifest>,
+    pub weights: Weights,
+    pub cfg: Config,
+    pub stop: Arc<AtomicBool>,
+    registry: Mutex<HashMap<NodeId, WorkerCtl>>,
+}
+
+struct WorkerCtl {
+    device: Device,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl Spawner {
+    /// Spawn + initialize an AW (blocking; the block *is* T_w).
+    pub fn spawn_aw(&self, idx: u32, ert: Ert) -> Result<Device, String> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err("cluster stopping".into());
+        }
+        let (thread, device) = aw::spawn(AwParams {
+            idx,
+            cfg: self.cfg.clone(),
+            ert,
+            manifest: self.manifest.clone(),
+            weights: self.weights.clone(),
+            fabric: self.fabric.clone(),
+            stop: self.stop.clone(),
+        });
+        self.registry
+            .lock()
+            .unwrap()
+            .insert(NodeId::Aw(idx), WorkerCtl { device: device.clone(), thread });
+        Ok(device)
+    }
+
+    pub fn spawn_ew(
+        &self,
+        idx: u32,
+        primaries: Vec<usize>,
+        shadows: Vec<usize>,
+        aws: Vec<u32>,
+    ) -> Result<Device, String> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err("cluster stopping".into());
+        }
+        let (thread, device) = ew::spawn(EwParams {
+            idx,
+            primaries,
+            shadows,
+            initial_aws: aws,
+            cfg: self.cfg.clone(),
+            manifest: self.manifest.clone(),
+            weights: self.weights.clone(),
+            fabric: self.fabric.clone(),
+            stop: self.stop.clone(),
+        });
+        self.registry
+            .lock()
+            .unwrap()
+            .insert(NodeId::Ew(idx), WorkerCtl { device: device.clone(), thread });
+        Ok(device)
+    }
+
+    /// Fail-stop a worker: node goes silent on the fabric and its device
+    /// dies. (Both the injection path and the coarse-restart teardown.)
+    pub fn kill(&self, node: NodeId) {
+        self.fabric.kill(node);
+        if let Some(ctl) = self.registry.lock().unwrap().get(&node) {
+            ctl.device.kill();
+        }
+    }
+
+    pub fn device_of(&self, node: NodeId) -> Option<Device> {
+        self.registry.lock().unwrap().get(&node).map(|c| c.device.clone())
+    }
+
+    /// Post an admin message as the orchestrator (provisioning threads).
+    pub fn post_admin(&self, to: NodeId, msg: ClusterMsg) {
+        if let Ok(qp) = self.fabric.qp(NodeId::Orchestrator, to, Plane::Control) {
+            let bytes = msg.wire_bytes();
+            let _ = qp.post(msg, bytes, TrafficClass::Admin);
+        }
+    }
+
+    fn join_all(&self) {
+        let mut reg = self.registry.lock().unwrap();
+        for (_, ctl) in reg.drain() {
+            ctl.device.kill();
+            let _ = ctl.thread.join();
+        }
+    }
+}
+
+/// Launch options beyond `Config`.
+#[derive(Clone)]
+pub struct LaunchOptions {
+    pub mode: RecoveryMode,
+    pub http_port: Option<u16>,
+    /// How long the gateway waits for stragglers after the last arrival.
+    pub drain_timeout: Duration,
+    /// Record the AW egress links' traffic (Fig. 8).
+    pub record_traffic: bool,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions {
+            mode: RecoveryMode::Tarragon,
+            http_port: None,
+            drain_timeout: Duration::from_secs(120),
+            record_traffic: false,
+        }
+    }
+}
+
+pub struct Cluster {
+    pub fabric: Arc<Fabric<ClusterMsg>>,
+    pub spawner: Arc<Spawner>,
+    pub state: Arc<OrchState>,
+    pub events: Arc<EventLog>,
+    pub gw: Arc<GatewayShared>,
+    pub store: Arc<Mutex<CkptStore>>,
+    stop: Arc<AtomicBool>,
+    service_threads: Vec<std::thread::JoinHandle<()>>,
+    pub initial_aws: Vec<u32>,
+    pub initial_ews: Vec<u32>,
+}
+
+/// Summary returned by `Cluster::finish`.
+pub struct ClusterReport {
+    pub analysis: RunAnalysis,
+    pub submitted: usize,
+    pub finished: usize,
+    pub aw_failures: u64,
+    pub ew_failures: u64,
+    pub restarts: u64,
+}
+
+impl Cluster {
+    /// Build and start the full cluster; returns once every worker is
+    /// initialized and the gateway is running the schedule.
+    pub fn launch(
+        cfg: Config,
+        manifest: Arc<Manifest>,
+        weights: Weights,
+        schedule: Vec<Request>,
+        opts: LaunchOptions,
+    ) -> Cluster {
+        let fabric: Arc<Fabric<ClusterMsg>> = Fabric::new(cfg.transport.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        let gw_shared = Arc::new(GatewayShared::default());
+        let spawner = Arc::new(Spawner {
+            fabric: fabric.clone(),
+            manifest: manifest.clone(),
+            weights: weights.clone(),
+            cfg: cfg.clone(),
+            stop: stop.clone(),
+            registry: Mutex::new(HashMap::new()),
+        });
+
+        // --- checkpoint store service (its own node, §7.1) -------------
+        let store = Arc::new(Mutex::new(CkptStore::new(manifest.model.layers)));
+        let (store_inbox, store_handle) = fabric.register(NodeId::Store);
+        let store_thread = {
+            let store = store.clone();
+            let fabric = fabric.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("ckpt-store".into())
+                .spawn(move || {
+                    let mut qps: HashMap<NodeId, crate::transport::Qp<ClusterMsg>> =
+                        HashMap::new();
+                    while !stop.load(Ordering::Relaxed) && store_handle.is_alive() {
+                        match store_inbox.recv(Duration::from_millis(2)) {
+                            Ok(env) => {
+                                let replies =
+                                    store.lock().unwrap().handle(env.from, env.msg);
+                                for (to, msg) in replies {
+                                    let class = match &msg {
+                                        ClusterMsg::Restore(_) => TrafficClass::Restore,
+                                        _ => TrafficClass::Admin,
+                                    };
+                                    let bytes = msg.wire_bytes();
+                                    let qp = qps.entry(to).or_insert_with(|| {
+                                        fabric.qp(NodeId::Store, to, Plane::Data).expect("qp")
+                                    });
+                                    let _ = qp.post(msg, bytes, class);
+                                }
+                            }
+                            Err(crate::transport::QpError::Timeout) => {}
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("store thread")
+        };
+
+        // Pre-register the static service nodes so workers can create QPs
+        // toward them during their own init.
+        let (orch_inbox, _orch_handle) = fabric.register(NodeId::Orchestrator);
+        let (gw_inbox, _gw_handle) = fabric.register(NodeId::Gateway);
+
+        // --- expert layout + initial ERT --------------------------------
+        let e = manifest.model.experts;
+        let n_ews = cfg.cluster.num_ews;
+        let ert = Ert::initial(e, n_ews, cfg.resilience.shadow_experts);
+        let initial_aws: Vec<u32> = (0..cfg.cluster.num_aws as u32).collect();
+        let mut ew_specs: Vec<(u32, Vec<usize>, Vec<usize>)> = Vec::new();
+        for i in 0..n_ews as u32 {
+            let primaries: Vec<usize> = (0..e).filter(|x| x % n_ews == i as usize).collect();
+            // Ring shadows: EW i shadows the primaries of EW (i-1).
+            let prev = ((i as usize + n_ews) - 1) % n_ews;
+            let shadows: Vec<usize> = if cfg.resilience.shadow_experts {
+                (0..e).filter(|x| x % n_ews == prev).collect()
+            } else {
+                Vec::new()
+            };
+            ew_specs.push((i, primaries, shadows));
+        }
+
+        // --- orchestrator ------------------------------------------------
+        let state = Arc::new(OrchState::default());
+        let orch_thread = orchestrator::spawn(OrchParams {
+            inbox: orch_inbox,
+            mode: opts.mode,
+            spawner: spawner.clone(),
+            state: state.clone(),
+            initial_ert: ert.clone(),
+            initial_aws: initial_aws.clone(),
+            initial_ews: ew_specs.clone(),
+            stop: stop.clone(),
+            http_port: opts.http_port,
+        });
+
+        // --- workers (parallel bring-up) ---------------------------------
+        let mut joins = Vec::new();
+        for (i, prim, shad) in ew_specs.clone() {
+            let spawner = spawner.clone();
+            let aws = initial_aws.clone();
+            joins.push(std::thread::spawn(move || {
+                spawner.spawn_ew(i, prim, shad, aws).map(|_| ())
+            }));
+        }
+        for &i in &initial_aws {
+            let spawner = spawner.clone();
+            let e = ert.clone();
+            joins.push(std::thread::spawn(move || spawner.spawn_aw(i, e).map(|_| ())));
+        }
+        for j in joins {
+            j.join().expect("bring-up thread").expect("worker init");
+        }
+
+        if opts.record_traffic {
+            for &i in &initial_aws {
+                if let Some(l) = fabric.egress_of(NodeId::Aw(i)) {
+                    l.enable_recording();
+                }
+            }
+        }
+
+        // --- gateway -------------------------------------------------------
+        // The event epoch starts here: t=0 is the schedule start (worker
+        // bring-up above is excluded from run timelines; T_w is reported
+        // separately via InitStats).
+        let events = Arc::new(EventLog::new());
+        let gw_thread = gateway::spawn(GatewayParams {
+            inbox: gw_inbox,
+            schedule,
+            initial_aws: initial_aws.clone(),
+            fabric: fabric.clone(),
+            events: events.clone(),
+            shared: gw_shared.clone(),
+            stop: stop.clone(),
+            drain_timeout: opts.drain_timeout,
+        });
+
+        Cluster {
+            fabric,
+            spawner,
+            state,
+            events,
+            gw: gw_shared,
+            store,
+            stop,
+            service_threads: vec![store_thread, orch_thread, gw_thread],
+            initial_aws,
+            initial_ews: ew_specs.iter().map(|(i, _, _)| *i).collect(),
+        }
+    }
+
+    /// Fail-stop injection (the SIGINT of §7.2).
+    pub fn kill_aw(&self, idx: u32) {
+        self.spawner.kill(NodeId::Aw(idx));
+    }
+
+    pub fn kill_ew(&self, idx: u32) {
+        self.spawner.kill(NodeId::Ew(idx));
+    }
+
+    /// Wait until the gateway drains (or `timeout`). Returns whether the
+    /// workload completed.
+    pub fn wait_done(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.gw.done.load(Ordering::Acquire) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        false
+    }
+
+    /// Stop everything and produce the run report.
+    pub fn finish(mut self, window_secs: f64) -> ClusterReport {
+        self.stop.store(true, Ordering::Release);
+        for t in self.service_threads.drain(..) {
+            let _ = t.join();
+        }
+        self.spawner.join_all();
+        ClusterReport {
+            analysis: RunAnalysis::from_log(&self.events, window_secs),
+            submitted: self.gw.submitted(),
+            finished: self.gw.finished(),
+            aw_failures: self.state.aw_failures.load(Ordering::Relaxed),
+            ew_failures: self.state.ew_failures.load(Ordering::Relaxed),
+            restarts: self.state.restarts.load(Ordering::Relaxed),
+        }
+    }
+}

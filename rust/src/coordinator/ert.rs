@@ -1,0 +1,154 @@
+//! Expert Routing Table (§4.2): logical expert id -> ordered candidate EW
+//! list (primary first, then shadows). Each AW holds its own versioned
+//! copy, updated by the orchestrator; lookups additionally filter through
+//! the AW's *local* dead-set so self-healing can reroute before the
+//! orchestrator's update arrives (§5.1).
+
+use crate::proto::ErtTable;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+pub struct Ert {
+    version: u64,
+    table: ErtTable,
+    /// EWs this holder has locally observed as failed (probe-confirmed);
+    /// cleared when an orchestrator update supersedes local knowledge.
+    local_dead: HashSet<u32>,
+}
+
+impl Ert {
+    pub fn new(version: u64, table: ErtTable) -> Ert {
+        Ert { version, table, local_dead: HashSet::new() }
+    }
+
+    /// The canonical initial layout: experts spread round-robin over EWs,
+    /// each expert's shadow on the next EW in the ring (§5.3).
+    pub fn initial(num_experts: usize, num_ews: usize, with_shadows: bool) -> Ert {
+        let mut table: ErtTable = Vec::with_capacity(num_experts);
+        for e in 0..num_experts {
+            let primary = (e % num_ews) as u32;
+            let mut cands = vec![primary];
+            if with_shadows && num_ews > 1 {
+                cands.push(((e + 1) % num_ews) as u32);
+            }
+            table.push(cands);
+        }
+        Ert::new(1, table)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn table(&self) -> &ErtTable {
+        &self.table
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Resolve an expert to the best live candidate.
+    pub fn resolve(&self, expert: usize) -> Option<u32> {
+        self.table
+            .get(expert)?
+            .iter()
+            .copied()
+            .find(|ew| !self.local_dead.contains(ew))
+    }
+
+    /// All candidates of an expert (for diagnostics/tests).
+    pub fn candidates(&self, expert: usize) -> &[u32] {
+        &self.table[expert]
+    }
+
+    /// Experts whose primary is the given EW.
+    pub fn primaries_of(&self, ew: u32) -> Vec<usize> {
+        self.table
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.first() == Some(&ew))
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    /// Mark an EW dead locally (probe-confirmed failure); subsequent
+    /// resolves skip it immediately — the "localized remapping" of §4.2.
+    pub fn mark_dead(&mut self, ew: u32) {
+        self.local_dead.insert(ew);
+    }
+
+    pub fn is_dead(&self, ew: u32) -> bool {
+        self.local_dead.contains(&ew)
+    }
+
+    /// Apply an orchestrator update (monotonic in version). Local dead-set
+    /// is cleared: the orchestrator's table already reflects the failure
+    /// (and possibly a replacement EW reusing the index).
+    pub fn apply(&mut self, version: u64, table: ErtTable) -> bool {
+        if version <= self.version {
+            return false;
+        }
+        self.version = version;
+        self.table = table;
+        self.local_dead.clear();
+        true
+    }
+
+    /// Every EW referenced by the table (the datapath peers an AW needs).
+    pub fn all_ews(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.table.iter().flatten().copied().collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_layout_round_robin_with_ring_shadows() {
+        let ert = Ert::initial(8, 4, true);
+        assert_eq!(ert.resolve(0), Some(0));
+        assert_eq!(ert.resolve(5), Some(1));
+        assert_eq!(ert.candidates(3), &[3, 0]);
+        assert_eq!(ert.primaries_of(2), vec![2, 6]);
+        assert_eq!(ert.all_ews(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn no_shadows_means_single_candidate() {
+        let ert = Ert::initial(8, 4, false);
+        assert_eq!(ert.candidates(0).len(), 1);
+    }
+
+    #[test]
+    fn local_dead_reroutes_to_shadow() {
+        let mut ert = Ert::initial(8, 4, true);
+        ert.mark_dead(1);
+        assert_eq!(ert.resolve(1), Some(2)); // expert 1: primary ew1 -> shadow ew2
+        assert_eq!(ert.resolve(5), Some(2));
+        assert_eq!(ert.resolve(0), Some(0)); // unaffected
+        // Both candidates dead -> unroutable
+        ert.mark_dead(2);
+        assert_eq!(ert.resolve(1), None);
+    }
+
+    #[test]
+    fn apply_is_monotonic_and_clears_local_dead() {
+        let mut ert = Ert::initial(4, 2, true);
+        ert.mark_dead(0);
+        assert!(ert.is_dead(0));
+        // Stale update rejected
+        assert!(!ert.apply(1, vec![vec![1]; 4]));
+        assert!(ert.is_dead(0));
+        // Fresh update applies and clears
+        assert!(ert.apply(2, vec![vec![1], vec![1], vec![0], vec![0]]));
+        assert_eq!(ert.version(), 2);
+        assert!(!ert.is_dead(0));
+        assert_eq!(ert.resolve(0), Some(1));
+        assert_eq!(ert.resolve(2), Some(0));
+    }
+}

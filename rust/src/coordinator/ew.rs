@@ -1,0 +1,462 @@
+//! Expert Worker (EW): hosts expert FFNs, executes them in layer-wise
+//! batches, and self-heals around AW failures (§5.2).
+//!
+//! Batching policy per (layer) buffer, faithful to the paper:
+//!   1. execute when every *expected* AW (known, marked active, not dead)
+//!      has delivered its dispatch for the layer;
+//!   2. after `silence_window` with missing dispatches, probe the missing
+//!      AWs (if detection is enabled); probe-confirmed-dead AWs are
+//!      omitted from the batch and reported to the orchestrator;
+//!   3. after `partial_batch_wait` (if partial batches are enabled),
+//!      execute with whatever is buffered — a late AW's dispatch simply
+//!      forms its own (smaller) batch later. Without partial batches the
+//!      EW waits indefinitely: the global-barrier behavior of prior
+//!      systems that the MegaScale baseline exhibits under failures.
+//!
+//! Replayed dispatches (`urgent`, §5.1) bypass buffering entirely so that
+//! recovering AWs do not become stragglers.
+//!
+//! Shadow experts (§5.3): weights for shadow assignments are uploaded at
+//! init (residual GPU memory, no compute cost while inactive — Fig. 14);
+//! dispatches for *any* expert whose weights are resident execute
+//! immediately. If an unexpected expert arrives (shadows disabled), the
+//! EW cold-loads the weights first, modeling the "reload from storage"
+//! cost the paper's shadows avoid.
+
+use crate::config::Config;
+use crate::modelcfg::{weights::Weights, Buckets, Manifest};
+use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, ReturnMsg};
+use crate::runtime::{roles, ArgValue, Device, DeviceRole};
+use crate::tensor::Tensor;
+use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub struct EwParams {
+    pub idx: u32,
+    pub primaries: Vec<usize>,
+    pub shadows: Vec<usize>,
+    pub initial_aws: Vec<u32>,
+    pub cfg: Config,
+    pub manifest: Arc<Manifest>,
+    pub weights: Weights,
+    pub fabric: Arc<Fabric<ClusterMsg>>,
+    pub stop: Arc<AtomicBool>,
+}
+
+struct AwInfo {
+    active: bool,
+    dead: bool,
+}
+
+struct LayerBuf {
+    dispatches: HashMap<u32, DispatchMsg>,
+    first_arrival: Instant,
+    probed: bool,
+}
+
+pub struct EwWorker {
+    idx: u32,
+    node: NodeId,
+    cfg: Config,
+    manifest: Arc<Manifest>,
+    device: Device,
+    inbox: Inbox<ClusterMsg>,
+    handle: NodeHandle,
+    fabric: Arc<Fabric<ClusterMsg>>,
+    data_qps: HashMap<u32, Qp<ClusterMsg>>,
+    ctrl_qps: HashMap<u32, Qp<ClusterMsg>>,
+    orch_qp: Option<Qp<ClusterMsg>>,
+    aws: HashMap<u32, AwInfo>,
+    buffers: BTreeMap<u32, LayerBuf>,
+    resident: HashSet<usize>,
+    stop: Arc<AtomicBool>,
+    /// Counters for experiments.
+    pub batches_executed: u64,
+    pub partial_batches: u64,
+    pub urgent_executions: u64,
+    pub cold_loads: u64,
+}
+
+/// Spawn an EW worker thread; blocks until the device is initialized (the
+/// init time is the EW's T_w) and returns (thread handle, device handle).
+pub fn spawn(params: EwParams) -> (std::thread::JoinHandle<()>, Device) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let idx = params.idx;
+    let h = std::thread::Builder::new()
+        .name(format!("ew-{idx}"))
+        .spawn(move || {
+            let mut w = match EwWorker::init(params) {
+                Ok(w) => w,
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            };
+            let _ = tx.send(Ok(w.device.clone()));
+            w.run();
+        })
+        .expect("spawn ew thread");
+    let device = rx.recv().expect("ew init channel").expect("ew init");
+    (h, device)
+}
+
+impl EwWorker {
+    fn init(p: EwParams) -> Result<EwWorker, String> {
+        let node = NodeId::Ew(p.idx);
+        let (inbox, handle) = p.fabric.register(node);
+        // Shadow weights are uploaded at init only when the feature is on.
+        let mut experts = p.primaries.clone();
+        if p.cfg.resilience.shadow_experts {
+            experts.extend(p.shadows.iter().copied());
+        }
+        let device = Device::spawn(
+            format!("ew{}", p.idx),
+            p.manifest.clone(),
+            p.weights.clone(),
+            DeviceRole::Expert { experts: experts.clone() }.plan(&p.manifest),
+            p.cfg.transport.worker_extra_init,
+        )
+        .map_err(|e| e.to_string())?;
+        let aws = p
+            .initial_aws
+            .iter()
+            .map(|&a| (a, AwInfo { active: false, dead: false }))
+            .collect();
+        Ok(EwWorker {
+            idx: p.idx,
+            node,
+            cfg: p.cfg,
+            manifest: p.manifest,
+            device,
+            inbox,
+            handle,
+            fabric: p.fabric,
+            data_qps: HashMap::new(),
+            ctrl_qps: HashMap::new(),
+            orch_qp: None,
+            aws,
+            buffers: BTreeMap::new(),
+            resident: experts.into_iter().collect(),
+            stop: p.stop,
+            batches_executed: 0,
+            partial_batches: 0,
+            urgent_executions: 0,
+            cold_loads: 0,
+        })
+    }
+
+    fn run(&mut self) {
+        while !self.stop.load(Ordering::Relaxed) && self.handle.is_alive() {
+            match self.inbox.recv(Duration::from_millis(2)) {
+                Ok(env) => self.handle_msg(env),
+                Err(crate::transport::QpError::Timeout) => {}
+                Err(_) => break, // killed
+            }
+            self.check_buffers();
+        }
+        self.device.kill();
+    }
+
+    fn handle_msg(&mut self, env: Envelope<ClusterMsg>) {
+        match env.msg {
+            ClusterMsg::Dispatch(d) => {
+                let aw = match env.from {
+                    NodeId::Aw(a) => a,
+                    _ => return,
+                };
+                self.aws.entry(aw).or_insert(AwInfo { active: true, dead: false }).active = true;
+                if d.urgent {
+                    // §5.1: replayed requests are prioritized — execute now.
+                    self.urgent_executions += 1;
+                    self.execute_for_aw(aw, &d);
+                    return;
+                }
+                let buf = self.buffers.entry(d.layer).or_insert_with(|| LayerBuf {
+                    dispatches: HashMap::new(),
+                    first_arrival: Instant::now(),
+                    probed: false,
+                });
+                buf.dispatches.insert(aw, d);
+            }
+            ClusterMsg::ActiveBeacon { active } => {
+                if let NodeId::Aw(a) = env.from {
+                    self.aws.entry(a).or_insert(AwInfo { active, dead: false }).active = active;
+                }
+            }
+            ClusterMsg::AwSet { aws } => {
+                let set: HashSet<u32> = aws.iter().copied().collect();
+                for (&a, info) in self.aws.iter_mut() {
+                    if !set.contains(&a) {
+                        info.dead = true;
+                        info.active = false;
+                    } else {
+                        info.dead = false;
+                    }
+                }
+                for a in aws {
+                    self.aws.entry(a).or_insert(AwInfo { active: false, dead: false });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Expected contributors for layer batching.
+    fn expected_aws(&self) -> Vec<u32> {
+        self.aws
+            .iter()
+            .filter(|(_, i)| i.active && !i.dead)
+            .map(|(&a, _)| a)
+            .collect()
+    }
+
+    fn check_buffers(&mut self) {
+        let res = self.cfg.resilience.clone();
+        let layers: Vec<u32> = self.buffers.keys().copied().collect();
+        for layer in layers {
+            let (complete, age, missing) = {
+                let buf = &self.buffers[&layer];
+                let expected = self.expected_aws();
+                let missing: Vec<u32> = expected
+                    .iter()
+                    .copied()
+                    .filter(|a| !buf.dispatches.contains_key(a))
+                    .collect();
+                (missing.is_empty(), buf.first_arrival.elapsed(), missing)
+            };
+
+            let mut run_partial = false;
+            if !complete {
+                // (2) probe missing AWs after the silence window
+                if res.detection
+                    && res.partial_batch
+                    && age > res.silence_window
+                    && !self.buffers[&layer].probed
+                {
+                    self.buffers.get_mut(&layer).unwrap().probed = true;
+                    for aw in &missing {
+                        if !self.probe_aw(*aw) {
+                            self.mark_aw_dead(*aw);
+                        }
+                    }
+                    // Re-evaluate completeness with dead AWs omitted.
+                    let buf = &self.buffers[&layer];
+                    let still_missing = self
+                        .expected_aws()
+                        .iter()
+                        .any(|a| !buf.dispatches.contains_key(a));
+                    if !still_missing {
+                        self.execute_layer(layer, false);
+                        continue;
+                    }
+                }
+                // (3) batching-window expiry: execute with what we have.
+                // This is a *performance* bound on batch formation (M2N
+                // micro-batching has one too) and applies to every system;
+                // a late AW's dispatch simply forms its own batch later.
+                // The §5.2 semantic (omitting probe-confirmed-dead AWs) is
+                // governed by `detection` + `partial_batch` above.
+                if age > res.partial_batch_wait {
+                    run_partial = true;
+                }
+            }
+
+            if complete {
+                self.execute_layer(layer, false);
+            } else if run_partial && !self.buffers[&layer].dispatches.is_empty() {
+                self.execute_layer(layer, true);
+            }
+        }
+    }
+
+    fn probe_aw(&mut self, aw: u32) -> bool {
+        let timeout = self.cfg.resilience.probe_timeout;
+        let retries = self.cfg.resilience.probe_retries.max(1);
+        let qp = self.ctrl_qp(aw);
+        for _ in 0..retries {
+            if qp.probe(timeout).is_ok() {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn mark_aw_dead(&mut self, aw: u32) {
+        if let Some(info) = self.aws.get_mut(&aw) {
+            info.dead = true;
+        }
+        let node = self.node;
+        if let Some(qp) = self.orch_qp_mut() {
+            let _ = qp.post(
+                ClusterMsg::FailureReport { suspect: NodeId::Aw(aw), reporter: node },
+                crate::proto::HDR_BYTES,
+                TrafficClass::Control,
+            );
+        }
+    }
+
+    fn execute_layer(&mut self, layer: u32, partial: bool) {
+        let buf = match self.buffers.remove(&layer) {
+            Some(b) => b,
+            None => return,
+        };
+        self.batches_executed += 1;
+        if partial {
+            self.partial_batches += 1;
+        }
+        // Merge rows per expert across AWs: expert -> (aw, slot, row data)
+        let hidden = self.manifest.model.hidden;
+        let mut merged: BTreeMap<u16, Vec<(u32, u32, Vec<f32>)>> = BTreeMap::new();
+        let mut rounds: HashMap<u32, u64> = HashMap::new();
+        for (&aw, d) in &buf.dispatches {
+            rounds.insert(aw, d.round);
+            for e in &d.entries {
+                let m = merged.entry(e.expert).or_default();
+                for (i, &slot) in e.slots.iter().enumerate() {
+                    m.push((aw, slot, e.rows.row(i).to_vec()));
+                }
+            }
+        }
+        // Execute per expert, split results back per AW.
+        let mut per_aw: HashMap<u32, Vec<DispatchEntry>> = HashMap::new();
+        for (expert, rows) in merged {
+            let outs = self.run_expert(layer as usize, expert as usize, &rows, hidden);
+            // Regroup rows by AW.
+            let mut by_aw: HashMap<u32, (Vec<u32>, Vec<f32>)> = HashMap::new();
+            for ((aw, slot, _), out_row) in rows.iter().zip(outs) {
+                let entry = by_aw.entry(*aw).or_default();
+                entry.0.push(*slot);
+                entry.1.extend_from_slice(&out_row);
+            }
+            for (aw, (slots, data)) in by_aw {
+                let n = slots.len();
+                per_aw.entry(aw).or_default().push(DispatchEntry {
+                    expert,
+                    rows: Tensor::new(vec![n, hidden], data),
+                    slots,
+                });
+            }
+        }
+        // Return results (including empty returns for AWs that sent
+        // token-less dispatches: the layer-sync ack they wait on is only
+        // for entries they sent, so empties need no reply).
+        for (aw, entries) in per_aw {
+            let msg = ReturnMsg { layer, round: rounds.get(&aw).copied().unwrap_or(0), entries };
+            let bytes = msg.wire_bytes();
+            let qp = self.data_qp(aw);
+            let _ = qp.post(ClusterMsg::Return(msg), bytes, TrafficClass::ExpertReturn);
+        }
+    }
+
+    /// Execute one urgent (replayed) dispatch immediately for one AW.
+    fn execute_for_aw(&mut self, aw: u32, d: &DispatchMsg) {
+        let hidden = self.manifest.model.hidden;
+        let mut entries = Vec::new();
+        for e in &d.entries {
+            let rows: Vec<(u32, u32, Vec<f32>)> = e
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| (aw, s, e.rows.row(i).to_vec()))
+                .collect();
+            let outs = self.run_expert(d.layer as usize, e.expert as usize, &rows, hidden);
+            let mut data = Vec::with_capacity(outs.len() * hidden);
+            for o in &outs {
+                data.extend_from_slice(o);
+            }
+            entries.push(DispatchEntry {
+                expert: e.expert,
+                rows: Tensor::new(vec![outs.len(), hidden], data),
+                slots: e.slots.clone(),
+            });
+        }
+        let msg = ReturnMsg { layer: d.layer, round: d.round, entries };
+        let bytes = msg.wire_bytes();
+        let qp = self.data_qp(aw);
+        let _ = qp.post(ClusterMsg::Return(msg), bytes, TrafficClass::ExpertReturn);
+    }
+
+    /// Run one expert FFN over merged rows, chunking to the largest bucket.
+    fn run_expert(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        rows: &[(u32, u32, Vec<f32>)],
+        hidden: usize,
+    ) -> Vec<Vec<f32>> {
+        // Cold-load weights if this expert is not resident (shadow-less
+        // failover, or a provisioning race) — the §5.3 cost shadows avoid.
+        if !self.resident.contains(&expert) {
+            let names = roles::expert_weights(&self.manifest, expert);
+            if self.device.upload_weights(&names).is_ok() {
+                self.resident.insert(expert);
+                self.cold_loads += 1;
+            } else {
+                return rows.iter().map(|_| vec![0.0; hidden]).collect();
+            }
+        }
+        let buckets = &self.manifest.buckets.expert_b;
+        let max_bucket = *buckets.last().unwrap();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut i = 0;
+        while i < rows.len() {
+            let n = (rows.len() - i).min(max_bucket);
+            let bucket = Buckets::fit(buckets, n).unwrap_or(max_bucket);
+            let mut data = vec![0.0f32; bucket * hidden];
+            for (j, (_, _, row)) in rows[i..i + n].iter().enumerate() {
+                data[j * hidden..(j + 1) * hidden].copy_from_slice(row);
+            }
+            let x = Tensor::new(vec![bucket, hidden], data);
+            let result = self.device.execute(
+                &format!("expert_b{bucket}"),
+                vec![
+                    ArgValue::f32(x),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w1")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w3")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w2")),
+                ],
+            );
+            match result {
+                Ok(outs) => {
+                    let y = &outs[0];
+                    for j in 0..n {
+                        out.push(y.row(j).to_vec());
+                    }
+                }
+                Err(_) => {
+                    // Device died mid-batch (fail-stop): emit nothing; the
+                    // run loop exits on the next iteration.
+                    return rows.iter().map(|_| vec![0.0; hidden]).collect();
+                }
+            }
+            i += n;
+        }
+        out
+    }
+
+    fn data_qp(&mut self, aw: u32) -> &Qp<ClusterMsg> {
+        let fabric = &self.fabric;
+        let node = self.node;
+        self.data_qps
+            .entry(aw)
+            .or_insert_with(|| fabric.qp(node, NodeId::Aw(aw), Plane::Data).expect("qp"))
+    }
+
+    fn ctrl_qp(&mut self, aw: u32) -> &Qp<ClusterMsg> {
+        let fabric = &self.fabric;
+        let node = self.node;
+        self.ctrl_qps
+            .entry(aw)
+            .or_insert_with(|| fabric.qp(node, NodeId::Aw(aw), Plane::Control).expect("qp"))
+    }
+
+    fn orch_qp_mut(&mut self) -> Option<&Qp<ClusterMsg>> {
+        if self.orch_qp.is_none() {
+            self.orch_qp = self.fabric.qp(self.node, NodeId::Orchestrator, Plane::Control).ok();
+        }
+        self.orch_qp.as_ref()
+    }
+}

@@ -1,0 +1,234 @@
+//! Cluster gateway: admits requests to AWs (round-robin over the live
+//! set), collects output tokens, and records the event log the experiment
+//! harnesses analyze. Under coarse-grained restarts it re-submits
+//! unfinished requests and de-duplicates re-emitted tokens, so the metrics
+//! see recomputation as a token-stream *gap*, not as extra throughput.
+
+use crate::metrics::{EventKind, EventLog};
+use crate::proto::{ClusterMsg, RequestMeta};
+use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
+use crate::workload::Request;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct GatewayParams {
+    /// Pre-registered inbox (the cluster registers the gateway node before
+    /// spawning workers, which create QPs toward it at init).
+    pub inbox: Inbox<ClusterMsg>,
+    pub schedule: Vec<Request>,
+    pub initial_aws: Vec<u32>,
+    pub fabric: Arc<Fabric<ClusterMsg>>,
+    pub events: Arc<EventLog>,
+    pub shared: Arc<GatewayShared>,
+    pub stop: Arc<AtomicBool>,
+    /// Give up this long after the last scheduled arrival even if some
+    /// requests never finish (worker failures in baseline runs).
+    pub drain_timeout: Duration,
+}
+
+/// State shared with the harness (inspectable during/after the run).
+#[derive(Default)]
+pub struct GatewayShared {
+    inner: Mutex<SharedInner>,
+    pub done: AtomicBool,
+}
+
+#[derive(Default)]
+struct SharedInner {
+    /// request id -> generated token ids (deduped).
+    generated: HashMap<u64, Vec<u32>>,
+    finished: usize,
+    submitted: usize,
+}
+
+impl GatewayShared {
+    pub fn generated_of(&self, id: u64) -> Vec<u32> {
+        self.inner.lock().unwrap().generated.get(&id).cloned().unwrap_or_default()
+    }
+
+    pub fn finished(&self) -> usize {
+        self.inner.lock().unwrap().finished
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.inner.lock().unwrap().submitted
+    }
+}
+
+struct GwReq {
+    meta: RequestMeta,
+    assigned: u32,
+    finished: bool,
+}
+
+pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gateway".into())
+        .spawn(move || gateway_main(params))
+        .expect("spawn gateway")
+}
+
+fn gateway_main(p: GatewayParams) {
+    let inbox = &p.inbox;
+    let mut qps: HashMap<u32, Qp<ClusterMsg>> = HashMap::new();
+    let mut orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
+    let mut aws = p.initial_aws.clone();
+    let mut rr = 0usize;
+    let mut reqs: HashMap<u64, GwReq> = HashMap::new();
+    let start = Instant::now();
+    let mut next = 0usize;
+    let last_arrival = p.schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+    loop {
+        if p.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now = start.elapsed().as_secs_f64();
+
+        // 1. Submit due arrivals.
+        while next < p.schedule.len() && p.schedule[next].arrival_s <= now {
+            let r = &p.schedule[next];
+            next += 1;
+            if aws.is_empty() {
+                continue; // total outage: drop (counted as unsubmitted)
+            }
+            let aw = aws[rr % aws.len()];
+            rr += 1;
+            let meta = RequestMeta {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens as u32,
+            };
+            submit(&p.fabric, &mut qps, aw, &meta);
+            if let Some(q) = orch_qp.as_ref() {
+                let _ = q.post(
+                    ClusterMsg::Bound { request: r.id, aw },
+                    crate::proto::HDR_BYTES,
+                    TrafficClass::Admin,
+                );
+            }
+            p.events.record(EventKind::Submitted, r.id, 0, aw);
+            reqs.insert(r.id, GwReq { meta, assigned: aw, finished: false });
+            p.shared.inner.lock().unwrap().submitted += 1;
+        }
+
+        // 2. Collect tokens / notices.
+        match inbox.recv(Duration::from_millis(1)) {
+            Ok(env) => match env.msg {
+                ClusterMsg::Token { request, index, token, worker } => {
+                    let mut inner = p.shared.inner.lock().unwrap();
+                    let gen = inner.generated.entry(request).or_default();
+                    if (index as usize) < gen.len() {
+                        // Re-emitted during replay/restart: recomputation,
+                        // not new output. Keep the original.
+                    } else {
+                        gen.resize(index as usize, u32::MAX);
+                        gen.push(token);
+                        drop(inner);
+                        p.events.record(EventKind::Token, request, index, worker);
+                    }
+                }
+                ClusterMsg::Finished { request, worker } => {
+                    if let Some(r) = reqs.get_mut(&request) {
+                        if !r.finished {
+                            r.finished = true;
+                            p.events.record(EventKind::Finished, request, 0, worker);
+                            p.shared.inner.lock().unwrap().finished += 1;
+                        }
+                    }
+                }
+                ClusterMsg::AwSet { aws: new_aws } => {
+                    aws = new_aws;
+                    rr = 0;
+                }
+                ClusterMsg::Rebind { request, new_aw } => {
+                    if let Some(r) = reqs.get_mut(&request) {
+                        r.assigned = new_aw;
+                    }
+                }
+                ClusterMsg::Resubmit { requests } => {
+                    // Lost before any checkpoint: restart from the prompt.
+                    for id in requests {
+                        let Some(r) = reqs.get(&id) else { continue };
+                        if r.finished || aws.is_empty() {
+                            continue;
+                        }
+                        let aw = aws[rr % aws.len()];
+                        rr += 1;
+                        let meta = r.meta.clone();
+                        submit(&p.fabric, &mut qps, aw, &meta);
+                        if let Some(q) = orch_qp.as_ref() {
+                            let _ = q.post(
+                                ClusterMsg::Bound { request: id, aw },
+                                crate::proto::HDR_BYTES,
+                                TrafficClass::Admin,
+                            );
+                        }
+                        reqs.get_mut(&id).unwrap().assigned = aw;
+                        p.events.record(EventKind::Migrated, id, 0, aw);
+                    }
+                }
+                ClusterMsg::RestartNotice => {
+                    // Coarse restart: all in-flight work was lost.
+                    // Re-submit every unfinished request from scratch.
+                    let ids: Vec<u64> =
+                        reqs.iter().filter(|(_, r)| !r.finished).map(|(&id, _)| id).collect();
+                    for id in ids {
+                        if aws.is_empty() {
+                            break;
+                        }
+                        let aw = aws[rr % aws.len()];
+                        rr += 1;
+                        let meta = reqs[&id].meta.clone();
+                        submit(&p.fabric, &mut qps, aw, &meta);
+                        if let Some(q) = orch_qp.as_ref() {
+                            let _ = q.post(
+                                ClusterMsg::Bound { request: id, aw },
+                                crate::proto::HDR_BYTES,
+                                TrafficClass::Admin,
+                            );
+                        }
+                        reqs.get_mut(&id).unwrap().assigned = aw;
+                        p.events.record(EventKind::Migrated, id, 0, aw);
+                    }
+                }
+                _ => {}
+            },
+            Err(crate::transport::QpError::Timeout) => {}
+            Err(_) => break,
+        }
+        // Keep the orchestrator QP fresh if it was unavailable at start.
+        if orch_qp.is_none() {
+            orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
+        }
+
+        // 3. Exit conditions: everything finished, or drain timeout.
+        let all_submitted = next >= p.schedule.len();
+        if all_submitted {
+            let unfinished = reqs.values().filter(|r| !r.finished).count();
+            let pending_subs = p.schedule.len() - reqs.len();
+            if unfinished == 0 && pending_subs == 0 {
+                break;
+            }
+            if now > last_arrival + p.drain_timeout.as_secs_f64() {
+                break;
+            }
+        }
+    }
+    p.shared.done.store(true, Ordering::Release);
+}
+
+fn submit(
+    fabric: &Arc<Fabric<ClusterMsg>>,
+    qps: &mut HashMap<u32, Qp<ClusterMsg>>,
+    aw: u32,
+    meta: &RequestMeta,
+) {
+    let qp = qps.entry(aw).or_insert_with(|| {
+        fabric.qp(NodeId::Gateway, NodeId::Aw(aw), Plane::Control).expect("gw qp")
+    });
+    let bytes = meta.wire_bytes();
+    let _ = qp.post(ClusterMsg::NewRequest(meta.clone()), bytes, TrafficClass::Admin);
+}

@@ -1,0 +1,25 @@
+//! Layer 3 — the paper's system contribution.
+//!
+//! - [`ert`]: the Expert Routing Table — the indirection that decouples
+//!   expert identity from expert location (§4.2).
+//! - [`router`]: top-k gate selection over the router artifact's output.
+//! - [`aw`]: the Attention Worker — vLLM-role compute engine + REFE
+//!   (reconfigurable forwarding engine) + checkpoint streaming.
+//! - [`ew`]: the Expert Worker — layer-wise batching with partial-batch
+//!   self-healing and shadow experts.
+//! - [`orchestrator`]: liveness monitoring, ERT updates, background
+//!   provisioning, coarse-restart mode for the MegaScale baseline.
+//! - [`gateway`]: request admission, token collection, metrics.
+//! - [`cluster`]: builds and wires the whole thing; fault injection API.
+
+pub mod aw;
+pub mod cluster;
+pub mod ert;
+pub mod ew;
+pub mod gateway;
+pub mod orchestrator;
+pub mod refe;
+pub mod router;
+
+pub use cluster::{Cluster, ClusterReport};
+pub use ert::Ert;

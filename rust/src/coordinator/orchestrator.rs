@@ -1,0 +1,579 @@
+//! The centralized orchestrator: liveness monitoring (probe sweeps +
+//! failure reports), ERT management, request redistribution after AW
+//! failures, background worker provisioning (§5.4), and — in
+//! `CoarseRestart` mode — the MegaScale-baseline behavior of tearing down
+//! and rebuilding the whole cluster on any failure.
+//!
+//! Also exposes the paper's HTTP admin endpoints (/health, /workers,
+//! /ert) through `util::http`.
+
+use super::cluster::Spawner;
+use super::ert::Ert;
+use crate::proto::{ClusterMsg, CommitMeta, HDR_BYTES};
+use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane, Qp};
+use crate::util::http::{Handler, HttpServer};
+use crate::util::json::{arr, num, obj, Json};
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// TARRAGON: worker-granularity failure domains.
+    Tarragon,
+    /// Baseline: any failure triggers a full teardown + restart.
+    CoarseRestart,
+}
+
+/// Cluster state shared with the HTTP admin plane and the harnesses.
+#[derive(Default)]
+pub struct OrchState {
+    inner: Mutex<StateInner>,
+    /// Total failures handled (AW, EW).
+    pub aw_failures: AtomicU64,
+    pub ew_failures: AtomicU64,
+    pub restarts: AtomicU64,
+    /// Stall bookkeeping for coarse restarts (Fig. 9a): set while a full
+    /// restart is in progress.
+    pub restarting: AtomicBool,
+}
+
+#[derive(Default)]
+struct StateInner {
+    aws: BTreeMap<u32, bool>,
+    ews: BTreeMap<u32, EwInfo>,
+    ert: Option<Ert>,
+    ert_version: u64,
+}
+
+#[derive(Clone, Debug)]
+struct EwInfo {
+    alive: bool,
+    primaries: Vec<usize>,
+    shadows: Vec<usize>,
+}
+
+impl OrchState {
+    pub fn live_aws(&self) -> Vec<u32> {
+        self.inner
+            .lock()
+            .unwrap()
+            .aws
+            .iter()
+            .filter(|(_, &a)| a)
+            .map(|(&i, _)| i)
+            .collect()
+    }
+
+    pub fn live_ews(&self) -> Vec<u32> {
+        self.inner
+            .lock()
+            .unwrap()
+            .ews
+            .iter()
+            .filter(|(_, e)| e.alive)
+            .map(|(&i, _)| i)
+            .collect()
+    }
+
+    pub fn ert_version(&self) -> u64 {
+        self.inner.lock().unwrap().ert_version
+    }
+
+    fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        obj(vec![
+            (
+                "aws",
+                arr(inner.aws.iter().map(|(&i, &alive)| {
+                    obj(vec![("id", num(i as f64)), ("alive", Json::Bool(alive))])
+                })),
+            ),
+            (
+                "ews",
+                arr(inner.ews.iter().map(|(&i, e)| {
+                    obj(vec![
+                        ("id", num(i as f64)),
+                        ("alive", Json::Bool(e.alive)),
+                        ("primaries", arr(e.primaries.iter().map(|&p| num(p as f64)))),
+                        ("shadows", arr(e.shadows.iter().map(|&p| num(p as f64)))),
+                    ])
+                })),
+            ),
+            ("ert_version", num(inner.ert_version as f64)),
+        ])
+    }
+}
+
+pub struct OrchParams {
+    /// Pre-registered inbox (registered by the cluster before workers).
+    pub inbox: crate::transport::Inbox<ClusterMsg>,
+    pub mode: RecoveryMode,
+    pub spawner: Arc<Spawner>,
+    pub state: Arc<OrchState>,
+    pub initial_ert: Ert,
+    pub initial_aws: Vec<u32>,
+    pub initial_ews: Vec<(u32, Vec<usize>, Vec<usize>)>,
+    pub stop: Arc<AtomicBool>,
+    /// Bind the HTTP admin server (port 0 = ephemeral; None = disabled).
+    pub http_port: Option<u16>,
+}
+
+pub fn spawn(params: OrchParams) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("orchestrator".into())
+        .spawn(move || orch_main(params))
+        .expect("spawn orchestrator")
+}
+
+fn orch_main(p: OrchParams) {
+    let fabric = p.spawner.fabric.clone();
+    let inbox = p.inbox;
+    {
+        let mut inner = p.state.inner.lock().unwrap();
+        for &a in &p.initial_aws {
+            inner.aws.insert(a, true);
+        }
+        for (i, prim, shad) in &p.initial_ews {
+            inner.ews.insert(
+                *i,
+                EwInfo { alive: true, primaries: prim.clone(), shadows: shad.clone() },
+            );
+        }
+        inner.ert_version = p.initial_ert.version();
+        inner.ert = Some(p.initial_ert.clone());
+    }
+
+    // HTTP admin plane.
+    let _http = p.http_port.map(|port| {
+        let st = p.state.clone();
+        let handler: Handler = Arc::new(move |path: &str| match path {
+            "/health" => (200, "{\"ok\":true}".to_string()),
+            "/workers" | "/ert" => (200, st.to_json().to_string()),
+            _ => (404, "{\"error\":\"not found\"}".to_string()),
+        });
+        HttpServer::start(port, handler)
+    });
+
+    let mut o = Orch {
+        fabric,
+        spawner: p.spawner,
+        state: p.state,
+        mode: p.mode,
+        stop: p.stop,
+        qps: BTreeMap::new(),
+        pending_adoptions: VecDeque::new(),
+        adopt_rr: 0,
+        bound: std::collections::HashMap::new(),
+        handled: HashSet::new(),
+        next_ew_idx: 0,
+        next_aw_idx: 0,
+        last_restart: None,
+    };
+    {
+        let inner = o.state.inner.lock().unwrap();
+        o.next_aw_idx = inner.aws.keys().max().map(|m| m + 1).unwrap_or(0);
+        o.next_ew_idx = inner.ews.keys().max().map(|m| m + 1).unwrap_or(0);
+    }
+
+    let probe_interval = o.spawner.cfg.resilience.probe_interval;
+    let detection = o.spawner.cfg.resilience.detection;
+    let mut last_sweep = Instant::now();
+    while !o.stop.load(Ordering::Relaxed) {
+        match inbox.recv(Duration::from_millis(2)) {
+            Ok(env) => o.handle(env.msg),
+            Err(crate::transport::QpError::Timeout) => {}
+            Err(_) => break,
+        }
+        if detection && last_sweep.elapsed() >= probe_interval {
+            last_sweep = Instant::now();
+            o.probe_sweep();
+        }
+    }
+}
+
+struct Orch {
+    fabric: Arc<Fabric<ClusterMsg>>,
+    spawner: Arc<Spawner>,
+    state: Arc<OrchState>,
+    mode: RecoveryMode,
+    stop: Arc<AtomicBool>,
+    qps: BTreeMap<NodeId, Qp<ClusterMsg>>,
+    pending_adoptions: VecDeque<CommitMeta>,
+    adopt_rr: usize,
+    /// request -> AW binding (gateway reports; used to find requests that
+    /// died without any committed checkpoint, e.g. mid-prefill).
+    bound: std::collections::HashMap<u64, u32>,
+    /// Failures already being handled (dedup of concurrent reports).
+    handled: HashSet<NodeId>,
+    next_ew_idx: u32,
+    next_aw_idx: u32,
+    /// Stale failure reports within this window after a full restart are
+    /// absorbed (the communicator re-init already covered them).
+    last_restart: Option<Instant>,
+}
+
+impl Orch {
+    fn qp(&mut self, to: NodeId, plane: Plane) -> Option<&Qp<ClusterMsg>> {
+        if !self.qps.contains_key(&to) {
+            let q = self.fabric.qp(NodeId::Orchestrator, to, plane).ok()?;
+            self.qps.insert(to, q);
+        }
+        self.qps.get(&to)
+    }
+
+    fn post(&mut self, to: NodeId, msg: ClusterMsg) {
+        let bytes = msg.wire_bytes();
+        if let Some(qp) = self.qp(to, Plane::Control) {
+            let _ = qp.post(msg, bytes, TrafficClass::Admin);
+        }
+    }
+
+    fn handle(&mut self, msg: ClusterMsg) {
+        match msg {
+            ClusterMsg::FailureReport { suspect, reporter } => {
+                // In coarse mode, an AW blaming itself means "communicator
+                // error" — the whole job is gone.
+                if self.mode == RecoveryMode::CoarseRestart {
+                    if self
+                        .last_restart
+                        .map(|t| t.elapsed() < Duration::from_secs(5))
+                        .unwrap_or(false)
+                    {
+                        return; // stale report from before the restart
+                    }
+                    self.full_restart();
+                    return;
+                }
+                if suspect == reporter {
+                    return;
+                }
+                self.confirm_and_recover(suspect);
+            }
+            ClusterMsg::ActiveReqs { aw, reqs } => {
+                // Requests bound to the failed AW but absent from the
+                // store's committed set died before any checkpoint (e.g.
+                // mid-prefill): they must restart from the prompt (§3.1 —
+                // prefill failures are recomputed, D3 covers decode).
+                let committed: std::collections::HashSet<u64> =
+                    reqs.iter().map(|r| r.request).collect();
+                let lost: Vec<u64> = self
+                    .bound
+                    .iter()
+                    .filter(|(id, &a)| a == aw && !committed.contains(id))
+                    .map(|(&id, _)| id)
+                    .collect();
+                if !lost.is_empty() {
+                    self.post(NodeId::Gateway, ClusterMsg::Resubmit { requests: lost });
+                }
+                for r in reqs {
+                    self.pending_adoptions.push_back(r);
+                }
+                self.drain_adoptions();
+            }
+            ClusterMsg::Bound { request, aw } => {
+                self.bound.insert(request, aw);
+            }
+            _ => {}
+        }
+    }
+
+    fn probe_sweep(&mut self) {
+        let (aws, ews): (Vec<u32>, Vec<u32>) = {
+            let inner = self.state.inner.lock().unwrap();
+            (
+                inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect(),
+                inner.ews.iter().filter(|(_, e)| e.alive).map(|(&i, _)| i).collect(),
+            )
+        };
+        for a in aws {
+            self.check_liveness(NodeId::Aw(a));
+        }
+        for e in ews {
+            self.check_liveness(NodeId::Ew(e));
+        }
+        self.drain_adoptions();
+    }
+
+    fn check_liveness(&mut self, node: NodeId) {
+        if self.handled.contains(&node) {
+            return;
+        }
+        // The fabric's alive flag is the RNIC-level ground truth a probe
+        // would discover; use a real probe for the timing cost.
+        let dead = {
+            let timeout = self.spawner.cfg.resilience.probe_timeout;
+            match self.qp(node, Plane::Control) {
+                Some(qp) => {
+                    if qp.peer_reachable() {
+                        false
+                    } else {
+                        qp.probe(timeout).is_err()
+                    }
+                }
+                None => false,
+            }
+        };
+        if dead {
+            if self.mode == RecoveryMode::CoarseRestart {
+                self.full_restart();
+            } else {
+                self.confirm_and_recover(node);
+            }
+        }
+    }
+
+    fn confirm_and_recover(&mut self, suspect: NodeId) {
+        if self.handled.contains(&suspect) {
+            return;
+        }
+        if self.fabric.is_alive(suspect) {
+            return; // stale report
+        }
+        self.handled.insert(suspect);
+        match suspect {
+            NodeId::Ew(i) => self.recover_ew(i),
+            NodeId::Aw(i) => self.recover_aw(i),
+            _ => {}
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // EW failure (§5.1 + §5.3 + §5.4)
+    // -----------------------------------------------------------------
+
+    fn recover_ew(&mut self, ew: u32) {
+        self.state.ew_failures.fetch_add(1, Ordering::Relaxed);
+        let (new_table, version, primaries, shadows, aws) = {
+            let mut inner = self.state.inner.lock().unwrap();
+            if let Some(e) = inner.ews.get_mut(&ew) {
+                e.alive = false;
+            }
+            let info = inner.ews.get(&ew).cloned();
+            let ert = inner.ert.as_mut().expect("ert");
+            // Drop the dead EW from every candidate list (shadows become
+            // primary where it led).
+            let mut table = ert.table().clone();
+            for cands in table.iter_mut() {
+                cands.retain(|&c| c != ew);
+            }
+            inner.ert_version += 1;
+            let v = inner.ert_version;
+            inner.ert = Some(Ert::new(v, table.clone()));
+            let aws: Vec<u32> =
+                inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+            (
+                table,
+                v,
+                info.as_ref().map(|i| i.primaries.clone()).unwrap_or_default(),
+                info.map(|i| i.shadows).unwrap_or_default(),
+                aws,
+            )
+        };
+        // Broadcast the remap (AWs reroute; EWs with shadow replicas start
+        // receiving that traffic — their weights are already resident).
+        for a in &aws {
+            self.post(NodeId::Aw(*a), ClusterMsg::ErtUpdate { version, table: new_table.clone() });
+        }
+
+        // Background capacity restoration (§5.4).
+        if self.spawner.cfg.resilience.provisioning && !primaries.is_empty() {
+            let idx = self.next_ew_idx;
+            self.next_ew_idx += 1;
+            let spawner = self.spawner.clone();
+            let state = self.state.clone();
+            let prim = primaries.clone();
+            let shad = shadows.clone();
+            let stop = self.stop.clone();
+            std::thread::Builder::new()
+                .name(format!("provision-ew{idx}"))
+                .spawn(move || {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let aws = state.live_aws();
+                    if spawner.spawn_ew(idx, prim.clone(), shad.clone(), aws).is_err() {
+                        return;
+                    }
+                    // Integrate: make the new EW primary again.
+                    let (table, version, live_aws) = {
+                        let mut inner = state.inner.lock().unwrap();
+                        inner.ews.insert(
+                            idx,
+                            EwInfo { alive: true, primaries: prim.clone(), shadows: shad.clone() },
+                        );
+                        let ert = inner.ert.as_ref().expect("ert");
+                        let mut table = ert.table().clone();
+                        for &e in &prim {
+                            table[e].retain(|&c| c != idx);
+                            table[e].insert(0, idx);
+                        }
+                        for &e in &shad {
+                            table[e].retain(|&c| c != idx);
+                            table[e].push(idx);
+                        }
+                        inner.ert_version += 1;
+                        let v = inner.ert_version;
+                        inner.ert = Some(Ert::new(v, table.clone()));
+                        let aws: Vec<u32> =
+                            inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+                        (table, v, aws)
+                    };
+                    for a in live_aws {
+                        spawner.post_admin(
+                            NodeId::Aw(a),
+                            ClusterMsg::ErtUpdate { version, table: table.clone() },
+                        );
+                    }
+                })
+                .ok();
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // AW failure (§6.2 + §5.4)
+    // -----------------------------------------------------------------
+
+    fn recover_aw(&mut self, aw: u32) {
+        self.state.aw_failures.fetch_add(1, Ordering::Relaxed);
+        let live_aws: Vec<u32> = {
+            let mut inner = self.state.inner.lock().unwrap();
+            inner.aws.insert(aw, false);
+            inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
+        };
+        // Tell EWs + gateway about the membership change.
+        let ews = self.state.live_ews();
+        for e in ews {
+            self.post(NodeId::Ew(e), ClusterMsg::AwSet { aws: live_aws.clone() });
+        }
+        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: live_aws.clone() });
+        // Ask the store which requests were on the failed AW; the reply
+        // (ActiveReqs) drives adoption.
+        self.post(NodeId::Store, ClusterMsg::QueryActive { aw });
+
+        // Background replacement AW.
+        if self.spawner.cfg.resilience.provisioning {
+            let idx = self.next_aw_idx;
+            self.next_aw_idx += 1;
+            let spawner = self.spawner.clone();
+            let state = self.state.clone();
+            let stop = self.stop.clone();
+            std::thread::Builder::new()
+                .name(format!("provision-aw{idx}"))
+                .spawn(move || {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let ert = state.inner.lock().unwrap().ert.clone().expect("ert");
+                    if spawner.spawn_aw(idx, ert).is_err() {
+                        return;
+                    }
+                    let live: Vec<u32> = {
+                        let mut inner = state.inner.lock().unwrap();
+                        inner.aws.insert(idx, true);
+                        inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
+                    };
+                    // New AW serves new requests immediately (§5.4).
+                    for e in state.live_ews() {
+                        spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
+                    }
+                    spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
+                })
+                .ok();
+        }
+    }
+
+    fn drain_adoptions(&mut self) {
+        while let Some(meta) = self.pending_adoptions.pop_front() {
+            let live = self.state.live_aws();
+            if live.is_empty() {
+                self.pending_adoptions.push_front(meta);
+                return;
+            }
+            let target = live[self.adopt_rr % live.len()];
+            self.adopt_rr += 1;
+            let req = meta.request;
+            self.bound.insert(req, target);
+            self.post(NodeId::Aw(target), ClusterMsg::AdoptRequest { meta });
+            self.post(NodeId::Gateway, ClusterMsg::Rebind { request: req, new_aw: target });
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Coarse restart (baseline)
+    // -----------------------------------------------------------------
+
+    fn full_restart(&mut self) {
+        if self.state.restarting.swap(true, Ordering::AcqRel) {
+            return; // already restarting
+        }
+        self.state.restarts.fetch_add(1, Ordering::Relaxed);
+        let (aws, ews): (Vec<u32>, Vec<(u32, EwInfo)>) = {
+            let inner = self.state.inner.lock().unwrap();
+            (
+                inner.aws.keys().copied().collect(),
+                inner.ews.iter().map(|(&i, e)| (i, e.clone())).collect(),
+            )
+        };
+        // Tear down everything (the CCL abort kills healthy workers too).
+        for &a in &aws {
+            self.spawner.kill(NodeId::Aw(a));
+        }
+        for (e, _) in &ews {
+            self.spawner.kill(NodeId::Ew(*e));
+        }
+        // Rebuild in parallel (restart storm; T_w dominates the stall).
+        let mut joins = Vec::new();
+        let ert = {
+            let mut inner = self.state.inner.lock().unwrap();
+            inner.ert_version += 1;
+            let v = inner.ert_version;
+            let table = inner.ert.as_ref().expect("ert").table().clone();
+            let e = Ert::new(v, table);
+            inner.ert = Some(e.clone());
+            e
+        };
+        for &a in &aws {
+            let spawner = self.spawner.clone();
+            let e = ert.clone();
+            joins.push(std::thread::spawn(move || spawner.spawn_aw(a, e).map(|_| ())));
+        }
+        for (i, info) in &ews {
+            let spawner = self.spawner.clone();
+            let (i, prim, shad) = (*i, info.primaries.clone(), info.shadows.clone());
+            let aws2 = aws.clone();
+            joins.push(std::thread::spawn(move || {
+                spawner.spawn_ew(i, prim, shad, aws2).map(|_| ())
+            }));
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        {
+            let mut inner = self.state.inner.lock().unwrap();
+            for a in &aws {
+                inner.aws.insert(*a, true);
+            }
+            for (i, _) in &ews {
+                if let Some(e) = inner.ews.get_mut(i) {
+                    e.alive = true;
+                }
+            }
+        }
+        // Everyone back: tell EWs the AW set and the gateway to resubmit.
+        for (e, _) in &ews {
+            self.post(NodeId::Ew(*e), ClusterMsg::AwSet { aws: aws.clone() });
+        }
+        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: aws.clone() });
+        self.post(NodeId::Gateway, ClusterMsg::RestartNotice);
+        self.handled.clear();
+        self.last_restart = Some(Instant::now());
+        self.state.restarting.store(false, Ordering::Release);
+    }
+}
+
+#[allow(dead_code)]
+fn unused_hdr() -> usize {
+    HDR_BYTES
+}

@@ -1,0 +1,345 @@
+//! REFE — the Reconfigurable Forwarding Engine (§4.2).
+//!
+//! AW-side runtime that mediates all AW-EW communication:
+//! `expert_io(layer, rows, routes)` scatters token rows to the EWs
+//! currently bound to their experts (via the local ERT copy), gathers the
+//! outputs, and transparently self-heals around EW failures (§5.1):
+//! a response gap beyond the silence window triggers a control-plane
+//! probe; a probe-confirmed-dead EW is marked in the local ERT, the
+//! orchestrator is notified, and the affected rows are *replayed* as
+//! urgent dispatches to the next candidate (healthy primary or shadow).
+//!
+//! Dispatches are sent to every known EW each layer — zero-row dispatches
+//! carry the implicit heartbeat + layer-sync signal the paper describes.
+
+use super::ert::Ert;
+use super::router::ExpertGroups;
+use crate::config::ResilienceConfig;
+use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, HDR_BYTES};
+use crate::tensor::{ops, Tensor};
+use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeId, Plane, Qp, QpError};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RefeError {
+    /// No live candidate EW for an expert: with a static ERT this is the
+    /// global stall (baseline); with dynamic ERT it means primary+shadows
+    /// all died before reprovisioning.
+    #[error("expert {expert} unroutable (candidates exhausted)")]
+    Unroutable { expert: usize },
+    /// The collective wait exceeded the CCL abort budget (baselines).
+    #[error("communicator timeout after {0:?}")]
+    CclAbort(Duration),
+    /// The local node died (fail-stop of this AW).
+    #[error("local node down")]
+    LocalDown,
+}
+
+pub struct Refe {
+    aw: u32,
+    node: NodeId,
+    pub ert: Ert,
+    resilience: ResilienceConfig,
+    fabric: Arc<Fabric<ClusterMsg>>,
+    data_qps: HashMap<u32, Qp<ClusterMsg>>,
+    ctrl_qps: HashMap<u32, Qp<ClusterMsg>>,
+    orch_qp: Option<Qp<ClusterMsg>>,
+    round: u64,
+    // Self-healing counters (§7 ablations / Fig. 9 analysis).
+    pub ew_failovers: u64,
+    pub rows_replayed: u64,
+    pub probes_sent: u64,
+    pub dispatch_bytes: u64,
+}
+
+impl Refe {
+    pub fn new(
+        aw: u32,
+        ert: Ert,
+        resilience: ResilienceConfig,
+        fabric: Arc<Fabric<ClusterMsg>>,
+    ) -> Refe {
+        Refe {
+            aw,
+            node: NodeId::Aw(aw),
+            ert,
+            resilience,
+            fabric,
+            data_qps: HashMap::new(),
+            ctrl_qps: HashMap::new(),
+            orch_qp: None,
+            round: 0,
+            ew_failovers: 0,
+            rows_replayed: 0,
+            probes_sent: 0,
+            dispatch_bytes: 0,
+        }
+    }
+
+    /// Scatter `groups`' rows (taken from `g`, the post-attention normed
+    /// activations) to EWs, gather expert outputs, and accumulate
+    /// `gate_weight * expert_out` into `h`'s rows. Non-Return messages
+    /// received while waiting are pushed to `deferred` for the AW loop.
+    ///
+    /// This is the paper's `expert_io(expert_id, layer_id, tokens)` API,
+    /// batched per layer.
+    pub fn expert_io(
+        &mut self,
+        layer: u32,
+        g: &Tensor,
+        groups: &ExpertGroups,
+        h: &mut Tensor,
+        inbox: &Inbox<ClusterMsg>,
+        deferred: &mut Vec<Envelope<ClusterMsg>>,
+    ) -> Result<(), RefeError> {
+        self.round += 1;
+        let round = self.round;
+        let hidden = g.row_len();
+
+        // slot -> (row index, gate weight); slots are per-call dense ids.
+        let mut slot_info: Vec<(usize, f32)> = Vec::new();
+        // Build per-EW dispatch entries.
+        let mut per_ew: HashMap<u32, Vec<DispatchEntry>> = HashMap::new();
+        // (expert, slots, rows) per entry retained for replay on failure.
+        let mut entry_of_slot: Vec<(usize, u32)> = Vec::new(); // slot -> (expert, ew)
+
+        for (&expert, rows) in &groups.groups {
+            let ew = self
+                .ert
+                .resolve(expert)
+                .ok_or(RefeError::Unroutable { expert })?;
+            let mut slots = Vec::with_capacity(rows.len());
+            let mut data = Vec::with_capacity(rows.len() * hidden);
+            for &(row, w) in rows {
+                let slot = slot_info.len() as u32;
+                slot_info.push((row, w));
+                entry_of_slot.push((expert, ew));
+                slots.push(slot);
+                data.extend_from_slice(g.row(row));
+            }
+            per_ew.entry(ew).or_default().push(DispatchEntry {
+                expert: expert as u16,
+                rows: Tensor::new(vec![slots.len(), hidden], data),
+                slots,
+            });
+        }
+
+        // Post to every known EW; empty dispatches are the heartbeat.
+        let mut outstanding: HashMap<u32, Vec<u32>> = HashMap::new(); // ew -> slots
+        for ew in self.ert.all_ews() {
+            if self.ert.is_dead(ew) {
+                continue;
+            }
+            let entries = per_ew.remove(&ew).unwrap_or_default();
+            let slots: Vec<u32> = entries.iter().flat_map(|e| e.slots.clone()).collect();
+            if !slots.is_empty() {
+                outstanding.insert(ew, slots);
+            }
+            let msg = DispatchMsg { layer, round, entries, urgent: false };
+            let bytes = msg.wire_bytes();
+            self.dispatch_bytes += bytes as u64;
+            let qp = self.data_qp(ew);
+            if qp
+                .post(ClusterMsg::Dispatch(msg), bytes, TrafficClass::ExpertDispatch)
+                .is_err()
+            {
+                return Err(RefeError::LocalDown);
+            }
+        }
+
+        // Gather with self-healing.
+        let mut done: Vec<bool> = vec![false; slot_info.len()];
+        let mut remaining = slot_info.len();
+        let start = Instant::now();
+        let mut last_progress = Instant::now();
+        while remaining > 0 {
+            match inbox.recv(Duration::from_millis(2)) {
+                Ok(env) => match env.msg {
+                    ClusterMsg::Return(ret) if ret.layer == layer && ret.round == round => {
+                        for e in &ret.entries {
+                            for (i, &slot) in e.slots.iter().enumerate() {
+                                let s = slot as usize;
+                                if s < done.len() && !done[s] {
+                                    done[s] = true;
+                                    remaining -= 1;
+                                    let (row, w) = slot_info[s];
+                                    ops::axpy_row(h.row_mut(row), w, e.rows.row(i));
+                                }
+                            }
+                        }
+                        // Clear per-EW bookkeeping for fully-served EWs.
+                        if let NodeId::Ew(ew) = env.from {
+                            if let Some(slots) = outstanding.get(&ew) {
+                                if slots.iter().all(|&s| done[s as usize]) {
+                                    outstanding.remove(&ew);
+                                }
+                            }
+                        }
+                        last_progress = Instant::now();
+                    }
+                    ClusterMsg::Return(_) => {} // stale round/layer
+                    _ => deferred.push(env),
+                },
+                Err(QpError::Timeout) => {}
+                Err(_) => return Err(RefeError::LocalDown),
+            }
+            if remaining == 0 {
+                break;
+            }
+
+            let waited = last_progress.elapsed();
+            if self.resilience.detection && waited > self.resilience.silence_window {
+                // Probe EWs that still owe us rows; replay onto shadows.
+                let suspects: Vec<u32> = outstanding.keys().copied().collect();
+                let mut any_dead = false;
+                for ew in suspects {
+                    if self.probe_ew(ew) {
+                        continue; // alive, just batching/slow
+                    }
+                    any_dead = true;
+                    self.on_ew_death(ew);
+                    let slots = outstanding.remove(&ew).unwrap_or_default();
+                    let pending: Vec<u32> =
+                        slots.into_iter().filter(|&s| !done[s as usize]).collect();
+                    self.replay(layer, round, &pending, &entry_of_slot, &slot_info, g, &mut outstanding)?;
+                }
+                if !any_dead {
+                    // All owers are alive; reset the window so we don't
+                    // re-probe in a tight loop while they batch.
+                    last_progress = Instant::now();
+                }
+            } else if !self.resilience.detection
+                && start.elapsed() > self.resilience.ccl_abort_timeout
+            {
+                // Baselines: fatal communicator error (NCCL-style abort).
+                let node = self.node;
+                if let Some(qp) = self.orch() {
+                    let _ = qp.post(
+                        // A self-blaming report = "communicator error".
+                        ClusterMsg::FailureReport { suspect: node, reporter: node },
+                        HDR_BYTES,
+                        TrafficClass::Control,
+                    );
+                }
+                return Err(RefeError::CclAbort(start.elapsed()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-dispatch pending slots to the next live candidates as urgent
+    /// replays (§5.1). Expert computation is stateless and deterministic,
+    /// so replaying the same rows yields identical results.
+    #[allow(clippy::too_many_arguments)]
+    fn replay(
+        &mut self,
+        layer: u32,
+        round: u64,
+        pending: &[u32],
+        entry_of_slot: &[(usize, u32)],
+        slot_info: &[(usize, f32)],
+        g: &Tensor,
+        outstanding: &mut HashMap<u32, Vec<u32>>,
+    ) -> Result<(), RefeError> {
+        let hidden = g.row_len();
+        // Group pending slots by expert, resolve to the next candidate.
+        let mut by_expert: HashMap<usize, Vec<u32>> = HashMap::new();
+        for &s in pending {
+            by_expert.entry(entry_of_slot[s as usize].0).or_default().push(s);
+        }
+        for (expert, slots) in by_expert {
+            let ew = self
+                .ert
+                .resolve(expert)
+                .ok_or(RefeError::Unroutable { expert })?;
+            let mut data = Vec::with_capacity(slots.len() * hidden);
+            for &s in &slots {
+                data.extend_from_slice(g.row(slot_info[s as usize].0));
+            }
+            let msg = DispatchMsg {
+                layer,
+                round,
+                entries: vec![DispatchEntry {
+                    expert: expert as u16,
+                    rows: Tensor::new(vec![slots.len(), hidden], data),
+                    slots: slots.clone(),
+                }],
+                urgent: true,
+            };
+            let bytes = msg.wire_bytes();
+            self.dispatch_bytes += bytes as u64;
+            self.rows_replayed += slots.len() as u64;
+            let qp = self.data_qp(ew);
+            qp.post(ClusterMsg::Dispatch(msg), bytes, TrafficClass::ExpertDispatch)
+                .map_err(|_| RefeError::LocalDown)?;
+            outstanding.entry(ew).or_default().extend(slots);
+        }
+        Ok(())
+    }
+
+    fn probe_ew(&mut self, ew: u32) -> bool {
+        let timeout = self.resilience.probe_timeout;
+        let retries = self.resilience.probe_retries.max(1);
+        self.probes_sent += 1;
+        let qp = self.ctrl_qp(ew);
+        for _ in 0..retries {
+            if qp.probe(timeout).is_ok() {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn on_ew_death(&mut self, ew: u32) {
+        self.ew_failovers += 1;
+        self.ert.mark_dead(ew);
+        let node = self.node;
+        if let Some(qp) = self.orch() {
+            let _ = qp.post(
+                ClusterMsg::FailureReport { suspect: NodeId::Ew(ew), reporter: node },
+                HDR_BYTES,
+                TrafficClass::Control,
+            );
+        }
+    }
+
+    fn data_qp(&mut self, ew: u32) -> &Qp<ClusterMsg> {
+        let fabric = &self.fabric;
+        let node = self.node;
+        self.data_qps
+            .entry(ew)
+            .or_insert_with(|| fabric.qp(node, NodeId::Ew(ew), Plane::Data).expect("qp"))
+    }
+
+    fn ctrl_qp(&mut self, ew: u32) -> &Qp<ClusterMsg> {
+        let fabric = &self.fabric;
+        let node = self.node;
+        self.ctrl_qps
+            .entry(ew)
+            .or_insert_with(|| fabric.qp(node, NodeId::Ew(ew), Plane::Control).expect("qp"))
+    }
+
+    fn orch(&mut self) -> Option<&Qp<ClusterMsg>> {
+        if self.orch_qp.is_none() {
+            self.orch_qp = self
+                .fabric
+                .qp(self.node, NodeId::Orchestrator, Plane::Control)
+                .ok();
+        }
+        self.orch_qp.as_ref()
+    }
+
+    /// Broadcast the AW's activity state to all EWs (batching membership).
+    pub fn broadcast_active(&mut self, active: bool) {
+        for ew in self.ert.all_ews() {
+            let qp = self.data_qp(ew);
+            let _ = qp.post(
+                ClusterMsg::ActiveBeacon { active },
+                HDR_BYTES,
+                TrafficClass::Control,
+            );
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Gate selection: turn the router artifact's softmax output into per-row
+//! top-k expert assignments (renormalized, Mixtral convention), then group
+//! rows by expert for dispatch. Top-k selection is control flow, so it
+//! lives in the coordinator rather than in an artifact; ties break to the
+//! lowest expert id, matching `jax.lax.top_k` in the L2 oracle.
+
+use crate::tensor::{ops, Tensor};
+use std::collections::BTreeMap;
+
+/// One row's routing decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowRoute {
+    /// (expert, renormalized gate weight), len top_k, descending weight.
+    pub gates: Vec<(usize, f32)>,
+}
+
+/// Route every row of `probs` ([B, E], only first `rows` valid).
+pub fn select_top_k(probs: &Tensor, rows: usize, top_k: usize) -> Vec<RowRoute> {
+    let e = probs.row_len();
+    assert!(top_k <= e);
+    (0..rows)
+        .map(|i| {
+            let mut gates = ops::top_k(probs.row(i), top_k);
+            ops::renormalize(&mut gates);
+            RowRoute { gates }
+        })
+        .collect()
+}
+
+/// Rows grouped by expert: expert -> (row indices, gate weights).
+#[derive(Debug, Default, Clone)]
+pub struct ExpertGroups {
+    pub groups: BTreeMap<usize, Vec<(usize, f32)>>,
+}
+
+impl ExpertGroups {
+    pub fn from_routes(routes: &[RowRoute]) -> ExpertGroups {
+        let mut groups: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+        for (row, r) in routes.iter().enumerate() {
+            for &(expert, w) in &r.gates {
+                groups.entry(expert).or_default().push((row, w));
+            }
+        }
+        ExpertGroups { groups }
+    }
+
+    pub fn num_assignments(&self) -> usize {
+        self.groups.values().map(|v| v.len()).sum()
+    }
+
+    /// Per-expert batch sizes — the Fig. 13(a) distribution.
+    pub fn batch_sizes(&self) -> Vec<(usize, usize)> {
+        self.groups.iter().map(|(e, v)| (*e, v.len())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probs(rows: Vec<Vec<f32>>) -> Tensor {
+        let b = rows.len();
+        let e = rows[0].len();
+        Tensor::new(vec![b, e], rows.into_iter().flatten().collect())
+    }
+
+    #[test]
+    fn top2_selection_and_renormalization() {
+        let p = probs(vec![vec![0.5, 0.3, 0.1, 0.1]]);
+        let routes = select_top_k(&p, 1, 2);
+        assert_eq!(routes[0].gates[0].0, 0);
+        assert_eq!(routes[0].gates[1].0, 1);
+        let w0 = routes[0].gates[0].1;
+        let w1 = routes[0].gates[1].1;
+        assert!((w0 + w1 - 1.0).abs() < 1e-6);
+        assert!((w0 - 0.625).abs() < 1e-6); // 0.5 / 0.8
+    }
+
+    #[test]
+    fn padded_rows_are_ignored() {
+        let p = probs(vec![vec![0.9, 0.1], vec![0.1, 0.9]]);
+        let routes = select_top_k(&p, 1, 1);
+        assert_eq!(routes.len(), 1);
+    }
+
+    #[test]
+    fn grouping_collects_rows_per_expert() {
+        let p = probs(vec![
+            vec![0.6, 0.3, 0.05, 0.05], // -> e0, e1
+            vec![0.1, 0.6, 0.25, 0.05], // -> e1, e2
+            vec![0.5, 0.05, 0.05, 0.4], // -> e0, e3
+        ]);
+        let routes = select_top_k(&p, 3, 2);
+        let g = ExpertGroups::from_routes(&routes);
+        assert_eq!(g.num_assignments(), 6);
+        assert_eq!(g.groups[&0].iter().map(|(r, _)| *r).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(g.groups[&1].len(), 2);
+        assert_eq!(g.groups[&3].len(), 1);
+        assert_eq!(g.batch_sizes(), vec![(0, 2), (1, 2), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_expert() {
+        let p = probs(vec![vec![0.25, 0.25, 0.25, 0.25]]);
+        let routes = select_top_k(&p, 1, 2);
+        assert_eq!(routes[0].gates[0].0, 0);
+        assert_eq!(routes[0].gates[1].0, 1);
+    }
+}

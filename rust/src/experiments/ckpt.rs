@@ -1,0 +1,53 @@
+//! §7.4 "Overhead of different checkpointing schemes": end-to-end
+//! throughput under (1) no checkpointing, (2) TARRAGON's asynchronous
+//! incremental checkpointing (idle-gap interleaved), and (3)
+//! Pause-Checkpoint-Resume at various intervals (the training-style
+//! global snapshot). Paper: (1) 1148 tok/s ≈ (2) 1147 tok/s; (3) at
+//! 8-token intervals drops 2.15x.
+
+use crate::config::{ResilienceConfig, WorkloadKind};
+use crate::experiments::common::{run_serving, write_csv, ServeSpec, SystemKind};
+
+pub fn run(rps: f64, duration: f64, pause_intervals: &[usize]) {
+    println!("§7.4 checkpointing schemes ({rps} RPS, {duration}s per scheme)");
+    let mut rows = Vec::new();
+    let mut baseline = None;
+
+    let mut run_variant = |label: String, res: ResilienceConfig| {
+        let mut spec = ServeSpec::new(SystemKind::Tarragon, WorkloadKind::Random, rps, duration);
+        spec.resilience = Some(res);
+        let out = run_serving(&spec);
+        let tps = out.analysis.throughput_tps;
+        (label, tps)
+    };
+
+    // (1) no checkpointing
+    let mut res = ResilienceConfig::default();
+    res.checkpointing = false;
+    let (l, tps) = run_variant("no-ckpt".into(), res);
+    baseline = baseline.or(Some(tps));
+    println!("  {l:<16} {tps:>7.0} tok/s");
+    rows.push(format!("{l},{tps:.1}"));
+
+    // (2) TARRAGON async incremental
+    let (l, tps) = run_variant("tarragon".into(), ResilienceConfig::default());
+    println!(
+        "  {l:<16} {tps:>7.0} tok/s ({:+.2}% vs no-ckpt)",
+        (tps / baseline.unwrap() - 1.0) * 100.0
+    );
+    rows.push(format!("{l},{tps:.1}"));
+
+    // (3) Pause-Checkpoint-Resume at intervals
+    for &every in pause_intervals {
+        let mut res = ResilienceConfig::default();
+        res.checkpointing = false;
+        res.pause_ckpt_every = every;
+        let (_, tps) = run_variant(format!("pause-every-{every}"), res);
+        println!(
+            "  pause-every-{every:<4} {tps:>7.0} tok/s ({:.2}x slower than no-ckpt)",
+            baseline.unwrap() / tps.max(1e-9)
+        );
+        rows.push(format!("pause-every-{every},{tps:.1}"));
+    }
+    write_csv("ckpt_overhead.csv", "scheme,tokens_per_s", &rows);
+}

@@ -1,0 +1,257 @@
+//! Shared experiment machinery: the serving runner (any system, any
+//! workload, optional fault injection) and CSV/result-file helpers.
+
+use crate::baselines::megascale;
+use crate::baselines::vllm::{VllmEngine, VllmKind, VllmOptions};
+use crate::config::{Config, ResilienceConfig, WorkloadConfig, WorkloadKind};
+use crate::coordinator::cluster::{Cluster, LaunchOptions};
+use crate::coordinator::orchestrator::RecoveryMode;
+use crate::metrics::RunAnalysis;
+use crate::modelcfg::{weights::Weights, Manifest};
+use crate::transport::link::{LinkStats, TrafficClass, TrafficEvent};
+use crate::transport::NodeId;
+use crate::workload::{self, Limits};
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    Tarragon,
+    Megascale,
+    VllmTp,
+    VllmPp,
+}
+
+impl SystemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::Tarragon => "tarragon",
+            SystemKind::Megascale => "megascale",
+            SystemKind::VllmTp => "vllm-tp",
+            SystemKind::VllmPp => "vllm-pp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SystemKind> {
+        Some(match s {
+            "tarragon" => SystemKind::Tarragon,
+            "megascale" => SystemKind::Megascale,
+            "vllm-tp" => SystemKind::VllmTp,
+            "vllm-pp" => SystemKind::VllmPp,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum FailureSpec {
+    KillAw { at_secs: f64, idx: u32 },
+    KillEw { at_secs: f64, idx: u32 },
+}
+
+#[derive(Clone)]
+pub struct ServeSpec {
+    pub system: SystemKind,
+    pub wl_kind: WorkloadKind,
+    pub rps: f64,
+    pub duration_secs: f64,
+    pub seed: u64,
+    pub num_aws: usize,
+    pub num_ews: usize,
+    /// Override resilience (ablations); None = system default.
+    pub resilience: Option<ResilienceConfig>,
+    pub failure: Option<FailureSpec>,
+    pub record_traffic: bool,
+    pub drain_timeout: Duration,
+    /// Fast worker bring-up for steady-state experiments (failure-free
+    /// runs don't need the full simulated cold-start cost).
+    pub fast_init: bool,
+}
+
+impl ServeSpec {
+    pub fn new(system: SystemKind, wl: WorkloadKind, rps: f64, duration: f64) -> ServeSpec {
+        ServeSpec {
+            system,
+            wl_kind: wl,
+            rps,
+            duration_secs: duration,
+            seed: 7,
+            num_aws: 4,
+            num_ews: 4,
+            resilience: None,
+            failure: None,
+            record_traffic: false,
+            drain_timeout: Duration::from_secs(120),
+            fast_init: true,
+        }
+    }
+}
+
+pub struct ServeOutcome {
+    pub analysis: RunAnalysis,
+    pub submitted: usize,
+    pub finished: usize,
+    pub restarts: u64,
+    pub aw_failures: u64,
+    pub ew_failures: u64,
+    /// Per-AW egress traffic recordings (if requested).
+    pub traffic: Vec<(u32, Vec<TrafficEvent>)>,
+    /// Per-AW egress link stats.
+    pub link_stats: Vec<(u32, LinkStats)>,
+}
+
+pub fn artifacts() -> (Arc<Manifest>, Weights) {
+    let dir = Manifest::default_dir();
+    let manifest = Arc::new(
+        Manifest::load(&dir).expect("artifacts not built — run `make artifacts` first"),
+    );
+    let weights = Weights::load(&manifest).expect("weights.bin");
+    (manifest, weights)
+}
+
+/// Run one serving experiment to completion and collect the outcome.
+pub fn run_serving(spec: &ServeSpec) -> ServeOutcome {
+    let (manifest, weights) = artifacts();
+    let wl = WorkloadConfig {
+        kind: spec.wl_kind,
+        rate_rps: spec.rps,
+        num_requests: 0,
+        duration_secs: spec.duration_secs,
+        seed: spec.seed,
+    };
+    let limits = Limits::from_model(&manifest.model, &manifest.buckets);
+    let schedule = workload::generate(&wl, limits);
+
+    match spec.system {
+        SystemKind::VllmTp | SystemKind::VllmPp => {
+            let kind = if spec.system == SystemKind::VllmTp { VllmKind::Tp } else { VllmKind::Pp };
+            let report = VllmEngine::run(
+                manifest,
+                weights,
+                schedule,
+                VllmOptions {
+                    kind,
+                    worker_extra_init: if spec.fast_init {
+                        Duration::from_millis(10)
+                    } else {
+                        Duration::from_millis(500)
+                    },
+                    drain_timeout: spec.drain_timeout,
+                    ..Default::default()
+                },
+            );
+            ServeOutcome {
+                analysis: report.analysis,
+                submitted: report.submitted,
+                finished: report.finished,
+                restarts: 0,
+                aw_failures: 0,
+                ew_failures: 0,
+                traffic: Vec::new(),
+                link_stats: Vec::new(),
+            }
+        }
+        SystemKind::Tarragon | SystemKind::Megascale => {
+            let mut cfg = Config::default();
+            cfg.cluster.num_aws = spec.num_aws;
+            cfg.cluster.num_ews = spec.num_ews;
+            cfg.workload = wl;
+            if spec.fast_init {
+                cfg.transport.worker_extra_init = Duration::from_millis(10);
+            }
+            let mut opts = LaunchOptions {
+                drain_timeout: spec.drain_timeout,
+                record_traffic: spec.record_traffic,
+                ..Default::default()
+            };
+            if spec.system == SystemKind::Megascale {
+                cfg = megascale::megascale_config(cfg);
+                opts.mode = RecoveryMode::CoarseRestart;
+            }
+            if let Some(res) = &spec.resilience {
+                cfg.resilience = res.clone();
+            }
+            let cluster = Cluster::launch(cfg, manifest, weights, schedule, opts);
+            if let Some(f) = spec.failure {
+                let (at, action): (f64, Box<dyn FnOnce() + Send>) = match f {
+                    FailureSpec::KillAw { at_secs, idx } => {
+                        let c = cluster.spawner.clone();
+                        (at_secs, Box::new(move || c.kill(NodeId::Aw(idx))))
+                    }
+                    FailureSpec::KillEw { at_secs, idx } => {
+                        let c = cluster.spawner.clone();
+                        (at_secs, Box::new(move || c.kill(NodeId::Ew(idx))))
+                    }
+                };
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_secs_f64(at));
+                    action();
+                });
+            }
+            let budget = Duration::from_secs_f64(spec.duration_secs)
+                + spec.drain_timeout
+                + Duration::from_secs(60);
+            cluster.wait_done(budget);
+            let traffic: Vec<(u32, Vec<TrafficEvent>)> = if spec.record_traffic {
+                cluster
+                    .initial_aws
+                    .iter()
+                    .filter_map(|&i| {
+                        cluster
+                            .fabric
+                            .egress_of(NodeId::Aw(i))
+                            .map(|l| (i, l.take_recording()))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let link_stats: Vec<(u32, LinkStats)> = cluster
+                .initial_aws
+                .iter()
+                .filter_map(|&i| {
+                    cluster.fabric.egress_of(NodeId::Aw(i)).map(|l| (i, l.stats()))
+                })
+                .collect();
+            let report = cluster.finish(0.25);
+            ServeOutcome {
+                analysis: report.analysis,
+                submitted: report.submitted,
+                finished: report.finished,
+                restarts: report.restarts,
+                aw_failures: report.aw_failures,
+                ew_failures: report.ew_failures,
+                traffic,
+                link_stats,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Result files
+// ---------------------------------------------------------------------------
+
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).expect("create results/");
+    dir
+}
+
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> PathBuf {
+    let path = results_dir().join(name);
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    println!("  wrote {}", path.display());
+    path
+}
+
+/// Traffic class short label for CSV.
+pub fn class_label(c: TrafficClass) -> &'static str {
+    c.name()
+}

@@ -1,0 +1,56 @@
+//! Fig. 10 + Fig. 11: the cost of failure resiliency when nothing fails.
+//! Sweeps load (RPS) across the four systems and both workloads,
+//! reporting TTFT (median/P95), TBT (median/P95), and output-token
+//! throughput. One run per (system, workload, rate); fig11 shares the
+//! same runs.
+
+use crate::config::WorkloadKind;
+use crate::experiments::common::{run_serving, write_csv, ServeSpec, SystemKind};
+
+pub fn run(rates: &[f64], duration: f64, systems: &[SystemKind]) {
+    println!("Fig 10/11: latency & throughput vs load ({duration}s per point)");
+    let mut rows = Vec::new();
+    for &wl in &[WorkloadKind::ShareGpt, WorkloadKind::Random] {
+        let wl_name = match wl {
+            WorkloadKind::ShareGpt => "sharegpt",
+            WorkloadKind::Random => "random",
+        };
+        for &system in systems {
+            for &rps in rates {
+                let spec = ServeSpec::new(system, wl, rps, duration);
+                let out = run_serving(&spec);
+                let a = &out.analysis;
+                let ttft = a.ttft();
+                let tbt = a.tbt();
+                println!(
+                    "  {wl_name:<8} {:<9} {rps:>5.1} rps | TTFT med {:>8.1} p95 {:>8.1} ms | \
+                     TBT med {:>7.1} p95 {:>7.1} ms | {:>6.0} tok/s | fin {}/{}",
+                    system.name(),
+                    ttft.median_ms,
+                    ttft.p95_ms,
+                    tbt.median_ms,
+                    tbt.p95_ms,
+                    a.throughput_tps,
+                    out.finished,
+                    out.submitted
+                );
+                rows.push(format!(
+                    "{wl_name},{},{rps},{:.2},{:.2},{:.2},{:.2},{:.1},{},{}",
+                    system.name(),
+                    ttft.median_ms,
+                    ttft.p95_ms,
+                    tbt.median_ms,
+                    tbt.p95_ms,
+                    a.throughput_tps,
+                    out.finished,
+                    out.submitted
+                ));
+            }
+        }
+    }
+    write_csv(
+        "fig10_fig11.csv",
+        "workload,system,rps,ttft_med_ms,ttft_p95_ms,tbt_med_ms,tbt_p95_ms,tokens_per_s,finished,submitted",
+        &rows,
+    );
+}

@@ -1,0 +1,198 @@
+//! Fig. 12: impact of restoration strategy at varying failure points.
+//!
+//! Compares, for an AW failure while decoding token `i`:
+//! - *sequential replay*: rebuild the KV cache by re-running prefill and
+//!   then decoding token-by-token up to `i` (no checkpoints);
+//! - *parallel replay*: one prefill over prompt+generated tokens;
+//! - *TARRAGON*: per-request restoration from the checkpoint store (§6.2).
+//!
+//! Metrics per strategy: restoration time, bytes moved (AW-EW traffic for
+//! the replays, store→AW traffic for TARRAGON), and GPU recomputation
+//! (device busy time). The replays execute for real on a monolithic
+//! device (their AW-EW traffic volume follows the dispatch wire format);
+//! TARRAGON's numbers come from a live cluster run with a real kill.
+
+use crate::baselines::common as bcommon;
+use crate::config::{Config, WorkloadKind};
+use crate::coordinator::cluster::{Cluster, LaunchOptions};
+use crate::experiments::common::{artifacts, write_csv};
+use crate::kvcache::RequestKv;
+use crate::modelcfg::Buckets;
+use crate::proto::HDR_BYTES;
+use crate::runtime::{Device, DeviceRole};
+use crate::tensor::Tensor;
+use crate::transport::link::TrafficClass;
+use crate::transport::NodeId;
+use crate::workload::Request;
+use std::time::{Duration, Instant};
+
+pub fn run(failure_points: &[usize]) {
+    println!("Fig 12: restoration strategies vs failure point");
+    let (manifest, weights) = artifacts();
+    let m = manifest.model.clone();
+    let prompt: Vec<u32> = (1..=8).collect();
+
+    // Replay executor (one device, plays the role of the alternate AW).
+    let device = Device::spawn(
+        "fig12-replay",
+        manifest.clone(),
+        weights.clone(),
+        DeviceRole::Monolithic.plan(&manifest),
+        Duration::ZERO,
+    )
+    .expect("replay device");
+
+    let mut rows = Vec::new();
+    for &i in failure_points {
+        // ---------------- sequential replay ----------------
+        let busy0 = device.stats().unwrap().total_busy();
+        let t0 = Instant::now();
+        let mut kv = RequestKv::new(&m);
+        let bucket = Buckets::fit(&manifest.buckets.prefill_t, prompt.len()).unwrap();
+        let mut x = embed(&weights, m.hidden, &prompt, bucket);
+        for layer in 0..m.layers {
+            x = bcommon::local_prefill_layer(&device, &manifest, &mut kv, layer, &x, bucket, prompt.len())
+                .unwrap();
+        }
+        kv.set_len(prompt.len());
+        let mut asm = crate::kvcache::BatchAssembler::new(&m);
+        let mut tok = 1u32;
+        for _ in 0..i {
+            let xd = embed(&weights, m.hidden, &[tok], 1);
+            let mut out = xd.clone();
+            for layer in 0..m.layers {
+                let mut kvs = vec![&mut kv];
+                out = bcommon::local_decode_layer(
+                    &device, &manifest, &mut asm, &mut kvs, layer, &out, 1, 1,
+                )
+                .unwrap();
+            }
+            let len = kv.len() + 1;
+            kv.set_len(len);
+            tok = bcommon::lm_head_tokens(&device, &manifest, &[out.row(0)]).unwrap()[0];
+        }
+        let seq_time = t0.elapsed();
+        let seq_busy = device.stats().unwrap().total_busy() - busy0;
+        let seq_bytes = replay_traffic_bytes(&m, prompt.len(), i);
+
+        // ---------------- parallel replay ----------------
+        let total = prompt.len() + i;
+        let (par_time, par_busy, par_ok) =
+            if let Some(bucket) = Buckets::fit(&manifest.buckets.prefill_t, total) {
+                let busy0 = device.stats().unwrap().total_busy();
+                let t0 = Instant::now();
+                let mut kv2 = RequestKv::new(&m);
+                // prompt + i generated tokens (ids don't affect cost)
+                let mut ids = prompt.clone();
+                ids.extend((0..i as u32).map(|k| (k % 100) + 1));
+                let mut x = embed(&weights, m.hidden, &ids, bucket);
+                for layer in 0..m.layers {
+                    x = bcommon::local_prefill_layer(
+                        &device, &manifest, &mut kv2, layer, &x, bucket, total,
+                    )
+                    .unwrap();
+                }
+                kv2.set_len(total);
+                (t0.elapsed(), device.stats().unwrap().total_busy() - busy0, true)
+            } else {
+                (Duration::ZERO, Duration::ZERO, false)
+            };
+        let par_bytes = seq_bytes; // paper: same AW-EW traffic as sequential
+
+        // ---------------- TARRAGON restoration ----------------
+        let (tar_time, tar_bytes) = tarragon_restore(&manifest, &weights, &prompt, i);
+        let tar_busy = Duration::ZERO; // no replayed prefill/decode work
+
+        println!(
+            "  i={i:<4} seq: {:>8.1} ms / {:>8} B / {:>7.1} ms GPU | par: {:>7.1} ms / {:>6.1} ms GPU | tarragon: {:>6.1} ms / {:>7} B / ~0 GPU",
+            seq_time.as_secs_f64() * 1e3,
+            seq_bytes,
+            seq_busy.as_secs_f64() * 1e3,
+            if par_ok { par_time.as_secs_f64() * 1e3 } else { f64::NAN },
+            par_busy.as_secs_f64() * 1e3,
+            tar_time.as_secs_f64() * 1e3,
+            tar_bytes,
+        );
+        rows.push(format!(
+            "{i},sequential,{:.3},{seq_bytes},{:.3}",
+            seq_time.as_secs_f64() * 1e3,
+            seq_busy.as_secs_f64() * 1e3
+        ));
+        if par_ok {
+            rows.push(format!(
+                "{i},parallel,{:.3},{par_bytes},{:.3}",
+                par_time.as_secs_f64() * 1e3,
+                par_busy.as_secs_f64() * 1e3
+            ));
+        }
+        rows.push(format!(
+            "{i},tarragon,{:.3},{tar_bytes},{:.3}",
+            tar_time.as_secs_f64() * 1e3,
+            tar_busy.as_secs_f64() * 1e3
+        ));
+    }
+    write_csv("fig12.csv", "failure_point,strategy,restore_ms,bytes,gpu_ms", &rows);
+    device.shutdown();
+}
+
+/// AW-EW dispatch+return volume of replaying `p` prefill tokens and `i`
+/// decode tokens (the wire format's actual sizes).
+fn replay_traffic_bytes(m: &crate::modelcfg::ModelSpec, p: usize, i: usize) -> u64 {
+    let per_row = 2 * m.hidden * 4 + 2 * 4 + HDR_BYTES / 4; // rows + slots + header share
+    let rows = (p + i) * m.top_k * m.layers;
+    (rows * per_row) as u64
+}
+
+fn embed(weights: &crate::modelcfg::weights::Weights, hidden: usize, ids: &[u32], bucket: usize) -> Tensor {
+    let mut x = Tensor::zeros(vec![bucket, hidden]);
+    for (i, &t) in ids.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(weights.embed_row(t as usize));
+    }
+    x
+}
+
+/// Live-cluster measurement: decode until token `i`, kill the owning AW,
+/// measure (a) the token-stream gap (restoration latency as the user sees
+/// it) and (b) the store's restore bytes.
+fn tarragon_restore(
+    manifest: &std::sync::Arc<crate::modelcfg::Manifest>,
+    weights: &crate::modelcfg::weights::Weights,
+    prompt: &[u32],
+    i: usize,
+) -> (Duration, u64) {
+    let mut cfg = Config::default();
+    cfg.cluster.num_aws = 2;
+    cfg.cluster.num_ews = 2;
+    cfg.transport.worker_extra_init = Duration::from_millis(10);
+    let schedule = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: prompt.to_vec(),
+        max_new_tokens: (i + 24).min(140),
+    }];
+    let cluster = Cluster::launch(
+        cfg,
+        manifest.clone(),
+        weights.clone(),
+        schedule,
+        LaunchOptions::default(),
+    );
+    // Wait until the i-th token was emitted, then kill the owning AW (aw0
+    // serves request 0 under round-robin).
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while cluster.gw.generated_of(0).len() < i && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cluster.kill_aw(0);
+    cluster.wait_done(Duration::from_secs(180));
+    let restore_bytes = cluster
+        .fabric
+        .egress_of(NodeId::Store)
+        .map(|l| l.stats().bytes_of(TrafficClass::Restore))
+        .unwrap_or(0);
+    let report = cluster.finish(0.25);
+    (
+        Duration::from_secs_f64(report.analysis.max_token_gap_s),
+        restore_bytes,
+    )
+}

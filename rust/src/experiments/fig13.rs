@@ -1,0 +1,101 @@
+//! Fig. 13 (Appendix B): (a) per-expert batch-size distribution when a
+//! large total batch is split by top-k gating; (b) single-expert latency
+//! vs batch size — the "knee" that motivates layer-wise batching and the
+//! min-batch threshold of §5.2.
+
+use crate::coordinator::router::{self, ExpertGroups};
+use crate::experiments::common::{artifacts, write_csv};
+use crate::runtime::{ArgValue, Device, DeviceRole};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+pub fn run(total_batch: usize) {
+    let (manifest, weights) = artifacts();
+    let m = manifest.model.clone();
+    println!("Fig 13(a): per-expert batch sizes, total batch {total_batch}, top-{}", m.top_k);
+
+    let device = Device::spawn(
+        "fig13",
+        manifest.clone(),
+        weights,
+        DeviceRole::Monolithic.plan(&manifest),
+        Duration::ZERO,
+    )
+    .expect("device");
+
+    // (a) route `total_batch` realistic activations through every layer's
+    // gate; collect the per-expert batch sizes.
+    let mut rng = Pcg::seeded(99);
+    let mut sizes: Vec<f64> = Vec::new();
+    let mut rows_a = Vec::new();
+    let chunk = *manifest.buckets.router_b.last().unwrap();
+    for layer in 0..m.layers {
+        let mut remaining = total_batch;
+        let mut layer_groups: ExpertGroups = ExpertGroups::default();
+        while remaining > 0 {
+            let n = remaining.min(chunk);
+            let mut g = Tensor::zeros(vec![chunk, m.hidden]);
+            for i in 0..n {
+                for v in g.row_mut(i) {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let probs = device
+                .execute(
+                    &format!("router_b{chunk}"),
+                    vec![
+                        ArgValue::f32(g),
+                        ArgValue::weight(format!("layer{layer}.router")),
+                    ],
+                )
+                .expect("router");
+            let routes = router::select_top_k(&probs[0], n, m.top_k);
+            for (e, rows) in ExpertGroups::from_routes(&routes).groups {
+                layer_groups.groups.entry(e).or_default().extend(rows);
+            }
+            remaining -= n;
+        }
+        for (e, rows) in &layer_groups.groups {
+            sizes.push(rows.len() as f64);
+            rows_a.push(format!("{layer},{e},{}", rows.len()));
+        }
+    }
+    write_csv("fig13a.csv", "layer,expert,batch_size", &rows_a);
+    println!(
+        "  per-expert batch: mean={:.1} median={:.1} max={:.0} (total {}, experts {})",
+        stats::mean(&sizes),
+        stats::median(&sizes),
+        sizes.iter().cloned().fold(0.0, f64::max),
+        total_batch,
+        m.experts
+    );
+
+    // (b) expert latency vs batch size over the compiled buckets.
+    println!("Fig 13(b): expert FFN latency vs batch size");
+    let reps = 30;
+    let mut rows_b = Vec::new();
+    for &b in &manifest.buckets.expert_b {
+        let x = Tensor::zeros(vec![b, m.hidden]);
+        let args = || {
+            vec![
+                ArgValue::f32(x.clone()),
+                ArgValue::weight("layer0.expert0.w1"),
+                ArgValue::weight("layer0.expert0.w3"),
+                ArgValue::weight("layer0.expert0.w2"),
+            ]
+        };
+        let _ = device.execute(&format!("expert_b{b}"), args()); // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            device.execute(&format!("expert_b{b}"), args()).expect("expert");
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let per_token = per / b as f64;
+        rows_b.push(format!("{b},{:.6},{:.8}", per * 1e3, per_token * 1e3));
+        println!("    B={b:<4} latency={:.3} ms   per-token={:.5} ms", per * 1e3, per_token * 1e3);
+    }
+    write_csv("fig13b.csv", "batch,latency_ms,per_token_ms", &rows_b);
+    device.shutdown();
+}

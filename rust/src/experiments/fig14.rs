@@ -1,0 +1,95 @@
+//! Fig. 14 (Appendix D): shadow experts are free while inactive.
+//! Three conditions on one EW device:
+//!   1. "Single Expert"      — only the primary expert resident, serving.
+//!   2. "Shadow Expt Loaded" — a shadow expert's weights resident but
+//!                             *idle*; primary latency must be unchanged.
+//!   3. "Concurrent Exec"    — both experts actively executing; per-call
+//!                             completion latency inflates (kernel-level
+//!                             interference; on our serial device model the
+//!                             two streams time-share exactly like MPS
+//!                             contention).
+
+use crate::experiments::common::{artifacts, write_csv};
+use crate::runtime::{roles, ArgValue, Device, DeviceRole};
+use crate::tensor::Tensor;
+use std::time::{Duration, Instant};
+
+fn expert_args(x: &Tensor, expert: usize) -> Vec<ArgValue> {
+    vec![
+        ArgValue::f32(x.clone()),
+        ArgValue::weight(format!("layer0.expert{expert}.w1")),
+        ArgValue::weight(format!("layer0.expert{expert}.w3")),
+        ArgValue::weight(format!("layer0.expert{expert}.w2")),
+    ]
+}
+
+pub fn run(batch: usize, reps: usize) {
+    let (manifest, weights) = artifacts();
+    let m = manifest.model.clone();
+    let b = crate::modelcfg::Buckets::fit(&manifest.buckets.expert_b, batch)
+        .unwrap_or(*manifest.buckets.expert_b.last().unwrap());
+    println!("Fig 14: shadow-expert interference (batch {b}, {reps} reps)");
+
+    let device = Device::spawn(
+        "fig14",
+        manifest.clone(),
+        weights,
+        DeviceRole::Expert { experts: vec![0] }.plan(&manifest),
+        Duration::ZERO,
+    )
+    .expect("device");
+    let x = Tensor::zeros(vec![b, m.hidden]);
+    let name = format!("expert_b{b}");
+
+    let measure = |label: &str| -> f64 {
+        let _ = device.execute(&name, expert_args(&x, 0));
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            device.execute(&name, expert_args(&x, 0)).expect("exec");
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("  {label:<22} {:.4} ms/exec", per * 1e3);
+        per
+    };
+
+    // 1. single expert
+    let single = measure("Single Expert");
+
+    // 2. shadow loaded but idle
+    let shadow_w = roles::expert_weights(&manifest, 1);
+    let upload = device.upload_weights(&shadow_w).expect("shadow upload");
+    println!("  (shadow weights uploaded in {:.1} ms — the cold-load cost shadows avoid)",
+             upload.as_secs_f64() * 1e3);
+    let loaded = measure("Shadow Expt Loaded");
+
+    // 3. concurrent execution of primary + shadow
+    let dev2 = device.clone();
+    let x2 = x.clone();
+    let name2 = name.clone();
+    let reps2 = reps;
+    let t0 = Instant::now();
+    let h = std::thread::spawn(move || {
+        for _ in 0..reps2 {
+            dev2.execute(&name2, expert_args(&x2, 1)).expect("exec");
+        }
+    });
+    for _ in 0..reps {
+        device.execute(&name, expert_args(&x, 0)).expect("exec");
+    }
+    h.join().unwrap();
+    let concurrent = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("  {:<22} {:.4} ms/exec (both streams active)", "Concurrent Exec", concurrent * 1e3);
+
+    let rows = vec![
+        format!("single,{:.6}", single * 1e3),
+        format!("shadow_loaded,{:.6}", loaded * 1e3),
+        format!("concurrent,{:.6}", concurrent * 1e3),
+    ];
+    write_csv("fig14.csv", "condition,latency_ms", &rows);
+    println!(
+        "  shadow-idle overhead: {:+.1}%   concurrent interference: {:.2}x",
+        (loaded / single - 1.0) * 100.0,
+        concurrent / single
+    );
+    device.shutdown();
+}

@@ -1,0 +1,36 @@
+//! Fig. 15 (Appendix F) + §7.3 ablation: steady-state overhead of the
+//! resilience components. Variants: full TARRAGON, Alt-1 (no
+//! checkpointing), Alt-2 (+ no detection), Alt-3 (+ static ERT, no
+//! shadows, no partial batches ≈ MegaScale). No failures injected; any
+//! differences are pure overhead. The paper reports < 3% spread.
+
+use crate::config::{ResilienceConfig, WorkloadKind};
+use crate::experiments::common::{run_serving, write_csv, ServeSpec, SystemKind};
+
+pub fn run(rates: &[f64], duration: f64) {
+    println!("Fig 15: ablation of resilience components (no failures, {duration}s per point)");
+    let variants = ["tarragon", "alt1", "alt2", "alt3"];
+    let mut rows = Vec::new();
+    for &wl in &[WorkloadKind::ShareGpt, WorkloadKind::Random] {
+        let wl_name = match wl {
+            WorkloadKind::ShareGpt => "sharegpt",
+            WorkloadKind::Random => "random",
+        };
+        for &rps in rates {
+            let mut base_tps = None;
+            for v in variants {
+                let mut spec = ServeSpec::new(SystemKind::Tarragon, wl, rps, duration);
+                spec.resilience = Some(ResilienceConfig::variant(v).unwrap());
+                let out = run_serving(&spec);
+                let tps = out.analysis.throughput_tps;
+                let rel = base_tps.get_or_insert(tps);
+                println!(
+                    "  {wl_name:<8} {v:<9} {rps:>5.1} rps | {tps:>7.0} tok/s ({:+.1}% vs tarragon)",
+                    (tps / *rel - 1.0) * 100.0
+                );
+                rows.push(format!("{wl_name},{v},{rps},{tps:.1}"));
+            }
+        }
+    }
+    write_csv("fig15.csv", "workload,variant,rps,tokens_per_s", &rows);
+}

@@ -1,0 +1,82 @@
+//! Fig. 8: AW-EW traffic is bursty, leaving idle gaps the incremental
+//! checkpointing fills. Runs TARRAGON with traffic recording on AW 0's
+//! egress link and emits the transfer intervals (class-tagged), plus a
+//! binned utilization series showing checkpoint writes landing in the
+//! gaps between expert scatter/gather bursts.
+
+use crate::config::WorkloadKind;
+use crate::experiments::common::{run_serving, write_csv, ServeSpec, SystemKind};
+use crate::transport::link::TrafficClass;
+use crate::util::stats::Timeline;
+
+pub fn run(rps: f64, duration: f64) {
+    println!("Fig 8: traffic pattern with incremental checkpointing ({rps} RPS, {duration}s)");
+    let mut spec = ServeSpec::new(SystemKind::Tarragon, WorkloadKind::Random, rps, duration);
+    spec.record_traffic = true;
+    let out = run_serving(&spec);
+
+    let Some((aw, events)) = out.traffic.into_iter().next() else {
+        println!("  no traffic recorded");
+        return;
+    };
+    println!("  AW{aw}: {} transfers recorded", events.len());
+
+    let rows: Vec<String> = events
+        .iter()
+        .map(|e| format!("{},{},{},{}", e.start_us, e.end_us, e.bytes, e.class.name()))
+        .collect();
+    write_csv("fig8_events.csv", "start_us,end_us,bytes,class", &rows);
+
+    // Binned utilization split: expert traffic vs checkpoint traffic.
+    let mut expert = Timeline::new(0.01);
+    let mut ckpt = Timeline::new(0.01);
+    for e in &events {
+        let t = e.start_us as f64 / 1e6;
+        match e.class {
+            TrafficClass::ExpertDispatch | TrafficClass::ExpertReturn => {
+                expert.push(t, e.bytes as f64)
+            }
+            TrafficClass::Checkpoint => ckpt.push(t, e.bytes as f64),
+            _ => {}
+        }
+    }
+    let er = expert.rate_series();
+    let cr = ckpt.rate_series();
+    let rows: Vec<String> = er
+        .iter()
+        .enumerate()
+        .map(|(i, (t, _))| {
+            let eb = expert_sum(&expert, i);
+            let cb = cr.get(i).map(|_| ckpt_sum(&ckpt, i)).unwrap_or(0.0);
+            format!("{t:.2},{eb:.0},{cb:.0}")
+        })
+        .collect();
+    write_csv("fig8_utilization.csv", "t_s,expert_bytes_per_10ms,ckpt_bytes_per_10ms", &rows);
+
+    // Headline: checkpoint bytes vs expert bytes and gap occupancy.
+    let total_expert: u64 = out
+        .link_stats
+        .iter()
+        .map(|(_, s)| {
+            s.bytes_of(TrafficClass::ExpertDispatch) + s.bytes_of(TrafficClass::ExpertReturn)
+        })
+        .sum();
+    let total_ckpt: u64 =
+        out.link_stats.iter().map(|(_, s)| s.bytes_of(TrafficClass::Checkpoint)).sum();
+    println!(
+        "  expert traffic {} B, checkpoint traffic {} B ({:.1}% — Appendix C predicts ~12.5% of one-way)",
+        total_expert,
+        total_ckpt,
+        100.0 * total_ckpt as f64 / total_expert.max(1) as f64
+    );
+    println!("  throughput: {:.0} tok/s over {} tokens", out.analysis.throughput_tps, out.analysis.total_tokens);
+}
+
+fn expert_sum(t: &Timeline, i: usize) -> f64 {
+    t.mean_series().get(i).map(|(_, m)| if m.is_nan() { 0.0 } else { *m }).unwrap_or(0.0)
+        * t.rate_series().get(i).map(|(_, r)| r * 0.01).unwrap_or(0.0)
+}
+
+fn ckpt_sum(t: &Timeline, i: usize) -> f64 {
+    expert_sum(t, i)
+}

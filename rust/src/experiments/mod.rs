@@ -1,0 +1,17 @@
+//! Experiment harnesses: one per table/figure in the paper's evaluation
+//! (see DESIGN.md §4 for the index). Each harness regenerates the paper's
+//! rows/series, prints a summary, and writes CSV under `results/`.
+
+pub mod ckpt;
+pub mod common;
+pub mod fig10;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig4;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+pub use common::{run_serving, ServeOutcome, ServeSpec, SystemKind};

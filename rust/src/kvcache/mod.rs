@@ -1,0 +1,223 @@
+//! Per-request KV cache management on the Attention Worker.
+//!
+//! Layout mirrors what the decode artifact consumes: per layer, two
+//! contiguous `[S, kv_heads, head_dim]` f32 regions (K and V), with a
+//! valid-prefix length shared by all layers. A "segment" — the unit of
+//! incremental checkpointing (§6.1) and restoration (§6.2) — is one
+//! (token, layer)'s K and V vectors concatenated: `2 * kv_heads * head_dim`
+//! floats.
+//!
+//! [`BatchAssembler`] gathers per-request caches into the batched
+//! `[B, S, kv, d]` tensors of a decode step with a single copy per layer
+//! (the buffers are handed to the device, so the copy is unavoidable; the
+//! perf pass removed the second copy a scratch-buffer design had).
+
+use crate::modelcfg::ModelSpec;
+use crate::tensor::Tensor;
+
+/// Per-request KV cache across all layers.
+#[derive(Debug, Clone)]
+pub struct RequestKv {
+    /// Per layer: K then V, each `s_max * seg` floats.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Valid positions [0, len).
+    len: usize,
+    s_max: usize,
+    /// Elements of one K (or V) row: kv_heads * head_dim.
+    seg: usize,
+}
+
+impl RequestKv {
+    pub fn new(m: &ModelSpec) -> RequestKv {
+        let seg = m.kv_heads * m.head_dim;
+        RequestKv {
+            k: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
+            v: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
+            len: 0,
+            s_max: m.max_seq,
+            seg,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Elements in one K or V row.
+    pub fn row_elems(&self) -> usize {
+        self.seg
+    }
+
+    /// Bytes of one checkpoint segment (K+V for one token, one layer).
+    pub fn segment_bytes(&self) -> usize {
+        2 * self.seg * 4
+    }
+
+    /// Write K/V for position `pos` of `layer` (decode append or prefill
+    /// bulk write). Does NOT advance `len` — call `set_len` once all layers
+    /// for a position are written (the per-step commit point).
+    pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(pos < self.s_max, "kv overflow: pos {pos} >= {}", self.s_max);
+        assert_eq!(k_row.len(), self.seg);
+        assert_eq!(v_row.len(), self.seg);
+        let off = pos * self.seg;
+        self.k[layer][off..off + self.seg].copy_from_slice(k_row);
+        self.v[layer][off..off + self.seg].copy_from_slice(v_row);
+    }
+
+    /// Install a checkpoint segment (K||V concatenated), restoration path.
+    pub fn write_segment(&mut self, layer: usize, pos: usize, seg_data: &[f32]) {
+        assert_eq!(seg_data.len(), 2 * self.seg, "bad segment size");
+        let (kr, vr) = seg_data.split_at(self.seg);
+        self.write(layer, pos, kr, vr);
+    }
+
+    /// Read one segment back (K||V) — the checkpoint streamer's source.
+    pub fn read_segment(&self, layer: usize, pos: usize) -> Vec<f32> {
+        let off = pos * self.seg;
+        let mut out = Vec::with_capacity(2 * self.seg);
+        out.extend_from_slice(&self.k[layer][off..off + self.seg]);
+        out.extend_from_slice(&self.v[layer][off..off + self.seg]);
+        out
+    }
+
+    pub fn set_len(&mut self, len: usize) {
+        assert!(len <= self.s_max);
+        self.len = len;
+    }
+
+    pub fn k_layer(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+
+    pub fn v_layer(&self, layer: usize) -> &[f32] {
+        &self.v[layer]
+    }
+}
+
+/// Batched KV gather for decode steps. Writes each request's cache
+/// directly into the output tensors — one copy, no intermediate scratch
+/// (perf pass: the gather runs once per layer per decode step).
+pub struct BatchAssembler {
+    s_max: usize,
+    seg: usize,
+}
+
+impl BatchAssembler {
+    pub fn new(m: &ModelSpec) -> BatchAssembler {
+        BatchAssembler { s_max: m.max_seq, seg: m.kv_heads * m.head_dim }
+    }
+
+    /// Gather `layer`'s caches of `reqs` into [B, S, kv, d] K/V tensors
+    /// (B = bucket size; rows past reqs.len() are zero-padded) plus the
+    /// pos vector. kv_shape = [bucket, S, kv_heads, head_dim].
+    pub fn gather(
+        &mut self,
+        reqs: &[&RequestKv],
+        layer: usize,
+        bucket: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> (Tensor, Tensor, Vec<i32>) {
+        assert!(reqs.len() <= bucket);
+        let row = self.s_max * self.seg;
+        let mut k_buf = vec![0.0f32; bucket * row];
+        let mut v_buf = vec![0.0f32; bucket * row];
+        let mut pos = Vec::with_capacity(bucket);
+        for (i, r) in reqs.iter().enumerate() {
+            k_buf[i * row..(i + 1) * row].copy_from_slice(r.k_layer(layer));
+            v_buf[i * row..(i + 1) * row].copy_from_slice(r.v_layer(layer));
+            pos.push(r.len() as i32);
+        }
+        pos.resize(bucket, 0);
+        let shape = vec![bucket, self.s_max, kv_heads, head_dim];
+        (Tensor::new(shape.clone(), k_buf), Tensor::new(shape, v_buf), pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            layers: 2,
+            hidden: 8,
+            heads: 2,
+            kv_heads: 1,
+            head_dim: 4,
+            ffn: 16,
+            experts: 4,
+            top_k: 2,
+            vocab: 32,
+            max_seq: 6,
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = spec();
+        let mut kv = RequestKv::new(&m);
+        assert_eq!(kv.segment_bytes(), m.kv_segment_bytes());
+        let k = [1.0, 2.0, 3.0, 4.0];
+        let v = [5.0, 6.0, 7.0, 8.0];
+        kv.write(1, 3, &k, &v);
+        kv.set_len(4);
+        let seg = kv.read_segment(1, 3);
+        assert_eq!(&seg[..4], &k);
+        assert_eq!(&seg[4..], &v);
+        assert_eq!(kv.len(), 4);
+    }
+
+    #[test]
+    fn segment_roundtrip_via_restore_path() {
+        let m = spec();
+        let mut a = RequestKv::new(&m);
+        a.write(0, 2, &[9.0; 4], &[8.0; 4]);
+        let seg = a.read_segment(0, 2);
+        let mut b = RequestKv::new(&m);
+        b.write_segment(0, 2, &seg);
+        b.set_len(3);
+        assert_eq!(b.read_segment(0, 2), seg);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv overflow")]
+    fn overflow_panics() {
+        let m = spec();
+        let mut kv = RequestKv::new(&m);
+        kv.write(0, 6, &[0.0; 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn batch_assembly_pads_and_orders() {
+        let m = spec();
+        let mut r1 = RequestKv::new(&m);
+        r1.write(0, 0, &[1.0; 4], &[2.0; 4]);
+        r1.set_len(1);
+        let mut r2 = RequestKv::new(&m);
+        r2.write(0, 0, &[3.0; 4], &[4.0; 4]);
+        r2.write(0, 1, &[5.0; 4], &[6.0; 4]);
+        r2.set_len(2);
+
+        let mut asm = BatchAssembler::new(&m);
+        let (k, v, pos) = asm.gather(&[&r1, &r2], 0, 4, m.kv_heads, m.head_dim);
+        assert_eq!(k.shape(), &[4, 6, 1, 4]);
+        assert_eq!(pos, vec![1, 2, 0, 0]);
+        // r2's pos-1 K row lands at batch row 1, seq 1.
+        let row = 6 * 4;
+        assert_eq!(&k.data()[row + 4..row + 8], &[5.0; 4]);
+        // padding rows are zero
+        assert!(k.data()[2 * row..].iter().all(|&x| x == 0.0));
+        assert_eq!(&v.data()[row..row + 4], &[4.0; 4]);
+    }
+}

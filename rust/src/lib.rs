@@ -1,0 +1,32 @@
+//! TARRAGON: resilient MoE-based LLM inference (paper reproduction).
+//!
+//! Three-layer stack: this Rust crate is Layer 3 (the serving system and
+//! the paper's resilience contribution); Layers 2/1 (JAX model + Pallas
+//! kernels) are AOT-compiled at build time into `artifacts/` and executed
+//! here through the PJRT CPU client (`runtime`). Python never runs on the
+//! request path.
+//!
+//! Top-level map (see DESIGN.md for the full inventory):
+//! - `runtime`     — PJRT device threads: compile + execute HLO artifacts
+//! - `transport`   — simulated RDMA: QPs, links, probes, fault injection
+//! - `kvcache`     — per-request KV regions and batch assembly
+//! - `checkpoint`  — incremental checkpoint store + per-request restore
+//! - `coordinator` — gateway, orchestrator, ERT/REFE, AW, EW, provisioning
+//! - `baselines`   — MegaScale-like coarse restart, vLLM-TP, vLLM-PP
+//! - `workload`/`metrics`/`costmodel` — experiment substrate
+pub mod baselines;
+pub mod checkpoint;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod kvcache;
+pub mod proto;
+pub mod runtime;
+pub mod costmodel;
+pub mod metrics;
+pub mod modelcfg;
+pub mod workload;
+pub mod tensor;
+pub mod testing;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,189 @@
+//! TARRAGON CLI: serve a cluster or regenerate any paper table/figure.
+//!
+//! Subcommands:
+//!   serve          run a config-driven cluster on a generated workload
+//!   table1         profile T_w / t_pre / t_dec / g_pre / g_dec
+//!   fig4           recovery-cost model sweep (stall + GPU overhead)
+//!   fig8           traffic burstiness + checkpoint interleaving trace
+//!   fig9           failover timeline (--scenario megascale|aw|ew)
+//!   fig10          latency/throughput vs load, 4 systems (also fig11)
+//!   fig12          restoration strategies vs failure point
+//!   fig13          expert batch-size distribution + latency knee
+//!   fig14          shadow-expert interference
+//!   fig15          resilience-component ablation (Alt-1/2/3)
+//!   ckpt-overhead  checkpointing schemes (§7.4)
+
+use tarragon::config::{Config, WorkloadKind};
+use tarragon::experiments as exp;
+use tarragon::experiments::common::{run_serving, ServeSpec, SystemKind};
+use tarragon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "serve" => serve(&args),
+        "table1" => {
+            let extra = args.f64_or("extra-init-ms", 500.0).unwrap_or(500.0);
+            exp::table1::run(std::time::Duration::from_secs_f64(extra / 1e3));
+            Ok(())
+        }
+        "fig4" => {
+            let layers = args.usize_or("layers", 32).unwrap_or(32);
+            let workers = args.usize_or("workers", 16).unwrap_or(16);
+            exp::fig4::run(layers, workers);
+            Ok(())
+        }
+        "fig8" => {
+            let rps = args.f64_or("rps", 3.0).unwrap_or(3.0);
+            let dur = args.f64_or("duration", 10.0).unwrap_or(10.0);
+            exp::fig8::run(rps, dur);
+            Ok(())
+        }
+        "fig9" => {
+            let scenario = args.str_or("scenario", "ew");
+            let rps = args.f64_or("rps", 4.0).unwrap_or(4.0);
+            let dur = args.f64_or("duration", 25.0).unwrap_or(25.0);
+            let fail_at = args.f64_or("fail-at", 8.0).unwrap_or(8.0);
+            let provision = !args.has_flag("no-provision");
+            exp::fig9::run(&scenario, rps, dur, fail_at, provision);
+            Ok(())
+        }
+        "fig10" | "fig11" => {
+            let rates = args.list_or("rates", &[1.0, 2.0, 4.0, 6.0, 8.0]).unwrap();
+            let dur = args.f64_or("duration", 12.0).unwrap_or(12.0);
+            let systems = match args.str_opt("systems") {
+                Some(s) => s.split(',').filter_map(SystemKind::parse).collect::<Vec<_>>(),
+                None => vec![
+                    SystemKind::Tarragon,
+                    SystemKind::Megascale,
+                    SystemKind::VllmTp,
+                    SystemKind::VllmPp,
+                ],
+            };
+            exp::fig10::run(&rates, dur, &systems);
+            Ok(())
+        }
+        "fig12" => {
+            let points = args
+                .list_or("points", &[16.0, 32.0, 64.0, 88.0])
+                .unwrap()
+                .into_iter()
+                .map(|f| f as usize)
+                .collect::<Vec<_>>();
+            exp::fig12::run(&points);
+            Ok(())
+        }
+        "fig13" => {
+            let total = args.usize_or("total-batch", 821).unwrap_or(821);
+            exp::fig13::run(total);
+            Ok(())
+        }
+        "fig14" => {
+            let batch = args.usize_or("batch", 64).unwrap_or(64);
+            let reps = args.usize_or("reps", 50).unwrap_or(50);
+            exp::fig14::run(batch, reps);
+            Ok(())
+        }
+        "fig15" => {
+            let rates = args.list_or("rates", &[2.0, 4.0, 6.0]).unwrap();
+            let dur = args.f64_or("duration", 12.0).unwrap_or(12.0);
+            exp::fig15::run(&rates, dur);
+            Ok(())
+        }
+        "ckpt-overhead" => {
+            let rps = args.f64_or("rps", 4.0).unwrap_or(4.0);
+            let dur = args.f64_or("duration", 12.0).unwrap_or(12.0);
+            let intervals = args
+                .list_or("intervals", &[8.0, 16.0, 32.0])
+                .unwrap()
+                .into_iter()
+                .map(|f| f as usize)
+                .collect::<Vec<_>>();
+            exp::ckpt::run(rps, dur, &intervals);
+            Ok(())
+        }
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+    if let Err(e) = args.finish() {
+        eprintln!("warning: {e}");
+    }
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    let mut spec = ServeSpec::new(
+        SystemKind::parse(&args.str_or("system", "tarragon"))
+            .ok_or("unknown --system (tarragon|megascale|vllm-tp|vllm-pp)")?,
+        WorkloadKind::parse(&args.str_or("workload", "random"))
+            .ok_or("unknown --workload (random|sharegpt)")?,
+        args.f64_or("rps", 4.0).map_err(|e| e.to_string())?,
+        args.f64_or("duration", 15.0).map_err(|e| e.to_string())?,
+    );
+    if let Some(path) = args.str_opt("config") {
+        let cfg = Config::from_file(std::path::Path::new(&path)).map_err(|e| e.to_string())?;
+        spec.num_aws = cfg.cluster.num_aws;
+        spec.num_ews = cfg.cluster.num_ews;
+        spec.resilience = Some(cfg.resilience);
+        spec.rps = cfg.workload.rate_rps;
+        spec.duration_secs = cfg.workload.duration_secs;
+        spec.wl_kind = cfg.workload.kind;
+    }
+    spec.num_aws = args.usize_or("aws", spec.num_aws).map_err(|e| e.to_string())?;
+    spec.num_ews = args.usize_or("ews", spec.num_ews).map_err(|e| e.to_string())?;
+    spec.seed = args.u64_or("seed", spec.seed).map_err(|e| e.to_string())?;
+    println!(
+        "serving: {} on {} workload, {} rps for {}s ({} AWs, {} EWs)",
+        spec.system.name(),
+        args.str_or("workload", "random"),
+        spec.rps,
+        spec.duration_secs,
+        spec.num_aws,
+        spec.num_ews
+    );
+    let out = run_serving(&spec);
+    let a = &out.analysis;
+    let ttft = a.ttft();
+    let tbt = a.tbt();
+    println!(
+        "done: {} tokens, {:.0} tok/s | TTFT med {:.1} / p95 {:.1} ms | \
+         TBT med {:.1} / p95 {:.1} ms | finished {}/{}",
+        a.total_tokens,
+        a.throughput_tps,
+        ttft.median_ms,
+        ttft.p95_ms,
+        tbt.median_ms,
+        tbt.p95_ms,
+        out.finished,
+        out.submitted
+    );
+    Ok(())
+}
+
+const HELP: &str = "\
+tarragon — resilient MoE inference (paper reproduction)
+
+USAGE: tarragon <subcommand> [flags]
+
+  serve          --system tarragon|megascale|vllm-tp|vllm-pp --workload random|sharegpt
+                 --rps N --duration S --aws N --ews N [--config file.toml]
+  table1         [--extra-init-ms MS]
+  fig4           [--layers 32 --workers 16]
+  fig8           [--rps 3 --duration 10]
+  fig9           --scenario megascale|aw|ew [--rps 4 --duration 25 --fail-at 8]
+  fig10 / fig11  [--rates 1,2,4,6,8 --duration 12 --systems a,b,...]
+  fig12          [--points 16,32,64,88]
+  fig13          [--total-batch 821]
+  fig14          [--batch 64 --reps 50]
+  fig15          [--rates 2,4,6 --duration 12]
+  ckpt-overhead  [--rps 4 --duration 12 --intervals 8,16,32]
+
+Artifacts are loaded from ./artifacts (override: TARRAGON_ARTIFACTS).
+Results are written to ./results/*.csv.
+";

@@ -1,0 +1,221 @@
+//! Turning the raw event log into the paper's metrics:
+//! TTFT (submission -> first token), TBT (gap between consecutive tokens of
+//! a request), output-token throughput, and per-window timelines.
+
+use super::{Event, EventKind, EventLog};
+use crate::util::stats::{self, Timeline};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Median/p95/mean over a latency sample, in milliseconds.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn of(samples_ms: &[f64]) -> LatencySummary {
+        LatencySummary {
+            count: samples_ms.len(),
+            median_ms: stats::median(samples_ms),
+            p95_ms: stats::percentile(samples_ms, 95.0),
+            mean_ms: stats::mean(samples_ms),
+            max_ms: samples_ms.iter().copied().fold(f64::NAN, f64::max),
+        }
+    }
+}
+
+/// Full analysis of one run.
+#[derive(Debug, Clone)]
+pub struct RunAnalysis {
+    pub ttft_ms: Vec<f64>,
+    pub tbt_ms: Vec<f64>,
+    pub total_tokens: usize,
+    pub finished_requests: usize,
+    pub submitted_requests: usize,
+    pub duration_secs: f64,
+    /// Output tokens per second over the whole run.
+    pub throughput_tps: f64,
+    /// (window_start_s, tokens/s) series.
+    pub throughput_series: Vec<(f64, f64)>,
+    /// (window_start_s, mean TBT ms) series.
+    pub tbt_series: Vec<(f64, f64)>,
+    /// Longest gap between consecutive tokens *cluster-wide* (the paper's
+    /// "stall": the visible freeze of the token stream, Fig. 9).
+    pub max_token_gap_s: f64,
+    /// Start time (s since epoch) of that longest gap.
+    pub max_gap_start_s: f64,
+    /// Sorted emission times of every token (cluster-wide), seconds.
+    pub token_times: Vec<f64>,
+}
+
+impl RunAnalysis {
+    /// Longest gap between consecutive tokens whose start is >= t0
+    /// (failure-stall measurement: pass the injection time).
+    pub fn max_gap_after(&self, t0: f64) -> (f64, f64) {
+        let mut best = (0.0, 0.0);
+        for w in self.token_times.windows(2) {
+            if w[0] >= t0 && w[1] - w[0] > best.0 {
+                best = (w[1] - w[0], w[0]);
+            }
+        }
+        best
+    }
+}
+
+impl RunAnalysis {
+    pub fn from_log(log: &EventLog, window_secs: f64) -> RunAnalysis {
+        Self::from_events(&log.snapshot(), log.epoch(), window_secs)
+    }
+
+    pub fn from_events(events: &[Event], epoch: Instant, window_secs: f64) -> RunAnalysis {
+        let secs = |at: Instant| at.duration_since(epoch).as_secs_f64();
+        let mut submitted: HashMap<u64, f64> = HashMap::new();
+        let mut last_token: HashMap<u64, f64> = HashMap::new();
+        let mut ttft = Vec::new();
+        let mut tbt = Vec::new();
+        let mut finished = 0usize;
+        let mut total_tokens = 0usize;
+        let mut tp_timeline = Timeline::new(window_secs);
+        let mut tbt_timeline = Timeline::new(window_secs);
+        let mut token_times: Vec<f64> = Vec::new();
+        let mut t_end: f64 = 0.0;
+
+        for e in events {
+            let t = secs(e.at);
+            t_end = t_end.max(t);
+            match e.kind {
+                EventKind::Submitted => {
+                    submitted.insert(e.request, t);
+                }
+                EventKind::Admitted | EventKind::Migrated => {}
+                EventKind::Token => {
+                    total_tokens += 1;
+                    tp_timeline.push(t, 1.0);
+                    token_times.push(t);
+                    if e.token_index == 0 {
+                        if let Some(&t0) = submitted.get(&e.request) {
+                            ttft.push((t - t0) * 1e3);
+                        }
+                    } else if let Some(&tp) = last_token.get(&e.request) {
+                        let gap_ms = (t - tp) * 1e3;
+                        tbt.push(gap_ms);
+                        tbt_timeline.push(t, gap_ms);
+                    }
+                    last_token.insert(e.request, t);
+                }
+                EventKind::Finished => finished += 1,
+            }
+        }
+
+        // Cluster-wide token-stream gap (stall detection).
+        token_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut max_gap = 0.0f64;
+        let mut max_gap_start = 0.0f64;
+        for w in token_times.windows(2) {
+            let gap = w[1] - w[0];
+            if gap > max_gap {
+                max_gap = gap;
+                max_gap_start = w[0];
+            }
+        }
+
+        let duration = t_end.max(1e-9);
+        RunAnalysis {
+            token_times: token_times.clone(),
+            throughput_tps: total_tokens as f64 / duration,
+            ttft_ms: ttft,
+            tbt_ms: tbt,
+            total_tokens,
+            finished_requests: finished,
+            submitted_requests: submitted.len(),
+            duration_secs: duration,
+            throughput_series: tp_timeline.rate_series(),
+            tbt_series: tbt_timeline.mean_series(),
+            max_token_gap_s: max_gap,
+            max_gap_start_s: max_gap_start,
+        }
+    }
+
+    pub fn ttft(&self) -> LatencySummary {
+        LatencySummary::of(&self.ttft_ms)
+    }
+
+    pub fn tbt(&self) -> LatencySummary {
+        LatencySummary::of(&self.tbt_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EventLog;
+    use std::time::Duration;
+
+    fn ev(epoch: Instant, t_ms: u64, kind: EventKind, req: u64, tok: u32) -> Event {
+        Event {
+            at: epoch + Duration::from_millis(t_ms),
+            kind,
+            request: req,
+            token_index: tok,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn ttft_tbt_and_stall() {
+        let epoch = Instant::now();
+        let events = vec![
+            ev(epoch, 0, EventKind::Submitted, 1, 0),
+            ev(epoch, 100, EventKind::Token, 1, 0),  // TTFT = 100ms
+            ev(epoch, 150, EventKind::Token, 1, 1),  // TBT 50
+            ev(epoch, 200, EventKind::Token, 1, 2),  // TBT 50
+            ev(epoch, 900, EventKind::Token, 1, 3),  // TBT 700 (stall)
+            ev(epoch, 950, EventKind::Finished, 1, 0),
+        ];
+        let a = RunAnalysis::from_events(&events, epoch, 0.5);
+        assert_eq!(a.ttft_ms.len(), 1);
+        assert!((a.ttft_ms[0] - 100.0).abs() < 1.0);
+        assert_eq!(a.tbt_ms.len(), 3);
+        assert!((a.max_token_gap_s - 0.7).abs() < 0.01);
+        assert!((a.max_gap_start_s - 0.2).abs() < 0.01);
+        assert_eq!(a.total_tokens, 4);
+        assert_eq!(a.finished_requests, 1);
+        let tbt = a.tbt();
+        assert!((tbt.median_ms - 50.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn multi_request_interleaving() {
+        let epoch = Instant::now();
+        let events = vec![
+            ev(epoch, 0, EventKind::Submitted, 1, 0),
+            ev(epoch, 10, EventKind::Submitted, 2, 0),
+            ev(epoch, 50, EventKind::Token, 1, 0),
+            ev(epoch, 60, EventKind::Token, 2, 0),
+            ev(epoch, 70, EventKind::Token, 1, 1), // TBT(1) = 20
+            ev(epoch, 90, EventKind::Token, 2, 1), // TBT(2) = 30
+        ];
+        let a = RunAnalysis::from_events(&events, epoch, 1.0);
+        assert_eq!(a.ttft_ms.len(), 2);
+        assert_eq!(a.tbt_ms.len(), 2);
+        assert!((a.tbt_ms[0] - 20.0).abs() < 1e-9 && (a.tbt_ms[1] - 30.0).abs() < 1e-9);
+        // Cluster-wide gaps are between consecutive tokens of any request:
+        // 50,60,70,90 ms -> max gap 20 ms.
+        assert!((a.max_token_gap_s - 0.02).abs() < 0.001);
+        let (g, t) = a.max_gap_after(0.065);
+        assert!((g - 0.02).abs() < 1e-9 && (t - 0.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_log() {
+        let log = EventLog::new();
+        let a = RunAnalysis::from_log(&log, 1.0);
+        assert_eq!(a.total_tokens, 0);
+        assert!(a.ttft().median_ms.is_nan());
+    }
+}

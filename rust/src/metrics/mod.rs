@@ -1,0 +1,108 @@
+//! Metrics: the per-token event log every experiment harness consumes.
+//!
+//! The gateway records one event per emitted token (plus request lifecycle
+//! events); analysis turns the log into TTFT/TBT distributions, throughput
+//! timelines (Fig. 9), and latency-vs-load curves (Fig. 10/11).
+
+pub mod analysis;
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub use analysis::{LatencySummary, RunAnalysis};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request submitted to the gateway.
+    Submitted,
+    /// Request admitted to an AW (prefill begins).
+    Admitted,
+    /// One output token emitted (first token => TTFT sample).
+    Token,
+    /// Request finished (generated max tokens).
+    Finished,
+    /// Request was migrated to another AW by failure recovery.
+    Migrated,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub at: Instant,
+    pub kind: EventKind,
+    pub request: u64,
+    /// Token index within the request (for Token events).
+    pub token_index: u32,
+    /// Worker index involved (AW for Token/Admitted/Migrated).
+    pub worker: u32,
+}
+
+/// Thread-safe append-only event log with a fixed epoch.
+pub struct EventLog {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog { epoch: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn record(&self, kind: EventKind, request: u64, token_index: u32, worker: u32) {
+        self.events.lock().unwrap().push(Event {
+            at: Instant::now(),
+            kind,
+            request,
+            token_index,
+            worker,
+        });
+    }
+
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Seconds since the log's epoch for an event time.
+    pub fn secs(&self, at: Instant) -> f64 {
+        at.duration_since(self.epoch).as_secs_f64()
+    }
+}
+
+/// Convenience: duration as milliseconds f64.
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let log = EventLog::new();
+        log.record(EventKind::Submitted, 1, 0, 0);
+        log.record(EventKind::Token, 1, 0, 2);
+        let snap = log.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[1].kind, EventKind::Token);
+        assert_eq!(snap[1].worker, 2);
+        assert!(log.secs(snap[1].at) >= log.secs(snap[0].at));
+    }
+}

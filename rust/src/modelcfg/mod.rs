@@ -1,0 +1,375 @@
+//! Model/artifact manifest loading: the contract between the build-time
+//! Python pipeline (`python/compile/aot.py`) and the Rust runtime.
+//!
+//! `artifacts/manifest.json` carries the model architecture, the static
+//! shape buckets every artifact was AOT-compiled for, per-artifact I/O
+//! specs (the call ABI), and the weight-blob offset table.
+
+pub mod weights;
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+}
+
+/// Architecture of the served model (mirrors python/compile/configs.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelSpec {
+    /// Bytes of one KV-cache segment: one token, one layer (K and V).
+    /// This is `C` in the paper's Appendix C checkpoint-overhead analysis.
+    pub fn kv_segment_bytes(&self) -> usize {
+        2 * self.kv_heads * self.head_dim * 4
+    }
+
+    /// Bytes of per-token, per-layer AW->EW traffic (`V` in Appendix C):
+    /// top_k expert dispatches of a hidden vector, there and back.
+    pub fn expert_traffic_bytes(&self) -> usize {
+        2 * self.top_k * self.hidden * 4
+    }
+
+    /// Full per-request KV-cache bytes across all layers at max_seq.
+    pub fn kv_request_bytes(&self) -> usize {
+        self.layers * self.max_seq * self.kv_segment_bytes()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    AttnPrefill,
+    AttnDecode,
+    Router,
+    Expert,
+    LmHead,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        Some(match s {
+            "attn_prefill" => ArtifactKind::AttnPrefill,
+            "attn_decode" => ArtifactKind::AttnDecode,
+            "router" => ArtifactKind::Router,
+            "expert" => ArtifactKind::Expert,
+            "lm_head" => ArtifactKind::LmHead,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::AttnPrefill => "attn_prefill",
+            ArtifactKind::AttnDecode => "attn_decode",
+            ArtifactKind::Router => "router",
+            ArtifactKind::Expert => "expert",
+            ArtifactKind::LmHead => "lm_head",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub bucket: usize,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Shape buckets (see python/compile/configs.py::Buckets).
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub prefill_t: Vec<usize>,
+    pub decode_b: Vec<usize>,
+    pub expert_b: Vec<usize>,
+    pub router_b: Vec<usize>,
+    pub lm_head_b: Vec<usize>,
+}
+
+impl Buckets {
+    /// Smallest bucket >= n, or None if n exceeds the largest bucket.
+    pub fn fit(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in *elements* (f32) into the blob.
+    pub offset_elems: usize,
+    pub len_elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub buckets: Buckets,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weight_file: String,
+    pub weight_entries: Vec<WeightEntry>,
+}
+
+fn parse_err(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Parse(msg.into())
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, ManifestError> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| parse_err(format!("missing numeric field '{key}'")))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, ManifestError> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| parse_err(format!("missing string field '{key}'")))
+}
+
+fn usize_list(j: &Json, key: &str) -> Result<Vec<usize>, ManifestError> {
+    j.get(key)
+        .and_then(|v| v.usize_vec())
+        .ok_or_else(|| parse_err(format!("missing list field '{key}'")))
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec, ManifestError> {
+    let dtype = match req_str(j, "dtype")? {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        other => return Err(parse_err(format!("unknown dtype '{other}'"))),
+    };
+    Ok(IoSpec {
+        name: req_str(j, "name")?.to_string(),
+        shape: usize_list(j, "shape")?,
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| ManifestError::Io(mpath.clone(), e))?;
+        let j = Json::parse(&text).map_err(|e| parse_err(e.to_string()))?;
+
+        let m = j.get("model").ok_or_else(|| parse_err("missing 'model'"))?;
+        let model = ModelSpec {
+            layers: req_usize(m, "layers")?,
+            hidden: req_usize(m, "hidden")?,
+            heads: req_usize(m, "heads")?,
+            kv_heads: req_usize(m, "kv_heads")?,
+            head_dim: req_usize(m, "head_dim")?,
+            ffn: req_usize(m, "ffn")?,
+            experts: req_usize(m, "experts")?,
+            top_k: req_usize(m, "top_k")?,
+            vocab: req_usize(m, "vocab")?,
+            max_seq: req_usize(m, "max_seq")?,
+        };
+
+        let b = j.get("buckets").ok_or_else(|| parse_err("missing 'buckets'"))?;
+        let buckets = Buckets {
+            prefill_t: usize_list(b, "prefill_t")?,
+            decode_b: usize_list(b, "decode_b")?,
+            expert_b: usize_list(b, "expert_b")?,
+            router_b: usize_list(b, "router_b")?,
+            lm_head_b: usize_list(b, "lm_head_b")?,
+        };
+
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| parse_err("missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let kind_s = req_str(a, "kind")?;
+            let kind = ArtifactKind::parse(kind_s)
+                .ok_or_else(|| parse_err(format!("unknown artifact kind '{kind_s}'")))?;
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| parse_err("artifact missing inputs"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| parse_err("artifact missing outputs"))?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.push(ArtifactSpec {
+                name: req_str(a, "name")?.to_string(),
+                kind,
+                bucket: req_usize(a, "bucket")?,
+                file: req_str(a, "file")?.to_string(),
+                inputs,
+                outputs,
+            });
+        }
+
+        let w = j.get("weights").ok_or_else(|| parse_err("missing 'weights'"))?;
+        let weight_file = req_str(w, "file")?.to_string();
+        let tensors = w
+            .get("tensors")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| parse_err("missing weight tensors"))?;
+        let mut weight_entries = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            let shape = usize_list(t, "shape")?;
+            let nbytes = req_usize(t, "nbytes")?;
+            weight_entries.push(WeightEntry {
+                name: req_str(t, "name")?.to_string(),
+                len_elems: nbytes / 4,
+                offset_elems: req_usize(t, "offset")? / 4,
+                shape,
+            });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            buckets,
+            artifacts,
+            weight_file,
+            weight_entries,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a kind, sorted by bucket ascending.
+    pub fn artifacts_of(&self, kind: ArtifactKind) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.kind == kind).collect();
+        v.sort_by_key(|a| a.bucket);
+        v
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Default artifacts directory: $TARRAGON_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TARRAGON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = Manifest::default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn segment_and_traffic_math() {
+        let m = ModelSpec {
+            layers: 32,
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 14336,
+            experts: 8,
+            top_k: 2,
+            vocab: 32000,
+            max_seq: 4096,
+        };
+        // Mixtral-8x7B: C = 2*8*128*4 = 8 KiB; V = 2*2*4096*4 = 64 KiB
+        assert_eq!(m.kv_segment_bytes(), 8192);
+        assert_eq!(m.expert_traffic_bytes(), 65536);
+        // Appendix C: checkpoint traffic is 12.5% of expert traffic.
+        assert!((m.kv_segment_bytes() as f64 / m.expert_traffic_bytes() as f64
+            - 0.125)
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn bucket_fitting() {
+        let b = vec![1, 2, 4, 8];
+        assert_eq!(Buckets::fit(&b, 1), Some(1));
+        assert_eq!(Buckets::fit(&b, 3), Some(4));
+        assert_eq!(Buckets::fit(&b, 8), Some(8));
+        assert_eq!(Buckets::fit(&b, 9), None);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.layers >= 1);
+        assert_eq!(m.model.heads % m.model.kv_heads, 0);
+        // Our scaled config preserves the 12.5% ckpt/expert traffic ratio.
+        assert!((m.model.kv_segment_bytes() as f64
+            / m.model.expert_traffic_bytes() as f64
+            - 0.125)
+            .abs()
+            < 1e-9);
+        // Every kind appears with at least one bucket and files exist.
+        for kind in [
+            ArtifactKind::AttnPrefill,
+            ArtifactKind::AttnDecode,
+            ArtifactKind::Router,
+            ArtifactKind::Expert,
+            ArtifactKind::LmHead,
+        ] {
+            let arts = m.artifacts_of(kind);
+            assert!(!arts.is_empty(), "no artifacts of kind {kind:?}");
+            for a in arts {
+                assert!(m.hlo_path(a).exists(), "missing {}", a.file);
+            }
+        }
+        // Weight table covers embed + per-layer + head tensors.
+        assert!(m.weight_entries.iter().any(|w| w.name == "embed"));
+        assert!(m.weight_entries.iter().any(|w| w.name == "lm_head"));
+        assert!(m
+            .weight_entries
+            .iter()
+            .any(|w| w.name == format!("layer{}.expert0.w1", m.model.layers - 1)));
+    }
+}

@@ -1,0 +1,101 @@
+//! Weight blob loading. One shared, immutable, reference-counted copy of
+//! `weights.bin` per process; each worker device uploads the tensors it
+//! needs to its own PJRT client at init (the upload is part of T_w, the
+//! blob read is amortized).
+
+use super::{Manifest, ManifestError, WeightEntry};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Clone)]
+pub struct Weights {
+    blob: Arc<Vec<f32>>,
+    index: Arc<HashMap<String, WeightEntry>>,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights, ManifestError> {
+        let path = manifest.dir.join(&manifest.weight_file);
+        let bytes = std::fs::read(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        if bytes.len() % 4 != 0 {
+            return Err(ManifestError::Parse(format!(
+                "weight blob size {} not a multiple of 4",
+                bytes.len()
+            )));
+        }
+        let mut blob = vec![0f32; bytes.len() / 4];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            blob[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let mut index = HashMap::with_capacity(manifest.weight_entries.len());
+        for e in &manifest.weight_entries {
+            if e.offset_elems + e.len_elems > blob.len() {
+                return Err(ManifestError::Parse(format!(
+                    "weight '{}' overruns blob",
+                    e.name
+                )));
+            }
+            index.insert(e.name.clone(), e.clone());
+        }
+        Ok(Weights { blob: Arc::new(blob), index: Arc::new(index) })
+    }
+
+    /// Borrow a named tensor's elements (row-major).
+    pub fn get(&self, name: &str) -> Option<(&[f32], &[usize])> {
+        let e = self.index.get(name)?;
+        Some((
+            &self.blob[e.offset_elems..e.offset_elems + e.len_elems],
+            e.shape.as_slice(),
+        ))
+    }
+
+    /// Like `get` but panics with the tensor name — init-time only.
+    pub fn expect(&self, name: &str) -> (&[f32], &[usize]) {
+        self.get(name)
+            .unwrap_or_else(|| panic!("weight tensor '{name}' missing from manifest"))
+    }
+
+    /// Embedding row for a token id (init-checked: embed exists).
+    pub fn embed_row(&self, token: usize) -> &[f32] {
+        let (data, shape) = self.expect("embed");
+        let h = shape[1];
+        &data[token * h..(token + 1) * h]
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.blob.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::Manifest;
+
+    #[test]
+    fn loads_blob_and_indexes() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let w = Weights::load(&m).unwrap();
+        let (embed, shape) = w.expect("embed");
+        assert_eq!(shape, &[m.model.vocab, m.model.hidden]);
+        assert_eq!(embed.len(), m.model.vocab * m.model.hidden);
+        // ln weights are initialized to exactly 1.0 by the generator.
+        let (ln, _) = w.expect("layer0.ln1");
+        assert!(ln.iter().all(|&x| x == 1.0));
+        // embed_row slices the right stride.
+        let row5 = w.embed_row(5);
+        assert_eq!(row5, &embed[5 * m.model.hidden..6 * m.model.hidden]);
+        // total bytes match the manifest.
+        let expected: usize = m.weight_entries.iter().map(|e| e.len_elems).sum();
+        assert_eq!(w.total_elems(), expected);
+    }
+}

@@ -1,0 +1,255 @@
+//! The cluster wire protocol: every message that crosses the simulated
+//! fabric, with approximate wire sizes for the transport's bandwidth model.
+//!
+//! One enum for the whole cluster keeps the fabric simple (a single
+//! `Fabric<ClusterMsg>`); the plane/class tags on each post preserve the
+//! paper's control/data separation (§4.1).
+
+use crate::tensor::Tensor;
+use crate::transport::NodeId;
+
+/// Fixed per-message header estimate (ids, seq, layer fields...).
+pub const HDR_BYTES: usize = 48;
+
+// ---------------------------------------------------------------------------
+// Requests and tokens (gateway <-> AW)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestMeta {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: u32,
+}
+
+impl RequestMeta {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES + self.prompt.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AW -> EW dispatch / EW -> AW return (data plane)
+// ---------------------------------------------------------------------------
+
+/// Rows for one expert within a dispatch.
+#[derive(Debug, Clone)]
+pub struct DispatchEntry {
+    pub expert: u16,
+    /// Token embeddings, [n, hidden].
+    pub rows: Tensor,
+    /// AW-local row slot ids (to reassociate returns).
+    pub slots: Vec<u32>,
+}
+
+/// One AW's per-layer dispatch to one EW. Empty dispatches (no entries)
+/// are the implicit heartbeat + layer-sync signal (§5).
+#[derive(Debug, Clone)]
+pub struct DispatchMsg {
+    pub layer: u32,
+    /// AW-local step counter (debugging/tracing).
+    pub round: u64,
+    pub entries: Vec<DispatchEntry>,
+    /// Replayed after a failure: the EW must execute immediately without
+    /// waiting for the layer batch (§5.1 "replayed requests are
+    /// prioritized").
+    pub urgent: bool,
+}
+
+impl DispatchMsg {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES
+            + self
+                .entries
+                .iter()
+                .map(|e| e.rows.nbytes() + e.slots.len() * 4 + 8)
+                .sum::<usize>()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.entries.iter().map(|e| e.slots.len()).sum()
+    }
+}
+
+/// Expert outputs for one AW (possibly a partial set of experts if the EW
+/// executed them at different times).
+#[derive(Debug, Clone)]
+pub struct ReturnMsg {
+    pub layer: u32,
+    pub round: u64,
+    pub entries: Vec<DispatchEntry>,
+}
+
+impl ReturnMsg {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES
+            + self
+                .entries
+                .iter()
+                .map(|e| e.rows.nbytes() + e.slots.len() * 4 + 8)
+                .sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing (AW -> store) and restoration (store -> AW), §6
+// ---------------------------------------------------------------------------
+
+/// One incremental KV segment: K||V for (request, position, layer).
+#[derive(Debug, Clone)]
+pub struct SegmentMsg {
+    pub request: u64,
+    pub pos: u32,
+    pub layer: u16,
+    pub data: Vec<f32>,
+}
+
+impl SegmentMsg {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES + self.data.len() * 4
+    }
+}
+
+/// Commit record: everything needed to resume the request elsewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitMeta {
+    pub request: u64,
+    /// KV positions [0, committed_pos) are durable across all layers.
+    pub committed_pos: u32,
+    /// Token id to embed for the next decode step.
+    pub last_token: u32,
+    /// Output tokens generated so far.
+    pub generated: u32,
+    pub max_new_tokens: u32,
+    pub prompt_len: u32,
+}
+
+impl CommitMeta {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES
+    }
+}
+
+/// Store -> AW: full per-request state injection (§6.2). One message in
+/// the simulation; its wire size reflects the real volume streamed.
+#[derive(Debug, Clone)]
+pub struct RestoreData {
+    pub meta: CommitMeta,
+    /// (pos, layer, K||V data)
+    pub segments: Vec<(u32, u16, Vec<f32>)>,
+}
+
+impl RestoreData {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES + self.segments.iter().map(|(_, _, d)| d.len() * 4 + 8).sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Orchestration / admin
+// ---------------------------------------------------------------------------
+
+/// Expert Routing Table content: expert id -> ordered candidate EWs
+/// (primary first, then shadows).
+pub type ErtTable = Vec<Vec<u32>>;
+
+#[derive(Debug, Clone)]
+pub enum ClusterMsg {
+    // gateway -> AW
+    NewRequest(RequestMeta),
+    // AW -> gateway
+    Token { request: u64, index: u32, token: u32, worker: u32 },
+    Finished { request: u64, worker: u32 },
+    // AW <-> EW data plane
+    Dispatch(DispatchMsg),
+    Return(ReturnMsg),
+    /// AW's activity signal: EWs exclude inactive AWs from layer batching.
+    ActiveBeacon { active: bool },
+    // AW -> store
+    CkptSegment(SegmentMsg),
+    CkptCommit(CommitMeta),
+    // store -> AW
+    Restore(RestoreData),
+    // AW -> store (pull for an adopted request)
+    RestorePull { request: u64 },
+    // orchestrator -> workers
+    ErtUpdate { version: u64, table: ErtTable },
+    /// Adopt a failed AW's request (then pull state from the store).
+    AdoptRequest { meta: CommitMeta },
+    /// Membership update: the set of live AWs (EWs use it for batching,
+    /// gateway for admission).
+    AwSet { aws: Vec<u32> },
+    /// A replacement/new EW is ready (provisioning, §5.4).
+    EwReady { ew: u32, experts: Vec<u32> },
+    // workers -> orchestrator
+    FailureReport { suspect: NodeId, reporter: NodeId },
+    /// orchestrator -> gateway: a recovered request now lives on new_aw.
+    Rebind { request: u64, new_aw: u32 },
+    /// orchestrator -> gateway: these requests died before any checkpoint
+    /// was committed (e.g. mid-prefill) — resubmit them from the prompt.
+    Resubmit { requests: Vec<u64> },
+    // orchestrator <-> store
+    QueryActive { aw: u32 },
+    ActiveReqs { aw: u32, reqs: Vec<CommitMeta> },
+    // orchestrator -> gateway (coarse restart: resubmit everything)
+    RestartNotice,
+    // gateway -> orchestrator: request -> AW binding (so AW failures can
+    // be mapped to affected requests even before any checkpoint exists)
+    Bound { request: u64, aw: u32 },
+}
+
+impl ClusterMsg {
+    /// Approximate wire size for the bandwidth model.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            ClusterMsg::NewRequest(r) => r.wire_bytes(),
+            ClusterMsg::Dispatch(d) => d.wire_bytes(),
+            ClusterMsg::Return(r) => r.wire_bytes(),
+            ClusterMsg::CkptSegment(s) => s.wire_bytes(),
+            ClusterMsg::CkptCommit(c) => c.wire_bytes(),
+            ClusterMsg::Restore(r) => r.wire_bytes(),
+            ClusterMsg::ErtUpdate { table, .. } => {
+                HDR_BYTES + table.iter().map(|c| 4 + c.len() * 4).sum::<usize>()
+            }
+            ClusterMsg::ActiveReqs { reqs, .. } => {
+                HDR_BYTES + reqs.len() * HDR_BYTES
+            }
+            _ => HDR_BYTES,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_scale_with_payload() {
+        let small = DispatchMsg { layer: 0, round: 0, entries: vec![], urgent: false };
+        let big = DispatchMsg {
+            layer: 0,
+            round: 0,
+            entries: vec![DispatchEntry {
+                expert: 1,
+                rows: Tensor::zeros(vec![4, 128]),
+                slots: vec![0, 1, 2, 3],
+            }],
+            urgent: false,
+        };
+        assert!(big.wire_bytes() > small.wire_bytes() + 4 * 128 * 4);
+        assert_eq!(big.num_rows(), 4);
+
+        let seg = SegmentMsg { request: 1, pos: 0, layer: 0, data: vec![0.0; 64] };
+        assert_eq!(seg.wire_bytes(), HDR_BYTES + 256);
+    }
+
+    #[test]
+    fn checkpoint_vs_dispatch_ratio_matches_appendix_c() {
+        // For our model (kv=1, d=32, H=128, top2): segment = 256 B,
+        // round-trip dispatch volume per token-layer = 2*2*128*4 = 2048 B.
+        let seg = SegmentMsg { request: 0, pos: 0, layer: 0, data: vec![0.0; 64] };
+        let seg_payload = seg.data.len() * 4;
+        let disp_payload = 2 * 2 * 128 * 4;
+        assert!((seg_payload as f64 / disp_payload as f64 - 0.125).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,674 @@
+//! The per-worker device thread: owns a PJRT CPU client, compiled
+//! executables, and device-resident weight buffers; serves execution
+//! requests over a channel. See module docs in `runtime`.
+
+use super::{ArgValue, RolePlan};
+use crate::modelcfg::{ArtifactSpec, DType, Manifest};
+use crate::modelcfg::weights::Weights;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum DeviceError {
+    #[error("device '{0}' is dead")]
+    Dead(String),
+    #[error("unknown artifact '{0}'")]
+    UnknownArtifact(String),
+    #[error("unknown weight '{0}'")]
+    UnknownWeight(String),
+    #[error("artifact '{artifact}' arg {index}: {msg}")]
+    BadArg { artifact: String, index: usize, msg: String },
+    #[error("xla error in '{0}': {1}")]
+    Xla(String, String),
+    #[error("device init failed: {0}")]
+    Init(String),
+}
+
+/// Breakdown of worker (re)initialization cost — the components of the
+/// paper's `T_w` (Table 1).
+#[derive(Debug, Clone, Default)]
+pub struct InitStats {
+    pub client_init: Duration,
+    pub compile: Duration,
+    pub weight_upload: Duration,
+    /// Simulated container/CUDA-context startup (config: worker_extra_init).
+    pub extra: Duration,
+    pub total: Duration,
+    pub num_artifacts: usize,
+    pub num_weights: usize,
+}
+
+/// Per-artifact-kind execution counters (GPU-time accounting for the
+/// paper's g_pre / g_dec measurements and re-execution cost audits).
+#[derive(Debug, Clone, Default)]
+pub struct ExecCounters {
+    /// artifact name -> (executions, cumulative busy time)
+    pub per_artifact: HashMap<String, (u64, Duration)>,
+}
+
+impl ExecCounters {
+    pub fn total_busy(&self) -> Duration {
+        self.per_artifact.values().map(|(_, d)| *d).sum()
+    }
+
+    pub fn total_execs(&self) -> u64 {
+        self.per_artifact.values().map(|(n, _)| *n).sum()
+    }
+
+    /// Busy time over artifacts whose name starts with `prefix`.
+    pub fn busy_with_prefix(&self, prefix: &str) -> Duration {
+        self.per_artifact
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, (_, d))| *d)
+            .sum()
+    }
+}
+
+enum Msg {
+    Exec {
+        name: String,
+        args: Vec<ArgValue>,
+        reply: mpsc::Sender<Result<Vec<Tensor>, DeviceError>>,
+    },
+    UploadWeights {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<Duration, DeviceError>>,
+    },
+    Stats {
+        reply: mpsc::Sender<ExecCounters>,
+    },
+    Shutdown,
+}
+
+/// Handle to a worker's device thread. Cloneable; all clones talk to the
+/// same device. Dropping the last handle shuts the thread down.
+#[derive(Clone)]
+pub struct Device {
+    pub id: String,
+    pub init: InitStats,
+    tx: mpsc::Sender<Msg>,
+    killed: Arc<AtomicBool>,
+}
+
+impl Device {
+    /// Spawn and fully initialize a device (blocking — initialization *is*
+    /// the T_w cost; background provisioning calls this from its own
+    /// thread). `extra_init` models container/CUDA startup.
+    pub fn spawn(
+        id: impl Into<String>,
+        manifest: Arc<Manifest>,
+        weights: Weights,
+        plan: RolePlan,
+        extra_init: Duration,
+    ) -> Result<Device, DeviceError> {
+        let id = id.into();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<InitStats, DeviceError>>();
+        let killed = Arc::new(AtomicBool::new(false));
+        let killed2 = killed.clone();
+        let tid = id.clone();
+        std::thread::Builder::new()
+            .name(format!("device-{id}"))
+            .spawn(move || device_main(tid, manifest, weights, plan, extra_init, rx, init_tx, killed2))
+            .map_err(|e| DeviceError::Init(e.to_string()))?;
+        let init = init_rx
+            .recv()
+            .map_err(|_| DeviceError::Init("device thread died during init".into()))??;
+        Ok(Device { id, init, tx, killed })
+    }
+
+    /// Execute an artifact by name. Blocks until the result is back on the
+    /// host. Returns the artifact's outputs in declaration order.
+    pub fn execute(&self, name: &str, args: Vec<ArgValue>) -> Result<Vec<Tensor>, DeviceError> {
+        if self.killed.load(Ordering::Acquire) {
+            return Err(DeviceError::Dead(self.id.clone()));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec { name: name.to_string(), args, reply })
+            .map_err(|_| DeviceError::Dead(self.id.clone()))?;
+        rx.recv().map_err(|_| DeviceError::Dead(self.id.clone()))?
+    }
+
+    /// Upload additional weight tensors (shadow-expert activation path).
+    /// Returns the measured upload time.
+    pub fn upload_weights(&self, names: &[String]) -> Result<Duration, DeviceError> {
+        if self.killed.load(Ordering::Acquire) {
+            return Err(DeviceError::Dead(self.id.clone()));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::UploadWeights { names: names.to_vec(), reply })
+            .map_err(|_| DeviceError::Dead(self.id.clone()))?;
+        rx.recv().map_err(|_| DeviceError::Dead(self.id.clone()))?
+    }
+
+    pub fn stats(&self) -> Result<ExecCounters, DeviceError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats { reply })
+            .map_err(|_| DeviceError::Dead(self.id.clone()))?;
+        rx.recv().map_err(|_| DeviceError::Dead(self.id.clone()))
+    }
+
+    /// Fail-stop: the device stops serving immediately; in-flight and
+    /// future calls observe `Dead`. Models a GPU/node crash (§3.3).
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::Release);
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.killed.load(Ordering::Acquire)
+    }
+
+    /// Graceful shutdown (same mechanics as kill; named for intent).
+    pub fn shutdown(&self) {
+        self.kill();
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn device_main(
+    id: String,
+    manifest: Arc<Manifest>,
+    weights: Weights,
+    plan: RolePlan,
+    extra_init: Duration,
+    rx: mpsc::Receiver<Msg>,
+    init_tx: mpsc::Sender<Result<InitStats, DeviceError>>,
+    killed: Arc<AtomicBool>,
+) {
+    // ---- initialization (the T_w critical path) --------------------------
+    let t_total = Instant::now();
+    if !extra_init.is_zero() {
+        std::thread::sleep(extra_init);
+    }
+
+    let t0 = Instant::now();
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = init_tx.send(Err(DeviceError::Init(e.to_string())));
+            return;
+        }
+    };
+    let client_init = t0.elapsed();
+
+    let t0 = Instant::now();
+    let mut compiled: HashMap<String, Compiled> = HashMap::new();
+    for name in &plan.artifacts {
+        let spec = match manifest.artifact(name) {
+            Some(s) => s.clone(),
+            None => {
+                let _ = init_tx.send(Err(DeviceError::UnknownArtifact(name.clone())));
+                return;
+            }
+        };
+        let path = manifest.hlo_path(&spec);
+        let result = xla::HloModuleProto::from_text_file(&path)
+            .map(|p| xla::XlaComputation::from_proto(&p))
+            .and_then(|c| client.compile(&c));
+        match result {
+            Ok(exe) => {
+                compiled.insert(name.clone(), Compiled { exe, spec });
+            }
+            Err(e) => {
+                let _ = init_tx.send(Err(DeviceError::Xla(name.clone(), e.to_string())));
+                return;
+            }
+        }
+    }
+    let compile = t0.elapsed();
+
+    let t0 = Instant::now();
+    let mut wcache: HashMap<String, xla::PjRtBuffer> = HashMap::new();
+    for name in &plan.weights {
+        if let Err(e) = upload_one(&client, &weights, name, &mut wcache) {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    }
+    let weight_upload = t0.elapsed();
+
+    let init = InitStats {
+        client_init,
+        compile,
+        weight_upload,
+        extra: extra_init,
+        total: t_total.elapsed(),
+        num_artifacts: compiled.len(),
+        num_weights: wcache.len(),
+    };
+    if init_tx.send(Ok(init)).is_err() {
+        return;
+    }
+
+    // ---- serve ------------------------------------------------------------
+    let mut counters = ExecCounters::default();
+    loop {
+        // Poll with a timeout so a kill flag set between messages is seen.
+        let msg = match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(m) => m,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if killed.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        if killed.load(Ordering::Acquire) {
+            // Fail-stop: drop the message without replying; callers see a
+            // closed reply channel, like an RDMA peer going silent.
+            return;
+        }
+        match msg {
+            Msg::Shutdown => return,
+            Msg::Stats { reply } => {
+                let _ = reply.send(counters.clone());
+            }
+            Msg::UploadWeights { names, reply } => {
+                let t0 = Instant::now();
+                let mut result = Ok(());
+                for n in &names {
+                    if let Err(e) = upload_one(&client, &weights, n, &mut wcache) {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                let _ = reply.send(result.map(|_| t0.elapsed()));
+            }
+            Msg::Exec { name, args, reply } => {
+                let t0 = Instant::now();
+                let result = run_artifact(&client, &compiled, &wcache, &name, args);
+                let dt = t0.elapsed();
+                if result.is_ok() {
+                    let e = counters.per_artifact.entry(name).or_default();
+                    e.0 += 1;
+                    e.1 += dt;
+                }
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn upload_one(
+    client: &xla::PjRtClient,
+    weights: &Weights,
+    name: &str,
+    cache: &mut HashMap<String, xla::PjRtBuffer>,
+) -> Result<(), DeviceError> {
+    if cache.contains_key(name) {
+        return Ok(());
+    }
+    let (data, shape) = weights
+        .get(name)
+        .ok_or_else(|| DeviceError::UnknownWeight(name.to_string()))?;
+    let buf = client
+        .buffer_from_host_buffer(data, shape, None)
+        .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+    cache.insert(name.to_string(), buf);
+    Ok(())
+}
+
+fn run_artifact(
+    client: &xla::PjRtClient,
+    compiled: &HashMap<String, Compiled>,
+    wcache: &HashMap<String, xla::PjRtBuffer>,
+    name: &str,
+    args: Vec<ArgValue>,
+) -> Result<Vec<Tensor>, DeviceError> {
+    let c = compiled
+        .get(name)
+        .ok_or_else(|| DeviceError::UnknownArtifact(name.to_string()))?;
+    if args.len() != c.spec.inputs.len() {
+        return Err(DeviceError::BadArg {
+            artifact: name.to_string(),
+            index: args.len(),
+            msg: format!("expected {} args, got {}", c.spec.inputs.len(), args.len()),
+        });
+    }
+
+    // Activation uploads live here so they stay owned until execution.
+    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut order: Vec<(bool, usize, &str)> = Vec::new(); // (is_weight, idx, name)
+    for (i, (arg, spec)) in args.iter().zip(&c.spec.inputs).enumerate() {
+        let bad = |msg: String| DeviceError::BadArg {
+            artifact: name.to_string(),
+            index: i,
+            msg,
+        };
+        match arg {
+            ArgValue::F32(t) => {
+                if spec.dtype != DType::F32 {
+                    return Err(bad("expected i32 input, got f32".into()));
+                }
+                if t.shape() != spec.shape.as_slice() {
+                    return Err(bad(format!(
+                        "shape mismatch: got {:?}, want {:?} ({})",
+                        t.shape(),
+                        spec.shape,
+                        spec.name
+                    )));
+                }
+                let buf = client
+                    .buffer_from_host_buffer(t.data(), t.shape(), None)
+                    .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+                owned.push(buf);
+                order.push((false, owned.len() - 1, ""));
+            }
+            ArgValue::I32(v, shape) => {
+                if spec.dtype != DType::I32 {
+                    return Err(bad("expected f32 input, got i32".into()));
+                }
+                if shape != &spec.shape {
+                    return Err(bad(format!(
+                        "shape mismatch: got {:?}, want {:?} ({})",
+                        shape, spec.shape, spec.name
+                    )));
+                }
+                let buf = client
+                    .buffer_from_host_buffer(v.as_slice(), shape, None)
+                    .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+                owned.push(buf);
+                order.push((false, owned.len() - 1, ""));
+            }
+            ArgValue::Weight(wname) => {
+                if !wcache.contains_key(wname.as_str()) {
+                    return Err(DeviceError::UnknownWeight(wname.clone()));
+                }
+                order.push((true, 0, wname.as_str()));
+            }
+        }
+    }
+    let arg_refs: Vec<&xla::PjRtBuffer> = order
+        .iter()
+        .map(|&(is_w, idx, wname)| {
+            if is_w {
+                wcache.get(wname).unwrap()
+            } else {
+                &owned[idx]
+            }
+        })
+        .collect();
+
+    let outputs = c
+        .exe
+        .execute_b(&arg_refs)
+        .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+    // return_tuple=True => single tuple output on replica 0.
+    let lit = outputs[0][0]
+        .to_literal_sync()
+        .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+    if parts.len() != c.spec.outputs.len() {
+        return Err(DeviceError::Xla(
+            name.to_string(),
+            format!("expected {} outputs, got {}", c.spec.outputs.len(), parts.len()),
+        ));
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (lit, ospec) in parts.into_iter().zip(&c.spec.outputs) {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| DeviceError::Xla(name.to_string(), e.to_string()))?;
+        out.push(Tensor::new(ospec.shape.clone(), data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::Manifest;
+    use crate::runtime::DeviceRole;
+
+    fn setup() -> Option<(Arc<Manifest>, Weights)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Arc::new(Manifest::load(&dir).unwrap());
+        let w = Weights::load(&m).unwrap();
+        Some((m, w))
+    }
+
+    #[test]
+    fn expert_device_executes_and_counts() {
+        let Some((m, w)) = setup() else { return };
+        let dev = Device::spawn(
+            "ew-test",
+            m.clone(),
+            w,
+            DeviceRole::Expert { experts: vec![0] }.plan(&m),
+            Duration::ZERO,
+        )
+        .unwrap();
+        assert!(dev.init.num_artifacts > 0);
+        assert!(dev.init.total >= dev.init.compile);
+
+        let b = m.buckets.expert_b[0];
+        let x = Tensor::zeros(vec![b, m.model.hidden]);
+        let out = dev
+            .execute(
+                &format!("expert_b{b}"),
+                vec![
+                    ArgValue::f32(x),
+                    ArgValue::weight("layer0.expert0.w1"),
+                    ArgValue::weight("layer0.expert0.w3"),
+                    ArgValue::weight("layer0.expert0.w2"),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[b, m.model.hidden]);
+        // zero input -> silu(0)*0 @ w2 = 0
+        assert!(out[0].data().iter().all(|&v| v == 0.0));
+
+        let stats = dev.stats().unwrap();
+        assert_eq!(stats.total_execs(), 1);
+        assert!(stats.total_busy() > Duration::ZERO);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn bad_args_are_rejected() {
+        let Some((m, w)) = setup() else { return };
+        let dev = Device::spawn(
+            "ew-bad",
+            m.clone(),
+            w,
+            DeviceRole::Expert { experts: vec![1] }.plan(&m),
+            Duration::ZERO,
+        )
+        .unwrap();
+        let b = m.buckets.expert_b[0];
+        // wrong shape
+        let err = dev
+            .execute(
+                &format!("expert_b{b}"),
+                vec![
+                    ArgValue::f32(Tensor::zeros(vec![b + 1, m.model.hidden])),
+                    ArgValue::weight("layer0.expert1.w1"),
+                    ArgValue::weight("layer0.expert1.w3"),
+                    ArgValue::weight("layer0.expert1.w2"),
+                ],
+            )
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::BadArg { .. }));
+        // unknown artifact
+        assert!(matches!(
+            dev.execute("expert_b999999", vec![]),
+            Err(DeviceError::UnknownArtifact(_)) | Err(DeviceError::BadArg { .. })
+        ));
+        // weight not resident on this EW (expert 0 weights on an expert-1 EW)
+        let err = dev
+            .execute(
+                &format!("expert_b{b}"),
+                vec![
+                    ArgValue::f32(Tensor::zeros(vec![b, m.model.hidden])),
+                    ArgValue::weight("layer0.expert0.w1"),
+                    ArgValue::weight("layer0.expert0.w3"),
+                    ArgValue::weight("layer0.expert0.w2"),
+                ],
+            )
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::UnknownWeight(_)));
+        dev.shutdown();
+    }
+
+    #[test]
+    fn kill_makes_device_dead() {
+        let Some((m, w)) = setup() else { return };
+        let dev = Device::spawn(
+            "ew-kill",
+            m.clone(),
+            w,
+            DeviceRole::Expert { experts: vec![0] }.plan(&m),
+            Duration::ZERO,
+        )
+        .unwrap();
+        dev.kill();
+        let b = m.buckets.expert_b[0];
+        let err = dev
+            .execute(
+                &format!("expert_b{b}"),
+                vec![
+                    ArgValue::f32(Tensor::zeros(vec![b, m.model.hidden])),
+                    ArgValue::weight("layer0.expert0.w1"),
+                    ArgValue::weight("layer0.expert0.w3"),
+                    ArgValue::weight("layer0.expert0.w2"),
+                ],
+            )
+            .unwrap_err();
+        assert!(matches!(err, DeviceError::Dead(_)));
+    }
+
+    #[test]
+    fn shadow_weight_upload_after_init() {
+        let Some((m, w)) = setup() else { return };
+        let dev = Device::spawn(
+            "ew-shadow",
+            m.clone(),
+            w,
+            DeviceRole::Expert { experts: vec![0] }.plan(&m),
+            Duration::ZERO,
+        )
+        .unwrap();
+        let names = crate::runtime::roles::expert_weights(&m, 3);
+        let dt = dev.upload_weights(&names).unwrap();
+        assert!(dt > Duration::ZERO);
+        // Now expert 3 is executable on this device.
+        let b = m.buckets.expert_b[0];
+        dev.execute(
+            &format!("expert_b{b}"),
+            vec![
+                ArgValue::f32(Tensor::zeros(vec![b, m.model.hidden])),
+                ArgValue::weight("layer0.expert3.w1"),
+                ArgValue::weight("layer0.expert3.w3"),
+                ArgValue::weight("layer0.expert3.w2"),
+            ],
+        )
+        .unwrap();
+        dev.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod numeric_tests {
+    use super::*;
+    use crate::modelcfg::Manifest;
+    use crate::runtime::DeviceRole;
+
+    /// Attention-decode artifact executes with i32 position inputs and
+    /// respects the pos mask (garbage beyond pos is ignored) — the device
+    /// -level version of the kernel invariant the python suite checks.
+    #[test]
+    fn attn_decode_runs_and_masks() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Arc::new(Manifest::load(&dir).unwrap());
+        let w = Weights::load(&m).unwrap();
+        let dev = Device::spawn(
+            "aw-num",
+            m.clone(),
+            w,
+            DeviceRole::Attention.plan(&m),
+            Duration::ZERO,
+        )
+        .unwrap();
+        let mm = &m.model;
+        let b = mm_bucket(&m);
+        let s = mm.max_seq;
+        let name = format!("attn_decode_b{b}");
+        let mk_args = |kc: Tensor, vc: Tensor| {
+            vec![
+                ArgValue::f32(Tensor::new(
+                    vec![b, mm.hidden],
+                    (0..b * mm.hidden).map(|i| (i % 13) as f32 * 0.01).collect(),
+                )),
+                ArgValue::f32(kc),
+                ArgValue::f32(vc),
+                ArgValue::i32(vec![3; b]),
+                ArgValue::weight("layer0.wq"),
+                ArgValue::weight("layer0.wk"),
+                ArgValue::weight("layer0.wv"),
+                ArgValue::weight("layer0.wo"),
+                ArgValue::weight("layer0.ln1"),
+                ArgValue::weight("layer0.ln2"),
+            ]
+        };
+        let kv_shape = vec![b, s, mm.kv_heads, mm.head_dim];
+        let base_kc = Tensor::new(
+            kv_shape.clone(),
+            (0..b * s * mm.kv_heads * mm.head_dim)
+                .map(|i| ((i % 7) as f32 - 3.0) * 0.1)
+                .collect(),
+        );
+        let base_vc = base_kc.clone();
+        let out1 = dev.execute(&name, mk_args(base_kc.clone(), base_vc.clone())).unwrap();
+        assert_eq!(out1.len(), 4);
+        assert_eq!(out1[0].shape(), &[b, mm.hidden]);
+        assert!(out1[0].data().iter().all(|v| v.is_finite()));
+
+        // Poison the cache beyond pos=3; outputs must be identical.
+        let seg = mm.kv_heads * mm.head_dim;
+        let mut kc2 = base_kc.clone();
+        let mut vc2 = base_vc.clone();
+        for bi in 0..b {
+            for t in 3..s {
+                let off = (bi * s + t) * seg;
+                for x in &mut kc2.data_mut()[off..off + seg] {
+                    *x = 1e6;
+                }
+                for x in &mut vc2.data_mut()[off..off + seg] {
+                    *x = -1e6;
+                }
+            }
+        }
+        let out2 = dev.execute(&name, mk_args(kc2, vc2)).unwrap();
+        let d = crate::tensor::ops::max_abs_diff(out1[0].data(), out2[0].data());
+        assert!(d < 1e-4, "masking violated: {d}");
+        dev.shutdown();
+    }
+
+    fn mm_bucket(m: &Manifest) -> usize {
+        m.buckets.decode_b[m.buckets.decode_b.len() - 1]
+    }
+}

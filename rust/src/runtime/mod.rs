@@ -1,0 +1,48 @@
+//! Runtime: each worker's "GPU" — a dedicated thread owning a private PJRT
+//! CPU client with the AOT-compiled executables for its role and a cache of
+//! device-resident weight buffers.
+//!
+//! Why a thread per worker: the `xla` crate wrappers hold raw pointers
+//! (!Send), and the paper's workers each own a physical GPU. A private
+//! client per worker means (a) worker (re)initialization — client creation,
+//! artifact compilation, weight upload — is a *real* multi-second cost
+//! playing the role of the paper's `T_w`, and (b) the fault injector can
+//! kill one worker without poisoning any other's device state.
+//!
+//! Messages carry host tensors (`Vec<f32>`/`Vec<i32>`); weights are
+//! referenced by name and resolved from the device-resident cache, so the
+//! steady state uploads only activations.
+
+pub mod device;
+pub mod roles;
+
+pub use device::{Device, DeviceError, ExecCounters, InitStats};
+pub use roles::{DeviceRole, RolePlan};
+
+use crate::tensor::Tensor;
+
+/// One argument to an artifact execution.
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    /// Host activation, uploaded for this call.
+    F32(Tensor),
+    /// Host i32 tensor (decode positions).
+    I32(Vec<i32>, Vec<usize>),
+    /// Device-resident weight buffer, by manifest tensor name.
+    Weight(String),
+}
+
+impl ArgValue {
+    pub fn f32(t: Tensor) -> ArgValue {
+        ArgValue::F32(t)
+    }
+
+    pub fn i32(v: Vec<i32>) -> ArgValue {
+        let n = v.len();
+        ArgValue::I32(v, vec![n])
+    }
+
+    pub fn weight(name: impl Into<String>) -> ArgValue {
+        ArgValue::Weight(name.into())
+    }
+}

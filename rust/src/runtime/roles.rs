@@ -1,0 +1,146 @@
+//! Role plans: which artifacts a worker compiles and which weights it
+//! uploads at init. AWs carry attention/router/lm-head; EWs carry expert
+//! FFNs for their assigned (and shadow) experts. The split is what makes
+//! EW init cheap relative to AW init — and what the shadow-expert design
+//! exploits (§5.3: weights resident, no compute until activated).
+
+use crate::modelcfg::{ArtifactKind, Manifest};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeviceRole {
+    /// Attention worker: stateful, needs the full attention stack.
+    Attention,
+    /// Expert worker hosting these primary experts (shadow experts are
+    /// uploaded separately so their cost is attributable).
+    Expert { experts: Vec<usize> },
+    /// Monolithic worker (vLLM-style baselines): everything.
+    Monolithic,
+}
+
+/// Concrete init plan derived from a role + manifest.
+#[derive(Debug, Clone)]
+pub struct RolePlan {
+    /// Artifact names to compile.
+    pub artifacts: Vec<String>,
+    /// Weight tensor names to upload.
+    pub weights: Vec<String>,
+}
+
+fn attn_weights(m: &Manifest) -> Vec<String> {
+    let mut w = Vec::new();
+    for layer in 0..m.model.layers {
+        for t in ["wq", "wk", "wv", "wo", "ln1", "ln2", "router"] {
+            w.push(format!("layer{layer}.{t}"));
+        }
+    }
+    w.push("ln_f".into());
+    w.push("lm_head".into());
+    w
+}
+
+/// Weight names for one expert across all layers.
+pub fn expert_weights(m: &Manifest, expert: usize) -> Vec<String> {
+    let mut w = Vec::new();
+    for layer in 0..m.model.layers {
+        for t in ["w1", "w3", "w2"] {
+            w.push(format!("layer{layer}.expert{expert}.{t}"));
+        }
+    }
+    w
+}
+
+fn names_of(m: &Manifest, kinds: &[ArtifactKind]) -> Vec<String> {
+    kinds
+        .iter()
+        .flat_map(|&k| m.artifacts_of(k).into_iter().map(|a| a.name.clone()))
+        .collect()
+}
+
+impl DeviceRole {
+    pub fn plan(&self, m: &Manifest) -> RolePlan {
+        match self {
+            DeviceRole::Attention => RolePlan {
+                artifacts: names_of(
+                    m,
+                    &[
+                        ArtifactKind::AttnPrefill,
+                        ArtifactKind::AttnDecode,
+                        ArtifactKind::Router,
+                        ArtifactKind::LmHead,
+                    ],
+                ),
+                weights: attn_weights(m),
+            },
+            DeviceRole::Expert { experts } => RolePlan {
+                artifacts: names_of(m, &[ArtifactKind::Expert]),
+                weights: experts
+                    .iter()
+                    .flat_map(|&e| expert_weights(m, e))
+                    .collect(),
+            },
+            DeviceRole::Monolithic => {
+                let mut weights = attn_weights(m);
+                for e in 0..m.model.experts {
+                    weights.extend(expert_weights(m, e));
+                }
+                RolePlan {
+                    artifacts: names_of(
+                        m,
+                        &[
+                            ArtifactKind::AttnPrefill,
+                            ArtifactKind::AttnDecode,
+                            ArtifactKind::Router,
+                            ArtifactKind::Expert,
+                            ArtifactKind::LmHead,
+                        ],
+                    ),
+                    weights,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn attention_plan_has_no_expert_artifacts() {
+        let Some(m) = manifest() else { return };
+        let plan = DeviceRole::Attention.plan(&m);
+        assert!(plan.artifacts.iter().any(|a| a.starts_with("attn_decode")));
+        assert!(plan.artifacts.iter().any(|a| a.starts_with("lm_head")));
+        assert!(!plan.artifacts.iter().any(|a| a.starts_with("expert")));
+        assert!(plan.weights.contains(&"layer0.router".to_string()));
+        assert!(!plan.weights.iter().any(|w| w.contains("expert")));
+    }
+
+    #[test]
+    fn expert_plan_scoped_to_assigned_experts() {
+        let Some(m) = manifest() else { return };
+        let plan = DeviceRole::Expert { experts: vec![2, 5] }.plan(&m);
+        assert!(plan.artifacts.iter().all(|a| a.starts_with("expert_b")));
+        assert!(plan.weights.iter().all(|w| w.contains(".expert2.") || w.contains(".expert5.")));
+        assert_eq!(plan.weights.len(), m.model.layers * 3 * 2);
+    }
+
+    #[test]
+    fn monolithic_plan_is_superset() {
+        let Some(m) = manifest() else { return };
+        let mono = DeviceRole::Monolithic.plan(&m);
+        let attn = DeviceRole::Attention.plan(&m);
+        for a in &attn.artifacts {
+            assert!(mono.artifacts.contains(a));
+        }
+        assert!(mono.weights.iter().any(|w| w.contains("expert7")));
+    }
+}

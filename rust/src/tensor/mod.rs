@@ -1,0 +1,180 @@
+//! Host-side f32 tensors: the coordinator's currency for token embeddings,
+//! KV segments, and expert outputs. Deliberately simple — real math happens
+//! in the AOT-compiled XLA executables; this type only carries data,
+//! assembles batches, and applies the few elementwise combines the MoE
+//! aggregation needs (residual adds, gate-weighted sums).
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Number of rows when viewed as [rows, row_len].
+    pub fn rows(&self) -> usize {
+        assert!(!self.shape.is_empty());
+        self.shape[0]
+    }
+
+    /// Elements per leading row.
+    pub fn row_len(&self) -> usize {
+        assert!(!self.shape.is_empty());
+        self.shape[1..].iter().product()
+    }
+
+    /// Borrow row `i` (viewing the tensor as [rows, row_len]).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let rl = self.row_len();
+        &self.data[i * rl..(i + 1) * rl]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let rl = self.row_len();
+        &mut self.data[i * rl..(i + 1) * rl]
+    }
+
+    /// Copy row `i` out as an owned [1, row_len...] tensor.
+    pub fn row_tensor(&self, i: usize) -> Tensor {
+        let mut shape = self.shape.clone();
+        shape[0] = 1;
+        Tensor::new(shape, self.row(i).to_vec())
+    }
+
+    /// Stack rows (each [row_len]) into [rows.len(), row_len].
+    pub fn from_rows(rows: &[&[f32]]) -> Tensor {
+        assert!(!rows.is_empty());
+        let rl = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * rl);
+        for r in rows {
+            assert_eq!(r.len(), rl, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Tensor::new(vec![rows.len(), rl], data)
+    }
+
+    /// Take the first `n` leading rows as an owned tensor (un-padding).
+    pub fn take_rows(&self, n: usize) -> Tensor {
+        assert!(n <= self.rows());
+        let rl = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor::new(shape, self.data[..n * rl].to_vec())
+    }
+
+    /// Pad with zero rows up to `n` leading rows (bucketing).
+    pub fn pad_rows(&self, n: usize) -> Tensor {
+        assert!(n >= self.rows());
+        let rl = self.row_len();
+        let mut data = self.data.clone();
+        data.resize(n * rl, 0.0);
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_len(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn pad_and_take_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let padded = t.pad_rows(4);
+        assert_eq!(padded.shape(), &[4, 2]);
+        assert_eq!(&padded.data()[4..], &[0.0; 4]);
+        assert_eq!(padded.take_rows(2), t);
+    }
+
+    #[test]
+    fn from_rows_stacks() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let t = Tensor::from_rows(&[&a, &b]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn multi_dim_rows() {
+        // [T, kv, d] KV tensor: row() returns one token's segment.
+        let t = Tensor::new(vec![2, 1, 4], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.row_len(), 4);
+        assert_eq!(t.row(1), &[4., 5., 6., 7.]);
+        let r = t.row_tensor(1);
+        assert_eq!(r.shape(), &[1, 1, 4]);
+    }
+}

@@ -1,0 +1,112 @@
+//! The few host-side elementwise operations the coordinator performs.
+//! Everything heavier runs inside the AOT-compiled XLA executables.
+
+use super::Tensor;
+
+/// y += x (elementwise, equal shapes). Residual adds on the AW hot path.
+pub fn add_assign(y: &mut Tensor, x: &Tensor) {
+    assert_eq!(y.shape(), x.shape(), "add_assign shape mismatch");
+    for (a, b) in y.data_mut().iter_mut().zip(x.data()) {
+        *a += b;
+    }
+}
+
+/// y += w * x over a single row slice. MoE gate-weighted accumulation:
+/// the AW combines expert outputs as `h += gate_e * expert_e(g)`.
+pub fn axpy_row(y: &mut [f32], w: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy_row length mismatch");
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += w * b;
+    }
+}
+
+/// Argmax over a row (greedy sampling); ties resolve to the lowest index,
+/// matching `jnp.argmax` so Rust generation equals the python oracle.
+pub fn argmax(row: &[f32]) -> usize {
+    assert!(!row.is_empty());
+    let mut best = 0;
+    let mut best_v = row[0];
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// Top-k indices and values, descending by value; ties resolve to the
+/// lowest index (stable, matching `jax.lax.top_k`). k <= row.len().
+pub fn top_k(row: &[f32], k: usize) -> Vec<(usize, f32)> {
+    assert!(k <= row.len());
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.into_iter().take(k).map(|i| (i, row[i])).collect()
+}
+
+/// Renormalize top-k gate values to sum to 1 (the Mixtral convention used
+/// by the L2 oracle's `_moe_block`).
+pub fn renormalize(gates: &mut [(usize, f32)]) {
+    let sum: f32 = gates.iter().map(|(_, v)| v).sum();
+    if sum > 0.0 {
+        for (_, v) in gates.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Maximum absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_works() {
+        let mut y = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let x = Tensor::new(vec![2, 2], vec![10., 20., 30., 40.]);
+        add_assign(&mut y, &x);
+        assert_eq!(y.data(), &[11., 22., 33., 44.]);
+    }
+
+    #[test]
+    fn axpy() {
+        let mut y = vec![1.0, 1.0];
+        axpy_row(&mut y, 0.5, &[2.0, 4.0]);
+        assert_eq!(y, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn argmax_ties_to_lowest_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn top_k_ordering_and_ties() {
+        let row = [0.1, 0.4, 0.4, 0.05, 0.05];
+        let top = top_k(&row, 2);
+        assert_eq!(top[0].0, 1); // tie between 1 and 2 -> lowest index first
+        assert_eq!(top[1].0, 2);
+    }
+
+    #[test]
+    fn renormalize_sums_to_one() {
+        let mut g = vec![(0usize, 0.3f32), (5, 0.1)];
+        renormalize(&mut g);
+        let sum: f32 = g.iter().map(|(_, v)| v).sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!((g[0].1 - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup,
+//! timed iterations, mean/median/p95 reporting, and a trivial
+//! anti-optimization sink.
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        median_us: stats::median(&samples),
+        p95_us: stats::percentile(&samples, 95.0),
+    };
+    println!(
+        "{:<44} {:>10.2} us/iter (median {:>10.2}, p95 {:>10.2}, n={})",
+        r.name, r.mean_us, r.median_us, r.p95_us, r.iters
+    );
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single invocation.
+pub fn once<F: FnOnce()>(name: &str, f: F) -> Duration {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed();
+    println!("{:<44} {:>10.2} ms (once)", name, dt.as_secs_f64() * 1e3);
+    dt
+}

@@ -1,0 +1,6 @@
+//! Test utilities: a small randomized property-testing harness (the
+//! vendored crate set has no proptest) and micro-benchmark support used by
+//! the `rust/benches` targets.
+
+pub mod bench;
+pub mod prop;

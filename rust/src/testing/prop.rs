@@ -1,0 +1,50 @@
+//! Minimal randomized property-testing harness (proptest is unavailable
+//! offline). `check` runs a property over `n` seeded random cases and, on
+//! failure, retries with the same seed after printing it — so failures are
+//! reproducible by pinning `TARRAGON_PROP_SEED`.
+
+use crate::util::rng::Pcg;
+
+/// Run `prop(rng, case_index)` for `n` cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Pcg, usize)>(name: &str, n: usize, mut prop: F) {
+    let base = std::env::var("TARRAGON_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64 * 0x9E3779B97F4A7C15);
+        let mut rng = Pcg::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (TARRAGON_PROP_SEED={base}, case seed {seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        check("counts", 25, |_rng, _case| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn rng_is_seeded_per_case() {
+        let mut firsts = Vec::new();
+        check("seeds", 5, |rng, _| firsts.push(rng.next_u64()));
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 5, "cases must get distinct streams");
+    }
+}

@@ -1,0 +1,414 @@
+//! The fabric: node registry, inboxes, QP sender handles, and fault
+//! injection. See module docs in `transport`.
+
+use super::link::{Link, TrafficClass};
+use super::{NodeId, Plane};
+use crate::config::TransportConfig;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum QpError {
+    #[error("local node {0} is down")]
+    LocalDown(NodeId),
+    #[error("retry exceeded toward {0} (peer dead or link severed)")]
+    RetryExceeded(NodeId),
+    #[error("recv timed out")]
+    Timeout,
+    #[error("node {0} is not registered")]
+    Unknown(NodeId),
+}
+
+/// A delivered message with its transport metadata.
+#[derive(Debug)]
+pub struct Envelope<M> {
+    pub from: NodeId,
+    pub plane: Plane,
+    pub seq: u64,
+    pub class: TrafficClass,
+    pub deliver_at: Instant,
+    pub msg: M,
+}
+
+struct NodeEntry<M> {
+    alive: Arc<AtomicBool>,
+    inbox_tx: mpsc::Sender<Envelope<M>>,
+    egress: Arc<Link>,
+}
+
+/// Handle a worker keeps to its own node registration.
+pub struct NodeHandle {
+    pub id: NodeId,
+    alive: Arc<AtomicBool>,
+    egress: Arc<Link>,
+}
+
+impl NodeHandle {
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// This node's egress link (the checkpoint streamer's idle-gap gate).
+    pub fn egress(&self) -> &Arc<Link> {
+        &self.egress
+    }
+}
+
+/// Receiving side of a node: one unified inbox over all QPs/planes.
+pub struct Inbox<M> {
+    id: NodeId,
+    rx: mpsc::Receiver<Envelope<M>>,
+    alive: Arc<AtomicBool>,
+}
+
+impl<M> Inbox<M> {
+    /// Receive the next message, honoring simulated delivery time: the
+    /// call sleeps until the message's `deliver_at` before returning it.
+    pub fn recv(&self, timeout: Duration) -> Result<Envelope<M>, QpError> {
+        if !self.alive.load(Ordering::Acquire) {
+            return Err(QpError::LocalDown(self.id));
+        }
+        let deadline = Instant::now() + timeout;
+        let env = loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(e) => break e,
+                Err(mpsc::RecvTimeoutError::Timeout) => return Err(QpError::Timeout),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(QpError::LocalDown(self.id))
+                }
+            }
+        };
+        let now = Instant::now();
+        if env.deliver_at > now {
+            std::thread::sleep(env.deliver_at - now);
+        }
+        if !self.alive.load(Ordering::Acquire) {
+            // Crashed while the message was "on the wire".
+            return Err(QpError::LocalDown(self.id));
+        }
+        Ok(env)
+    }
+
+    /// Drain everything immediately deliverable without blocking.
+    pub fn drain_ready(&self) -> Vec<Envelope<M>> {
+        let mut out = Vec::new();
+        let now = Instant::now();
+        while let Ok(env) = self.rx.try_recv() {
+            if env.deliver_at > now {
+                // Still in flight: honor its delivery time, then take it.
+                std::thread::sleep(env.deliver_at - now);
+            }
+            out.push(env);
+        }
+        out
+    }
+
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+}
+
+/// Directed sender handle ("queue pair" toward one peer on one plane).
+/// One-sided post semantics: `post` never blocks and never errors toward a
+/// dead peer; `probe` is the NIC-level liveness check.
+pub struct Qp<M> {
+    pub local: NodeId,
+    pub peer: NodeId,
+    pub plane: Plane,
+    fabric: Arc<Fabric<M>>,
+    local_alive: Arc<AtomicBool>,
+    egress: Arc<Link>,
+    seq: AtomicU64,
+}
+
+impl<M: Send + 'static> Qp<M> {
+    /// Post a message (one-sided write). Returns the work-request seq id.
+    pub fn post(&self, msg: M, bytes: usize, class: TrafficClass) -> Result<u64, QpError> {
+        if !self.local_alive.load(Ordering::Acquire) {
+            return Err(QpError::LocalDown(self.local));
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let deliver_at = self.egress.reserve(bytes, class);
+        self.fabric.deliver(Envelope {
+            from: self.local,
+            plane: self.plane,
+            seq,
+            class,
+            deliver_at,
+            msg,
+        }, self.peer);
+        Ok(seq)
+    }
+
+    /// Zero-length write acked by the peer NIC (Appendix E): succeeds iff
+    /// the peer node is alive and the path is not severed. Costs one RTT
+    /// on success, the full `timeout` on failure.
+    pub fn probe(&self, timeout: Duration) -> Result<Duration, QpError> {
+        if !self.local_alive.load(Ordering::Acquire) {
+            return Err(QpError::LocalDown(self.local));
+        }
+        let rtt = 2 * self.egress.latency();
+        if self.fabric.path_up(self.local, self.peer) {
+            std::thread::sleep(rtt);
+            // Re-check: the peer may have died while the probe was in flight.
+            if self.fabric.path_up(self.local, self.peer) {
+                return Ok(rtt);
+            }
+        }
+        std::thread::sleep(timeout);
+        Err(QpError::RetryExceeded(self.peer))
+    }
+
+    /// Non-blocking peer liveness as known to the RNIC *after* a completed
+    /// probe — used by tests and the orchestrator's bookkeeping.
+    pub fn peer_reachable(&self) -> bool {
+        self.fabric.path_up(self.local, self.peer)
+    }
+}
+
+/// The cluster interconnect. Generic over the message type `M` (the
+/// cluster defines one message enum for all workers).
+pub struct Fabric<M> {
+    cfg: TransportConfig,
+    nodes: RwLock<HashMap<NodeId, NodeEntry<M>>>,
+    severed: Mutex<HashSet<(NodeId, NodeId)>>,
+}
+
+impl<M: Send + 'static> Fabric<M> {
+    pub fn new(cfg: TransportConfig) -> Arc<Fabric<M>> {
+        Arc::new(Fabric {
+            cfg,
+            nodes: RwLock::new(HashMap::new()),
+            severed: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// Register (or re-register, for a restarted worker) a node; returns
+    /// its inbox and handle. Re-registration revives a killed id.
+    pub fn register(self: &Arc<Self>, id: NodeId) -> (Inbox<M>, NodeHandle) {
+        let (tx, rx) = mpsc::channel();
+        let alive = Arc::new(AtomicBool::new(true));
+        let egress = Arc::new(Link::new(self.cfg.bandwidth_bps, self.cfg.latency));
+        let entry = NodeEntry { alive: alive.clone(), inbox_tx: tx, egress: egress.clone() };
+        self.nodes.write().unwrap().insert(id, entry);
+        // A fresh registration also clears any severed links of a previous
+        // incarnation.
+        self.severed.lock().unwrap().retain(|&(a, b)| a != id && b != id);
+        (
+            Inbox { id, rx, alive: alive.clone() },
+            NodeHandle { id, alive, egress },
+        )
+    }
+
+    /// Create a QP from `local` toward `peer` on `plane`.
+    pub fn qp(self: &Arc<Self>, local: NodeId, peer: NodeId, plane: Plane) -> Result<Qp<M>, QpError> {
+        let nodes = self.nodes.read().unwrap();
+        let l = nodes.get(&local).ok_or(QpError::Unknown(local))?;
+        if !nodes.contains_key(&peer) {
+            return Err(QpError::Unknown(peer));
+        }
+        Ok(Qp {
+            local,
+            peer,
+            plane,
+            fabric: self.clone(),
+            local_alive: l.alive.clone(),
+            egress: l.egress.clone(),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    fn deliver(&self, env: Envelope<M>, to: NodeId) {
+        if !self.path_up(env.from, to) {
+            return; // vanishes, like a write into a dead node
+        }
+        if let Some(entry) = self.nodes.read().unwrap().get(&to) {
+            let _ = entry.inbox_tx.send(env);
+        }
+    }
+
+    /// Fail-stop a node (§3.3). Its inbox stops accepting and its QPs go
+    /// silent; peers find out via probes.
+    pub fn kill(&self, id: NodeId) {
+        if let Some(e) = self.nodes.read().unwrap().get(&id) {
+            e.alive.store(false, Ordering::Release);
+        }
+    }
+
+    /// Link failure between two nodes: both keep running but cannot reach
+    /// each other (handled like fail-stop by the affected peers, §3.3).
+    pub fn sever(&self, a: NodeId, b: NodeId) {
+        self.severed.lock().unwrap().insert(key(a, b));
+    }
+
+    pub fn heal(&self, a: NodeId, b: NodeId) {
+        self.severed.lock().unwrap().remove(&key(a, b));
+    }
+
+    pub fn is_alive(&self, id: NodeId) -> bool {
+        self.nodes
+            .read()
+            .unwrap()
+            .get(&id)
+            .map(|e| e.alive.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    fn path_up(&self, a: NodeId, b: NodeId) -> bool {
+        self.is_alive(a)
+            && self.is_alive(b)
+            && !self.severed.lock().unwrap().contains(&key(a, b))
+    }
+
+    /// Egress link of a node (harnesses enable recording through this).
+    pub fn egress_of(&self, id: NodeId) -> Option<Arc<Link>> {
+        self.nodes.read().unwrap().get(&id).map(|e| e.egress.clone())
+    }
+
+    pub fn config(&self) -> &TransportConfig {
+        &self.cfg
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        self.nodes.read().unwrap().keys().copied().collect()
+    }
+}
+
+fn key(a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> TransportConfig {
+        TransportConfig {
+            latency: Duration::from_micros(100),
+            bandwidth_bps: 1e9,
+            worker_extra_init: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn post_and_recv_roundtrip() {
+        let fabric: Arc<Fabric<String>> = Fabric::new(test_cfg());
+        let (inbox_b, _hb) = fabric.register(NodeId::Ew(0));
+        let (_inbox_a, _ha) = fabric.register(NodeId::Aw(0));
+        let qp = fabric.qp(NodeId::Aw(0), NodeId::Ew(0), Plane::Data).unwrap();
+        let seq0 = qp.post("hello".into(), 64, TrafficClass::ExpertDispatch).unwrap();
+        let seq1 = qp.post("world".into(), 64, TrafficClass::ExpertDispatch).unwrap();
+        assert_eq!((seq0, seq1), (0, 1));
+        let e1 = inbox_b.recv(Duration::from_secs(1)).unwrap();
+        let e2 = inbox_b.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(e1.msg, "hello");
+        assert_eq!(e2.msg, "world");
+        assert_eq!(e1.from, NodeId::Aw(0));
+        assert_eq!(e1.plane, Plane::Data);
+        assert!(e2.seq > e1.seq);
+    }
+
+    #[test]
+    fn messages_to_dead_peer_vanish_but_post_succeeds() {
+        let fabric: Arc<Fabric<u32>> = Fabric::new(test_cfg());
+        let (inbox_b, _hb) = fabric.register(NodeId::Ew(1));
+        let (_ia, _ha) = fabric.register(NodeId::Aw(1));
+        let qp = fabric.qp(NodeId::Aw(1), NodeId::Ew(1), Plane::Data).unwrap();
+        fabric.kill(NodeId::Ew(1));
+        // One-sided post still succeeds...
+        qp.post(7, 8, TrafficClass::ExpertDispatch).unwrap();
+        // ...but the peer never sees it (and its inbox reports local-down).
+        assert!(matches!(
+            inbox_b.recv(Duration::from_millis(50)),
+            Err(QpError::LocalDown(_))
+        ));
+    }
+
+    #[test]
+    fn probe_detects_dead_peer_and_costs_timeout() {
+        let fabric: Arc<Fabric<u32>> = Fabric::new(test_cfg());
+        let (_ib, _hb) = fabric.register(NodeId::Ew(2));
+        let (_ia, _ha) = fabric.register(NodeId::Aw(2));
+        let qp = fabric.qp(NodeId::Aw(2), NodeId::Ew(2), Plane::Control).unwrap();
+        // Alive: succeeds within ~1 RTT.
+        let rtt = qp.probe(Duration::from_millis(100)).unwrap();
+        assert!(rtt <= Duration::from_millis(5));
+        fabric.kill(NodeId::Ew(2));
+        let t0 = Instant::now();
+        let err = qp.probe(Duration::from_millis(30)).unwrap_err();
+        assert_eq!(err, QpError::RetryExceeded(NodeId::Ew(2)));
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn severed_link_isolates_pair_only() {
+        let fabric: Arc<Fabric<u32>> = Fabric::new(test_cfg());
+        let (inbox_e, _he) = fabric.register(NodeId::Ew(0));
+        let (_ia0, _h0) = fabric.register(NodeId::Aw(0));
+        let (_ia1, _h1) = fabric.register(NodeId::Aw(1));
+        fabric.sever(NodeId::Aw(0), NodeId::Ew(0));
+        let qp0 = fabric.qp(NodeId::Aw(0), NodeId::Ew(0), Plane::Data).unwrap();
+        let qp1 = fabric.qp(NodeId::Aw(1), NodeId::Ew(0), Plane::Data).unwrap();
+        assert!(!qp0.peer_reachable());
+        assert!(qp1.peer_reachable());
+        qp0.post(0, 8, TrafficClass::ExpertDispatch).unwrap();
+        qp1.post(1, 8, TrafficClass::ExpertDispatch).unwrap();
+        let got = inbox_e.recv(Duration::from_millis(200)).unwrap();
+        assert_eq!(got.msg, 1); // only aw1's message arrives
+        assert!(inbox_e.recv(Duration::from_millis(50)).is_err());
+        // heal restores the path
+        fabric.heal(NodeId::Aw(0), NodeId::Ew(0));
+        assert!(qp0.peer_reachable());
+    }
+
+    #[test]
+    fn reregistration_revives_node() {
+        let fabric: Arc<Fabric<u32>> = Fabric::new(test_cfg());
+        let (_i, _h) = fabric.register(NodeId::Aw(5));
+        fabric.kill(NodeId::Aw(5));
+        assert!(!fabric.is_alive(NodeId::Aw(5)));
+        let (inbox2, _h2) = fabric.register(NodeId::Aw(5));
+        assert!(fabric.is_alive(NodeId::Aw(5)));
+        let (_ig, _hg) = fabric.register(NodeId::Gateway);
+        let qp = fabric.qp(NodeId::Gateway, NodeId::Aw(5), Plane::Control).unwrap();
+        qp.post(9, 8, TrafficClass::Admin).unwrap();
+        assert_eq!(inbox2.recv(Duration::from_millis(200)).unwrap().msg, 9);
+    }
+
+    #[test]
+    fn delivery_time_respects_bandwidth() {
+        let mut cfg = test_cfg();
+        cfg.bandwidth_bps = 1e6; // 1 MB/s
+        cfg.latency = Duration::ZERO;
+        let fabric: Arc<Fabric<u32>> = Fabric::new(cfg);
+        let (inbox, _h) = fabric.register(NodeId::Store);
+        let (_i2, _h2) = fabric.register(NodeId::Aw(0));
+        let qp = fabric.qp(NodeId::Aw(0), NodeId::Store, Plane::Data).unwrap();
+        let t0 = Instant::now();
+        qp.post(0, 10_000, TrafficClass::Checkpoint).unwrap(); // 10 ms transfer
+        inbox.recv(Duration::from_secs(1)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn drain_ready_returns_everything_posted() {
+        let fabric: Arc<Fabric<u32>> = Fabric::new(test_cfg());
+        let (inbox, _h) = fabric.register(NodeId::Ew(0));
+        let (_i2, _h2) = fabric.register(NodeId::Aw(0));
+        let qp = fabric.qp(NodeId::Aw(0), NodeId::Ew(0), Plane::Data).unwrap();
+        for i in 0..5 {
+            qp.post(i, 16, TrafficClass::ExpertDispatch).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let got = inbox.drain_ready();
+        assert_eq!(got.len(), 5);
+        assert!(got.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+}

@@ -1,0 +1,235 @@
+//! Per-node egress link: bandwidth/latency model, busy-interval tracking,
+//! traffic accounting, and (optionally) a raw event log for the Fig. 8
+//! utilization trace.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What a transfer carries — the accounting dimension for Fig. 8 / Fig. 12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    /// AW -> EW token embeddings (scatter).
+    ExpertDispatch,
+    /// EW -> AW expert outputs (gather).
+    ExpertReturn,
+    /// AW -> checkpoint-store incremental KV segments (§6.1).
+    Checkpoint,
+    /// Checkpoint-store -> AW restoration writes (§6.2).
+    Restore,
+    /// Probes and self-healing metadata (control plane).
+    Control,
+    /// Orchestrator/admin messages.
+    Admin,
+}
+
+impl TrafficClass {
+    pub const ALL: [TrafficClass; 6] = [
+        TrafficClass::ExpertDispatch,
+        TrafficClass::ExpertReturn,
+        TrafficClass::Checkpoint,
+        TrafficClass::Restore,
+        TrafficClass::Control,
+        TrafficClass::Admin,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            TrafficClass::ExpertDispatch => 0,
+            TrafficClass::ExpertReturn => 1,
+            TrafficClass::Checkpoint => 2,
+            TrafficClass::Restore => 3,
+            TrafficClass::Control => 4,
+            TrafficClass::Admin => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::ExpertDispatch => "expert_dispatch",
+            TrafficClass::ExpertReturn => "expert_return",
+            TrafficClass::Checkpoint => "checkpoint",
+            TrafficClass::Restore => "restore",
+            TrafficClass::Control => "control",
+            TrafficClass::Admin => "admin",
+        }
+    }
+}
+
+/// One recorded transfer (recording enabled): times relative to the link's
+/// epoch, in microseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficEvent {
+    pub start_us: u64,
+    pub end_us: u64,
+    pub bytes: u64,
+    pub class: TrafficClass,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct LinkStats {
+    /// Total bytes per class (see TrafficClass::index).
+    pub bytes: [u64; 6],
+    pub transfers: u64,
+}
+
+impl LinkStats {
+    pub fn bytes_of(&self, c: TrafficClass) -> u64 {
+        self.bytes[c.index()]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+}
+
+/// Egress link of one node. Transfers serialize: each reservation starts
+/// no earlier than the previous one finished (single NIC).
+pub struct Link {
+    bandwidth_bps: f64,
+    latency: Duration,
+    epoch: Instant,
+    busy_until: Mutex<Instant>,
+    bytes: [AtomicU64; 6],
+    transfers: AtomicU64,
+    recording: Mutex<Option<Vec<TrafficEvent>>>,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, latency: Duration) -> Link {
+        assert!(bandwidth_bps > 0.0);
+        let now = Instant::now();
+        Link {
+            bandwidth_bps,
+            latency,
+            epoch: now,
+            busy_until: Mutex::new(now),
+            bytes: Default::default(),
+            transfers: AtomicU64::new(0),
+            recording: Mutex::new(None),
+        }
+    }
+
+    /// Reserve the link for `bytes` starting no earlier than now; returns
+    /// the delivery instant (serialization + propagation latency).
+    pub fn reserve(&self, bytes: usize, class: TrafficClass) -> Instant {
+        let now = Instant::now();
+        let ser = Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps);
+        let (start, end) = {
+            let mut busy = self.busy_until.lock().unwrap();
+            let start = (*busy).max(now);
+            let end = start + ser;
+            *busy = end;
+            (start, end)
+        };
+        self.bytes[class.index()].fetch_add(bytes as u64, Ordering::Relaxed);
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        if let Some(log) = self.recording.lock().unwrap().as_mut() {
+            log.push(TrafficEvent {
+                start_us: start.duration_since(self.epoch).as_micros() as u64,
+                end_us: end.duration_since(self.epoch).as_micros() as u64,
+                bytes: bytes as u64,
+                class,
+            });
+        }
+        end + self.latency
+    }
+
+    /// Is the link idle right now? The checkpoint streamer's opportunistic
+    /// gate (§6.1): segments are flushed only into idle gaps.
+    pub fn is_idle(&self) -> bool {
+        *self.busy_until.lock().unwrap() <= Instant::now()
+    }
+
+    /// Seconds until the link drains (0 if idle).
+    pub fn busy_for(&self) -> Duration {
+        let busy = *self.busy_until.lock().unwrap();
+        busy.saturating_duration_since(Instant::now())
+    }
+
+    pub fn stats(&self) -> LinkStats {
+        LinkStats {
+            bytes: std::array::from_fn(|i| self.bytes[i].load(Ordering::Relaxed)),
+            transfers: self.transfers.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn enable_recording(&self) {
+        let mut rec = self.recording.lock().unwrap();
+        if rec.is_none() {
+            *rec = Some(Vec::new());
+        }
+    }
+
+    pub fn take_recording(&self) -> Vec<TrafficEvent> {
+        self.recording.lock().unwrap().take().unwrap_or_default()
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_delay_scales_with_bytes() {
+        let link = Link::new(1e6, Duration::ZERO); // 1 MB/s
+        let t0 = Instant::now();
+        let d1 = link.reserve(1000, TrafficClass::ExpertDispatch); // 1 ms
+        let d2 = link.reserve(1000, TrafficClass::ExpertDispatch); // +1 ms
+        assert!(d1.duration_since(t0) >= Duration::from_micros(900));
+        assert!(d2.duration_since(d1) >= Duration::from_micros(900));
+    }
+
+    #[test]
+    fn latency_is_added_after_serialization() {
+        let link = Link::new(1e9, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let d = link.reserve(8, TrafficClass::Control);
+        assert!(d.duration_since(t0) >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn idle_tracking() {
+        let link = Link::new(1e3, Duration::ZERO); // 1 KB/s: slow
+        assert!(link.is_idle());
+        link.reserve(100, TrafficClass::Checkpoint); // 100 ms of busy
+        assert!(!link.is_idle());
+        assert!(link.busy_for() > Duration::from_millis(50));
+    }
+
+    #[test]
+    fn per_class_accounting() {
+        let link = Link::new(1e9, Duration::ZERO);
+        link.reserve(100, TrafficClass::ExpertDispatch);
+        link.reserve(50, TrafficClass::Checkpoint);
+        link.reserve(50, TrafficClass::Checkpoint);
+        let s = link.stats();
+        assert_eq!(s.bytes_of(TrafficClass::ExpertDispatch), 100);
+        assert_eq!(s.bytes_of(TrafficClass::Checkpoint), 100);
+        assert_eq!(s.total_bytes(), 200);
+        assert_eq!(s.transfers, 3);
+    }
+
+    #[test]
+    fn recording_captures_intervals() {
+        let link = Link::new(1e6, Duration::ZERO);
+        link.enable_recording();
+        link.reserve(500, TrafficClass::ExpertDispatch);
+        link.reserve(500, TrafficClass::Checkpoint);
+        let events = link.take_recording();
+        assert_eq!(events.len(), 2);
+        assert!(events[1].start_us >= events[0].end_us); // serialized
+        assert_eq!(events[0].bytes, 500);
+        // recording stops after take
+        link.reserve(10, TrafficClass::Control);
+        assert!(link.take_recording().is_empty());
+    }
+}

@@ -1,0 +1,60 @@
+//! Simulated RDMA fabric (DESIGN.md §3).
+//!
+//! Models what the paper's datapath relies on, at the fidelity the
+//! experiments need:
+//!
+//! - **Queue pairs per plane**: each AW-EW pair uses a *control* and a
+//!   *data* plane (§4.1); here a [`Qp`] is a directed sender handle tagged
+//!   with its plane, posting into the peer's inbox. One-sided semantics:
+//!   `post()` never blocks on the peer and never fails toward a dead peer —
+//!   the message simply vanishes, exactly like an RDMA write into a dead
+//!   node. Failure *detection* is the job of probes and silence windows.
+//! - **NIC serialization**: each node has one egress [`Link`] with a
+//!   bandwidth/latency model; concurrent transfers serialize, producing the
+//!   bursty utilization Fig. 8 measures. The checkpoint streamer asks the
+//!   link whether it is idle before opportunistically flushing segments.
+//! - **Hardware-style failure signaling**: [`Qp::probe`] models a
+//!   zero-length RC write acked by the peer *NIC*: it succeeds iff the peer
+//!   node is alive and the path is not severed, with an RTT cost; otherwise
+//!   it costs the configured timeout and reports `RetryExceeded`
+//!   (the `IBV_WC_RETRY_EXC_ERR` analogue, Appendix E).
+//! - **Fault injection**: [`Fabric::kill`] (fail-stop node crash) and
+//!   [`Fabric::sever`] (link failure isolating two peers, §3.3).
+
+pub mod fabric;
+pub mod link;
+
+pub use fabric::{Envelope, Fabric, Inbox, NodeHandle, Qp, QpError};
+pub use link::{Link, LinkStats, TrafficClass, TrafficEvent};
+
+use std::fmt;
+
+/// Logical node addresses in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Aw(u32),
+    Ew(u32),
+    /// Checkpoint store (its own node, §7.1).
+    Store,
+    Orchestrator,
+    Gateway,
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NodeId::Aw(i) => write!(f, "aw{i}"),
+            NodeId::Ew(i) => write!(f, "ew{i}"),
+            NodeId::Store => write!(f, "store"),
+            NodeId::Orchestrator => write!(f, "orch"),
+            NodeId::Gateway => write!(f, "gateway"),
+        }
+    }
+}
+
+/// The two planes of §4.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Plane {
+    Control,
+    Data,
+}

@@ -1,0 +1,190 @@
+//! Tiny CLI argument parser (in-repo replacement for `clap`).
+//!
+//! Grammar: `tarragon <subcommand> [--flag] [--key value] [--key=value]`.
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("invalid value for --{0}: '{1}'")]
+    BadValue(String, String),
+    #[error("unknown argument(s): {0}")]
+    Unknown(String),
+    #[error("missing required argument --{0}")]
+    Missing(String),
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut items: Vec<String> = argv.into_iter().collect();
+        let subcommand = if !items.is_empty() && !items[0].starts_with('-') {
+            Some(items.remove(0))
+        } else {
+            None
+        };
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < items.len() {
+            let item = &items[i];
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    values.insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    values.insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else {
+                flags.push(item.clone());
+            }
+            i += 1;
+        }
+        Args { subcommand, values, flags, consumed: Default::default() }
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.values.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn required(&self, key: &str) -> Result<String, CliError> {
+        self.str_opt(key).ok_or_else(|| CliError::Missing(key.to_string()))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| CliError::BadValue(key.to_string(), v)),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.parse_or(key, default)
+    }
+
+    /// Boolean switch: `--verbose` (no value).
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list: `--rates 30,40,50`.
+    pub fn list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|_| CliError::BadValue(key.to_string(), v.clone()))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided argument was never consumed by an accessor —
+    /// catches typos like `--scenaro`.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .values
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = args("fig9 --scenario aw --rate 50 --duration=30");
+        assert_eq!(a.subcommand.as_deref(), Some("fig9"));
+        assert_eq!(a.str_or("scenario", "x"), "aw");
+        assert_eq!(a.u64_or("rate", 0).unwrap(), 50);
+        assert_eq!(a.u64_or("duration", 0).unwrap(), 30);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = args("serve --verbose");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.usize_or("num-aws", 8).unwrap(), 8);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = args("fig9 --scenaro aw");
+        assert_eq!(a.str_or("scenario", "x"), "x");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = args("x --rate abc");
+        assert!(a.u64_or("rate", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args("x --rates 30,40.5,50");
+        assert_eq!(a.list_or("rates", &[]).unwrap(), vec![30.0, 40.5, 50.0]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = args("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal HTTP/1.0 server for the orchestrator's admin/control endpoints
+//! (the paper's orchestrator is "a C++ control plane service exposing HTTP
+//! endpoints for configuration and failure monitoring").
+//!
+//! One thread per connection, GET only, handler returns (status, body).
+//! This is an *admin* plane: low traffic, human/scripted clients — never on
+//! the request path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub type Handler = Arc<dyn Fn(&str) -> (u16, String) + Send + Sync>;
+
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to 127.0.0.1:port (port 0 = ephemeral) and serve `handler`
+    /// (path -> (status, body)) on a background thread.
+    pub fn start(port: u16, handler: Handler) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("http-admin".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = handler.clone();
+                            // Admin traffic is rare; thread-per-conn is fine.
+                            std::thread::spawn(move || handle_conn(stream, h));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn url(&self, path: &str) -> String {
+        format!("http://{}{}", self.addr, path)
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, handler: Handler) {
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // Drain headers (we don't use them).
+    let mut line = String::new();
+    while reader.read_line(&mut line).is_ok() {
+        if line == "\r\n" || line == "\n" || line.is_empty() {
+            break;
+        }
+        line.clear();
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("/");
+    let (status, body) = if method == "GET" {
+        handler(path)
+    } else {
+        (405, "method not allowed\n".to_string())
+    };
+    respond(stream, status, &body);
+}
+
+fn respond(mut stream: TcpStream, status: u16, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let resp = format!(
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+}
+
+/// Minimal GET client for tests and admin scripts.
+pub fn get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: localhost\r\n\r\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut line = String::new();
+    while reader.read_line(&mut line)? > 0 {
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+        line.clear();
+    }
+    let mut body = String::new();
+    use std::io::Read;
+    reader.read_to_string(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_and_routes() {
+        let server = HttpServer::start(
+            0,
+            Arc::new(|path: &str| match path {
+                "/health" => (200, "{\"ok\":true}".to_string()),
+                p if p.starts_with("/workers") => (200, "[]".to_string()),
+                _ => (404, "nope".to_string()),
+            }),
+        )
+        .unwrap();
+        let (code, body) = get(server.addr, "/health").unwrap();
+        assert_eq!((code, body.as_str()), (200, "{\"ok\":true}"));
+        let (code, _) = get(server.addr, "/missing").unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = get(server.addr, "/workers/all").unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn shuts_down_on_drop() {
+        let addr;
+        {
+            let server =
+                HttpServer::start(0, Arc::new(|_: &str| (200, String::new()))).unwrap();
+            addr = server.addr;
+            let (code, _) = get(addr, "/").unwrap();
+            assert_eq!(code, 200);
+        }
+        // After drop the listener thread exits; connection should fail
+        // (immediately or after the accept loop notices).
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(get(addr, "/").is_err() || get(addr, "/").is_err());
+    }
+}

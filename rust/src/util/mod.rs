@@ -1,0 +1,59 @@
+//! Small self-contained substrates.
+//!
+//! This build environment is offline with a fixed vendored crate set (see
+//! DESIGN.md §2), so the usual ecosystem crates (serde, rand, clap, ...)
+//! are replaced by the minimal, tested implementations in this module.
+
+pub mod cli;
+pub mod http;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Wall-clock microseconds since the Unix epoch (for logs only; all
+/// measurements use `std::time::Instant`).
+pub fn unix_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Format a byte count human-readably (for logs and reports).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn unix_micros_monotonic_enough() {
+        let a = unix_micros();
+        let b = unix_micros();
+        assert!(b >= a);
+        assert!(a > 1_600_000_000_000_000); // after 2020
+    }
+}

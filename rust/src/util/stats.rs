@@ -1,0 +1,227 @@
+//! Summary statistics and time-series helpers used by the metrics layer
+//! and every experiment harness: percentiles, online mean/variance,
+//! fixed-width histograms, and timeline binning (for the Fig. 8/9 series).
+
+/// Percentile over a sample (linear interpolation on a sorted copy, the
+/// numpy default). `p` in [0,100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+}
+
+pub fn median(samples: &[f64]) -> f64 {
+    percentile(samples, 50.0)
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range values clamp to the
+/// edge bins, so counts are never lost.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, width: (hi - lo) / nbins as f64, bins: vec![0; nbins] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let idx = ((x - self.lo) / self.width).floor();
+        let idx = (idx.max(0.0) as usize).min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// (bin_center, count) pairs for CSV emission.
+    pub fn series(&self) -> Vec<(f64, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * self.width, c))
+            .collect()
+    }
+}
+
+/// Bin (timestamp, value) events into fixed windows; reports per-window
+/// aggregates. Timestamps in seconds. Used for TBT / throughput timelines.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    window: f64,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Timeline {
+    pub fn new(window_secs: f64) -> Self {
+        assert!(window_secs > 0.0);
+        Timeline { window: window_secs, sums: Vec::new(), counts: Vec::new() }
+    }
+
+    pub fn push(&mut self, t_secs: f64, value: f64) {
+        if t_secs < 0.0 {
+            return;
+        }
+        let idx = (t_secs / self.window) as usize;
+        if idx >= self.sums.len() {
+            self.sums.resize(idx + 1, 0.0);
+            self.counts.resize(idx + 1, 0);
+        }
+        self.sums[idx] += value;
+        self.counts[idx] += 1;
+    }
+
+    /// Per-window event rate (count / window) as (window_start, rate).
+    pub fn rate_series(&self) -> Vec<(f64, f64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 * self.window, c as f64 / self.window))
+            .collect()
+    }
+
+    /// Per-window mean value as (window_start, mean); empty windows NaN.
+    pub fn mean_series(&self) -> Vec<(f64, f64)> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .enumerate()
+            .map(|(i, (&s, &c))| {
+                let m = if c == 0 { f64::NAN } else { s / c as f64 };
+                (i as f64 * self.window, m)
+            })
+            .collect()
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((median(&xs) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 95.0) - 95.05).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 9.0);
+        let batch_var = xs.iter().map(|x| (x - mean(&xs)).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((o.var() - batch_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(0.5);
+        h.push(9.99);
+        h.push(100.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+    }
+
+    #[test]
+    fn timeline_binning() {
+        let mut t = Timeline::new(1.0);
+        t.push(0.1, 10.0);
+        t.push(0.9, 20.0);
+        t.push(2.5, 30.0);
+        let rates = t.rate_series();
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[0].1, 2.0);
+        assert_eq!(rates[1].1, 0.0);
+        assert_eq!(rates[2].1, 1.0);
+        let means = t.mean_series();
+        assert_eq!(means[0].1, 15.0);
+        assert!(means[1].1.is_nan());
+        assert_eq!(means[2].1, 30.0);
+    }
+}

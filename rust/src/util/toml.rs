@@ -1,0 +1,240 @@
+//! TOML-subset parser for cluster configuration files.
+//!
+//! Supports the subset the config system uses (and nothing more):
+//! `[section]` and `[section.sub]` tables, `key = value` with string,
+//! integer, float, boolean, and homogeneous primitive arrays; `#` comments.
+//! Values land in a flat `section.key -> Value` map; the typed layer in
+//! `crate::config` does the schema checking.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse into a flat map keyed `section.key` (or just `key` at top level).
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("expected ']'"))?;
+            let name = name.trim();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+            {
+                return Err(err("invalid section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(full, value);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("nested quote".into());
+        }
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(inner).iter().map(|s| parse_value(s.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{text}'"))
+}
+
+/// Split an array body on commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# cluster layout
+[cluster]
+num_aws = 8
+num_ews = 8          # experts spread evenly
+decode_batch = 8
+
+[resilience]
+checkpointing = true
+probe_interval_ms = 10
+shadow_factor = 1.5
+
+[workload]
+kind = "sharegpt"
+rates = [30, 40, 50]
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["cluster.num_aws"].as_i64(), Some(8));
+        assert_eq!(m["resilience.checkpointing"].as_bool(), Some(true));
+        assert_eq!(m["resilience.shadow_factor"].as_f64(), Some(1.5));
+        assert_eq!(m["workload.kind"].as_str(), Some("sharegpt"));
+        let rates = m["workload.rates"].as_arr().unwrap();
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[1].as_i64(), Some(40));
+    }
+
+    #[test]
+    fn top_level_keys_and_strings_with_hashes() {
+        let m = parse("name = \"run #4\"\n").unwrap();
+        assert_eq!(m["name"].as_str(), Some("run #4"));
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_reverse() {
+        let m = parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(m["a"].as_f64(), Some(3.0));
+        assert_eq!(m["b"].as_i64(), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("[ok]\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn string_array() {
+        let m = parse(r#"xs = ["a", "b,c", "d"]"#).unwrap();
+        let xs = m["xs"].as_arr().unwrap();
+        assert_eq!(xs[1].as_str(), Some("b,c"));
+        assert_eq!(xs.len(), 3);
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let m = parse("[a.b]\nc = 1\n").unwrap();
+        assert_eq!(m["a.b.c"].as_i64(), Some(1));
+    }
+}

@@ -1,0 +1,248 @@
+//! End-to-end integration: the full TARRAGON cluster (gateway,
+//! orchestrator, checkpoint store, AWs, EWs over the simulated fabric)
+//! must generate exactly the tokens of the pure-jnp golden fixture, with
+//! and without injected failures.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tarragon::config::Config;
+use tarragon::coordinator::cluster::{Cluster, LaunchOptions};
+use tarragon::modelcfg::{weights::Weights, Manifest};
+use tarragon::util::json::Json;
+use tarragon::workload::Request;
+
+fn setup() -> Option<(Arc<Manifest>, Weights, Vec<(Vec<u32>, Vec<u32>)>)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let weights = Weights::load(&manifest).unwrap();
+    let golden = load_golden(dir.join("golden.json"));
+    Some((manifest, weights, golden))
+}
+
+fn load_golden(path: PathBuf) -> Vec<(Vec<u32>, Vec<u32>)> {
+    let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    j.get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| {
+            let p = c.get("prompt").unwrap().usize_vec().unwrap();
+            let g = c.get("generated").unwrap().usize_vec().unwrap();
+            (
+                p.into_iter().map(|x| x as u32).collect(),
+                g.into_iter().map(|x| x as u32).collect(),
+            )
+        })
+        .collect()
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.num_aws = 2;
+    cfg.cluster.num_ews = 2;
+    cfg.transport.worker_extra_init = Duration::from_millis(10);
+    cfg
+}
+
+fn golden_schedule(golden: &[(Vec<u32>, Vec<u32>)]) -> Vec<Request> {
+    golden
+        .iter()
+        .enumerate()
+        .map(|(i, (prompt, gen))| Request {
+            id: i as u64,
+            arrival_s: 0.01 * i as f64,
+            prompt: prompt.clone(),
+            max_new_tokens: gen.len(),
+        })
+        .collect()
+}
+
+#[test]
+fn cluster_matches_golden_fixture() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let cluster = Cluster::launch(
+        small_cfg(),
+        manifest,
+        weights,
+        golden_schedule(&golden),
+        LaunchOptions::default(),
+    );
+    assert!(cluster.wait_done(Duration::from_secs(120)), "workload did not drain");
+    for (i, (_, want)) in golden.iter().enumerate() {
+        let got = cluster.gw.generated_of(i as u64);
+        assert_eq!(&got, want, "request {i} tokens diverge from jnp oracle");
+    }
+    let report = cluster.finish(1.0);
+    assert_eq!(report.finished, golden.len());
+    assert_eq!(report.aw_failures + report.ew_failures, 0);
+}
+
+#[test]
+fn cluster_survives_ew_failure_with_identical_tokens() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    // Longer decode so the failure lands mid-generation.
+    let schedule = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: golden[0].0.clone(),
+        max_new_tokens: 120,
+    }];
+    let cluster = Cluster::launch(
+        small_cfg(),
+        manifest.clone(),
+        weights.clone(),
+        schedule.clone(),
+        LaunchOptions::default(),
+    );
+    std::thread::sleep(Duration::from_millis(150));
+    cluster.kill_ew(0);
+    assert!(cluster.wait_done(Duration::from_secs(180)), "did not drain after EW failure");
+    let got = cluster.gw.generated_of(0);
+    let report = cluster.finish(1.0);
+    assert_eq!(report.finished, 1);
+
+    // Reference: same schedule, no failure.
+    let c2 = Cluster::launch(small_cfg(), manifest, weights, schedule, LaunchOptions::default());
+    assert!(c2.wait_done(Duration::from_secs(120)));
+    let want = c2.gw.generated_of(0);
+    c2.finish(1.0);
+    assert_eq!(got, want, "EW failover changed generated tokens");
+}
+
+#[test]
+fn cluster_survives_aw_failure_with_identical_tokens() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let schedule = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: golden[0].0.clone(),
+        max_new_tokens: 120,
+    }];
+    let cluster = Cluster::launch(
+        small_cfg(),
+        manifest.clone(),
+        weights.clone(),
+        schedule.clone(),
+        LaunchOptions::default(),
+    );
+    // Let it decode a while, then kill the AW that owns request 0.
+    std::thread::sleep(Duration::from_millis(150));
+    cluster.kill_aw(0);
+    assert!(cluster.wait_done(Duration::from_secs(180)), "did not drain after AW failure");
+    let got = cluster.gw.generated_of(0);
+    let report = cluster.finish(1.0);
+    assert_eq!(report.finished, 1, "request did not finish after AW failover");
+    assert!(report.aw_failures >= 1);
+
+    let c2 = Cluster::launch(small_cfg(), manifest, weights, schedule, LaunchOptions::default());
+    assert!(c2.wait_done(Duration::from_secs(120)));
+    let want = c2.gw.generated_of(0);
+    c2.finish(1.0);
+    assert_eq!(got.len(), want.len(), "token count differs after AW failover");
+    assert_eq!(got, want, "AW restoration changed generated tokens");
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+use tarragon::baselines::{megascale, VllmEngine, VllmKind};
+use tarragon::baselines::vllm::VllmOptions;
+
+#[test]
+fn vllm_tp_matches_golden_fixture() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let report = VllmEngine::run(
+        manifest,
+        weights,
+        golden_schedule(&golden),
+        VllmOptions { worker_extra_init: Duration::from_millis(10), ..Default::default() },
+    );
+    assert_eq!(report.finished, golden.len());
+    for (i, (_, want)) in golden.iter().enumerate() {
+        assert_eq!(report.generated[&(i as u64)], *want, "vllm-tp diverges on req {i}");
+    }
+    assert!(report.analysis.total_tokens > 0);
+}
+
+#[test]
+fn vllm_pp_matches_golden_fixture() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let report = VllmEngine::run(
+        manifest,
+        weights,
+        golden_schedule(&golden),
+        VllmOptions {
+            kind: VllmKind::Pp,
+            worker_extra_init: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    assert_eq!(report.finished, golden.len());
+    for (i, (_, want)) in golden.iter().enumerate() {
+        assert_eq!(report.generated[&(i as u64)], *want, "vllm-pp diverges on req {i}");
+    }
+}
+
+#[test]
+fn megascale_baseline_serves_without_failures() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let cfg = megascale::megascale_config(small_cfg());
+    let cluster = Cluster::launch(
+        cfg,
+        manifest,
+        weights,
+        golden_schedule(&golden),
+        megascale::megascale_options(),
+    );
+    assert!(cluster.wait_done(Duration::from_secs(120)));
+    for (i, (_, want)) in golden.iter().enumerate() {
+        assert_eq!(&cluster.gw.generated_of(i as u64), want, "megascale diverges on req {i}");
+    }
+    let report = cluster.finish(1.0);
+    assert_eq!(report.finished, golden.len());
+    assert_eq!(report.restarts, 0);
+}
+
+#[test]
+fn megascale_coarse_restart_recovers_after_failure() {
+    let Some((manifest, weights, golden)) = setup() else { return };
+    let cfg = megascale::megascale_config(small_cfg());
+    let schedule = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: golden[0].0.clone(),
+        max_new_tokens: 60,
+    }];
+    let cluster = Cluster::launch(
+        cfg,
+        manifest,
+        weights,
+        schedule,
+        megascale::megascale_options(),
+    );
+    std::thread::sleep(Duration::from_millis(150));
+    cluster.kill_ew(0);
+    assert!(
+        cluster.wait_done(Duration::from_secs(300)),
+        "baseline did not recover via coarse restart"
+    );
+    let got = cluster.gw.generated_of(0);
+    let report = cluster.finish(1.0);
+    assert_eq!(report.finished, 1);
+    assert!(report.restarts >= 1, "expected a full restart");
+    assert_eq!(got.len(), 60);
+    // Recovery must have produced a visible stall >= the CCL abort budget.
+    assert!(
+        report.analysis.max_token_gap_s >= 1.0,
+        "expected a long stall, got {}",
+        report.analysis.max_token_gap_s
+    );
+}

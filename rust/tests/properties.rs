@@ -1,0 +1,272 @@
+//! Randomized property tests on coordinator invariants (in-repo harness;
+//! proptest is unavailable offline — see testing::prop).
+
+use tarragon::checkpoint::store::StoreLog;
+use tarragon::coordinator::ert::Ert;
+use tarragon::coordinator::router::{self, ExpertGroups};
+use tarragon::kvcache::{BatchAssembler, RequestKv};
+use tarragon::modelcfg::{Buckets, ModelSpec};
+use tarragon::proto::{CommitMeta, SegmentMsg};
+use tarragon::tensor::Tensor;
+use tarragon::testing::prop::check;
+use tarragon::util::rng::Pcg;
+
+fn rand_model(rng: &mut Pcg) -> ModelSpec {
+    let heads = [2usize, 4][rng.index(2)];
+    let kv_heads = [1usize, heads][rng.index(2)].min(heads);
+    ModelSpec {
+        layers: rng.range_usize(1, 5),
+        hidden: 32,
+        heads,
+        kv_heads,
+        head_dim: 8,
+        ffn: 64,
+        experts: rng.range_usize(2, 9),
+        top_k: 2,
+        vocab: 64,
+        max_seq: rng.range_usize(8, 40),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routing_covers_every_row_exactly_topk_times() {
+    check("routing coverage", 200, |rng, _| {
+        let b = rng.range_usize(1, 17);
+        let e = rng.range_usize(2, 12);
+        let k = rng.range_usize(1, e.min(4) + 1);
+        let probs = Tensor::new(
+            vec![b, e],
+            (0..b * e).map(|_| rng.f32().max(1e-6)).collect(),
+        );
+        let routes = router::select_top_k(&probs, b, k);
+        assert_eq!(routes.len(), b);
+        for r in &routes {
+            assert_eq!(r.gates.len(), k);
+            // weights renormalized, positive, descending
+            let sum: f32 = r.gates.iter().map(|(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+            assert!(r.gates.windows(2).all(|w| w[0].1 >= w[1].1));
+            // no duplicate experts per row
+            let mut es: Vec<usize> = r.gates.iter().map(|(e, _)| *e).collect();
+            es.sort();
+            es.dedup();
+            assert_eq!(es.len(), k);
+        }
+        let groups = ExpertGroups::from_routes(&routes);
+        assert_eq!(groups.num_assignments(), b * k);
+        // every (row) appears exactly k times across groups
+        let mut counts = vec![0usize; b];
+        for rows in groups.groups.values() {
+            for &(row, _) in rows {
+                counts[row] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == k));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ERT invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ert_resolution_is_consistent_under_failures() {
+    check("ert failover", 200, |rng, _| {
+        let experts = rng.range_usize(2, 16);
+        let ews = rng.range_usize(2, 8);
+        let mut ert = Ert::initial(experts, ews, true);
+        // Kill a random subset of EWs (never all).
+        let mut dead = Vec::new();
+        for ew in 0..ews as u32 {
+            if dead.len() + 1 < ews && rng.f64() < 0.4 {
+                ert.mark_dead(ew);
+                dead.push(ew);
+            }
+        }
+        for e in 0..experts {
+            match ert.resolve(e) {
+                Some(ew) => {
+                    assert!(!dead.contains(&ew), "resolved to a dead EW");
+                    assert!(ert.candidates(e).contains(&ew));
+                    // primary preferred when alive
+                    let primary = ert.candidates(e)[0];
+                    if !dead.contains(&primary) {
+                        assert_eq!(ew, primary);
+                    }
+                }
+                None => {
+                    // only possible if every candidate is dead
+                    assert!(ert.candidates(e).iter().all(|c| dead.contains(c)));
+                }
+            }
+        }
+        // A fresh table update always clears local dead-marks.
+        let v = ert.version() + 1;
+        let table = ert.table().clone();
+        assert!(ert.apply(v, table));
+        for ew in &dead {
+            assert!(!ert.is_dead(*ew));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint store invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_store_commit_never_exceeds_segments() {
+    check("store prefix commit", 150, |rng, _| {
+        let layers = rng.range_usize(1, 5);
+        let mut log = StoreLog::new(layers);
+        let positions = rng.range_usize(1, 10);
+        // Deliver segments in a random order, committing along the way.
+        let mut deliveries: Vec<(u32, u16)> = (0..positions as u32)
+            .flat_map(|p| (0..layers as u16).map(move |l| (p, l)))
+            .collect();
+        rng.shuffle(&mut deliveries);
+        for (i, (pos, layer)) in deliveries.iter().enumerate() {
+            log.segment(
+                0,
+                SegmentMsg { request: 1, pos: *pos, layer: *layer, data: vec![0.0; 4] },
+            );
+            if rng.f64() < 0.5 {
+                let upto = rng.range_usize(1, positions + 1) as u32;
+                log.commit(
+                    0,
+                    CommitMeta {
+                        request: 1,
+                        committed_pos: upto,
+                        last_token: 9,
+                        generated: upto,
+                        max_new_tokens: 1000,
+                        prompt_len: 0,
+                    },
+                );
+                // Invariant: an accepted commit implies all its segments
+                // are present.
+                if let Some(c) = log.committed(1) {
+                    let have: std::collections::HashSet<(u32, u16)> =
+                        deliveries[..=i].iter().copied().collect();
+                    for p in 0..c.committed_pos {
+                        for l in 0..layers as u16 {
+                            assert!(have.contains(&(p, l)), "commit beyond durable prefix");
+                        }
+                    }
+                }
+            }
+        }
+        // After everything arrives, a full commit must be accepted.
+        log.commit(
+            0,
+            CommitMeta {
+                request: 1,
+                committed_pos: positions as u32,
+                last_token: 1,
+                generated: positions as u32,
+                max_new_tokens: 1000,
+                prompt_len: 0,
+            },
+        );
+        assert_eq!(log.committed(1).unwrap().committed_pos, positions as u32);
+        // Restore covers exactly the committed prefix.
+        let data = log.restore_data(1).unwrap();
+        assert_eq!(data.segments.len(), positions * layers);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// KV cache / batch assembly invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_assembly_preserves_rows_and_padding() {
+    check("batch assembly", 100, |rng, _| {
+        let m = rand_model(rng);
+        let n = rng.range_usize(1, 5);
+        let bucket = n + rng.range_usize(0, 4);
+        let mut kvs: Vec<RequestKv> = Vec::new();
+        for _ in 0..n {
+            let mut kv = RequestKv::new(&m);
+            let len = rng.range_usize(0, m.max_seq);
+            for pos in 0..len {
+                let k: Vec<f32> = (0..m.kv_heads * m.head_dim).map(|_| rng.f32()).collect();
+                let v: Vec<f32> = (0..m.kv_heads * m.head_dim).map(|_| rng.f32()).collect();
+                kv.write(m.layers - 1, pos, &k, &v);
+            }
+            kv.set_len(len);
+            kvs.push(kv);
+        }
+        let mut asm = BatchAssembler::new(&m);
+        let refs: Vec<&RequestKv> = kvs.iter().collect();
+        let (kc, vc, pos) = asm.gather(&refs, m.layers - 1, bucket, m.kv_heads, m.head_dim);
+        assert_eq!(kc.shape(), &[bucket, m.max_seq, m.kv_heads, m.head_dim]);
+        assert_eq!(pos.len(), bucket);
+        let row = m.max_seq * m.kv_heads * m.head_dim;
+        for (i, kv) in kvs.iter().enumerate() {
+            assert_eq!(pos[i] as usize, kv.len());
+            // gathered rows equal the per-request cache content
+            assert_eq!(&kc.data()[i * row..(i + 1) * row], kv.k_layer(m.layers - 1));
+            assert_eq!(&vc.data()[i * row..(i + 1) * row], kv.v_layer(m.layers - 1));
+        }
+        // padding rows all zero, pos zero
+        for i in n..bucket {
+            assert_eq!(pos[i], 0);
+            assert!(kc.data()[i * row..(i + 1) * row].iter().all(|&x| x == 0.0));
+        }
+    });
+}
+
+#[test]
+fn prop_kv_segment_roundtrip() {
+    check("kv segment roundtrip", 100, |rng, _| {
+        let m = rand_model(rng);
+        let mut a = RequestKv::new(&m);
+        let mut b = RequestKv::new(&m);
+        let len = rng.range_usize(1, m.max_seq + 1);
+        for pos in 0..len {
+            for layer in 0..m.layers {
+                let k: Vec<f32> = (0..m.kv_heads * m.head_dim).map(|_| rng.f32()).collect();
+                let v: Vec<f32> = (0..m.kv_heads * m.head_dim).map(|_| rng.f32()).collect();
+                a.write(layer, pos, &k, &v);
+                // restoration path: segment-wise copy into b
+                b.write_segment(layer, pos, &a.read_segment(layer, pos));
+            }
+        }
+        a.set_len(len);
+        b.set_len(len);
+        for layer in 0..m.layers {
+            assert_eq!(a.k_layer(layer), b.k_layer(layer));
+            assert_eq!(a.v_layer(layer), b.v_layer(layer));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Bucket fitting invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bucket_fit_is_minimal_and_sufficient() {
+    check("bucket fit", 300, |rng, _| {
+        let mut buckets: Vec<usize> = (0..rng.range_usize(1, 6))
+            .map(|_| rng.range_usize(1, 300))
+            .collect();
+        buckets.sort();
+        buckets.dedup();
+        let n = rng.range_usize(1, 350);
+        match Buckets::fit(&buckets, n) {
+            Some(b) => {
+                assert!(b >= n);
+                assert!(buckets.contains(&b));
+                // minimal: no smaller bucket also fits
+                assert!(buckets.iter().all(|&x| x < n || x >= b));
+            }
+            None => assert!(buckets.iter().all(|&x| x < n)),
+        }
+    });
+}
