@@ -2,7 +2,9 @@
 //! available offline). One section per paper-relevant cost center:
 //!
 //! - ERT resolution + top-k gating + dispatch grouping (per-layer routing)
-//! - KV batch assembly (the per-layer gather on the decode path)
+//! - KV batch assembly (the per-layer gather on the decode path), paged
+//!   vs. the old contiguous max_seq layout — results land in
+//!   BENCH_kvpool.json
 //! - checkpoint segment read + streamer queueing
 //! - JSON/manifest parse (startup path)
 //! - transport post/recv round-trip
@@ -15,13 +17,64 @@ use std::time::Duration;
 use tarragon::config::TransportConfig;
 use tarragon::coordinator::ert::Ert;
 use tarragon::coordinator::router::{self, ExpertGroups};
-use tarragon::kvcache::{BatchAssembler, RequestKv};
+use tarragon::kvcache::{BatchAssembler, KvPool, RequestKv};
 use tarragon::modelcfg::ModelSpec;
 use tarragon::proto::ClusterMsg;
 use tarragon::tensor::Tensor;
-use tarragon::testing::bench::{bench, black_box};
+use tarragon::testing::bench::{bench, black_box, BenchResult};
 use tarragon::transport::{link::TrafficClass, Fabric, NodeId, Plane};
+use tarragon::util::json::{arr, num, obj, s};
 use tarragon::util::rng::Pcg;
+
+/// The seed's contiguous per-request layout (full `max_seq` K/V buffers
+/// per layer), kept here as the benchmark baseline for the paged design.
+struct ContiguousKv {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+    s_max: usize,
+    seg: usize,
+}
+
+impl ContiguousKv {
+    fn new(m: &ModelSpec) -> ContiguousKv {
+        let seg = m.kv_heads * m.head_dim;
+        ContiguousKv {
+            k: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
+            v: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
+            len: 0,
+            s_max: m.max_seq,
+            seg,
+        }
+    }
+
+    fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let off = pos * self.seg;
+        self.k[layer][off..off + self.seg].copy_from_slice(k_row);
+        self.v[layer][off..off + self.seg].copy_from_slice(v_row);
+    }
+
+    /// The seed's gather: copies every request's full max_seq buffer.
+    fn gather(reqs: &[&ContiguousKv], layer: usize, bucket: usize) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let s_max = reqs[0].s_max;
+        let seg = reqs[0].seg;
+        let row = s_max * seg;
+        let mut k_buf = vec![0.0f32; bucket * row];
+        let mut v_buf = vec![0.0f32; bucket * row];
+        let mut pos = Vec::with_capacity(bucket);
+        for (i, r) in reqs.iter().enumerate() {
+            k_buf[i * row..(i + 1) * row].copy_from_slice(&r.k[layer]);
+            v_buf[i * row..(i + 1) * row].copy_from_slice(&r.v[layer]);
+            pos.push(r.len as i32);
+        }
+        pos.resize(bucket, 0);
+        (k_buf, v_buf, pos)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        2 * self.k.len() * self.s_max * self.seg * 4
+    }
+}
 
 fn model() -> ModelSpec {
     ModelSpec {
@@ -69,28 +122,67 @@ fn main() {
     });
 
     // --- KV batch assembly (per layer per decode step) -------------------
-    let mut kvs: Vec<RequestKv> = (0..b)
-        .map(|_| {
-            let mut kv = RequestKv::new(&m);
-            kv.set_len(96);
-            kv
-        })
-        .collect();
-    for kv in kvs.iter_mut() {
-        for pos in 0..96 {
-            kv.write(0, pos, &vec![1.0; 32], &vec![2.0; 32]);
-        }
-    }
+    let pool = KvPool::for_model(&m);
+    // Fill every layer so resident-bytes comparisons reflect a real
+    // decode workload (the gather itself is still one layer per call).
+    let mk_paged = |len: usize| -> Vec<RequestKv> {
+        (0..b)
+            .map(|_| {
+                let mut kv = RequestKv::new(&m, &pool);
+                for layer in 0..m.layers {
+                    for pos in 0..len {
+                        kv.write(layer, pos, &[1.0; 32], &[2.0; 32]);
+                    }
+                }
+                kv.set_len(len);
+                kv
+            })
+            .collect()
+    };
+    let mk_contig = |len: usize| -> Vec<ContiguousKv> {
+        (0..b)
+            .map(|_| {
+                let mut kv = ContiguousKv::new(&m);
+                for layer in 0..m.layers {
+                    for pos in 0..len {
+                        kv.write(layer, pos, &[1.0; 32], &[2.0; 32]);
+                    }
+                }
+                kv.len = len;
+                kv
+            })
+            .collect()
+    };
+
     let mut asm = BatchAssembler::new(&m);
-    bench("kvcache: gather batch B=8 S=160 (one layer)", 20, 2000, || {
-        let refs: Vec<&RequestKv> = kvs.iter().collect();
-        black_box(asm.gather(&refs, 0, b, m.kv_heads, m.head_dim));
-    });
+    let mut kvpool_results: Vec<(String, BenchResult, usize)> = Vec::new();
+    for len in [16usize, 96] {
+        let kvs = mk_paged(len);
+        let paged_bytes = pool.bytes_in_use();
+        let r = bench(&format!("kvcache: paged gather B=8 len={len} (S=160)"), 20, 2000, || {
+            let refs: Vec<&RequestKv> = kvs.iter().collect();
+            black_box(asm.gather(&refs, 0, b, m.kv_heads, m.head_dim));
+        });
+        kvpool_results.push((format!("paged_len{len}"), r, paged_bytes));
+
+        let ckvs = mk_contig(len);
+        let contig_bytes: usize = ckvs.iter().map(|kv| kv.resident_bytes()).sum();
+        let r = bench(&format!("kvcache: contiguous gather B=8 len={len} (S=160)"), 20, 2000, || {
+            let refs: Vec<&ContiguousKv> = ckvs.iter().collect();
+            black_box(ContiguousKv::gather(&refs, 0, b));
+        });
+        kvpool_results.push((format!("contiguous_len{len}"), r, contig_bytes));
+    }
+    write_kvpool_report(&m, &kvpool_results);
 
     // --- checkpoint segment path ----------------------------------------
+    let kvs = mk_paged(96);
     let kv = &kvs[0];
     bench("kvcache: read one segment", 100, 10000, || {
         black_box(kv.read_segment(0, 40));
+    });
+    bench("kvcache: segment payload (Arc emit)", 100, 10000, || {
+        black_box(kv.segment_payload(0, 40));
     });
 
     // --- transport round trip ---------------------------------------------
@@ -116,4 +208,42 @@ fn main() {
     }
 
     println!("== done ==");
+}
+
+/// Record the paged-vs-contiguous comparison in BENCH_kvpool.json
+/// (written into the directory `cargo bench` runs from — the repo root).
+fn write_kvpool_report(m: &ModelSpec, results: &[(String, BenchResult, usize)]) {
+    let entries = results.iter().map(|(name, r, bytes)| {
+        obj(vec![
+            ("name", s(name)),
+            ("mean_us", num(r.mean_us)),
+            ("median_us", num(r.median_us)),
+            ("p95_us", num(r.p95_us)),
+            ("iters", num(r.iters as f64)),
+            ("resident_kv_bytes_b8", num(*bytes as f64)),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("kvcache batch assembly: paged pool vs contiguous max_seq buffers"),
+        ),
+        ("command", s("cargo bench --bench hotpath")),
+        (
+            "model",
+            obj(vec![
+                ("layers", num(m.layers as f64)),
+                ("kv_heads", num(m.kv_heads as f64)),
+                ("head_dim", num(m.head_dim as f64)),
+                ("max_seq", num(m.max_seq as f64)),
+                ("batch", num(8.0)),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_kvpool.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

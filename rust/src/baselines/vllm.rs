@@ -14,7 +14,7 @@
 //!   consistently-worse TBT/TTFT.
 
 use super::common;
-use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::kvcache::{BatchAssembler, KvPool, RequestKv};
 use crate::metrics::{EventKind, EventLog, RunAnalysis};
 use crate::modelcfg::{weights::Weights, Buckets, Manifest};
 use crate::runtime::{Device, DeviceRole};
@@ -118,6 +118,7 @@ fn run_tp(
     let hops = (opts.tp_degree as f64).log2().max(1.0);
     let coll = Duration::from_secs_f64(2.0 * opts.allreduce_latency.as_secs_f64() * hops);
 
+    let pool = KvPool::for_model(&m);
     let mut asm = BatchAssembler::new(&m);
     let mut reqs: HashMap<u64, EngineReq> = HashMap::new();
     let mut pending: VecDeque<u64> = VecDeque::new();
@@ -141,7 +142,7 @@ fn run_tp(
                 EngineReq {
                     prompt: r.prompt.clone(),
                     max_new: r.max_new_tokens as u32,
-                    kv: RequestKv::new(&m),
+                    kv: RequestKv::new(&m, &pool),
                     next_input: 0,
                     generated: 0,
                 },
@@ -268,11 +269,14 @@ fn tp_decode_step(
     let inputs: Vec<u32> = batch.iter().map(|id| reqs[id].next_input).collect();
     let mut x = embed(weights, m.hidden, &inputs, bucket);
     for layer in 0..m.layers {
-        // Split borrows: take the KVs out for the layer call.
+        // Split borrows: take the KVs out for the layer call. The
+        // placeholder is an empty page table — it allocates nothing.
         let mut kvs: Vec<&mut RequestKv> = Vec::with_capacity(b);
         let mut taken: Vec<(u64, RequestKv)> = Vec::new();
         for id in batch {
-            let kv = std::mem::replace(&mut reqs.get_mut(id).unwrap().kv, RequestKv::new(m));
+            let slot = &mut reqs.get_mut(id).unwrap().kv;
+            let placeholder = RequestKv::new(m, slot.pool());
+            let kv = std::mem::replace(slot, placeholder);
             taken.push((*id, kv));
         }
         for (_, kv) in taken.iter_mut() {
@@ -353,11 +357,15 @@ fn run_pp(
     let mut stage_rxs = vec![first_rx];
     stage_rxs.extend(rxs);
 
+    // One shared page arena for all stages (each stage only pages in its
+    // own layer, so the arena grows to exactly the live KV volume).
+    let pool = KvPool::for_model(&m);
     for (s, rx) in stage_rxs.into_iter().enumerate() {
         let device = devices.remove(0);
         let next_tx = senders[s + 1].clone();
         let manifest = manifest.clone();
         let model = m.clone();
+        let pool = pool.clone();
         stage_threads.push(
             std::thread::Builder::new()
                 .name(format!("pp-stage{s}"))
@@ -375,7 +383,9 @@ fn run_pp(
                                 let _ = next_tx.send(PpJob::Retire { id });
                             }
                             PpJob::Prefill { id, x, p_len, bucket } => {
-                                let kv = kvs.entry(id).or_insert_with(|| RequestKv::new(&model));
+                                let kv = kvs
+                                    .entry(id)
+                                    .or_insert_with(|| RequestKv::new(&model, &pool));
                                 // Each stage holds only its own layer (layer
                                 // index == stage index here).
                                 let out = common::local_prefill_layer(
@@ -391,7 +401,7 @@ fn run_pp(
                                 for id in &batch {
                                     let kv = kvs
                                         .remove(id)
-                                        .unwrap_or_else(|| RequestKv::new(&model));
+                                        .unwrap_or_else(|| RequestKv::new(&model, &pool));
                                     taken.push((*id, kv));
                                 }
                                 for (_, kv) in taken.iter_mut() {

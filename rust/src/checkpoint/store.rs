@@ -10,13 +10,15 @@
 //! unit-tested without threads; the service loop in `cluster` drives it
 //! from fabric messages.
 
-use crate::proto::{ClusterMsg, CommitMeta, RestoreData, SegmentMsg};
-use std::collections::HashMap;
+use crate::proto::{ClusterMsg, CommitMeta, RestoreData, SegPayload, SegmentMsg};
+use std::collections::{HashMap, HashSet};
 
 #[derive(Debug, Default)]
 struct RequestLog {
-    /// (pos, layer) -> segment data (K||V).
-    segments: HashMap<(u32, u16), Vec<f32>>,
+    /// (pos, layer) -> shared segment payload (K||V). The `Arc` is the
+    /// same allocation the AW's streamer emitted — ingest never copies
+    /// floats, and neither does building a restore reply.
+    segments: HashMap<(u32, u16), SegPayload>,
     /// Latest accepted commit.
     committed: Option<CommitMeta>,
     /// Commits held back because segments were missing (replayed on the
@@ -31,11 +33,18 @@ struct RequestLog {
 pub struct StoreLog {
     layers: u16,
     reqs: HashMap<u64, RequestLog>,
+    /// Requests reclaimed via [`StoreLog::forget`]. Straggler segments and
+    /// commits for these must not resurrect a log entry, or finished
+    /// requests would leak segment payloads forever. (The tombstone itself
+    /// is 8 bytes per request — negligible next to the payloads it guards.)
+    finished: HashSet<u64>,
     /// Counters for the §7.4 experiments.
     pub segments_received: u64,
     pub commits_accepted: u64,
     pub commits_deferred: u64,
     pub bytes_received: u64,
+    /// Straggler messages dropped against a tombstone.
+    pub stragglers_dropped: u64,
 }
 
 impl StoreLog {
@@ -45,6 +54,10 @@ impl StoreLog {
 
     /// Ingest one segment write.
     pub fn segment(&mut self, owner_aw: u32, s: SegmentMsg) {
+        if self.finished.contains(&s.request) {
+            self.stragglers_dropped += 1;
+            return;
+        }
         self.segments_received += 1;
         self.bytes_received += (s.data.len() * 4) as u64;
         let r = self.reqs.entry(s.request).or_default();
@@ -68,6 +81,10 @@ impl StoreLog {
 
     /// Ingest a commit record.
     pub fn commit(&mut self, owner_aw: u32, c: CommitMeta) {
+        if self.finished.contains(&c.request) {
+            self.stragglers_dropped += 1;
+            return;
+        }
         let layers = self.layers;
         let r = self.reqs.entry(c.request).or_default();
         r.owner_aw = owner_aw;
@@ -143,13 +160,28 @@ impl StoreLog {
         Some(RestoreData { meta, segments })
     }
 
-    /// Drop a finished request's state (bucket reclamation).
+    /// Drop a finished request's state (bucket reclamation) and tombstone
+    /// it so in-flight stragglers can't resurrect the log entry.
     pub fn forget(&mut self, request: u64) {
         self.reqs.remove(&request);
+        self.finished.insert(request);
     }
 
     pub fn num_requests(&self) -> usize {
         self.reqs.len()
+    }
+
+    /// Resident segment payload bytes across all request logs.
+    pub fn resident_bytes(&self) -> usize {
+        self.reqs
+            .values()
+            .map(|r| r.segments.values().map(|d| d.len() * 4).sum::<usize>())
+            .sum()
+    }
+
+    /// The shared payload of one logged segment (tests / introspection).
+    pub fn segment_data(&self, request: u64, pos: u32, layer: u16) -> Option<SegPayload> {
+        self.reqs.get(&request)?.segments.get(&(pos, layer)).cloned()
     }
 }
 
@@ -188,6 +220,14 @@ impl CkptStore {
                 }
                 vec![]
             }
+            ClusterMsg::ReqFinished { request } => {
+                // Gateway-reported end-of-request: reclaim the segment log
+                // and commit records (bounded store memory).
+                if from == NodeId::Gateway {
+                    self.log.forget(request);
+                }
+                vec![]
+            }
             ClusterMsg::RestorePull { request } => {
                 if let Some(data) = self.log.restore_data(request) {
                     if let NodeId::Aw(aw) = from {
@@ -212,7 +252,12 @@ mod tests {
     use super::*;
 
     fn seg(req: u64, pos: u32, layer: u16) -> SegmentMsg {
-        SegmentMsg { request: req, pos, layer, data: vec![pos as f32 + layer as f32; 8] }
+        SegmentMsg {
+            request: req,
+            pos,
+            layer,
+            data: std::sync::Arc::new(vec![pos as f32 + layer as f32; 8]),
+        }
     }
 
     fn commit(req: u64, pos: u32, gen: u32) -> CommitMeta {
@@ -322,6 +367,44 @@ mod tests {
         // Ownership moved
         assert!(store.log.active_of(0).is_empty());
         assert_eq!(store.log.active_of(3).len(), 1);
+    }
+
+    #[test]
+    fn ingest_and_restore_share_the_emitted_payload() {
+        let mut log = StoreLog::new(1);
+        let s = seg(1, 0, 0);
+        let emitted = s.data.clone();
+        log.segment(0, s);
+        // Ingest kept the emitted allocation, not a copy.
+        let stored = log.segment_data(1, 0, 0).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&emitted, &stored));
+        // The restore reply shares it too.
+        log.commit(0, commit(1, 1, 1));
+        let data = log.restore_data(1).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&emitted, &data.segments[0].2));
+    }
+
+    #[test]
+    fn gateway_finish_reclaims_and_blocks_stragglers() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(1);
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(5, 0, 0)));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(5, 1, 1)));
+        assert_eq!(store.log.num_requests(), 1);
+        assert!(store.log.resident_bytes() > 0);
+        // Gateway reports the request finished: state is dropped.
+        store.handle(NodeId::Gateway, ClusterMsg::ReqFinished { request: 5 });
+        assert_eq!(store.log.num_requests(), 0);
+        assert_eq!(store.log.resident_bytes(), 0);
+        // A straggler segment/commit must not resurrect the log entry.
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(5, 1, 0)));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(5, 2, 2)));
+        assert_eq!(store.log.num_requests(), 0);
+        assert_eq!(store.log.stragglers_dropped, 2);
+        // Only the gateway may reclaim.
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(6, 0, 0)));
+        store.handle(NodeId::Aw(1), ClusterMsg::ReqFinished { request: 6 });
+        assert_eq!(store.log.num_requests(), 1);
     }
 
     #[test]

@@ -126,7 +126,7 @@ mod tests {
     }
 
     fn seg(pos: u32) -> SegmentMsg {
-        SegmentMsg { request: 1, pos, layer: 0, data: vec![0.0; 64] }
+        SegmentMsg { request: 1, pos, layer: 0, data: Arc::new(vec![0.0; 64]) }
     }
 
     #[test]
@@ -190,6 +190,32 @@ mod tests {
         assert!(n >= 3, "over-cap items must flush despite busy link, n={n}");
         assert!(s.forced_flushes > 0);
         assert!(s.pending() <= 2);
+    }
+
+    #[test]
+    fn zero_payload_copies_from_emit_to_store_ingest() {
+        use crate::checkpoint::store::StoreLog;
+        let (_f, inbox, qp, egress) = mk_fabric(1e9);
+        let mut s = CkptStreamer::new(true, 1000);
+        let emitted: crate::proto::SegPayload = Arc::new(vec![7.0; 64]);
+        s.push_segment(SegmentMsg { request: 9, pos: 0, layer: 0, data: emitted.clone() });
+        for _ in 0..100 {
+            s.flush(&qp, &egress);
+            if s.pending() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        let env = inbox.recv(Duration::from_millis(100)).unwrap();
+        let ClusterMsg::CkptSegment(msg) = env.msg else { panic!("expected segment") };
+        // The wire delivered the very allocation the streamer emitted...
+        assert!(Arc::ptr_eq(&emitted, &msg.data));
+        // ...and store ingest logs that same allocation (§6.1 path is
+        // copy-free past the initial page read-out).
+        let mut log = StoreLog::new(1);
+        log.segment(0, msg);
+        let stored = log.segment_data(9, 0, 0).unwrap();
+        assert!(Arc::ptr_eq(&emitted, &stored));
     }
 
     #[test]

@@ -8,14 +8,43 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Duration;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("{0}")]
-    Toml(#[from] toml::TomlError),
-    #[error("invalid config: {0}")]
+    Io(std::io::Error),
+    Toml(toml::TomlError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io error: {e}"),
+            ConfigError::Toml(e) => write!(f, "{e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            ConfigError::Toml(e) => Some(e),
+            ConfigError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
+}
+
+impl From<toml::TomlError> for ConfigError {
+    fn from(e: toml::TomlError) -> ConfigError {
+        ConfigError::Toml(e)
+    }
 }
 
 /// Cluster layout (paper §7.1: 8 AWs + 8 EWs; checkpoint store on its own

@@ -22,7 +22,7 @@ use super::refe::{Refe, RefeError};
 use super::router::{self, ExpertGroups};
 use crate::config::Config;
 use crate::coordinator::ert::Ert;
-use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::kvcache::{BatchAssembler, KvPool, RequestKv};
 use crate::modelcfg::{weights::Weights, Buckets, Manifest};
 use crate::proto::{ClusterMsg, CommitMeta, RequestMeta, SegmentMsg, HDR_BYTES};
 use crate::runtime::{ArgValue, Device, DeviceRole};
@@ -41,6 +41,10 @@ pub struct AwParams {
     pub manifest: Arc<Manifest>,
     pub weights: Weights,
     pub fabric: Arc<Fabric<ClusterMsg>>,
+    /// KV page arena. Owned by the host slot, not the worker thread, so a
+    /// respawned AW (coarse restart, provisioning) starts with a warm
+    /// arena instead of re-growing it.
+    pub pool: Arc<KvPool>,
     pub stop: Arc<AtomicBool>,
 }
 
@@ -72,6 +76,7 @@ pub struct AwWorker {
     streamer: CkptStreamer,
     store_qp: Qp<ClusterMsg>,
     gw_qp: Qp<ClusterMsg>,
+    pool: Arc<KvPool>,
     reqs: HashMap<u64, Req>,
     prefill_q: VecDeque<u64>,
     active: VecDeque<u64>,
@@ -135,6 +140,7 @@ impl AwWorker {
             streamer,
             store_qp,
             gw_qp,
+            pool: p.pool,
             reqs: HashMap::new(),
             prefill_q: VecDeque::new(),
             active: VecDeque::new(),
@@ -222,7 +228,7 @@ impl AwWorker {
             };
             for layer in 0..layers {
                 for pos in 0..len {
-                    let data = self.reqs[&id].kv.read_segment(layer, pos);
+                    let data = self.reqs[&id].kv.segment_payload(layer, pos);
                     let msg = ClusterMsg::CkptSegment(SegmentMsg {
                         request: id,
                         pos: pos as u32,
@@ -256,7 +262,7 @@ impl AwWorker {
         match env.msg {
             ClusterMsg::NewRequest(meta) => {
                 let id = meta.id;
-                let kv = RequestKv::new(&self.manifest.model);
+                let kv = RequestKv::new(&self.manifest.model, &self.pool);
                 self.reqs.insert(
                     id,
                     Req { meta, kv, phase: ReqPhase::Prefill, next_input: 0, generated: 0 },
@@ -288,9 +294,11 @@ impl AwWorker {
         if self.reqs.contains_key(&meta.request) {
             return; // duplicate restore (idempotent)
         }
-        let mut kv = RequestKv::new(m);
+        // Pages are allocated for exactly the committed prefix — restore
+        // cost scales with the sequence, not with `max_seq`.
+        let mut kv = RequestKv::new(m, &self.pool);
         for (pos, layer, seg) in &data.segments {
-            kv.write_segment(*layer as usize, *pos as usize, seg);
+            kv.write_segment(*layer as usize, *pos as usize, seg.as_slice());
         }
         kv.set_len(meta.committed_pos as usize);
         let id = meta.request;
@@ -349,12 +357,16 @@ impl AwWorker {
                 let req = self.reqs.get_mut(&id).unwrap();
                 for pos in 0..p_len {
                     req.kv.write(layer, pos, k.row(pos), v.row(pos));
-                    self.streamer.push_segment(SegmentMsg {
-                        request: id,
-                        pos: pos as u32,
-                        layer: layer as u16,
-                        data: req.kv.read_segment(layer, pos),
-                    });
+                    // Materializing a payload costs a pool read-back +
+                    // allocation — skip it entirely when not checkpointing.
+                    if self.streamer.enabled {
+                        self.streamer.push_segment(SegmentMsg {
+                            request: id,
+                            pos: pos as u32,
+                            layer: layer as u16,
+                            data: req.kv.segment_payload(layer, pos),
+                        });
+                    }
                 }
             }
             // Route + expert I/O on the valid rows.
@@ -452,12 +464,14 @@ impl AwWorker {
                 let req = self.reqs.get_mut(id).unwrap();
                 let cur = req.kv.len();
                 req.kv.write(layer, cur, k_new.row(i), v_new.row(i));
-                self.streamer.push_segment(SegmentMsg {
-                    request: *id,
-                    pos: cur as u32,
-                    layer: layer as u16,
-                    data: req.kv.read_segment(layer, cur),
-                });
+                if self.streamer.enabled {
+                    self.streamer.push_segment(SegmentMsg {
+                        request: *id,
+                        pos: cur as u32,
+                        layer: layer as u16,
+                        data: req.kv.segment_payload(layer, cur),
+                    });
+                }
             }
             // Route + expert I/O.
             let probs = self

@@ -9,6 +9,7 @@ use super::gateway::{self, GatewayParams, GatewayShared};
 use super::orchestrator::{self, OrchParams, OrchState, RecoveryMode};
 use crate::checkpoint::store::CkptStore;
 use crate::config::Config;
+use crate::kvcache::KvPool;
 use crate::metrics::{EventLog, RunAnalysis};
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
@@ -30,6 +31,10 @@ pub struct Spawner {
     pub cfg: Config,
     pub stop: Arc<AtomicBool>,
     registry: Mutex<HashMap<NodeId, WorkerCtl>>,
+    /// Per-AW-slot KV page arenas. The arena belongs to the host slot,
+    /// not the worker thread: a respawned AW (coarse restart,
+    /// provisioning) reuses the already-grown arena — warm restore.
+    kv_pools: Mutex<HashMap<u32, Arc<KvPool>>>,
 }
 
 struct WorkerCtl {
@@ -43,6 +48,13 @@ impl Spawner {
         if self.stop.load(Ordering::Relaxed) {
             return Err("cluster stopping".into());
         }
+        let pool = self
+            .kv_pools
+            .lock()
+            .unwrap()
+            .entry(idx)
+            .or_insert_with(|| KvPool::for_model(&self.manifest.model))
+            .clone();
         let (thread, device) = aw::spawn(AwParams {
             idx,
             cfg: self.cfg.clone(),
@@ -50,6 +62,7 @@ impl Spawner {
             manifest: self.manifest.clone(),
             weights: self.weights.clone(),
             fabric: self.fabric.clone(),
+            pool,
             stop: self.stop.clone(),
         });
         self.registry
@@ -98,6 +111,11 @@ impl Spawner {
 
     pub fn device_of(&self, node: NodeId) -> Option<Device> {
         self.registry.lock().unwrap().get(&node).map(|c| c.device.clone())
+    }
+
+    /// The KV page arena of an AW slot (experiments/introspection).
+    pub fn kv_pool_of(&self, idx: u32) -> Option<Arc<KvPool>> {
+        self.kv_pools.lock().unwrap().get(&idx).cloned()
     }
 
     /// Post an admin message as the orchestrator (provisioning threads).
@@ -182,6 +200,7 @@ impl Cluster {
             cfg: cfg.clone(),
             stop: stop.clone(),
             registry: Mutex::new(HashMap::new()),
+            kv_pools: Mutex::new(HashMap::new()),
         });
 
         // --- checkpoint store service (its own node, §7.1) -------------

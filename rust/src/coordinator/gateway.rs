@@ -74,6 +74,7 @@ fn gateway_main(p: GatewayParams) {
     let inbox = &p.inbox;
     let mut qps: HashMap<u32, Qp<ClusterMsg>> = HashMap::new();
     let mut orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
+    let store_qp = p.fabric.qp(NodeId::Gateway, NodeId::Store, Plane::Control).ok();
     let mut aws = p.initial_aws.clone();
     let mut rr = 0usize;
     let mut reqs: HashMap<u64, GwReq> = HashMap::new();
@@ -136,6 +137,15 @@ fn gateway_main(p: GatewayParams) {
                             r.finished = true;
                             p.events.record(EventKind::Finished, request, 0, worker);
                             p.shared.inner.lock().unwrap().finished += 1;
+                            // Let the checkpoint store reclaim the
+                            // request's segment log (bounded memory).
+                            if let Some(q) = store_qp.as_ref() {
+                                let _ = q.post(
+                                    ClusterMsg::ReqFinished { request },
+                                    crate::proto::HDR_BYTES,
+                                    TrafficClass::Admin,
+                                );
+                            }
                         }
                     }
                 }

@@ -22,20 +22,31 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RefeError {
     /// No live candidate EW for an expert: with a static ERT this is the
     /// global stall (baseline); with dynamic ERT it means primary+shadows
     /// all died before reprovisioning.
-    #[error("expert {expert} unroutable (candidates exhausted)")]
     Unroutable { expert: usize },
     /// The collective wait exceeded the CCL abort budget (baselines).
-    #[error("communicator timeout after {0:?}")]
     CclAbort(Duration),
     /// The local node died (fail-stop of this AW).
-    #[error("local node down")]
     LocalDown,
 }
+
+impl std::fmt::Display for RefeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RefeError::Unroutable { expert } => {
+                write!(f, "expert {expert} unroutable (candidates exhausted)")
+            }
+            RefeError::CclAbort(d) => write!(f, "communicator timeout after {d:?}"),
+            RefeError::LocalDown => write!(f, "local node down"),
+        }
+    }
+}
+
+impl std::error::Error for RefeError {}
 
 pub struct Refe {
     aw: u32,

@@ -16,7 +16,7 @@ use crate::baselines::common as bcommon;
 use crate::config::{Config, WorkloadKind};
 use crate::coordinator::cluster::{Cluster, LaunchOptions};
 use crate::experiments::common::{artifacts, write_csv};
-use crate::kvcache::RequestKv;
+use crate::kvcache::{KvPool, RequestKv};
 use crate::modelcfg::Buckets;
 use crate::proto::HDR_BYTES;
 use crate::runtime::{Device, DeviceRole};
@@ -30,6 +30,7 @@ pub fn run(failure_points: &[usize]) {
     println!("Fig 12: restoration strategies vs failure point");
     let (manifest, weights) = artifacts();
     let m = manifest.model.clone();
+    let pool = KvPool::for_model(&m);
     let prompt: Vec<u32> = (1..=8).collect();
 
     // Replay executor (one device, plays the role of the alternate AW).
@@ -47,7 +48,7 @@ pub fn run(failure_points: &[usize]) {
         // ---------------- sequential replay ----------------
         let busy0 = device.stats().unwrap().total_busy();
         let t0 = Instant::now();
-        let mut kv = RequestKv::new(&m);
+        let mut kv = RequestKv::new(&m, &pool);
         let bucket = Buckets::fit(&manifest.buckets.prefill_t, prompt.len()).unwrap();
         let mut x = embed(&weights, m.hidden, &prompt, bucket);
         for layer in 0..m.layers {
@@ -81,7 +82,7 @@ pub fn run(failure_points: &[usize]) {
             if let Some(bucket) = Buckets::fit(&manifest.buckets.prefill_t, total) {
                 let busy0 = device.stats().unwrap().total_busy();
                 let t0 = Instant::now();
-                let mut kv2 = RequestKv::new(&m);
+                let mut kv2 = RequestKv::new(&m, &pool);
                 // prompt + i generated tokens (ids don't affect cost)
                 let mut ids = prompt.clone();
                 ids.extend((0..i as u32).map(|k| (k % 100) + 1));

@@ -15,7 +15,7 @@
 use crate::baselines::common as bcommon;
 use crate::costmodel::Params;
 use crate::experiments::common::{artifacts, results_dir, write_csv};
-use crate::kvcache::{BatchAssembler, RequestKv};
+use crate::kvcache::{BatchAssembler, KvPool, RequestKv};
 use crate::runtime::{Device, DeviceRole};
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, Json};
@@ -72,7 +72,8 @@ pub fn run(extra_init: Duration) -> Table1 {
     let reps = 20;
     let p_len = 96;
     let bucket = p_len;
-    let mut kv = RequestKv::new(&m);
+    let pool = KvPool::for_model(&m);
+    let mut kv = RequestKv::new(&m, &pool);
     let x = Tensor::zeros(vec![bucket, m.hidden]);
     // warmup + measure prefill layer
     let _ = bcommon::local_prefill_layer(&mono, &manifest, &mut kv, 0, &x, bucket, p_len);
@@ -87,7 +88,7 @@ pub fn run(extra_init: Duration) -> Table1 {
     let b = 8;
     let mut kvs_store: Vec<RequestKv> = (0..b)
         .map(|_| {
-            let mut kv = RequestKv::new(&m);
+            let mut kv = RequestKv::new(&m, &pool);
             kv.set_len(64);
             kv
         })

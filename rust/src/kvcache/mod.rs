@@ -1,26 +1,34 @@
-//! Per-request KV cache management on the Attention Worker.
+//! Per-request KV cache management on the Attention Worker — paged.
 //!
-//! Layout mirrors what the decode artifact consumes: per layer, two
-//! contiguous `[S, kv_heads, head_dim]` f32 regions (K and V), with a
-//! valid-prefix length shared by all layers. A "segment" — the unit of
-//! incremental checkpointing (§6.1) and restoration (§6.2) — is one
-//! (token, layer)'s K and V vectors concatenated: `2 * kv_heads * head_dim`
-//! floats.
+//! KV memory is block-pool allocated (see [`pool`]): a [`RequestKv`] is a
+//! per-layer *page table* into a shared [`KvPool`] arena instead of a
+//! contiguous `max_seq × kv_heads × head_dim` preallocation, so resident
+//! memory scales with the actual sequence length and a finished request's
+//! pages are immediately reusable. A "segment" — the unit of incremental
+//! checkpointing (§6.1) and restoration (§6.2) — is one (token, layer)'s
+//! K and V vectors concatenated (`2 * kv_heads * head_dim` floats) and is
+//! exactly one page slot, so segment read/restore is a single slice copy.
 //!
-//! [`BatchAssembler`] gathers per-request caches into the batched
-//! `[B, S, kv, d]` tensors of a decode step with a single copy per layer
-//! (the buffers are handed to the device, so the copy is unavoidable; the
-//! perf pass removed the second copy a scratch-buffer design had).
+//! [`BatchAssembler`] gathers the *valid prefix* of each request's pages
+//! into the batched `[B, S, kv, d]` tensors of a decode step — one copy
+//! per layer, and only `len` tokens of it per request rather than
+//! `max_seq` (the decode artifact masks by the pos vector, so the padded
+//! tail only ever needs to be zero).
+
+pub mod pool;
+
+pub use pool::{KvPool, PageId, PoolConfig, DEFAULT_PAGE_TOKENS};
 
 use crate::modelcfg::ModelSpec;
+use crate::proto::SegPayload;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
-/// Per-request KV cache across all layers.
-#[derive(Debug, Clone)]
+/// Per-request KV cache across all layers, backed by pool pages.
 pub struct RequestKv {
-    /// Per layer: K then V, each `s_max * seg` floats.
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    pool: Arc<KvPool>,
+    /// Per layer: pages covering positions `[0, pages.len() * page_tokens)`.
+    tables: Vec<Vec<PageId>>,
     /// Valid positions [0, len).
     len: usize,
     s_max: usize,
@@ -28,12 +36,30 @@ pub struct RequestKv {
     seg: usize,
 }
 
+impl std::fmt::Debug for RequestKv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestKv")
+            .field("len", &self.len)
+            .field("pages", &self.allocated_pages())
+            .field("layers", &self.tables.len())
+            .finish()
+    }
+}
+
 impl RequestKv {
-    pub fn new(m: &ModelSpec) -> RequestKv {
+    /// An empty cache: no pages are allocated until positions are written.
+    pub fn new(m: &ModelSpec, pool: &Arc<KvPool>) -> RequestKv {
         let seg = m.kv_heads * m.head_dim;
+        assert_eq!(
+            seg,
+            pool.row_elems(),
+            "pool geometry does not match the model (seg {} vs {})",
+            pool.row_elems(),
+            seg
+        );
         RequestKv {
-            k: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
-            v: (0..m.layers).map(|_| vec![0.0; m.max_seq * seg]).collect(),
+            pool: pool.clone(),
+            tables: vec![Vec::new(); m.layers],
             len: 0,
             s_max: m.max_seq,
             seg,
@@ -49,7 +75,7 @@ impl RequestKv {
     }
 
     pub fn layers(&self) -> usize {
-        self.k.len()
+        self.tables.len()
     }
 
     /// Elements in one K or V row.
@@ -62,32 +88,67 @@ impl RequestKv {
         2 * self.seg * 4
     }
 
+    /// The arena this cache allocates from.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Pages currently allocated to this request (all layers).
+    pub fn allocated_pages(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    /// Resident bytes of this request's KV state.
+    pub fn resident_bytes(&self) -> usize {
+        self.allocated_pages() * self.pool.page_floats() * 4
+    }
+
+    /// (page, slot) of a position, allocating pages on demand.
+    fn locate_mut(&mut self, layer: usize, pos: usize) -> (PageId, usize) {
+        let pt = self.pool.page_tokens();
+        let page_idx = pos / pt;
+        let table = &mut self.tables[layer];
+        while table.len() <= page_idx {
+            table.push(self.pool.alloc());
+        }
+        (table[page_idx], pos % pt)
+    }
+
+    fn locate(&self, layer: usize, pos: usize) -> (PageId, usize) {
+        let pt = self.pool.page_tokens();
+        let page_idx = pos / pt;
+        (self.tables[layer][page_idx], pos % pt)
+    }
+
     /// Write K/V for position `pos` of `layer` (decode append or prefill
     /// bulk write). Does NOT advance `len` — call `set_len` once all layers
     /// for a position are written (the per-step commit point).
     pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         assert!(pos < self.s_max, "kv overflow: pos {pos} >= {}", self.s_max);
-        assert_eq!(k_row.len(), self.seg);
-        assert_eq!(v_row.len(), self.seg);
-        let off = pos * self.seg;
-        self.k[layer][off..off + self.seg].copy_from_slice(k_row);
-        self.v[layer][off..off + self.seg].copy_from_slice(v_row);
+        let (page, slot) = self.locate_mut(layer, pos);
+        self.pool.write_rows(page, slot, k_row, v_row);
     }
 
     /// Install a checkpoint segment (K||V concatenated), restoration path.
+    /// Allocates exactly the pages the restored prefix needs.
     pub fn write_segment(&mut self, layer: usize, pos: usize, seg_data: &[f32]) {
+        assert!(pos < self.s_max, "kv overflow: pos {pos} >= {}", self.s_max);
         assert_eq!(seg_data.len(), 2 * self.seg, "bad segment size");
-        let (kr, vr) = seg_data.split_at(self.seg);
-        self.write(layer, pos, kr, vr);
+        let (page, slot) = self.locate_mut(layer, pos);
+        self.pool.write_segment(page, slot, seg_data);
     }
 
     /// Read one segment back (K||V) — the checkpoint streamer's source.
     pub fn read_segment(&self, layer: usize, pos: usize) -> Vec<f32> {
-        let off = pos * self.seg;
-        let mut out = Vec::with_capacity(2 * self.seg);
-        out.extend_from_slice(&self.k[layer][off..off + self.seg]);
-        out.extend_from_slice(&self.v[layer][off..off + self.seg]);
-        out
+        let (page, slot) = self.locate(layer, pos);
+        self.pool.read_segment(page, slot)
+    }
+
+    /// Read one segment as a shared checkpoint payload. This is the single
+    /// copy on the checkpoint path: the returned `Arc` travels through the
+    /// streamer, the wire, and the store log without further cloning.
+    pub fn segment_payload(&self, layer: usize, pos: usize) -> SegPayload {
+        Arc::new(self.read_segment(layer, pos))
     }
 
     pub fn set_len(&mut self, len: usize) {
@@ -95,18 +156,97 @@ impl RequestKv {
         self.len = len;
     }
 
-    pub fn k_layer(&self, layer: usize) -> &[f32] {
-        &self.k[layer]
+    /// Copy the valid prefix (`len` tokens) of one layer into K / V
+    /// destinations of `s_max * seg` floats each (batch-assembly rows).
+    /// Positions beyond `len` are left untouched.
+    pub fn copy_layer_into(&self, layer: usize, k_dst: &mut [f32], v_dst: &mut [f32]) {
+        assert!(k_dst.len() >= self.len * self.seg);
+        assert!(v_dst.len() >= self.len * self.seg);
+        let pt = self.pool.page_tokens();
+        let mut remaining = self.len;
+        for (i, &page) in self.tables[layer].iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            let tokens = remaining.min(pt);
+            let off = i * pt * self.seg;
+            self.pool.copy_rows_into(
+                page,
+                tokens,
+                &mut k_dst[off..off + tokens * self.seg],
+                &mut v_dst[off..off + tokens * self.seg],
+            );
+            remaining -= tokens;
+        }
     }
 
-    pub fn v_layer(&self, layer: usize) -> &[f32] {
-        &self.v[layer]
+    /// Materialize the valid K and V prefixes of a layer in one pass
+    /// (`len * seg` floats each). Debug/test helper — the hot path uses
+    /// `copy_layer_into`.
+    pub fn layer_vecs(&self, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = vec![0.0; self.len * self.seg];
+        let mut v = vec![0.0; self.len * self.seg];
+        self.copy_layer_into(layer, &mut k, &mut v);
+        (k, v)
+    }
+
+    /// Materialize the valid K prefix of a layer (`len * seg` floats).
+    pub fn k_layer_vec(&self, layer: usize) -> Vec<f32> {
+        self.layer_vecs(layer).0
+    }
+
+    /// Materialize the valid V prefix of a layer (`len * seg` floats).
+    pub fn v_layer_vec(&self, layer: usize) -> Vec<f32> {
+        self.layer_vecs(layer).1
     }
 }
 
-/// Batched KV gather for decode steps. Writes each request's cache
-/// directly into the output tensors — one copy, no intermediate scratch
-/// (perf pass: the gather runs once per layer per decode step).
+impl Drop for RequestKv {
+    fn drop(&mut self) {
+        for table in &self.tables {
+            for &page in table {
+                self.pool.free(page);
+            }
+        }
+    }
+}
+
+impl Clone for RequestKv {
+    /// Deep copy: allocates fresh pages and copies every allocated slot
+    /// (not just the valid prefix — in-flight positions above `len` are
+    /// preserved too).
+    fn clone(&self) -> RequestKv {
+        let pt = self.pool.page_tokens();
+        let tables = self
+            .tables
+            .iter()
+            .map(|table| {
+                table
+                    .iter()
+                    .map(|&src| {
+                        let dst = self.pool.alloc();
+                        for slot in 0..pt {
+                            let data = self.pool.read_segment(src, slot);
+                            self.pool.write_segment(dst, slot, &data);
+                        }
+                        dst
+                    })
+                    .collect()
+            })
+            .collect();
+        RequestKv {
+            pool: self.pool.clone(),
+            tables,
+            len: self.len,
+            s_max: self.s_max,
+            seg: self.seg,
+        }
+    }
+}
+
+/// Batched KV gather for decode steps. Writes each request's valid page
+/// prefix directly into the output tensors — one copy, no intermediate
+/// scratch, and no `max_seq` over-copy for short sequences.
 pub struct BatchAssembler {
     s_max: usize,
     seg: usize,
@@ -118,8 +258,9 @@ impl BatchAssembler {
     }
 
     /// Gather `layer`'s caches of `reqs` into [B, S, kv, d] K/V tensors
-    /// (B = bucket size; rows past reqs.len() are zero-padded) plus the
-    /// pos vector. kv_shape = [bucket, S, kv_heads, head_dim].
+    /// (B = bucket size; rows past reqs.len() and positions past each
+    /// request's `len` are zero) plus the pos vector.
+    /// kv_shape = [bucket, S, kv_heads, head_dim].
     pub fn gather(
         &mut self,
         reqs: &[&RequestKv],
@@ -134,8 +275,11 @@ impl BatchAssembler {
         let mut v_buf = vec![0.0f32; bucket * row];
         let mut pos = Vec::with_capacity(bucket);
         for (i, r) in reqs.iter().enumerate() {
-            k_buf[i * row..(i + 1) * row].copy_from_slice(r.k_layer(layer));
-            v_buf[i * row..(i + 1) * row].copy_from_slice(r.v_layer(layer));
+            r.copy_layer_into(
+                layer,
+                &mut k_buf[i * row..(i + 1) * row],
+                &mut v_buf[i * row..(i + 1) * row],
+            );
             pos.push(r.len() as i32);
         }
         pos.resize(bucket, 0);
@@ -166,7 +310,8 @@ mod tests {
     #[test]
     fn write_read_roundtrip() {
         let m = spec();
-        let mut kv = RequestKv::new(&m);
+        let pool = KvPool::for_model(&m);
+        let mut kv = RequestKv::new(&m, &pool);
         assert_eq!(kv.segment_bytes(), m.kv_segment_bytes());
         let k = [1.0, 2.0, 3.0, 4.0];
         let v = [5.0, 6.0, 7.0, 8.0];
@@ -181,10 +326,11 @@ mod tests {
     #[test]
     fn segment_roundtrip_via_restore_path() {
         let m = spec();
-        let mut a = RequestKv::new(&m);
+        let pool = KvPool::for_model(&m);
+        let mut a = RequestKv::new(&m, &pool);
         a.write(0, 2, &[9.0; 4], &[8.0; 4]);
         let seg = a.read_segment(0, 2);
-        let mut b = RequestKv::new(&m);
+        let mut b = RequestKv::new(&m, &pool);
         b.write_segment(0, 2, &seg);
         b.set_len(3);
         assert_eq!(b.read_segment(0, 2), seg);
@@ -194,17 +340,51 @@ mod tests {
     #[should_panic(expected = "kv overflow")]
     fn overflow_panics() {
         let m = spec();
-        let mut kv = RequestKv::new(&m);
+        let pool = KvPool::for_model(&m);
+        let mut kv = RequestKv::new(&m, &pool);
         kv.write(0, 6, &[0.0; 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn pages_allocate_on_demand_and_free_on_drop() {
+        let m = spec(); // max_seq 6 => page_tokens 6 (clamped)
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut kv = RequestKv::new(&m, &pool);
+        assert_eq!(pool.pages_in_use(), 0, "empty cache must hold no pages");
+        kv.write(0, 0, &[1.0; 4], &[1.0; 4]);
+        assert_eq!(pool.pages_in_use(), 1);
+        kv.write(0, 3, &[2.0; 4], &[2.0; 4]); // page 1 of layer 0 (+ page 0 already there)
+        assert_eq!(pool.pages_in_use(), 2);
+        kv.write(1, 0, &[3.0; 4], &[3.0; 4]);
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(kv.allocated_pages(), 3);
+        drop(kv);
+        assert_eq!(pool.pages_in_use(), 0, "drop must return every page");
+    }
+
+    #[test]
+    fn clone_deep_copies_pages() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut a = RequestKv::new(&m, &pool);
+        a.write(0, 0, &[1.0; 4], &[2.0; 4]);
+        a.set_len(1);
+        let b = a.clone();
+        assert_eq!(pool.pages_in_use(), 2);
+        a.write(0, 0, &[9.0; 4], &[9.0; 4]);
+        assert_eq!(b.read_segment(0, 0)[..4], [1.0; 4]);
+        drop(a);
+        assert_eq!(b.read_segment(0, 0)[4..], [2.0; 4]);
     }
 
     #[test]
     fn batch_assembly_pads_and_orders() {
         let m = spec();
-        let mut r1 = RequestKv::new(&m);
+        let pool = KvPool::for_model(&m);
+        let mut r1 = RequestKv::new(&m, &pool);
         r1.write(0, 0, &[1.0; 4], &[2.0; 4]);
         r1.set_len(1);
-        let mut r2 = RequestKv::new(&m);
+        let mut r2 = RequestKv::new(&m, &pool);
         r2.write(0, 0, &[3.0; 4], &[4.0; 4]);
         r2.write(0, 1, &[5.0; 4], &[6.0; 4]);
         r2.set_len(2);
@@ -219,5 +399,27 @@ mod tests {
         // padding rows are zero
         assert!(k.data()[2 * row..].iter().all(|&x| x == 0.0));
         assert_eq!(&v.data()[row..row + 4], &[4.0; 4]);
+        // positions past each request's len are zero too
+        assert!(k.data()[4..row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn assembly_spanning_multiple_pages() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut kv = RequestKv::new(&m, &pool);
+        for pos in 0..5 {
+            kv.write(0, pos, &[pos as f32; 4], &[10.0 + pos as f32; 4]);
+        }
+        kv.set_len(5);
+        assert_eq!(kv.tables[0].len(), 3);
+        let mut asm = BatchAssembler::new(&m);
+        let (k, v, pos) = asm.gather(&[&kv], 0, 1, m.kv_heads, m.head_dim);
+        assert_eq!(pos, vec![5]);
+        for p in 0..5 {
+            assert_eq!(&k.data()[p * 4..(p + 1) * 4], &[p as f32; 4]);
+            assert_eq!(&v.data()[p * 4..(p + 1) * 4], &[10.0 + p as f32; 4]);
+        }
+        assert!(k.data()[5 * 4..].iter().all(|&x| x == 0.0));
     }
 }

@@ -1,0 +1,341 @@
+//! Slab-style block pool for paged KV-cache memory.
+//!
+//! The pool hands out fixed-size *pages* — `page_tokens` token slots of
+//! one layer's K||V rows — from a shared arena. Every producer and
+//! consumer of KV bytes (decode append, batch assembly, checkpoint
+//! segment emit, restore install) addresses KV state through
+//! (page, slot) coordinates, so per-request resident memory scales with
+//! the actual sequence length instead of `max_seq`, and a freed
+//! request's pages are immediately reusable by any other request.
+//!
+//! Layout: slot `t` of a page occupies
+//! `[t * 2 * seg, (t + 1) * 2 * seg)` floats — the K row (`seg` floats,
+//! `kv_heads * head_dim`) followed by the V row. One checkpoint segment
+//! (§6.1) is therefore a single contiguous slot, which keeps segment
+//! read/restore a one-slice copy.
+//!
+//! Freed pages stay resident on the free list (slab recycling): the
+//! arena's high-water mark is the cost of a burst, not of the lifetime.
+//! Recycled pages are re-zeroed on alloc so padding invariants hold for
+//! whoever gets them next.
+
+use crate::modelcfg::ModelSpec;
+use std::sync::{Arc, Mutex};
+
+/// Default tokens per page. 16 matches vLLM-style paged attention block
+/// sizes and keeps internal fragmentation at most 15 token slots per
+/// (request, layer).
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+/// Handle to one page in a [`KvPool`]. Only meaningful for the pool that
+/// issued it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId(u32);
+
+impl PageId {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Geometry of a pool's pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Token slots per page.
+    pub page_tokens: usize,
+    /// Floats of one K (or V) row: `kv_heads * head_dim`.
+    pub seg: usize,
+}
+
+impl PoolConfig {
+    pub fn from_model(m: &ModelSpec) -> PoolConfig {
+        PoolConfig {
+            page_tokens: DEFAULT_PAGE_TOKENS.min(m.max_seq).max(1),
+            seg: m.kv_heads * m.head_dim,
+        }
+    }
+
+    /// Floats per page: `page_tokens` slots of K||V.
+    pub fn page_floats(&self) -> usize {
+        self.page_tokens * 2 * self.seg
+    }
+}
+
+struct PageSlot {
+    data: Box<[f32]>,
+    in_use: bool,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    slots: Vec<PageSlot>,
+    free: Vec<u32>,
+    in_use: usize,
+    peak_in_use: usize,
+    total_allocs: u64,
+    total_frees: u64,
+}
+
+/// Shared KV page arena. Cheap to clone the `Arc`; all mutation goes
+/// through a mutex (page grabs are rare relative to the float traffic
+/// they amortize, and data copies happen under short critical sections).
+pub struct KvPool {
+    cfg: PoolConfig,
+    inner: Mutex<PoolInner>,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("KvPool")
+            .field("page_tokens", &self.cfg.page_tokens)
+            .field("seg", &self.cfg.seg)
+            .field("in_use", &inner.in_use)
+            .field("resident", &inner.slots.len())
+            .finish()
+    }
+}
+
+impl KvPool {
+    pub fn new(cfg: PoolConfig) -> Arc<KvPool> {
+        assert!(cfg.page_tokens > 0 && cfg.seg > 0);
+        Arc::new(KvPool { cfg, inner: Mutex::new(PoolInner::default()) })
+    }
+
+    /// Pool with the default page size for a model.
+    pub fn for_model(m: &ModelSpec) -> Arc<KvPool> {
+        Self::new(PoolConfig::from_model(m))
+    }
+
+    /// Pool with an explicit page size (benches, fragmentation tests).
+    pub fn with_page_tokens(m: &ModelSpec, page_tokens: usize) -> Arc<KvPool> {
+        Self::new(PoolConfig { page_tokens, seg: m.kv_heads * m.head_dim })
+    }
+
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.cfg.page_tokens
+    }
+
+    /// Floats of one K (or V) row.
+    pub fn row_elems(&self) -> usize {
+        self.cfg.seg
+    }
+
+    pub fn page_floats(&self) -> usize {
+        self.cfg.page_floats()
+    }
+
+    // ---- allocation ------------------------------------------------------
+
+    /// Hand out a zeroed page. Recycles the free list before growing the
+    /// arena.
+    pub fn alloc(&self) -> PageId {
+        let mut inner = self.inner.lock().unwrap();
+        let id = if let Some(idx) = inner.free.pop() {
+            let slot = &mut inner.slots[idx as usize];
+            debug_assert!(!slot.in_use);
+            slot.data.fill(0.0);
+            slot.in_use = true;
+            PageId(idx)
+        } else {
+            let idx = inner.slots.len() as u32;
+            inner.slots.push(PageSlot {
+                data: vec![0.0f32; self.cfg.page_floats()].into_boxed_slice(),
+                in_use: true,
+            });
+            PageId(idx)
+        };
+        inner.in_use += 1;
+        inner.peak_in_use = inner.peak_in_use.max(inner.in_use);
+        inner.total_allocs += 1;
+        id
+    }
+
+    /// Return a page. Panics on double free or a foreign id — a paging
+    /// bug upstream must not silently corrupt another request's KV.
+    pub fn free(&self, id: PageId) {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner
+            .slots
+            .get_mut(id.index())
+            .unwrap_or_else(|| panic!("free of unknown page {id:?}"));
+        assert!(slot.in_use, "double free of page {id:?}");
+        slot.in_use = false;
+        inner.free.push(id.0);
+        inner.in_use -= 1;
+        inner.total_frees += 1;
+    }
+
+    // ---- data plane ------------------------------------------------------
+
+    /// Write the K and V rows of one token slot.
+    pub fn write_rows(&self, id: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        let seg = self.cfg.seg;
+        assert!(slot < self.cfg.page_tokens);
+        assert_eq!(k_row.len(), seg);
+        assert_eq!(v_row.len(), seg);
+        let mut inner = self.inner.lock().unwrap();
+        let page = self.page_mut(&mut inner, id);
+        let off = slot * 2 * seg;
+        page[off..off + seg].copy_from_slice(k_row);
+        page[off + seg..off + 2 * seg].copy_from_slice(v_row);
+    }
+
+    /// Write one checkpoint segment (K||V) into a token slot — the
+    /// restore path. One contiguous copy.
+    pub fn write_segment(&self, id: PageId, slot: usize, data: &[f32]) {
+        let seg2 = 2 * self.cfg.seg;
+        assert!(slot < self.cfg.page_tokens);
+        assert_eq!(data.len(), seg2, "bad segment size");
+        let mut inner = self.inner.lock().unwrap();
+        let page = self.page_mut(&mut inner, id);
+        page[slot * seg2..(slot + 1) * seg2].copy_from_slice(data);
+    }
+
+    /// Read one segment (K||V) out of a token slot — the checkpoint
+    /// streamer's source. One contiguous copy.
+    pub fn read_segment(&self, id: PageId, slot: usize) -> Vec<f32> {
+        let seg2 = 2 * self.cfg.seg;
+        assert!(slot < self.cfg.page_tokens);
+        let inner = self.inner.lock().unwrap();
+        let page = self.page(&inner, id);
+        page[slot * seg2..(slot + 1) * seg2].to_vec()
+    }
+
+    /// Gather the first `tokens` slots of a page into separate K / V
+    /// destinations (`tokens * seg` floats each) — batch assembly.
+    pub fn copy_rows_into(&self, id: PageId, tokens: usize, k_dst: &mut [f32], v_dst: &mut [f32]) {
+        let seg = self.cfg.seg;
+        assert!(tokens <= self.cfg.page_tokens);
+        assert!(k_dst.len() >= tokens * seg && v_dst.len() >= tokens * seg);
+        let inner = self.inner.lock().unwrap();
+        let page = self.page(&inner, id);
+        for t in 0..tokens {
+            let off = t * 2 * seg;
+            k_dst[t * seg..(t + 1) * seg].copy_from_slice(&page[off..off + seg]);
+            v_dst[t * seg..(t + 1) * seg].copy_from_slice(&page[off + seg..off + 2 * seg]);
+        }
+    }
+
+    fn page<'a>(&self, inner: &'a PoolInner, id: PageId) -> &'a [f32] {
+        let slot = &inner.slots[id.index()];
+        assert!(slot.in_use, "access to freed page {id:?}");
+        &slot.data
+    }
+
+    fn page_mut<'a>(&self, inner: &'a mut PoolInner, id: PageId) -> &'a mut [f32] {
+        let slot = &mut inner.slots[id.index()];
+        assert!(slot.in_use, "access to freed page {id:?}");
+        &mut slot.data
+    }
+
+    // ---- accounting ------------------------------------------------------
+
+    /// Pages currently handed out.
+    pub fn pages_in_use(&self) -> usize {
+        self.inner.lock().unwrap().in_use
+    }
+
+    /// Pages resident in the arena (in use + recycled on the free list).
+    pub fn pages_resident(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    /// High-water mark of pages in use.
+    pub fn peak_pages(&self) -> usize {
+        self.inner.lock().unwrap().peak_in_use
+    }
+
+    /// Floats held by pages currently in use.
+    pub fn floats_in_use(&self) -> usize {
+        self.pages_in_use() * self.cfg.page_floats()
+    }
+
+    /// Bytes held by pages currently in use.
+    pub fn bytes_in_use(&self) -> usize {
+        self.floats_in_use() * 4
+    }
+
+    pub fn total_allocs(&self) -> u64 {
+        self.inner.lock().unwrap().total_allocs
+    }
+
+    pub fn total_frees(&self) -> u64 {
+        self.inner.lock().unwrap().total_frees
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(page_tokens: usize, seg: usize) -> Arc<KvPool> {
+        KvPool::new(PoolConfig { page_tokens, seg })
+    }
+
+    #[test]
+    fn alloc_free_recycles_without_growth() {
+        let p = pool(4, 8);
+        let a = p.alloc();
+        let b = p.alloc();
+        assert_ne!(a, b);
+        assert_eq!(p.pages_in_use(), 2);
+        p.free(a);
+        assert_eq!(p.pages_in_use(), 1);
+        let c = p.alloc();
+        assert_eq!(c, a, "free list must be recycled before growing");
+        assert_eq!(p.pages_resident(), 2);
+        assert_eq!(p.peak_pages(), 2);
+        p.free(b);
+        p.free(c);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn recycled_pages_are_zeroed() {
+        let p = pool(2, 4);
+        let a = p.alloc();
+        p.write_rows(a, 1, &[1.0; 4], &[2.0; 4]);
+        p.free(a);
+        let b = p.alloc();
+        assert_eq!(b, a);
+        assert_eq!(p.read_segment(b, 1), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn segment_layout_is_contiguous_k_then_v() {
+        let p = pool(3, 4);
+        let id = p.alloc();
+        p.write_rows(id, 2, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        let seg = p.read_segment(id, 2);
+        assert_eq!(seg, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let mut k = vec![0.0; 3 * 4];
+        let mut v = vec![0.0; 3 * 4];
+        p.copy_rows_into(id, 3, &mut k, &mut v);
+        assert_eq!(&k[8..12], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&v[8..12], &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(&k[..8], &[0.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let p = pool(2, 2);
+        let id = p.alloc();
+        p.free(id);
+        p.free(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "freed page")]
+    fn use_after_free_panics() {
+        let p = pool(2, 2);
+        let id = p.alloc();
+        p.free(id);
+        p.read_segment(id, 0);
+    }
+}

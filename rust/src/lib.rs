@@ -9,7 +9,7 @@
 //! Top-level map (see DESIGN.md for the full inventory):
 //! - `runtime`     — PJRT device threads: compile + execute HLO artifacts
 //! - `transport`   — simulated RDMA: QPs, links, probes, fault injection
-//! - `kvcache`     — per-request KV regions and batch assembly
+//! - `kvcache`     — paged per-request KV state (block-pool arena) + batch assembly
 //! - `checkpoint`  — incremental checkpoint store + per-request restore
 //! - `coordinator` — gateway, orchestrator, ERT/REFE, AW, EW, provisioning
 //! - `baselines`   — MegaScale-like coarse restart, vLLM-TP, vLLM-PP

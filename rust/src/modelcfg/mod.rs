@@ -10,12 +10,30 @@ pub mod weights;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io error reading {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
     Parse(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => {
+                write!(f, "io error reading {}: {e}", path.display())
+            }
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            ManifestError::Parse(_) => None,
+        }
+    }
 }
 
 /// Architecture of the served model (mirrors python/compile/configs.py).

@@ -7,6 +7,7 @@
 
 use crate::tensor::Tensor;
 use crate::transport::NodeId;
+use std::sync::Arc;
 
 /// Fixed per-message header estimate (ids, seq, layer fields...).
 pub const HDR_BYTES: usize = 48;
@@ -95,13 +96,19 @@ impl ReturnMsg {
 // Checkpointing (AW -> store) and restoration (store -> AW), §6
 // ---------------------------------------------------------------------------
 
+/// Shared checkpoint-segment payload. The AW materializes a segment out
+/// of its KV pages exactly once; the same allocation then travels through
+/// the streamer queue, the wire, the store's segment log, and the restore
+/// reply without being copied again (`Arc` clones are refcount bumps).
+pub type SegPayload = Arc<Vec<f32>>;
+
 /// One incremental KV segment: K||V for (request, position, layer).
 #[derive(Debug, Clone)]
 pub struct SegmentMsg {
     pub request: u64,
     pub pos: u32,
     pub layer: u16,
-    pub data: Vec<f32>,
+    pub data: SegPayload,
 }
 
 impl SegmentMsg {
@@ -135,8 +142,8 @@ impl CommitMeta {
 #[derive(Debug, Clone)]
 pub struct RestoreData {
     pub meta: CommitMeta,
-    /// (pos, layer, K||V data)
-    pub segments: Vec<(u32, u16, Vec<f32>)>,
+    /// (pos, layer, K||V data) — payloads shared with the store's log.
+    pub segments: Vec<(u32, u16, SegPayload)>,
 }
 
 impl RestoreData {
@@ -160,6 +167,9 @@ pub enum ClusterMsg {
     // AW -> gateway
     Token { request: u64, index: u32, token: u32, worker: u32 },
     Finished { request: u64, worker: u32 },
+    /// gateway -> store: the request is done end-to-end; drop its segment
+    /// log and commit records (bounded store memory).
+    ReqFinished { request: u64 },
     // AW <-> EW data plane
     Dispatch(DispatchMsg),
     Return(ReturnMsg),
@@ -239,15 +249,22 @@ mod tests {
         assert!(big.wire_bytes() > small.wire_bytes() + 4 * 128 * 4);
         assert_eq!(big.num_rows(), 4);
 
-        let seg = SegmentMsg { request: 1, pos: 0, layer: 0, data: vec![0.0; 64] };
+        let seg = SegmentMsg { request: 1, pos: 0, layer: 0, data: Arc::new(vec![0.0; 64]) };
         assert_eq!(seg.wire_bytes(), HDR_BYTES + 256);
+    }
+
+    #[test]
+    fn segment_clone_shares_payload() {
+        let seg = SegmentMsg { request: 1, pos: 0, layer: 0, data: Arc::new(vec![1.0; 8]) };
+        let cloned = seg.clone();
+        assert!(Arc::ptr_eq(&seg.data, &cloned.data));
     }
 
     #[test]
     fn checkpoint_vs_dispatch_ratio_matches_appendix_c() {
         // For our model (kv=1, d=32, H=128, top2): segment = 256 B,
         // round-trip dispatch volume per token-layer = 2*2*128*4 = 2048 B.
-        let seg = SegmentMsg { request: 0, pos: 0, layer: 0, data: vec![0.0; 64] };
+        let seg = SegmentMsg { request: 0, pos: 0, layer: 0, data: Arc::new(vec![0.0; 64]) };
         let seg_payload = seg.data.len() * 4;
         let disp_payload = 2 * 2 * 128 * 4;
         assert!((seg_payload as f64 / disp_payload as f64 - 0.125).abs() < 1e-9);

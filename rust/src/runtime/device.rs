@@ -2,7 +2,7 @@
 //! executables, and device-resident weight buffers; serves execution
 //! requests over a channel. See module docs in `runtime`.
 
-use super::{ArgValue, RolePlan};
+use super::{xla, ArgValue, RolePlan};
 use crate::modelcfg::{ArtifactSpec, DType, Manifest};
 use crate::modelcfg::weights::Weights;
 use crate::tensor::Tensor;
@@ -11,21 +11,32 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum DeviceError {
-    #[error("device '{0}' is dead")]
     Dead(String),
-    #[error("unknown artifact '{0}'")]
     UnknownArtifact(String),
-    #[error("unknown weight '{0}'")]
     UnknownWeight(String),
-    #[error("artifact '{artifact}' arg {index}: {msg}")]
     BadArg { artifact: String, index: usize, msg: String },
-    #[error("xla error in '{0}': {1}")]
     Xla(String, String),
-    #[error("device init failed: {0}")]
     Init(String),
 }
+
+impl std::fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceError::Dead(d) => write!(f, "device '{d}' is dead"),
+            DeviceError::UnknownArtifact(a) => write!(f, "unknown artifact '{a}'"),
+            DeviceError::UnknownWeight(w) => write!(f, "unknown weight '{w}'"),
+            DeviceError::BadArg { artifact, index, msg } => {
+                write!(f, "artifact '{artifact}' arg {index}: {msg}")
+            }
+            DeviceError::Xla(a, msg) => write!(f, "xla error in '{a}': {msg}"),
+            DeviceError::Init(msg) => write!(f, "device init failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DeviceError {}
 
 /// Breakdown of worker (re)initialization cost — the components of the
 /// paper's `T_w` (Table 1).
@@ -217,7 +228,7 @@ fn device_main(
         let path = manifest.hlo_path(&spec);
         let result = xla::HloModuleProto::from_text_file(&path)
             .map(|p| xla::XlaComputation::from_proto(&p))
-            .and_then(|c| client.compile(&c));
+            .and_then(|c| client.compile(&c, &spec));
         match result {
             Ok(exe) => {
                 compiled.insert(name.clone(), Compiled { exe, spec });

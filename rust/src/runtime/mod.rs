@@ -2,12 +2,16 @@
 //! CPU client with the AOT-compiled executables for its role and a cache of
 //! device-resident weight buffers.
 //!
-//! Why a thread per worker: the `xla` crate wrappers hold raw pointers
+//! Why a thread per worker: real PJRT client wrappers hold raw pointers
 //! (!Send), and the paper's workers each own a physical GPU. A private
 //! client per worker means (a) worker (re)initialization — client creation,
-//! artifact compilation, weight upload — is a *real* multi-second cost
-//! playing the role of the paper's `T_w`, and (b) the fault injector can
-//! kill one worker without poisoning any other's device state.
+//! artifact compilation, weight upload — is a *real* cost playing the role
+//! of the paper's `T_w`, and (b) the fault injector can kill one worker
+//! without poisoning any other's device state.
+//!
+//! The [`xla`] module is an in-repo stand-in for the external `xla` crate
+//! (unavailable offline): same call surface, reference-math execution of
+//! the five artifact kinds (see its module docs).
 //!
 //! Messages carry host tensors (`Vec<f32>`/`Vec<i32>`); weights are
 //! referenced by name and resolved from the device-resident cache, so the
@@ -15,6 +19,7 @@
 
 pub mod device;
 pub mod roles;
+pub mod xla;
 
 pub use device::{Device, DeviceError, ExecCounters, InitStats};
 pub use roles::{DeviceRole, RolePlan};

@@ -1,0 +1,583 @@
+//! In-repo stand-in for the external `xla` crate (PJRT CPU client).
+//!
+//! The build environment is offline: neither xla-rs nor the XLA C++
+//! runtime can be fetched. This module keeps `runtime::device`'s call
+//! surface (`PjRtClient` / `HloModuleProto` / `PjRtLoadedExecutable` /
+//! `PjRtBuffer` / `Literal`) and executes each artifact with dense f32
+//! reference math mirroring `python/compile` (kernels/ref.py, model.py):
+//! RMSNorm + RoPE + GQA attention, softmax gating, SwiGLU expert FFN,
+//! final-norm LM head. The artifact's HLO file is only validated to
+//! exist; semantics are pinned by the manifest's [`ArtifactSpec`] (kind
+//! and I/O shapes) plus the weights passed at call time, so results
+//! match the pure-jnp oracle up to f32 accumulation order.
+
+use crate::modelcfg::{ArtifactKind, ArtifactSpec};
+use std::path::Path;
+
+/// Mirrors `python/compile/configs.py` (`ModelConfig.rms_eps` /
+/// `.rope_theta`) — the only two model scalars not carried by the
+/// manifest's numeric fields.
+const RMS_EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 10000.0;
+
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn err(msg: impl Into<String>) -> XlaError {
+    XlaError { msg: msg.into() }
+}
+
+// ---------------------------------------------------------------------------
+// Buffers and literals
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum BufData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<PjRtBuffer>),
+}
+
+/// Host-resident "device" buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    data: BufData,
+    shape: Vec<usize>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(Literal { buf: self.clone() })
+    }
+
+    fn f32s(&self) -> Result<&[f32], XlaError> {
+        match &self.data {
+            BufData::F32(v) => Ok(v),
+            _ => Err(err("expected f32 buffer")),
+        }
+    }
+
+    fn i32s(&self) -> Result<&[i32], XlaError> {
+        match &self.data {
+            BufData::I32(v) => Ok(v),
+            _ => Err(err("expected i32 buffer")),
+        }
+    }
+
+    fn f32_buf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
+        PjRtBuffer { data: BufData::F32(data), shape }
+    }
+}
+
+pub struct Literal {
+    buf: PjRtBuffer,
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self.buf.data {
+            BufData::Tuple(parts) => {
+                Ok(parts.into_iter().map(|buf| Literal { buf }).collect())
+            }
+            _ => Err(err("literal is not a tuple")),
+        }
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        T::extract(&self.buf)
+    }
+}
+
+/// Element types transferable to/from buffers.
+pub trait Element: Copy {
+    fn wrap(data: &[Self], shape: &[usize]) -> PjRtBuffer;
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<Self>, XlaError>;
+}
+
+impl Element for f32 {
+    fn wrap(data: &[f32], shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer { data: BufData::F32(data.to_vec()), shape: shape.to_vec() }
+    }
+
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<f32>, XlaError> {
+        Ok(buf.f32s()?.to_vec())
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: &[i32], shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer { data: BufData::I32(data.to_vec()), shape: shape.to_vec() }
+    }
+
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<i32>, XlaError> {
+        Ok(buf.i32s()?.to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client / compilation
+// ---------------------------------------------------------------------------
+
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    /// Validate the artifact file exists and record its name; the HLO
+    /// text itself is not interpreted (see module docs).
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, XlaError> {
+        if !path.exists() {
+            return Err(err(format!("missing artifact file {}", path.display())));
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string();
+        Ok(HloModuleProto { name })
+    }
+}
+
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { name: p.name.clone() }
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient)
+    }
+
+    /// "Compile" an artifact: bind its manifest spec, which pins the
+    /// computation for the reference executor.
+    pub fn compile(
+        &self,
+        _c: &XlaComputation,
+        spec: &ArtifactSpec,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Ok(PjRtLoadedExecutable { spec: spec.clone() })
+    }
+
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        data: &[T],
+        shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(err(format!(
+                "host buffer length {} does not match shape {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(T::wrap(data, shape))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    spec: ArtifactSpec,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers; returns per-replica output
+    /// lists holding one tuple buffer (return_tuple=True convention).
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let outputs = run_reference(&self.spec, args)?;
+        Ok(vec![vec![PjRtBuffer { data: BufData::Tuple(outputs), shape: vec![] }]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference executor (mirrors python/compile/model.py entry points)
+// ---------------------------------------------------------------------------
+
+fn run_reference(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    match spec.kind {
+        ArtifactKind::AttnPrefill => attn_prefill(spec, args),
+        ArtifactKind::AttnDecode => attn_decode(spec, args),
+        ArtifactKind::Router => router(args),
+        ArtifactKind::Expert => expert_ffn(args),
+        ArtifactKind::LmHead => lm_head(args),
+    }
+}
+
+/// `[n, k] @ [k, m] -> [n, m]`, row-major.
+fn matmul(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let xr = &x[i * k..(i + 1) * k];
+        let or_ = &mut out[i * m..(i + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                or_[j] += xv * wr[j];
+            }
+        }
+    }
+    out
+}
+
+/// RMSNorm over the last axis; x viewed as [n, h].
+fn rms_norm(x: &[f32], gamma: &[f32], n: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * h];
+    for i in 0..n {
+        let row = &x[i * h..(i + 1) * h];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for j in 0..h {
+            out[i * h + j] = row[j] * inv * gamma[j];
+        }
+    }
+    out
+}
+
+/// Rotary embedding, rotate-half convention (ref.rope_ref). `x` viewed as
+/// [n, heads, d]; `pos_of(i)` is row i's position.
+fn rope(x: &mut [f32], n: usize, heads: usize, d: usize, pos_of: impl Fn(usize) -> f32) {
+    let half = d / 2;
+    let freqs: Vec<f32> = (0..half)
+        .map(|j| 1.0 / ROPE_THETA.powf(j as f32 / half as f32))
+        .collect();
+    for i in 0..n {
+        let p = pos_of(i);
+        for hh in 0..heads {
+            let base = (i * heads + hh) * d;
+            for j in 0..half {
+                let ang = p * freqs[j];
+                let (s, c) = ang.sin_cos();
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v * (1.0 / (1.0 + (-v).exp()))
+}
+
+/// attn_prefill(x, wq, wk, wv, wo, ln1, ln2) -> (h, g, k, v)
+fn attn_prefill(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].f32s()?;
+    let (t, h) = (args[0].shape[0], args[0].shape[1]);
+    // Output 2 is k: [T, kv_heads, head_dim] — the head split.
+    let kv = spec.outputs[2].shape[1];
+    let d = spec.outputs[2].shape[2];
+    let heads = h / d;
+    let kvd = kv * d;
+    let (wq, wk, wv, wo) = (args[1].f32s()?, args[2].f32s()?, args[3].f32s()?, args[4].f32s()?);
+    let (ln1, ln2) = (args[5].f32s()?, args[6].f32s()?);
+
+    let n = rms_norm(x, ln1, t, h);
+    let mut q = matmul(&n, wq, t, h, h);
+    let mut k = matmul(&n, wk, t, h, kvd);
+    let v = matmul(&n, wv, t, h, kvd);
+    rope(&mut q, t, heads, d, |i| i as f32);
+    rope(&mut k, t, kv, d, |i| i as f32);
+
+    // Causal GQA attention: [t, heads, d].
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut attn = vec![0.0f32; t * h];
+    let mut scores = vec![0.0f32; t];
+    for hh in 0..heads {
+        let kvh = hh / group;
+        for qi in 0..t {
+            let qrow = &q[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                let krow = &k[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                let s: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                *sc = s;
+                mx = mx.max(s);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(qi + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            for ki in 0..=qi {
+                let w = scores[ki] / denom;
+                let vrow = &v[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+        }
+    }
+
+    let proj = matmul(&attn, wo, t, h, h);
+    let h_out: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+    let g = rms_norm(&h_out, ln2, t, h);
+    Ok(vec![
+        PjRtBuffer::f32_buf(h_out, vec![t, h]),
+        PjRtBuffer::f32_buf(g, vec![t, h]),
+        PjRtBuffer::f32_buf(k, vec![t, kv, d]),
+        PjRtBuffer::f32_buf(v, vec![t, kv, d]),
+    ])
+}
+
+/// attn_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, ln1, ln2)
+/// -> (h, g, k_new, v_new)
+fn attn_decode(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].f32s()?;
+    let (b, h) = (args[0].shape[0], args[0].shape[1]);
+    let k_cache = args[1].f32s()?;
+    let v_cache = args[2].f32s()?;
+    let s = args[1].shape[1];
+    let kv = args[1].shape[2];
+    let d = args[1].shape[3];
+    let pos = args[3].i32s()?;
+    let heads = h / d;
+    let kvd = kv * d;
+    let (wq, wk, wv, wo) = (args[4].f32s()?, args[5].f32s()?, args[6].f32s()?, args[7].f32s()?);
+    let (ln1, ln2) = (args[8].f32s()?, args[9].f32s()?);
+    let _ = spec;
+
+    let n = rms_norm(x, ln1, b, h);
+    let mut q = matmul(&n, wq, b, h, h);
+    let mut k_new = matmul(&n, wk, b, h, kvd);
+    let v_new = matmul(&n, wv, b, h, kvd);
+    rope(&mut q, b, heads, d, |i| pos[i] as f32);
+    rope(&mut k_new, b, kv, d, |i| pos[i] as f32);
+
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut attn = vec![0.0f32; b * h];
+    let mut scores = vec![0.0f32; s];
+    for bi in 0..b {
+        let valid = (pos[bi].max(0) as usize).min(s);
+        for hh in 0..heads {
+            let kvh = hh / group;
+            let qrow = &q[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            let krow_cur = &k_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let s_cur: f32 =
+                qrow.iter().zip(krow_cur).map(|(a, c)| a * c).sum::<f32>() * scale;
+            let mut mx = s_cur;
+            for (t, sc) in scores.iter_mut().enumerate().take(valid) {
+                let krow = &k_cache[((bi * s + t) * kv + kvh) * d..((bi * s + t) * kv + kvh + 1) * d];
+                let sv: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
+                *sc = sv;
+                mx = mx.max(sv);
+            }
+            let mut denom = (s_cur - mx).exp();
+            let e_cur = denom;
+            for sc in scores.iter_mut().take(valid) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            for t in 0..valid {
+                let w = scores[t] / denom;
+                let vrow = &v_cache[((bi * s + t) * kv + kvh) * d..((bi * s + t) * kv + kvh + 1) * d];
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+            let vrow_cur = &v_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let wc = e_cur / denom;
+            for j in 0..d {
+                out[j] += wc * vrow_cur[j];
+            }
+        }
+    }
+
+    let proj = matmul(&attn, wo, b, h, h);
+    let h_out: Vec<f32> = x.iter().zip(&proj).map(|(a, c)| a + c).collect();
+    let g = rms_norm(&h_out, ln2, b, h);
+    Ok(vec![
+        PjRtBuffer::f32_buf(h_out, vec![b, h]),
+        PjRtBuffer::f32_buf(g, vec![b, h]),
+        PjRtBuffer::f32_buf(k_new, vec![b, kv, d]),
+        PjRtBuffer::f32_buf(v_new, vec![b, kv, d]),
+    ])
+}
+
+/// router(g, wg) -> softmax(g @ wg)
+fn router(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let g = args[0].f32s()?;
+    let (b, h) = (args[0].shape[0], args[0].shape[1]);
+    let wg = args[1].f32s()?;
+    let e = args[1].shape[1];
+    let mut logits = matmul(g, wg, b, h, e);
+    for i in 0..b {
+        let row = &mut logits[i * e..(i + 1) * e];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            denom += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+    Ok(vec![PjRtBuffer::f32_buf(logits, vec![b, e])])
+}
+
+/// expert_ffn(x, w1, w3, w2) -> (silu(x@w1) * (x@w3)) @ w2
+fn expert_ffn(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].f32s()?;
+    let (b, h) = (args[0].shape[0], args[0].shape[1]);
+    let w1 = args[1].f32s()?;
+    let f = args[1].shape[1];
+    let w3 = args[2].f32s()?;
+    let w2 = args[3].f32s()?;
+    let a = matmul(x, w1, b, h, f);
+    let g = matmul(x, w3, b, h, f);
+    let gated: Vec<f32> = a.iter().zip(&g).map(|(av, gv)| silu(*av) * gv).collect();
+    let y = matmul(&gated, w2, b, f, h);
+    Ok(vec![PjRtBuffer::f32_buf(y, vec![b, h])])
+}
+
+/// lm_head(h, ln_f, wlm) -> rms_norm(h) @ wlm
+fn lm_head(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].f32s()?;
+    let (b, h) = (args[0].shape[0], args[0].shape[1]);
+    let ln_f = args[1].f32s()?;
+    let wlm = args[2].f32s()?;
+    let v = args[2].shape[1];
+    let normed = rms_norm(x, ln_f, b, h);
+    let logits = matmul(&normed, wlm, b, h, v);
+    Ok(vec![PjRtBuffer::f32_buf(logits, vec![b, v])])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::{DType, IoSpec};
+
+    fn io(name: &str, shape: Vec<usize>, dtype: DType) -> IoSpec {
+        IoSpec { name: name.into(), shape, dtype }
+    }
+
+    fn fbuf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
+        PjRtBuffer::f32_buf(data, shape)
+    }
+
+    #[test]
+    fn router_rows_are_distributions() {
+        let g = fbuf(vec![0.5, -1.0, 2.0, 0.0, 0.25, -0.5], vec![2, 3]);
+        let wg = fbuf(vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6, 0.7, 0.8, -0.9, 1.0, 1.1, -1.2], vec![3, 4]);
+        let out = router(&[&g, &wg]).unwrap();
+        assert_eq!(out[0].shape, vec![2, 4]);
+        let probs = out[0].f32s().unwrap();
+        for i in 0..2 {
+            let sum: f32 = probs[i * 4..(i + 1) * 4].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(probs[i * 4..(i + 1) * 4].iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn expert_zero_input_is_zero() {
+        let x = fbuf(vec![0.0; 2 * 4], vec![2, 4]);
+        let w1 = fbuf(vec![0.3; 4 * 8], vec![4, 8]);
+        let w3 = fbuf(vec![-0.2; 4 * 8], vec![4, 8]);
+        let w2 = fbuf(vec![0.1; 8 * 4], vec![8, 4]);
+        let y = expert_ffn(&[&x, &w1, &w3, &w2]).unwrap();
+        assert!(y[0].f32s().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn decode_ignores_cache_beyond_pos() {
+        // b=1, heads=2, kv=1, d=2, h=4, s=3.
+        let spec = ArtifactSpec {
+            name: "attn_decode_b1".into(),
+            kind: ArtifactKind::AttnDecode,
+            bucket: 1,
+            file: "x.hlo".into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let x = fbuf(vec![0.1, -0.2, 0.3, 0.4], vec![1, 4]);
+        let eye4: Vec<f32> = (0..16).map(|i| if i % 5 == 0 { 0.5 } else { 0.1 }).collect();
+        let wq = fbuf(eye4.clone(), vec![4, 4]);
+        let wk = fbuf(vec![0.2; 4 * 2], vec![4, 2]);
+        let wv = fbuf(vec![-0.1; 4 * 2], vec![4, 2]);
+        let wo = fbuf(eye4, vec![4, 4]);
+        let ln = fbuf(vec![1.0; 4], vec![4]);
+        let pos = i32::wrap(&[1], &[1]);
+        let mk_cache = |poison: f32| {
+            (
+                fbuf(vec![0.3, 0.3, poison, poison, poison, poison], vec![1, 3, 1, 2]),
+                fbuf(vec![-0.4, 0.4, poison, poison, poison, poison], vec![1, 3, 1, 2]),
+            )
+        };
+        let (kc1, vc1) = mk_cache(0.0);
+        let (kc2, vc2) = mk_cache(1e6);
+        let o1 = attn_decode(&spec, &[&x, &kc1, &vc1, &pos, &wq, &wk, &wv, &wo, &ln, &ln]).unwrap();
+        let o2 = attn_decode(&spec, &[&x, &kc2, &vc2, &pos, &wq, &wk, &wv, &wo, &ln, &ln]).unwrap();
+        assert_eq!(o1[0].f32s().unwrap(), o2[0].f32s().unwrap(), "pos mask violated");
+        assert!(o1[0].f32s().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prefill_is_causal() {
+        // Changing a later token must not affect earlier rows' outputs.
+        let spec = ArtifactSpec {
+            name: "attn_prefill_t4".into(),
+            kind: ArtifactKind::AttnPrefill,
+            bucket: 4,
+            file: "x.hlo".into(),
+            inputs: vec![],
+            outputs: vec![
+                io("h", vec![4, 4], DType::F32),
+                io("g", vec![4, 4], DType::F32),
+                io("k", vec![4, 1, 2], DType::F32),
+                io("v", vec![4, 1, 2], DType::F32),
+            ],
+        };
+        let base: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.05).collect();
+        let mut changed = base.clone();
+        for v in &mut changed[12..16] {
+            *v += 5.0; // perturb the last token only
+        }
+        let w = |n| fbuf(vec![0.11; n], vec![4, if n == 8 { 2 } else { 4 }]);
+        let ln = fbuf(vec![1.0; 4], vec![4]);
+        let run = |xdata: Vec<f32>| {
+            let x = fbuf(xdata, vec![4, 4]);
+            attn_prefill(&spec, &[&x, &w(16), &w(8), &w(8), &w(16), &ln, &ln]).unwrap()
+        };
+        let o1 = run(base);
+        let o2 = run(changed);
+        let h1 = o1[0].f32s().unwrap();
+        let h2 = o2[0].f32s().unwrap();
+        assert_eq!(&h1[..12], &h2[..12], "causality violated");
+        assert_ne!(&h1[12..], &h2[12..]);
+    }
+
+    #[test]
+    fn tuple_literal_roundtrip() {
+        let parts = vec![fbuf(vec![1.0, 2.0], vec![2]), fbuf(vec![3.0], vec![1])];
+        let buf = PjRtBuffer { data: BufData::Tuple(parts), shape: vec![] };
+        let lits = buf.to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(lits[1].to_vec::<f32>().unwrap(), vec![3.0]);
+    }
+}

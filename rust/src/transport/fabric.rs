@@ -9,17 +9,28 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum QpError {
-    #[error("local node {0} is down")]
     LocalDown(NodeId),
-    #[error("retry exceeded toward {0} (peer dead or link severed)")]
     RetryExceeded(NodeId),
-    #[error("recv timed out")]
     Timeout,
-    #[error("node {0} is not registered")]
     Unknown(NodeId),
 }
+
+impl std::fmt::Display for QpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QpError::LocalDown(n) => write!(f, "local node {n} is down"),
+            QpError::RetryExceeded(n) => {
+                write!(f, "retry exceeded toward {n} (peer dead or link severed)")
+            }
+            QpError::Timeout => write!(f, "recv timed out"),
+            QpError::Unknown(n) => write!(f, "node {n} is not registered"),
+        }
+    }
+}
+
+impl std::error::Error for QpError {}
 
 /// A delivered message with its transport metadata.
 #[derive(Debug)]

@@ -13,15 +13,24 @@ pub struct Args {
     consumed: std::cell::RefCell<Vec<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("invalid value for --{0}: '{1}'")]
     BadValue(String, String),
-    #[error("unknown argument(s): {0}")]
     Unknown(String),
-    #[error("missing required argument --{0}")]
     Missing(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::BadValue(k, v) => write!(f, "invalid value for --{k}: '{v}'"),
+            CliError::Unknown(args) => write!(f, "unknown argument(s): {args}"),
+            CliError::Missing(k) => write!(f, "missing required argument --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).

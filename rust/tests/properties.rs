@@ -4,12 +4,13 @@
 use tarragon::checkpoint::store::StoreLog;
 use tarragon::coordinator::ert::Ert;
 use tarragon::coordinator::router::{self, ExpertGroups};
-use tarragon::kvcache::{BatchAssembler, RequestKv};
+use tarragon::kvcache::{BatchAssembler, KvPool, PageId, RequestKv};
 use tarragon::modelcfg::{Buckets, ModelSpec};
 use tarragon::proto::{CommitMeta, SegmentMsg};
 use tarragon::tensor::Tensor;
 use tarragon::testing::prop::check;
 use tarragon::util::rng::Pcg;
+use std::sync::Arc;
 
 fn rand_model(rng: &mut Pcg) -> ModelSpec {
     let heads = [2usize, 4][rng.index(2)];
@@ -132,7 +133,7 @@ fn prop_store_commit_never_exceeds_segments() {
         for (i, (pos, layer)) in deliveries.iter().enumerate() {
             log.segment(
                 0,
-                SegmentMsg { request: 1, pos: *pos, layer: *layer, data: vec![0.0; 4] },
+                SegmentMsg { request: 1, pos: *pos, layer: *layer, data: Arc::new(vec![0.0; 4]) },
             );
             if rng.f64() < 0.5 {
                 let upto = rng.range_usize(1, positions + 1) as u32;
@@ -187,11 +188,13 @@ fn prop_store_commit_never_exceeds_segments() {
 fn prop_batch_assembly_preserves_rows_and_padding() {
     check("batch assembly", 100, |rng, _| {
         let m = rand_model(rng);
+        // Random page size exercises page-boundary handling in the gather.
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, m.max_seq + 1));
         let n = rng.range_usize(1, 5);
         let bucket = n + rng.range_usize(0, 4);
         let mut kvs: Vec<RequestKv> = Vec::new();
         for _ in 0..n {
-            let mut kv = RequestKv::new(&m);
+            let mut kv = RequestKv::new(&m, &pool);
             let len = rng.range_usize(0, m.max_seq);
             for pos in 0..len {
                 let k: Vec<f32> = (0..m.kv_heads * m.head_dim).map(|_| rng.f32()).collect();
@@ -206,12 +209,17 @@ fn prop_batch_assembly_preserves_rows_and_padding() {
         let (kc, vc, pos) = asm.gather(&refs, m.layers - 1, bucket, m.kv_heads, m.head_dim);
         assert_eq!(kc.shape(), &[bucket, m.max_seq, m.kv_heads, m.head_dim]);
         assert_eq!(pos.len(), bucket);
-        let row = m.max_seq * m.kv_heads * m.head_dim;
+        let seg = m.kv_heads * m.head_dim;
+        let row = m.max_seq * seg;
         for (i, kv) in kvs.iter().enumerate() {
             assert_eq!(pos[i] as usize, kv.len());
-            // gathered rows equal the per-request cache content
-            assert_eq!(&kc.data()[i * row..(i + 1) * row], kv.k_layer(m.layers - 1));
-            assert_eq!(&vc.data()[i * row..(i + 1) * row], kv.v_layer(m.layers - 1));
+            // gathered valid prefix equals the per-request cache content
+            let valid = kv.len() * seg;
+            let (kvec, vvec) = kv.layer_vecs(m.layers - 1);
+            assert_eq!(&kc.data()[i * row..i * row + valid], kvec);
+            assert_eq!(&vc.data()[i * row..i * row + valid], vvec);
+            // positions past len are zero (the artifact masks by pos)
+            assert!(kc.data()[i * row + valid..(i + 1) * row].iter().all(|&x| x == 0.0));
         }
         // padding rows all zero, pos zero
         for i in n..bucket {
@@ -225,8 +233,9 @@ fn prop_batch_assembly_preserves_rows_and_padding() {
 fn prop_kv_segment_roundtrip() {
     check("kv segment roundtrip", 100, |rng, _| {
         let m = rand_model(rng);
-        let mut a = RequestKv::new(&m);
-        let mut b = RequestKv::new(&m);
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, m.max_seq + 1));
+        let mut a = RequestKv::new(&m, &pool);
+        let mut b = RequestKv::new(&m, &pool);
         let len = rng.range_usize(1, m.max_seq + 1);
         for pos in 0..len {
             for layer in 0..m.layers {
@@ -240,10 +249,192 @@ fn prop_kv_segment_roundtrip() {
         a.set_len(len);
         b.set_len(len);
         for layer in 0..m.layers {
-            assert_eq!(a.k_layer(layer), b.k_layer(layer));
-            assert_eq!(a.v_layer(layer), b.v_layer(layer));
+            assert_eq!(a.layer_vecs(layer), b.layer_vecs(layer));
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// KV page-pool invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_alloc_free_roundtrip_no_double_handout() {
+    check("pool alloc/free", 150, |rng, _| {
+        let m = rand_model(rng);
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, 9));
+        let mut live: Vec<PageId> = Vec::new();
+        let mut peak = 0usize;
+        for _ in 0..rng.range_usize(10, 120) {
+            if live.is_empty() || rng.f64() < 0.55 {
+                let id = pool.alloc();
+                // no double-hand-out: a live page is never issued again
+                assert!(!live.contains(&id), "page {id:?} handed out twice");
+                live.push(id);
+            } else {
+                let id = live.swap_remove(rng.index(live.len()));
+                pool.free(id);
+            }
+            peak = peak.max(live.len());
+            assert_eq!(pool.pages_in_use(), live.len());
+            // slab recycling: the arena never grows past the peak demand
+            assert!(pool.pages_resident() <= peak);
+        }
+        for id in live.drain(..) {
+            pool.free(id);
+        }
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.peak_pages(), peak);
+        // a full drain leaves every page reusable
+        let again: Vec<PageId> = (0..peak).map(|_| pool.alloc()).collect();
+        assert_eq!(pool.pages_resident(), peak, "drained pages must be recycled");
+        for id in again {
+            pool.free(id);
+        }
+    });
+}
+
+#[test]
+fn prop_restore_into_pages_reproduces_exact_prefix() {
+    check("restore into pages", 75, |rng, _| {
+        let m = rand_model(rng);
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, 9));
+        let seg_elems = m.kv_heads * m.head_dim;
+        // Source AW writes a random sequence and streams every segment.
+        let mut src = RequestKv::new(&m, &pool);
+        let len = rng.range_usize(1, m.max_seq + 1);
+        for pos in 0..len {
+            for layer in 0..m.layers {
+                let k: Vec<f32> = (0..seg_elems).map(|_| rng.f32()).collect();
+                let v: Vec<f32> = (0..seg_elems).map(|_| rng.f32()).collect();
+                src.write(layer, pos, &k, &v);
+            }
+        }
+        src.set_len(len);
+        let mut log = StoreLog::new(m.layers);
+        let mut deliveries: Vec<(u32, u16)> = (0..len as u32)
+            .flat_map(|p| (0..m.layers as u16).map(move |l| (p, l)))
+            .collect();
+        rng.shuffle(&mut deliveries); // out-of-order one-sided writes
+        for (pos, layer) in deliveries {
+            log.segment(
+                0,
+                SegmentMsg {
+                    request: 1,
+                    pos,
+                    layer,
+                    data: src.segment_payload(layer as usize, pos as usize),
+                },
+            );
+        }
+        log.commit(
+            0,
+            CommitMeta {
+                request: 1,
+                committed_pos: len as u32,
+                last_token: 7,
+                generated: len as u32,
+                max_new_tokens: 1000,
+                prompt_len: 1,
+            },
+        );
+        // Adopting AW installs the restore payload into fresh pages.
+        let data = log.restore_data(1).unwrap();
+        let mut dst = RequestKv::new(&m, &pool);
+        for (pos, layer, seg) in &data.segments {
+            dst.write_segment(*layer as usize, *pos as usize, seg.as_slice());
+        }
+        dst.set_len(data.meta.committed_pos as usize);
+        assert_eq!(dst.len(), len);
+        for pos in 0..len {
+            for layer in 0..m.layers {
+                assert_eq!(
+                    dst.read_segment(layer, pos),
+                    src.read_segment(layer, pos),
+                    "restored segment differs at pos {pos} layer {layer}"
+                );
+            }
+        }
+        // Restore allocated only what the prefix needs.
+        let pt = pool.page_tokens();
+        assert_eq!(dst.allocated_pages(), m.layers * ((len + pt - 1) / pt));
+    });
+}
+
+#[test]
+fn prop_fragmentation_bounded_under_random_churn() {
+    check("pool churn", 50, |rng, _| {
+        let m = rand_model(rng);
+        let pt = rng.range_usize(1, 9);
+        let pool = KvPool::with_page_tokens(&m, pt);
+        let mut live: Vec<RequestKv> = Vec::new();
+        for _ in 0..60 {
+            if live.is_empty() || rng.f64() < 0.6 {
+                let mut kv = RequestKv::new(&m, &pool);
+                let len = rng.range_usize(0, m.max_seq + 1);
+                for pos in 0..len {
+                    for layer in 0..m.layers {
+                        kv.write(layer, pos, &vec![1.0; m.kv_heads * m.head_dim], &vec![2.0; m.kv_heads * m.head_dim]);
+                    }
+                }
+                kv.set_len(len);
+                live.push(kv);
+            } else {
+                live.swap_remove(rng.index(live.len()));
+            }
+            // Internal fragmentation is bounded: every live request holds
+            // exactly ceil(len / page_tokens) pages per layer — never more
+            // than one partially-filled page per (request, layer).
+            let expect: usize =
+                live.iter().map(|kv| ((kv.len() + pt - 1) / pt) * m.layers).sum();
+            assert_eq!(pool.pages_in_use(), expect);
+        }
+        live.clear();
+        assert_eq!(pool.pages_in_use(), 0, "churn must not leak pages");
+    });
+}
+
+/// Acceptance: resident KV memory scales with the actual sequence, not
+/// `max_seq`. Admitting short requests must cost < 10% of what the seed's
+/// full preallocation (`layers * max_seq * 2 * seg` floats per request)
+/// would have pinned.
+#[test]
+fn paged_short_requests_use_under_10pct_of_preallocation() {
+    let m = ModelSpec {
+        layers: 4,
+        hidden: 128,
+        heads: 4,
+        kv_heads: 1,
+        head_dim: 32,
+        ffn: 256,
+        experts: 8,
+        top_k: 2,
+        vocab: 512,
+        max_seq: 256,
+    };
+    let pool = KvPool::for_model(&m); // default 16-token pages
+    let seg = m.kv_heads * m.head_dim;
+    let n_reqs = 8;
+    let short_len = 8;
+    let mut kvs = Vec::new();
+    for _ in 0..n_reqs {
+        let mut kv = RequestKv::new(&m, &pool);
+        for pos in 0..short_len {
+            for layer in 0..m.layers {
+                kv.write(layer, pos, &vec![1.0; seg], &vec![2.0; seg]);
+            }
+        }
+        kv.set_len(short_len);
+        kvs.push(kv);
+    }
+    let paged_bytes = pool.bytes_in_use();
+    let prealloc_bytes = n_reqs * m.kv_request_bytes();
+    assert!(
+        (paged_bytes as f64) < 0.10 * prealloc_bytes as f64,
+        "paged {paged_bytes} B vs preallocated {prealloc_bytes} B"
+    );
+    // And it is exactly one page per (request, layer) here.
+    assert_eq!(pool.pages_in_use(), n_reqs * m.layers);
 }
 
 // ---------------------------------------------------------------------------
