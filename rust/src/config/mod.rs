@@ -232,6 +232,16 @@ pub struct Config {
 }
 
 impl Config {
+    /// Small 2 AW × 2 EW cluster with quick worker bring-up — the shared
+    /// base of the integration tests and the failure-scenario harness.
+    pub fn small_test() -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster.num_aws = 2;
+        cfg.cluster.num_ews = 2;
+        cfg.transport.worker_extra_init = Duration::from_millis(10);
+        cfg
+    }
+
     pub fn from_file(path: &Path) -> Result<Config, ConfigError> {
         let text = std::fs::read_to_string(path)?;
         Self::from_toml_str(&text)

@@ -29,7 +29,8 @@ use crate::runtime::{ArgValue, Device, DeviceRole};
 use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
 use crate::checkpoint::CkptStreamer;
-use std::collections::{HashMap, VecDeque};
+use crate::util::clock::{self, Clock};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -72,12 +73,15 @@ pub struct AwWorker {
     device: Device,
     inbox: Inbox<ClusterMsg>,
     handle: NodeHandle,
+    clock: Clock,
     refe: Refe,
     streamer: CkptStreamer,
     store_qp: Qp<ClusterMsg>,
     gw_qp: Qp<ClusterMsg>,
     pool: Arc<KvPool>,
-    reqs: HashMap<u64, Req>,
+    /// Ordered map: iteration order (PCR snapshots, diagnostics) must be
+    /// deterministic for scenario replay.
+    reqs: BTreeMap<u64, Req>,
     prefill_q: VecDeque<u64>,
     active: VecDeque<u64>,
     deferred: Vec<Envelope<ClusterMsg>>,
@@ -89,37 +93,38 @@ pub struct AwWorker {
 
 /// Spawn an AW worker thread; blocks until initialized (T_w) and returns
 /// (thread handle, device handle).
-pub fn spawn(params: AwParams) -> (std::thread::JoinHandle<()>, Device) {
-    let (tx, rx) = std::sync::mpsc::channel();
+pub fn spawn(params: AwParams) -> Result<(std::thread::JoinHandle<()>, Device), String> {
+    let worker_clock = params.fabric.clock().clone();
+    let (tx, rx) = clock::channel(&worker_clock);
     let idx = params.idx;
-    let h = std::thread::Builder::new()
-        .name(format!("aw-{idx}"))
-        .spawn(move || {
-            let mut w = match AwWorker::init(params) {
-                Ok(w) => w,
-                Err(e) => {
-                    let _ = tx.send(Err(e));
-                    return;
-                }
-            };
-            let _ = tx.send(Ok(w.device.clone()));
-            w.run();
-        })
-        .expect("spawn aw thread");
-    let device = rx.recv().expect("aw init channel").expect("aw init");
-    (h, device)
+    let h = clock::spawn_participant(&worker_clock, format!("aw-{idx}"), move || {
+        let mut w = match AwWorker::init(params) {
+            Ok(w) => w,
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                return;
+            }
+        };
+        let _ = tx.send(Ok(w.device.clone()));
+        w.run();
+    })
+    .map_err(|e| format!("spawn aw thread: {e}"))?;
+    let device = rx.recv().map_err(|_| "aw init channel closed".to_string())??;
+    Ok((h, device))
 }
 
 impl AwWorker {
     fn init(p: AwParams) -> Result<AwWorker, String> {
         let node = NodeId::Aw(p.idx);
+        let clock = p.fabric.clock().clone();
         let (inbox, handle) = p.fabric.register(node);
-        let device = Device::spawn(
+        let device = Device::spawn_clocked(
             format!("aw{}", p.idx),
             p.manifest.clone(),
             p.weights.clone(),
             DeviceRole::Attention.plan(&p.manifest),
             p.cfg.transport.worker_extra_init,
+            clock.clone(),
         )
         .map_err(|e| e.to_string())?;
         let refe = Refe::new(p.idx, p.ert, p.cfg.resilience.clone(), p.fabric.clone());
@@ -136,12 +141,13 @@ impl AwWorker {
             device,
             inbox,
             handle,
+            clock,
             refe,
             streamer,
             store_qp,
             gw_qp,
             pool: p.pool,
-            reqs: HashMap::new(),
+            reqs: BTreeMap::new(),
             prefill_q: VecDeque::new(),
             active: VecDeque::new(),
             deferred: Vec::new(),
@@ -196,7 +202,7 @@ impl AwWorker {
                     // Unroutable/CCL abort: the orchestrator decides what
                     // happens next (coarse restart in baseline mode). Hold
                     // position; retry after a beat.
-                    std::thread::sleep(Duration::from_millis(20));
+                    self.clock.sleep(Duration::from_millis(20));
                 }
             }
             // 4. Opportunistic checkpoint flush (§6.1).
@@ -254,7 +260,7 @@ impl AwWorker {
         // Pause until the snapshot is fully on the wire.
         let busy = self.handle.egress().busy_for();
         if !busy.is_zero() {
-            std::thread::sleep(busy);
+            self.clock.sleep(busy);
         }
     }
 

@@ -1,6 +1,10 @@
 //! Cluster assembly: builds the fabric, spawns the checkpoint store,
 //! orchestrator, gateway, AWs and EWs, and exposes the fault-injection
 //! and reporting API the experiments use.
+//!
+//! Every service thread registers with the cluster's [`Clock`] and blocks
+//! only through it, so the whole cluster runs unchanged on wall time or —
+//! for the scenario harness — on a deterministic virtual clock.
 
 use super::aw::{self, AwParams};
 use super::ert::Ert;
@@ -15,11 +19,12 @@ use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
 use crate::runtime::Device;
 use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane};
+use crate::util::clock::{self, Clock};
 use crate::workload::Request;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Spawner: creates workers on demand (initial bring-up, background
 /// provisioning, coarse restarts). Owned by the cluster, shared with the
@@ -64,7 +69,7 @@ impl Spawner {
             fabric: self.fabric.clone(),
             pool,
             stop: self.stop.clone(),
-        });
+        })?;
         self.registry
             .lock()
             .unwrap()
@@ -92,7 +97,7 @@ impl Spawner {
             weights: self.weights.clone(),
             fabric: self.fabric.clone(),
             stop: self.stop.clone(),
-        });
+        })?;
         self.registry
             .lock()
             .unwrap()
@@ -144,6 +149,11 @@ pub struct LaunchOptions {
     pub drain_timeout: Duration,
     /// Record the AW egress links' traffic (Fig. 8).
     pub record_traffic: bool,
+    /// Time source for the whole cluster. `Clock::wall()` (the default)
+    /// preserves real-time behavior; a virtual clock makes the run a
+    /// deterministic discrete-event simulation — the caller must then be
+    /// a registered clock participant before calling `Cluster::launch`.
+    pub clock: Clock,
 }
 
 impl Default for LaunchOptions {
@@ -153,6 +163,7 @@ impl Default for LaunchOptions {
             http_port: None,
             drain_timeout: Duration::from_secs(120),
             record_traffic: false,
+            clock: Clock::wall(),
         }
     }
 }
@@ -164,10 +175,13 @@ pub struct Cluster {
     pub events: Arc<EventLog>,
     pub gw: Arc<GatewayShared>,
     pub store: Arc<Mutex<CkptStore>>,
+    clock: Clock,
     stop: Arc<AtomicBool>,
     service_threads: Vec<std::thread::JoinHandle<()>>,
     pub initial_aws: Vec<u32>,
     pub initial_ews: Vec<u32>,
+    /// Initial (ew, primaries, shadows) layout — the respawn template.
+    ew_specs: Vec<(u32, Vec<usize>, Vec<usize>)>,
 }
 
 /// Summary returned by `Cluster::finish`.
@@ -190,7 +204,9 @@ impl Cluster {
         schedule: Vec<Request>,
         opts: LaunchOptions,
     ) -> Cluster {
-        let fabric: Arc<Fabric<ClusterMsg>> = Fabric::new(cfg.transport.clone());
+        let clock = opts.clock.clone();
+        let fabric: Arc<Fabric<ClusterMsg>> =
+            Fabric::with_clock(cfg.transport.clone(), clock.clone());
         let stop = Arc::new(AtomicBool::new(false));
         let gw_shared = Arc::new(GatewayShared::default());
         let spawner = Arc::new(Spawner {
@@ -210,34 +226,30 @@ impl Cluster {
             let store = store.clone();
             let fabric = fabric.clone();
             let stop = stop.clone();
-            std::thread::Builder::new()
-                .name("ckpt-store".into())
-                .spawn(move || {
-                    let mut qps: HashMap<NodeId, crate::transport::Qp<ClusterMsg>> =
-                        HashMap::new();
-                    while !stop.load(Ordering::Relaxed) && store_handle.is_alive() {
-                        match store_inbox.recv(Duration::from_millis(2)) {
-                            Ok(env) => {
-                                let replies =
-                                    store.lock().unwrap().handle(env.from, env.msg);
-                                for (to, msg) in replies {
-                                    let class = match &msg {
-                                        ClusterMsg::Restore(_) => TrafficClass::Restore,
-                                        _ => TrafficClass::Admin,
-                                    };
-                                    let bytes = msg.wire_bytes();
-                                    let qp = qps.entry(to).or_insert_with(|| {
-                                        fabric.qp(NodeId::Store, to, Plane::Data).expect("qp")
-                                    });
-                                    let _ = qp.post(msg, bytes, class);
-                                }
+            clock::spawn_participant(&clock, "ckpt-store", move || {
+                let mut qps: HashMap<NodeId, crate::transport::Qp<ClusterMsg>> = HashMap::new();
+                while !stop.load(Ordering::Relaxed) && store_handle.is_alive() {
+                    match store_inbox.recv(Duration::from_millis(2)) {
+                        Ok(env) => {
+                            let replies = store.lock().unwrap().handle(env.from, env.msg);
+                            for (to, msg) in replies {
+                                let class = match &msg {
+                                    ClusterMsg::Restore(_) => TrafficClass::Restore,
+                                    _ => TrafficClass::Admin,
+                                };
+                                let bytes = msg.wire_bytes();
+                                let qp = qps.entry(to).or_insert_with(|| {
+                                    fabric.qp(NodeId::Store, to, Plane::Data).expect("qp")
+                                });
+                                let _ = qp.post(msg, bytes, class);
                             }
-                            Err(crate::transport::QpError::Timeout) => {}
-                            Err(_) => break,
                         }
+                        Err(crate::transport::QpError::Timeout) => {}
+                        Err(_) => break,
                     }
-                })
-                .expect("store thread")
+                }
+            })
+            .expect("store thread")
         };
 
         // Pre-register the static service nodes so workers can create QPs
@@ -278,21 +290,39 @@ impl Cluster {
         });
 
         // --- workers (parallel bring-up) ---------------------------------
+        // Helper threads report through a clock channel (a raw `join` on a
+        // clock participant would deadlock virtual time), then are joined
+        // once their result is in.
+        let (done_tx, done_rx) = clock::channel::<Result<(), String>>(&clock);
         let mut joins = Vec::new();
         for (i, prim, shad) in ew_specs.clone() {
             let spawner = spawner.clone();
             let aws = initial_aws.clone();
-            joins.push(std::thread::spawn(move || {
-                spawner.spawn_ew(i, prim, shad, aws).map(|_| ())
-            }));
+            let tx = done_tx.clone();
+            joins.push(
+                clock::spawn_participant(&clock, format!("bringup-ew{i}"), move || {
+                    let _ = tx.send(spawner.spawn_ew(i, prim, shad, aws).map(|_| ()));
+                })
+                .expect("bring-up thread"),
+            );
         }
         for &i in &initial_aws {
             let spawner = spawner.clone();
             let e = ert.clone();
-            joins.push(std::thread::spawn(move || spawner.spawn_aw(i, e).map(|_| ())));
+            let tx = done_tx.clone();
+            joins.push(
+                clock::spawn_participant(&clock, format!("bringup-aw{i}"), move || {
+                    let _ = tx.send(spawner.spawn_aw(i, e).map(|_| ()));
+                })
+                .expect("bring-up thread"),
+            );
+        }
+        drop(done_tx);
+        for _ in 0..joins.len() {
+            done_rx.recv().expect("bring-up thread").expect("worker init");
         }
         for j in joins {
-            j.join().expect("bring-up thread").expect("worker init");
+            let _ = j.join();
         }
 
         if opts.record_traffic {
@@ -307,7 +337,7 @@ impl Cluster {
         // The event epoch starts here: t=0 is the schedule start (worker
         // bring-up above is excluded from run timelines; T_w is reported
         // separately via InitStats).
-        let events = Arc::new(EventLog::new());
+        let events = Arc::new(EventLog::with_clock(clock.clone()));
         let gw_thread = gateway::spawn(GatewayParams {
             inbox: gw_inbox,
             schedule,
@@ -326,11 +356,18 @@ impl Cluster {
             events,
             gw: gw_shared,
             store,
+            clock,
             stop,
             service_threads: vec![store_thread, orch_thread, gw_thread],
             initial_aws,
             initial_ews: ew_specs.iter().map(|(i, _, _)| *i).collect(),
+            ew_specs,
         }
+    }
+
+    /// The cluster's time source.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Fail-stop injection (the SIGINT of §7.2).
@@ -342,22 +379,62 @@ impl Cluster {
         self.spawner.kill(NodeId::Ew(idx));
     }
 
+    /// Respawn a previously killed AW on its original slot and integrate
+    /// it (membership broadcast) — the scenario DSL's `respawn aw<i>`.
+    pub fn respawn_aw(&self, idx: u32) -> Result<(), String> {
+        let ert = self.state.current_ert().ok_or("orchestrator has no ERT yet")?;
+        self.spawner.spawn_aw(idx, ert)?;
+        let live = self.state.integrate_aw(idx);
+        for e in self.state.live_ews() {
+            self.spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
+        }
+        self.spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
+        self.state.clear_handled(NodeId::Aw(idx));
+        Ok(())
+    }
+
+    /// Respawn a previously killed EW on its original slot with its
+    /// initial expert layout, re-promoting it in the ERT.
+    pub fn respawn_ew(&self, idx: u32) -> Result<(), String> {
+        let (_, primaries, shadows) = self
+            .ew_specs
+            .iter()
+            .find(|(i, _, _)| *i == idx)
+            .cloned()
+            .ok_or_else(|| format!("ew{idx} was not part of the initial layout"))?;
+        let aws = self.state.live_aws();
+        self.spawner.spawn_ew(idx, primaries.clone(), shadows.clone(), aws)?;
+        let (table, version, live_aws) = self
+            .state
+            .integrate_ew(idx, primaries, shadows)
+            .ok_or("orchestrator has no ERT yet")?;
+        for a in live_aws {
+            self.spawner
+                .post_admin(NodeId::Aw(a), ClusterMsg::ErtUpdate { version, table: table.clone() });
+        }
+        self.state.clear_handled(NodeId::Ew(idx));
+        Ok(())
+    }
+
     /// Wait until the gateway drains (or `timeout`). Returns whether the
-    /// workload completed.
+    /// workload completed. Under a virtual clock the caller must be a
+    /// registered participant; the timeout is virtual time.
     pub fn wait_done(&self, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
-        while Instant::now() < deadline {
+        let deadline = self.clock.now() + timeout;
+        while self.clock.now() < deadline {
             if self.gw.done.load(Ordering::Acquire) {
                 return true;
             }
-            std::thread::sleep(Duration::from_millis(20));
+            self.clock.sleep(Duration::from_millis(20));
         }
-        false
+        self.gw.done.load(Ordering::Acquire)
     }
 
     /// Stop everything and produce the run report.
     pub fn finish(mut self, window_secs: f64) -> ClusterReport {
         self.stop.store(true, Ordering::Release);
+        // Free-run teardown: participants drain on real time from here.
+        self.clock.shutdown();
         for t in self.service_threads.drain(..) {
             let _ = t.join();
         }

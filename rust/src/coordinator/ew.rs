@@ -29,10 +29,11 @@ use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, ReturnMsg};
 use crate::runtime::{roles, ArgValue, Device, DeviceRole};
 use crate::tensor::Tensor;
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
+use crate::util::clock::{self, Clock};
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 pub struct EwParams {
     pub idx: u32,
@@ -52,8 +53,10 @@ struct AwInfo {
 }
 
 struct LayerBuf {
-    dispatches: HashMap<u32, DispatchMsg>,
-    first_arrival: Instant,
+    /// Ordered by AW id: merge and return order must be deterministic.
+    dispatches: BTreeMap<u32, DispatchMsg>,
+    /// Clock reading when the first dispatch of this layer arrived.
+    first_arrival: Duration,
     probed: bool,
 }
 
@@ -65,11 +68,12 @@ pub struct EwWorker {
     device: Device,
     inbox: Inbox<ClusterMsg>,
     handle: NodeHandle,
+    clock: Clock,
     fabric: Arc<Fabric<ClusterMsg>>,
     data_qps: HashMap<u32, Qp<ClusterMsg>>,
     ctrl_qps: HashMap<u32, Qp<ClusterMsg>>,
     orch_qp: Option<Qp<ClusterMsg>>,
-    aws: HashMap<u32, AwInfo>,
+    aws: BTreeMap<u32, AwInfo>,
     buffers: BTreeMap<u32, LayerBuf>,
     resident: HashSet<usize>,
     stop: Arc<AtomicBool>,
@@ -82,42 +86,43 @@ pub struct EwWorker {
 
 /// Spawn an EW worker thread; blocks until the device is initialized (the
 /// init time is the EW's T_w) and returns (thread handle, device handle).
-pub fn spawn(params: EwParams) -> (std::thread::JoinHandle<()>, Device) {
-    let (tx, rx) = std::sync::mpsc::channel();
+pub fn spawn(params: EwParams) -> Result<(std::thread::JoinHandle<()>, Device), String> {
+    let worker_clock = params.fabric.clock().clone();
+    let (tx, rx) = clock::channel(&worker_clock);
     let idx = params.idx;
-    let h = std::thread::Builder::new()
-        .name(format!("ew-{idx}"))
-        .spawn(move || {
-            let mut w = match EwWorker::init(params) {
-                Ok(w) => w,
-                Err(e) => {
-                    let _ = tx.send(Err(e));
-                    return;
-                }
-            };
-            let _ = tx.send(Ok(w.device.clone()));
-            w.run();
-        })
-        .expect("spawn ew thread");
-    let device = rx.recv().expect("ew init channel").expect("ew init");
-    (h, device)
+    let h = clock::spawn_participant(&worker_clock, format!("ew-{idx}"), move || {
+        let mut w = match EwWorker::init(params) {
+            Ok(w) => w,
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                return;
+            }
+        };
+        let _ = tx.send(Ok(w.device.clone()));
+        w.run();
+    })
+    .map_err(|e| format!("spawn ew thread: {e}"))?;
+    let device = rx.recv().map_err(|_| "ew init channel closed".to_string())??;
+    Ok((h, device))
 }
 
 impl EwWorker {
     fn init(p: EwParams) -> Result<EwWorker, String> {
         let node = NodeId::Ew(p.idx);
+        let clock = p.fabric.clock().clone();
         let (inbox, handle) = p.fabric.register(node);
         // Shadow weights are uploaded at init only when the feature is on.
         let mut experts = p.primaries.clone();
         if p.cfg.resilience.shadow_experts {
             experts.extend(p.shadows.iter().copied());
         }
-        let device = Device::spawn(
+        let device = Device::spawn_clocked(
             format!("ew{}", p.idx),
             p.manifest.clone(),
             p.weights.clone(),
             DeviceRole::Expert { experts: experts.clone() }.plan(&p.manifest),
             p.cfg.transport.worker_extra_init,
+            clock.clone(),
         )
         .map_err(|e| e.to_string())?;
         let aws = p
@@ -133,6 +138,7 @@ impl EwWorker {
             device,
             inbox,
             handle,
+            clock,
             fabric: p.fabric,
             data_qps: HashMap::new(),
             ctrl_qps: HashMap::new(),
@@ -174,9 +180,10 @@ impl EwWorker {
                     self.execute_for_aw(aw, &d);
                     return;
                 }
+                let now = self.clock.now();
                 let buf = self.buffers.entry(d.layer).or_insert_with(|| LayerBuf {
-                    dispatches: HashMap::new(),
-                    first_arrival: Instant::now(),
+                    dispatches: BTreeMap::new(),
+                    first_arrival: now,
                     probed: false,
                 });
                 buf.dispatches.insert(aw, d);
@@ -225,7 +232,8 @@ impl EwWorker {
                     .copied()
                     .filter(|a| !buf.dispatches.contains_key(a))
                     .collect();
-                (missing.is_empty(), buf.first_arrival.elapsed(), missing)
+                let age = self.clock.now().saturating_sub(buf.first_arrival);
+                (missing.is_empty(), age, missing)
             };
 
             let mut run_partial = false;
@@ -307,10 +315,12 @@ impl EwWorker {
         if partial {
             self.partial_batches += 1;
         }
-        // Merge rows per expert across AWs: expert -> (aw, slot, row data)
+        // Merge rows per expert across AWs: expert -> (aw, slot, row data).
+        // Everything is ordered (expert asc, AW asc) so execution and
+        // return composition replay identically under the virtual clock.
         let hidden = self.manifest.model.hidden;
         let mut merged: BTreeMap<u16, Vec<(u32, u32, Vec<f32>)>> = BTreeMap::new();
-        let mut rounds: HashMap<u32, u64> = HashMap::new();
+        let mut rounds: BTreeMap<u32, u64> = BTreeMap::new();
         for (&aw, d) in &buf.dispatches {
             rounds.insert(aw, d.round);
             for e in &d.entries {
@@ -321,11 +331,11 @@ impl EwWorker {
             }
         }
         // Execute per expert, split results back per AW.
-        let mut per_aw: HashMap<u32, Vec<DispatchEntry>> = HashMap::new();
+        let mut per_aw: BTreeMap<u32, Vec<DispatchEntry>> = BTreeMap::new();
         for (expert, rows) in merged {
             let outs = self.run_expert(layer as usize, expert as usize, &rows, hidden);
             // Regroup rows by AW.
-            let mut by_aw: HashMap<u32, (Vec<u32>, Vec<f32>)> = HashMap::new();
+            let mut by_aw: BTreeMap<u32, (Vec<u32>, Vec<f32>)> = BTreeMap::new();
             for ((aw, slot, _), out_row) in rows.iter().zip(outs) {
                 let entry = by_aw.entry(*aw).or_default();
                 entry.0.push(*slot);

@@ -8,10 +8,10 @@ use crate::metrics::{EventKind, EventLog};
 use crate::proto::{ClusterMsg, RequestMeta};
 use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
 use crate::workload::Request;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 pub struct GatewayParams {
     /// Pre-registered inbox (the cluster registers the gateway node before
@@ -64,21 +64,22 @@ struct GwReq {
 }
 
 pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
-    std::thread::Builder::new()
-        .name("gateway".into())
-        .spawn(move || gateway_main(params))
+    let clock = params.fabric.clock().clone();
+    crate::util::clock::spawn_participant(&clock, "gateway", move || gateway_main(params))
         .expect("spawn gateway")
 }
 
 fn gateway_main(p: GatewayParams) {
+    let clock = p.fabric.clock().clone();
     let inbox = &p.inbox;
     let mut qps: HashMap<u32, Qp<ClusterMsg>> = HashMap::new();
     let mut orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
     let store_qp = p.fabric.qp(NodeId::Gateway, NodeId::Store, Plane::Control).ok();
     let mut aws = p.initial_aws.clone();
     let mut rr = 0usize;
-    let mut reqs: HashMap<u64, GwReq> = HashMap::new();
-    let start = Instant::now();
+    // Ordered: RestartNotice resubmission order must be deterministic.
+    let mut reqs: BTreeMap<u64, GwReq> = BTreeMap::new();
+    let start = clock.now();
     let mut next = 0usize;
     let last_arrival = p.schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
 
@@ -86,7 +87,7 @@ fn gateway_main(p: GatewayParams) {
         if p.stop.load(Ordering::Relaxed) {
             break;
         }
-        let now = start.elapsed().as_secs_f64();
+        let now = clock.now().saturating_sub(start).as_secs_f64();
 
         // 1. Submit due arrivals.
         while next < p.schedule.len() && p.schedule[next].arrival_s <= now {

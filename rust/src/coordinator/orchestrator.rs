@@ -9,14 +9,15 @@
 
 use super::cluster::Spawner;
 use super::ert::Ert;
-use crate::proto::{ClusterMsg, CommitMeta, HDR_BYTES};
+use crate::proto::{ClusterMsg, CommitMeta, ErtTable, HDR_BYTES};
 use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane, Qp};
+use crate::util::clock::{self, Clock};
 use crate::util::http::{Handler, HttpServer};
 use crate::util::json::{arr, num, obj, Json};
 use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecoveryMode {
@@ -30,6 +31,10 @@ pub enum RecoveryMode {
 #[derive(Default)]
 pub struct OrchState {
     inner: Mutex<StateInner>,
+    /// Failures already being handled (dedup of concurrent reports).
+    /// Shared (not orchestrator-local) so a respawn on the original slot
+    /// can re-arm detection for that node id.
+    handled: Mutex<HashSet<NodeId>>,
     /// Total failures handled (AW, EW).
     pub aw_failures: AtomicU64,
     pub ew_failures: AtomicU64,
@@ -81,6 +86,68 @@ impl OrchState {
         self.inner.lock().unwrap().ert_version
     }
 
+    /// The orchestrator's current ERT (None before initialization).
+    pub fn current_ert(&self) -> Option<Ert> {
+        self.inner.lock().unwrap().ert.clone()
+    }
+
+    fn is_handled(&self, node: NodeId) -> bool {
+        self.handled.lock().unwrap().contains(&node)
+    }
+
+    fn mark_handled(&self, node: NodeId) {
+        self.handled.lock().unwrap().insert(node);
+    }
+
+    /// Re-arm failure detection for a node id (a worker was respawned on
+    /// its original slot).
+    pub(crate) fn clear_handled(&self, node: NodeId) {
+        self.handled.lock().unwrap().remove(&node);
+    }
+
+    fn clear_all_handled(&self) {
+        self.handled.lock().unwrap().clear();
+    }
+
+    /// Mark an AW slot live (initial bring-up of a replacement, or a
+    /// scenario respawn) and return the updated live set.
+    pub(crate) fn integrate_aw(&self, idx: u32) -> Vec<u32> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.aws.insert(idx, true);
+        inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
+    }
+
+    /// Register a (re)spawned EW, promote it in the ERT (primary for its
+    /// primaries, tail candidate for its shadows), and bump the version.
+    /// Returns (new table, new version, live AWs to notify), or None if
+    /// the orchestrator has not installed an ERT yet.
+    pub(crate) fn integrate_ew(
+        &self,
+        idx: u32,
+        primaries: Vec<usize>,
+        shadows: Vec<usize>,
+    ) -> Option<(ErtTable, u64, Vec<u32>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut table = inner.ert.as_ref()?.table().clone();
+        inner.ews.insert(
+            idx,
+            EwInfo { alive: true, primaries: primaries.clone(), shadows: shadows.clone() },
+        );
+        for &e in &primaries {
+            table[e].retain(|&c| c != idx);
+            table[e].insert(0, idx);
+        }
+        for &e in &shadows {
+            table[e].retain(|&c| c != idx);
+            table[e].push(idx);
+        }
+        inner.ert_version += 1;
+        let v = inner.ert_version;
+        inner.ert = Some(Ert::new(v, table.clone()));
+        let aws: Vec<u32> = inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+        Some((table, v, aws))
+    }
+
     fn to_json(&self) -> Json {
         let inner = self.inner.lock().unwrap();
         obj(vec![
@@ -121,14 +188,14 @@ pub struct OrchParams {
 }
 
 pub fn spawn(params: OrchParams) -> std::thread::JoinHandle<()> {
-    std::thread::Builder::new()
-        .name("orchestrator".into())
-        .spawn(move || orch_main(params))
+    let clock = params.spawner.fabric.clock().clone();
+    clock::spawn_participant(&clock, "orchestrator", move || orch_main(params))
         .expect("spawn orchestrator")
 }
 
 fn orch_main(p: OrchParams) {
     let fabric = p.spawner.fabric.clone();
+    let clock = fabric.clock().clone();
     let inbox = p.inbox;
     {
         let mut inner = p.state.inner.lock().unwrap();
@@ -158,6 +225,7 @@ fn orch_main(p: OrchParams) {
 
     let mut o = Orch {
         fabric,
+        clock: clock.clone(),
         spawner: p.spawner,
         state: p.state,
         mode: p.mode,
@@ -165,8 +233,7 @@ fn orch_main(p: OrchParams) {
         qps: BTreeMap::new(),
         pending_adoptions: VecDeque::new(),
         adopt_rr: 0,
-        bound: std::collections::HashMap::new(),
-        handled: HashSet::new(),
+        bound: BTreeMap::new(),
         next_ew_idx: 0,
         next_aw_idx: 0,
         last_restart: None,
@@ -179,15 +246,15 @@ fn orch_main(p: OrchParams) {
 
     let probe_interval = o.spawner.cfg.resilience.probe_interval;
     let detection = o.spawner.cfg.resilience.detection;
-    let mut last_sweep = Instant::now();
+    let mut last_sweep = clock.now();
     while !o.stop.load(Ordering::Relaxed) {
         match inbox.recv(Duration::from_millis(2)) {
             Ok(env) => o.handle(env.msg),
             Err(crate::transport::QpError::Timeout) => {}
             Err(_) => break,
         }
-        if detection && last_sweep.elapsed() >= probe_interval {
-            last_sweep = Instant::now();
+        if detection && clock.now().saturating_sub(last_sweep) >= probe_interval {
+            last_sweep = clock.now();
             o.probe_sweep();
         }
     }
@@ -195,6 +262,7 @@ fn orch_main(p: OrchParams) {
 
 struct Orch {
     fabric: Arc<Fabric<ClusterMsg>>,
+    clock: Clock,
     spawner: Arc<Spawner>,
     state: Arc<OrchState>,
     mode: RecoveryMode,
@@ -203,15 +271,14 @@ struct Orch {
     pending_adoptions: VecDeque<CommitMeta>,
     adopt_rr: usize,
     /// request -> AW binding (gateway reports; used to find requests that
-    /// died without any committed checkpoint, e.g. mid-prefill).
-    bound: std::collections::HashMap<u64, u32>,
-    /// Failures already being handled (dedup of concurrent reports).
-    handled: HashSet<NodeId>,
+    /// died without any committed checkpoint, e.g. mid-prefill). Ordered:
+    /// the Resubmit order it induces must be deterministic.
+    bound: BTreeMap<u64, u32>,
     next_ew_idx: u32,
     next_aw_idx: u32,
     /// Stale failure reports within this window after a full restart are
     /// absorbed (the communicator re-init already covered them).
-    last_restart: Option<Instant>,
+    last_restart: Option<Duration>,
 }
 
 impl Orch {
@@ -236,9 +303,10 @@ impl Orch {
                 // In coarse mode, an AW blaming itself means "communicator
                 // error" — the whole job is gone.
                 if self.mode == RecoveryMode::CoarseRestart {
+                    let now = self.clock.now();
                     if self
                         .last_restart
-                        .map(|t| t.elapsed() < Duration::from_secs(5))
+                        .map(|t| now.saturating_sub(t) < Duration::from_secs(5))
                         .unwrap_or(false)
                     {
                         return; // stale report from before the restart
@@ -297,7 +365,7 @@ impl Orch {
     }
 
     fn check_liveness(&mut self, node: NodeId) {
-        if self.handled.contains(&node) {
+        if self.state.is_handled(node) {
             return;
         }
         // The fabric's alive flag is the RNIC-level ground truth a probe
@@ -325,13 +393,13 @@ impl Orch {
     }
 
     fn confirm_and_recover(&mut self, suspect: NodeId) {
-        if self.handled.contains(&suspect) {
+        if self.state.is_handled(suspect) {
             return;
         }
         if self.fabric.is_alive(suspect) {
             return; // stale report
         }
-        self.handled.insert(suspect);
+        self.state.mark_handled(suspect);
         match suspect {
             NodeId::Ew(i) => self.recover_ew(i),
             NodeId::Aw(i) => self.recover_aw(i),
@@ -386,48 +454,26 @@ impl Orch {
             let prim = primaries.clone();
             let shad = shadows.clone();
             let stop = self.stop.clone();
-            std::thread::Builder::new()
-                .name(format!("provision-ew{idx}"))
-                .spawn(move || {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    let aws = state.live_aws();
-                    if spawner.spawn_ew(idx, prim.clone(), shad.clone(), aws).is_err() {
-                        return;
-                    }
-                    // Integrate: make the new EW primary again.
-                    let (table, version, live_aws) = {
-                        let mut inner = state.inner.lock().unwrap();
-                        inner.ews.insert(
-                            idx,
-                            EwInfo { alive: true, primaries: prim.clone(), shadows: shad.clone() },
-                        );
-                        let ert = inner.ert.as_ref().expect("ert");
-                        let mut table = ert.table().clone();
-                        for &e in &prim {
-                            table[e].retain(|&c| c != idx);
-                            table[e].insert(0, idx);
-                        }
-                        for &e in &shad {
-                            table[e].retain(|&c| c != idx);
-                            table[e].push(idx);
-                        }
-                        inner.ert_version += 1;
-                        let v = inner.ert_version;
-                        inner.ert = Some(Ert::new(v, table.clone()));
-                        let aws: Vec<u32> =
-                            inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
-                        (table, v, aws)
-                    };
-                    for a in live_aws {
-                        spawner.post_admin(
-                            NodeId::Aw(a),
-                            ClusterMsg::ErtUpdate { version, table: table.clone() },
-                        );
-                    }
-                })
-                .ok();
+            clock::spawn_participant(&self.clock, format!("provision-ew{idx}"), move || {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let aws = state.live_aws();
+                if spawner.spawn_ew(idx, prim.clone(), shad.clone(), aws).is_err() {
+                    return;
+                }
+                // Integrate: make the new EW primary again.
+                let Some((table, version, live_aws)) = state.integrate_ew(idx, prim, shad) else {
+                    return;
+                };
+                for a in live_aws {
+                    spawner.post_admin(
+                        NodeId::Aw(a),
+                        ClusterMsg::ErtUpdate { version, table: table.clone() },
+                    );
+                }
+            })
+            .ok();
         }
     }
 
@@ -459,28 +505,25 @@ impl Orch {
             let spawner = self.spawner.clone();
             let state = self.state.clone();
             let stop = self.stop.clone();
-            std::thread::Builder::new()
-                .name(format!("provision-aw{idx}"))
-                .spawn(move || {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    let ert = state.inner.lock().unwrap().ert.clone().expect("ert");
-                    if spawner.spawn_aw(idx, ert).is_err() {
-                        return;
-                    }
-                    let live: Vec<u32> = {
-                        let mut inner = state.inner.lock().unwrap();
-                        inner.aws.insert(idx, true);
-                        inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
-                    };
-                    // New AW serves new requests immediately (§5.4).
-                    for e in state.live_ews() {
-                        spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
-                    }
-                    spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
-                })
-                .ok();
+            clock::spawn_participant(&self.clock, format!("provision-aw{idx}"), move || {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let ert = match state.current_ert() {
+                    Some(e) => e,
+                    None => return,
+                };
+                if spawner.spawn_aw(idx, ert).is_err() {
+                    return;
+                }
+                let live = state.integrate_aw(idx);
+                // New AW serves new requests immediately (§5.4).
+                for e in state.live_ews() {
+                    spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
+                }
+                spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
+            })
+            .ok();
         }
     }
 
@@ -524,7 +567,9 @@ impl Orch {
             self.spawner.kill(NodeId::Ew(*e));
         }
         // Rebuild in parallel (restart storm; T_w dominates the stall).
-        let mut joins = Vec::new();
+        // Helpers report over a clock channel so virtual time can advance
+        // through their device-init sleeps; raw joins happen only after
+        // every result is in.
         let ert = {
             let mut inner = self.state.inner.lock().unwrap();
             inner.ert_version += 1;
@@ -534,18 +579,36 @@ impl Orch {
             inner.ert = Some(e.clone());
             e
         };
+        let (done_tx, done_rx) = clock::channel::<()>(&self.clock);
+        let mut joins = Vec::new();
         for &a in &aws {
             let spawner = self.spawner.clone();
             let e = ert.clone();
-            joins.push(std::thread::spawn(move || spawner.spawn_aw(a, e).map(|_| ())));
+            let tx = done_tx.clone();
+            joins.push(
+                clock::spawn_participant(&self.clock, format!("restart-aw{a}"), move || {
+                    let _ = spawner.spawn_aw(a, e);
+                    let _ = tx.send(());
+                })
+                .expect("restart thread"),
+            );
         }
         for (i, info) in &ews {
             let spawner = self.spawner.clone();
             let (i, prim, shad) = (*i, info.primaries.clone(), info.shadows.clone());
             let aws2 = aws.clone();
-            joins.push(std::thread::spawn(move || {
-                spawner.spawn_ew(i, prim, shad, aws2).map(|_| ())
-            }));
+            let tx = done_tx.clone();
+            joins.push(
+                clock::spawn_participant(&self.clock, format!("restart-ew{i}"), move || {
+                    let _ = spawner.spawn_ew(i, prim, shad, aws2);
+                    let _ = tx.send(());
+                })
+                .expect("restart thread"),
+            );
+        }
+        drop(done_tx);
+        for _ in 0..joins.len() {
+            let _ = done_rx.recv();
         }
         for j in joins {
             let _ = j.join();
@@ -567,8 +630,8 @@ impl Orch {
         }
         self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: aws.clone() });
         self.post(NodeId::Gateway, ClusterMsg::RestartNotice);
-        self.handled.clear();
-        self.last_restart = Some(Instant::now());
+        self.state.clear_all_handled();
+        self.last_restart = Some(self.clock.now());
         self.state.restarting.store(false, Ordering::Release);
     }
 }

@@ -18,9 +18,10 @@ use crate::config::ResilienceConfig;
 use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, HDR_BYTES};
 use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeId, Plane, Qp, QpError};
-use std::collections::HashMap;
+use crate::util::clock::Clock;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 #[derive(Debug)]
 pub enum RefeError {
@@ -54,6 +55,7 @@ pub struct Refe {
     pub ert: Ert,
     resilience: ResilienceConfig,
     fabric: Arc<Fabric<ClusterMsg>>,
+    clock: Clock,
     data_qps: HashMap<u32, Qp<ClusterMsg>>,
     ctrl_qps: HashMap<u32, Qp<ClusterMsg>>,
     orch_qp: Option<Qp<ClusterMsg>>,
@@ -72,12 +74,14 @@ impl Refe {
         resilience: ResilienceConfig,
         fabric: Arc<Fabric<ClusterMsg>>,
     ) -> Refe {
+        let clock = fabric.clock().clone();
         Refe {
             aw,
             node: NodeId::Aw(aw),
             ert,
             resilience,
             fabric,
+            clock,
             data_qps: HashMap::new(),
             ctrl_qps: HashMap::new(),
             orch_qp: None,
@@ -110,9 +114,12 @@ impl Refe {
         let hidden = g.row_len();
 
         // slot -> (row index, gate weight); slots are per-call dense ids.
+        // Slots are assigned iterating the expert groups (a BTreeMap), so
+        // slot order is expert-ascending — the canonical accumulation
+        // order below.
         let mut slot_info: Vec<(usize, f32)> = Vec::new();
-        // Build per-EW dispatch entries.
-        let mut per_ew: HashMap<u32, Vec<DispatchEntry>> = HashMap::new();
+        // Build per-EW dispatch entries (ordered for deterministic posts).
+        let mut per_ew: BTreeMap<u32, Vec<DispatchEntry>> = BTreeMap::new();
         // (expert, slots, rows) per entry retained for replay on failure.
         let mut entry_of_slot: Vec<(usize, u32)> = Vec::new(); // slot -> (expert, ew)
 
@@ -138,7 +145,7 @@ impl Refe {
         }
 
         // Post to every known EW; empty dispatches are the heartbeat.
-        let mut outstanding: HashMap<u32, Vec<u32>> = HashMap::new(); // ew -> slots
+        let mut outstanding: BTreeMap<u32, Vec<u32>> = BTreeMap::new(); // ew -> slots
         for ew in self.ert.all_ews() {
             if self.ert.is_dead(ew) {
                 continue;
@@ -160,11 +167,16 @@ impl Refe {
             }
         }
 
-        // Gather with self-healing.
+        // Gather with self-healing. Expert outputs are *buffered* per slot
+        // and applied after the last one arrives, in slot order — the sum
+        // into each row is then independent of return arrival order (so
+        // failover replays and scheduling jitter cannot perturb f32
+        // accumulation).
         let mut done: Vec<bool> = vec![false; slot_info.len()];
+        let mut slot_out: Vec<Option<Vec<f32>>> = vec![None; slot_info.len()];
         let mut remaining = slot_info.len();
-        let start = Instant::now();
-        let mut last_progress = Instant::now();
+        let start = self.clock.now();
+        let mut last_progress = start;
         while remaining > 0 {
             match inbox.recv(Duration::from_millis(2)) {
                 Ok(env) => match env.msg {
@@ -175,8 +187,7 @@ impl Refe {
                                 if s < done.len() && !done[s] {
                                     done[s] = true;
                                     remaining -= 1;
-                                    let (row, w) = slot_info[s];
-                                    ops::axpy_row(h.row_mut(row), w, e.rows.row(i));
+                                    slot_out[s] = Some(e.rows.row(i).to_vec());
                                 }
                             }
                         }
@@ -188,7 +199,7 @@ impl Refe {
                                 }
                             }
                         }
-                        last_progress = Instant::now();
+                        last_progress = self.clock.now();
                     }
                     ClusterMsg::Return(_) => {} // stale round/layer
                     _ => deferred.push(env),
@@ -200,7 +211,7 @@ impl Refe {
                 break;
             }
 
-            let waited = last_progress.elapsed();
+            let waited = self.clock.now().saturating_sub(last_progress);
             if self.resilience.detection && waited > self.resilience.silence_window {
                 // Probe EWs that still owe us rows; replay onto shadows.
                 let suspects: Vec<u32> = outstanding.keys().copied().collect();
@@ -219,10 +230,10 @@ impl Refe {
                 if !any_dead {
                     // All owers are alive; reset the window so we don't
                     // re-probe in a tight loop while they batch.
-                    last_progress = Instant::now();
+                    last_progress = self.clock.now();
                 }
             } else if !self.resilience.detection
-                && start.elapsed() > self.resilience.ccl_abort_timeout
+                && self.clock.now().saturating_sub(start) > self.resilience.ccl_abort_timeout
             {
                 // Baselines: fatal communicator error (NCCL-style abort).
                 let node = self.node;
@@ -234,7 +245,16 @@ impl Refe {
                         TrafficClass::Control,
                     );
                 }
-                return Err(RefeError::CclAbort(start.elapsed()));
+                return Err(RefeError::CclAbort(self.clock.now().saturating_sub(start)));
+            }
+        }
+        // Canonical accumulation: slot order (expert-ascending, rows in
+        // group order). Every replica of an expert computes bitwise-equal
+        // outputs, so failover replays cannot change the result either.
+        for (s, out) in slot_out.iter().enumerate() {
+            if let Some(out) = out {
+                let (row, w) = slot_info[s];
+                ops::axpy_row(h.row_mut(row), w, out);
             }
         }
         Ok(())
@@ -252,11 +272,11 @@ impl Refe {
         entry_of_slot: &[(usize, u32)],
         slot_info: &[(usize, f32)],
         g: &Tensor,
-        outstanding: &mut HashMap<u32, Vec<u32>>,
+        outstanding: &mut BTreeMap<u32, Vec<u32>>,
     ) -> Result<(), RefeError> {
         let hidden = g.row_len();
         // Group pending slots by expert, resolve to the next candidate.
-        let mut by_expert: HashMap<usize, Vec<u32>> = HashMap::new();
+        let mut by_expert: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         for &s in pending {
             by_expert.entry(entry_of_slot[s as usize].0).or_default().push(s);
         }

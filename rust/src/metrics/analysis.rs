@@ -5,7 +5,6 @@
 use super::{Event, EventKind, EventLog};
 use crate::util::stats::{self, Timeline};
 use std::collections::HashMap;
-use std::time::Instant;
 
 /// Median/p95/mean over a latency sample, in milliseconds.
 #[derive(Debug, Clone)]
@@ -69,11 +68,11 @@ impl RunAnalysis {
 
 impl RunAnalysis {
     pub fn from_log(log: &EventLog, window_secs: f64) -> RunAnalysis {
-        Self::from_events(&log.snapshot(), log.epoch(), window_secs)
+        Self::from_events(&log.snapshot(), window_secs)
     }
 
-    pub fn from_events(events: &[Event], epoch: Instant, window_secs: f64) -> RunAnalysis {
-        let secs = |at: Instant| at.duration_since(epoch).as_secs_f64();
+    pub fn from_events(events: &[Event], window_secs: f64) -> RunAnalysis {
+        let secs = |at: std::time::Duration| at.as_secs_f64();
         let mut submitted: HashMap<u64, f64> = HashMap::new();
         let mut last_token: HashMap<u64, f64> = HashMap::new();
         let mut ttft = Vec::new();
@@ -156,9 +155,9 @@ mod tests {
     use crate::metrics::EventLog;
     use std::time::Duration;
 
-    fn ev(epoch: Instant, t_ms: u64, kind: EventKind, req: u64, tok: u32) -> Event {
+    fn ev(t_ms: u64, kind: EventKind, req: u64, tok: u32) -> Event {
         Event {
-            at: epoch + Duration::from_millis(t_ms),
+            at: Duration::from_millis(t_ms),
             kind,
             request: req,
             token_index: tok,
@@ -168,16 +167,15 @@ mod tests {
 
     #[test]
     fn ttft_tbt_and_stall() {
-        let epoch = Instant::now();
         let events = vec![
-            ev(epoch, 0, EventKind::Submitted, 1, 0),
-            ev(epoch, 100, EventKind::Token, 1, 0),  // TTFT = 100ms
-            ev(epoch, 150, EventKind::Token, 1, 1),  // TBT 50
-            ev(epoch, 200, EventKind::Token, 1, 2),  // TBT 50
-            ev(epoch, 900, EventKind::Token, 1, 3),  // TBT 700 (stall)
-            ev(epoch, 950, EventKind::Finished, 1, 0),
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(100, EventKind::Token, 1, 0),  // TTFT = 100ms
+            ev(150, EventKind::Token, 1, 1),  // TBT 50
+            ev(200, EventKind::Token, 1, 2),  // TBT 50
+            ev(900, EventKind::Token, 1, 3),  // TBT 700 (stall)
+            ev(950, EventKind::Finished, 1, 0),
         ];
-        let a = RunAnalysis::from_events(&events, epoch, 0.5);
+        let a = RunAnalysis::from_events(&events, 0.5);
         assert_eq!(a.ttft_ms.len(), 1);
         assert!((a.ttft_ms[0] - 100.0).abs() < 1.0);
         assert_eq!(a.tbt_ms.len(), 3);
@@ -191,16 +189,15 @@ mod tests {
 
     #[test]
     fn multi_request_interleaving() {
-        let epoch = Instant::now();
         let events = vec![
-            ev(epoch, 0, EventKind::Submitted, 1, 0),
-            ev(epoch, 10, EventKind::Submitted, 2, 0),
-            ev(epoch, 50, EventKind::Token, 1, 0),
-            ev(epoch, 60, EventKind::Token, 2, 0),
-            ev(epoch, 70, EventKind::Token, 1, 1), // TBT(1) = 20
-            ev(epoch, 90, EventKind::Token, 2, 1), // TBT(2) = 30
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(10, EventKind::Submitted, 2, 0),
+            ev(50, EventKind::Token, 1, 0),
+            ev(60, EventKind::Token, 2, 0),
+            ev(70, EventKind::Token, 1, 1), // TBT(1) = 20
+            ev(90, EventKind::Token, 2, 1), // TBT(2) = 30
         ];
-        let a = RunAnalysis::from_events(&events, epoch, 1.0);
+        let a = RunAnalysis::from_events(&events, 1.0);
         assert_eq!(a.ttft_ms.len(), 2);
         assert_eq!(a.tbt_ms.len(), 2);
         assert!((a.tbt_ms[0] - 20.0).abs() < 1e-9 && (a.tbt_ms[1] - 30.0).abs() < 1e-9);

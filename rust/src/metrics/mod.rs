@@ -3,11 +3,18 @@
 //! The gateway records one event per emitted token (plus request lifecycle
 //! events); analysis turns the log into TTFT/TBT distributions, throughput
 //! timelines (Fig. 9), and latency-vs-load curves (Fig. 10/11).
+//!
+//! Event timestamps are offsets from the log's creation, read through a
+//! [`Clock`] — under the scenario harness's virtual clock an event log is
+//! fully deterministic, and [`EventLog::render`] produces the canonical
+//! text form the determinism tests compare byte-for-byte.
 
 pub mod analysis;
 
+use crate::util::clock::Clock;
+use std::fmt::Write as _;
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 pub use analysis::{LatencySummary, RunAnalysis};
 
@@ -25,9 +32,22 @@ pub enum EventKind {
     Migrated,
 }
 
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submitted => "submitted",
+            EventKind::Admitted => "admitted",
+            EventKind::Token => "token",
+            EventKind::Finished => "finished",
+            EventKind::Migrated => "migrated",
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
-    pub at: Instant,
+    /// Offset from the log's epoch (its creation instant).
+    pub at: Duration,
     pub kind: EventKind,
     pub request: u64,
     /// Token index within the request (for Token events).
@@ -38,7 +58,9 @@ pub struct Event {
 
 /// Thread-safe append-only event log with a fixed epoch.
 pub struct EventLog {
-    epoch: Instant,
+    clock: Clock,
+    /// Clock reading at log creation; `Event::at` is relative to this.
+    start: Duration,
     events: Mutex<Vec<Event>>,
 }
 
@@ -49,22 +71,21 @@ impl Default for EventLog {
 }
 
 impl EventLog {
+    /// A wall-clock log whose epoch is "now".
     pub fn new() -> EventLog {
-        EventLog { epoch: Instant::now(), events: Mutex::new(Vec::new()) }
+        Self::with_clock(Clock::wall())
     }
 
-    pub fn epoch(&self) -> Instant {
-        self.epoch
+    /// A log timestamped by an explicit clock; the epoch is the clock's
+    /// current reading (so bring-up before log creation is excluded).
+    pub fn with_clock(clock: Clock) -> EventLog {
+        let start = clock.now();
+        EventLog { clock, start, events: Mutex::new(Vec::new()) }
     }
 
     pub fn record(&self, kind: EventKind, request: u64, token_index: u32, worker: u32) {
-        self.events.lock().unwrap().push(Event {
-            at: Instant::now(),
-            kind,
-            request,
-            token_index,
-            worker,
-        });
+        let at = self.clock.now().saturating_sub(self.start);
+        self.events.lock().unwrap().push(Event { at, kind, request, token_index, worker });
     }
 
     pub fn snapshot(&self) -> Vec<Event> {
@@ -80,8 +101,28 @@ impl EventLog {
     }
 
     /// Seconds since the log's epoch for an event time.
-    pub fn secs(&self, at: Instant) -> f64 {
-        at.duration_since(self.epoch).as_secs_f64()
+    pub fn secs(&self, at: Duration) -> f64 {
+        at.as_secs_f64()
+    }
+
+    /// Canonical text rendering: one line per event, in record order, with
+    /// nanosecond timestamps. Two identical runs produce byte-identical
+    /// renderings — the determinism tests' comparison format.
+    pub fn render(&self) -> String {
+        let events = self.snapshot();
+        let mut out = String::with_capacity(events.len() * 48);
+        for e in &events {
+            let _ = writeln!(
+                out,
+                "{:012} {} req={} idx={} worker={}",
+                e.at.as_nanos(),
+                e.kind.name(),
+                e.request,
+                e.token_index,
+                e.worker
+            );
+        }
+        out
     }
 }
 
@@ -104,5 +145,22 @@ mod tests {
         assert_eq!(snap[1].kind, EventKind::Token);
         assert_eq!(snap[1].worker, 2);
         assert!(log.secs(snap[1].at) >= log.secs(snap[0].at));
+    }
+
+    #[test]
+    fn virtual_clock_timestamps_are_exact() {
+        let clock = Clock::virtual_seeded(1);
+        let _g = clock.register();
+        clock.sleep(Duration::from_millis(5)); // pre-log time is excluded
+        let log = EventLog::with_clock(clock.clone());
+        clock.sleep(Duration::from_millis(250));
+        log.record(EventKind::Token, 3, 0, 1);
+        let snap = log.snapshot();
+        assert_eq!(snap[0].at, Duration::from_millis(250));
+        assert_eq!(
+            log.render(),
+            format!("{:012} token req=3 idx=0 worker=1\n", 250_000_000u64)
+        );
+        clock.shutdown();
     }
 }

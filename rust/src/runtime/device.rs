@@ -6,6 +6,7 @@ use super::{xla, ArgValue, RolePlan};
 use crate::modelcfg::{ArtifactSpec, DType, Manifest};
 use crate::modelcfg::weights::Weights;
 use crate::tensor::Tensor;
+use crate::util::clock::{self, Clock};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -83,14 +84,14 @@ enum Msg {
     Exec {
         name: String,
         args: Vec<ArgValue>,
-        reply: mpsc::Sender<Result<Vec<Tensor>, DeviceError>>,
+        reply: clock::Sender<Result<Vec<Tensor>, DeviceError>>,
     },
     UploadWeights {
         names: Vec<String>,
-        reply: mpsc::Sender<Result<Duration, DeviceError>>,
+        reply: clock::Sender<Result<Duration, DeviceError>>,
     },
     Stats {
-        reply: mpsc::Sender<ExecCounters>,
+        reply: clock::Sender<ExecCounters>,
     },
     Shutdown,
 }
@@ -101,14 +102,16 @@ enum Msg {
 pub struct Device {
     pub id: String,
     pub init: InitStats,
-    tx: mpsc::Sender<Msg>,
+    tx: clock::Sender<Msg>,
     killed: Arc<AtomicBool>,
+    clock: Clock,
 }
 
 impl Device {
-    /// Spawn and fully initialize a device (blocking — initialization *is*
-    /// the T_w cost; background provisioning calls this from its own
-    /// thread). `extra_init` models container/CUDA startup.
+    /// Spawn and fully initialize a device on wall-clock time (blocking —
+    /// initialization *is* the T_w cost; background provisioning calls
+    /// this from its own thread). `extra_init` models container/CUDA
+    /// startup.
     pub fn spawn(
         id: impl Into<String>,
         manifest: Arc<Manifest>,
@@ -116,20 +119,45 @@ impl Device {
         plan: RolePlan,
         extra_init: Duration,
     ) -> Result<Device, DeviceError> {
+        Self::spawn_clocked(id, manifest, weights, plan, extra_init, Clock::wall())
+    }
+
+    /// Spawn on an explicit clock. Under a virtual clock the caller must
+    /// be a registered participant; `extra_init` then costs virtual time
+    /// only, and the device thread registers itself as a participant.
+    pub fn spawn_clocked(
+        id: impl Into<String>,
+        manifest: Arc<Manifest>,
+        weights: Weights,
+        plan: RolePlan,
+        extra_init: Duration,
+        clock: Clock,
+    ) -> Result<Device, DeviceError> {
         let id = id.into();
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<InitStats, DeviceError>>();
+        let (tx, rx) = clock::channel::<Msg>(&clock);
+        let (init_tx, init_rx) = clock::channel::<Result<InitStats, DeviceError>>(&clock);
         let killed = Arc::new(AtomicBool::new(false));
         let killed2 = killed.clone();
         let tid = id.clone();
-        std::thread::Builder::new()
-            .name(format!("device-{id}"))
-            .spawn(move || device_main(tid, manifest, weights, plan, extra_init, rx, init_tx, killed2))
-            .map_err(|e| DeviceError::Init(e.to_string()))?;
+        let thread_clock = clock.clone();
+        clock::spawn_participant(&clock, format!("device-{id}"), move || {
+            device_main(
+                tid,
+                manifest,
+                weights,
+                plan,
+                extra_init,
+                rx,
+                init_tx,
+                killed2,
+                thread_clock,
+            )
+        })
+        .map_err(|e| DeviceError::Init(e.to_string()))?;
         let init = init_rx
             .recv()
             .map_err(|_| DeviceError::Init("device thread died during init".into()))??;
-        Ok(Device { id, init, tx, killed })
+        Ok(Device { id, init, tx, killed, clock })
     }
 
     /// Execute an artifact by name. Blocks until the result is back on the
@@ -138,7 +166,7 @@ impl Device {
         if self.killed.load(Ordering::Acquire) {
             return Err(DeviceError::Dead(self.id.clone()));
         }
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = clock::channel(&self.clock);
         self.tx
             .send(Msg::Exec { name: name.to_string(), args, reply })
             .map_err(|_| DeviceError::Dead(self.id.clone()))?;
@@ -151,7 +179,7 @@ impl Device {
         if self.killed.load(Ordering::Acquire) {
             return Err(DeviceError::Dead(self.id.clone()));
         }
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = clock::channel(&self.clock);
         self.tx
             .send(Msg::UploadWeights { names: names.to_vec(), reply })
             .map_err(|_| DeviceError::Dead(self.id.clone()))?;
@@ -159,7 +187,7 @@ impl Device {
     }
 
     pub fn stats(&self) -> Result<ExecCounters, DeviceError> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = clock::channel(&self.clock);
         self.tx
             .send(Msg::Stats { reply })
             .map_err(|_| DeviceError::Dead(self.id.clone()))?;
@@ -195,15 +223,20 @@ fn device_main(
     weights: Weights,
     plan: RolePlan,
     extra_init: Duration,
-    rx: mpsc::Receiver<Msg>,
-    init_tx: mpsc::Sender<Result<InitStats, DeviceError>>,
+    rx: clock::Receiver<Msg>,
+    init_tx: clock::Sender<Result<InitStats, DeviceError>>,
     killed: Arc<AtomicBool>,
+    clock: Clock,
 ) {
     // ---- initialization (the T_w critical path) --------------------------
+    // `total` is measured on the device's clock so a virtual-time
+    // `extra_init` is included in the reported T_w (wall-clock runs see
+    // real elapsed time, exactly as before).
+    let c_start = clock.now();
     let t_total = Instant::now();
-    if !extra_init.is_zero() {
-        std::thread::sleep(extra_init);
-    }
+    // Simulated container/CUDA-context startup: virtual cost on a virtual
+    // clock, a real sleep otherwise.
+    clock.sleep(extra_init);
 
     let t0 = Instant::now();
     let client = match xla::PjRtClient::cpu() {
@@ -256,7 +289,7 @@ fn device_main(
         compile,
         weight_upload,
         extra: extra_init,
-        total: t_total.elapsed(),
+        total: t_total.elapsed().max(clock.now().saturating_sub(c_start)),
         num_artifacts: compiled.len(),
         num_weights: wcache.len(),
     };

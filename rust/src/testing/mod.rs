@@ -1,6 +1,11 @@
 //! Test utilities: a small randomized property-testing harness (the
-//! vendored crate set has no proptest) and micro-benchmark support used by
-//! the `rust/benches` targets.
+//! vendored crate set has no proptest), micro-benchmark support used by
+//! the `rust/benches` targets, the synthetic in-repo model artifacts
+//! ([`synthetic`]) that let the integration tier run without Python-built
+//! `artifacts/`, and the virtual-clock failure-scenario harness
+//! ([`scenario`]).
 
 pub mod bench;
 pub mod prop;
+pub mod scenario;
+pub mod synthetic;

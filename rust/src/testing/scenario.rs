@@ -1,0 +1,285 @@
+//! Virtual-clock failure-scenario harness.
+//!
+//! A [`Scenario`] is a workload schedule plus a fault schedule — a tiny
+//! DSL (`"at 120ms kill ew1"`, `"at 300ms sever aw0 store"`,
+//! `"at 500ms respawn ew1"`) or the builder API — run against a full
+//! cluster on a seeded [`VirtualClock`](crate::util::clock::VirtualClock).
+//! Probe timeouts, silence windows, restart storms and idle gaps all cost
+//! *virtual* time only, so multi-second recovery behavior replays in
+//! milliseconds of wall time, deterministically: the same scenario and
+//! seed yield a byte-identical event log, and the recovery guarantees
+//! under test (token streams identical to the failure-free run) hold for
+//! every seed.
+//!
+//! Fault times are offsets from the schedule start (the event-log epoch),
+//! matching `Request::arrival_s`.
+
+use crate::config::Config;
+use crate::coordinator::cluster::{Cluster, ClusterReport, LaunchOptions};
+use crate::modelcfg::{weights::Weights, Manifest};
+use crate::transport::NodeId;
+use crate::util::clock::Clock;
+use crate::workload::Request;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One injectable fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    KillAw(u32),
+    KillEw(u32),
+    Sever(NodeId, NodeId),
+    Heal(NodeId, NodeId),
+    RespawnAw(u32),
+    RespawnEw(u32),
+}
+
+/// A fault scheduled at an offset from the schedule start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledFault {
+    pub at: Duration,
+    pub fault: Fault,
+}
+
+impl ScheduledFault {
+    /// Parse one DSL line: `at <N>(us|ms|s) <verb> <node> [<node>]`, e.g.
+    /// `at 120ms kill ew1`, `at 300ms sever aw0 store`,
+    /// `at 800ms respawn aw0`, `at 900ms heal aw0 store`.
+    pub fn parse(line: &str) -> Result<ScheduledFault, String> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let bad = |msg: &str| Err(format!("bad fault '{line}': {msg}"));
+        if toks.len() < 4 || toks[0] != "at" {
+            return bad("expected `at <time> <verb> <node> [<node>]`");
+        }
+        let at = parse_time(toks[1]).ok_or_else(|| format!("bad fault '{line}': bad time"))?;
+        let verb = toks[2];
+        let node =
+            |t: &str| parse_node(t).ok_or_else(|| format!("bad fault '{line}': bad node '{t}'"));
+        let fault = match (verb, toks.len()) {
+            ("kill", 4) => match node(toks[3])? {
+                NodeId::Aw(i) => Fault::KillAw(i),
+                NodeId::Ew(i) => Fault::KillEw(i),
+                other => return bad(&format!("cannot kill {other}")),
+            },
+            ("respawn", 4) => match node(toks[3])? {
+                NodeId::Aw(i) => Fault::RespawnAw(i),
+                NodeId::Ew(i) => Fault::RespawnEw(i),
+                other => return bad(&format!("cannot respawn {other}")),
+            },
+            ("sever", 5) => Fault::Sever(node(toks[3])?, node(toks[4])?),
+            ("heal", 5) => Fault::Heal(node(toks[3])?, node(toks[4])?),
+            _ => return bad("unknown verb/arity (kill|respawn <node>, sever|heal <a> <b>)"),
+        };
+        Ok(ScheduledFault { at, fault })
+    }
+}
+
+fn parse_time(t: &str) -> Option<Duration> {
+    let (digits, unit): (&str, &str) = if let Some(v) = t.strip_suffix("us") {
+        (v, "us")
+    } else if let Some(v) = t.strip_suffix("ms") {
+        (v, "ms")
+    } else if let Some(v) = t.strip_suffix('s') {
+        (v, "s")
+    } else {
+        return None;
+    };
+    let n: f64 = digits.parse().ok()?;
+    if n < 0.0 || !n.is_finite() {
+        return None;
+    }
+    Some(match unit {
+        "us" => Duration::from_secs_f64(n / 1e6),
+        "ms" => Duration::from_secs_f64(n / 1e3),
+        _ => Duration::from_secs_f64(n),
+    })
+}
+
+fn parse_node(t: &str) -> Option<NodeId> {
+    match t {
+        "store" => return Some(NodeId::Store),
+        "gateway" => return Some(NodeId::Gateway),
+        "orch" | "orchestrator" => return Some(NodeId::Orchestrator),
+        _ => {}
+    }
+    if let Some(i) = t.strip_prefix("aw") {
+        return i.parse().ok().map(NodeId::Aw);
+    }
+    if let Some(i) = t.strip_prefix("ew") {
+        return i.parse().ok().map(NodeId::Ew);
+    }
+    None
+}
+
+/// A complete scenario: cluster config, workload arrivals, fault schedule.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    pub cfg: Config,
+    pub schedule: Vec<Request>,
+    pub faults: Vec<ScheduledFault>,
+    /// Virtual-time budget for the workload to drain.
+    pub drain_timeout: Duration,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, cfg: Config) -> Scenario {
+        Scenario {
+            name: name.into(),
+            seed: 7,
+            cfg,
+            schedule: Vec::new(),
+            faults: Vec::new(),
+            drain_timeout: Duration::from_secs(60),
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+
+    /// Add a workload arrival.
+    pub fn request(
+        mut self,
+        id: u64,
+        arrival: Duration,
+        prompt: Vec<u32>,
+        max_new: usize,
+    ) -> Scenario {
+        self.schedule.push(Request {
+            id,
+            arrival_s: arrival.as_secs_f64(),
+            prompt,
+            max_new_tokens: max_new,
+        });
+        self
+    }
+
+    /// Add a fault from a DSL line (`at 120ms kill ew1`). Panics on a
+    /// malformed line — scenarios are authored in tests.
+    pub fn fault(mut self, line: &str) -> Scenario {
+        self.faults.push(ScheduledFault::parse(line).unwrap());
+        self
+    }
+
+    pub fn fault_at(mut self, at: Duration, fault: Fault) -> Scenario {
+        self.faults.push(ScheduledFault { at, fault });
+        self
+    }
+
+    /// A copy with the fault schedule stripped — the failure-free baseline
+    /// the matrix tests compare token streams against.
+    pub fn without_faults(&self) -> Scenario {
+        let mut s = self.clone();
+        s.faults.clear();
+        s.name = format!("{}-baseline", s.name);
+        s
+    }
+
+    /// Run on a fresh virtual clock; blocks the calling thread (which is
+    /// registered as a clock participant for the duration).
+    pub fn run(&self, manifest: Arc<Manifest>, weights: Weights) -> ScenarioOutcome {
+        let clock = Clock::virtual_seeded(self.seed);
+        let guard = clock.register();
+        let opts = LaunchOptions { clock: clock.clone(), ..Default::default() };
+        let cluster =
+            Cluster::launch(self.cfg.clone(), manifest, weights, self.schedule.clone(), opts);
+
+        // The gateway's schedule clock and the event log both start at
+        // launch return (bring-up excluded); anchor fault times there too.
+        let t0 = clock.now();
+        let mut faults = self.faults.clone();
+        faults.sort_by_key(|f| f.at);
+        for f in &faults {
+            clock.sleep_until(t0 + f.at);
+            apply(&cluster, &f.fault);
+        }
+        let completed = cluster.wait_done(self.drain_timeout);
+        let tokens: BTreeMap<u64, Vec<u32>> = self
+            .schedule
+            .iter()
+            .map(|r| (r.id, cluster.gw.generated_of(r.id)))
+            .collect();
+        let event_log = cluster.events.render();
+        let report = cluster.finish(1.0);
+        drop(guard);
+        ScenarioOutcome { name: self.name.clone(), completed, tokens, event_log, report }
+    }
+}
+
+fn apply(cluster: &Cluster, fault: &Fault) {
+    match fault {
+        Fault::KillAw(i) => cluster.kill_aw(*i),
+        Fault::KillEw(i) => cluster.kill_ew(*i),
+        Fault::Sever(a, b) => cluster.fabric.sever(*a, *b),
+        Fault::Heal(a, b) => cluster.fabric.heal(*a, *b),
+        Fault::RespawnAw(i) => {
+            let _ = cluster.respawn_aw(*i);
+        }
+        Fault::RespawnEw(i) => {
+            let _ = cluster.respawn_ew(*i);
+        }
+    }
+}
+
+/// What a scenario run yields for assertions.
+pub struct ScenarioOutcome {
+    pub name: String,
+    /// Whether the workload drained within the virtual budget.
+    pub completed: bool,
+    /// Per-request generated token streams (gateway-deduped).
+    pub tokens: BTreeMap<u64, Vec<u32>>,
+    /// Canonical event-log rendering (byte-comparable across runs).
+    pub event_log: String,
+    pub report: ClusterReport,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsl_parses_the_issue_examples() {
+        assert_eq!(
+            ScheduledFault::parse("at 120ms kill ew1").unwrap(),
+            ScheduledFault { at: Duration::from_millis(120), fault: Fault::KillEw(1) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 300ms sever aw0 store").unwrap(),
+            ScheduledFault {
+                at: Duration::from_millis(300),
+                fault: Fault::Sever(NodeId::Aw(0), NodeId::Store),
+            }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 2s respawn aw3").unwrap(),
+            ScheduledFault { at: Duration::from_secs(2), fault: Fault::RespawnAw(3) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 50us heal aw0 ew0").unwrap(),
+            ScheduledFault {
+                at: Duration::from_micros(50),
+                fault: Fault::Heal(NodeId::Aw(0), NodeId::Ew(0)),
+            }
+        );
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_lines() {
+        for bad in [
+            "kill ew1",
+            "at 10ms",
+            "at 10ms kill store",
+            "at 10ms kill",
+            "at tenms kill ew1",
+            "at 10ms sever aw0",
+            "at 10ms explode ew0",
+            "at 10ms kill zz9",
+        ] {
+            assert!(ScheduledFault::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+}

@@ -1,0 +1,573 @@
+//! Synthetic in-repo model artifacts: a tiny MoE manifest + weight blob +
+//! golden generation fixture built entirely from Rust, so the integration
+//! tier runs everywhere — no Python build, no `artifacts/` directory.
+//!
+//! The generator writes a real artifact directory (manifest.json,
+//! weights.bin, placeholder `.hlo.txt` files) into the system temp dir
+//! and loads it back through the production `modelcfg` paths, so the
+//! exact same manifest/weights plumbing is exercised as with
+//! Python-built artifacts. Execution semantics come from the
+//! [`runtime::xla`](crate::runtime::xla) reference executor (HLO files
+//! are only checked for existence), and the golden fixture is produced
+//! by a single-device reference decoder that mirrors the cluster's
+//! numerics exactly: bucket padding, per-row routing, and
+//! expert-ascending output accumulation.
+
+use crate::coordinator::router::{self, ExpertGroups};
+use crate::modelcfg::{weights::Weights, Buckets, Manifest};
+use crate::runtime::{ArgValue, Device, DeviceRole};
+use crate::tensor::{ops, Tensor};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Pcg;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Seed for deterministic synthetic weights (same spirit as the Python
+/// pipeline's WEIGHT_SEED; a different value so fixtures can't be
+/// confused).
+pub const SYNTH_SEED: u64 = 0x7A44_A61;
+
+/// Bump when dims/weights/reference math change: the artifact directory
+/// name carries it, so stale cached dirs are never reused.
+const VERSION: &str = "v1";
+
+// Tiny-MoE dims. Small enough that a full scenario decodes in
+// milliseconds of compute, big enough to exercise GQA (2 heads over 1 KV
+// head), 4 experts / top-2 routing, and multi-page KV sequences.
+const LAYERS: usize = 2;
+const HIDDEN: usize = 32;
+const HEADS: usize = 2;
+const KV_HEADS: usize = 1;
+const HEAD_DIM: usize = 16;
+const FFN: usize = 64;
+const EXPERTS: usize = 4;
+const TOP_K: usize = 2;
+const VOCAB: usize = 128;
+const MAX_SEQ: usize = 160;
+
+const PREFILL_T: [usize; 2] = [8, 16];
+const DECODE_B: [usize; 4] = [1, 2, 4, 8];
+const EXPERT_B: [usize; 6] = [1, 2, 4, 8, 16, 32];
+const ROUTER_B: [usize; 5] = [1, 2, 4, 8, 16];
+const LM_HEAD_B: [usize; 4] = [1, 2, 4, 8];
+
+/// Golden cases: (prompt, tokens to decode).
+const GOLDEN_CASES: [(&[u32], usize); 3] =
+    [(&[1, 2, 3, 4, 5, 6, 7, 8], 12), (&[42, 17, 99, 9], 8), (&[100, 3, 64], 10)];
+
+type GoldenCases = Vec<(Vec<u32>, Vec<u32>)>;
+
+/// Build (or reuse) the synthetic artifact directory, load it, and
+/// compute the golden fixture. Cached per process.
+pub fn ensure() -> (Arc<Manifest>, Weights, GoldenCases) {
+    static CACHE: OnceLock<(Arc<Manifest>, Weights, GoldenCases)> = OnceLock::new();
+    CACHE
+        .get_or_init(|| {
+            let dir = ensure_dir();
+            let manifest = Arc::new(Manifest::load(&dir).expect("synthetic manifest loads"));
+            let weights = Weights::load(&manifest).expect("synthetic weights load");
+            let golden = golden_cases(&manifest, &weights);
+            write_golden_json(&dir, &golden);
+            (manifest, weights, golden)
+        })
+        .clone()
+}
+
+/// Path of the synthetic artifact directory, creating it if needed.
+pub fn ensure_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tarragon-synth-{VERSION}-{SYNTH_SEED:x}"));
+    if dir.join("manifest.json").exists() {
+        return dir;
+    }
+    // Write into a process-unique staging dir, then rename into place so
+    // concurrent test processes can't observe a torn directory.
+    let staging = std::env::temp_dir().join(format!(
+        "tarragon-synth-{VERSION}-{SYNTH_SEED:x}.tmp-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&staging);
+    write_artifact_dir(&staging).expect("write synthetic artifacts");
+    match std::fs::rename(&staging, &dir) {
+        Ok(()) => dir,
+        Err(_) if dir.join("manifest.json").exists() => {
+            // Lost the race to another process; its copy is identical.
+            let _ = std::fs::remove_dir_all(&staging);
+            dir
+        }
+        Err(_) => staging, // fall back to our private copy
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact directory generation
+// ---------------------------------------------------------------------------
+
+struct TensorSpec {
+    name: String,
+    shape: Vec<usize>,
+    /// Standard deviation of the generated values; 0.0 = constant 1.0
+    /// (norm gains).
+    std: f64,
+}
+
+fn weight_plan() -> Vec<TensorSpec> {
+    let t = |name: String, shape: Vec<usize>, std: f64| TensorSpec { name, shape, std };
+    let kvd = KV_HEADS * HEAD_DIM;
+    let m_std = |fan_in: usize| 1.0 / (fan_in as f64).sqrt();
+    let mut plan = vec![t("embed".into(), vec![VOCAB, HIDDEN], 1.0)];
+    for l in 0..LAYERS {
+        plan.push(t(format!("layer{l}.wq"), vec![HIDDEN, HIDDEN], m_std(HIDDEN)));
+        plan.push(t(format!("layer{l}.wk"), vec![HIDDEN, kvd], m_std(HIDDEN)));
+        plan.push(t(format!("layer{l}.wv"), vec![HIDDEN, kvd], m_std(HIDDEN)));
+        plan.push(t(format!("layer{l}.wo"), vec![HIDDEN, HIDDEN], m_std(HIDDEN)));
+        plan.push(t(format!("layer{l}.ln1"), vec![HIDDEN], 0.0));
+        plan.push(t(format!("layer{l}.ln2"), vec![HIDDEN], 0.0));
+        plan.push(t(format!("layer{l}.router"), vec![HIDDEN, EXPERTS], m_std(HIDDEN)));
+        for e in 0..EXPERTS {
+            plan.push(t(format!("layer{l}.expert{e}.w1"), vec![HIDDEN, FFN], m_std(HIDDEN)));
+            plan.push(t(format!("layer{l}.expert{e}.w3"), vec![HIDDEN, FFN], m_std(HIDDEN)));
+            plan.push(t(format!("layer{l}.expert{e}.w2"), vec![FFN, HIDDEN], m_std(FFN)));
+        }
+    }
+    plan.push(t("ln_f".into(), vec![HIDDEN], 0.0));
+    plan.push(t("lm_head".into(), vec![HIDDEN, VOCAB], m_std(HIDDEN)));
+    plan
+}
+
+fn io(name: &str, shape: &[usize], dtype: &str) -> Json {
+    obj(vec![
+        ("name", s(name)),
+        ("shape", arr(shape.iter().map(|&x| num(x as f64)))),
+        ("dtype", s(dtype)),
+    ])
+}
+
+fn artifact(
+    name: String,
+    kind: &str,
+    bucket: usize,
+    inputs: Vec<Json>,
+    outputs: Vec<Json>,
+) -> Json {
+    let file = format!("{name}.hlo.txt");
+    obj(vec![
+        ("name", s(&name)),
+        ("kind", s(kind)),
+        ("bucket", num(bucket as f64)),
+        ("file", s(&file)),
+        ("inputs", Json::Arr(inputs)),
+        ("outputs", Json::Arr(outputs)),
+    ])
+}
+
+fn artifact_plan() -> Vec<Json> {
+    let (h, kvh, d, sq, e, f, v) = (HIDDEN, KV_HEADS, HEAD_DIM, MAX_SEQ, EXPERTS, FFN, VOCAB);
+    let kvd = kvh * d;
+    let attn_w = |inputs: &mut Vec<Json>| {
+        inputs.push(io("wq", &[h, h], "f32"));
+        inputs.push(io("wk", &[h, kvd], "f32"));
+        inputs.push(io("wv", &[h, kvd], "f32"));
+        inputs.push(io("wo", &[h, h], "f32"));
+        inputs.push(io("ln1", &[h], "f32"));
+        inputs.push(io("ln2", &[h], "f32"));
+    };
+    let mut plan = Vec::new();
+    for t in PREFILL_T {
+        let mut inputs = vec![io("x", &[t, h], "f32")];
+        attn_w(&mut inputs);
+        let outputs = vec![
+            io("h", &[t, h], "f32"),
+            io("g", &[t, h], "f32"),
+            io("k", &[t, kvh, d], "f32"),
+            io("v", &[t, kvh, d], "f32"),
+        ];
+        plan.push(artifact(format!("attn_prefill_t{t}"), "attn_prefill", t, inputs, outputs));
+    }
+    for b in DECODE_B {
+        let mut inputs = vec![
+            io("x", &[b, h], "f32"),
+            io("k_cache", &[b, sq, kvh, d], "f32"),
+            io("v_cache", &[b, sq, kvh, d], "f32"),
+            io("pos", &[b], "i32"),
+        ];
+        attn_w(&mut inputs);
+        let outputs = vec![
+            io("h", &[b, h], "f32"),
+            io("g", &[b, h], "f32"),
+            io("k_new", &[b, kvh, d], "f32"),
+            io("v_new", &[b, kvh, d], "f32"),
+        ];
+        plan.push(artifact(format!("attn_decode_b{b}"), "attn_decode", b, inputs, outputs));
+    }
+    for b in ROUTER_B {
+        plan.push(artifact(
+            format!("router_b{b}"),
+            "router",
+            b,
+            vec![io("g", &[b, h], "f32"), io("wg", &[h, e], "f32")],
+            vec![io("probs", &[b, e], "f32")],
+        ));
+    }
+    for b in EXPERT_B {
+        plan.push(artifact(
+            format!("expert_b{b}"),
+            "expert",
+            b,
+            vec![
+                io("x", &[b, h], "f32"),
+                io("w1", &[h, f], "f32"),
+                io("w3", &[h, f], "f32"),
+                io("w2", &[f, h], "f32"),
+            ],
+            vec![io("y", &[b, h], "f32")],
+        ));
+    }
+    for b in LM_HEAD_B {
+        plan.push(artifact(
+            format!("lm_head_b{b}"),
+            "lm_head",
+            b,
+            vec![io("h", &[b, h], "f32"), io("ln_f", &[h], "f32"), io("wlm", &[h, v], "f32")],
+            vec![io("logits", &[b, v], "f32")],
+        ));
+    }
+    plan
+}
+
+fn write_artifact_dir(dir: &std::path::Path) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+
+    // --- weights.bin + offset table -----------------------------------
+    let plan = weight_plan();
+    let mut rng = Pcg::seeded(SYNTH_SEED);
+    let mut blob: Vec<u8> = Vec::new();
+    let mut tensors: Vec<Json> = Vec::new();
+    let mut offset = 0usize;
+    for spec in &plan {
+        let n: usize = spec.shape.iter().product();
+        let nbytes = n * 4;
+        for _ in 0..n {
+            let v = if spec.std == 0.0 { 1.0f32 } else { rng.normal_ms(0.0, spec.std) as f32 };
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        tensors.push(obj(vec![
+            ("name", s(&spec.name)),
+            ("shape", arr(spec.shape.iter().map(|&x| num(x as f64)))),
+            ("offset", num(offset as f64)),
+            ("nbytes", num(nbytes as f64)),
+            ("dtype", s("f32")),
+        ]));
+        offset += nbytes;
+    }
+    std::fs::write(dir.join("weights.bin"), &blob)?;
+
+    // --- artifacts (placeholder HLO text; semantics live in the
+    //     manifest specs + runtime::xla reference executor) ------------
+    let artifacts = artifact_plan();
+    for a in &artifacts {
+        let file = a.get("file").and_then(|v| v.as_str()).unwrap().to_string();
+        std::fs::write(
+            dir.join(file),
+            "synthetic placeholder HLO (reference-executed; see rust/src/runtime/xla.rs)\n",
+        )?;
+    }
+
+    // --- manifest.json ------------------------------------------------
+    let manifest = obj(vec![
+        ("version", num(1.0)),
+        (
+            "model",
+            obj(vec![
+                ("layers", num(LAYERS as f64)),
+                ("hidden", num(HIDDEN as f64)),
+                ("heads", num(HEADS as f64)),
+                ("kv_heads", num(KV_HEADS as f64)),
+                ("head_dim", num(HEAD_DIM as f64)),
+                ("ffn", num(FFN as f64)),
+                ("experts", num(EXPERTS as f64)),
+                ("top_k", num(TOP_K as f64)),
+                ("vocab", num(VOCAB as f64)),
+                ("max_seq", num(MAX_SEQ as f64)),
+            ]),
+        ),
+        (
+            "buckets",
+            obj(vec![
+                ("prefill_t", arr(PREFILL_T.iter().map(|&x| num(x as f64)))),
+                ("decode_b", arr(DECODE_B.iter().map(|&x| num(x as f64)))),
+                ("expert_b", arr(EXPERT_B.iter().map(|&x| num(x as f64)))),
+                ("router_b", arr(ROUTER_B.iter().map(|&x| num(x as f64)))),
+                ("lm_head_b", arr(LM_HEAD_B.iter().map(|&x| num(x as f64)))),
+            ]),
+        ),
+        ("weight_seed", num(SYNTH_SEED as f64)),
+        ("artifacts", Json::Arr(artifacts)),
+        (
+            "weights",
+            obj(vec![
+                ("file", s("weights.bin")),
+                ("total_bytes", num(offset as f64)),
+                ("tensors", Json::Arr(tensors)),
+            ]),
+        ),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(())
+}
+
+fn write_golden_json(dir: &std::path::Path, golden: &GoldenCases) {
+    let path = dir.join("golden.json");
+    if path.exists() {
+        return;
+    }
+    let cases = golden.iter().map(|(p, g)| {
+        obj(vec![
+            ("prompt", arr(p.iter().map(|&x| num(x as f64)))),
+            ("generated", arr(g.iter().map(|&x| num(x as f64)))),
+        ])
+    });
+    let _ = std::fs::write(path, obj(vec![("cases", arr(cases))]).to_string());
+}
+
+// ---------------------------------------------------------------------------
+// Reference decoder (the golden oracle)
+// ---------------------------------------------------------------------------
+
+/// Generate the golden fixture with a single monolithic device, mirroring
+/// the cluster's numerics step for step.
+pub fn golden_cases(manifest: &Arc<Manifest>, weights: &Weights) -> GoldenCases {
+    let dev = Device::spawn(
+        "synthetic-oracle",
+        manifest.clone(),
+        weights.clone(),
+        DeviceRole::Monolithic.plan(manifest),
+        Duration::ZERO,
+    )
+    .expect("oracle device");
+    let out = GOLDEN_CASES
+        .iter()
+        .map(|&(prompt, n_dec)| {
+            let generated = reference_generate(&dev, manifest, weights, prompt, n_dec);
+            (prompt.to_vec(), generated)
+        })
+        .collect();
+    dev.shutdown();
+    out
+}
+
+fn attn_weight_args(layer: usize) -> Vec<ArgValue> {
+    vec![
+        ArgValue::weight(format!("layer{layer}.wq")),
+        ArgValue::weight(format!("layer{layer}.wk")),
+        ArgValue::weight(format!("layer{layer}.wv")),
+        ArgValue::weight(format!("layer{layer}.wo")),
+        ArgValue::weight(format!("layer{layer}.ln1")),
+        ArgValue::weight(format!("layer{layer}.ln2")),
+    ]
+}
+
+/// One request, one device: prefill + token-by-token decode. Numerically
+/// identical to the cluster path because every kernel is row-independent,
+/// attention is causal/pos-masked, and expert contributions accumulate in
+/// expert-ascending order on both sides.
+pub fn reference_generate(
+    dev: &Device,
+    manifest: &Manifest,
+    weights: &Weights,
+    prompt: &[u32],
+    n_dec: usize,
+) -> Vec<u32> {
+    let m = &manifest.model;
+    let seg = m.kv_heads * m.head_dim;
+    let mut kv: Vec<(Vec<f32>, Vec<f32>)> =
+        vec![(vec![0.0; m.max_seq * seg], vec![0.0; m.max_seq * seg]); m.layers];
+    let mut len = 0usize;
+    let mut out = Vec::with_capacity(n_dec);
+
+    // --- prefill -------------------------------------------------------
+    let p_len = prompt.len();
+    let bucket = Buckets::fit(&manifest.buckets.prefill_t, p_len).expect("prompt fits");
+    let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+    for (i, &tok) in prompt.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(weights.embed_row(tok as usize));
+    }
+    for layer in 0..m.layers {
+        let mut args = vec![ArgValue::f32(x.clone())];
+        args.extend(attn_weight_args(layer));
+        let outs = dev.execute(&format!("attn_prefill_t{bucket}"), args).expect("prefill");
+        let (h, g, k, v) = unpack4(outs);
+        for pos in 0..p_len {
+            kv[layer].0[pos * seg..(pos + 1) * seg].copy_from_slice(k.row(pos));
+            kv[layer].1[pos * seg..(pos + 1) * seg].copy_from_slice(v.row(pos));
+        }
+        let mut h = h;
+        expert_mix(dev, layer, &g, p_len, m.top_k, &mut h);
+        for pos in p_len..bucket {
+            h.row_mut(pos).fill(0.0);
+        }
+        x = h;
+    }
+    len = len.max(p_len);
+    let mut next = lm_head(dev, manifest, x.row(p_len - 1));
+    out.push(next);
+
+    // --- decode --------------------------------------------------------
+    for _ in 1..n_dec {
+        let bucket = Buckets::fit(&manifest.buckets.decode_b, 1).expect("decode bucket");
+        let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+        x.row_mut(0).copy_from_slice(weights.embed_row(next as usize));
+        for layer in 0..m.layers {
+            let row = m.max_seq * seg;
+            let mut kc = vec![0.0f32; bucket * row];
+            let mut vc = vec![0.0f32; bucket * row];
+            kc[..len * seg].copy_from_slice(&kv[layer].0[..len * seg]);
+            vc[..len * seg].copy_from_slice(&kv[layer].1[..len * seg]);
+            let mut pos = vec![len as i32];
+            pos.resize(bucket, 0);
+            let shape = vec![bucket, m.max_seq, m.kv_heads, m.head_dim];
+            let mut args = vec![
+                ArgValue::f32(x.clone()),
+                ArgValue::f32(Tensor::new(shape.clone(), kc)),
+                ArgValue::f32(Tensor::new(shape, vc)),
+                ArgValue::I32(pos, vec![bucket]),
+            ];
+            args.extend(attn_weight_args(layer));
+            let outs = dev.execute(&format!("attn_decode_b{bucket}"), args).expect("decode");
+            let (h, g, k_new, v_new) = unpack4(outs);
+            kv[layer].0[len * seg..(len + 1) * seg].copy_from_slice(k_new.row(0));
+            kv[layer].1[len * seg..(len + 1) * seg].copy_from_slice(v_new.row(0));
+            let mut h = h;
+            expert_mix(dev, layer, &g, 1, m.top_k, &mut h);
+            for i in 1..bucket {
+                h.row_mut(i).fill(0.0);
+            }
+            x = h;
+        }
+        len += 1;
+        next = lm_head(dev, manifest, x.row(0));
+        out.push(next);
+    }
+    out
+}
+
+/// Route the first `rows` of `g` and accumulate expert outputs into `h`,
+/// expert-ascending — the cluster's canonical accumulation order.
+fn expert_mix(dev: &Device, layer: usize, g: &Tensor, rows: usize, top_k: usize, h: &mut Tensor) {
+    let bucket = g.rows();
+    let probs = dev
+        .execute(
+            &format!("router_b{bucket}"),
+            vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+        )
+        .expect("router");
+    let routes = router::select_top_k(&probs[0], rows, top_k);
+    let groups = ExpertGroups::from_routes(&routes);
+    let hidden = g.row_len();
+    for (&expert, entries) in &groups.groups {
+        // Mirror the EW's chunked execution over the expert buckets.
+        let rows_data: Vec<&[f32]> = entries.iter().map(|&(row, _)| g.row(row)).collect();
+        let outs = run_expert_chunked(dev, layer, expert, &rows_data, hidden);
+        for ((row, w), out) in entries.iter().zip(outs) {
+            ops::axpy_row(h.row_mut(*row), *w, &out);
+        }
+    }
+}
+
+fn run_expert_chunked(
+    dev: &Device,
+    layer: usize,
+    expert: usize,
+    rows: &[&[f32]],
+    hidden: usize,
+) -> Vec<Vec<f32>> {
+    let buckets = EXPERT_B;
+    let max_bucket = *buckets.last().unwrap();
+    let mut out = Vec::with_capacity(rows.len());
+    let mut i = 0;
+    while i < rows.len() {
+        let n = (rows.len() - i).min(max_bucket);
+        let bucket = Buckets::fit(&buckets, n).unwrap_or(max_bucket);
+        let mut data = vec![0.0f32; bucket * hidden];
+        for (j, row) in rows[i..i + n].iter().enumerate() {
+            data[j * hidden..(j + 1) * hidden].copy_from_slice(row);
+        }
+        let result = dev
+            .execute(
+                &format!("expert_b{bucket}"),
+                vec![
+                    ArgValue::f32(Tensor::new(vec![bucket, hidden], data)),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w1")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w3")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w2")),
+                ],
+            )
+            .expect("expert");
+        for j in 0..n {
+            out.push(result[0].row(j).to_vec());
+        }
+        i += n;
+    }
+    out
+}
+
+fn lm_head(dev: &Device, manifest: &Manifest, row: &[f32]) -> u32 {
+    let m = &manifest.model;
+    let bucket = Buckets::fit(&manifest.buckets.lm_head_b, 1).expect("lm bucket");
+    let mut x = Tensor::zeros(vec![bucket, m.hidden]);
+    x.row_mut(0).copy_from_slice(row);
+    let outs = dev
+        .execute(
+            &format!("lm_head_b{bucket}"),
+            vec![ArgValue::f32(x), ArgValue::weight("ln_f"), ArgValue::weight("lm_head")],
+        )
+        .expect("lm_head");
+    ops::argmax(outs[0].row(0)) as u32
+}
+
+fn unpack4(mut outs: Vec<Tensor>) -> (Tensor, Tensor, Tensor, Tensor) {
+    assert_eq!(outs.len(), 4);
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let g = outs.pop().unwrap();
+    let h = outs.pop().unwrap();
+    (h, g, k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_roundtrips_through_loader() {
+        let (m, w, _) = ensure();
+        assert_eq!(m.model.layers, LAYERS);
+        assert_eq!(m.model.hidden, HEADS * HEAD_DIM);
+        assert_eq!(m.model.experts, EXPERTS);
+        // All five artifact kinds present, files on disk.
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "missing {}", a.file);
+        }
+        // Weight table resolves through the blob.
+        let (embed, shape) = w.expect("embed");
+        assert_eq!(shape, &[VOCAB, HIDDEN]);
+        assert_eq!(embed.len(), VOCAB * HIDDEN);
+        let (ln, _) = w.expect("layer0.ln1");
+        assert!(ln.iter().all(|&x| x == 1.0));
+        assert!(w.get(&format!("layer{}.expert{}.w2", LAYERS - 1, EXPERTS - 1)).is_some());
+    }
+
+    #[test]
+    fn golden_cases_are_deterministic_and_in_vocab() {
+        let (m, w, golden) = ensure();
+        assert_eq!(golden.len(), GOLDEN_CASES.len());
+        for (prompt, gen) in &golden {
+            assert!(!gen.is_empty());
+            assert!(gen.iter().all(|&t| (t as usize) < m.model.vocab));
+            assert!(prompt.len() + gen.len() <= m.model.max_seq);
+        }
+        // Re-running the oracle reproduces the fixture bit for bit.
+        let again = golden_cases(&m, &w);
+        assert_eq!(golden, again);
+    }
+}

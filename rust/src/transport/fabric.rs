@@ -1,13 +1,19 @@
 //! The fabric: node registry, inboxes, QP sender handles, and fault
 //! injection. See module docs in `transport`.
+//!
+//! All blocking (delivery deadlines, probe costs, recv timeouts) goes
+//! through the fabric's [`Clock`], so a cluster built on a virtual clock
+//! replays deterministically with no real sleeping.
 
 use super::link::{Link, TrafficClass};
 use super::{NodeId, Plane};
 use crate::config::TransportConfig;
+use crate::util::clock::{self, Clock};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum QpError {
@@ -32,20 +38,21 @@ impl std::fmt::Display for QpError {
 
 impl std::error::Error for QpError {}
 
-/// A delivered message with its transport metadata.
+/// A delivered message with its transport metadata. `deliver_at` is an
+/// offset from the fabric clock's epoch.
 #[derive(Debug)]
 pub struct Envelope<M> {
     pub from: NodeId,
     pub plane: Plane,
     pub seq: u64,
     pub class: TrafficClass,
-    pub deliver_at: Instant,
+    pub deliver_at: Duration,
     pub msg: M,
 }
 
 struct NodeEntry<M> {
     alive: Arc<AtomicBool>,
-    inbox_tx: mpsc::Sender<Envelope<M>>,
+    inbox_tx: clock::Sender<Envelope<M>>,
     egress: Arc<Link>,
 }
 
@@ -70,8 +77,9 @@ impl NodeHandle {
 /// Receiving side of a node: one unified inbox over all QPs/planes.
 pub struct Inbox<M> {
     id: NodeId,
-    rx: mpsc::Receiver<Envelope<M>>,
+    rx: clock::Receiver<Envelope<M>>,
     alive: Arc<AtomicBool>,
+    clock: Clock,
 }
 
 impl<M> Inbox<M> {
@@ -81,20 +89,13 @@ impl<M> Inbox<M> {
         if !self.alive.load(Ordering::Acquire) {
             return Err(QpError::LocalDown(self.id));
         }
-        let deadline = Instant::now() + timeout;
-        let env = loop {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            match self.rx.recv_timeout(remaining) {
-                Ok(e) => break e,
-                Err(mpsc::RecvTimeoutError::Timeout) => return Err(QpError::Timeout),
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(QpError::LocalDown(self.id))
-                }
-            }
+        let env = match self.rx.recv_timeout(timeout) {
+            Ok(e) => e,
+            Err(RecvTimeoutError::Timeout) => return Err(QpError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => return Err(QpError::LocalDown(self.id)),
         };
-        let now = Instant::now();
-        if env.deliver_at > now {
-            std::thread::sleep(env.deliver_at - now);
+        if env.deliver_at > self.clock.now() {
+            self.clock.sleep_until(env.deliver_at);
         }
         if !self.alive.load(Ordering::Acquire) {
             // Crashed while the message was "on the wire".
@@ -106,11 +107,10 @@ impl<M> Inbox<M> {
     /// Drain everything immediately deliverable without blocking.
     pub fn drain_ready(&self) -> Vec<Envelope<M>> {
         let mut out = Vec::new();
-        let now = Instant::now();
         while let Ok(env) = self.rx.try_recv() {
-            if env.deliver_at > now {
+            if env.deliver_at > self.clock.now() {
                 // Still in flight: honor its delivery time, then take it.
-                std::thread::sleep(env.deliver_at - now);
+                self.clock.sleep_until(env.deliver_at);
             }
             out.push(env);
         }
@@ -143,14 +143,10 @@ impl<M: Send + 'static> Qp<M> {
         }
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let deliver_at = self.egress.reserve(bytes, class);
-        self.fabric.deliver(Envelope {
-            from: self.local,
-            plane: self.plane,
-            seq,
-            class,
-            deliver_at,
-            msg,
-        }, self.peer);
+        self.fabric.deliver(
+            Envelope { from: self.local, plane: self.plane, seq, class, deliver_at, msg },
+            self.peer,
+        );
         Ok(seq)
     }
 
@@ -161,15 +157,16 @@ impl<M: Send + 'static> Qp<M> {
         if !self.local_alive.load(Ordering::Acquire) {
             return Err(QpError::LocalDown(self.local));
         }
+        let clock = self.fabric.clock();
         let rtt = 2 * self.egress.latency();
         if self.fabric.path_up(self.local, self.peer) {
-            std::thread::sleep(rtt);
+            clock.sleep(rtt);
             // Re-check: the peer may have died while the probe was in flight.
             if self.fabric.path_up(self.local, self.peer) {
                 return Ok(rtt);
             }
         }
-        std::thread::sleep(timeout);
+        clock.sleep(timeout);
         Err(QpError::RetryExceeded(self.peer))
     }
 
@@ -184,32 +181,46 @@ impl<M: Send + 'static> Qp<M> {
 /// cluster defines one message enum for all workers).
 pub struct Fabric<M> {
     cfg: TransportConfig,
+    clock: Clock,
     nodes: RwLock<HashMap<NodeId, NodeEntry<M>>>,
     severed: Mutex<HashSet<(NodeId, NodeId)>>,
 }
 
 impl<M: Send + 'static> Fabric<M> {
+    /// A fabric on real (wall-clock) time.
     pub fn new(cfg: TransportConfig) -> Arc<Fabric<M>> {
+        Self::with_clock(cfg, Clock::wall())
+    }
+
+    /// A fabric on an explicit clock (virtual for scenario runs).
+    pub fn with_clock(cfg: TransportConfig, clock: Clock) -> Arc<Fabric<M>> {
         Arc::new(Fabric {
             cfg,
+            clock,
             nodes: RwLock::new(HashMap::new()),
             severed: Mutex::new(HashSet::new()),
         })
     }
 
+    /// The clock every link/inbox of this fabric runs on.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
     /// Register (or re-register, for a restarted worker) a node; returns
     /// its inbox and handle. Re-registration revives a killed id.
     pub fn register(self: &Arc<Self>, id: NodeId) -> (Inbox<M>, NodeHandle) {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = clock::channel(&self.clock);
         let alive = Arc::new(AtomicBool::new(true));
-        let egress = Arc::new(Link::new(self.cfg.bandwidth_bps, self.cfg.latency));
+        let egress =
+            Arc::new(Link::new(self.cfg.bandwidth_bps, self.cfg.latency, self.clock.clone()));
         let entry = NodeEntry { alive: alive.clone(), inbox_tx: tx, egress: egress.clone() };
         self.nodes.write().unwrap().insert(id, entry);
         // A fresh registration also clears any severed links of a previous
         // incarnation.
         self.severed.lock().unwrap().retain(|&(a, b)| a != id && b != id);
         (
-            Inbox { id, rx, alive: alive.clone() },
+            Inbox { id, rx, alive: alive.clone(), clock: self.clock.clone() },
             NodeHandle { id, alive, egress },
         )
     }
@@ -284,7 +295,9 @@ impl<M: Send + 'static> Fabric<M> {
     }
 
     pub fn node_ids(&self) -> Vec<NodeId> {
-        self.nodes.read().unwrap().keys().copied().collect()
+        let mut ids: Vec<NodeId> = self.nodes.read().unwrap().keys().copied().collect();
+        ids.sort();
+        ids
     }
 }
 
@@ -299,6 +312,7 @@ fn key(a: NodeId, b: NodeId) -> (NodeId, NodeId) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     fn test_cfg() -> TransportConfig {
         TransportConfig {
@@ -356,6 +370,24 @@ mod tests {
         let err = qp.probe(Duration::from_millis(30)).unwrap_err();
         assert_eq!(err, QpError::RetryExceeded(NodeId::Ew(2)));
         assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn probe_timeout_costs_only_virtual_time_on_a_virtual_fabric() {
+        let clock = Clock::virtual_seeded(5);
+        let _g = clock.register();
+        let fabric: Arc<Fabric<u32>> = Fabric::with_clock(test_cfg(), clock.clone());
+        let (_ib, _hb) = fabric.register(NodeId::Ew(2));
+        let (_ia, _ha) = fabric.register(NodeId::Aw(2));
+        let qp = fabric.qp(NodeId::Aw(2), NodeId::Ew(2), Plane::Control).unwrap();
+        fabric.kill(NodeId::Ew(2));
+        let wall0 = Instant::now();
+        let t0 = clock.now();
+        let err = qp.probe(Duration::from_secs(30)).unwrap_err();
+        assert_eq!(err, QpError::RetryExceeded(NodeId::Ew(2)));
+        assert!(clock.now() - t0 >= Duration::from_secs(30), "virtual cost");
+        assert!(wall0.elapsed() < Duration::from_secs(1), "no real sleeping");
+        clock.shutdown();
     }
 
     #[test]

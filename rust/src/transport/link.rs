@@ -1,10 +1,16 @@
 //! Per-node egress link: bandwidth/latency model, busy-interval tracking,
 //! traffic accounting, and (optionally) a raw event log for the Fig. 8
 //! utilization trace.
+//!
+//! All timing flows through the owning fabric's [`Clock`], so the same
+//! link model runs in real time (production-style runs, benches) or in
+//! deterministic virtual time (the failure-scenario harness). Timestamps
+//! are `Duration`s since the clock's epoch.
 
+use crate::util::clock::Clock;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// What a transfer carries — the accounting dimension for Fig. 8 / Fig. 12.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -56,8 +62,8 @@ impl TrafficClass {
     }
 }
 
-/// One recorded transfer (recording enabled): times relative to the link's
-/// epoch, in microseconds.
+/// One recorded transfer (recording enabled): times relative to the
+/// clock's epoch, in microseconds.
 #[derive(Debug, Clone, Copy)]
 pub struct TrafficEvent {
     pub start_us: u64,
@@ -88,21 +94,21 @@ impl LinkStats {
 pub struct Link {
     bandwidth_bps: f64,
     latency: Duration,
-    epoch: Instant,
-    busy_until: Mutex<Instant>,
+    clock: Clock,
+    busy_until: Mutex<Duration>,
     bytes: [AtomicU64; 6],
     transfers: AtomicU64,
     recording: Mutex<Option<Vec<TrafficEvent>>>,
 }
 
 impl Link {
-    pub fn new(bandwidth_bps: f64, latency: Duration) -> Link {
+    pub fn new(bandwidth_bps: f64, latency: Duration, clock: Clock) -> Link {
         assert!(bandwidth_bps > 0.0);
-        let now = Instant::now();
+        let now = clock.now();
         Link {
             bandwidth_bps,
             latency,
-            epoch: now,
+            clock,
             busy_until: Mutex::new(now),
             bytes: Default::default(),
             transfers: AtomicU64::new(0),
@@ -111,9 +117,10 @@ impl Link {
     }
 
     /// Reserve the link for `bytes` starting no earlier than now; returns
-    /// the delivery instant (serialization + propagation latency).
-    pub fn reserve(&self, bytes: usize, class: TrafficClass) -> Instant {
-        let now = Instant::now();
+    /// the delivery time (serialization + propagation latency), as an
+    /// offset from the clock's epoch.
+    pub fn reserve(&self, bytes: usize, class: TrafficClass) -> Duration {
+        let now = self.clock.now();
         let ser = Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps);
         let (start, end) = {
             let mut busy = self.busy_until.lock().unwrap();
@@ -126,8 +133,8 @@ impl Link {
         self.transfers.fetch_add(1, Ordering::Relaxed);
         if let Some(log) = self.recording.lock().unwrap().as_mut() {
             log.push(TrafficEvent {
-                start_us: start.duration_since(self.epoch).as_micros() as u64,
-                end_us: end.duration_since(self.epoch).as_micros() as u64,
+                start_us: start.as_micros() as u64,
+                end_us: end.as_micros() as u64,
                 bytes: bytes as u64,
                 class,
             });
@@ -138,13 +145,13 @@ impl Link {
     /// Is the link idle right now? The checkpoint streamer's opportunistic
     /// gate (§6.1): segments are flushed only into idle gaps.
     pub fn is_idle(&self) -> bool {
-        *self.busy_until.lock().unwrap() <= Instant::now()
+        *self.busy_until.lock().unwrap() <= self.clock.now()
     }
 
-    /// Seconds until the link drains (0 if idle).
+    /// Time until the link drains (zero if idle).
     pub fn busy_for(&self) -> Duration {
         let busy = *self.busy_until.lock().unwrap();
-        busy.saturating_duration_since(Instant::now())
+        busy.saturating_sub(self.clock.now())
     }
 
     pub fn stats(&self) -> LinkStats {
@@ -165,12 +172,13 @@ impl Link {
         self.recording.lock().unwrap().take().unwrap_or_default()
     }
 
-    pub fn epoch(&self) -> Instant {
-        self.epoch
-    }
-
     pub fn latency(&self) -> Duration {
         self.latency
+    }
+
+    /// The clock this link's timestamps are relative to.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 }
 
@@ -180,25 +188,27 @@ mod tests {
 
     #[test]
     fn serialization_delay_scales_with_bytes() {
-        let link = Link::new(1e6, Duration::ZERO); // 1 MB/s
-        let t0 = Instant::now();
+        let clock = Clock::wall();
+        let link = Link::new(1e6, Duration::ZERO, clock.clone()); // 1 MB/s
+        let t0 = clock.now();
         let d1 = link.reserve(1000, TrafficClass::ExpertDispatch); // 1 ms
         let d2 = link.reserve(1000, TrafficClass::ExpertDispatch); // +1 ms
-        assert!(d1.duration_since(t0) >= Duration::from_micros(900));
-        assert!(d2.duration_since(d1) >= Duration::from_micros(900));
+        assert!(d1.saturating_sub(t0) >= Duration::from_micros(900));
+        assert!(d2.saturating_sub(d1) >= Duration::from_micros(900));
     }
 
     #[test]
     fn latency_is_added_after_serialization() {
-        let link = Link::new(1e9, Duration::from_millis(5));
-        let t0 = Instant::now();
+        let clock = Clock::wall();
+        let link = Link::new(1e9, Duration::from_millis(5), clock.clone());
+        let t0 = clock.now();
         let d = link.reserve(8, TrafficClass::Control);
-        assert!(d.duration_since(t0) >= Duration::from_millis(5));
+        assert!(d.saturating_sub(t0) >= Duration::from_millis(5));
     }
 
     #[test]
     fn idle_tracking() {
-        let link = Link::new(1e3, Duration::ZERO); // 1 KB/s: slow
+        let link = Link::new(1e3, Duration::ZERO, Clock::wall()); // 1 KB/s: slow
         assert!(link.is_idle());
         link.reserve(100, TrafficClass::Checkpoint); // 100 ms of busy
         assert!(!link.is_idle());
@@ -206,8 +216,20 @@ mod tests {
     }
 
     #[test]
+    fn idle_tracking_under_virtual_time() {
+        let clock = Clock::virtual_seeded(1);
+        let _g = clock.register();
+        let link = Link::new(1e3, Duration::ZERO, clock.clone());
+        link.reserve(100, TrafficClass::Checkpoint); // 100 virtual ms busy
+        assert!(!link.is_idle());
+        clock.sleep(Duration::from_millis(100));
+        assert!(link.is_idle(), "virtual advance must drain the link");
+        clock.shutdown();
+    }
+
+    #[test]
     fn per_class_accounting() {
-        let link = Link::new(1e9, Duration::ZERO);
+        let link = Link::new(1e9, Duration::ZERO, Clock::wall());
         link.reserve(100, TrafficClass::ExpertDispatch);
         link.reserve(50, TrafficClass::Checkpoint);
         link.reserve(50, TrafficClass::Checkpoint);
@@ -220,7 +242,7 @@ mod tests {
 
     #[test]
     fn recording_captures_intervals() {
-        let link = Link::new(1e6, Duration::ZERO);
+        let link = Link::new(1e6, Duration::ZERO, Clock::wall());
         link.enable_recording();
         link.reserve(500, TrafficClass::ExpertDispatch);
         link.reserve(500, TrafficClass::Checkpoint);

@@ -5,6 +5,7 @@
 //! are replaced by the minimal, tested implementations in this module.
 
 pub mod cli;
+pub mod clock;
 pub mod http;
 pub mod json;
 pub mod rng;

@@ -180,6 +180,119 @@ fn prop_store_commit_never_exceeds_segments() {
     });
 }
 
+#[test]
+fn prop_store_commits_are_monotonic_under_any_interleaving() {
+    check("store monotonic commits", 150, |rng, _| {
+        let layers = rng.range_usize(1, 4);
+        let positions = rng.range_usize(2, 10);
+        let mut log = StoreLog::new(layers);
+        // All segments present up front; commits then arrive in a random
+        // order (one-sided writes reorder freely on the wire).
+        for p in 0..positions as u32 {
+            for l in 0..layers as u16 {
+                log.segment(
+                    0,
+                    SegmentMsg { request: 7, pos: p, layer: l, data: Arc::new(vec![0.0; 4]) },
+                );
+            }
+        }
+        let mut commits: Vec<u32> = (1..=positions as u32).collect();
+        rng.shuffle(&mut commits);
+        let mut high = 0u32;
+        for upto in commits {
+            log.commit(
+                0,
+                CommitMeta {
+                    request: 7,
+                    committed_pos: upto,
+                    last_token: upto, // distinguishes commit records
+                    generated: upto,
+                    max_new_tokens: 1000,
+                    prompt_len: 0,
+                },
+            );
+            high = high.max(upto);
+            // Invariant: a stale commit never regresses the durable point,
+            // and the surviving record is the one for the high-water mark.
+            let c = log.committed(7).expect("complete prefix must commit");
+            assert_eq!(c.committed_pos, high, "commit regressed");
+            assert_eq!(c.last_token, high, "stale commit record survived");
+        }
+    });
+}
+
+#[test]
+fn prop_store_tombstones_reject_stragglers_without_leaking() {
+    check("store tombstones", 150, |rng, _| {
+        let layers = rng.range_usize(1, 4);
+        let mut log = StoreLog::new(layers);
+        let live: u64 = 1;
+        let finished: u64 = 2;
+        // Both requests accumulate some state...
+        for req in [live, finished] {
+            for p in 0..3u32 {
+                for l in 0..layers as u16 {
+                    log.segment(
+                        0,
+                        SegmentMsg { request: req, pos: p, layer: l, data: Arc::new(vec![0.0; 4]) },
+                    );
+                }
+            }
+        }
+        // ...then one finishes and is reclaimed.
+        log.forget(finished);
+        assert!(log.committed(finished).is_none());
+        let resident_before = log.resident_bytes();
+        let dropped_before = log.stragglers_dropped;
+        // A random burst of stragglers for the tombstoned request: late
+        // segments and late commits, interleaved.
+        let n = rng.range_usize(1, 12);
+        for _ in 0..n {
+            if rng.f64() < 0.5 {
+                log.segment(
+                    0,
+                    SegmentMsg {
+                        request: finished,
+                        pos: rng.range(0, 8) as u32,
+                        layer: rng.range(0, layers as u64) as u16,
+                        data: Arc::new(vec![0.0; 4]),
+                    },
+                );
+            } else {
+                log.commit(
+                    0,
+                    CommitMeta {
+                        request: finished,
+                        committed_pos: rng.range(1, 4) as u32,
+                        last_token: 0,
+                        generated: 1,
+                        max_new_tokens: 1000,
+                        prompt_len: 0,
+                    },
+                );
+            }
+        }
+        // Invariants: nothing resurrected, nothing leaked, every straggler
+        // counted; the live request is untouched.
+        assert!(log.committed(finished).is_none(), "tombstoned request resurrected");
+        assert_eq!(log.resident_bytes(), resident_before, "stragglers leaked payload bytes");
+        assert_eq!(log.stragglers_dropped, dropped_before + n as u64);
+        assert_eq!(log.num_requests(), 1);
+        log.commit(
+            0,
+            CommitMeta {
+                request: live,
+                committed_pos: 3,
+                last_token: 5,
+                generated: 3,
+                max_new_tokens: 1000,
+                prompt_len: 0,
+            },
+        );
+        assert_eq!(log.committed(live).unwrap().committed_pos, 3);
+    });
+}
+
 // ---------------------------------------------------------------------------
 // KV cache / batch assembly invariants
 // ---------------------------------------------------------------------------

@@ -1,0 +1,157 @@
+//! Failure-scenario matrix on the virtual clock (testing::scenario).
+//!
+//! Every scenario runs the full cluster — gateway, orchestrator,
+//! checkpoint store, AWs, EWs, fabric — under deterministic virtual time
+//! against the synthetic in-repo model, and asserts the paper's §5/§6
+//! recovery guarantee: the generated token streams are identical to the
+//! failure-free run. Probe timeouts, silence windows and T_w cost virtual
+//! time only, so the whole matrix completes in seconds of wall time.
+
+use std::time::Duration;
+use tarragon::config::Config;
+use tarragon::testing::scenario::Scenario;
+use tarragon::testing::synthetic;
+
+/// Scenario base: 2 AWs × 2 EWs, and a transport latency high enough
+/// that decode pacing is dominated by (virtual) wire time — failure
+/// injection offsets then land deterministically mid-decode.
+fn scenario_cfg(latency: Duration) -> Config {
+    let mut cfg = Config::small_test();
+    cfg.transport.latency = latency;
+    // Virtual: bring-up and provisioning cost no wall time.
+    cfg.transport.worker_extra_init = Duration::from_millis(200);
+    cfg
+}
+
+/// Two requests, one per AW (gateway round-robin): req 0 -> aw0,
+/// req 1 -> aw1.
+fn two_request_scenario(name: &str, latency: Duration) -> Scenario {
+    Scenario::new(name, scenario_cfg(latency))
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+}
+
+fn assert_streams_match(faulty: &tarragon::testing::scenario::ScenarioOutcome, name: &str) {
+    assert!(faulty.completed, "{name}: faulty run did not drain");
+    for (id, toks) in &faulty.tokens {
+        assert_eq!(toks.len(), 32, "{name}: req {id} truncated");
+    }
+}
+
+#[test]
+fn ew_kill_mid_decode_replays_to_shadows_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("ew-kill", Duration::from_millis(1))
+        .fault("at 60ms kill ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "ew-kill");
+    assert_eq!(faulty.tokens, clean.tokens, "EW failover changed token streams");
+    assert!(faulty.report.ew_failures >= 1, "EW failure went unhandled");
+    assert_eq!(faulty.report.aw_failures, 0);
+}
+
+#[test]
+fn aw_kill_before_first_commit_resubmits_from_prompt() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Slow wire (5 ms latency): prefill spans tens of virtual ms, so a
+    // kill 8 ms after submission reliably lands before the first commit.
+    let s = Scenario::new("aw-kill-precommit", scenario_cfg(Duration::from_millis(5)))
+        .request(0, Duration::from_millis(20), vec![1, 2, 3, 4, 5, 6, 7, 8], 16)
+        .fault("at 28ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "prompt resubmission changed token streams");
+    assert!(faulty.report.aw_failures >= 1);
+    // The request went through the gateway's resubmit path (Migrated).
+    assert!(
+        faulty.event_log.contains("migrated"),
+        "expected a resubmission in the event log:\n{}",
+        faulty.event_log
+    );
+}
+
+#[test]
+fn aw_kill_after_commit_adopts_restores_and_resumes() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("aw-kill-adopt", Duration::from_millis(1))
+        .fault("at 60ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "aw-kill-adopt");
+    assert_eq!(faulty.tokens, clean.tokens, "adopt->restore->resume changed token streams");
+    assert!(faulty.report.aw_failures >= 1);
+    // Mid-decode kill with committed checkpoints: restoration, not
+    // resubmission — the stream continues from the committed token.
+    assert_eq!(faulty.report.finished, 2);
+}
+
+#[test]
+fn link_sever_self_heals_locally_without_global_recovery() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("sever", Duration::from_millis(1))
+        .fault("at 60ms sever aw0 ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "link sever changed token streams");
+    // Both endpoints stay alive: the orchestrator must treat the failure
+    // reports as stale (nodes reachable) — purely local rerouting.
+    assert_eq!(faulty.report.ew_failures, 0, "sever must not trigger EW recovery");
+    assert_eq!(faulty.report.aw_failures, 0, "sever must not trigger AW recovery");
+}
+
+#[test]
+fn simultaneous_aw_and_ew_failure_recovers_both() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("aw-plus-ew", Duration::from_millis(1))
+        .fault("at 60ms kill aw0")
+        .fault("at 60ms kill ew1");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "aw-plus-ew");
+    assert_eq!(faulty.tokens, clean.tokens, "simultaneous failure changed token streams");
+    assert!(faulty.report.aw_failures >= 1);
+    assert!(faulty.report.ew_failures >= 1);
+}
+
+#[test]
+fn kill_then_respawn_without_provisioning_restores_capacity() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let mut cfg = scenario_cfg(Duration::from_millis(1));
+    cfg.resilience.provisioning = false; // the DSL respawn is the only replacement
+    let s = Scenario::new("respawn", cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 60ms kill ew0")
+        .fault("at 400ms respawn ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "kill+respawn changed token streams");
+    assert!(faulty.report.ew_failures >= 1);
+}
+
+#[test]
+fn same_seed_replays_byte_identical_event_logs() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("determinism", Duration::from_millis(1))
+        .fault("at 60ms kill ew0")
+        .seed(42);
+    let a = s.run(manifest.clone(), weights.clone());
+    let b = s.run(manifest.clone(), weights.clone());
+    assert!(a.completed && b.completed);
+    assert!(!a.event_log.is_empty());
+    assert_eq!(a.event_log, b.event_log, "same scenario + seed must replay identically");
+    assert_eq!(a.tokens, b.tokens);
+
+    // A different seed may interleave differently (timestamps can move),
+    // but the final token streams are invariant.
+    let c = s.clone().seed(43).run(manifest, weights);
+    assert!(c.completed);
+    assert_eq!(c.tokens, a.tokens, "token streams must be seed-invariant");
+}
