@@ -1,28 +1,41 @@
-//! End-to-end serving benchmarks — one per paper table/figure family:
-//! steady-state decode throughput (Fig. 11), artifact execution costs
-//! (Table 1 inputs / Fig. 13b), and checkpoint-path overhead (§7.4).
-//! Custom harness (criterion is unavailable offline).
+//! End-to-end serving benchmarks: artifact execution costs (Table 1
+//! inputs / Fig. 13b) when real artifacts are present, plus the overload
+//! load-sweep harness (DESIGN.md §9) — throughput, p50/p99 TTFT and TBT,
+//! and preemption rate vs. offered load — which runs the full cluster on
+//! the synthetic model under a deterministic virtual clock, so it needs
+//! no artifacts and costs seconds of wall time. Results are written to
+//! `BENCH_serving.json`.
 //!
 //! Run: cargo bench --offline --bench serving
+//! CI smoke: cargo bench --offline --bench serving -- --smoke
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use tarragon::config::Config;
-use tarragon::coordinator::cluster::{Cluster, LaunchOptions};
 use tarragon::modelcfg::{weights::Weights, Manifest};
 use tarragon::runtime::{ArgValue, Device, DeviceRole};
 use tarragon::tensor::Tensor;
-use tarragon::testing::bench::{bench, once};
-use tarragon::workload::Request;
+use tarragon::testing::bench::bench;
+use tarragon::testing::scenario::Scenario;
+use tarragon::testing::synthetic;
+use tarragon::util::json::{arr, num, obj, s, Json};
+use tarragon::util::stats;
 
 fn main() {
-    let dir = Manifest::default_dir();
-    let Ok(manifest) = Manifest::load(&dir) else {
-        println!("artifacts not built — run `make artifacts` first");
-        return;
-    };
-    let manifest = Arc::new(manifest);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    if let Ok(manifest) = Manifest::load(&Manifest::default_dir()) {
+        artifact_benches(Arc::new(manifest));
+    } else {
+        println!("artifacts not built — skipping artifact benches (the load sweep below uses the in-repo synthetic model)");
+    }
+
+    load_sweep(smoke);
+}
+
+/// Artifact-level microbenches (only with Python-built artifacts).
+fn artifact_benches(manifest: Arc<Manifest>) {
     let weights = Weights::load(&manifest).expect("weights");
     let m = manifest.model.clone();
 
@@ -37,11 +50,11 @@ fn main() {
     .expect("device");
 
     let b = *manifest.buckets.decode_b.last().unwrap();
-    let s = m.max_seq;
-    let kv_shape = vec![b, s, m.kv_heads, m.head_dim];
+    let seq = m.max_seq;
+    let kv_shape = vec![b, seq, m.kv_heads, m.head_dim];
     let kc = Tensor::zeros(kv_shape.clone());
     let vc = Tensor::zeros(kv_shape);
-    bench(&format!("attn_decode_b{b} (S={s})"), 5, 100, || {
+    bench(&format!("attn_decode_b{b} (S={seq})"), 5, 100, || {
         let mut args = vec![
             ArgValue::f32(Tensor::zeros(vec![b, m.hidden])),
             ArgValue::f32(kc.clone()),
@@ -79,42 +92,125 @@ fn main() {
         });
     }
     device.shutdown();
+}
 
-    println!("\n== end-to-end cluster (Fig. 11-style throughput) ==");
-    let schedule: Vec<Request> = (0..6u64)
-        .map(|i| Request {
-            id: i,
-            arrival_s: 0.05 * i as f64,
-            prompt: vec![1 + i as u32; 8],
-            max_new_tokens: 48,
-        })
-        .collect();
-    let mut cfg = Config::default();
-    cfg.cluster.num_aws = 2;
-    cfg.cluster.num_ews = 2;
-    cfg.transport.worker_extra_init = Duration::from_millis(10);
+struct SweepPoint {
+    offered_rps: f64,
+    completed: bool,
+    finished: usize,
+    throughput_tps: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    tbt_p50_ms: f64,
+    tbt_p99_ms: f64,
+    preemptions: u64,
+    preemption_rate: f64,
+    wall_ms: f64,
+}
 
-    once("cluster bring-up (2 AW + 2 EW, T_w)", || {
-        let c = Cluster::launch(
-            cfg.clone(),
-            manifest.clone(),
-            weights.clone(),
-            vec![],
-            LaunchOptions::default(),
+/// Offered-load sweep on the synthetic model under a virtual clock: the
+/// per-AW KV budget (8 pages) is undersized on purpose, so high offered
+/// loads force queueing + checkpoint-backed preemption — the bench
+/// records how latency and preemption rate degrade, with zero drops.
+fn load_sweep(smoke: bool) {
+    const N_REQS: usize = 16;
+    const N_REQS_SMOKE: usize = 8;
+    const BASE_GAP_MS: u64 = 20;
+    const BUDGET_PAGES: usize = 8;
+
+    println!("\n== overload load sweep (virtual clock, synthetic model) ==");
+    let (manifest, weights, _) = synthetic::ensure();
+    let mults: &[f64] = if smoke { &[1.0, 4.0] } else { &[0.5, 1.0, 2.0, 4.0] };
+    let n = if smoke { N_REQS_SMOKE } else { N_REQS };
+
+    let mut points = Vec::new();
+    for &mult in mults {
+        let gap = Duration::from_micros((BASE_GAP_MS as f64 * 1000.0 / mult) as u64);
+        let mut cfg = Config::small_test();
+        cfg.transport.latency = Duration::from_millis(1);
+        cfg.transport.worker_extra_init = Duration::from_millis(50);
+        cfg.sched.kv_budget_pages = BUDGET_PAGES;
+        let mut scen = Scenario::new(format!("sweep-x{mult}"), cfg);
+        for i in 0..n as u64 {
+            scen = scen.request(i, gap * i as u32, vec![(1 + i % 100) as u32, 2, 3, 4, 5, 6, 7, 8], 24);
+        }
+        scen.drain_timeout = Duration::from_secs(300);
+
+        let t0 = std::time::Instant::now();
+        let out = scen.run(manifest.clone(), weights.clone());
+        let wall = t0.elapsed();
+        out.assert_kv_budget_held();
+        assert_eq!(out.report.finished, n, "load sweep dropped requests at x{mult}");
+
+        let a = &out.report.analysis;
+        let p = SweepPoint {
+            offered_rps: 1000.0 / (gap.as_secs_f64() * 1000.0),
+            completed: out.completed,
+            finished: out.report.finished,
+            throughput_tps: a.throughput_tps,
+            ttft_p50_ms: stats::median(&a.ttft_ms),
+            ttft_p99_ms: stats::percentile(&a.ttft_ms, 99.0),
+            tbt_p50_ms: stats::median(&a.tbt_ms),
+            tbt_p99_ms: stats::percentile(&a.tbt_ms, 99.0),
+            preemptions: out.report.preemptions,
+            preemption_rate: out.report.preemptions as f64 / out.report.finished.max(1) as f64,
+            wall_ms: wall.as_secs_f64() * 1e3,
+        };
+        println!(
+            "x{mult:<4} offered {:>7.1} rps | {:>8.1} tok/s | TTFT p50 {:>8.2} p99 {:>8.2} ms | TBT p50 {:>7.2} p99 {:>7.2} ms | preempt {:>3} ({:.2}/req) | wall {:>7.1} ms",
+            p.offered_rps,
+            p.throughput_tps,
+            p.ttft_p50_ms,
+            p.ttft_p99_ms,
+            p.tbt_p50_ms,
+            p.tbt_p99_ms,
+            p.preemptions,
+            p.preemption_rate,
+            p.wall_ms,
         );
-        c.finish(1.0);
-    });
+        points.push(p);
+    }
+    write_report(&points, smoke, n, BUDGET_PAGES);
+}
 
-    let c = Cluster::launch(cfg, manifest, weights, schedule, LaunchOptions::default());
-    let t0 = std::time::Instant::now();
-    assert!(c.wait_done(Duration::from_secs(300)));
-    let wall = t0.elapsed();
-    let report = c.finish(1.0);
-    println!(
-        "decode throughput: {:.0} tok/s ({} tokens in {:.2}s, TBT median {:.2} ms)",
-        report.analysis.total_tokens as f64 / wall.as_secs_f64(),
-        report.analysis.total_tokens,
-        wall.as_secs_f64(),
-        report.analysis.tbt().median_ms,
-    );
+fn write_report(points: &[SweepPoint], smoke: bool, n_reqs: usize, budget: usize) {
+    let entries = points.iter().map(|p| {
+        obj(vec![
+            ("offered_rps", num(p.offered_rps)),
+            ("completed", Json::Bool(p.completed)),
+            ("finished", num(p.finished as f64)),
+            ("throughput_tps", num(p.throughput_tps)),
+            ("ttft_p50_ms", num(p.ttft_p50_ms)),
+            ("ttft_p99_ms", num(p.ttft_p99_ms)),
+            ("tbt_p50_ms", num(p.tbt_p50_ms)),
+            ("tbt_p99_ms", num(p.tbt_p99_ms)),
+            ("preemptions", num(p.preemptions as f64)),
+            ("preemption_rate", num(p.preemption_rate)),
+            ("wall_ms", num(p.wall_ms)),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("overload load sweep: throughput, TTFT/TBT tails, preemption rate vs offered load"),
+        ),
+        ("command", s("cargo bench --bench serving")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "setup",
+            obj(vec![
+                ("cluster", s("2 AW x 2 EW, virtual clock, synthetic model")),
+                ("requests", num(n_reqs as f64)),
+                ("prompt_tokens", num(8.0)),
+                ("max_new_tokens", num(24.0)),
+                ("kv_budget_pages_per_aw", num(budget as f64)),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

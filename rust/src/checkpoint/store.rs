@@ -11,7 +11,7 @@
 //! from fabric messages.
 
 use crate::proto::{ClusterMsg, CommitMeta, RestoreData, SegPayload, SegmentMsg};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 #[derive(Debug, Default)]
 struct RequestLog {
@@ -167,6 +167,11 @@ impl StoreLog {
         self.finished.insert(request);
     }
 
+    /// Whether a request was reclaimed (tombstoned).
+    pub fn is_finished(&self, request: u64) -> bool {
+        self.finished.contains(&request)
+    }
+
     pub fn num_requests(&self) -> usize {
         self.reqs.len()
     }
@@ -189,11 +194,33 @@ impl StoreLog {
 /// any) to post back.
 pub struct CkptStore {
     pub log: StoreLog,
+    /// Restore pulls that arrived before the request's state was durable
+    /// (preempt → re-admit races the in-flight commit): answered as soon
+    /// as a covering commit is accepted. Ordered for deterministic replay.
+    pending_pulls: BTreeMap<u64, crate::transport::NodeId>,
 }
 
 impl CkptStore {
     pub fn new(layers: usize) -> CkptStore {
-        CkptStore { log: StoreLog::new(layers) }
+        CkptStore { log: StoreLog::new(layers), pending_pulls: BTreeMap::new() }
+    }
+
+    /// Restore pulls currently deferred (tests / introspection).
+    pub fn pending_pulls(&self) -> usize {
+        self.pending_pulls.len()
+    }
+
+    /// If `request` has a deferred pull and is now restorable, build the
+    /// reply and rebind ownership to the puller.
+    fn serve_pending(&mut self, request: u64) -> Option<(crate::transport::NodeId, ClusterMsg)> {
+        use crate::transport::NodeId;
+        let puller = *self.pending_pulls.get(&request)?;
+        let data = self.log.restore_data(request)?;
+        self.pending_pulls.remove(&request);
+        if let NodeId::Aw(aw) = puller {
+            self.log.rebind(request, aw);
+        }
+        Some((puller, ClusterMsg::Restore(data)))
     }
 
     /// Handle one inbound message; `from_aw` is the sender when it is an
@@ -204,18 +231,25 @@ impl CkptStore {
         match msg {
             ClusterMsg::CkptSegment(s) => {
                 if let NodeId::Aw(aw) = from {
+                    let req = s.request;
                     self.log.segment(aw, s);
+                    // A segment can complete a deferred commit, which in
+                    // turn can answer a deferred pull.
+                    return self.serve_pending(req).into_iter().collect();
                 }
                 vec![]
             }
             ClusterMsg::CkptCommit(c) => {
                 if let NodeId::Aw(aw) = from {
+                    let req = c.request;
                     if c.generated >= c.max_new_tokens {
                         // Finished: final commit then reclaim.
                         self.log.commit(aw, c.clone());
-                        self.log.forget(c.request);
+                        self.log.forget(req);
+                        self.pending_pulls.remove(&req);
                     } else {
                         self.log.commit(aw, c);
+                        return self.serve_pending(req).into_iter().collect();
                     }
                 }
                 vec![]
@@ -225,6 +259,7 @@ impl CkptStore {
                 // and commit records (bounded store memory).
                 if from == NodeId::Gateway {
                     self.log.forget(request);
+                    self.pending_pulls.remove(&request);
                 }
                 vec![]
             }
@@ -235,6 +270,11 @@ impl CkptStore {
                     }
                     vec![(from, ClusterMsg::Restore(data))]
                 } else {
+                    // Not durable yet (commit still on the wire) — park
+                    // the pull; tombstoned requests stay unanswered.
+                    if !self.log.is_finished(request) {
+                        self.pending_pulls.insert(request, from);
+                    }
                     vec![]
                 }
             }
@@ -405,6 +445,52 @@ mod tests {
         store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(6, 0, 0)));
         store.handle(NodeId::Aw(1), ClusterMsg::ReqFinished { request: 6 });
         assert_eq!(store.log.num_requests(), 1);
+    }
+
+    #[test]
+    fn restore_pull_before_commit_is_answered_when_durable() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(1);
+        // Pull races ahead of the preempting AW's in-flight checkpoint.
+        assert!(store.handle(NodeId::Aw(2), ClusterMsg::RestorePull { request: 4 }).is_empty());
+        assert_eq!(store.pending_pulls(), 1);
+        // Segment alone is not enough (no commit yet).
+        assert!(store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(4, 0, 0))).is_empty());
+        // The covering commit arrives: the deferred pull is served.
+        let replies = store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(4, 1, 1)));
+        assert_eq!(replies.len(), 1);
+        match &replies[0] {
+            (NodeId::Aw(2), ClusterMsg::Restore(d)) => assert_eq!(d.meta.committed_pos, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(store.pending_pulls(), 0);
+        // Ownership moved to the puller.
+        assert_eq!(store.log.active_of(2).len(), 1);
+    }
+
+    #[test]
+    fn deferred_commit_completion_serves_parked_pull() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(2);
+        // Commit deferred: layer 1 of pos 0 missing.
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(6, 0, 0)));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(6, 1, 1)));
+        assert!(store.handle(NodeId::Aw(3), ClusterMsg::RestorePull { request: 6 }).is_empty());
+        // The straggler segment completes the prefix AND answers the pull.
+        let replies = store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(6, 0, 1)));
+        assert_eq!(replies.len(), 1);
+        assert!(matches!(&replies[0], (NodeId::Aw(3), ClusterMsg::Restore(_))));
+    }
+
+    #[test]
+    fn tombstoned_pulls_stay_unanswered() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::new(1);
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(7, 0, 0)));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(7, 1, 1)));
+        store.handle(NodeId::Gateway, ClusterMsg::ReqFinished { request: 7 });
+        assert!(store.handle(NodeId::Aw(1), ClusterMsg::RestorePull { request: 7 }).is_empty());
+        assert_eq!(store.pending_pulls(), 0, "finished requests must not park pulls");
     }
 
     #[test]

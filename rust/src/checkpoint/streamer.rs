@@ -76,32 +76,51 @@ impl CkptStreamer {
                 self.forced_flushes += 1;
             }
             let _ = item; // popped next
-            match self.queue.pop_front().unwrap() {
-                Item::Segment(s) => {
-                    let bytes = s.wire_bytes();
-                    if qp
-                        .post(ClusterMsg::CkptSegment(s), bytes, TrafficClass::Checkpoint)
-                        .is_ok()
-                    {
-                        self.segments_sent += 1;
-                        self.bytes_sent += bytes as u64;
-                        posted += 1;
-                    }
+            let next = self.queue.pop_front().unwrap();
+            posted += self.post_item(next, qp);
+        }
+        posted
+    }
+
+    /// Unconditionally drain the whole queue, ignoring the idle gate
+    /// (preemption / drain: the request's state must become durable *now*
+    /// so the adopting AW's restore pull can be served). The posts still
+    /// serialize behind any in-flight traffic on the egress link — this
+    /// only bypasses the opportunistic deferral.
+    pub fn flush_now(&mut self, qp: &Qp<ClusterMsg>) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let mut posted = 0;
+        while let Some(item) = self.queue.pop_front() {
+            posted += self.post_item(item, qp);
+        }
+        if posted > 0 {
+            self.forced_flushes += 1;
+        }
+        posted
+    }
+
+    fn post_item(&mut self, item: Item, qp: &Qp<ClusterMsg>) -> usize {
+        match item {
+            Item::Segment(s) => {
+                let bytes = s.wire_bytes();
+                if qp.post(ClusterMsg::CkptSegment(s), bytes, TrafficClass::Checkpoint).is_ok() {
+                    self.segments_sent += 1;
+                    self.bytes_sent += bytes as u64;
+                    return 1;
                 }
-                Item::Commit(c) => {
-                    let bytes = c.wire_bytes();
-                    if qp
-                        .post(ClusterMsg::CkptCommit(c), bytes, TrafficClass::Checkpoint)
-                        .is_ok()
-                    {
-                        self.commits_sent += 1;
-                        self.bytes_sent += bytes as u64;
-                        posted += 1;
-                    }
+            }
+            Item::Commit(c) => {
+                let bytes = c.wire_bytes();
+                if qp.post(ClusterMsg::CkptCommit(c), bytes, TrafficClass::Checkpoint).is_ok() {
+                    self.commits_sent += 1;
+                    self.bytes_sent += bytes as u64;
+                    return 1;
                 }
             }
         }
-        posted
+        0
     }
 }
 
@@ -190,6 +209,20 @@ mod tests {
         assert!(n >= 3, "over-cap items must flush despite busy link, n={n}");
         assert!(s.forced_flushes > 0);
         assert!(s.pending() <= 2);
+    }
+
+    #[test]
+    fn flush_now_drains_despite_busy_link() {
+        let (_f, _inbox, qp, egress) = mk_fabric(1e5);
+        egress.reserve(100_000, TrafficClass::ExpertDispatch); // 1 s busy
+        let mut s = CkptStreamer::new(true, 1000);
+        for p in 0..4 {
+            s.push_segment(seg(p));
+        }
+        assert_eq!(s.flush(&qp, &egress), 0, "opportunistic flush defers");
+        assert_eq!(s.flush_now(&qp), 4, "preemption flush must not defer");
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.segments_sent, 4);
     }
 
     #[test]

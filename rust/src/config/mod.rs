@@ -65,6 +65,70 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Gateway routing policy for the overload-aware scheduler (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Blind rotation over the live set (the pre-scheduler behavior; the
+    /// fallback when no load information is available).
+    RoundRobin,
+    /// Lowest KV pressure first (ties: shortest queue, lowest id).
+    LeastPressure,
+    /// Shortest queue first (ties: lowest id).
+    JoinShortestQueue,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round_robin" => Some(RouterPolicy::RoundRobin),
+            "least_pressure" => Some(RouterPolicy::LeastPressure),
+            "jsq" | "join_shortest_queue" => Some(RouterPolicy::JoinShortestQueue),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastPressure => "least_pressure",
+            RouterPolicy::JoinShortestQueue => "jsq",
+        }
+    }
+}
+
+/// Overload-aware serving scheduler (DESIGN.md §9): KV-pressure admission,
+/// load-aware routing, and checkpoint-backed preemption.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    /// Gateway routing policy.
+    pub policy: RouterPolicy,
+    /// Hard KV page budget per AW arena (0 = unbounded). Models the GPU
+    /// memory actually available for KV state; requires checkpointing
+    /// (preempted requests are restored from their checkpoints).
+    pub kv_budget_pages: usize,
+    /// Pressure at/above which an AW preempts its lowest-progress request
+    /// and the gateway stops routing new work to it.
+    pub high_watermark: f64,
+    /// Pressure below which the orchestrator re-admits parked
+    /// (preempted) requests.
+    pub low_watermark: f64,
+    /// Period of the AW load beacon (pressure + queue depth, posted to
+    /// the gateway and the orchestrator).
+    pub status_interval: Duration,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: RouterPolicy::LeastPressure,
+            kv_budget_pages: 0,
+            high_watermark: 0.85,
+            low_watermark: 0.60,
+            status_interval: Duration::from_millis(5),
+        }
+    }
+}
+
 /// Resilience feature switches. Defaults = full TARRAGON. The Fig. 15
 /// ablation variants:
 ///   Alt-1 = checkpointing off;
@@ -133,26 +197,21 @@ impl Default for ResilienceConfig {
 impl ResilienceConfig {
     /// Fig. 15 variants by name: "tarragon", "alt1", "alt2", "alt3".
     pub fn variant(name: &str) -> Option<ResilienceConfig> {
-        let mut c = ResilienceConfig::default();
+        let base = ResilienceConfig::default();
         match name {
-            "tarragon" => {}
-            "alt1" => {
-                c.checkpointing = false;
-            }
-            "alt2" => {
-                c.checkpointing = false;
-                c.detection = false;
-            }
-            "alt3" => {
-                c.checkpointing = false;
-                c.detection = false;
-                c.dynamic_ert = false;
-                c.shadow_experts = false;
-                c.partial_batch = false;
-            }
-            _ => return None,
+            "tarragon" => Some(base),
+            "alt1" => Some(ResilienceConfig { checkpointing: false, ..base }),
+            "alt2" => Some(ResilienceConfig { checkpointing: false, detection: false, ..base }),
+            "alt3" => Some(ResilienceConfig {
+                checkpointing: false,
+                detection: false,
+                dynamic_ert: false,
+                shadow_experts: false,
+                partial_batch: false,
+                ..base
+            }),
+            _ => None,
         }
-        Some(c)
     }
 }
 
@@ -229,6 +288,7 @@ pub struct Config {
     pub resilience: ResilienceConfig,
     pub transport: TransportConfig,
     pub workload: WorkloadConfig,
+    pub sched: SchedConfig,
 }
 
 impl Config {
@@ -320,6 +380,17 @@ impl Config {
         t.worker_extra_init =
             get_ms("transport.worker_extra_init_ms", t.worker_extra_init)?;
 
+        let sc = &mut self.sched;
+        if let Some(v) = m.get("sched.policy") {
+            let s = v.as_str().ok_or_else(|| bad("sched.policy"))?;
+            sc.policy = RouterPolicy::parse(s)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown router policy '{s}'")))?;
+        }
+        sc.kv_budget_pages = get_usize("sched.kv_budget_pages", sc.kv_budget_pages)?;
+        sc.high_watermark = get_f64("sched.high_watermark", sc.high_watermark)?;
+        sc.low_watermark = get_f64("sched.low_watermark", sc.low_watermark)?;
+        sc.status_interval = get_ms("sched.status_interval_ms", sc.status_interval)?;
+
         let w = &mut self.workload;
         if let Some(v) = m.get("workload.kind") {
             let s = v.as_str().ok_or_else(|| bad("workload.kind"))?;
@@ -348,6 +419,22 @@ impl Config {
         if !(0.0..=1.0).contains(&self.resilience.min_batch_fraction) {
             return Err(ConfigError::Invalid(
                 "min_batch_fraction must be in [0,1]".into(),
+            ));
+        }
+        let sc = &self.sched;
+        if !(sc.high_watermark > 0.0 && sc.high_watermark <= 1.0) {
+            return Err(ConfigError::Invalid("high_watermark must be in (0,1]".into()));
+        }
+        if !(sc.low_watermark > 0.0 && sc.low_watermark <= sc.high_watermark) {
+            return Err(ConfigError::Invalid(
+                "low_watermark must be in (0, high_watermark]".into(),
+            ));
+        }
+        if sc.kv_budget_pages > 0 && !self.resilience.checkpointing {
+            return Err(ConfigError::Invalid(
+                "kv_budget_pages requires checkpointing (preempted requests \
+                 are restored from their checkpoints)"
+                    .into(),
             ));
         }
         if self.workload.rate_rps <= 0.0 {
@@ -427,5 +514,45 @@ duration_secs = 30
         assert!(Config::from_toml_str("[workload]\nrate_rps = -1\n").is_err());
         assert!(Config::from_toml_str("[workload]\nkind = \"bogus\"\n").is_err());
         assert!(Config::from_toml_str("[cluster]\ndecode_batch = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_sched_section() {
+        let cfg = Config::from_toml_str(
+            r#"
+[sched]
+policy = "jsq"
+kv_budget_pages = 64
+high_watermark = 0.9
+low_watermark = 0.5
+status_interval_ms = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sched.policy, RouterPolicy::JoinShortestQueue);
+        assert_eq!(cfg.sched.kv_budget_pages, 64);
+        assert_eq!(cfg.sched.high_watermark, 0.9);
+        assert_eq!(cfg.sched.low_watermark, 0.5);
+        assert_eq!(cfg.sched.status_interval, Duration::from_millis(2));
+        assert_eq!(RouterPolicy::parse("least_pressure"), Some(RouterPolicy::LeastPressure));
+        assert_eq!(RouterPolicy::parse("round_robin").unwrap().name(), "round_robin");
+        assert!(RouterPolicy::parse("random").is_none());
+    }
+
+    #[test]
+    fn rejects_invalid_sched() {
+        // Watermarks out of range / inverted.
+        assert!(Config::from_toml_str("[sched]\nhigh_watermark = 1.5\n").is_err());
+        assert!(
+            Config::from_toml_str("[sched]\nhigh_watermark = 0.5\nlow_watermark = 0.8\n").is_err()
+        );
+        assert!(Config::from_toml_str("[sched]\npolicy = \"bogus\"\n").is_err());
+        // A KV budget without checkpointing cannot restore preempted work.
+        assert!(Config::from_toml_str(
+            "[resilience]\ncheckpointing = false\n[sched]\nkv_budget_pages = 8\n"
+        )
+        .is_err());
+        // With checkpointing on (default) it is fine.
+        assert!(Config::from_toml_str("[sched]\nkv_budget_pages = 8\n").is_ok());
     }
 }

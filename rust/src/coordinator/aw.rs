@@ -20,11 +20,12 @@
 
 use super::refe::{Refe, RefeError};
 use super::router::{self, ExpertGroups};
+use super::sched;
 use crate::config::Config;
 use crate::coordinator::ert::Ert;
 use crate::kvcache::{BatchAssembler, KvPool, RequestKv};
 use crate::modelcfg::{weights::Weights, Buckets, Manifest};
-use crate::proto::{ClusterMsg, CommitMeta, RequestMeta, SegmentMsg, HDR_BYTES};
+use crate::proto::{AwStatus, ClusterMsg, CommitMeta, RequestMeta, SegmentMsg, HDR_BYTES};
 use crate::runtime::{ArgValue, Device, DeviceRole};
 use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
@@ -62,6 +63,14 @@ struct Req {
     /// Token id to embed next (last emitted token during decode).
     next_input: u32,
     generated: u32,
+    /// Original prompt length — survives restores (whose `meta.prompt` is
+    /// empty) so re-preemption commits stay faithful.
+    prompt_len: u32,
+    /// Whether the request has produced at least one token *on this AW*
+    /// since arrival/restore. Preemption victims must have progressed —
+    /// this is the anti-livelock guarantee that a freshly restored
+    /// request cannot be re-evicted before decoding anything.
+    progressed: bool,
 }
 
 pub struct AwWorker {
@@ -78,6 +87,7 @@ pub struct AwWorker {
     streamer: CkptStreamer,
     store_qp: Qp<ClusterMsg>,
     gw_qp: Qp<ClusterMsg>,
+    orch_qp: Qp<ClusterMsg>,
     pool: Arc<KvPool>,
     /// Ordered map: iteration order (PCR snapshots, diagnostics) must be
     /// deterministic for scenario replay.
@@ -88,7 +98,16 @@ pub struct AwWorker {
     asm: BatchAssembler,
     was_active: bool,
     stop: Arc<AtomicBool>,
+    /// Set by `PreemptAll` (planned drain): this worker is closed to new
+    /// work. Requests that still arrive (dispatched against a stale
+    /// routing set) are bounced straight back instead of served, so a
+    /// drain eventually empties the worker even under backlog.
+    draining: bool,
+    /// Last load-beacon post (virtual/wall clock reading).
+    last_status_at: Duration,
     pub steps: u64,
+    /// Requests preempted by this worker (pressure shedding + drains).
+    pub preemptions: u64,
 }
 
 /// Spawn an AW worker thread; blocks until initialized (T_w) and returns
@@ -130,6 +149,8 @@ impl AwWorker {
         let refe = Refe::new(p.idx, p.ert, p.cfg.resilience.clone(), p.fabric.clone());
         let store_qp = p.fabric.qp(node, NodeId::Store, Plane::Data).map_err(|e| e.to_string())?;
         let gw_qp = p.fabric.qp(node, NodeId::Gateway, Plane::Control).map_err(|e| e.to_string())?;
+        let orch_qp =
+            p.fabric.qp(node, NodeId::Orchestrator, Plane::Control).map_err(|e| e.to_string())?;
         let streamer = CkptStreamer::new(p.cfg.resilience.checkpointing, 4096);
         let asm = BatchAssembler::new(&p.manifest.model);
         Ok(AwWorker {
@@ -146,6 +167,7 @@ impl AwWorker {
             streamer,
             store_qp,
             gw_qp,
+            orch_qp,
             pool: p.pool,
             reqs: BTreeMap::new(),
             prefill_q: VecDeque::new(),
@@ -154,7 +176,10 @@ impl AwWorker {
             asm,
             was_active: false,
             stop: p.stop,
+            draining: false,
+            last_status_at: Duration::ZERO,
             steps: 0,
+            preemptions: 0,
         })
     }
 
@@ -173,16 +198,23 @@ impl AwWorker {
                 self.handle_msg(env);
             }
 
-            // 2. Activity beacon on transitions (EW batching membership).
+            // 2. Activity beacon on transitions (EW batching membership)
+            //    and the periodic load beacon (pressure + queue depth).
             let is_active = !self.prefill_q.is_empty() || !self.active.is_empty();
             if is_active != self.was_active {
                 self.refe.broadcast_active(is_active);
                 self.was_active = is_active;
             }
+            self.post_status_if_due();
 
-            // 3. Work: prefill first (admission), then one decode step.
-            let result = if let Some(id) = self.prefill_q.pop_front() {
-                self.prefill(id)
+            // 2b. Pressure shedding (§9): over the high watermark, evict
+            //     the lowest-progress request before the arena hard-fills.
+            self.maybe_shed_pressure();
+
+            // 3. Work: prefill first (admission, headroom-gated), then
+            //    one decode step.
+            let result = if !self.prefill_q.is_empty() {
+                self.try_prefill_front()
             } else if !self.active.is_empty() {
                 self.decode_step()
             } else {
@@ -222,6 +254,162 @@ impl AwWorker {
         self.streamer.flush(&self.store_qp, self.handle.egress());
     }
 
+    // ---------------------------------------------------------------------
+    // Overload scheduling (DESIGN.md §9): load beacon, KV-pressure
+    // headroom, checkpoint-backed preemption, planned drains.
+    // ---------------------------------------------------------------------
+
+    /// Periodic load beacon: KV pressure + queue depth to the gateway
+    /// (routing/admission) and the orchestrator (parked re-admission).
+    fn post_status_if_due(&mut self) {
+        let now = self.clock.now();
+        if now.saturating_sub(self.last_status_at) < self.cfg.sched.status_interval {
+            return;
+        }
+        self.last_status_at = now;
+        let msg = ClusterMsg::Status(AwStatus {
+            aw: self.idx,
+            pages_in_use: self.pool.pages_in_use() as u32,
+            pages_budget: self.pool.budget_pages() as u32,
+            queue_depth: (self.prefill_q.len() + self.active.len()) as u32,
+            resident: self.reqs.len() as u32,
+        });
+        let _ = self.gw_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Admin);
+        let _ = self.orch_qp.post(msg, HDR_BYTES, TrafficClass::Admin);
+    }
+
+    /// High-watermark shedding: above the mark, preempt the lowest-
+    /// progress request so the arena recovers headroom before it
+    /// hard-fills. Re-admission happens at the orchestrator once some AW
+    /// drops below the *low* watermark (hysteresis).
+    fn maybe_shed_pressure(&mut self) {
+        if self.active.len() <= 1 {
+            return; // never starve the last active request
+        }
+        if self.pool.pressure() >= self.cfg.sched.high_watermark {
+            self.preempt_one_victim();
+        }
+    }
+
+    /// Make room for `needed` fresh pages, preempting lowest-progress
+    /// actives while more than `min_active` remain. Returns whether the
+    /// headroom now exists (always true for an unbounded arena).
+    fn ensure_headroom(&mut self, needed: usize, min_active: usize) -> bool {
+        loop {
+            let free = match self.pool.free_pages() {
+                None => return true,
+                Some(f) => f,
+            };
+            if free >= needed {
+                return true;
+            }
+            if self.active.len() <= min_active || !self.preempt_one_victim() {
+                return false;
+            }
+        }
+    }
+
+    /// Preempt the lowest-progress active request that has produced at
+    /// least one token here (fresh restores are never re-evicted before
+    /// decoding — the anti-livelock rule). Returns false if there was no
+    /// eligible candidate.
+    fn preempt_one_victim(&mut self) -> bool {
+        if !self.streamer.enabled {
+            return false; // no checkpoints: nothing durable to restore from
+        }
+        let victim = sched::pick_victim(
+            self.active
+                .iter()
+                .map(|id| (*id, &self.reqs[id]))
+                .filter(|(_, r)| r.progressed)
+                .map(|(id, r)| (id, r.generated)),
+        );
+        match victim {
+            Some(id) => {
+                self.preempt(id);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Checkpoint-backed preemption: the request's full committed state
+    /// (segments per token + commit) is already queued on the streamer —
+    /// force it onto the wire, evict the KV pages, and hand the commit
+    /// meta to the orchestrator, which re-admits the request later via
+    /// the same `AdoptRequest`/restore path that heals AW failures.
+    fn preempt(&mut self, id: u64) {
+        self.streamer.flush_now(&self.store_qp);
+        self.active.retain(|&r| r != id);
+        let req = self.reqs.remove(&id).expect("preempt of unknown request");
+        let meta = CommitMeta {
+            request: id,
+            committed_pos: req.kv.len() as u32,
+            last_token: req.next_input,
+            generated: req.generated,
+            max_new_tokens: req.meta.max_new_tokens,
+            prompt_len: req.prompt_len,
+        };
+        drop(req); // KV pages return to the arena here
+        self.preemptions += 1;
+        let msg = ClusterMsg::Preempted { aw: self.idx, meta };
+        let _ = self.orch_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Control);
+        // Informational copy for the gateway's event log.
+        let _ = self.gw_qp.post(msg, HDR_BYTES, TrafficClass::Control);
+    }
+
+    /// Planned drain/migration: evict everything. Committed requests go
+    /// via the checkpoint path; requests with no durable state yet are
+    /// bounced to the orchestrator for resubmission from the prompt.
+    fn preempt_all(&mut self) {
+        let mut uncommitted: Vec<u64> = Vec::new();
+        let actives: Vec<u64> = self.active.iter().copied().collect();
+        for id in actives {
+            if self.streamer.enabled && self.reqs[&id].kv.len() > 0 {
+                self.preempt(id);
+            } else {
+                self.active.retain(|&r| r != id);
+                self.reqs.remove(&id);
+                uncommitted.push(id);
+            }
+        }
+        let queued: Vec<u64> = self.prefill_q.drain(..).collect();
+        for id in queued {
+            self.reqs.remove(&id);
+            uncommitted.push(id);
+        }
+        if !uncommitted.is_empty() {
+            uncommitted.sort_unstable();
+            let msg = ClusterMsg::PreemptedUncommitted { aw: self.idx, requests: uncommitted };
+            let bytes = msg.wire_bytes();
+            let _ = self.orch_qp.post(msg, bytes, TrafficClass::Control);
+        }
+    }
+
+    /// Re-park a restore this worker cannot take (draining, or no
+    /// headroom even after shedding): the durable state is already in the
+    /// store, so this is just another preemption — posted to both the
+    /// orchestrator (authoritative) and the gateway (event log), keeping
+    /// every preemption counter consistent.
+    fn bounce_restore(&mut self, meta: CommitMeta) {
+        let msg = ClusterMsg::Preempted { aw: self.idx, meta };
+        let _ = self.orch_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Control);
+        let _ = self.gw_qp.post(msg, HDR_BYTES, TrafficClass::Control);
+    }
+
+    /// Reject a request that can never be served here, surfacing a
+    /// stream-level error through the gateway instead of dropping it
+    /// silently (the old admission bug).
+    fn reject(&mut self, id: u64, reason: String) {
+        self.reqs.remove(&id);
+        self.prefill_q.retain(|&r| r != id);
+        let _ = self.gw_qp.post(
+            ClusterMsg::Rejected { request: id, worker: self.idx, reason },
+            HDR_BYTES,
+            TrafficClass::Control,
+        );
+    }
+
     /// Training-style global snapshot (§7.4 baseline): serialize every
     /// resident request's entire KV cache to the store and *wait* for the
     /// link to drain before resuming decode.
@@ -252,7 +440,7 @@ impl AwWorker {
                 last_token: req.next_input,
                 generated: req.generated,
                 max_new_tokens: req.meta.max_new_tokens,
-                prompt_len: req.meta.prompt.len() as u32,
+                prompt_len: req.prompt_len,
             });
             let bytes = msg.wire_bytes();
             let _ = self.store_qp.post(msg, bytes, TrafficClass::Checkpoint);
@@ -268,10 +456,28 @@ impl AwWorker {
         match env.msg {
             ClusterMsg::NewRequest(meta) => {
                 let id = meta.id;
+                if self.draining {
+                    // Dispatched against a stale routing set after a
+                    // drain: bounce for resubmission elsewhere.
+                    let msg =
+                        ClusterMsg::PreemptedUncommitted { aw: self.idx, requests: vec![id] };
+                    let bytes = msg.wire_bytes();
+                    let _ = self.orch_qp.post(msg, bytes, TrafficClass::Control);
+                    return;
+                }
+                let prompt_len = meta.prompt.len() as u32;
                 let kv = RequestKv::new(&self.manifest.model, &self.pool);
                 self.reqs.insert(
                     id,
-                    Req { meta, kv, phase: ReqPhase::Prefill, next_input: 0, generated: 0 },
+                    Req {
+                        meta,
+                        kv,
+                        phase: ReqPhase::Prefill,
+                        next_input: 0,
+                        generated: 0,
+                        prompt_len,
+                        progressed: false,
+                    },
                 );
                 self.prefill_q.push_back(id);
             }
@@ -287,6 +493,10 @@ impl AwWorker {
                 );
             }
             ClusterMsg::Restore(data) => self.install_restored(data),
+            ClusterMsg::PreemptAll => {
+                self.draining = true;
+                self.preempt_all();
+            }
             ClusterMsg::Return(_) => {} // stale (failover already handled)
             _ => {}
         }
@@ -295,14 +505,32 @@ impl AwWorker {
     /// §6.2 request-level restoration: install the committed KV prefix and
     /// resume decoding as if the request had always been here.
     fn install_restored(&mut self, data: crate::proto::RestoreData) {
-        let m = &self.manifest.model;
+        let m = self.manifest.model.clone();
         let meta = data.meta;
         if self.reqs.contains_key(&meta.request) {
             return; // duplicate restore (idempotent)
         }
+        // A draining worker takes no new residents — re-park immediately.
+        if self.draining {
+            self.bounce_restore(meta);
+            return;
+        }
         // Pages are allocated for exactly the committed prefix — restore
         // cost scales with the sequence, not with `max_seq`.
-        let mut kv = RequestKv::new(m, &self.pool);
+        let mut kv = RequestKv::new(&m, &self.pool);
+        // Headroom for the prefix (+1 decode step), shedding if needed.
+        // If the arena cannot take it even after shedding, bounce the
+        // request back to the orchestrator — its durable state is already
+        // in the store, so this is just a re-park.
+        let needed = kv.pages_to_extend(meta.committed_pos as usize + 1);
+        if !self.ensure_headroom(needed, 0) {
+            self.bounce_restore(meta);
+            return;
+        }
+        // Reserve the prefix *and the next decode position* now, so the
+        // headroom just checked cannot be stolen by a later install — a
+        // fresh restore is guaranteed its first decode step.
+        kv.reserve(meta.committed_pos as usize + 1);
         for (pos, layer, seg) in &data.segments {
             kv.write_segment(*layer as usize, *pos as usize, seg.as_slice());
         }
@@ -320,6 +548,8 @@ impl AwWorker {
                 phase: ReqPhase::Decode,
                 next_input: meta.last_token,
                 generated: meta.generated,
+                prompt_len: meta.prompt_len,
+                progressed: false,
             },
         );
         self.active.push_back(id);
@@ -328,6 +558,39 @@ impl AwWorker {
     // ---------------------------------------------------------------------
     // Prefill
     // ---------------------------------------------------------------------
+
+    /// Admit the next queued prefill if the arena has headroom for its
+    /// whole prompt; otherwise keep decoding (the queue waits). The
+    /// gateway's fit check guarantees a lone request always fits, so an
+    /// un-preemptable shortfall with an empty arena means the request is
+    /// oversized for the budget — reject it.
+    fn try_prefill_front(&mut self) -> Result<(), StepError> {
+        let id = match self.prefill_q.front() {
+            Some(&id) => id,
+            None => return Ok(()),
+        };
+        let needed = match self.reqs.get(&id) {
+            Some(r) => r.kv.pages_to_extend(r.meta.prompt.len().max(1)),
+            None => {
+                self.prefill_q.pop_front(); // evicted while queued
+                return Ok(());
+            }
+        };
+        if self.ensure_headroom(needed, 0) {
+            self.prefill_q.pop_front();
+            return self.prefill(id);
+        }
+        if self.active.is_empty() && self.pool.pages_in_use() == 0 {
+            self.reject(id, "prompt KV footprint exceeds the arena page budget".into());
+            return Ok(());
+        }
+        if !self.active.is_empty() {
+            return self.decode_step();
+        }
+        // Nothing to preempt and the arena is draining elsewhere: retry.
+        self.clock.sleep(Duration::from_millis(2));
+        Ok(())
+    }
 
     fn prefill(&mut self, id: u64) -> Result<(), StepError> {
         let m = self.manifest.model.clone();
@@ -340,8 +603,13 @@ impl AwWorker {
         let bucket = match Buckets::fit(&self.manifest.buckets.prefill_t, p_len) {
             Some(b) => b,
             None => {
-                // Prompt exceeds the largest bucket: reject (admission bug).
-                self.reqs.remove(&id);
+                // Oversized prompts are rejected at the gateway; if one
+                // still reaches us (defense in depth), surface the error
+                // instead of dropping the request silently.
+                self.reject(
+                    id,
+                    format!("prompt length {p_len} exceeds the largest prefill bucket"),
+                );
                 return Ok(());
             }
         };
@@ -404,6 +672,7 @@ impl AwWorker {
             req.phase = ReqPhase::Decode;
             req.next_input = token;
             req.generated = 1;
+            req.progressed = true;
         }
         self.emit_token(id, 0, token);
         self.commit(id);
@@ -420,15 +689,69 @@ impl AwWorker {
     // Decode
     // ---------------------------------------------------------------------
 
+    /// Pre-step admission: the arena must absorb the batch's worst-case
+    /// growth (one position per request, a fresh page per layer at page
+    /// boundaries). Preempt lowest-progress requests until it fits; the
+    /// last active request always proceeds (admission guaranteed its fit).
+    fn reserve_decode_headroom(&mut self) {
+        loop {
+            if self.pool.free_pages().is_none() {
+                return; // unbounded arena
+            }
+            let batch: Vec<u64> = self
+                .active
+                .iter()
+                .copied()
+                .take(self.cfg.cluster.decode_batch)
+                .collect();
+            if batch.is_empty() {
+                return;
+            }
+            let needed: usize = batch
+                .iter()
+                .map(|id| {
+                    let kv = &self.reqs[id].kv;
+                    kv.pages_to_extend(kv.len() + 1)
+                })
+                .sum();
+            let free = self.pool.free_pages().unwrap_or(usize::MAX);
+            if free >= needed || self.active.len() <= 1 {
+                return;
+            }
+            if !self.preempt_one_victim() {
+                return;
+            }
+        }
+    }
+
     fn decode_step(&mut self) -> Result<(), StepError> {
+        self.reserve_decode_headroom();
         self.steps += 1;
         let m = self.manifest.model.clone();
-        let batch: Vec<u64> = self
-            .active
-            .iter()
-            .copied()
-            .take(self.cfg.cluster.decode_batch)
-            .collect();
+        // Fit-aware batch: take actives in order while their worst-case
+        // page growth fits the remaining headroom (the head of the queue
+        // always decodes — a lone request's admission-time fit guarantees
+        // it). Skipped requests simply wait for a later step.
+        let batch: Vec<u64> = {
+            let free = self.pool.free_pages();
+            let mut need = 0usize;
+            let mut batch = Vec::new();
+            for id in self.active.iter().copied() {
+                if batch.len() >= self.cfg.cluster.decode_batch {
+                    break;
+                }
+                let kv = &self.reqs[&id].kv;
+                let n = kv.pages_to_extend(kv.len() + 1);
+                if let Some(f) = free {
+                    if !batch.is_empty() && need + n > f {
+                        continue;
+                    }
+                }
+                need += n;
+                batch.push(id);
+            }
+            batch
+        };
         let b = batch.len();
         if b == 0 {
             return Ok(());
@@ -508,6 +831,7 @@ impl AwWorker {
                 let index = req.generated;
                 req.next_input = tokens[i];
                 req.generated += 1;
+                req.progressed = true;
                 (index, tokens[i])
             };
             self.emit_token(*id, index, token);
@@ -575,7 +899,7 @@ impl AwWorker {
             last_token: req.next_input,
             generated: req.generated,
             max_new_tokens: req.meta.max_new_tokens,
-            prompt_len: req.meta.prompt.len() as u32,
+            prompt_len: req.prompt_len,
         });
     }
 

@@ -11,9 +11,10 @@ use super::ert::Ert;
 use super::ew::{self, EwParams};
 use super::gateway::{self, GatewayParams, GatewayShared};
 use super::orchestrator::{self, OrchParams, OrchState, RecoveryMode};
+use super::sched::AdmissionLimits;
 use crate::checkpoint::store::CkptStore;
 use crate::config::Config;
-use crate::kvcache::KvPool;
+use crate::kvcache::{KvPool, PoolConfig};
 use crate::metrics::{EventLog, RunAnalysis};
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
@@ -21,7 +22,7 @@ use crate::runtime::Device;
 use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane};
 use crate::util::clock::{self, Clock};
 use crate::workload::Request;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -58,7 +59,14 @@ impl Spawner {
             .lock()
             .unwrap()
             .entry(idx)
-            .or_insert_with(|| KvPool::for_model(&self.manifest.model))
+            .or_insert_with(|| {
+                // The arena carries the configured hard page budget — the
+                // serving scheduler's model of per-AW GPU memory.
+                KvPool::bounded(
+                    PoolConfig::from_model(&self.manifest.model),
+                    self.cfg.sched.kv_budget_pages,
+                )
+            })
             .clone();
         let (thread, device) = aw::spawn(AwParams {
             idx,
@@ -121,6 +129,17 @@ impl Spawner {
     /// The KV page arena of an AW slot (experiments/introspection).
     pub fn kv_pool_of(&self, idx: u32) -> Option<Arc<KvPool>> {
         self.kv_pools.lock().unwrap().get(&idx).cloned()
+    }
+
+    /// Peak pages-in-use per AW slot arena — the budget-invariant probe
+    /// the overload tests assert against.
+    pub fn kv_peaks(&self) -> BTreeMap<u32, usize> {
+        self.kv_pools
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&i, p)| (i, p.peak_pages()))
+            .collect()
     }
 
     /// Post an admin message as the orchestrator (provisioning threads).
@@ -192,6 +211,10 @@ pub struct ClusterReport {
     pub aw_failures: u64,
     pub ew_failures: u64,
     pub restarts: u64,
+    /// Requests preempted under KV pressure or planned drains.
+    pub preemptions: u64,
+    /// Requests rejected at admission (oversized).
+    pub rejected: usize,
 }
 
 impl Cluster {
@@ -338,6 +361,20 @@ impl Cluster {
         // bring-up above is excluded from run timelines; T_w is reported
         // separately via InitStats).
         let events = Arc::new(EventLog::with_clock(clock.clone()));
+        let pool_cfg = PoolConfig::from_model(&manifest.model);
+        let limits = AdmissionLimits {
+            max_prompt: manifest
+                .buckets
+                .prefill_t
+                .iter()
+                .copied()
+                .max()
+                .unwrap_or(manifest.model.max_seq),
+            max_seq: manifest.model.max_seq,
+            layers: manifest.model.layers,
+            page_tokens: pool_cfg.page_tokens,
+            budget_pages: cfg.sched.kv_budget_pages,
+        };
         let gw_thread = gateway::spawn(GatewayParams {
             inbox: gw_inbox,
             schedule,
@@ -347,6 +384,9 @@ impl Cluster {
             shared: gw_shared.clone(),
             stop: stop.clone(),
             drain_timeout: opts.drain_timeout,
+            sched: cfg.sched.clone(),
+            limits,
+            max_per_aw: cfg.cluster.max_resident,
         });
 
         Cluster {
@@ -375,6 +415,28 @@ impl Cluster {
         self.spawner.kill(NodeId::Aw(idx));
     }
 
+    /// Gracefully drain an AW: stop routing new requests to it and
+    /// migrate every resident request off it through the checkpoint path
+    /// (scale-in / maintenance — the scenario DSL's `drain aw<N>`).
+    pub fn drain_aw(&self, idx: u32) {
+        self.post_admin_verb(ClusterMsg::DrainAw { aw: idx, target: None });
+    }
+
+    /// Drain `from`, steering every migrated request onto `to`
+    /// (the scenario DSL's `migrate aw<A> aw<B>`).
+    pub fn migrate_aw(&self, from: u32, to: u32) {
+        self.post_admin_verb(ClusterMsg::DrainAw { aw: from, target: Some(to) });
+    }
+
+    /// Post an admin-plane verb to the orchestrator (as the gateway node,
+    /// the cluster's external entry point).
+    fn post_admin_verb(&self, msg: ClusterMsg) {
+        if let Ok(qp) = self.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control) {
+            let bytes = msg.wire_bytes();
+            let _ = qp.post(msg, bytes, TrafficClass::Admin);
+        }
+    }
+
     pub fn kill_ew(&self, idx: u32) {
         self.spawner.kill(NodeId::Ew(idx));
     }
@@ -388,7 +450,9 @@ impl Cluster {
         for e in self.state.live_ews() {
             self.spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
         }
-        self.spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
+        // The gateway's routing set excludes draining AWs.
+        self.spawner
+            .post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
         self.state.clear_handled(NodeId::Aw(idx));
         Ok(())
     }
@@ -446,6 +510,8 @@ impl Cluster {
             aw_failures: self.state.aw_failures.load(Ordering::Relaxed),
             ew_failures: self.state.ew_failures.load(Ordering::Relaxed),
             restarts: self.state.restarts.load(Ordering::Relaxed),
+            preemptions: self.state.preemptions.load(Ordering::Relaxed),
+            rejected: self.gw.rejected_count(),
         }
     }
 }

@@ -1,14 +1,26 @@
-//! Cluster gateway: admits requests to AWs (round-robin over the live
-//! set), collects output tokens, and records the event log the experiment
-//! harnesses analyze. Under coarse-grained restarts it re-submits
-//! unfinished requests and de-duplicates re-emitted tokens, so the metrics
-//! see recomputation as a token-stream *gap*, not as extra throughput.
+//! Cluster gateway: admits requests to AWs through a pluggable,
+//! load-aware router (DESIGN.md §9), collects output tokens, and records
+//! the event log the experiment harnesses analyze.
+//!
+//! Admission is backpressured: arrivals wait in the gateway's queue until
+//! some AW has headroom (below the high pressure watermark and under the
+//! per-AW resident cap) instead of landing on a full worker — overload
+//! shows up as queueing delay, never as a drop. Oversized requests
+//! (prompt over the largest prefill bucket, or a worst-case KV footprint
+//! that can never fit an AW's page budget) are rejected at admission with
+//! a stream-level error surfaced through [`GatewayShared`].
+//!
+//! Under coarse-grained restarts it re-submits unfinished requests and
+//! de-duplicates re-emitted tokens, so the metrics see recomputation as a
+//! token-stream *gap*, not as extra throughput.
 
+use super::sched::{AdmissionLimits, AwLoad, LoadMap, Router, Watermarks};
+use crate::config::SchedConfig;
 use crate::metrics::{EventKind, EventLog};
 use crate::proto::{ClusterMsg, RequestMeta};
 use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
 use crate::workload::Request;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -26,6 +38,12 @@ pub struct GatewayParams {
     /// Give up this long after the last scheduled arrival even if some
     /// requests never finish (worker failures in baseline runs).
     pub drain_timeout: Duration,
+    /// Scheduler policy knobs (router, watermarks).
+    pub sched: SchedConfig,
+    /// Static admission fit checks (from the model manifest).
+    pub limits: AdmissionLimits,
+    /// Per-AW resident cap for admission (0 = uncapped).
+    pub max_per_aw: usize,
 }
 
 /// State shared with the harness (inspectable during/after the run).
@@ -41,6 +59,12 @@ struct SharedInner {
     generated: HashMap<u64, Vec<u32>>,
     finished: usize,
     submitted: usize,
+    /// Requests currently waiting in the admission queue.
+    queued: usize,
+    /// Preemption notices observed (cluster-wide).
+    preempted: u64,
+    /// request id -> stream-level error for rejected requests.
+    rejected: BTreeMap<u64, String>,
 }
 
 impl GatewayShared {
@@ -55,12 +79,41 @@ impl GatewayShared {
     pub fn submitted(&self) -> usize {
         self.inner.lock().unwrap().submitted
     }
+
+    /// Requests waiting in the admission queue right now (backpressure
+    /// gauge).
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().queued
+    }
+
+    /// Preemption notices observed so far.
+    pub fn preempted(&self) -> u64 {
+        self.inner.lock().unwrap().preempted
+    }
+
+    /// The stream-level error of a rejected request, if any.
+    pub fn error_of(&self, id: u64) -> Option<String> {
+        self.inner.lock().unwrap().rejected.get(&id).cloned()
+    }
+
+    /// All rejected requests with their errors.
+    pub fn rejections(&self) -> BTreeMap<u64, String> {
+        self.inner.lock().unwrap().rejected.clone()
+    }
+
+    pub fn rejected_count(&self) -> usize {
+        self.inner.lock().unwrap().rejected.len()
+    }
 }
 
 struct GwReq {
     meta: RequestMeta,
-    assigned: u32,
     finished: bool,
+    rejected: bool,
+    /// In the admission queue right now (dedup guard).
+    queued: bool,
+    /// The next dispatch is a resubmission (record Migrated, not Admitted).
+    resubmit: bool,
 }
 
 pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
@@ -69,16 +122,44 @@ pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
         .expect("spawn gateway")
 }
 
+struct Gw {
+    fabric: Arc<Fabric<ClusterMsg>>,
+    events: Arc<EventLog>,
+    shared: Arc<GatewayShared>,
+    qps: HashMap<u32, Qp<ClusterMsg>>,
+    orch_qp: Option<Qp<ClusterMsg>>,
+    store_qp: Option<Qp<ClusterMsg>>,
+    aws: Vec<u32>,
+    router: Router,
+    loads: LoadMap,
+    limits: AdmissionLimits,
+    /// Ordered: RestartNotice resubmission order must be deterministic.
+    reqs: BTreeMap<u64, GwReq>,
+    /// Admission queue: due-but-unplaced requests (backpressure).
+    admit_q: VecDeque<u64>,
+}
+
 fn gateway_main(p: GatewayParams) {
     let clock = p.fabric.clock().clone();
     let inbox = &p.inbox;
-    let mut qps: HashMap<u32, Qp<ClusterMsg>> = HashMap::new();
-    let mut orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
-    let store_qp = p.fabric.qp(NodeId::Gateway, NodeId::Store, Plane::Control).ok();
-    let mut aws = p.initial_aws.clone();
-    let mut rr = 0usize;
-    // Ordered: RestartNotice resubmission order must be deterministic.
-    let mut reqs: BTreeMap<u64, GwReq> = BTreeMap::new();
+    let mut gw = Gw {
+        fabric: p.fabric.clone(),
+        events: p.events.clone(),
+        shared: p.shared.clone(),
+        qps: HashMap::new(),
+        orch_qp: p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok(),
+        store_qp: p.fabric.qp(NodeId::Gateway, NodeId::Store, Plane::Control).ok(),
+        aws: p.initial_aws.clone(),
+        router: Router::new(
+            p.sched.policy,
+            Watermarks { high: p.sched.high_watermark, low: p.sched.low_watermark },
+            p.max_per_aw,
+        ),
+        loads: LoadMap::default(),
+        limits: p.limits,
+        reqs: BTreeMap::new(),
+        admit_q: VecDeque::new(),
+    };
     let start = clock.now();
     let mut next = 0usize;
     let last_arrival = p.schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
@@ -89,138 +170,34 @@ fn gateway_main(p: GatewayParams) {
         }
         let now = clock.now().saturating_sub(start).as_secs_f64();
 
-        // 1. Submit due arrivals.
+        // 1. Accept due arrivals: reject oversized ones outright, queue
+        //    the rest for admission.
         while next < p.schedule.len() && p.schedule[next].arrival_s <= now {
             let r = &p.schedule[next];
             next += 1;
-            if aws.is_empty() {
-                continue; // total outage: drop (counted as unsubmitted)
-            }
-            let aw = aws[rr % aws.len()];
-            rr += 1;
-            let meta = RequestMeta {
-                id: r.id,
-                prompt: r.prompt.clone(),
-                max_new_tokens: r.max_new_tokens as u32,
-            };
-            submit(&p.fabric, &mut qps, aw, &meta);
-            if let Some(q) = orch_qp.as_ref() {
-                let _ = q.post(
-                    ClusterMsg::Bound { request: r.id, aw },
-                    crate::proto::HDR_BYTES,
-                    TrafficClass::Admin,
-                );
-            }
-            p.events.record(EventKind::Submitted, r.id, 0, aw);
-            reqs.insert(r.id, GwReq { meta, assigned: aw, finished: false });
-            p.shared.inner.lock().unwrap().submitted += 1;
+            gw.accept(r);
         }
 
-        // 2. Collect tokens / notices.
+        // 2. Place queued requests while some AW has headroom.
+        gw.pump_admissions();
+
+        // 3. Collect tokens / notices.
         match inbox.recv(Duration::from_millis(1)) {
-            Ok(env) => match env.msg {
-                ClusterMsg::Token { request, index, token, worker } => {
-                    let mut inner = p.shared.inner.lock().unwrap();
-                    let gen = inner.generated.entry(request).or_default();
-                    if (index as usize) < gen.len() {
-                        // Re-emitted during replay/restart: recomputation,
-                        // not new output. Keep the original.
-                    } else {
-                        gen.resize(index as usize, u32::MAX);
-                        gen.push(token);
-                        drop(inner);
-                        p.events.record(EventKind::Token, request, index, worker);
-                    }
-                }
-                ClusterMsg::Finished { request, worker } => {
-                    if let Some(r) = reqs.get_mut(&request) {
-                        if !r.finished {
-                            r.finished = true;
-                            p.events.record(EventKind::Finished, request, 0, worker);
-                            p.shared.inner.lock().unwrap().finished += 1;
-                            // Let the checkpoint store reclaim the
-                            // request's segment log (bounded memory).
-                            if let Some(q) = store_qp.as_ref() {
-                                let _ = q.post(
-                                    ClusterMsg::ReqFinished { request },
-                                    crate::proto::HDR_BYTES,
-                                    TrafficClass::Admin,
-                                );
-                            }
-                        }
-                    }
-                }
-                ClusterMsg::AwSet { aws: new_aws } => {
-                    aws = new_aws;
-                    rr = 0;
-                }
-                ClusterMsg::Rebind { request, new_aw } => {
-                    if let Some(r) = reqs.get_mut(&request) {
-                        r.assigned = new_aw;
-                    }
-                }
-                ClusterMsg::Resubmit { requests } => {
-                    // Lost before any checkpoint: restart from the prompt.
-                    for id in requests {
-                        let Some(r) = reqs.get(&id) else { continue };
-                        if r.finished || aws.is_empty() {
-                            continue;
-                        }
-                        let aw = aws[rr % aws.len()];
-                        rr += 1;
-                        let meta = r.meta.clone();
-                        submit(&p.fabric, &mut qps, aw, &meta);
-                        if let Some(q) = orch_qp.as_ref() {
-                            let _ = q.post(
-                                ClusterMsg::Bound { request: id, aw },
-                                crate::proto::HDR_BYTES,
-                                TrafficClass::Admin,
-                            );
-                        }
-                        reqs.get_mut(&id).unwrap().assigned = aw;
-                        p.events.record(EventKind::Migrated, id, 0, aw);
-                    }
-                }
-                ClusterMsg::RestartNotice => {
-                    // Coarse restart: all in-flight work was lost.
-                    // Re-submit every unfinished request from scratch.
-                    let ids: Vec<u64> =
-                        reqs.iter().filter(|(_, r)| !r.finished).map(|(&id, _)| id).collect();
-                    for id in ids {
-                        if aws.is_empty() {
-                            break;
-                        }
-                        let aw = aws[rr % aws.len()];
-                        rr += 1;
-                        let meta = reqs[&id].meta.clone();
-                        submit(&p.fabric, &mut qps, aw, &meta);
-                        if let Some(q) = orch_qp.as_ref() {
-                            let _ = q.post(
-                                ClusterMsg::Bound { request: id, aw },
-                                crate::proto::HDR_BYTES,
-                                TrafficClass::Admin,
-                            );
-                        }
-                        reqs.get_mut(&id).unwrap().assigned = aw;
-                        p.events.record(EventKind::Migrated, id, 0, aw);
-                    }
-                }
-                _ => {}
-            },
+            Ok(env) => gw.handle(env.msg),
             Err(crate::transport::QpError::Timeout) => {}
             Err(_) => break,
         }
         // Keep the orchestrator QP fresh if it was unavailable at start.
-        if orch_qp.is_none() {
-            orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
+        if gw.orch_qp.is_none() {
+            gw.orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
         }
 
-        // 3. Exit conditions: everything finished, or drain timeout.
-        let all_submitted = next >= p.schedule.len();
-        if all_submitted {
-            let unfinished = reqs.values().filter(|r| !r.finished).count();
-            let pending_subs = p.schedule.len() - reqs.len();
-            if unfinished == 0 && pending_subs == 0 {
+        // 4. Exit conditions: everything finished (rejected requests are
+        //    terminal), or drain timeout.
+        if next >= p.schedule.len() {
+            let unfinished =
+                gw.reqs.values().filter(|r| !r.finished && !r.rejected).count();
+            if unfinished == 0 {
                 break;
             }
             if now > last_arrival + p.drain_timeout.as_secs_f64() {
@@ -231,15 +208,201 @@ fn gateway_main(p: GatewayParams) {
     p.shared.done.store(true, Ordering::Release);
 }
 
-fn submit(
-    fabric: &Arc<Fabric<ClusterMsg>>,
-    qps: &mut HashMap<u32, Qp<ClusterMsg>>,
-    aw: u32,
-    meta: &RequestMeta,
-) {
-    let qp = qps.entry(aw).or_insert_with(|| {
-        fabric.qp(NodeId::Gateway, NodeId::Aw(aw), Plane::Control).expect("gw qp")
-    });
-    let bytes = meta.wire_bytes();
-    let _ = qp.post(ClusterMsg::NewRequest(meta.clone()), bytes, TrafficClass::Admin);
+impl Gw {
+    /// Accept one arrival: reject it if it can never be served, else
+    /// queue it for admission.
+    fn accept(&mut self, r: &Request) {
+        let meta = RequestMeta {
+            id: r.id,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens as u32,
+        };
+        self.events.record(EventKind::Submitted, r.id, 0, 0);
+        self.shared.inner.lock().unwrap().submitted += 1;
+        let rejected = self.limits.reject_reason(r.prompt.len(), r.max_new_tokens);
+        self.reqs.insert(
+            r.id,
+            GwReq {
+                meta,
+                finished: false,
+                rejected: rejected.is_some(),
+                queued: false,
+                resubmit: false,
+            },
+        );
+        match rejected {
+            Some(reason) => self.mark_rejected(r.id, 0, reason),
+            None => self.enqueue(r.id, false),
+        }
+    }
+
+    fn mark_rejected(&mut self, id: u64, worker: u32, reason: String) {
+        let was_queued = match self.reqs.get_mut(&id) {
+            Some(r) => {
+                r.rejected = true;
+                let q = r.queued;
+                r.queued = false;
+                q
+            }
+            None => false,
+        };
+        if was_queued {
+            self.admit_q.retain(|&q| q != id);
+        }
+        self.events.record(EventKind::Rejected, id, 0, worker);
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.rejected.entry(id).or_insert(reason);
+        inner.queued = self.admit_q.len();
+    }
+
+    /// Queue a request for (re)admission; `resubmit` marks dispatches
+    /// that restart from the prompt (failure recovery, drains).
+    fn enqueue(&mut self, id: u64, resubmit: bool) {
+        let Some(r) = self.reqs.get_mut(&id) else { return };
+        if r.finished || r.rejected || r.queued {
+            return;
+        }
+        r.queued = true;
+        r.resubmit = r.resubmit || resubmit;
+        self.admit_q.push_back(id);
+        self.shared.inner.lock().unwrap().queued = self.admit_q.len();
+    }
+
+    /// Place queued requests until the router backpressures.
+    fn pump_admissions(&mut self) {
+        while let Some(&id) = self.admit_q.front() {
+            let stale = match self.reqs.get(&id) {
+                Some(r) => r.finished || r.rejected,
+                None => true,
+            };
+            if stale {
+                self.admit_q.pop_front();
+                continue;
+            }
+            let Some(aw) = self.router.pick(&self.aws, &self.loads) else {
+                break; // every AW saturated: wait for the next beacon
+            };
+            self.admit_q.pop_front();
+            self.dispatch(id, aw);
+        }
+        self.shared.inner.lock().unwrap().queued = self.admit_q.len();
+    }
+
+    /// Send a request to an AW and account for it.
+    fn dispatch(&mut self, id: u64, aw: u32) {
+        let (meta, resubmit) = {
+            let r = self.reqs.get_mut(&id).expect("dispatch of unknown request");
+            r.queued = false;
+            let resubmit = r.resubmit;
+            r.resubmit = false;
+            (r.meta.clone(), resubmit)
+        };
+        let fabric = self.fabric.clone();
+        let qp = self.qps.entry(aw).or_insert_with(|| {
+            fabric.qp(NodeId::Gateway, NodeId::Aw(aw), Plane::Control).expect("gw qp")
+        });
+        let bytes = meta.wire_bytes();
+        // Optimistic page estimate (the prompt's prefill footprint) so a
+        // burst within one beacon interval spreads instead of dogpiling
+        // the least-pressure AW; the next beacon corrects the estimate.
+        let est_pages = crate::kvcache::pages_for_tokens(
+            meta.prompt.len(),
+            self.limits.page_tokens,
+            self.limits.layers,
+        ) as u32;
+        let _ = qp.post(ClusterMsg::NewRequest(meta), bytes, TrafficClass::Admin);
+        if let Some(q) = self.orch_qp.as_ref() {
+            let _ = q.post(
+                ClusterMsg::Bound { request: id, aw },
+                crate::proto::HDR_BYTES,
+                TrafficClass::Admin,
+            );
+        }
+        let kind = if resubmit { EventKind::Migrated } else { EventKind::Admitted };
+        self.events.record(kind, id, 0, aw);
+        self.loads.note_submit(aw);
+        self.loads.note_pages(aw, est_pages);
+    }
+
+    fn handle(&mut self, msg: ClusterMsg) {
+        match msg {
+            ClusterMsg::Token { request, index, token, worker } => {
+                let mut inner = self.shared.inner.lock().unwrap();
+                let gen = inner.generated.entry(request).or_default();
+                if (index as usize) < gen.len() {
+                    // Re-emitted during replay/restart: recomputation,
+                    // not new output. Keep the original.
+                } else {
+                    gen.resize(index as usize, u32::MAX);
+                    gen.push(token);
+                    drop(inner);
+                    self.events.record(EventKind::Token, request, index, worker);
+                }
+            }
+            ClusterMsg::Finished { request, worker } => {
+                let mut newly = false;
+                if let Some(r) = self.reqs.get_mut(&request) {
+                    if !r.finished {
+                        r.finished = true;
+                        newly = true;
+                    }
+                }
+                if newly {
+                    self.events.record(EventKind::Finished, request, 0, worker);
+                    self.shared.inner.lock().unwrap().finished += 1;
+                    self.loads.note_departure(worker);
+                    // Let the checkpoint store reclaim the request's
+                    // segment log (bounded memory).
+                    if let Some(q) = self.store_qp.as_ref() {
+                        let _ = q.post(
+                            ClusterMsg::ReqFinished { request },
+                            crate::proto::HDR_BYTES,
+                            TrafficClass::Admin,
+                        );
+                    }
+                }
+            }
+            ClusterMsg::Status(st) => {
+                self.loads.update(st.aw, AwLoad::from_status(&st));
+            }
+            ClusterMsg::Rejected { request, worker, reason } => {
+                // AW-side defense in depth: terminal, surfaced as an error.
+                self.mark_rejected(request, worker, reason);
+            }
+            ClusterMsg::Preempted { aw, meta } => {
+                // Informational: the orchestrator owns re-admission.
+                self.events.record(EventKind::Preempted, meta.request, 0, aw);
+                self.shared.inner.lock().unwrap().preempted += 1;
+                self.loads.note_departure(aw);
+            }
+            ClusterMsg::AwSet { aws: new_aws } => {
+                self.aws = new_aws;
+            }
+            ClusterMsg::Rebind { request, new_aw } => {
+                // A restored request resumed elsewhere: a migration.
+                self.events.record(EventKind::Migrated, request, 0, new_aw);
+            }
+            ClusterMsg::Resubmit { requests } => {
+                // Lost before any checkpoint: restart from the prompt
+                // (through the admission queue — backpressure applies).
+                for id in requests {
+                    self.enqueue(id, true);
+                }
+            }
+            ClusterMsg::RestartNotice => {
+                // Coarse restart: all in-flight work was lost.
+                // Re-submit every unfinished request from scratch.
+                let ids: Vec<u64> = self
+                    .reqs
+                    .iter()
+                    .filter(|(_, r)| !r.finished && !r.rejected)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in ids {
+                    self.enqueue(id, true);
+                }
+            }
+            _ => {}
+        }
+    }
 }

@@ -10,6 +10,9 @@
 //! - [`orchestrator`]: liveness monitoring, ERT updates, background
 //!   provisioning, coarse-restart mode for the MegaScale baseline.
 //! - [`gateway`]: request admission, token collection, metrics.
+//! - [`sched`]: overload-aware scheduling policy — KV-pressure
+//!   bookkeeping, the pluggable admission router, and preemption victim
+//!   selection (DESIGN.md §9).
 //! - [`cluster`]: builds and wires the whole thing; fault injection API.
 
 pub mod aw;
@@ -20,6 +23,7 @@ pub mod gateway;
 pub mod orchestrator;
 pub mod refe;
 pub mod router;
+pub mod sched;
 
 pub use cluster::{Cluster, ClusterReport};
 pub use ert::Ert;

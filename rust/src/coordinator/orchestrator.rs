@@ -9,12 +9,13 @@
 
 use super::cluster::Spawner;
 use super::ert::Ert;
+use super::sched;
 use crate::proto::{ClusterMsg, CommitMeta, ErtTable, HDR_BYTES};
 use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane, Qp};
 use crate::util::clock::{self, Clock};
 use crate::util::http::{Handler, HttpServer};
 use crate::util::json::{arr, num, obj, Json};
-use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -35,10 +36,15 @@ pub struct OrchState {
     /// Shared (not orchestrator-local) so a respawn on the original slot
     /// can re-arm detection for that node id.
     handled: Mutex<HashSet<NodeId>>,
+    /// AWs being drained (scale-in / migration): still alive, but the
+    /// gateway must not route new requests to them.
+    draining: Mutex<BTreeSet<u32>>,
     /// Total failures handled (AW, EW).
     pub aw_failures: AtomicU64,
     pub ew_failures: AtomicU64,
     pub restarts: AtomicU64,
+    /// Requests preempted (pressure shedding + drains), cluster-wide.
+    pub preemptions: AtomicU64,
     /// Stall bookkeeping for coarse restarts (Fig. 9a): set while a full
     /// restart is in progress.
     pub restarting: AtomicBool,
@@ -89,6 +95,34 @@ impl OrchState {
     /// The orchestrator's current ERT (None before initialization).
     pub fn current_ert(&self) -> Option<Ert> {
         self.inner.lock().unwrap().ert.clone()
+    }
+
+    /// AWs currently draining (alive but closed to new work).
+    pub fn draining_set(&self) -> BTreeSet<u32> {
+        self.draining.lock().unwrap().clone()
+    }
+
+    pub(crate) fn set_draining(&self, aw: u32) {
+        self.draining.lock().unwrap().insert(aw);
+    }
+
+    pub(crate) fn clear_draining(&self, aw: u32) {
+        self.draining.lock().unwrap().remove(&aw);
+    }
+
+    /// The AW set the *gateway* may route to: live minus draining. (EWs
+    /// keep the full live set — a draining AW still decodes in-flight
+    /// work until its eviction completes.)
+    pub fn gateway_aws(&self) -> Vec<u32> {
+        let draining = self.draining.lock().unwrap();
+        self.inner
+            .lock()
+            .unwrap()
+            .aws
+            .iter()
+            .filter(|(i, &a)| a && !draining.contains(i))
+            .map(|(&i, _)| i)
+            .collect()
     }
 
     fn is_handled(&self, node: NodeId) -> bool {
@@ -234,6 +268,9 @@ fn orch_main(p: OrchParams) {
         pending_adoptions: VecDeque::new(),
         adopt_rr: 0,
         bound: BTreeMap::new(),
+        parked: VecDeque::new(),
+        loads: sched::LoadMap::default(),
+        drain_targets: BTreeMap::new(),
         next_ew_idx: 0,
         next_aw_idx: 0,
         last_restart: None,
@@ -274,6 +311,14 @@ struct Orch {
     /// died without any committed checkpoint, e.g. mid-prefill). Ordered:
     /// the Resubmit order it induces must be deterministic.
     bound: BTreeMap<u64, u32>,
+    /// Preempted requests waiting for re-admission: (commit meta, forced
+    /// target for planned migrations). FIFO: oldest evictions return
+    /// first.
+    parked: VecDeque<(CommitMeta, Option<u32>)>,
+    /// Per-AW load from the beacons (re-admission targeting).
+    loads: sched::LoadMap,
+    /// Draining AW -> forced migration target (None = least pressure).
+    drain_targets: BTreeMap<u32, Option<u32>>,
     next_ew_idx: u32,
     next_aw_idx: u32,
     /// Stale failure reports within this window after a full restart are
@@ -343,8 +388,102 @@ impl Orch {
             ClusterMsg::Bound { request, aw } => {
                 self.bound.insert(request, aw);
             }
+            // ---- overload scheduling (DESIGN.md §9) ----
+            ClusterMsg::Status(st) => {
+                self.loads.update(st.aw, sched::AwLoad::from_status(&st));
+                self.try_readmit();
+            }
+            ClusterMsg::Preempted { aw, meta } => {
+                self.state.preemptions.fetch_add(1, Ordering::Relaxed);
+                let target = self.drain_targets.get(&aw).copied().flatten();
+                self.loads.note_departure(aw);
+                self.parked.push_back((meta, target));
+                self.try_readmit();
+            }
+            ClusterMsg::PreemptedUncommitted { aw, requests } => {
+                // No durable state: restart from the prompt. The gateway
+                // already routes around the draining AW (AwSet update).
+                self.loads.note_departure(aw);
+                self.post(NodeId::Gateway, ClusterMsg::Resubmit { requests });
+            }
+            ClusterMsg::DrainAw { aw, target } => self.drain_aw(aw, target),
             _ => {}
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Overload scheduling: planned drains + parked re-admission (§9)
+    // -----------------------------------------------------------------
+
+    /// Drain an AW: close it to new work (gateway AwSet update), then ask
+    /// it to evict every resident request. Committed requests come back
+    /// as `Preempted` and re-admit onto other AWs via the checkpoint
+    /// path; uncommitted ones are resubmitted from the prompt.
+    fn drain_aw(&mut self, aw: u32, target: Option<u32>) {
+        if !self.state.live_aws().contains(&aw) {
+            return;
+        }
+        self.state.set_draining(aw);
+        self.drain_targets.insert(aw, target);
+        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
+        self.post(NodeId::Aw(aw), ClusterMsg::PreemptAll);
+    }
+
+    /// Re-admit parked (preempted) requests: each goes to its forced
+    /// migration target if one is set, else to the least-pressure live
+    /// AW below the low watermark (hysteresis) whose arena can hold the
+    /// restored prefix outright — a request can never be dispatched into
+    /// an arena it cannot fit. Head-of-line order is FIFO; if no AW is
+    /// eligible the queue waits for the next load beacon.
+    fn try_readmit(&mut self) {
+        while let Some((meta, target)) = self.parked.front().cloned() {
+            let footprint = self.restore_footprint(&meta);
+            let Some(aw) = self.readmit_target(footprint, target) else { break };
+            self.parked.pop_front();
+            let request = meta.request;
+            self.bound.insert(request, aw);
+            // Optimistic accounting until the target's next beacon.
+            self.loads.note_submit(aw);
+            self.loads.note_pages(aw, footprint);
+            self.post(NodeId::Aw(aw), ClusterMsg::AdoptRequest { meta });
+            self.post(NodeId::Gateway, ClusterMsg::Rebind { request, new_aw: aw });
+        }
+    }
+
+    /// Pages the restored prefix (+1 decode step) will pin on the target.
+    fn restore_footprint(&self, meta: &CommitMeta) -> u32 {
+        let m = &self.spawner.manifest.model;
+        let pt = crate::kvcache::PoolConfig::from_model(m).page_tokens;
+        crate::kvcache::pages_for_tokens(meta.committed_pos as usize + 1, pt, m.layers) as u32
+    }
+
+    fn readmit_target(&self, footprint: u32, forced: Option<u32>) -> Option<u32> {
+        let live = self.state.live_aws();
+        let draining = self.state.draining_set();
+        if let Some(t) = forced {
+            if live.contains(&t) && !draining.contains(&t) {
+                return Some(t);
+            }
+            // Forced target gone: fall through to the general policy.
+        }
+        let marks = &self.spawner.cfg.sched;
+        live.iter()
+            .copied()
+            .filter(|a| !draining.contains(a))
+            .map(|a| (a, self.loads.get(a)))
+            .filter(|(_, l)| {
+                l.pages_budget == 0
+                    || (l.pressure() < marks.low_watermark
+                        && l.pages_in_use + footprint <= l.pages_budget)
+            })
+            .min_by(|a, b| {
+                a.1.pressure()
+                    .partial_cmp(&b.1.pressure())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.queue_depth.cmp(&b.1.queue_depth))
+                    .then(a.0.cmp(&b.0))
+            })
+            .map(|(a, _)| a)
     }
 
     fn probe_sweep(&mut self) {
@@ -483,17 +622,22 @@ impl Orch {
 
     fn recover_aw(&mut self, aw: u32) {
         self.state.aw_failures.fetch_add(1, Ordering::Relaxed);
+        // A dead AW is no longer draining and reports no load.
+        self.state.clear_draining(aw);
+        self.drain_targets.remove(&aw);
+        self.loads.remove(aw);
         let live_aws: Vec<u32> = {
             let mut inner = self.state.inner.lock().unwrap();
             inner.aws.insert(aw, false);
             inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
         };
-        // Tell EWs + gateway about the membership change.
+        // Tell EWs + gateway about the membership change (the gateway's
+        // set additionally excludes draining AWs).
         let ews = self.state.live_ews();
         for e in ews {
             self.post(NodeId::Ew(e), ClusterMsg::AwSet { aws: live_aws.clone() });
         }
-        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: live_aws.clone() });
+        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
         // Ask the store which requests were on the failed AW; the reply
         // (ActiveReqs) drives adoption.
         self.post(NodeId::Store, ClusterMsg::QueryActive { aw });
@@ -521,7 +665,10 @@ impl Orch {
                 for e in state.live_ews() {
                     spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
                 }
-                spawner.post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: live });
+                spawner.post_admin(
+                    NodeId::Gateway,
+                    ClusterMsg::AwSet { aws: state.gateway_aws() },
+                );
             })
             .ok();
         }
@@ -529,7 +676,9 @@ impl Orch {
 
     fn drain_adoptions(&mut self) {
         while let Some(meta) = self.pending_adoptions.pop_front() {
-            let live = self.state.live_aws();
+            // Failure-driven adoption is immediate (no watermark gating),
+            // but never targets a draining AW.
+            let live = self.state.gateway_aws();
             if live.is_empty() {
                 self.pending_adoptions.push_front(meta);
                 return;

@@ -1,0 +1,347 @@
+//! Overload-aware serving scheduler: policy + pressure bookkeeping
+//! (DESIGN.md §9).
+//!
+//! The same machinery that masks failures — checkpoint, evict, adopt,
+//! restore — doubles as a general request-mobility datapath for
+//! steady-state load management. This module holds the *policy* side:
+//!
+//! - [`AwLoad`] / [`LoadMap`]: per-AW pressure + queue-depth bookkeeping,
+//!   fed by the AWs' [`Status`](crate::proto::ClusterMsg::Status) beacons
+//!   and optimistically bumped by the gateway between beacons;
+//! - [`Router`]: the pluggable admission router (least-pressure /
+//!   join-shortest-queue / round-robin fallback) with watermark-based
+//!   backpressure — `pick` returns `None` when every candidate is
+//!   saturated, and the request *waits at the gateway* instead of landing
+//!   on a full AW;
+//! - [`AdmissionLimits`]: the static fit checks that reject oversized
+//!   prompts at admission instead of dropping them silently on the AW;
+//! - [`pick_victim`]: the preemption policy (lowest progress first).
+//!
+//! The *mechanism* side lives with its owners: the AW preempts (flush
+//! segments → evict pages → notify), the orchestrator parks and re-admits
+//! via the existing `AdoptRequest`/restore path, and the gateway queues.
+//! Everything here is deterministic: candidate sets iterate in ascending
+//! AW order and every tie breaks toward the lowest id, so scenario
+//! replays are byte-identical.
+
+use crate::config::RouterPolicy;
+use crate::proto::AwStatus;
+use std::collections::BTreeMap;
+
+/// One AW's load as last reported by its beacon, plus the gateway's
+/// optimistic in-flight accounting between beacons.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AwLoad {
+    pub pages_in_use: u32,
+    /// Arena page budget (0 = unbounded).
+    pub pages_budget: u32,
+    /// Prefill queue + active decode set.
+    pub queue_depth: u32,
+    /// Resident requests (any phase).
+    pub resident: u32,
+}
+
+impl AwLoad {
+    pub fn from_status(st: &AwStatus) -> AwLoad {
+        AwLoad {
+            pages_in_use: st.pages_in_use,
+            pages_budget: st.pages_budget,
+            queue_depth: st.queue_depth,
+            resident: st.resident,
+        }
+    }
+
+    /// KV memory pressure (0.0 when the arena is unbounded).
+    pub fn pressure(&self) -> f64 {
+        crate::proto::kv_pressure(self.pages_in_use, self.pages_budget)
+    }
+}
+
+/// Per-AW load map. Ordered so iteration — and therefore every placement
+/// decision derived from it — is deterministic.
+#[derive(Debug, Default)]
+pub struct LoadMap {
+    loads: BTreeMap<u32, AwLoad>,
+}
+
+impl LoadMap {
+    pub fn update(&mut self, aw: u32, load: AwLoad) {
+        self.loads.insert(aw, load);
+    }
+
+    /// The last known load of an AW (zero/unknown if never reported —
+    /// a fresh AW is assumed admissible until its first beacon).
+    pub fn get(&self, aw: u32) -> AwLoad {
+        self.loads.get(&aw).copied().unwrap_or_default()
+    }
+
+    pub fn remove(&mut self, aw: u32) {
+        self.loads.remove(&aw);
+    }
+
+    /// Optimistic bump between beacons: one request was just routed to
+    /// `aw`. The next beacon overwrites the estimate.
+    pub fn note_submit(&mut self, aw: u32) {
+        let e = self.loads.entry(aw).or_default();
+        e.queue_depth += 1;
+        e.resident += 1;
+    }
+
+    /// Optimistic decrement: a request on `aw` finished or was evicted.
+    pub fn note_departure(&mut self, aw: u32) {
+        if let Some(e) = self.loads.get_mut(&aw) {
+            e.queue_depth = e.queue_depth.saturating_sub(1);
+            e.resident = e.resident.saturating_sub(1);
+        }
+    }
+
+    /// Optimistic page bump: a restore with this footprint was just
+    /// dispatched to `aw` (anti-thrash accounting between beacons).
+    pub fn note_pages(&mut self, aw: u32, pages: u32) {
+        self.loads.entry(aw).or_default().pages_in_use += pages;
+    }
+}
+
+/// Admission/preemption/re-admission hysteresis band: new work is gated
+/// at `high`, preemption triggers at `high`, parked requests re-admit
+/// below `low`.
+#[derive(Debug, Clone, Copy)]
+pub struct Watermarks {
+    pub high: f64,
+    pub low: f64,
+}
+
+/// The gateway's pluggable admission router.
+pub struct Router {
+    policy: RouterPolicy,
+    marks: Watermarks,
+    /// Per-AW resident cap (0 = uncapped) — the JSQ admission bound.
+    max_per_aw: usize,
+    rr: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, marks: Watermarks, max_per_aw: usize) -> Router {
+        Router { policy, marks, max_per_aw, rr: 0 }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick a target among `live` (ascending AW ids). Returns `None`
+    /// when every candidate is saturated — backpressure: the request
+    /// waits at the gateway and the caller retries after the next beacon.
+    pub fn pick(&mut self, live: &[u32], loads: &LoadMap) -> Option<u32> {
+        let cands: Vec<(u32, AwLoad)> = live
+            .iter()
+            .map(|&a| (a, loads.get(a)))
+            .filter(|(_, l)| self.admissible(l))
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        let aw = match self.policy {
+            RouterPolicy::RoundRobin => cands[self.rr % cands.len()].0,
+            RouterPolicy::LeastPressure => best_of(&cands, |a, b| {
+                a.1.pressure()
+                    .partial_cmp(&b.1.pressure())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.queue_depth.cmp(&b.1.queue_depth))
+                    .then(a.0.cmp(&b.0))
+            }),
+            RouterPolicy::JoinShortestQueue => best_of(&cands, |a, b| {
+                a.1.queue_depth.cmp(&b.1.queue_depth).then(a.0.cmp(&b.0))
+            }),
+        };
+        self.rr += 1;
+        Some(aw)
+    }
+
+    fn admissible(&self, l: &AwLoad) -> bool {
+        if self.max_per_aw > 0 && l.resident as usize >= self.max_per_aw {
+            return false;
+        }
+        l.pages_budget == 0 || l.pressure() < self.marks.high
+    }
+}
+
+fn best_of<F>(cands: &[(u32, AwLoad)], mut cmp: F) -> u32
+where
+    F: FnMut(&(u32, AwLoad), &(u32, AwLoad)) -> std::cmp::Ordering,
+{
+    cands
+        .iter()
+        .min_by(|a, b| cmp(a, b))
+        .map(|(a, _)| *a)
+        .expect("best_of over a non-empty candidate set")
+}
+
+/// Static admission limits the gateway enforces at arrival time (derived
+/// from the model manifest + sched config when the cluster is built).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionLimits {
+    /// Largest prefill bucket: longer prompts cannot be executed.
+    pub max_prompt: usize,
+    /// KV capacity in token positions.
+    pub max_seq: usize,
+    /// Model layers (for worst-case page math).
+    pub layers: usize,
+    /// KV pool page size in tokens.
+    pub page_tokens: usize,
+    /// Per-AW page budget (0 = unbounded).
+    pub budget_pages: usize,
+}
+
+impl AdmissionLimits {
+    /// Why this request can never be served, if oversized; `None` when it
+    /// is admissible.
+    pub fn reject_reason(&self, prompt_len: usize, max_new: usize) -> Option<String> {
+        if prompt_len == 0 {
+            return Some("empty prompt".into());
+        }
+        if prompt_len > self.max_prompt {
+            return Some(format!(
+                "prompt length {prompt_len} exceeds the largest prefill bucket ({})",
+                self.max_prompt
+            ));
+        }
+        if prompt_len + max_new > self.max_seq {
+            return Some(format!(
+                "prompt ({prompt_len}) + max_new_tokens ({max_new}) exceeds max_seq ({})",
+                self.max_seq
+            ));
+        }
+        if self.budget_pages > 0 {
+            let pages =
+                crate::kvcache::pages_for_tokens(prompt_len + max_new, self.page_tokens, self.layers);
+            if pages > self.budget_pages {
+                return Some(format!(
+                    "worst-case KV footprint ({pages} pages) exceeds the per-AW budget ({})",
+                    self.budget_pages
+                ));
+            }
+        }
+        None
+    }
+}
+
+/// Preemption victim selection: the lowest-progress request — fewest
+/// generated tokens, ties toward the lowest id (deterministic).
+pub fn pick_victim<I: IntoIterator<Item = (u64, u32)>>(candidates: I) -> Option<u64> {
+    candidates
+        .into_iter()
+        .min_by_key(|&(id, generated)| (generated, id))
+        .map(|(id, _)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn marks() -> Watermarks {
+        Watermarks { high: 0.85, low: 0.60 }
+    }
+
+    fn load(pages: u32, budget: u32, depth: u32) -> AwLoad {
+        AwLoad { pages_in_use: pages, pages_budget: budget, queue_depth: depth, resident: depth }
+    }
+
+    #[test]
+    fn least_pressure_prefers_the_emptier_aw() {
+        let mut loads = LoadMap::default();
+        loads.update(0, load(8, 10, 3));
+        loads.update(1, load(2, 10, 5));
+        let mut r = Router::new(RouterPolicy::LeastPressure, marks(), 0);
+        assert_eq!(r.pick(&[0, 1], &loads), Some(1));
+    }
+
+    #[test]
+    fn least_pressure_ties_break_on_queue_then_id() {
+        let mut loads = LoadMap::default();
+        loads.update(0, load(0, 0, 4));
+        loads.update(1, load(0, 0, 1));
+        let mut r = Router::new(RouterPolicy::LeastPressure, marks(), 0);
+        // Unbounded arenas: pressure ties at 0.0, queue depth decides.
+        assert_eq!(r.pick(&[0, 1], &loads), Some(1));
+        loads.update(1, load(0, 0, 4));
+        assert_eq!(r.pick(&[0, 1], &loads), Some(0), "full tie goes to the lowest id");
+    }
+
+    #[test]
+    fn jsq_picks_shortest_queue() {
+        let mut loads = LoadMap::default();
+        loads.update(0, load(9, 10, 1));
+        loads.update(1, load(1, 10, 6));
+        let mut r = Router::new(RouterPolicy::JoinShortestQueue, marks(), 0);
+        assert_eq!(r.pick(&[0, 1], &loads), Some(0));
+    }
+
+    #[test]
+    fn round_robin_rotates_over_admissible() {
+        let loads = LoadMap::default();
+        let mut r = Router::new(RouterPolicy::RoundRobin, marks(), 0);
+        assert_eq!(r.pick(&[3, 5], &loads), Some(3));
+        assert_eq!(r.pick(&[3, 5], &loads), Some(5));
+        assert_eq!(r.pick(&[3, 5], &loads), Some(3));
+    }
+
+    #[test]
+    fn high_watermark_gates_admission_and_backpressures() {
+        let mut loads = LoadMap::default();
+        loads.update(0, load(9, 10, 1)); // 0.9 >= 0.85: saturated
+        loads.update(1, load(8, 10, 1)); // 0.8 < 0.85: admissible
+        let mut r = Router::new(RouterPolicy::LeastPressure, marks(), 0);
+        assert_eq!(r.pick(&[0, 1], &loads), Some(1));
+        loads.update(1, load(9, 10, 1));
+        assert_eq!(r.pick(&[0, 1], &loads), None, "all saturated: queue at the gateway");
+        assert_eq!(r.pick(&[], &loads), None, "no live AWs: queue at the gateway");
+    }
+
+    #[test]
+    fn resident_cap_gates_admission() {
+        let mut loads = LoadMap::default();
+        loads.update(0, load(0, 0, 2));
+        let mut r = Router::new(RouterPolicy::LeastPressure, marks(), 2);
+        assert_eq!(r.pick(&[0], &loads), None);
+        loads.note_departure(0);
+        assert_eq!(r.pick(&[0], &loads), Some(0));
+    }
+
+    #[test]
+    fn optimistic_bumps_spread_between_beacons() {
+        let mut loads = LoadMap::default();
+        let mut r = Router::new(RouterPolicy::LeastPressure, marks(), 0);
+        let a = r.pick(&[0, 1], &loads).unwrap();
+        assert_eq!(a, 0);
+        loads.note_submit(a);
+        // Before any beacon arrives the bump steers the next request away.
+        assert_eq!(r.pick(&[0, 1], &loads), Some(1));
+    }
+
+    #[test]
+    fn victim_is_lowest_progress_then_lowest_id() {
+        assert_eq!(pick_victim(vec![(7, 5), (3, 2), (9, 2)]), Some(3));
+        assert_eq!(pick_victim(vec![(7, 0)]), Some(7));
+        assert_eq!(pick_victim(Vec::new()), None);
+    }
+
+    #[test]
+    fn admission_limits_reject_oversized() {
+        let lim = AdmissionLimits {
+            max_prompt: 16,
+            max_seq: 160,
+            layers: 2,
+            page_tokens: 16,
+            budget_pages: 8,
+        };
+        assert!(lim.reject_reason(8, 24).is_none());
+        assert!(lim.reject_reason(0, 8).is_some(), "empty prompt");
+        assert!(lim.reject_reason(17, 8).is_some(), "prompt over the largest bucket");
+        assert!(lim.reject_reason(16, 150).is_some(), "overflows max_seq");
+        // 8 + 60 = 68 tokens -> ceil(68/16)*2 = 10 pages > budget 8.
+        assert!(lim.reject_reason(8, 60).is_some(), "cannot ever fit the budget");
+        let unbounded = AdmissionLimits { budget_pages: 0, ..lim };
+        assert!(unbounded.reject_reason(8, 60).is_none());
+    }
+}

@@ -19,6 +19,14 @@ pub mod pool;
 
 pub use pool::{KvPool, PageId, PoolConfig, DEFAULT_PAGE_TOKENS};
 
+/// Worst-case pool pages for a request spanning `tokens` positions across
+/// `layers` layers — the admission-time fit check: a request whose
+/// worst-case footprint exceeds the per-AW page budget can never be
+/// served and must be rejected at the gateway (DESIGN.md §9).
+pub fn pages_for_tokens(tokens: usize, page_tokens: usize, layers: usize) -> usize {
+    layers * tokens.div_ceil(page_tokens.max(1))
+}
+
 use crate::modelcfg::ModelSpec;
 use crate::proto::SegPayload;
 use crate::tensor::Tensor;
@@ -101,6 +109,29 @@ impl RequestKv {
     /// Resident bytes of this request's KV state.
     pub fn resident_bytes(&self) -> usize {
         self.allocated_pages() * self.pool.page_floats() * 4
+    }
+
+    /// Additional pool pages this cache must allocate to cover positions
+    /// `[0, new_len)` across all layers (0 if already covered) — the
+    /// pre-step headroom check of the overload scheduler.
+    pub fn pages_to_extend(&self, new_len: usize) -> usize {
+        let pt = self.pool.page_tokens();
+        let need = new_len.div_ceil(pt);
+        self.tables.iter().map(|t| need.saturating_sub(t.len())).sum()
+    }
+
+    /// Eagerly allocate (zeroed) pages covering positions `[0, upto)`
+    /// across all layers. The restore path *reserves* its prefix plus the
+    /// next decode position this way, so a headroom check cannot be
+    /// invalidated by a later install racing for the same free pages.
+    pub fn reserve(&mut self, upto: usize) {
+        let pt = self.pool.page_tokens();
+        let need = upto.div_ceil(pt);
+        for table in &mut self.tables {
+            while table.len() < need {
+                table.push(self.pool.alloc());
+            }
+        }
     }
 
     /// (page, slot) of a position, allocating pages on demand.
@@ -343,6 +374,20 @@ mod tests {
         let pool = KvPool::for_model(&m);
         let mut kv = RequestKv::new(&m, &pool);
         kv.write(0, 6, &[0.0; 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn pages_to_extend_counts_worst_case_growth() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut kv = RequestKv::new(&m, &pool);
+        // Fresh cache: covering 3 positions needs ceil(3/2)=2 pages/layer.
+        assert_eq!(kv.pages_to_extend(3), 2 * m.layers);
+        kv.write(0, 0, &[0.0; 4], &[0.0; 4]); // layer 0 now has 1 page
+        assert_eq!(kv.pages_to_extend(2), 1, "only layer 1 still needs a page");
+        assert_eq!(kv.pages_to_extend(0), 0);
+        assert_eq!(pages_for_tokens(3, 2, m.layers), 2 * m.layers);
+        assert_eq!(pages_for_tokens(4, 2, 1), 2);
     }
 
     #[test]

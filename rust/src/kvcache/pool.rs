@@ -18,6 +18,15 @@
 //! arena's high-water mark is the cost of a burst, not of the lifetime.
 //! Recycled pages are re-zeroed on alloc so padding invariants hold for
 //! whoever gets them next.
+//!
+//! **Budget + pressure (DESIGN.md §9).** A pool may carry a hard *page
+//! budget* modeling the GPU memory actually available for KV state.
+//! [`KvPool::try_alloc`] fails (returns `None`) at the budget instead of
+//! growing, and [`KvPool::pressure`] (`in_use / budget`) is the signal
+//! the serving scheduler keys its admission watermarks and preemption
+//! decisions off. `alloc` panics when the budget is exceeded: every
+//! caller on the serving path must have reserved headroom first, so an
+//! over-budget grab is a scheduler bug, not a condition to paper over.
 
 use crate::modelcfg::ModelSpec;
 use std::sync::{Arc, Mutex};
@@ -74,6 +83,8 @@ struct PoolInner {
     peak_in_use: usize,
     total_allocs: u64,
     total_frees: u64,
+    /// Hard cap on pages in use (0 = unbounded).
+    budget: usize,
 }
 
 /// Shared KV page arena. Cheap to clone the `Arc`; all mutation goes
@@ -112,6 +123,13 @@ impl KvPool {
         Self::new(PoolConfig { page_tokens, seg: m.kv_heads * m.head_dim })
     }
 
+    /// Pool with a hard page budget (0 = unbounded).
+    pub fn bounded(cfg: PoolConfig, budget_pages: usize) -> Arc<KvPool> {
+        let p = Self::new(cfg);
+        p.set_budget(budget_pages);
+        p
+    }
+
     pub fn config(&self) -> PoolConfig {
         self.cfg
     }
@@ -131,10 +149,13 @@ impl KvPool {
 
     // ---- allocation ------------------------------------------------------
 
-    /// Hand out a zeroed page. Recycles the free list before growing the
-    /// arena.
-    pub fn alloc(&self) -> PageId {
+    /// Hand out a zeroed page, or `None` when the pool is at its page
+    /// budget. Recycles the free list before growing the arena.
+    pub fn try_alloc(&self) -> Option<PageId> {
         let mut inner = self.inner.lock().unwrap();
+        if inner.budget > 0 && inner.in_use >= inner.budget {
+            return None;
+        }
         let id = if let Some(idx) = inner.free.pop() {
             let slot = &mut inner.slots[idx as usize];
             debug_assert!(!slot.in_use);
@@ -152,7 +173,16 @@ impl KvPool {
         inner.in_use += 1;
         inner.peak_in_use = inner.peak_in_use.max(inner.in_use);
         inner.total_allocs += 1;
-        id
+        Some(id)
+    }
+
+    /// Hand out a zeroed page. Panics at the page budget — callers on the
+    /// serving path must reserve headroom (preempting if necessary) before
+    /// growing a request, so hitting the budget here is a scheduler bug.
+    pub fn alloc(&self) -> PageId {
+        self.try_alloc().unwrap_or_else(|| {
+            panic!("kv page budget exceeded ({} pages)", self.budget_pages())
+        })
     }
 
     /// Return a page. Panics on double free or a foreign id — a paging
@@ -250,6 +280,39 @@ impl KvPool {
         self.inner.lock().unwrap().peak_in_use
     }
 
+    /// The hard page budget (0 = unbounded).
+    pub fn budget_pages(&self) -> usize {
+        self.inner.lock().unwrap().budget
+    }
+
+    /// Install (or clear, with 0) the hard page budget. Shrinking below
+    /// the current in-use count is allowed: existing pages stay valid and
+    /// pressure reads above 1.0 until enough are freed.
+    pub fn set_budget(&self, pages: usize) {
+        self.inner.lock().unwrap().budget = pages;
+    }
+
+    /// Pages left under the budget, or `None` for an unbounded pool.
+    pub fn free_pages(&self) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        if inner.budget == 0 {
+            None
+        } else {
+            Some(inner.budget.saturating_sub(inner.in_use))
+        }
+    }
+
+    /// Memory pressure: `in_use / budget`, or 0.0 for an unbounded pool.
+    /// The serving scheduler compares this against its watermarks.
+    pub fn pressure(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.budget == 0 {
+            0.0
+        } else {
+            inner.in_use as f64 / inner.budget as f64
+        }
+    }
+
     /// Floats held by pages currently in use.
     pub fn floats_in_use(&self) -> usize {
         self.pages_in_use() * self.cfg.page_floats()
@@ -319,6 +382,41 @@ mod tests {
         assert_eq!(&k[8..12], &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(&v[8..12], &[5.0, 6.0, 7.0, 8.0]);
         assert_eq!(&k[..8], &[0.0; 8]);
+    }
+
+    #[test]
+    fn budget_caps_try_alloc_and_pressure_tracks() {
+        let p = KvPool::bounded(PoolConfig { page_tokens: 2, seg: 2 }, 2);
+        assert_eq!(p.budget_pages(), 2);
+        assert_eq!(p.free_pages(), Some(2));
+        assert_eq!(p.pressure(), 0.0);
+        let a = p.try_alloc().unwrap();
+        assert_eq!(p.pressure(), 0.5);
+        let _b = p.try_alloc().unwrap();
+        assert_eq!(p.pressure(), 1.0);
+        assert_eq!(p.free_pages(), Some(0));
+        assert!(p.try_alloc().is_none(), "at budget, try_alloc must fail");
+        assert_eq!(p.pages_in_use(), 2);
+        p.free(a);
+        assert_eq!(p.pressure(), 0.5);
+        assert!(p.try_alloc().is_some(), "freed headroom must be reusable");
+    }
+
+    #[test]
+    fn unbounded_pool_reports_no_pressure() {
+        let p = pool(2, 2);
+        let _a = p.alloc();
+        assert_eq!(p.budget_pages(), 0);
+        assert_eq!(p.free_pages(), None);
+        assert_eq!(p.pressure(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv page budget exceeded")]
+    fn alloc_past_budget_panics() {
+        let p = KvPool::bounded(PoolConfig { page_tokens: 2, seg: 2 }, 1);
+        let _a = p.alloc();
+        let _b = p.alloc();
     }
 
     #[test]

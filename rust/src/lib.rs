@@ -11,7 +11,8 @@
 //! - `transport`   — simulated RDMA: QPs, links, probes, fault injection
 //! - `kvcache`     — paged per-request KV state (block-pool arena) + batch assembly
 //! - `checkpoint`  — incremental checkpoint store + per-request restore
-//! - `coordinator` — gateway, orchestrator, ERT/REFE, AW, EW, provisioning
+//! - `coordinator` — gateway, orchestrator, ERT/REFE, AW, EW, provisioning,
+//!   and the overload-aware serving scheduler (`sched`, DESIGN.md §9)
 //! - `baselines`   — MegaScale-like coarse restart, vLLM-TP, vLLM-PP
 //! - `workload`/`metrics`/`costmodel` — experiment substrate
 pub mod baselines;

@@ -43,6 +43,10 @@ pub struct RunAnalysis {
     pub throughput_series: Vec<(f64, f64)>,
     /// (window_start_s, mean TBT ms) series.
     pub tbt_series: Vec<(f64, f64)>,
+    /// Requests preempted under KV pressure or drains (DESIGN.md §9).
+    pub preemptions: usize,
+    /// Requests rejected at admission (oversized).
+    pub rejections: usize,
     /// Longest gap between consecutive tokens *cluster-wide* (the paper's
     /// "stall": the visible freeze of the token stream, Fig. 9).
     pub max_token_gap_s: f64,
@@ -79,6 +83,8 @@ impl RunAnalysis {
         let mut tbt = Vec::new();
         let mut finished = 0usize;
         let mut total_tokens = 0usize;
+        let mut preemptions = 0usize;
+        let mut rejections = 0usize;
         let mut tp_timeline = Timeline::new(window_secs);
         let mut tbt_timeline = Timeline::new(window_secs);
         let mut token_times: Vec<f64> = Vec::new();
@@ -108,6 +114,8 @@ impl RunAnalysis {
                     last_token.insert(e.request, t);
                 }
                 EventKind::Finished => finished += 1,
+                EventKind::Preempted => preemptions += 1,
+                EventKind::Rejected => rejections += 1,
             }
         }
 
@@ -132,6 +140,8 @@ impl RunAnalysis {
             total_tokens,
             finished_requests: finished,
             submitted_requests: submitted.len(),
+            preemptions,
+            rejections,
             duration_secs: duration,
             throughput_series: tp_timeline.rate_series(),
             tbt_series: tbt_timeline.mean_series(),
@@ -206,6 +216,25 @@ mod tests {
         assert!((a.max_token_gap_s - 0.02).abs() < 0.001);
         let (g, t) = a.max_gap_after(0.065);
         assert!((g - 0.02).abs() < 1e-9 && (t - 0.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_preemptions_and_rejections() {
+        let events = vec![
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(5, EventKind::Rejected, 1, 0),
+            ev(10, EventKind::Submitted, 2, 0),
+            ev(50, EventKind::Token, 2, 0),
+            ev(60, EventKind::Preempted, 2, 0),
+            ev(90, EventKind::Migrated, 2, 0),
+            ev(120, EventKind::Token, 2, 1),
+            ev(121, EventKind::Finished, 2, 0),
+        ];
+        let a = RunAnalysis::from_events(&events, 1.0);
+        assert_eq!(a.preemptions, 1);
+        assert_eq!(a.rejections, 1);
+        assert_eq!(a.finished_requests, 1);
+        assert_eq!(a.total_tokens, 2);
     }
 
     #[test]

@@ -28,8 +28,15 @@ pub enum EventKind {
     Token,
     /// Request finished (generated max tokens).
     Finished,
-    /// Request was migrated to another AW by failure recovery.
+    /// Request was migrated to another AW (failure recovery, preemption
+    /// re-admission, or a planned drain).
     Migrated,
+    /// Request was rejected at admission (oversized prompt / KV
+    /// footprint); a stream-level error is surfaced instead of output.
+    Rejected,
+    /// Request was preempted under KV pressure or a drain: checkpoint
+    /// flushed, pages evicted, parked for re-admission.
+    Preempted,
 }
 
 impl EventKind {
@@ -40,6 +47,8 @@ impl EventKind {
             EventKind::Token => "token",
             EventKind::Finished => "finished",
             EventKind::Migrated => "migrated",
+            EventKind::Rejected => "rejected",
+            EventKind::Preempted => "preempted",
         }
     }
 }

@@ -153,6 +153,43 @@ impl RestoreData {
 }
 
 // ---------------------------------------------------------------------------
+// Overload-aware scheduling (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// AW load beacon (AW -> gateway + orchestrator): KV pressure and queue
+/// depth, driving load-aware routing, admission backpressure, and the
+/// re-admission of parked (preempted) requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AwStatus {
+    pub aw: u32,
+    /// KV pages currently held by this AW's arena.
+    pub pages_in_use: u32,
+    /// The arena's hard page budget (0 = unbounded).
+    pub pages_budget: u32,
+    /// Prefill queue + active decode set.
+    pub queue_depth: u32,
+    /// Requests resident on the AW (any phase).
+    pub resident: u32,
+}
+
+/// KV memory pressure: `in_use / budget`, 0.0 when unbounded. The single
+/// definition shared by the beacon and the scheduler's bookkeeping.
+pub fn kv_pressure(pages_in_use: u32, pages_budget: u32) -> f64 {
+    if pages_budget == 0 {
+        0.0
+    } else {
+        pages_in_use as f64 / pages_budget as f64
+    }
+}
+
+impl AwStatus {
+    /// KV memory pressure (0.0 when unbounded).
+    pub fn pressure(&self) -> f64 {
+        kv_pressure(self.pages_in_use, self.pages_budget)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Orchestration / admin
 // ---------------------------------------------------------------------------
 
@@ -206,6 +243,26 @@ pub enum ClusterMsg {
     // gateway -> orchestrator: request -> AW binding (so AW failures can
     // be mapped to affected requests even before any checkpoint exists)
     Bound { request: u64, aw: u32 },
+    // ---- overload-aware scheduling (DESIGN.md §9) ----
+    /// AW load beacon (to gateway and orchestrator).
+    Status(AwStatus),
+    /// AW -> gateway: this request can never be served (oversized prompt
+    /// or KV footprint); the gateway surfaces a stream-level error.
+    Rejected { request: u64, worker: u32, reason: String },
+    /// AW -> orchestrator (park + later re-admission) and AW -> gateway
+    /// (event log): a committed request was preempted — its checkpoint
+    /// state was flushed and its KV pages evicted.
+    Preempted { aw: u32, meta: CommitMeta },
+    /// AW -> orchestrator: these requests were evicted during a drain
+    /// before committing any checkpoint; resubmit them from the prompt.
+    PreemptedUncommitted { aw: u32, requests: Vec<u64> },
+    /// orchestrator -> AW: evict every resident request (planned drain /
+    /// migration; committed ones go via the checkpoint path).
+    PreemptAll,
+    /// admin -> orchestrator: drain an AW — stop routing new requests to
+    /// it and migrate its residents (to `target` if given, else to the
+    /// least-pressure live AWs).
+    DrainAw { aw: u32, target: Option<u32> },
 }
 
 impl ClusterMsg {
@@ -224,6 +281,10 @@ impl ClusterMsg {
             ClusterMsg::ActiveReqs { reqs, .. } => {
                 HDR_BYTES + reqs.len() * HDR_BYTES
             }
+            ClusterMsg::PreemptedUncommitted { requests, .. } => {
+                HDR_BYTES + requests.len() * 8
+            }
+            ClusterMsg::Rejected { reason, .. } => HDR_BYTES + reason.len(),
             _ => HDR_BYTES,
         }
     }

@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// One injectable fault.
+/// One injectable fault (or planned reconfiguration verb).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Fault {
     KillAw(u32),
@@ -33,6 +33,11 @@ pub enum Fault {
     Heal(NodeId, NodeId),
     RespawnAw(u32),
     RespawnEw(u32),
+    /// Planned drain: migrate everything off the AW and stop routing new
+    /// requests to it (scale-in / maintenance, DESIGN.md §9).
+    DrainAw(u32),
+    /// Planned migration: drain `from`, steering its requests onto `to`.
+    MigrateAw(u32, u32),
 }
 
 /// A fault scheduled at an offset from the schedule start.
@@ -67,9 +72,22 @@ impl ScheduledFault {
                 NodeId::Ew(i) => Fault::RespawnEw(i),
                 other => return bad(&format!("cannot respawn {other}")),
             },
+            ("drain", 4) => match node(toks[3])? {
+                NodeId::Aw(i) => Fault::DrainAw(i),
+                other => return bad(&format!("cannot drain {other} (AWs only)")),
+            },
+            ("migrate", 5) => match (node(toks[3])?, node(toks[4])?) {
+                (NodeId::Aw(a), NodeId::Aw(b)) => Fault::MigrateAw(a, b),
+                _ => return bad("migrate takes two AWs"),
+            },
             ("sever", 5) => Fault::Sever(node(toks[3])?, node(toks[4])?),
             ("heal", 5) => Fault::Heal(node(toks[3])?, node(toks[4])?),
-            _ => return bad("unknown verb/arity (kill|respawn <node>, sever|heal <a> <b>)"),
+            _ => {
+                return bad(
+                    "unknown verb/arity (kill|respawn|drain <node>, \
+                     sever|heal|migrate <a> <b>)",
+                )
+            }
         };
         Ok(ScheduledFault { at, fault })
     }
@@ -204,9 +222,21 @@ impl Scenario {
             .map(|r| (r.id, cluster.gw.generated_of(r.id)))
             .collect();
         let event_log = cluster.events.render();
+        let rejections = cluster.gw.rejections();
+        let kv_peaks = cluster.spawner.kv_peaks();
+        let kv_budget = self.cfg.sched.kv_budget_pages;
         let report = cluster.finish(1.0);
         drop(guard);
-        ScenarioOutcome { name: self.name.clone(), completed, tokens, event_log, report }
+        ScenarioOutcome {
+            name: self.name.clone(),
+            completed,
+            tokens,
+            event_log,
+            rejections,
+            kv_peaks,
+            kv_budget,
+            report,
+        }
     }
 }
 
@@ -222,6 +252,8 @@ fn apply(cluster: &Cluster, fault: &Fault) {
         Fault::RespawnEw(i) => {
             let _ = cluster.respawn_ew(*i);
         }
+        Fault::DrainAw(i) => cluster.drain_aw(*i),
+        Fault::MigrateAw(a, b) => cluster.migrate_aw(*a, *b),
     }
 }
 
@@ -234,7 +266,30 @@ pub struct ScenarioOutcome {
     pub tokens: BTreeMap<u64, Vec<u32>>,
     /// Canonical event-log rendering (byte-comparable across runs).
     pub event_log: String,
+    /// Rejected requests with their stream-level errors.
+    pub rejections: BTreeMap<u64, String>,
+    /// Peak pages-in-use per AW arena (budget-invariant assertions).
+    pub kv_peaks: BTreeMap<u32, usize>,
+    /// The configured per-AW page budget (0 = unbounded).
+    pub kv_budget: usize,
     pub report: ClusterReport,
+}
+
+impl ScenarioOutcome {
+    /// Panics if any AW arena ever exceeded the configured page budget.
+    pub fn assert_kv_budget_held(&self) {
+        if self.kv_budget == 0 {
+            return;
+        }
+        for (aw, &peak) in &self.kv_peaks {
+            assert!(
+                peak <= self.kv_budget,
+                "{}: aw{aw} peaked at {peak} pages (budget {})",
+                self.name,
+                self.kv_budget
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +320,14 @@ mod tests {
                 fault: Fault::Heal(NodeId::Aw(0), NodeId::Ew(0)),
             }
         );
+        assert_eq!(
+            ScheduledFault::parse("at 500ms drain aw0").unwrap(),
+            ScheduledFault { at: Duration::from_millis(500), fault: Fault::DrainAw(0) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 1s migrate aw0 aw1").unwrap(),
+            ScheduledFault { at: Duration::from_secs(1), fault: Fault::MigrateAw(0, 1) }
+        );
     }
 
     #[test]
@@ -278,6 +341,10 @@ mod tests {
             "at 10ms sever aw0",
             "at 10ms explode ew0",
             "at 10ms kill zz9",
+            "at 10ms drain ew0",
+            "at 10ms drain store",
+            "at 10ms migrate aw0 ew1",
+            "at 10ms migrate aw0",
         ] {
             assert!(ScheduledFault::parse(bad).is_err(), "accepted: {bad}");
         }

@@ -574,3 +574,123 @@ fn prop_bucket_fit_is_minimal_and_sufficient() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Overload-scheduler invariants (DESIGN.md §9): page budget, pressure
+// watermarks, preempt-evict accounting
+// ---------------------------------------------------------------------------
+
+/// The page budget is a hard invariant: under any alloc/free interleaving
+/// `pages_in_use` never exceeds it, `try_alloc` fails exactly at the cap,
+/// and freed headroom is immediately reusable.
+#[test]
+fn prop_kv_budget_never_exceeded() {
+    use tarragon::kvcache::PoolConfig;
+    check("kv budget", 100, |rng, _| {
+        let budget = rng.range_usize(1, 24);
+        let pool = KvPool::bounded(
+            PoolConfig { page_tokens: rng.range_usize(1, 9), seg: 4 },
+            budget,
+        );
+        let mut held: Vec<PageId> = Vec::new();
+        for _ in 0..300 {
+            if rng.f64() < 0.55 {
+                match pool.try_alloc() {
+                    Some(id) => held.push(id),
+                    None => assert_eq!(
+                        pool.pages_in_use(),
+                        budget,
+                        "try_alloc must fail exactly at the budget"
+                    ),
+                }
+            } else if !held.is_empty() {
+                pool.free(held.swap_remove(rng.index(held.len())));
+            }
+            assert!(pool.pages_in_use() <= budget, "budget exceeded");
+            assert!(pool.peak_pages() <= budget, "peak accounting exceeded budget");
+            assert_eq!(pool.free_pages(), Some(budget - pool.pages_in_use()));
+        }
+        for id in held {
+            pool.free(id);
+        }
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}
+
+/// Pressure is monotone under alloc/free: each alloc raises it by exactly
+/// 1/budget, each free lowers it by the same, and it stays within [0, 1].
+#[test]
+fn prop_kv_pressure_monotone_under_interleavings() {
+    use tarragon::kvcache::PoolConfig;
+    check("kv pressure", 100, |rng, _| {
+        let budget = rng.range_usize(1, 16);
+        let pool = KvPool::bounded(PoolConfig { page_tokens: 2, seg: 2 }, budget);
+        let step = 1.0 / budget as f64;
+        let mut held: Vec<PageId> = Vec::new();
+        for _ in 0..200 {
+            let before = pool.pressure();
+            if rng.f64() < 0.5 {
+                if let Some(id) = pool.try_alloc() {
+                    held.push(id);
+                    assert!((pool.pressure() - (before + step)).abs() < 1e-9);
+                } else {
+                    assert!((pool.pressure() - 1.0).abs() < 1e-9);
+                }
+            } else if !held.is_empty() {
+                pool.free(held.swap_remove(rng.index(held.len())));
+                assert!((pool.pressure() - (before - step)).abs() < 1e-9);
+            }
+            assert!(pool.pressure() >= -1e-9 && pool.pressure() <= 1.0 + 1e-9);
+        }
+    });
+}
+
+/// Preempt-evict must return every page: repeated evict (drop) → restore
+/// (write_segment) cycles across random sequence lengths neither leak nor
+/// double-free, and the restored contents round-trip exactly.
+#[test]
+fn prop_preempt_evict_restore_cycles_return_every_page() {
+    check("evict/restore cycles", 60, |rng, _| {
+        let m = rand_model(rng);
+        let seg = m.kv_heads * m.head_dim;
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, 9));
+        for cycle in 0..6usize {
+            let len = rng.range_usize(1, m.max_seq + 1);
+            // Build a resident request (decode state).
+            let mut kv = RequestKv::new(&m, &pool);
+            for pos in 0..len {
+                for layer in 0..m.layers {
+                    let fill = (cycle * 1000 + pos * 10 + layer) as f32;
+                    kv.write(layer, pos, &vec![fill; seg], &vec![fill + 0.5; seg]);
+                }
+            }
+            kv.set_len(len);
+            let pages = kv.allocated_pages();
+            assert_eq!(pool.pages_in_use(), pages);
+            // "Flush": capture every segment the streamer would emit.
+            let mut segments = Vec::new();
+            for pos in 0..len {
+                for layer in 0..m.layers {
+                    segments.push((pos, layer, kv.read_segment(layer, pos)));
+                }
+            }
+            // Evict: every page must come back to the arena.
+            drop(kv);
+            assert_eq!(pool.pages_in_use(), 0, "evict leaked pages (cycle {cycle})");
+            // Restore into a fresh cache (the adopting AW's install path).
+            let mut restored = RequestKv::new(&m, &pool);
+            for (pos, layer, data) in &segments {
+                restored.write_segment(*layer, *pos, data);
+            }
+            restored.set_len(len);
+            assert_eq!(restored.allocated_pages(), pages, "restore footprint changed");
+            for (pos, layer, data) in &segments {
+                assert_eq!(&restored.read_segment(*layer, *pos), data, "restore corrupted");
+            }
+            drop(restored);
+            assert_eq!(pool.pages_in_use(), 0, "restore cycle leaked pages");
+        }
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}

@@ -1,0 +1,197 @@
+//! Overload-scheduler scenario matrix (DESIGN.md §9) on the virtual
+//! clock: KV-pressure admission, queueing backpressure, checkpoint-backed
+//! preemption, and the planned `drain`/`migrate` verbs.
+//!
+//! The invariant under test everywhere: however hard the cluster is
+//! oversubscribed, *zero requests are dropped* and every preempted /
+//! migrated / drained request's token stream is byte-identical to the
+//! uncontended baseline — and no AW arena ever exceeds its page budget.
+
+use std::time::Duration;
+use tarragon::config::Config;
+use tarragon::testing::scenario::Scenario;
+use tarragon::testing::synthetic;
+
+/// Scenario base: 2 AWs × 2 EWs with an optional per-AW KV page budget
+/// (0 = unbounded, the uncontended baseline).
+fn sched_cfg(budget_pages: usize) -> Config {
+    let mut cfg = Config::small_test();
+    cfg.transport.latency = Duration::from_millis(1);
+    cfg.transport.worker_extra_init = Duration::from_millis(200);
+    cfg.sched.kv_budget_pages = budget_pages;
+    cfg
+}
+
+/// Overload burst: 6 requests of (8-token prompt, 24 new tokens) arriving
+/// within 10 ms. Worst-case footprint is 4 pages each (2 layers × 2
+/// pages), so with `budget_pages = 8` per AW the offered load exceeds the
+/// aggregate KV budget and the cluster must queue + preempt to survive.
+fn burst_scenario(name: &str, budget_pages: usize) -> Scenario {
+    let mut s = Scenario::new(name, sched_cfg(budget_pages));
+    for i in 0..6u64 {
+        s = s.request(
+            i,
+            Duration::from_millis(2 * i),
+            vec![(1 + i) as u32, 2, 3, 4, 5, 6, 7, 8],
+            24,
+        );
+    }
+    s
+}
+
+#[test]
+fn overload_burst_completes_with_zero_drops_and_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let uncontended = burst_scenario("burst-baseline", 0).run(manifest.clone(), weights.clone());
+    assert!(uncontended.completed);
+    assert_eq!(uncontended.report.finished, 6);
+
+    let overloaded = burst_scenario("burst-overload", 8).run(manifest, weights);
+    assert!(overloaded.completed, "overloaded run did not drain:\n{}", overloaded.event_log);
+    // Zero drops: every request was admitted (possibly after queueing)
+    // and finished.
+    assert_eq!(overloaded.report.submitted, 6);
+    assert_eq!(overloaded.report.finished, 6, "requests were dropped under overload");
+    assert_eq!(overloaded.report.rejected, 0);
+    // Byte-identical streams vs the uncontended baseline.
+    assert_eq!(
+        overloaded.tokens, uncontended.tokens,
+        "preemption/queueing changed token streams"
+    );
+    for (id, toks) in &overloaded.tokens {
+        assert_eq!(toks.len(), 24, "req {id} truncated");
+    }
+    // The page budget is a hard invariant.
+    overloaded.assert_kv_budget_held();
+}
+
+#[test]
+fn pressure_preemption_triggers_and_replays_deterministically() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = burst_scenario("preempt-pressure", 8).seed(42);
+    let a = s.run(manifest.clone(), weights.clone());
+    assert!(a.completed);
+    assert!(
+        a.report.preemptions > 0,
+        "offered load above the KV budget must trigger preemption\n{}",
+        a.event_log
+    );
+    assert!(a.event_log.contains("preempted"), "preemptions missing from the event log");
+    a.assert_kv_budget_held();
+
+    // Same scenario + seed: byte-identical event logs.
+    let b = s.run(manifest.clone(), weights.clone());
+    assert!(b.completed);
+    assert_eq!(a.event_log, b.event_log, "same seed must replay byte-identically");
+    assert_eq!(a.tokens, b.tokens);
+
+    // Different seed: timestamps may move, token streams may not.
+    let c = s.clone().seed(1007).run(manifest, weights);
+    assert!(c.completed);
+    assert_eq!(c.tokens, a.tokens, "token streams must be seed-invariant");
+}
+
+/// Two requests, one per AW (least-pressure placement with queue-depth
+/// tie-breaks lands req 0 on aw0, req 1 on aw1).
+fn two_request_scenario(name: &str, budget_pages: usize) -> Scenario {
+    Scenario::new(name, sched_cfg(budget_pages))
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+}
+
+#[test]
+fn drain_aw_migrates_all_requests_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("drain", 0).fault("at 60ms drain aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let drained = s.run(manifest, weights);
+    assert!(clean.completed && drained.completed);
+    assert_eq!(drained.tokens, clean.tokens, "drain changed token streams");
+    assert_eq!(drained.report.finished, 2);
+    // The drain is planned mobility, not a failure.
+    assert_eq!(drained.report.aw_failures, 0, "drain must not look like a failure");
+    assert!(
+        drained.report.preemptions >= 1,
+        "drain must evict via the checkpoint path:\n{}",
+        drained.event_log
+    );
+    assert!(
+        drained.event_log.contains("migrated"),
+        "drained requests must re-admit elsewhere:\n{}",
+        drained.event_log
+    );
+}
+
+#[test]
+fn migrate_verb_steers_requests_onto_the_named_target() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("migrate", 0).fault("at 60ms migrate aw0 aw1");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let moved = s.run(manifest, weights);
+    assert!(clean.completed && moved.completed);
+    assert_eq!(moved.tokens, clean.tokens, "migration changed token streams");
+    assert_eq!(moved.report.aw_failures, 0);
+    assert!(moved.report.preemptions >= 1);
+    // The migrated request re-binds onto aw1 specifically.
+    assert!(
+        moved.event_log.contains("migrated req=0 idx=0 worker=1"),
+        "expected req 0 to land on aw1:\n{}",
+        moved.event_log
+    );
+}
+
+#[test]
+fn oversized_prompt_is_rejected_at_the_gateway_with_an_error() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Prompt of 20 tokens exceeds the synthetic model's largest prefill
+    // bucket (16). The old AW path dropped it silently and the run hung
+    // until the drain timeout; now the gateway rejects it up front.
+    let s = Scenario::new("oversized", sched_cfg(0))
+        .request(0, Duration::ZERO, (1..=20).collect(), 8)
+        .request(1, Duration::from_millis(2), vec![1, 2, 3], 8);
+    let out = s.run(manifest, weights);
+    assert!(out.completed, "a rejected request must not stall the drain");
+    assert_eq!(out.report.rejected, 1);
+    assert_eq!(out.report.finished, 1, "the well-formed request must still finish");
+    let err = out.rejections.get(&0).expect("stream-level error for req 0");
+    assert!(err.contains("prefill bucket"), "unhelpful rejection reason: {err}");
+    assert!(out.event_log.contains("rejected req=0"), "rejection missing from event log");
+    assert_eq!(out.tokens[&1].len(), 8);
+    assert!(out.tokens[&0].is_empty(), "rejected requests produce no tokens");
+}
+
+#[test]
+fn oversized_kv_footprint_is_rejected_when_budgeted() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // 8 + 120 = 128 tokens -> 8 pages/layer x 2 layers = 16 pages, over
+    // a 8-page budget: can never be served, reject at admission.
+    let s = Scenario::new("oversized-kv", sched_cfg(8))
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 120)
+        .request(1, Duration::from_millis(2), vec![1, 2, 3], 8);
+    let out = s.run(manifest, weights);
+    assert!(out.completed);
+    assert_eq!(out.report.rejected, 1);
+    assert_eq!(out.report.finished, 1);
+    assert!(out.rejections.get(&0).expect("error").contains("budget"));
+    out.assert_kv_budget_held();
+}
+
+#[test]
+fn queueing_backpressure_shows_up_as_queued_admissions_not_drops() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // A tight budget (one worst-case request per AW) forces later
+    // arrivals to wait at the gateway until headroom opens.
+    let mut s = Scenario::new("backpressure", sched_cfg(4));
+    for i in 0..4u64 {
+        s = s.request(i, Duration::from_millis(i), vec![(1 + i) as u32, 2, 3, 4], 20);
+    }
+    let out = s.run(manifest, weights);
+    assert!(out.completed, "backpressured run did not drain:\n{}", out.event_log);
+    assert_eq!(out.report.finished, 4, "backpressure must not drop requests");
+    assert_eq!(out.report.rejected, 0);
+    out.assert_kv_budget_held();
+    // Tokens are complete for everyone.
+    for (id, toks) in &out.tokens {
+        assert_eq!(toks.len(), 20, "req {id} truncated");
+    }
+}
