@@ -1,0 +1,536 @@
+//! Decode hot-path benchmark: tokens/sec and allocations/token for the
+//! zero-copy decode path (blocked transposed-weight matmuls + in-place
+//! paged attention + view dispatch + scratch arena) versus the seed
+//! path (naive triple-loop matmuls + dense `[B, S, kv, d]` KV gather +
+//! copy-per-row dispatch).
+//!
+//! Both paths run the same single-thread per-step arithmetic the AW/EW
+//! cluster performs — embed → per layer (attention, router, top-2,
+//! dispatch, expert FFN, slot-ordered accumulation) → LM head — and
+//! produce bitwise-identical tokens (the kernels preserve f32
+//! accumulation order; see `runtime::xla::kern`).
+//!
+//! Run:   cargo bench --bench decode            (full sweep, emits
+//!        BENCH_decode.json in the working directory)
+//!        cargo bench --bench decode -- --smoke (CI: tiny sweep)
+//!
+//! The acceptance bar for the zero-copy rewrite is >= 2x single-thread
+//! decode throughput on the synthetic model shape and ~zero
+//! allocations/token in steady state (`speedup` / `allocs_per_token`
+//! fields below; the hard zero-alloc guarantee is pinned by
+//! rust/tests/alloc.rs).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tarragon::kvcache::{BatchAssembler, KvPool, PoolConfig, RequestKv};
+use tarragon::modelcfg::ModelSpec;
+use tarragon::runtime::xla::kern;
+use tarragon::tensor::{ops, Tensor};
+use tarragon::testing::alloccount::{allocation_count, CountingAlloc};
+use tarragon::util::json::{arr, num, obj, s};
+use tarragon::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const RMS_EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 10000.0;
+
+const LAYERS: usize = 4;
+const H: usize = 128;
+const HEADS: usize = 4;
+const KV: usize = 1;
+const D: usize = 32;
+const KVD: usize = KV * D;
+const F: usize = 256;
+const E: usize = 8;
+const TOP_K: usize = 2;
+const VOCAB: usize = 512;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// Seed kernels: naive matmul, dense KV gather, row copies.
+    Naive,
+    /// Zero-copy path: blocked W^T matmul, paged attention, row views.
+    ZeroCopy,
+}
+
+struct Weights {
+    embed: Vec<f32>,
+    // per layer
+    wq: Vec<Vec<f32>>,
+    wk: Vec<Vec<f32>>,
+    wv: Vec<Vec<f32>>,
+    wo: Vec<Vec<f32>>,
+    wg: Vec<Vec<f32>>,
+    // per layer per expert
+    w1: Vec<Vec<Vec<f32>>>,
+    w3: Vec<Vec<Vec<f32>>>,
+    w2: Vec<Vec<Vec<f32>>>,
+    ln: Vec<f32>,
+    lm: Vec<f32>,
+    // transposed copies (computed once, like the weight-upload prewarm)
+    wq_t: Vec<Vec<f32>>,
+    wk_t: Vec<Vec<f32>>,
+    wv_t: Vec<Vec<f32>>,
+    wo_t: Vec<Vec<f32>>,
+    wg_t: Vec<Vec<f32>>,
+    w1_t: Vec<Vec<Vec<f32>>>,
+    w3_t: Vec<Vec<Vec<f32>>>,
+    w2_t: Vec<Vec<Vec<f32>>>,
+    lm_t: Vec<f32>,
+}
+
+fn rand_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * 0.2).collect()
+}
+
+impl Weights {
+    fn new(rng: &mut Pcg) -> Weights {
+        let per_layer = |rng: &mut Pcg, k: usize, m: usize| -> Vec<Vec<f32>> {
+            (0..LAYERS).map(|_| rand_vec(rng, k * m)).collect()
+        };
+        let per_expert = |rng: &mut Pcg, k: usize, m: usize| -> Vec<Vec<Vec<f32>>> {
+            (0..LAYERS).map(|_| (0..E).map(|_| rand_vec(rng, k * m)).collect()).collect()
+        };
+        let t_layer = |w: &[Vec<f32>], k: usize, m: usize| -> Vec<Vec<f32>> {
+            w.iter().map(|w| kern::transpose(w, k, m)).collect()
+        };
+        let t_expert = |w: &[Vec<Vec<f32>>], k: usize, m: usize| -> Vec<Vec<Vec<f32>>> {
+            w.iter().map(|l| l.iter().map(|w| kern::transpose(w, k, m)).collect()).collect()
+        };
+        let wq = per_layer(rng, H, H);
+        let wk = per_layer(rng, H, KVD);
+        let wv = per_layer(rng, H, KVD);
+        let wo = per_layer(rng, H, H);
+        let wg = per_layer(rng, H, E);
+        let w1 = per_expert(rng, H, F);
+        let w3 = per_expert(rng, H, F);
+        let w2 = per_expert(rng, F, H);
+        let lm = rand_vec(rng, H * VOCAB);
+        Weights {
+            embed: rand_vec(rng, VOCAB * H),
+            wq_t: t_layer(&wq, H, H),
+            wk_t: t_layer(&wk, H, KVD),
+            wv_t: t_layer(&wv, H, KVD),
+            wo_t: t_layer(&wo, H, H),
+            wg_t: t_layer(&wg, H, E),
+            w1_t: t_expert(&w1, H, F),
+            w3_t: t_expert(&w3, H, F),
+            w2_t: t_expert(&w2, F, H),
+            lm_t: kern::transpose(&lm, H, VOCAB),
+            wq,
+            wk,
+            wv,
+            wo,
+            wg,
+            w1,
+            w3,
+            w2,
+            ln: vec![1.0; H],
+            lm,
+        }
+    }
+}
+
+/// One decode workload at (batch, context): steady-state steps over a
+/// fixed-length context (KV append overwrites the same next position, so
+/// the measured cost profile does not drift across iterations).
+struct Sim {
+    b: usize,
+    ctx: usize,
+    s_max: usize,
+    mode: Mode,
+    w: Arc<Weights>,
+    kvs: Vec<RequestKv>,
+    asm: BatchAssembler,
+    pos: Vec<i32>,
+    next_tok: Vec<u32>,
+    freqs: Vec<f32>,
+}
+
+impl Sim {
+    fn new(b: usize, ctx: usize, s_max: usize, mode: Mode, w: Arc<Weights>) -> Sim {
+        let m = ModelSpec {
+            layers: LAYERS,
+            hidden: H,
+            heads: HEADS,
+            kv_heads: KV,
+            head_dim: D,
+            ffn: F,
+            experts: E,
+            top_k: TOP_K,
+            vocab: VOCAB,
+            max_seq: s_max,
+        };
+        let mut rng = Pcg::seeded(7 + b as u64 * 1000 + ctx as u64);
+        let pool = KvPool::new(PoolConfig { page_tokens: 16, seg: KVD });
+        let mut kvs: Vec<RequestKv> = (0..b).map(|_| RequestKv::new(&m, &pool)).collect();
+        for r in kvs.iter_mut() {
+            r.reserve(ctx + 1);
+            for layer in 0..LAYERS {
+                for t in 0..ctx {
+                    let k = rand_vec(&mut rng, KVD);
+                    let v = rand_vec(&mut rng, KVD);
+                    r.write(layer, t, &k, &v);
+                }
+            }
+            r.set_len(ctx);
+        }
+        drop(pool); // kept alive by the request KVs' Arcs
+        Sim {
+            b,
+            ctx,
+            s_max,
+            mode,
+            w,
+            kvs,
+            asm: BatchAssembler::new(&m),
+            pos: vec![ctx as i32; b],
+            next_tok: (0..b as u32).map(|i| (i * 13 + 5) % VOCAB as u32).collect(),
+            freqs: kern::rope_freqs(D, ROPE_THETA),
+        }
+    }
+
+    fn matmul(&self, x: &[f32], w: &[f32], wt: &[f32], n: usize, k: usize, m: usize) -> Tensor {
+        match self.mode {
+            Mode::Naive => Tensor::new(vec![n, m], kern::matmul_naive(x, w, n, k, m)),
+            Mode::ZeroCopy => {
+                let mut out = Tensor::uninit([n, m]);
+                kern::matmul_wt_into(x, wt, n, k, m, out.data_mut());
+                out
+            }
+        }
+    }
+
+    /// One decode step; returns the per-request tokens.
+    fn step(&mut self) {
+        let (b, w) = (self.b, self.w.clone());
+        let mut x = Tensor::uninit([b, H]);
+        {
+            let xd = x.data_mut();
+            for i in 0..b {
+                let tok = self.next_tok[i] as usize;
+                xd[i * H..(i + 1) * H].copy_from_slice(&w.embed[tok * H..(tok + 1) * H]);
+            }
+        }
+        for layer in 0..LAYERS {
+            let mut n_t = Tensor::uninit([b, H]);
+            kern::rms_norm_into(x.data(), &w.ln, b, H, RMS_EPS, n_t.data_mut());
+            let mut q = self.matmul(n_t.data(), &w.wq[layer], &w.wq_t[layer], b, H, H);
+            let mut k_new = self.matmul(n_t.data(), &w.wk[layer], &w.wk_t[layer], b, H, KVD);
+            let v_new = self.matmul(n_t.data(), &w.wv[layer], &w.wv_t[layer], b, H, KVD);
+            let pos = &self.pos;
+            kern::rope_with_freqs(q.data_mut(), b, HEADS, D, &self.freqs, |i| pos[i] as f32);
+            kern::rope_with_freqs(k_new.data_mut(), b, KV, D, &self.freqs, |i| pos[i] as f32);
+            let mut attn = Tensor::zeros([b, H]);
+            let mut scores = Tensor::uninit([self.s_max]);
+            match self.mode {
+                Mode::Naive => {
+                    // Seed behavior: materialize a contiguous [B, S, kv, d]
+                    // copy of the paged KV, then run dense attention.
+                    let refs: Vec<&RequestKv> = self.kvs.iter().collect();
+                    let (kc, vc, _pos) =
+                        self.asm.gather(&refs, layer, b, KV, D);
+                    let src = kern::DenseKv {
+                        k: kc.data(),
+                        v: vc.data(),
+                        s: self.s_max,
+                        kv: KV,
+                        d: D,
+                    };
+                    kern::attn_decode_into(
+                        q.data(),
+                        k_new.data(),
+                        v_new.data(),
+                        &self.pos,
+                        &src,
+                        b,
+                        HEADS,
+                        KV,
+                        D,
+                        self.s_max,
+                        scores.data_mut(),
+                        attn.data_mut(),
+                    );
+                }
+                Mode::ZeroCopy => {
+                    // Paged reads in place — the only per-step work the
+                    // gather does is cloning page-id tables.
+                    let refs: Vec<&RequestKv> = self.kvs.iter().collect();
+                    let (view, _pos) = self.asm.gather_paged(&refs, layer, b);
+                    let read = view.pool.read();
+                    let src = kern::PagedKv { read: &read, tables: &view.tables, d: D };
+                    kern::attn_decode_into(
+                        q.data(),
+                        k_new.data(),
+                        v_new.data(),
+                        &self.pos,
+                        &src,
+                        b,
+                        HEADS,
+                        KV,
+                        D,
+                        self.s_max,
+                        scores.data_mut(),
+                        attn.data_mut(),
+                    );
+                }
+            }
+            // Steady-state append (same position each iteration: the
+            // context length stays fixed across measured steps).
+            for i in 0..b {
+                self.kvs[i].write(layer, self.ctx, k_new.row(i), v_new.row(i));
+            }
+            let proj = self.matmul(attn.data(), &w.wo[layer], &w.wo_t[layer], b, H, H);
+            let mut h_out = Tensor::uninit([b, H]);
+            for ((o, a), p) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+                *o = a + p;
+            }
+            let mut g = Tensor::uninit([b, H]);
+            kern::rms_norm_into(h_out.data(), &w.ln, b, H, RMS_EPS, g.data_mut());
+            // Router + top-2 + expert mix, expert-ascending.
+            let mut logits = self.matmul(g.data(), &w.wg[layer], &w.wg_t[layer], b, H, E);
+            kern::softmax_rows(logits.data_mut(), b, E);
+            let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); E];
+            for i in 0..b {
+                let row = logits.row(i);
+                let mut top = ops::top_k(row, TOP_K);
+                ops::renormalize(&mut top);
+                for (e, wgt) in top {
+                    groups[e].push((i, wgt));
+                }
+            }
+            for (e, rows) in groups.iter().enumerate() {
+                if rows.is_empty() {
+                    continue;
+                }
+                let n = rows.len();
+                // EW staging (both modes pad to the row count here).
+                let mut xe = Tensor::zeros([n, H]);
+                {
+                    let xd = xe.data_mut();
+                    for (j, &(row, _)) in rows.iter().enumerate() {
+                        match self.mode {
+                            // Seed path: dispatch copied row-by-row.
+                            Mode::Naive => {
+                                let copy = g.row(row).to_vec();
+                                xd[j * H..(j + 1) * H].copy_from_slice(&copy);
+                            }
+                            // Zero-copy path: stage straight from a view.
+                            Mode::ZeroCopy => {
+                                let view = g.row_tensor(row);
+                                xd[j * H..(j + 1) * H].copy_from_slice(view.data());
+                            }
+                        }
+                    }
+                }
+                let mut a = self.matmul(xe.data(), &w.w1[layer][e], &w.w1_t[layer][e], n, H, F);
+                let gate = self.matmul(xe.data(), &w.w3[layer][e], &w.w3_t[layer][e], n, H, F);
+                for (av, gv) in a.data_mut().iter_mut().zip(gate.data()) {
+                    *av = kern::silu(*av) * gv;
+                }
+                let y = self.matmul(a.data(), &w.w2[layer][e], &w.w2_t[layer][e], n, F, H);
+                for (j, &(row, wgt)) in rows.iter().enumerate() {
+                    match self.mode {
+                        Mode::Naive => {
+                            // Seed path: returned rows copied out.
+                            let out = y.row(j).to_vec();
+                            ops::axpy_row(h_out.row_mut(row), wgt, &out);
+                        }
+                        Mode::ZeroCopy => {
+                            let view = y.row_tensor(j);
+                            ops::axpy_row(h_out.row_mut(row), wgt, view.data());
+                        }
+                    }
+                }
+            }
+            x = h_out;
+        }
+        let mut normed = Tensor::uninit([b, H]);
+        kern::rms_norm_into(x.data(), &w.ln, b, H, RMS_EPS, normed.data_mut());
+        let logits = self.matmul(normed.data(), &w.lm, &w.lm_t, b, H, VOCAB);
+        for i in 0..b {
+            self.next_tok[i] = ops::argmax(logits.row(i)) as u32;
+        }
+    }
+}
+
+struct Row {
+    phase: &'static str,
+    mode: &'static str,
+    batch: usize,
+    ctx: usize,
+    tokens_per_sec: f64,
+    us_per_token: f64,
+    allocs_per_token: f64,
+}
+
+fn measure(sim: &mut Sim, warmup: usize, iters: usize) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        sim.step();
+    }
+    let a0 = allocation_count();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sim.step();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = (allocation_count() - a0) as f64;
+    let tokens = (iters * sim.b) as f64;
+    (tokens / dt, dt * 1e6 / tokens, allocs / tokens)
+}
+
+/// Prefill comparison: the matmul-bound path (QKV + output projections +
+/// causal attention) at window `t`, naive vs blocked kernels.
+fn prefill_once(w: &Weights, t: usize, blocked: bool) -> f64 {
+    let mut rng = Pcg::seeded(0xBEEF + t as u64);
+    let x = rand_vec(&mut rng, t * H);
+    let t0 = Instant::now();
+    let mut n_t = vec![0.0f32; t * H];
+    kern::rms_norm_into(&x, &w.ln, t, H, RMS_EPS, &mut n_t);
+    let mm = |xs: &[f32], wd: &[f32], wt: &[f32], n: usize, k: usize, m: usize| -> Vec<f32> {
+        if blocked {
+            let mut out = vec![0.0f32; n * m];
+            kern::matmul_wt_into(xs, wt, n, k, m, &mut out);
+            out
+        } else {
+            kern::matmul_naive(xs, wd, n, k, m)
+        }
+    };
+    let mut q = mm(&n_t, &w.wq[0], &w.wq_t[0], t, H, H);
+    let mut k = mm(&n_t, &w.wk[0], &w.wk_t[0], t, H, KVD);
+    let v = mm(&n_t, &w.wv[0], &w.wv_t[0], t, H, KVD);
+    kern::rope(&mut q, t, HEADS, D, ROPE_THETA, |i| i as f32);
+    kern::rope(&mut k, t, KV, D, ROPE_THETA, |i| i as f32);
+    let mut attn = vec![0.0f32; t * H];
+    let mut scores = vec![0.0f32; t];
+    kern::attn_prefill_into(&q, &k, &v, t, HEADS, KV, D, &mut scores, &mut attn);
+    let proj = mm(&attn, &w.wo[0], &w.wo_t[0], t, H, H);
+    std::hint::black_box(&proj);
+    t0.elapsed().as_secs_f64() * 1e6 / t as f64 // us per token
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (batches, ctxs, iters): (&[usize], &[usize], usize) = if smoke {
+        (&[1, 8], &[128, 512], 4)
+    } else {
+        (&[1, 8, 32], &[128, 512, 2048], 12)
+    };
+    let s_max = *ctxs.last().unwrap() + 16;
+    let mut rng = Pcg::seeded(0xDEC0DE);
+    let w = Arc::new(Weights::new(&mut rng));
+    println!("== decode hot-path sweep (smoke={smoke}) ==");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &b in batches {
+        for &ctx in ctxs {
+            let mut naive = Sim::new(b, ctx, s_max, Mode::Naive, w.clone());
+            let (tps_n, uspt_n, apt_n) = measure(&mut naive, 1, iters.max(2));
+            drop(naive);
+            let mut fast = Sim::new(b, ctx, s_max, Mode::ZeroCopy, w.clone());
+            let (tps_f, uspt_f, apt_f) = measure(&mut fast, 2, iters.max(2) * 2);
+            println!(
+                "decode B={b:<3} ctx={ctx:<5} naive {tps_n:>9.1} tok/s ({apt_n:>7.1} allocs/tok) | zero-copy {tps_f:>9.1} tok/s ({apt_f:>7.1} allocs/tok) | speedup {:.2}x",
+                tps_f / tps_n
+            );
+            rows.push(Row {
+                phase: "decode",
+                mode: "naive",
+                batch: b,
+                ctx,
+                tokens_per_sec: tps_n,
+                us_per_token: uspt_n,
+                allocs_per_token: apt_n,
+            });
+            rows.push(Row {
+                phase: "decode",
+                mode: "zero_copy",
+                batch: b,
+                ctx,
+                tokens_per_sec: tps_f,
+                us_per_token: uspt_f,
+                allocs_per_token: apt_f,
+            });
+        }
+    }
+
+    // Prefill (matmul-bound) windows.
+    let prefill_ts: &[usize] = if smoke { &[128] } else { &[128, 512] };
+    for &t in prefill_ts {
+        let naive_us = prefill_once(&w, t, false);
+        let blocked_us = prefill_once(&w, t, true);
+        println!(
+            "prefill t={t:<5} naive {naive_us:>8.2} us/tok | blocked {blocked_us:>8.2} us/tok | speedup {:.2}x",
+            naive_us / blocked_us
+        );
+        for (mode, us) in [("naive", naive_us), ("zero_copy", blocked_us)] {
+            rows.push(Row {
+                phase: "prefill",
+                mode,
+                batch: 1,
+                ctx: t,
+                tokens_per_sec: 1e6 / us,
+                us_per_token: us,
+                allocs_per_token: f64::NAN,
+            });
+        }
+    }
+
+    write_report(&rows, smoke);
+    println!("== done ==");
+}
+
+fn write_report(rows: &[Row], smoke: bool) {
+    let entries = rows.iter().map(|r| {
+        obj(vec![
+            ("phase", s(r.phase)),
+            ("mode", s(r.mode)),
+            ("batch", num(r.batch as f64)),
+            ("context", num(r.ctx as f64)),
+            ("tokens_per_sec", num(r.tokens_per_sec)),
+            ("us_per_token", num(r.us_per_token)),
+            (
+                "allocs_per_token",
+                if r.allocs_per_token.is_nan() { s("n/a") } else { num(r.allocs_per_token) },
+            ),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("decode hot path: zero-copy (blocked W^T matmul + paged attention + view dispatch + scratch arena) vs seed (naive matmul + dense gather + row copies)"),
+        ),
+        ("command", s("cargo bench --bench decode")),
+        ("smoke", s(if smoke { "true" } else { "false" })),
+        (
+            "acceptance",
+            obj(vec![
+                ("decode_speedup_target", s(">= 2.0x single-thread tokens/sec, zero-copy vs naive")),
+                ("allocs_per_token_target", s("~0 in steady state (hard zero pinned by rust/tests/alloc.rs)")),
+            ]),
+        ),
+        (
+            "model",
+            obj(vec![
+                ("layers", num(LAYERS as f64)),
+                ("hidden", num(H as f64)),
+                ("heads", num(HEADS as f64)),
+                ("kv_heads", num(KV as f64)),
+                ("head_dim", num(D as f64)),
+                ("ffn", num(F as f64)),
+                ("experts", num(E as f64)),
+                ("top_k", num(TOP_K as f64)),
+                ("vocab", num(VOCAB as f64)),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_decode.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

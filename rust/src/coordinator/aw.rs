@@ -31,10 +31,56 @@ use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
 use crate::checkpoint::CkptStreamer;
 use crate::util::clock::{self, Clock};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Precomputed artifact names and weight-argument templates for the
+/// decode hot path: every `execute_shared` call clones refcounted
+/// handles instead of formatting strings (DESIGN.md §10).
+struct HotNames {
+    attn_prefill: HashMap<usize, Arc<str>>,
+    attn_decode: HashMap<usize, Arc<str>>,
+    router: HashMap<usize, Arc<str>>,
+    lm_head: HashMap<usize, Arc<str>>,
+    /// Per layer: [wq, wk, wv, wo, ln1, ln2].
+    attn_weights: Vec<[ArgValue; 6]>,
+    /// Per layer: the router gate weight.
+    router_weights: Vec<ArgValue>,
+    lm_head_weights: [ArgValue; 2],
+}
+
+fn names_by_bucket(prefix: &str, buckets: &[usize]) -> HashMap<usize, Arc<str>> {
+    buckets.iter().map(|&b| (b, Arc::from(format!("{prefix}{b}")))).collect()
+}
+
+impl HotNames {
+    fn new(m: &Manifest) -> HotNames {
+        HotNames {
+            attn_prefill: names_by_bucket("attn_prefill_t", &m.buckets.prefill_t),
+            attn_decode: names_by_bucket("attn_decode_b", &m.buckets.decode_b),
+            router: names_by_bucket("router_b", &m.buckets.router_b),
+            lm_head: names_by_bucket("lm_head_b", &m.buckets.lm_head_b),
+            attn_weights: (0..m.model.layers)
+                .map(|l| {
+                    [
+                        ArgValue::weight(format!("layer{l}.wq")),
+                        ArgValue::weight(format!("layer{l}.wk")),
+                        ArgValue::weight(format!("layer{l}.wv")),
+                        ArgValue::weight(format!("layer{l}.wo")),
+                        ArgValue::weight(format!("layer{l}.ln1")),
+                        ArgValue::weight(format!("layer{l}.ln2")),
+                    ]
+                })
+                .collect(),
+            router_weights: (0..m.model.layers)
+                .map(|l| ArgValue::weight(format!("layer{l}.router")))
+                .collect(),
+            lm_head_weights: [ArgValue::weight("ln_f"), ArgValue::weight("lm_head")],
+        }
+    }
+}
 
 pub struct AwParams {
     pub idx: u32,
@@ -96,6 +142,7 @@ pub struct AwWorker {
     active: VecDeque<u64>,
     deferred: Vec<Envelope<ClusterMsg>>,
     asm: BatchAssembler,
+    names: HotNames,
     was_active: bool,
     stop: Arc<AtomicBool>,
     /// Set by `PreemptAll` (planned drain): this worker is closed to new
@@ -153,6 +200,7 @@ impl AwWorker {
             p.fabric.qp(node, NodeId::Orchestrator, Plane::Control).map_err(|e| e.to_string())?;
         let streamer = CkptStreamer::new(p.cfg.resilience.checkpointing, 4096);
         let asm = BatchAssembler::new(&p.manifest.model);
+        let names = HotNames::new(&p.manifest);
         Ok(AwWorker {
             idx: p.idx,
             node,
@@ -174,6 +222,7 @@ impl AwWorker {
             active: VecDeque::new(),
             deferred: Vec::new(),
             asm,
+            names,
             was_active: false,
             stop: p.stop,
             draining: false,
@@ -621,9 +670,12 @@ impl AwWorker {
         }
 
         for layer in 0..m.layers {
+            let mut args = Vec::with_capacity(7);
+            args.push(ArgValue::f32(x.clone()));
+            args.extend(self.names.attn_weights[layer].iter().cloned());
             let outs = self
                 .device
-                .execute(&format!("attn_prefill_t{bucket}"), attn_args_prefill(x.clone(), layer))
+                .execute_shared(&self.names.attn_prefill[&bucket], args)
                 .map_err(|_| StepError::Fatal)?;
             let (h, g, k, v) = unpack4(outs);
             // KV cache + checkpoint segments for all prompt positions.
@@ -646,9 +698,9 @@ impl AwWorker {
             // Route + expert I/O on the valid rows.
             let probs = self
                 .device
-                .execute(
-                    &format!("router_b{bucket}"),
-                    vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+                .execute_shared(
+                    &self.names.router[&bucket],
+                    vec![ArgValue::f32(g.clone()), self.names.router_weights[layer].clone()],
                 )
                 .map_err(|_| StepError::Fatal)?;
             let routes = router::select_top_k(&probs[0], p_len, m.top_k);
@@ -663,8 +715,8 @@ impl AwWorker {
             self.flush_ckpt();
         }
 
-        // First token from the last prompt position.
-        let last = Tensor::from_rows(&[x.row(p_len - 1)]);
+        // First token from the last prompt position (a zero-copy view).
+        let last = x.row_tensor(p_len - 1);
         let token = self.lm_head(&[last])?[0];
         {
             let req = self.reqs.get_mut(&id).unwrap();
@@ -771,21 +823,21 @@ impl AwWorker {
         }
 
         for layer in 0..m.layers {
-            // Gather the batched KV cache.
-            let (kc, vc, pos) = {
+            // Copy-free KV gather: the artifact receives page tables plus
+            // the shared arena and reads rows in place — no `[B, S, kv, d]`
+            // staging copy per layer per step.
+            let (paged, pos) = {
                 let kvs: Vec<&RequestKv> = batch.iter().map(|id| &self.reqs[id].kv).collect();
-                self.asm.gather(&kvs, layer, bucket, m.kv_heads, m.head_dim)
+                self.asm.gather_paged(&kvs, layer, bucket)
             };
-            let mut args = vec![
-                ArgValue::f32(x.clone()),
-                ArgValue::f32(kc),
-                ArgValue::f32(vc),
-                ArgValue::I32(pos, vec![bucket]),
-            ];
-            args.extend(attn_weight_args(layer));
+            let mut args = Vec::with_capacity(9);
+            args.push(ArgValue::f32(x.clone()));
+            args.push(ArgValue::paged_kv(paged));
+            args.push(ArgValue::I32(pos, vec![bucket]));
+            args.extend(self.names.attn_weights[layer].iter().cloned());
             let outs = self
                 .device
-                .execute(&format!("attn_decode_b{bucket}"), args)
+                .execute_shared(&self.names.attn_decode[&bucket], args)
                 .map_err(|_| StepError::Fatal)?;
             let (h, g, k_new, v_new) = unpack4(outs);
             // Append KV + queue segments.
@@ -805,9 +857,9 @@ impl AwWorker {
             // Route + expert I/O.
             let probs = self
                 .device
-                .execute(
-                    &format!("router_b{bucket}"),
-                    vec![ArgValue::f32(g.clone()), ArgValue::weight(format!("layer{layer}.router"))],
+                .execute_shared(
+                    &self.names.router[&bucket],
+                    vec![ArgValue::f32(g.clone()), self.names.router_weights[layer].clone()],
                 )
                 .map_err(|_| StepError::Fatal)?;
             let routes = router::select_top_k(&probs[0], b, m.top_k);
@@ -821,7 +873,7 @@ impl AwWorker {
         }
 
         // Advance lengths, emit tokens, commit.
-        let rows: Vec<Tensor> = (0..b).map(|i| Tensor::from_rows(&[x.row(i)])).collect();
+        let rows: Vec<Tensor> = (0..b).map(|i| x.row_tensor(i)).collect();
         let tokens = self.lm_head(&rows)?;
         for (i, id) in batch.iter().enumerate() {
             let (index, token) = {
@@ -869,16 +921,14 @@ impl AwWorker {
         for (i, r) in rows.iter().enumerate() {
             x.row_mut(i).copy_from_slice(r.row(0));
         }
+        let args = vec![
+            ArgValue::f32(x),
+            self.names.lm_head_weights[0].clone(),
+            self.names.lm_head_weights[1].clone(),
+        ];
         let outs = self
             .device
-            .execute(
-                &format!("lm_head_b{bucket}"),
-                vec![
-                    ArgValue::f32(x),
-                    ArgValue::weight("ln_f"),
-                    ArgValue::weight("lm_head"),
-                ],
-            )
+            .execute_shared(&self.names.lm_head[&bucket], args)
             .map_err(|_| StepError::Fatal)?;
         Ok((0..b).map(|i| ops::argmax(outs[0].row(i)) as u32).collect())
     }
@@ -920,23 +970,6 @@ enum StepError {
     Fatal,
     /// Forward progress blocked (unroutable expert / CCL abort).
     Stalled,
-}
-
-fn attn_weight_args(layer: usize) -> Vec<ArgValue> {
-    vec![
-        ArgValue::weight(format!("layer{layer}.wq")),
-        ArgValue::weight(format!("layer{layer}.wk")),
-        ArgValue::weight(format!("layer{layer}.wv")),
-        ArgValue::weight(format!("layer{layer}.wo")),
-        ArgValue::weight(format!("layer{layer}.ln1")),
-        ArgValue::weight(format!("layer{layer}.ln2")),
-    ]
-}
-
-fn attn_args_prefill(x: Tensor, layer: usize) -> Vec<ArgValue> {
-    let mut args = vec![ArgValue::f32(x)];
-    args.extend(attn_weight_args(layer));
-    args
 }
 
 fn unpack4(mut outs: Vec<Tensor>) -> (Tensor, Tensor, Tensor, Tensor) {

@@ -76,6 +76,12 @@ pub struct EwWorker {
     aws: BTreeMap<u32, AwInfo>,
     buffers: BTreeMap<u32, LayerBuf>,
     resident: HashSet<usize>,
+    /// Cached per-bucket artifact names ("expert_b{N}"): executions are
+    /// refcount bumps, not per-call string formatting.
+    expert_names: HashMap<usize, Arc<str>>,
+    /// Cached per-(layer, expert) weight argument templates (shared
+    /// names — cloning a template never allocates).
+    weight_args: HashMap<(usize, usize), [ArgValue; 3]>,
     stop: Arc<AtomicBool>,
     /// Counters for experiments.
     pub batches_executed: u64,
@@ -146,6 +152,8 @@ impl EwWorker {
             aws,
             buffers: BTreeMap::new(),
             resident: experts.into_iter().collect(),
+            expert_names: HashMap::new(),
+            weight_args: HashMap::new(),
             stop: p.stop,
             batches_executed: 0,
             partial_batches: 0,
@@ -177,7 +185,7 @@ impl EwWorker {
                 if d.urgent {
                     // §5.1: replayed requests are prioritized — execute now.
                     self.urgent_executions += 1;
-                    self.execute_for_aw(aw, &d);
+                    self.execute_for_aw(aw, d);
                     return;
                 }
                 let now = self.clock.now();
@@ -315,39 +323,39 @@ impl EwWorker {
         if partial {
             self.partial_batches += 1;
         }
-        // Merge rows per expert across AWs: expert -> (aw, slot, row data).
+        // Merge rows per expert across AWs: expert -> (aw, slot, row).
         // Everything is ordered (expert asc, AW asc) so execution and
         // return composition replay identically under the virtual clock.
+        // Merged rows are *views* into the arriving dispatch tensors —
+        // the only copy on this path is the bucket staging inside
+        // `run_expert`.
         let hidden = self.manifest.model.hidden;
-        let mut merged: BTreeMap<u16, Vec<(u32, u32, Vec<f32>)>> = BTreeMap::new();
+        let mut merged: BTreeMap<u16, Vec<(u32, u32, Tensor)>> = BTreeMap::new();
         let mut rounds: BTreeMap<u32, u64> = BTreeMap::new();
         for (&aw, d) in &buf.dispatches {
             rounds.insert(aw, d.round);
             for e in &d.entries {
                 let m = merged.entry(e.expert).or_default();
                 for (i, &slot) in e.slots.iter().enumerate() {
-                    m.push((aw, slot, e.rows.row(i).to_vec()));
+                    m.push((aw, slot, e.rows[i].clone()));
                 }
             }
         }
-        // Execute per expert, split results back per AW.
+        // Execute per expert, split results back per AW. Output rows are
+        // views into the expert kernel's output tensor: the floats the
+        // REFE accumulates are the very ones the kernel wrote.
         let mut per_aw: BTreeMap<u32, Vec<DispatchEntry>> = BTreeMap::new();
         for (expert, rows) in merged {
             let outs = self.run_expert(layer as usize, expert as usize, &rows, hidden);
             // Regroup rows by AW.
-            let mut by_aw: BTreeMap<u32, (Vec<u32>, Vec<f32>)> = BTreeMap::new();
+            let mut by_aw: BTreeMap<u32, (Vec<u32>, Vec<Tensor>)> = BTreeMap::new();
             for ((aw, slot, _), out_row) in rows.iter().zip(outs) {
                 let entry = by_aw.entry(*aw).or_default();
                 entry.0.push(*slot);
-                entry.1.extend_from_slice(&out_row);
+                entry.1.push(out_row);
             }
-            for (aw, (slots, data)) in by_aw {
-                let n = slots.len();
-                per_aw.entry(aw).or_default().push(DispatchEntry {
-                    expert,
-                    rows: Tensor::new(vec![n, hidden], data),
-                    slots,
-                });
+            for (aw, (slots, rows)) in by_aw {
+                per_aw.entry(aw).or_default().push(DispatchEntry { expert, rows, slots });
             }
         }
         // Return results (including empty returns for AWs that sent
@@ -362,26 +370,18 @@ impl EwWorker {
     }
 
     /// Execute one urgent (replayed) dispatch immediately for one AW.
-    fn execute_for_aw(&mut self, aw: u32, d: &DispatchMsg) {
+    fn execute_for_aw(&mut self, aw: u32, d: DispatchMsg) {
         let hidden = self.manifest.model.hidden;
-        let mut entries = Vec::new();
-        for e in &d.entries {
-            let rows: Vec<(u32, u32, Vec<f32>)> = e
+        let mut entries = Vec::with_capacity(d.entries.len());
+        for e in d.entries {
+            let rows: Vec<(u32, u32, Tensor)> = e
                 .slots
                 .iter()
-                .enumerate()
-                .map(|(i, &s)| (aw, s, e.rows.row(i).to_vec()))
+                .zip(&e.rows)
+                .map(|(&s, r)| (aw, s, r.clone()))
                 .collect();
             let outs = self.run_expert(d.layer as usize, e.expert as usize, &rows, hidden);
-            let mut data = Vec::with_capacity(outs.len() * hidden);
-            for o in &outs {
-                data.extend_from_slice(o);
-            }
-            entries.push(DispatchEntry {
-                expert: e.expert,
-                rows: Tensor::new(vec![outs.len(), hidden], data),
-                slots: e.slots.clone(),
-            });
+            entries.push(DispatchEntry { expert: e.expert, rows: outs, slots: e.slots });
         }
         let msg = ReturnMsg { layer: d.layer, round: d.round, entries };
         let bytes = msg.wire_bytes();
@@ -389,14 +389,37 @@ impl EwWorker {
         let _ = qp.post(ClusterMsg::Return(msg), bytes, TrafficClass::ExpertReturn);
     }
 
-    /// Run one expert FFN over merged rows, chunking to the largest bucket.
+    fn expert_name(&mut self, bucket: usize) -> Arc<str> {
+        self.expert_names
+            .entry(bucket)
+            .or_insert_with(|| Arc::from(format!("expert_b{bucket}")))
+            .clone()
+    }
+
+    fn expert_weight_args(&mut self, layer: usize, expert: usize) -> [ArgValue; 3] {
+        self.weight_args
+            .entry((layer, expert))
+            .or_insert_with(|| {
+                [
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w1")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w3")),
+                    ArgValue::weight(format!("layer{layer}.expert{expert}.w2")),
+                ]
+            })
+            .clone()
+    }
+
+    /// Run one expert FFN over merged rows, chunking to the largest
+    /// bucket. Returns one output-row view per input row, each sharing
+    /// the kernel's output tensor — no copies between the device reply
+    /// and the wire.
     fn run_expert(
         &mut self,
         layer: usize,
         expert: usize,
-        rows: &[(u32, u32, Vec<f32>)],
+        rows: &[(u32, u32, Tensor)],
         hidden: usize,
-    ) -> Vec<Vec<f32>> {
+    ) -> Vec<Tensor> {
         // Cold-load weights if this expert is not resident (shadow-less
         // failover, or a provisioning race) — the §5.3 cost shadows avoid.
         if !self.resident.contains(&expert) {
@@ -405,41 +428,39 @@ impl EwWorker {
                 self.resident.insert(expert);
                 self.cold_loads += 1;
             } else {
-                return rows.iter().map(|_| vec![0.0; hidden]).collect();
+                return rows.iter().map(|_| Tensor::zeros([1, hidden])).collect();
             }
         }
-        let buckets = &self.manifest.buckets.expert_b;
-        let max_bucket = *buckets.last().unwrap();
         let mut out = Vec::with_capacity(rows.len());
         let mut i = 0;
         while i < rows.len() {
+            let max_bucket = *self.manifest.buckets.expert_b.last().unwrap();
             let n = (rows.len() - i).min(max_bucket);
-            let bucket = Buckets::fit(buckets, n).unwrap_or(max_bucket);
-            let mut data = vec![0.0f32; bucket * hidden];
-            for (j, (_, _, row)) in rows[i..i + n].iter().enumerate() {
-                data[j * hidden..(j + 1) * hidden].copy_from_slice(row);
+            let bucket = Buckets::fit(&self.manifest.buckets.expert_b, n).unwrap_or(max_bucket);
+            // Bucket staging: the one copy on the EW data path (padded
+            // kernel input), written into a scratch-arena tensor.
+            let mut x = Tensor::zeros([bucket, hidden]);
+            {
+                let data = x.data_mut();
+                for (j, (_, _, row)) in rows[i..i + n].iter().enumerate() {
+                    data[j * hidden..(j + 1) * hidden].copy_from_slice(row.data());
+                }
             }
-            let x = Tensor::new(vec![bucket, hidden], data);
-            let result = self.device.execute(
-                &format!("expert_b{bucket}"),
-                vec![
-                    ArgValue::f32(x),
-                    ArgValue::weight(format!("layer{layer}.expert{expert}.w1")),
-                    ArgValue::weight(format!("layer{layer}.expert{expert}.w3")),
-                    ArgValue::weight(format!("layer{layer}.expert{expert}.w2")),
-                ],
-            );
-            match result {
+            let name = self.expert_name(bucket);
+            let mut args = Vec::with_capacity(4);
+            args.push(ArgValue::f32(x));
+            args.extend(self.expert_weight_args(layer, expert).iter().cloned());
+            match self.device.execute_shared(&name, args) {
                 Ok(outs) => {
                     let y = &outs[0];
                     for j in 0..n {
-                        out.push(y.row(j).to_vec());
+                        out.push(y.row_tensor(j));
                     }
                 }
                 Err(_) => {
                     // Device died mid-batch (fail-stop): emit nothing; the
                     // run loop exits on the next iteration.
-                    return rows.iter().map(|_| vec![0.0; hidden]).collect();
+                    return rows.iter().map(|_| Tensor::zeros([1, hidden])).collect();
                 }
             }
             i += n;

@@ -49,6 +49,34 @@ impl std::fmt::Display for RefeError {
 
 impl std::error::Error for RefeError {}
 
+/// Reusable per-REFE gather state: cleared at each `expert_io`, never
+/// reallocated across layers/steps (capacities are retained), so the
+/// steady-state dispatch path does not touch the allocator. The old code
+/// rebuilt every one of these per layer — and `slot_out` additionally
+/// copied each returned row.
+#[derive(Default)]
+struct IoScratch {
+    /// slot -> (row index, gate weight); slots are per-call dense ids.
+    slot_info: Vec<(usize, f32)>,
+    /// slot -> (expert, first-dispatch EW), retained for failure replay.
+    entry_of_slot: Vec<(usize, u32)>,
+    done: Vec<bool>,
+    /// slot -> returned expert-output row: a view into the EW's output
+    /// tensor (zero copy), applied in slot order after the gather.
+    slot_out: Vec<Option<Tensor>>,
+    /// Recycled u32 vectors backing the outstanding-slots bookkeeping.
+    u32_pool: Vec<Vec<u32>>,
+}
+
+fn take_u32(pool: &mut Vec<Vec<u32>>) -> Vec<u32> {
+    pool.pop().unwrap_or_default()
+}
+
+fn give_u32(pool: &mut Vec<Vec<u32>>, mut v: Vec<u32>) {
+    v.clear();
+    pool.push(v);
+}
+
 pub struct Refe {
     aw: u32,
     node: NodeId,
@@ -60,6 +88,7 @@ pub struct Refe {
     ctrl_qps: HashMap<u32, Qp<ClusterMsg>>,
     orch_qp: Option<Qp<ClusterMsg>>,
     round: u64,
+    io: IoScratch,
     // Self-healing counters (§7 ablations / Fig. 9 analysis).
     pub ew_failovers: u64,
     pub rows_replayed: u64,
@@ -86,6 +115,7 @@ impl Refe {
             ctrl_qps: HashMap::new(),
             orch_qp: None,
             round: 0,
+            io: IoScratch::default(),
             ew_failovers: 0,
             rows_replayed: 0,
             probes_sent: 0,
@@ -109,37 +139,53 @@ impl Refe {
         inbox: &Inbox<ClusterMsg>,
         deferred: &mut Vec<Envelope<ClusterMsg>>,
     ) -> Result<(), RefeError> {
+        // Move the reusable gather state out so `&mut self` methods stay
+        // callable while it is borrowed; put it back whatever happens.
+        let mut io = std::mem::take(&mut self.io);
+        let result = self.expert_io_inner(layer, g, groups, h, inbox, deferred, &mut io);
+        self.io = io;
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn expert_io_inner(
+        &mut self,
+        layer: u32,
+        g: &Tensor,
+        groups: &ExpertGroups,
+        h: &mut Tensor,
+        inbox: &Inbox<ClusterMsg>,
+        deferred: &mut Vec<Envelope<ClusterMsg>>,
+        io: &mut IoScratch,
+    ) -> Result<(), RefeError> {
         self.round += 1;
         let round = self.round;
-        let hidden = g.row_len();
+        let IoScratch { slot_info, entry_of_slot, done, slot_out, u32_pool } = io;
+        slot_info.clear();
+        entry_of_slot.clear();
 
-        // slot -> (row index, gate weight); slots are per-call dense ids.
         // Slots are assigned iterating the expert groups (a BTreeMap), so
         // slot order is expert-ascending — the canonical accumulation
-        // order below.
-        let mut slot_info: Vec<(usize, f32)> = Vec::new();
-        // Build per-EW dispatch entries (ordered for deterministic posts).
+        // order below. Entry rows are *views* into `g` (refcount bumps):
+        // no token floats are copied onto the dispatch path.
         let mut per_ew: BTreeMap<u32, Vec<DispatchEntry>> = BTreeMap::new();
-        // (expert, slots, rows) per entry retained for replay on failure.
-        let mut entry_of_slot: Vec<(usize, u32)> = Vec::new(); // slot -> (expert, ew)
-
         for (&expert, rows) in &groups.groups {
             let ew = self
                 .ert
                 .resolve(expert)
                 .ok_or(RefeError::Unroutable { expert })?;
             let mut slots = Vec::with_capacity(rows.len());
-            let mut data = Vec::with_capacity(rows.len() * hidden);
+            let mut row_views = Vec::with_capacity(rows.len());
             for &(row, w) in rows {
                 let slot = slot_info.len() as u32;
                 slot_info.push((row, w));
                 entry_of_slot.push((expert, ew));
                 slots.push(slot);
-                data.extend_from_slice(g.row(row));
+                row_views.push(g.row_tensor(row));
             }
             per_ew.entry(ew).or_default().push(DispatchEntry {
                 expert: expert as u16,
-                rows: Tensor::new(vec![slots.len(), hidden], data),
+                rows: row_views,
                 slots,
             });
         }
@@ -151,8 +197,12 @@ impl Refe {
                 continue;
             }
             let entries = per_ew.remove(&ew).unwrap_or_default();
-            let slots: Vec<u32> = entries.iter().flat_map(|e| e.slots.clone()).collect();
-            if !slots.is_empty() {
+            if !entries.is_empty() {
+                // Borrow each entry's slot list; the old code cloned every
+                // one of them just to flatten (doubling the dispatch-path
+                // allocations), and the vector itself is recycled now.
+                let mut slots = take_u32(u32_pool);
+                slots.extend(entries.iter().flat_map(|e| e.slots.iter().copied()));
                 outstanding.insert(ew, slots);
             }
             let msg = DispatchMsg { layer, round, entries, urgent: false };
@@ -171,9 +221,13 @@ impl Refe {
         // and applied after the last one arrives, in slot order — the sum
         // into each row is then independent of return arrival order (so
         // failover replays and scheduling jitter cannot perturb f32
-        // accumulation).
-        let mut done: Vec<bool> = vec![false; slot_info.len()];
-        let mut slot_out: Vec<Option<Vec<f32>>> = vec![None; slot_info.len()];
+        // accumulation). Each buffered output is a view into the EW's
+        // return tensor — the floats are only read once, by the final
+        // accumulation below.
+        done.clear();
+        done.resize(slot_info.len(), false);
+        slot_out.clear();
+        slot_out.resize_with(slot_info.len(), || None);
         let mut remaining = slot_info.len();
         let start = self.clock.now();
         let mut last_progress = start;
@@ -187,15 +241,18 @@ impl Refe {
                                 if s < done.len() && !done[s] {
                                     done[s] = true;
                                     remaining -= 1;
-                                    slot_out[s] = Some(e.rows.row(i).to_vec());
+                                    slot_out[s] = Some(e.rows[i].clone());
                                 }
                             }
                         }
                         // Clear per-EW bookkeeping for fully-served EWs.
                         if let NodeId::Ew(ew) = env.from {
-                            if let Some(slots) = outstanding.get(&ew) {
-                                if slots.iter().all(|&s| done[s as usize]) {
-                                    outstanding.remove(&ew);
+                            let served = outstanding
+                                .get(&ew)
+                                .is_some_and(|slots| slots.iter().all(|&s| done[s as usize]));
+                            if served {
+                                if let Some(v) = outstanding.remove(&ew) {
+                                    give_u32(u32_pool, v);
                                 }
                             }
                         }
@@ -222,10 +279,23 @@ impl Refe {
                     }
                     any_dead = true;
                     self.on_ew_death(ew);
-                    let slots = outstanding.remove(&ew).unwrap_or_default();
-                    let pending: Vec<u32> =
-                        slots.into_iter().filter(|&s| !done[s as usize]).collect();
-                    self.replay(layer, round, &pending, &entry_of_slot, &slot_info, g, &mut outstanding)?;
+                    let mut pending = take_u32(u32_pool);
+                    if let Some(slots) = outstanding.remove(&ew) {
+                        pending.extend(slots.iter().copied().filter(|&s| !done[s as usize]));
+                        give_u32(u32_pool, slots);
+                    }
+                    let replayed = self.replay(
+                        layer,
+                        round,
+                        &pending,
+                        entry_of_slot,
+                        slot_info,
+                        g,
+                        &mut outstanding,
+                        u32_pool,
+                    );
+                    give_u32(u32_pool, pending);
+                    replayed?;
                 }
                 if !any_dead {
                     // All owers are alive; reset the window so we don't
@@ -248,13 +318,20 @@ impl Refe {
                 return Err(RefeError::CclAbort(self.clock.now().saturating_sub(start)));
             }
         }
+        // Recycle the bookkeeping of EWs whose last return raced the exit.
+        let drained: Vec<u32> = outstanding.keys().copied().collect();
+        for ew in drained {
+            if let Some(v) = outstanding.remove(&ew) {
+                give_u32(u32_pool, v);
+            }
+        }
         // Canonical accumulation: slot order (expert-ascending, rows in
         // group order). Every replica of an expert computes bitwise-equal
         // outputs, so failover replays cannot change the result either.
         for (s, out) in slot_out.iter().enumerate() {
             if let Some(out) = out {
                 let (row, w) = slot_info[s];
-                ops::axpy_row(h.row_mut(row), w, out);
+                ops::axpy_row(h.row_mut(row), w, out.data());
             }
         }
         Ok(())
@@ -262,7 +339,11 @@ impl Refe {
 
     /// Re-dispatch pending slots to the next live candidates as urgent
     /// replays (§5.1). Expert computation is stateless and deterministic,
-    /// so replaying the same rows yields identical results.
+    /// so replaying the same rows yields identical results. The replay
+    /// fires exactly when an EW has just died — i.e. when latency matters
+    /// most — so it carries row *views* and moves its slot list instead
+    /// of the old copy-everything path (which doubled dispatch
+    /// allocations at the worst possible moment).
     #[allow(clippy::too_many_arguments)]
     fn replay(
         &mut self,
@@ -273,39 +354,38 @@ impl Refe {
         slot_info: &[(usize, f32)],
         g: &Tensor,
         outstanding: &mut BTreeMap<u32, Vec<u32>>,
+        u32_pool: &mut Vec<Vec<u32>>,
     ) -> Result<(), RefeError> {
-        let hidden = g.row_len();
         // Group pending slots by expert, resolve to the next candidate.
         let mut by_expert: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         for &s in pending {
-            by_expert.entry(entry_of_slot[s as usize].0).or_default().push(s);
+            by_expert
+                .entry(entry_of_slot[s as usize].0)
+                .or_insert_with(|| take_u32(u32_pool))
+                .push(s);
         }
         for (expert, slots) in by_expert {
             let ew = self
                 .ert
                 .resolve(expert)
                 .ok_or(RefeError::Unroutable { expert })?;
-            let mut data = Vec::with_capacity(slots.len() * hidden);
-            for &s in &slots {
-                data.extend_from_slice(g.row(slot_info[s as usize].0));
-            }
+            let rows: Vec<Tensor> =
+                slots.iter().map(|&s| g.row_tensor(slot_info[s as usize].0)).collect();
+            // Record the new owers first, then *move* the slot list into
+            // the message — no clone on the failover path.
+            outstanding.entry(ew).or_insert_with(|| take_u32(u32_pool)).extend(&slots);
+            self.rows_replayed += slots.len() as u64;
             let msg = DispatchMsg {
                 layer,
                 round,
-                entries: vec![DispatchEntry {
-                    expert: expert as u16,
-                    rows: Tensor::new(vec![slots.len(), hidden], data),
-                    slots: slots.clone(),
-                }],
+                entries: vec![DispatchEntry { expert: expert as u16, rows, slots }],
                 urgent: true,
             };
             let bytes = msg.wire_bytes();
             self.dispatch_bytes += bytes as u64;
-            self.rows_replayed += slots.len() as u64;
             let qp = self.data_qp(ew);
             qp.post(ClusterMsg::Dispatch(msg), bytes, TrafficClass::ExpertDispatch)
                 .map_err(|_| RefeError::LocalDown)?;
-            outstanding.entry(ew).or_default().extend(slots);
         }
         Ok(())
     }

@@ -17,7 +17,7 @@
 
 pub mod pool;
 
-pub use pool::{KvPool, PageId, PoolConfig, DEFAULT_PAGE_TOKENS};
+pub use pool::{KvPool, PageId, PagesRead, PoolConfig, DEFAULT_PAGE_TOKENS};
 
 /// Worst-case pool pages for a request spanning `tokens` positions across
 /// `layers` layers — the admission-time fit check: a request whose
@@ -31,6 +31,35 @@ use crate::modelcfg::ModelSpec;
 use crate::proto::SegPayload;
 use crate::tensor::Tensor;
 use std::sync::Arc;
+
+/// A decode batch's KV state for one layer, by reference: the shared page
+/// arena plus each batch row's page table. This is what the decode
+/// attention artifact receives instead of contiguous `[B, S, kv, d]`
+/// copies — the kernel reads rows in place under [`KvPool::read`]
+/// (DESIGN.md §10). Cloning bumps two `Arc`s; no KV bytes move.
+#[derive(Clone)]
+pub struct PagedKvView {
+    pub pool: Arc<KvPool>,
+    /// Per batch row (row i = batch slot i): that row's page table for
+    /// the layer. Rows beyond `tables.len()` are padding (no KV state).
+    pub tables: Arc<Vec<Vec<PageId>>>,
+}
+
+impl PagedKvView {
+    /// Valid (non-padding) batch rows.
+    pub fn rows(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+impl std::fmt::Debug for PagedKvView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedKvView")
+            .field("rows", &self.tables.len())
+            .field("pages", &self.tables.iter().map(|t| t.len()).sum::<usize>())
+            .finish()
+    }
+}
 
 /// Per-request KV cache across all layers, backed by pool pages.
 pub struct RequestKv {
@@ -187,6 +216,12 @@ impl RequestKv {
         self.len = len;
     }
 
+    /// This request's page table for one layer (positions `[0,
+    /// tables[layer].len() * page_tokens)` are backed).
+    pub fn page_table(&self, layer: usize) -> &[PageId] {
+        &self.tables[layer]
+    }
+
     /// Copy the valid prefix (`len` tokens) of one layer into K / V
     /// destinations of `s_max * seg` floats each (batch-assembly rows).
     /// Positions beyond `len` are left untouched.
@@ -317,6 +352,33 @@ impl BatchAssembler {
         let shape = vec![bucket, self.s_max, kv_heads, head_dim];
         (Tensor::new(shape.clone(), k_buf), Tensor::new(shape, v_buf), pos)
     }
+
+    /// Copy-free gather: hand the decode artifact each request's page
+    /// table plus the shared arena instead of materializing contiguous
+    /// K/V tensors. The only per-call work is cloning `reqs.len()` small
+    /// page-id vectors; KV floats are read in place by the kernel.
+    /// Returns the view and the pos vector (padded to `bucket`).
+    pub fn gather_paged(
+        &mut self,
+        reqs: &[&RequestKv],
+        layer: usize,
+        bucket: usize,
+    ) -> (PagedKvView, Vec<i32>) {
+        assert!(!reqs.is_empty() && reqs.len() <= bucket);
+        let pool = reqs[0].pool().clone();
+        let mut tables = Vec::with_capacity(reqs.len());
+        let mut pos = Vec::with_capacity(bucket);
+        for r in reqs {
+            debug_assert!(
+                Arc::ptr_eq(r.pool(), &pool),
+                "batched requests must share one KV arena"
+            );
+            tables.push(r.page_table(layer).to_vec());
+            pos.push(r.len() as i32);
+        }
+        pos.resize(bucket, 0);
+        (PagedKvView { pool, tables: Arc::new(tables) }, pos)
+    }
 }
 
 #[cfg(test)]
@@ -446,6 +508,32 @@ mod tests {
         assert_eq!(&v.data()[row..row + 4], &[4.0; 4]);
         // positions past each request's len are zero too
         assert!(k.data()[4..row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn paged_gather_matches_dense_gather_values() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut r1 = RequestKv::new(&m, &pool);
+        for p in 0..3 {
+            r1.write(0, p, &[p as f32 + 1.0; 4], &[p as f32 + 10.0; 4]);
+        }
+        r1.set_len(3);
+        let mut asm = BatchAssembler::new(&m);
+        let (k, v, pos_dense) = asm.gather(&[&r1], 0, 2, m.kv_heads, m.head_dim);
+        let (view, pos) = asm.gather_paged(&[&r1], 0, 2);
+        assert_eq!(pos, pos_dense);
+        assert_eq!(view.rows(), 1);
+        assert_eq!(view.tables[0], r1.page_table(0));
+        // Every valid position reads the same floats through either path.
+        let read = view.pool.read();
+        let seg = m.kv_heads * m.head_dim;
+        for t in 0..3 {
+            let page = view.tables[0][t / 2];
+            let (kr, vr) = read.kv_rows(page, t % 2);
+            assert_eq!(kr, &k.data()[t * seg..(t + 1) * seg]);
+            assert_eq!(vr, &v.data()[t * seg..(t + 1) * seg]);
+        }
     }
 
     #[test]

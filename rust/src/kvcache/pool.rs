@@ -251,6 +251,20 @@ impl KvPool {
         }
     }
 
+    /// Take the arena read lock for direct paged access — the decode
+    /// attention kernel reads KV rows in place through this instead of
+    /// materializing a contiguous copy per step (DESIGN.md §10). The
+    /// guard holds the pool mutex: keep it for one kernel invocation
+    /// (the worker thread is blocked on that call anyway) and never
+    /// across another pool operation.
+    pub fn read(&self) -> PagesRead<'_> {
+        PagesRead {
+            inner: self.inner.lock().unwrap(),
+            seg: self.cfg.seg,
+            page_tokens: self.cfg.page_tokens,
+        }
+    }
+
     fn page<'a>(&self, inner: &'a PoolInner, id: PageId) -> &'a [f32] {
         let slot = &inner.slots[id.index()];
         assert!(slot.in_use, "access to freed page {id:?}");
@@ -332,12 +346,54 @@ impl KvPool {
     }
 }
 
+/// Held read lock over a pool's arena: zero-copy (page, slot) row access
+/// for the paged decode-attention kernel.
+pub struct PagesRead<'a> {
+    inner: std::sync::MutexGuard<'a, PoolInner>,
+    seg: usize,
+    page_tokens: usize,
+}
+
+impl PagesRead<'_> {
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Floats of one K (or V) row.
+    pub fn row_elems(&self) -> usize {
+        self.seg
+    }
+
+    /// Borrow the K and V rows of one token slot, in place.
+    pub fn kv_rows(&self, id: PageId, slot: usize) -> (&[f32], &[f32]) {
+        assert!(slot < self.page_tokens);
+        let s = &self.inner.slots[id.index()];
+        assert!(s.in_use, "access to freed page {id:?}");
+        let off = slot * 2 * self.seg;
+        let kv = &s.data[off..off + 2 * self.seg];
+        kv.split_at(self.seg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn pool(page_tokens: usize, seg: usize) -> Arc<KvPool> {
         KvPool::new(PoolConfig { page_tokens, seg })
+    }
+
+    #[test]
+    fn read_lock_exposes_rows_in_place() {
+        let p = pool(3, 4);
+        let id = p.alloc();
+        p.write_rows(id, 2, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        let read = p.read();
+        let (k, v) = read.kv_rows(id, 2);
+        assert_eq!(k, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(read.page_tokens(), 3);
+        assert_eq!(read.row_elems(), 4);
     }
 
     #[test]

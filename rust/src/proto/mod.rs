@@ -37,10 +37,27 @@ impl RequestMeta {
 #[derive(Debug, Clone)]
 pub struct DispatchEntry {
     pub expert: u16,
-    /// Token embeddings, [n, hidden].
-    pub rows: Tensor,
+    /// Token embeddings: one `[1, hidden]` (or `[hidden]`) view per
+    /// token, each sharing the source tensor's storage. Building an
+    /// entry bumps refcounts — no float is copied between the AW's
+    /// activation tensor and the EW's kernel staging (and none between
+    /// the EW's output tensor and the AW's accumulation), which is the
+    /// zero-copy dispatch discipline of DESIGN.md §10.
+    pub rows: Vec<Tensor>,
     /// AW-local row slot ids (to reassociate returns).
     pub slots: Vec<u32>,
+}
+
+impl DispatchEntry {
+    /// Borrow token row `i`'s floats.
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.rows[i].data()
+    }
+
+    /// Payload bytes carried by this entry's rows.
+    pub fn rows_nbytes(&self) -> usize {
+        self.rows.iter().map(|t| t.nbytes()).sum()
+    }
 }
 
 /// One AW's per-layer dispatch to one EW. Empty dispatches (no entries)
@@ -63,7 +80,7 @@ impl DispatchMsg {
             + self
                 .entries
                 .iter()
-                .map(|e| e.rows.nbytes() + e.slots.len() * 4 + 8)
+                .map(|e| e.rows_nbytes() + e.slots.len() * 4 + 8)
                 .sum::<usize>()
     }
 
@@ -87,7 +104,7 @@ impl ReturnMsg {
             + self
                 .entries
                 .iter()
-                .map(|e| e.rows.nbytes() + e.slots.len() * 4 + 8)
+                .map(|e| e.rows_nbytes() + e.slots.len() * 4 + 8)
                 .sum::<usize>()
     }
 }
@@ -297,18 +314,21 @@ mod tests {
     #[test]
     fn wire_sizes_scale_with_payload() {
         let small = DispatchMsg { layer: 0, round: 0, entries: vec![], urgent: false };
+        let g = Tensor::zeros(vec![4, 128]);
         let big = DispatchMsg {
             layer: 0,
             round: 0,
             entries: vec![DispatchEntry {
                 expert: 1,
-                rows: Tensor::zeros(vec![4, 128]),
+                rows: (0..4).map(|i| g.row_tensor(i)).collect(),
                 slots: vec![0, 1, 2, 3],
             }],
             urgent: false,
         };
         assert!(big.wire_bytes() > small.wire_bytes() + 4 * 128 * 4);
         assert_eq!(big.num_rows(), 4);
+        // Dispatch rows are views, not copies.
+        assert!(big.entries[0].rows.iter().all(|r| r.shares_storage(&g)));
 
         let seg = SegmentMsg { request: 1, pos: 0, layer: 0, data: Arc::new(vec![0.0; 64]) };
         assert_eq!(seg.wire_bytes(), HDR_BYTES + 256);

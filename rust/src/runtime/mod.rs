@@ -24,17 +24,26 @@ pub mod xla;
 pub use device::{Device, DeviceError, ExecCounters, InitStats};
 pub use roles::{DeviceRole, RolePlan};
 
+use crate::kvcache::PagedKvView;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
-/// One argument to an artifact execution.
+/// One argument to an artifact execution. Cloning is cheap everywhere:
+/// tensors and weight names are reference-counted, so per-call argument
+/// lists can be built from precomputed templates without copying.
 #[derive(Debug, Clone)]
 pub enum ArgValue {
-    /// Host activation, uploaded for this call.
+    /// Host activation, shared with the device buffer (no upload copy).
     F32(Tensor),
     /// Host i32 tensor (decode positions).
     I32(Vec<i32>, Vec<usize>),
-    /// Device-resident weight buffer, by manifest tensor name.
-    Weight(String),
+    /// Device-resident weight buffer, by manifest tensor name (shared —
+    /// cloning an argument template is a refcount bump).
+    Weight(Arc<str>),
+    /// Paged KV cache by reference: stands in for the (k_cache, v_cache)
+    /// tensor pair of the decode-attention artifact; the kernel reads
+    /// the arena in place instead of a per-step contiguous copy.
+    PagedKv(PagedKvView),
 }
 
 impl ArgValue {
@@ -47,7 +56,11 @@ impl ArgValue {
         ArgValue::I32(v, vec![n])
     }
 
-    pub fn weight(name: impl Into<String>) -> ArgValue {
+    pub fn weight(name: impl Into<Arc<str>>) -> ArgValue {
         ArgValue::Weight(name.into())
+    }
+
+    pub fn paged_kv(view: PagedKvView) -> ArgValue {
+        ArgValue::PagedKv(view)
     }
 }

@@ -10,9 +10,24 @@
 //! exist; semantics are pinned by the manifest's [`ArtifactSpec`] (kind
 //! and I/O shapes) plus the weights passed at call time, so results
 //! match the pure-jnp oracle up to f32 accumulation order.
+//!
+//! Decode hot path (DESIGN.md §10): buffers wrap [`Tensor`]s, so host
+//! upload (`buffer_from_tensor`), device→host readback
+//! (`Literal::into_tensor`), and `to_literal_sync` are refcount bumps,
+//! never float copies. Matmuls run cache-blocked against a transposed
+//! weight copy computed **once** per resident weight buffer
+//! ([`PjRtBuffer::wt_slice`], memoized; prewarmed at weight upload), and
+//! decode attention can read the paged KV arena in place
+//! (`BufData::Paged`) instead of a contiguous per-step copy. All
+//! [`kern`] kernels preserve the seed's per-element f32 accumulation
+//! order, so outputs are **bitwise identical** to the naive originals —
+//! the scenario suite's golden token streams cannot move.
 
+use crate::kvcache::PagedKvView;
 use crate::modelcfg::{ArtifactKind, ArtifactSpec};
+use crate::tensor::{ShapeDims, Tensor};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 /// Mirrors `python/compile/configs.py` (`ModelConfig.rms_eps` /
 /// `.rope_theta`) — the only two model scalars not carried by the
@@ -38,44 +53,430 @@ fn err(msg: impl Into<String>) -> XlaError {
 }
 
 // ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// Reference kernels, shared by the executor, the numeric-equivalence
+/// property tests, and `benches/decode.rs`.
+///
+/// **Accumulation-order contract.** Every kernel here accumulates each
+/// output element over its reduction axis in ascending index order with
+/// a single f32 accumulator — exactly like the seed's naive loops — so
+/// the blocked/transposed variants are bitwise-equal to the originals
+/// (f32 addition is not reassociated, only re-tiled over the *output*
+/// dimensions). Determinism tests and the scenario suite's golden token
+/// streams depend on this; do not vectorize the reduction without
+/// revisiting them.
+pub mod kern {
+    use crate::kvcache::{PageId, PagesRead};
+
+    /// Ascending-index dot product (the seed's `zip().map().sum()`).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// The seed's `[n, k] @ [k, m]` triple loop, kept verbatim as the
+    /// equivalence oracle and the benchmark baseline.
+    pub fn matmul_naive(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let xr = &x[i * k..(i + 1) * k];
+            let or_ = &mut out[i * m..(i + 1) * m];
+            for (kk, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    or_[j] += xv * wr[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `W^T` of a row-major `[k, m]` matrix (result `[m, k]` row-major).
+    pub fn transpose(w: &[f32], k: usize, m: usize) -> Vec<f32> {
+        let mut wt = vec![0.0f32; k * m];
+        for kk in 0..k {
+            for j in 0..m {
+                wt[j * k + kk] = w[kk * m + j];
+            }
+        }
+        wt
+    }
+
+    /// Cache-blocked `[n, k] @ [k, m]` against a pre-transposed weight
+    /// (`wt` is `[m, k]`). Tiles only the output dims (i, j); each
+    /// element is one ascending-k dot product, so results are bitwise
+    /// identical to [`matmul_naive`] for finite weights (the naive
+    /// kernel's `xv == 0.0` skip only elides exact `+0.0` terms).
+    pub fn matmul_wt_into(x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), n * k);
+        debug_assert_eq!(wt.len(), m * k);
+        debug_assert_eq!(out.len(), n * m);
+        // x tile: IB rows of k floats; wt tile: JB rows of k floats —
+        // both L1-resident for the shapes this system runs (k <= 2048).
+        const IB: usize = 4;
+        const JB: usize = 64;
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + IB).min(n);
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + JB).min(m);
+                for i in i0..i1 {
+                    let xr = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * m..(i + 1) * m];
+                    for j in j0..j1 {
+                        orow[j] = dot(xr, &wt[j * k..(j + 1) * k]);
+                    }
+                }
+                j0 = j1;
+            }
+            i0 = i1;
+        }
+    }
+
+    /// RMSNorm over the last axis; `x` viewed as `[n, h]`, written into
+    /// `out` (which may not alias `x`).
+    pub fn rms_norm_into(x: &[f32], gamma: &[f32], n: usize, h: usize, eps: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), n * h);
+        for i in 0..n {
+            let row = &x[i * h..(i + 1) * h];
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            for j in 0..h {
+                out[i * h + j] = row[j] * inv * gamma[j];
+            }
+        }
+    }
+
+    /// The rotate-half frequency table for head dim `d` (`d / 2` floats).
+    pub fn rope_freqs(d: usize, theta: f32) -> Vec<f32> {
+        let half = d / 2;
+        (0..half).map(|j| 1.0 / theta.powf(j as f32 / half as f32)).collect()
+    }
+
+    /// Rotary embedding, rotate-half convention (ref.rope_ref). `x`
+    /// viewed as `[n, heads, d]`; `pos_of(i)` is row i's position.
+    pub fn rope(
+        x: &mut [f32],
+        n: usize,
+        heads: usize,
+        d: usize,
+        theta: f32,
+        pos_of: impl Fn(usize) -> f32,
+    ) {
+        let freqs = rope_freqs(d, theta);
+        rope_with_freqs(x, n, heads, d, &freqs, pos_of);
+    }
+
+    /// [`rope`] with a caller-held frequency table (allocation-free hot
+    /// path; `freqs.len()` must be `d / 2`).
+    pub fn rope_with_freqs(
+        x: &mut [f32],
+        n: usize,
+        heads: usize,
+        d: usize,
+        freqs: &[f32],
+        pos_of: impl Fn(usize) -> f32,
+    ) {
+        let half = d / 2;
+        debug_assert_eq!(freqs.len(), half);
+        for i in 0..n {
+            let p = pos_of(i);
+            for hh in 0..heads {
+                let base = (i * heads + hh) * d;
+                for j in 0..half {
+                    let ang = p * freqs[j];
+                    let (s, c) = ang.sin_cos();
+                    let x1 = x[base + j];
+                    let x2 = x[base + half + j];
+                    x[base + j] = x1 * c - x2 * s;
+                    x[base + half + j] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn silu(v: f32) -> f32 {
+        v * (1.0 / (1.0 + (-v).exp()))
+    }
+
+    /// Row-wise softmax in place (`x` viewed as `[n, m]`), the router's
+    /// gating nonlinearity.
+    pub fn softmax_rows(x: &mut [f32], n: usize, m: usize) {
+        for i in 0..n {
+            let row = &mut x[i * m..(i + 1) * m];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                denom += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= denom;
+            }
+        }
+    }
+
+    /// Where decode attention reads cached K/V rows from: a dense
+    /// `[b, s, kv, d]` tensor pair, or the paged arena in place.
+    pub trait KvSource {
+        /// Cached K row (d floats) for (batch row, position, kv head).
+        fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32];
+        /// Cached V row (d floats) for (batch row, position, kv head).
+        fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32];
+    }
+
+    /// Contiguous `[b, s, kv, d]` cache tensors (the seed layout; still
+    /// used by the monolithic oracle and back-compat callers).
+    pub struct DenseKv<'a> {
+        pub k: &'a [f32],
+        pub v: &'a [f32],
+        pub s: usize,
+        pub kv: usize,
+        pub d: usize,
+    }
+
+    impl KvSource for DenseKv<'_> {
+        fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+            let o = ((bi * self.s + t) * self.kv + kvh) * self.d;
+            &self.k[o..o + self.d]
+        }
+
+        fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+            let o = ((bi * self.s + t) * self.kv + kvh) * self.d;
+            &self.v[o..o + self.d]
+        }
+    }
+
+    /// Paged arena access: page tables + the held pool read lock. Rows
+    /// at or beyond `tables.len()` are padding and must never be read
+    /// (their pos is 0, so the kernel issues no reads for them).
+    pub struct PagedKv<'a> {
+        pub read: &'a PagesRead<'a>,
+        pub tables: &'a [Vec<PageId>],
+        pub d: usize,
+    }
+
+    impl KvSource for PagedKv<'_> {
+        fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+            let pt = self.read.page_tokens();
+            let (k, _) = self.read.kv_rows(self.tables[bi][t / pt], t % pt);
+            &k[kvh * self.d..(kvh + 1) * self.d]
+        }
+
+        fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+            let pt = self.read.page_tokens();
+            let (_, v) = self.read.kv_rows(self.tables[bi][t / pt], t % pt);
+            &v[kvh * self.d..(kvh + 1) * self.d]
+        }
+    }
+
+    /// Causal GQA attention over a prefill window (the seed loop,
+    /// verbatim). `attn` (`[t, heads * d]`) must be zeroed; `scores` is
+    /// a `t`-float scratch row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_prefill_into(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        let group = heads / kv;
+        let scale = 1.0 / (d as f32).sqrt();
+        for hh in 0..heads {
+            let kvh = hh / group;
+            for qi in 0..t {
+                let qrow = &q[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+                let mut mx = f32::NEG_INFINITY;
+                for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                    let krow = &k[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                    let s = dot(qrow, krow) * scale;
+                    *sc = s;
+                    mx = mx.max(s);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut().take(qi + 1) {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                let out = &mut attn[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+                for ki in 0..=qi {
+                    let w = scores[ki] / denom;
+                    let vrow = &v[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                    for j in 0..d {
+                        out[j] += w * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// One-step GQA decode attention over a [`KvSource`] (the seed loop,
+    /// verbatim modulo the source indirection — reads and arithmetic
+    /// happen in the same order for dense and paged sources, so outputs
+    /// are bitwise identical). `attn` (`[b, heads * d]`) must be zeroed;
+    /// `scores` holds `s_limit` floats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_decode_into(
+        q: &[f32],
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: &[i32],
+        src: &impl KvSource,
+        b: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        s_limit: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        let group = heads / kv;
+        let scale = 1.0 / (d as f32).sqrt();
+        for bi in 0..b {
+            let valid = (pos[bi].max(0) as usize).min(s_limit);
+            for hh in 0..heads {
+                let kvh = hh / group;
+                let qrow = &q[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+                let krow_cur = &k_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+                let s_cur = dot(qrow, krow_cur) * scale;
+                let mut mx = s_cur;
+                for (t, sc) in scores.iter_mut().enumerate().take(valid) {
+                    let sv = dot(qrow, src.k_row(bi, t, kvh)) * scale;
+                    *sc = sv;
+                    mx = mx.max(sv);
+                }
+                let mut denom = (s_cur - mx).exp();
+                let e_cur = denom;
+                for sc in scores.iter_mut().take(valid) {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                let out = &mut attn[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+                for t in 0..valid {
+                    let w = scores[t] / denom;
+                    let vrow = src.v_row(bi, t, kvh);
+                    for j in 0..d {
+                        out[j] += w * vrow[j];
+                    }
+                }
+                let vrow_cur = &v_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+                let wc = e_cur / denom;
+                for j in 0..d {
+                    out[j] += wc * vrow_cur[j];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Buffers and literals
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
 enum BufData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Tensor),
+    I32(Arc<Vec<i32>>, ShapeDims),
+    /// Paged KV cache by reference (decode attention only): stands in
+    /// for the (k_cache, v_cache) tensor pair.
+    Paged(PagedKvView),
     Tuple(Vec<PjRtBuffer>),
 }
 
-/// Host-resident "device" buffer.
+/// Host-resident "device" buffer. Clones are refcount bumps — tensor
+/// storage is shared, never copied.
 #[derive(Debug, Clone)]
 pub struct PjRtBuffer {
     data: BufData,
-    shape: Vec<usize>,
+    /// Memoized `W^T` of a 2-D weight buffer: computed at most once per
+    /// resident buffer (prewarmed during weight upload — the "compile
+    /// time" transpose), then reused by every matmul against it.
+    wt: OnceLock<Arc<Vec<f32>>>,
 }
 
 impl PjRtBuffer {
+    fn wrap(data: BufData) -> PjRtBuffer {
+        PjRtBuffer { data, wt: OnceLock::new() }
+    }
+
+    pub(crate) fn from_tensor(t: Tensor) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::F32(t))
+    }
+
+    pub(crate) fn from_i32_vec(v: Vec<i32>, shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::I32(Arc::new(v), ShapeDims::from_slice(shape)))
+    }
+
+    pub(crate) fn paged(view: PagedKvView) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::Paged(view))
+    }
+
+    fn f32_buf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
+        PjRtBuffer::from_tensor(Tensor::new(shape, data))
+    }
+
+    /// Copy-free host readback: the literal shares this buffer's storage.
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Ok(Literal { buf: self.clone() })
     }
 
-    fn f32s(&self) -> Result<&[f32], XlaError> {
+    fn tensor(&self) -> Result<&Tensor, XlaError> {
         match &self.data {
-            BufData::F32(v) => Ok(v),
+            BufData::F32(t) => Ok(t),
             _ => Err(err("expected f32 buffer")),
         }
     }
 
+    fn f32s(&self) -> Result<&[f32], XlaError> {
+        Ok(self.tensor()?.data())
+    }
+
     fn i32s(&self) -> Result<&[i32], XlaError> {
         match &self.data {
-            BufData::I32(v) => Ok(v),
+            BufData::I32(v, _) => Ok(v.as_slice()),
             _ => Err(err("expected i32 buffer")),
         }
     }
 
-    fn f32_buf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
-        PjRtBuffer { data: BufData::F32(data), shape }
+    fn dims(&self) -> &[usize] {
+        match &self.data {
+            BufData::F32(t) => t.shape(),
+            BufData::I32(_, sh) => sh.as_slice(),
+            _ => &[],
+        }
+    }
+
+    /// The memoized transpose of this (weight) buffer, validated as
+    /// `[k, m]`. First call computes `W^T`; every later call is a slice
+    /// borrow.
+    fn wt_slice(&self, k: usize, m: usize) -> Result<&[f32], XlaError> {
+        let t = self.tensor()?;
+        if t.shape() != [k, m] {
+            return Err(err(format!("weight shape {:?}, want [{k}, {m}]", t.shape())));
+        }
+        Ok(self.wt.get_or_init(|| Arc::new(kern::transpose(t.data(), k, m))).as_slice())
+    }
+
+    /// Eagerly compute the transpose of a 2-D f32 buffer (weight upload
+    /// path, so no execution ever pays it).
+    pub(crate) fn prewarm_transpose(&self) {
+        if let BufData::F32(t) = &self.data {
+            if let [k, m] = *t.shape() {
+                let _ = self.wt_slice(k, m);
+            }
+        }
     }
 }
 
@@ -93,8 +494,19 @@ impl Literal {
         }
     }
 
+    /// Copying extraction (legacy surface; prefer [`Literal::into_tensor`]
+    /// when the caller owns the literal).
     pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
         T::extract(&self.buf)
+    }
+
+    /// Zero-copy extraction: the returned tensor shares the executor's
+    /// output storage (no `to_vec` on the readback path).
+    pub fn into_tensor(self) -> Result<Tensor, XlaError> {
+        match self.buf.data {
+            BufData::F32(t) => Ok(t),
+            _ => Err(err("literal is not an f32 tensor")),
+        }
     }
 }
 
@@ -106,7 +518,7 @@ pub trait Element: Copy {
 
 impl Element for f32 {
     fn wrap(data: &[f32], shape: &[usize]) -> PjRtBuffer {
-        PjRtBuffer { data: BufData::F32(data.to_vec()), shape: shape.to_vec() }
+        PjRtBuffer::f32_buf(data.to_vec(), shape.to_vec())
     }
 
     fn extract(buf: &PjRtBuffer) -> Result<Vec<f32>, XlaError> {
@@ -116,7 +528,7 @@ impl Element for f32 {
 
 impl Element for i32 {
     fn wrap(data: &[i32], shape: &[usize]) -> PjRtBuffer {
-        PjRtBuffer { data: BufData::I32(data.to_vec()), shape: shape.to_vec() }
+        PjRtBuffer::from_i32_vec(data.to_vec(), shape)
     }
 
     fn extract(buf: &PjRtBuffer) -> Result<Vec<i32>, XlaError> {
@@ -166,14 +578,15 @@ impl PjRtClient {
         Ok(PjRtClient)
     }
 
-    /// "Compile" an artifact: bind its manifest spec, which pins the
-    /// computation for the reference executor.
+    /// "Compile" an artifact: bind its manifest spec (shared via `Arc` —
+    /// executions never clone it), which pins the computation for the
+    /// reference executor.
     pub fn compile(
         &self,
         _c: &XlaComputation,
         spec: &ArtifactSpec,
     ) -> Result<PjRtLoadedExecutable, XlaError> {
-        Ok(PjRtLoadedExecutable { spec: spec.clone() })
+        Ok(PjRtLoadedExecutable { spec: Arc::new(spec.clone()) })
     }
 
     pub fn buffer_from_host_buffer<T: Element>(
@@ -190,18 +603,50 @@ impl PjRtClient {
         }
         Ok(T::wrap(data, shape))
     }
+
+    /// Zero-copy "upload": the device buffer shares the host tensor's
+    /// storage (the activation path).
+    pub fn buffer_from_tensor(&self, t: Tensor) -> PjRtBuffer {
+        PjRtBuffer::from_tensor(t)
+    }
+
+    /// Zero-copy i32 upload (decode position vectors).
+    pub fn buffer_from_i32_vec(
+        &self,
+        v: Vec<i32>,
+        shape: &[usize],
+    ) -> Result<PjRtBuffer, XlaError> {
+        if shape.iter().product::<usize>() != v.len() {
+            return Err(err(format!(
+                "host buffer length {} does not match shape {shape:?}",
+                v.len()
+            )));
+        }
+        Ok(PjRtBuffer::from_i32_vec(v, shape))
+    }
+
+    /// Paged KV argument (decode attention): stands in for the
+    /// (k_cache, v_cache) pair; the kernel reads the arena in place.
+    pub fn buffer_from_paged_kv(&self, view: PagedKvView) -> PjRtBuffer {
+        PjRtBuffer::paged(view)
+    }
 }
 
 pub struct PjRtLoadedExecutable {
-    spec: ArtifactSpec,
+    spec: Arc<ArtifactSpec>,
 }
 
 impl PjRtLoadedExecutable {
+    /// The spec this executable was compiled against (shared, not cloned).
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
     /// Execute with borrowed argument buffers; returns per-replica output
     /// lists holding one tuple buffer (return_tuple=True convention).
     pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         let outputs = run_reference(&self.spec, args)?;
-        Ok(vec![vec![PjRtBuffer { data: BufData::Tuple(outputs), shape: vec![] }]])
+        Ok(vec![vec![PjRtBuffer::wrap(BufData::Tuple(outputs))]])
     }
 }
 
@@ -219,257 +664,214 @@ fn run_reference(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBu
     }
 }
 
-/// `[n, k] @ [k, m] -> [n, m]`, row-major.
-fn matmul(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let xr = &x[i * k..(i + 1) * k];
-        let or_ = &mut out[i * m..(i + 1) * m];
-        for (kk, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                or_[j] += xv * wr[j];
-            }
-        }
-    }
-    out
-}
-
-/// RMSNorm over the last axis; x viewed as [n, h].
-fn rms_norm(x: &[f32], gamma: &[f32], n: usize, h: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * h];
-    for i in 0..n {
-        let row = &x[i * h..(i + 1) * h];
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
-        let inv = 1.0 / (ms + RMS_EPS).sqrt();
-        for j in 0..h {
-            out[i * h + j] = row[j] * inv * gamma[j];
-        }
-    }
-    out
-}
-
-/// Rotary embedding, rotate-half convention (ref.rope_ref). `x` viewed as
-/// [n, heads, d]; `pos_of(i)` is row i's position.
-fn rope(x: &mut [f32], n: usize, heads: usize, d: usize, pos_of: impl Fn(usize) -> f32) {
-    let half = d / 2;
-    let freqs: Vec<f32> = (0..half)
-        .map(|j| 1.0 / ROPE_THETA.powf(j as f32 / half as f32))
-        .collect();
-    for i in 0..n {
-        let p = pos_of(i);
-        for hh in 0..heads {
-            let base = (i * heads + hh) * d;
-            for j in 0..half {
-                let ang = p * freqs[j];
-                let (s, c) = ang.sin_cos();
-                let x1 = x[base + j];
-                let x2 = x[base + half + j];
-                x[base + j] = x1 * c - x2 * s;
-                x[base + half + j] = x1 * s + x2 * c;
-            }
-        }
-    }
-}
-
-fn silu(v: f32) -> f32 {
-    v * (1.0 / (1.0 + (-v).exp()))
+/// `x @ w` via the blocked kernel and `w`'s memoized transpose, into a
+/// fresh scratch-arena tensor of the given shape.
+fn matmul_t(
+    x: &[f32],
+    w: &PjRtBuffer,
+    n: usize,
+    k: usize,
+    m: usize,
+    shape: impl Into<ShapeDims>,
+) -> Result<Tensor, XlaError> {
+    let wt = w.wt_slice(k, m)?;
+    let mut out = Tensor::uninit(shape);
+    kern::matmul_wt_into(x, wt, n, k, m, out.data_mut());
+    Ok(out)
 }
 
 /// attn_prefill(x, wq, wk, wv, wo, ln1, ln2) -> (h, g, k, v)
 fn attn_prefill(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
-    let x = args[0].f32s()?;
-    let (t, h) = (args[0].shape[0], args[0].shape[1]);
+    let x = args[0].tensor()?;
+    let (t, h) = (x.shape()[0], x.shape()[1]);
     // Output 2 is k: [T, kv_heads, head_dim] — the head split.
     let kv = spec.outputs[2].shape[1];
     let d = spec.outputs[2].shape[2];
     let heads = h / d;
     let kvd = kv * d;
-    let (wq, wk, wv, wo) = (args[1].f32s()?, args[2].f32s()?, args[3].f32s()?, args[4].f32s()?);
     let (ln1, ln2) = (args[5].f32s()?, args[6].f32s()?);
 
-    let n = rms_norm(x, ln1, t, h);
-    let mut q = matmul(&n, wq, t, h, h);
-    let mut k = matmul(&n, wk, t, h, kvd);
-    let v = matmul(&n, wv, t, h, kvd);
-    rope(&mut q, t, heads, d, |i| i as f32);
-    rope(&mut k, t, kv, d, |i| i as f32);
+    // Fused input staging: normalize once into a scratch tensor, feed
+    // all three projections from it.
+    let mut n_t = Tensor::uninit([t, h]);
+    kern::rms_norm_into(x.data(), ln1, t, h, RMS_EPS, n_t.data_mut());
+    let mut q = matmul_t(n_t.data(), args[1], t, h, h, [t, h])?;
+    let mut k = matmul_t(n_t.data(), args[2], t, h, kvd, [t, kv, d])?;
+    let v = matmul_t(n_t.data(), args[3], t, h, kvd, [t, kv, d])?;
+    kern::rope(q.data_mut(), t, heads, d, ROPE_THETA, |i| i as f32);
+    kern::rope(k.data_mut(), t, kv, d, ROPE_THETA, |i| i as f32);
 
-    // Causal GQA attention: [t, heads, d].
-    let group = heads / kv;
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut attn = vec![0.0f32; t * h];
-    let mut scores = vec![0.0f32; t];
-    for hh in 0..heads {
-        let kvh = hh / group;
-        for qi in 0..t {
-            let qrow = &q[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
-            let mut mx = f32::NEG_INFINITY;
-            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
-                let krow = &k[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
-                let s: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
-                *sc = s;
-                mx = mx.max(s);
-            }
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut().take(qi + 1) {
-                *sc = (*sc - mx).exp();
-                denom += *sc;
-            }
-            let out = &mut attn[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
-            for ki in 0..=qi {
-                let w = scores[ki] / denom;
-                let vrow = &v[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
-                for j in 0..d {
-                    out[j] += w * vrow[j];
-                }
-            }
-        }
+    let mut attn = Tensor::zeros([t, h]);
+    let mut scores = Tensor::uninit([t]);
+    kern::attn_prefill_into(
+        q.data(),
+        k.data(),
+        v.data(),
+        t,
+        heads,
+        kv,
+        d,
+        scores.data_mut(),
+        attn.data_mut(),
+    );
+
+    let proj = matmul_t(attn.data(), args[4], t, h, h, [t, h])?;
+    let mut h_out = Tensor::uninit([t, h]);
+    for ((o, a), b) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+        *o = a + b;
     }
-
-    let proj = matmul(&attn, wo, t, h, h);
-    let h_out: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
-    let g = rms_norm(&h_out, ln2, t, h);
+    let mut g = Tensor::uninit([t, h]);
+    kern::rms_norm_into(h_out.data(), ln2, t, h, RMS_EPS, g.data_mut());
     Ok(vec![
-        PjRtBuffer::f32_buf(h_out, vec![t, h]),
-        PjRtBuffer::f32_buf(g, vec![t, h]),
-        PjRtBuffer::f32_buf(k, vec![t, kv, d]),
-        PjRtBuffer::f32_buf(v, vec![t, kv, d]),
+        PjRtBuffer::from_tensor(h_out),
+        PjRtBuffer::from_tensor(g),
+        PjRtBuffer::from_tensor(k),
+        PjRtBuffer::from_tensor(v),
     ])
 }
 
 /// attn_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, ln1, ln2)
 /// -> (h, g, k_new, v_new)
+///
+/// The cache pair may instead be a single paged argument
+/// (x, paged_kv, pos, wq, ...): same arithmetic, reads in place.
 fn attn_decode(spec: &ArtifactSpec, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
-    let x = args[0].f32s()?;
-    let (b, h) = (args[0].shape[0], args[0].shape[1]);
-    let k_cache = args[1].f32s()?;
-    let v_cache = args[2].f32s()?;
-    let s = args[1].shape[1];
-    let kv = args[1].shape[2];
-    let d = args[1].shape[3];
-    let pos = args[3].i32s()?;
-    let heads = h / d;
-    let kvd = kv * d;
-    let (wq, wk, wv, wo) = (args[4].f32s()?, args[5].f32s()?, args[6].f32s()?, args[7].f32s()?);
-    let (ln1, ln2) = (args[8].f32s()?, args[9].f32s()?);
-    let _ = spec;
-
-    let n = rms_norm(x, ln1, b, h);
-    let mut q = matmul(&n, wq, b, h, h);
-    let mut k_new = matmul(&n, wk, b, h, kvd);
-    let v_new = matmul(&n, wv, b, h, kvd);
-    rope(&mut q, b, heads, d, |i| pos[i] as f32);
-    rope(&mut k_new, b, kv, d, |i| pos[i] as f32);
-
-    let group = heads / kv;
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut attn = vec![0.0f32; b * h];
-    let mut scores = vec![0.0f32; s];
-    for bi in 0..b {
-        let valid = (pos[bi].max(0) as usize).min(s);
-        for hh in 0..heads {
-            let kvh = hh / group;
-            let qrow = &q[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
-            let krow_cur = &k_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
-            let s_cur: f32 =
-                qrow.iter().zip(krow_cur).map(|(a, c)| a * c).sum::<f32>() * scale;
-            let mut mx = s_cur;
-            for (t, sc) in scores.iter_mut().enumerate().take(valid) {
-                let krow = &k_cache[((bi * s + t) * kv + kvh) * d..((bi * s + t) * kv + kvh + 1) * d];
-                let sv: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum::<f32>() * scale;
-                *sc = sv;
-                mx = mx.max(sv);
+    match &args[1].data {
+        BufData::Paged(view) => {
+            // Geometry is pinned by the spec's k_cache input [b, s, kv, d].
+            let kshape = spec
+                .inputs
+                .get(1)
+                .map(|io| io.shape.as_slice())
+                .ok_or_else(|| err("paged decode requires a k_cache input spec"))?;
+            if kshape.len() != 4 {
+                return Err(err(format!("k_cache spec must be rank 4, got {kshape:?}")));
             }
-            let mut denom = (s_cur - mx).exp();
-            let e_cur = denom;
-            for sc in scores.iter_mut().take(valid) {
-                *sc = (*sc - mx).exp();
-                denom += *sc;
+            let (s, kv, d) = (kshape[1], kshape[2], kshape[3]);
+            if view.pool.row_elems() != kv * d {
+                return Err(err(format!(
+                    "paged arena row_elems {} does not match kv*d = {}",
+                    view.pool.row_elems(),
+                    kv * d
+                )));
             }
-            let out = &mut attn[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
-            for t in 0..valid {
-                let w = scores[t] / denom;
-                let vrow = &v_cache[((bi * s + t) * kv + kvh) * d..((bi * s + t) * kv + kvh + 1) * d];
-                for j in 0..d {
-                    out[j] += w * vrow[j];
-                }
-            }
-            let vrow_cur = &v_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
-            let wc = e_cur / denom;
-            for j in 0..d {
-                out[j] += wc * vrow_cur[j];
-            }
+            let pos = args[2].i32s()?;
+            let read = view.pool.read();
+            let src = kern::PagedKv { read: &read, tables: &view.tables, d };
+            attn_decode_with(args[0], pos, &src, s, kv, d, &args[3..9])
+        }
+        _ => {
+            let k_cache = args[1].f32s()?;
+            let v_cache = args[2].f32s()?;
+            let dims = args[1].dims();
+            let (s, kv, d) = (dims[1], dims[2], dims[3]);
+            let pos = args[3].i32s()?;
+            let src = kern::DenseKv { k: k_cache, v: v_cache, s, kv, d };
+            attn_decode_with(args[0], pos, &src, s, kv, d, &args[4..10])
         }
     }
+}
 
-    let proj = matmul(&attn, wo, b, h, h);
-    let h_out: Vec<f32> = x.iter().zip(&proj).map(|(a, c)| a + c).collect();
-    let g = rms_norm(&h_out, ln2, b, h);
+/// Shared decode-attention body; `w` is [wq, wk, wv, wo, ln1, ln2].
+fn attn_decode_with(
+    x_buf: &PjRtBuffer,
+    pos: &[i32],
+    src: &impl kern::KvSource,
+    s: usize,
+    kv: usize,
+    d: usize,
+    w: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = x_buf.tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
+    let heads = h / d;
+    let kvd = kv * d;
+    let (ln1, ln2) = (w[4].f32s()?, w[5].f32s()?);
+
+    let mut n_t = Tensor::uninit([b, h]);
+    kern::rms_norm_into(x.data(), ln1, b, h, RMS_EPS, n_t.data_mut());
+    let mut q = matmul_t(n_t.data(), w[0], b, h, h, [b, h])?;
+    let mut k_new = matmul_t(n_t.data(), w[1], b, h, kvd, [b, kv, d])?;
+    let v_new = matmul_t(n_t.data(), w[2], b, h, kvd, [b, kv, d])?;
+    kern::rope(q.data_mut(), b, heads, d, ROPE_THETA, |i| pos[i] as f32);
+    kern::rope(k_new.data_mut(), b, kv, d, ROPE_THETA, |i| pos[i] as f32);
+
+    let mut attn = Tensor::zeros([b, h]);
+    let mut scores = Tensor::uninit([s]);
+    kern::attn_decode_into(
+        q.data(),
+        k_new.data(),
+        v_new.data(),
+        pos,
+        src,
+        b,
+        heads,
+        kv,
+        d,
+        s,
+        scores.data_mut(),
+        attn.data_mut(),
+    );
+
+    let proj = matmul_t(attn.data(), w[3], b, h, h, [b, h])?;
+    let mut h_out = Tensor::uninit([b, h]);
+    for ((o, a), c) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+        *o = a + c;
+    }
+    let mut g = Tensor::uninit([b, h]);
+    kern::rms_norm_into(h_out.data(), ln2, b, h, RMS_EPS, g.data_mut());
     Ok(vec![
-        PjRtBuffer::f32_buf(h_out, vec![b, h]),
-        PjRtBuffer::f32_buf(g, vec![b, h]),
-        PjRtBuffer::f32_buf(k_new, vec![b, kv, d]),
-        PjRtBuffer::f32_buf(v_new, vec![b, kv, d]),
+        PjRtBuffer::from_tensor(h_out),
+        PjRtBuffer::from_tensor(g),
+        PjRtBuffer::from_tensor(k_new),
+        PjRtBuffer::from_tensor(v_new),
     ])
 }
 
 /// router(g, wg) -> softmax(g @ wg)
 fn router(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
-    let g = args[0].f32s()?;
-    let (b, h) = (args[0].shape[0], args[0].shape[1]);
-    let wg = args[1].f32s()?;
-    let e = args[1].shape[1];
-    let mut logits = matmul(g, wg, b, h, e);
-    for i in 0..b {
-        let row = &mut logits[i * e..(i + 1) * e];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - mx).exp();
-            denom += *v;
-        }
-        for v in row.iter_mut() {
-            *v /= denom;
-        }
-    }
-    Ok(vec![PjRtBuffer::f32_buf(logits, vec![b, e])])
+    let g = args[0].tensor()?;
+    let (b, h) = (g.shape()[0], g.shape()[1]);
+    let e = args[1].dims()[1];
+    let mut logits = matmul_t(g.data(), args[1], b, h, e, [b, e])?;
+    kern::softmax_rows(logits.data_mut(), b, e);
+    Ok(vec![PjRtBuffer::from_tensor(logits)])
 }
 
 /// expert_ffn(x, w1, w3, w2) -> (silu(x@w1) * (x@w3)) @ w2
 fn expert_ffn(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
-    let x = args[0].f32s()?;
-    let (b, h) = (args[0].shape[0], args[0].shape[1]);
-    let w1 = args[1].f32s()?;
-    let f = args[1].shape[1];
-    let w3 = args[2].f32s()?;
-    let w2 = args[3].f32s()?;
-    let a = matmul(x, w1, b, h, f);
-    let g = matmul(x, w3, b, h, f);
-    let gated: Vec<f32> = a.iter().zip(&g).map(|(av, gv)| silu(*av) * gv).collect();
-    let y = matmul(&gated, w2, b, f, h);
-    Ok(vec![PjRtBuffer::f32_buf(y, vec![b, h])])
+    let x = args[0].tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
+    let f = args[1].dims()[1];
+    let mut a = matmul_t(x.data(), args[1], b, h, f, [b, f])?;
+    let g = matmul_t(x.data(), args[2], b, h, f, [b, f])?;
+    // Gate in place: a <- silu(a) * g.
+    for (av, gv) in a.data_mut().iter_mut().zip(g.data()) {
+        *av = kern::silu(*av) * gv;
+    }
+    let y = matmul_t(a.data(), args[3], b, f, h, [b, h])?;
+    Ok(vec![PjRtBuffer::from_tensor(y)])
 }
 
 /// lm_head(h, ln_f, wlm) -> rms_norm(h) @ wlm
 fn lm_head(args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, XlaError> {
-    let x = args[0].f32s()?;
-    let (b, h) = (args[0].shape[0], args[0].shape[1]);
+    let x = args[0].tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
     let ln_f = args[1].f32s()?;
-    let wlm = args[2].f32s()?;
-    let v = args[2].shape[1];
-    let normed = rms_norm(x, ln_f, b, h);
-    let logits = matmul(&normed, wlm, b, h, v);
-    Ok(vec![PjRtBuffer::f32_buf(logits, vec![b, v])])
+    let v = args[2].dims()[1];
+    let mut normed = Tensor::uninit([b, h]);
+    kern::rms_norm_into(x.data(), ln_f, b, h, RMS_EPS, normed.data_mut());
+    let logits = matmul_t(normed.data(), args[2], b, h, v, [b, v])?;
+    Ok(vec![PjRtBuffer::from_tensor(logits)])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::modelcfg::{DType, IoSpec};
+    use crate::kvcache::{KvPool, RequestKv};
+    use crate::modelcfg::{DType, IoSpec, ModelSpec};
+    use crate::testing::prop;
+    use crate::util::rng::Pcg;
 
     fn io(name: &str, shape: Vec<usize>, dtype: DType) -> IoSpec {
         IoSpec { name: name.into(), shape, dtype }
@@ -479,12 +881,172 @@ mod tests {
         PjRtBuffer::f32_buf(data, shape)
     }
 
+    fn rand_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect()
+    }
+
+    #[test]
+    fn blocked_matmul_is_bitwise_equal_to_naive() {
+        // Ragged shapes straddling the tile sizes (IB=4, JB=64),
+        // including zero entries to exercise the naive skip path.
+        prop::check("matmul_wt == matmul_naive", 40, |rng, case| {
+            let n = rng.range_usize(1, 9);
+            let k = rng.range_usize(1, 130);
+            let m = rng.range_usize(1, 140);
+            let mut x = rand_vec(rng, n * k);
+            if case % 3 == 0 {
+                for v in x.iter_mut().step_by(3) {
+                    *v = 0.0;
+                }
+            }
+            let w = rand_vec(rng, k * m);
+            let naive = kern::matmul_naive(&x, &w, n, k, m);
+            let wt = kern::transpose(&w, k, m);
+            let mut blocked = vec![0.0f32; n * m];
+            kern::matmul_wt_into(&x, &wt, n, k, m, &mut blocked);
+            assert!(
+                naive.iter().zip(&blocked).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "blocked matmul diverged at n={n} k={k} m={m}"
+            );
+        });
+    }
+
+    #[test]
+    fn rms_norm_matches_scalar_reference() {
+        prop::check("rms_norm_into == scalar", 20, |rng, _| {
+            let n = rng.range_usize(1, 6);
+            let h = rng.range_usize(1, 70);
+            let x = rand_vec(rng, n * h);
+            let gamma = rand_vec(rng, h);
+            let mut out = vec![0.0f32; n * h];
+            kern::rms_norm_into(&x, &gamma, n, h, RMS_EPS, &mut out);
+            for i in 0..n {
+                let row = &x[i * h..(i + 1) * h];
+                let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+                let inv = 1.0 / (ms + RMS_EPS).sqrt();
+                for j in 0..h {
+                    assert_eq!(out[i * h + j].to_bits(), (row[j] * inv * gamma[j]).to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn paged_decode_is_bitwise_equal_to_dense() {
+        let m = ModelSpec {
+            layers: 1,
+            hidden: 8,
+            heads: 2,
+            kv_heads: 1,
+            head_dim: 4,
+            ffn: 16,
+            experts: 2,
+            top_k: 1,
+            vocab: 16,
+            max_seq: 12,
+        };
+        let spec = ArtifactSpec {
+            name: "attn_decode_b2".into(),
+            kind: ArtifactKind::AttnDecode,
+            bucket: 2,
+            file: "x.hlo".into(),
+            inputs: vec![
+                io("x", vec![2, 8], DType::F32),
+                io("k_cache", vec![2, 12, 1, 4], DType::F32),
+                io("v_cache", vec![2, 12, 1, 4], DType::F32),
+                io("pos", vec![2], DType::I32),
+            ],
+            outputs: vec![],
+        };
+        prop::check("paged attn == dense attn", 12, |rng, _| {
+            // Paged KV with a small page size so sequences span pages.
+            let pool = KvPool::with_page_tokens(&m, 4);
+            let seg = m.kv_heads * m.head_dim;
+            let len0 = rng.range_usize(0, 11);
+            let len1 = rng.range_usize(0, 11);
+            let mut kvs = [RequestKv::new(&m, &pool), RequestKv::new(&m, &pool)];
+            for (r, &len) in kvs.iter_mut().zip(&[len0, len1]) {
+                for t in 0..len {
+                    r.write(0, t, &rand_vec(rng, seg), &rand_vec(rng, seg));
+                }
+                r.set_len(len);
+            }
+            // Dense copies of the same state.
+            let row = m.max_seq * seg;
+            let mut kc = vec![0.0f32; 2 * row];
+            let mut vc = vec![0.0f32; 2 * row];
+            for (i, r) in kvs.iter().enumerate() {
+                let (ks, vs) = (&mut kc[i * row..(i + 1) * row], &mut vc[i * row..(i + 1) * row]);
+                r.copy_layer_into(0, ks, vs);
+            }
+            let x = fbuf(rand_vec(rng, 2 * m.hidden), vec![2, m.hidden]);
+            let wq = fbuf(rand_vec(rng, 64), vec![8, 8]);
+            let wk = fbuf(rand_vec(rng, 32), vec![8, 4]);
+            let wv = fbuf(rand_vec(rng, 32), vec![8, 4]);
+            let wo = fbuf(rand_vec(rng, 64), vec![8, 8]);
+            let ln1 = fbuf(vec![1.0; 8], vec![8]);
+            let ln2 = fbuf(vec![1.0; 8], vec![8]);
+            let pos = i32::wrap(&[len0 as i32, len1 as i32], &[2]);
+            let kv_shape = vec![2, m.max_seq, m.kv_heads, m.head_dim];
+            let kcb = fbuf(kc, kv_shape.clone());
+            let vcb = fbuf(vc, kv_shape);
+            let dense = attn_decode(
+                &spec,
+                &[&x, &kcb, &vcb, &pos, &wq, &wk, &wv, &wo, &ln1, &ln2],
+            )
+            .unwrap();
+            let view = crate::kvcache::PagedKvView {
+                pool: pool.clone(),
+                tables: Arc::new(vec![
+                    kvs[0].page_table(0).to_vec(),
+                    kvs[1].page_table(0).to_vec(),
+                ]),
+            };
+            let paged_buf = PjRtBuffer::paged(view);
+            let paged = attn_decode(
+                &spec,
+                &[&x, &paged_buf, &pos, &wq, &wk, &wv, &wo, &ln1, &ln2],
+            )
+            .unwrap();
+            for (a, b) in dense.iter().zip(&paged) {
+                let (da, db) = (a.f32s().unwrap(), b.f32s().unwrap());
+                assert!(
+                    da.iter().zip(db).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "paged decode diverged (len0={len0}, len1={len1})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn weight_transpose_is_computed_once() {
+        let w = fbuf(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let a = w.wt_slice(2, 3).unwrap().as_ptr();
+        assert_eq!(w.wt_slice(2, 3).unwrap(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let b = w.wt_slice(2, 3).unwrap().as_ptr();
+        assert_eq!(a, b, "transpose must be memoized");
+        assert!(w.wt_slice(3, 2).is_err(), "shape mismatch must be rejected");
+    }
+
+    #[test]
+    fn readback_shares_storage_end_to_end() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let buf = PjRtClient.buffer_from_tensor(t.clone());
+        let lit = buf.to_literal_sync().unwrap();
+        let back = lit.into_tensor().unwrap();
+        assert!(back.shares_storage(&t), "upload + readback must be copy-free");
+        assert_eq!(back, t);
+    }
+
     #[test]
     fn router_rows_are_distributions() {
         let g = fbuf(vec![0.5, -1.0, 2.0, 0.0, 0.25, -0.5], vec![2, 3]);
-        let wg = fbuf(vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6, 0.7, 0.8, -0.9, 1.0, 1.1, -1.2], vec![3, 4]);
+        let wg = fbuf(
+            vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6, 0.7, 0.8, -0.9, 1.0, 1.1, -1.2],
+            vec![3, 4],
+        );
         let out = router(&[&g, &wg]).unwrap();
-        assert_eq!(out[0].shape, vec![2, 4]);
+        assert_eq!(out[0].dims(), &[2, 4]);
         let probs = out[0].f32s().unwrap();
         for i in 0..2 {
             let sum: f32 = probs[i * 4..(i + 1) * 4].iter().sum();
@@ -574,7 +1136,7 @@ mod tests {
     #[test]
     fn tuple_literal_roundtrip() {
         let parts = vec![fbuf(vec![1.0, 2.0], vec![2]), fbuf(vec![3.0], vec![1])];
-        let buf = PjRtBuffer { data: BufData::Tuple(parts), shape: vec![] };
+        let buf = PjRtBuffer::wrap(BufData::Tuple(parts));
         let lits = buf.to_literal_sync().unwrap().to_tuple().unwrap();
         assert_eq!(lits.len(), 2);
         assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);

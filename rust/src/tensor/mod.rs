@@ -3,132 +3,288 @@
 //! in the AOT-compiled XLA executables; this type only carries data,
 //! assembles batches, and applies the few elementwise combines the MoE
 //! aggregation needs (residual adds, gate-weighted sums).
+//!
+//! Storage is reference-counted with an (offset, len) window, so row
+//! slicing ([`Tensor::row_tensor`], [`Tensor::view_rows`]) and `clone()`
+//! never copy floats: a dispatch entry's token rows, an EW return's
+//! output rows, and a device reply all share one allocation end to end
+//! (DESIGN.md §10). Mutation goes through [`Tensor::data_mut`], which is
+//! in-place on uniquely-owned storage and copy-on-write otherwise, so
+//! shared views keep value semantics. Dropped storage is recycled
+//! through the [`scratch`] arena: a warm steady-state decode step
+//! performs zero heap allocations on the tensor path.
 
 pub mod ops;
+pub mod scratch;
 
-/// Dense row-major f32 tensor.
-#[derive(Debug, Clone, PartialEq)]
+use scratch::Storage;
+use std::sync::Arc;
+
+/// Maximum tensor rank (largest shape in the system is [B, S, kv, d]).
+pub const MAX_RANK: usize = 4;
+
+/// Inline shape (no heap allocation per tensor/view).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct ShapeDims {
+    dims: [usize; MAX_RANK],
+    rank: u8,
+}
+
+impl ShapeDims {
+    pub fn from_slice(s: &[usize]) -> ShapeDims {
+        assert!(s.len() <= MAX_RANK, "tensor rank {} exceeds {MAX_RANK}", s.len());
+        let mut dims = [0usize; MAX_RANK];
+        dims[..s.len()].copy_from_slice(s);
+        ShapeDims { dims, rank: s.len() as u8 }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+
+    /// Element count (1 for rank 0).
+    pub fn numel(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+}
+
+impl std::fmt::Debug for ShapeDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl From<Vec<usize>> for ShapeDims {
+    fn from(v: Vec<usize>) -> ShapeDims {
+        ShapeDims::from_slice(&v)
+    }
+}
+
+impl From<&[usize]> for ShapeDims {
+    fn from(v: &[usize]) -> ShapeDims {
+        ShapeDims::from_slice(v)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for ShapeDims {
+    fn from(v: [usize; N]) -> ShapeDims {
+        ShapeDims::from_slice(&v)
+    }
+}
+
+/// Dense row-major f32 tensor (possibly a window into shared storage).
+#[derive(Clone)]
 pub struct Tensor {
-    shape: Vec<usize>,
-    data: Vec<f32>,
+    shape: ShapeDims,
+    storage: Arc<Storage>,
+    /// Window into `storage.data`: elements [offset, offset + len).
+    offset: usize,
+    len: usize,
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        // Last reference to a recyclable storage: park the whole Arc in
+        // the scratch arena instead of freeing it (zero-alloc steady
+        // state). `strong_count == 1` means no other thread can reach
+        // it; *moving* our ref out (a shared placeholder takes its
+        // place) keeps that true while the pool holds it — parking a
+        // clone would let a racing take() pop a block whose second ref
+        // is still being dropped here.
+        if self.storage.recyclable && Arc::strong_count(&self.storage) == 1 {
+            let st = std::mem::replace(&mut self.storage, scratch::empty());
+            scratch::recycle(st);
+        }
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tensor")
+            .field("shape", &self.shape)
+            .field("data", &self.data())
+            .finish()
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape() == other.shape() && self.data() == other.data()
+    }
 }
 
 impl Tensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+    pub fn new(shape: impl Into<ShapeDims>, data: Vec<f32>) -> Tensor {
+        let shape = shape.into();
         assert_eq!(
-            shape.iter().product::<usize>(),
+            shape.numel(),
             data.len(),
             "shape {:?} does not match data length {}",
             shape,
             data.len()
         );
-        Tensor { shape, data }
+        let len = data.len();
+        Tensor {
+            shape,
+            storage: Arc::new(Storage { data, recyclable: true }),
+            offset: 0,
+            len,
+        }
     }
 
-    pub fn zeros(shape: Vec<usize>) -> Tensor {
-        let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+    /// Zero-filled tensor from the scratch arena (recycled on drop).
+    pub fn zeros(shape: impl Into<ShapeDims>) -> Tensor {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor { shape, storage: scratch::take_zeroed(n), offset: 0, len: n }
+    }
+
+    /// Tensor with *unspecified* contents from the scratch arena. Hot-path
+    /// constructor for kernel outputs that overwrite every element; use
+    /// [`Tensor::zeros`] unless the full write is obvious at the call site.
+    pub fn uninit(shape: impl Into<ShapeDims>) -> Tensor {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor { shape, storage: scratch::take(n), offset: 0, len: n }
     }
 
     pub fn scalar(v: f32) -> Tensor {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor::new([0usize; 0], vec![v])
     }
 
     pub fn shape(&self) -> &[usize] {
-        &self.shape
+        self.shape.as_slice()
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len == 0
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.storage.data[self.offset..self.offset + self.len]
     }
 
+    /// Mutable access: in place when this is the sole owner, copy-on-write
+    /// (into fresh scratch-arena storage) when the storage is shared.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        if Arc::get_mut(&mut self.storage).is_none() {
+            let mut st = scratch::take(self.len);
+            Arc::get_mut(&mut st)
+                .expect("fresh scratch storage is unique")
+                .data
+                .copy_from_slice(self.data());
+            self.storage = st;
+            self.offset = 0;
+        }
+        let (off, len) = (self.offset, self.len);
+        let st = Arc::get_mut(&mut self.storage).expect("unique after copy-on-write");
+        &mut st.data[off..off + len]
     }
 
-    pub fn into_data(self) -> Vec<f32> {
-        self.data
+    /// Extract the underlying buffer; zero-copy when this tensor is the
+    /// sole owner of a full (non-view) storage, a copy otherwise.
+    pub fn into_data(mut self) -> Vec<f32> {
+        if self.offset == 0 && self.len == self.storage.data.len() {
+            if let Some(st) = Arc::get_mut(&mut self.storage) {
+                return std::mem::take(&mut st.data);
+            }
+        }
+        self.data().to_vec()
     }
 
     pub fn nbytes(&self) -> usize {
-        self.data.len() * 4
+        self.len * 4
+    }
+
+    /// True when two tensors share one storage allocation (zero-copy
+    /// discipline assertions, DESIGN.md §10).
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.storage, &other.storage)
     }
 
     /// Reinterpret with a new shape of identical element count.
-    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
-        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+    pub fn reshape(mut self, shape: impl Into<ShapeDims>) -> Tensor {
+        let shape = shape.into();
+        assert_eq!(shape.numel(), self.len);
         self.shape = shape;
         self
     }
 
     /// Number of rows when viewed as [rows, row_len].
     pub fn rows(&self) -> usize {
-        assert!(!self.shape.is_empty());
-        self.shape[0]
+        assert!(!self.shape().is_empty());
+        self.shape()[0]
     }
 
     /// Elements per leading row.
     pub fn row_len(&self) -> usize {
-        assert!(!self.shape.is_empty());
-        self.shape[1..].iter().product()
+        assert!(!self.shape().is_empty());
+        self.shape()[1..].iter().product()
     }
 
     /// Borrow row `i` (viewing the tensor as [rows, row_len]).
     pub fn row(&self, i: usize) -> &[f32] {
         let rl = self.row_len();
-        &self.data[i * rl..(i + 1) * rl]
+        &self.data()[i * rl..(i + 1) * rl]
     }
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let rl = self.row_len();
-        &mut self.data[i * rl..(i + 1) * rl]
+        &mut self.data_mut()[i * rl..(i + 1) * rl]
     }
 
-    /// Copy row `i` out as an owned [1, row_len...] tensor.
+    /// Row `i` as a [1, row_len...] tensor — a zero-copy view sharing
+    /// this tensor's storage.
     pub fn row_tensor(&self, i: usize) -> Tensor {
-        let mut shape = self.shape.clone();
-        shape[0] = 1;
-        Tensor::new(shape, self.row(i).to_vec())
+        self.view_rows(i, 1)
+    }
+
+    /// Rows [start, start + n) as a zero-copy view.
+    pub fn view_rows(&self, start: usize, n: usize) -> Tensor {
+        let rl = self.row_len();
+        assert!(start + n <= self.rows());
+        let mut dims = self.shape;
+        dims.dims[0] = n;
+        Tensor {
+            shape: dims,
+            storage: self.storage.clone(),
+            offset: self.offset + start * rl,
+            len: n * rl,
+        }
     }
 
     /// Stack rows (each [row_len]) into [rows.len(), row_len].
     pub fn from_rows(rows: &[&[f32]]) -> Tensor {
         assert!(!rows.is_empty());
         let rl = rows[0].len();
-        let mut data = Vec::with_capacity(rows.len() * rl);
-        for r in rows {
+        let mut t = Tensor::uninit([rows.len(), rl]);
+        let data = t.data_mut();
+        for (i, r) in rows.iter().enumerate() {
             assert_eq!(r.len(), rl, "ragged rows");
-            data.extend_from_slice(r);
+            data[i * rl..(i + 1) * rl].copy_from_slice(r);
         }
-        Tensor::new(vec![rows.len(), rl], data)
+        t
     }
 
-    /// Take the first `n` leading rows as an owned tensor (un-padding).
+    /// Take the first `n` leading rows (un-padding) — a zero-copy view.
     pub fn take_rows(&self, n: usize) -> Tensor {
         assert!(n <= self.rows());
-        let rl = self.row_len();
-        let mut shape = self.shape.clone();
-        shape[0] = n;
-        Tensor::new(shape, self.data[..n * rl].to_vec())
+        self.view_rows(0, n)
     }
 
     /// Pad with zero rows up to `n` leading rows (bucketing).
     pub fn pad_rows(&self, n: usize) -> Tensor {
         assert!(n >= self.rows());
         let rl = self.row_len();
-        let mut data = self.data.clone();
-        data.resize(n * rl, 0.0);
-        let mut shape = self.shape.clone();
-        shape[0] = n;
-        Tensor::new(shape, data)
+        let mut dims = self.shape;
+        dims.dims[0] = n;
+        let mut t = Tensor::zeros(dims);
+        t.data_mut()[..self.len].copy_from_slice(self.data());
+        t
     }
 }
 
@@ -176,5 +332,59 @@ mod tests {
         assert_eq!(t.row(1), &[4., 5., 6., 7.]);
         let r = t.row_tensor(1);
         assert_eq!(r.shape(), &[1, 1, 4]);
+    }
+
+    #[test]
+    fn row_views_share_storage_and_cow_on_write() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut v = t.row_tensor(1);
+        assert!(v.shares_storage(&t), "row view must not copy");
+        assert_eq!(v.data(), &[3., 4.]);
+        // Mutating the shared view copies, leaving the parent intact.
+        v.data_mut()[0] = 9.0;
+        assert!(!v.shares_storage(&t));
+        assert_eq!(t.row(1), &[3., 4.]);
+        assert_eq!(v.data(), &[9., 4.]);
+    }
+
+    #[test]
+    fn clone_is_shallow_until_mutated() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let mut b = a.clone();
+        assert!(b.shares_storage(&a));
+        b.data_mut()[2] = 7.0;
+        assert_eq!(a.data(), &[1., 2., 3.]);
+        assert_eq!(b.data(), &[1., 2., 7.]);
+    }
+
+    #[test]
+    fn unique_mutation_is_in_place() {
+        let mut a = Tensor::zeros(vec![4]);
+        let p = a.data().as_ptr();
+        a.data_mut()[1] = 5.0;
+        assert_eq!(a.data().as_ptr(), p, "sole owner must mutate in place");
+        assert_eq!(a.data(), &[0., 5., 0., 0.]);
+    }
+
+    #[test]
+    fn into_data_steals_unique_full_storage() {
+        let a = Tensor::new(vec![2], vec![8., 9.]);
+        assert_eq!(a.into_data(), vec![8., 9.]);
+        // Views copy.
+        let b = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(b.row_tensor(0).into_data(), vec![1., 2.]);
+        assert_eq!(b.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn scratch_recycling_round_trip() {
+        scratch::warm();
+        // Unusual size: no other (parallel) test touches this class.
+        let a = Tensor::zeros(vec![1237]);
+        let p = a.data().as_ptr();
+        drop(a);
+        let b = Tensor::zeros(vec![1237]);
+        assert_eq!(b.data().as_ptr(), p, "storage must be recycled by size");
+        assert!(b.data().iter().all(|&x| x == 0.0), "recycled zeros stay zero");
     }
 }

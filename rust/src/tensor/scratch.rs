@@ -1,0 +1,207 @@
+//! Scratch arena: recycled tensor storage for the decode hot path.
+//!
+//! Every per-step buffer on the decode path — kernel outputs, batch
+//! staging, attention scratch — is an exact-size f32 buffer whose
+//! lifetime is one step. Allocating them fresh each step made the
+//! allocator the hottest "kernel" in the profile; this module keeps a
+//! process-wide pool of `Arc<Storage>` blocks keyed by element count, so
+//! a steady-state step recycles the same allocations forever.
+//!
+//! Why process-wide and not thread-local: tensors cross threads (AW
+//! thread → device thread → back; EW return rows → REFE). A per-thread
+//! arena would leak from the producing thread and starve the consuming
+//! one. The pool is a leaf mutex (never held across any other lock or
+//! user code), and page grabs are rare relative to the float traffic
+//! they carry.
+//!
+//! Recycling happens in `Tensor::drop`: when the last reference to a
+//! recyclable storage dies, the whole `Arc<Storage>` (control block and
+//! all) is parked here instead of being freed, so a warm steady state
+//! performs literally zero heap allocations per step — the property
+//! `rust/tests/alloc.rs` pins with a counting global allocator.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One reference-counted storage block backing [`super::Tensor`] data.
+/// `recyclable` is false for user-constructed tensors whose buffer was
+/// handed to us (`Tensor::new`) and may be reclaimed via `into_data`.
+pub(crate) struct Storage {
+    pub(crate) data: Vec<f32>,
+    pub(crate) recyclable: bool,
+}
+
+/// Exact-size pool of idle storage blocks. The crate hot path uses the
+/// process-shared instance ([`warm`], [`shared_stats`]); tensors check
+/// blocks in and out through the crate-internal take/recycle functions.
+pub struct ScratchArena {
+    /// len -> idle blocks of exactly that many floats.
+    classes: BTreeMap<usize, Vec<Arc<Storage>>>,
+    held_floats: usize,
+    cap_floats: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Default retention cap: 1<<24 floats = 64 MiB of recycled buffers.
+pub const DEFAULT_CAP_FLOATS: usize = 1 << 24;
+
+/// Per-size-class cap on idle blocks (bounds pathological churn).
+const CLASS_CAP: usize = 64;
+
+impl ScratchArena {
+    pub fn new(cap_floats: usize) -> ScratchArena {
+        ScratchArena {
+            classes: BTreeMap::new(),
+            held_floats: 0,
+            cap_floats,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// (hits, misses) of `take` calls — bench/telemetry.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    fn take(&mut self, len: usize) -> Arc<Storage> {
+        if let Some(list) = self.classes.get_mut(&len) {
+            if let Some(st) = list.pop() {
+                self.held_floats -= len;
+                self.hits += 1;
+                debug_assert_eq!(Arc::strong_count(&st), 1);
+                return st;
+            }
+        }
+        self.misses += 1;
+        Arc::new(Storage { data: vec![0.0; len], recyclable: true })
+    }
+
+    fn put(&mut self, st: Arc<Storage>) {
+        let len = st.data.len();
+        if len == 0 || self.held_floats + len > self.cap_floats {
+            return; // dropped: over cap (or degenerate)
+        }
+        let list = self.classes.entry(len).or_default();
+        if list.len() >= CLASS_CAP {
+            return;
+        }
+        self.held_floats += len;
+        list.push(st);
+    }
+}
+
+fn shared() -> &'static Mutex<ScratchArena> {
+    static POOL: OnceLock<Mutex<ScratchArena>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(ScratchArena::new(DEFAULT_CAP_FLOATS)))
+}
+
+/// Check out a storage block of exactly `len` floats with *unspecified*
+/// contents (strong count 1). Callers must overwrite the region they
+/// expose; [`take_zeroed`] is the safe default.
+pub(crate) fn take(len: usize) -> Arc<Storage> {
+    match shared().lock() {
+        Ok(mut pool) => pool.take(len),
+        // Poisoned (a test panicked mid-operation): degrade to fresh.
+        Err(_) => Arc::new(Storage { data: vec![0.0; len], recyclable: true }),
+    }
+}
+
+/// Check out a zero-filled storage block of exactly `len` floats.
+pub(crate) fn take_zeroed(len: usize) -> Arc<Storage> {
+    let mut st = take(len);
+    if let Some(s) = Arc::get_mut(&mut st) {
+        s.data.fill(0.0);
+    }
+    st
+}
+
+/// Park a storage block for reuse. Called from `Tensor::drop` when the
+/// last reference to a recyclable storage dies; `st` must be the sole
+/// strong reference (the caller *moves* its ref in — see
+/// [`empty`] for why a clone would race).
+pub(crate) fn recycle(st: Arc<Storage>) {
+    debug_assert_eq!(Arc::strong_count(&st), 1, "recycled block must be sole-owned");
+    if let Ok(mut pool) = shared().lock() {
+        pool.put(st);
+    }
+}
+
+/// Shared placeholder storage: `Tensor::drop` swaps this in so it can
+/// *move* its sole reference into the pool. Parking a clone instead
+/// would briefly leave the pool holding a block with two strong refs —
+/// a racing `take` on another thread could then pop it, fail
+/// `Arc::get_mut`, skip the zero-fill, and hand out stale floats.
+pub(crate) fn empty() -> Arc<Storage> {
+    static EMPTY: OnceLock<Arc<Storage>> = OnceLock::new();
+    EMPTY
+        .get_or_init(|| Arc::new(Storage { data: Vec::new(), recyclable: false }))
+        .clone()
+}
+
+/// Shared-pool hit/miss counters (bench/telemetry; approximate under
+/// concurrency).
+pub fn shared_stats() -> (u64, u64) {
+    match shared().lock() {
+        Ok(pool) => pool.stats(),
+        Err(_) => (0, 0),
+    }
+}
+
+/// Pre-touch the shared pool (and the drop placeholder) so their own
+/// spines are allocated before an allocation-counting region starts.
+pub fn warm() {
+    let _ = empty();
+    let a = take(1);
+    recycle(a);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_reuses_the_same_block() {
+        let mut arena = ScratchArena::new(1024);
+        let a = arena.take(16);
+        let ptr = a.data.as_ptr();
+        arena.put(a);
+        let b = arena.take(16);
+        assert_eq!(b.data.as_ptr(), ptr, "same block must come back");
+        let (hits, misses) = arena.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn size_classes_do_not_mix() {
+        let mut arena = ScratchArena::new(1024);
+        let a = arena.take(16);
+        arena.put(a);
+        let b = arena.take(32);
+        assert_eq!(b.data.len(), 32);
+        let (hits, misses) = arena.stats();
+        assert_eq!((hits, misses), (0, 2));
+    }
+
+    #[test]
+    fn cap_bounds_retention() {
+        let mut arena = ScratchArena::new(8);
+        arena.put(Arc::new(Storage { data: vec![0.0; 6], recyclable: true }));
+        // 6 + 6 > 8: the second block is dropped, not parked.
+        arena.put(Arc::new(Storage { data: vec![0.0; 6], recyclable: true }));
+        let a = arena.take(6);
+        let b = arena.take(6);
+        let (hits, misses) = arena.stats();
+        assert_eq!((hits, misses), (1, 1));
+        drop((a, b));
+    }
+
+    #[test]
+    fn shared_pool_round_trip() {
+        warm();
+        let st = take_zeroed(8);
+        assert!(st.data.iter().all(|&x| x == 0.0));
+        recycle(st);
+    }
+}

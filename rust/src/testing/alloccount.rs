@@ -1,0 +1,83 @@
+//! Counting global allocator: the measurement side of the zero-alloc
+//! decode-hot-path contract (DESIGN.md §10).
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! allocation (alloc, alloc_zeroed, and growth reallocs). It is **gated
+//! to dedicated binaries**: this module only defines the type — a test
+//! or bench binary opts in by declaring
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: tarragon::testing::alloccount::CountingAlloc =
+//!     tarragon::testing::alloccount::CountingAlloc::new();
+//! ```
+//!
+//! (`rust/tests/alloc.rs` and `rust/benches/decode.rs` do exactly this).
+//! The library itself never installs it, so the normal test/bench tiers
+//! pay nothing.
+//!
+//! Counters are process-global atomics: run measured regions on one
+//! thread (or in one `#[test]` body) to keep them attributable.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts allocations.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[allow(clippy::new_without_default)]
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+}
+
+// SAFETY: defers every operation to `System`; only adds atomic counter
+// updates, which allocate nothing.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A growth realloc is a fresh reservation; count it like one.
+        if new_size > layout.size() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocations since process start (meaningful only when a binary
+/// installed [`CountingAlloc`] as its `#[global_allocator]`).
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested since process start.
+pub fn allocated_bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+/// Allocations performed by `f` (delta around the call).
+pub fn allocations_during<T>(f: impl FnOnce() -> T) -> (u64, T) {
+    let before = allocation_count();
+    let out = f();
+    (allocation_count() - before, out)
+}

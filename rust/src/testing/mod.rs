@@ -5,6 +5,7 @@
 //! `artifacts/`, and the virtual-clock failure-scenario harness
 //! ([`scenario`]).
 
+pub mod alloccount;
 pub mod bench;
 pub mod prop;
 pub mod scenario;

@@ -1,0 +1,443 @@
+//! Allocation contract of the decode hot path (DESIGN.md §10), pinned
+//! with a counting `#[global_allocator]`:
+//!
+//! 1. a steady-state decode step — embed → RMSNorm/QKV/RoPE → paged
+//!    attention → router → top-k select → dispatch build (row views) →
+//!    EW bucket staging → expert FFN → return views → slot-ordered
+//!    accumulation → LM head — performs **zero** heap allocations once
+//!    arenas and capacities are warm;
+//! 2. checkpoint segment emit and request restore stay **bounded**
+//!    (O(1) allocations per segment / per page, never per float).
+//!
+//! The harness drives the same public kernels and data structures the
+//! cluster hot path uses (`runtime::xla::kern`, `PagedKv` reads of the
+//! `KvPool`, `proto::DispatchEntry` row views, `tensor` scratch arena),
+//! single-threaded so the process-global counters are attributable.
+//!
+//! **Scope.** The hard zero covers the decode *data path* — everything
+//! whose cost scales with hidden dim, context, or batch floats. The
+//! threaded coordinator adds bounded per-step *control metadata* on
+//! top (page-table clones in `gather_paged`, `DispatchEntry` shells,
+//! channel nodes): O(batch x experts) words per layer, independent of
+//! tensor sizes — measured as allocs/token by `benches/decode.rs`,
+//! which runs `gather_paged` in its step loop. See DESIGN.md §10.
+//!
+//! Everything lives in ONE #[test]: a second parallel test would
+//! pollute the global allocation counters.
+
+use std::sync::Arc;
+use tarragon::kvcache::{KvPool, PageId, PoolConfig, RequestKv};
+use tarragon::modelcfg::ModelSpec;
+use tarragon::proto::DispatchEntry;
+use tarragon::runtime::xla::kern;
+use tarragon::tensor::{ops, scratch, Tensor};
+use tarragon::testing::alloccount::{allocations_during, CountingAlloc};
+use tarragon::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const RMS_EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 10000.0;
+
+// Tiny decode cluster: batch 2, 2 layers, GQA 2:1, 4 experts / top-2.
+const B: usize = 2;
+const LAYERS: usize = 2;
+const H: usize = 32;
+const HEADS: usize = 2;
+const KV: usize = 1;
+const D: usize = 16;
+const KVD: usize = KV * D;
+const F: usize = 64;
+const E: usize = 4;
+const VOCAB: usize = 64;
+const S_MAX: usize = 64;
+const PAGE_TOKENS: usize = 16;
+const EXPERT_BUCKET: usize = 4;
+const INIT_LEN: usize = 8;
+const MAX_STEPS: usize = 24;
+
+fn mspec() -> ModelSpec {
+    ModelSpec {
+        layers: LAYERS,
+        hidden: H,
+        heads: HEADS,
+        kv_heads: KV,
+        head_dim: D,
+        ffn: F,
+        experts: E,
+        top_k: 2,
+        vocab: VOCAB,
+        max_seq: S_MAX,
+    }
+}
+
+fn rand_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * 0.4).collect()
+}
+
+/// A weight and its precomputed transpose (the executor memoizes this
+/// per resident buffer; the harness holds it directly).
+struct Wt {
+    t: Vec<f32>,
+}
+
+fn wt(rng: &mut Pcg, k: usize, m: usize) -> Wt {
+    let w = rand_vec(rng, k * m);
+    Wt { t: kern::transpose(&w, k, m) }
+}
+
+struct Harness {
+    // weights (transposed where matmul'd)
+    embed: Vec<f32>,
+    wq: Vec<Wt>,
+    wk: Vec<Wt>,
+    wv: Vec<Wt>,
+    wo: Vec<Wt>,
+    ln1: Vec<Vec<f32>>,
+    ln2: Vec<Vec<f32>>,
+    wg: Vec<Wt>,
+    w1: Vec<Vec<Wt>>, // [layer][expert]
+    w3: Vec<Vec<Wt>>,
+    w2: Vec<Vec<Wt>>,
+    ln_f: Vec<f32>,
+    lm: Wt,
+    freqs: Vec<f32>,
+    // KV state (pages reserved up front: steady state never allocates)
+    pool: Arc<KvPool>,
+    kvs: Vec<RequestKv>,
+    tables: Vec<Vec<Vec<PageId>>>, // [layer][row] page table snapshot
+    pos: Vec<i32>,
+    len: usize,
+    next_tok: Vec<u32>,
+    // reusable per-step buffers (capacities retained across steps)
+    groups: Vec<Vec<(usize, f32)>>, // [expert] -> (row, gate)
+    slot_info: Vec<(usize, f32)>,
+    slot_out: Vec<Option<Tensor>>,
+    dispatch: Vec<DispatchEntry>,
+    ret: Vec<DispatchEntry>,
+}
+
+impl Harness {
+    fn new() -> Harness {
+        let m = mspec();
+        let mut rng = Pcg::seeded(0xA110C);
+        let pool = KvPool::new(PoolConfig { page_tokens: PAGE_TOKENS, seg: KVD });
+        let mut kvs: Vec<RequestKv> = (0..B).map(|_| RequestKv::new(&m, &pool)).collect();
+        for r in kvs.iter_mut() {
+            // Reserve every page the run will touch, then fill the
+            // initial context — decode steps only write into slots.
+            r.reserve(INIT_LEN + MAX_STEPS + 1);
+            for layer in 0..LAYERS {
+                for t in 0..INIT_LEN {
+                    let k = rand_vec(&mut rng, KVD);
+                    let v = rand_vec(&mut rng, KVD);
+                    r.write(layer, t, &k, &v);
+                }
+            }
+            r.set_len(INIT_LEN);
+        }
+        let tables: Vec<Vec<Vec<PageId>>> = (0..LAYERS)
+            .map(|layer| kvs.iter().map(|r| r.page_table(layer).to_vec()).collect())
+            .collect();
+        let per_layer = |rng: &mut Pcg, k: usize, mm: usize| -> Vec<Wt> {
+            (0..LAYERS).map(|_| wt(rng, k, mm)).collect()
+        };
+        let per_expert = |rng: &mut Pcg, k: usize, mm: usize| -> Vec<Vec<Wt>> {
+            (0..LAYERS).map(|_| (0..E).map(|_| wt(rng, k, mm)).collect()).collect()
+        };
+        Harness {
+            embed: rand_vec(&mut rng, VOCAB * H),
+            wq: per_layer(&mut rng, H, H),
+            wk: per_layer(&mut rng, H, KVD),
+            wv: per_layer(&mut rng, H, KVD),
+            wo: per_layer(&mut rng, H, H),
+            ln1: (0..LAYERS).map(|_| vec![1.0; H]).collect(),
+            ln2: (0..LAYERS).map(|_| vec![1.0; H]).collect(),
+            wg: per_layer(&mut rng, H, E),
+            w1: per_expert(&mut rng, H, F),
+            w3: per_expert(&mut rng, H, F),
+            w2: per_expert(&mut rng, F, H),
+            ln_f: vec![1.0; H],
+            lm: wt(&mut rng, H, VOCAB),
+            freqs: kern::rope_freqs(D, ROPE_THETA),
+            pool,
+            kvs,
+            tables,
+            pos: vec![INIT_LEN as i32; B],
+            len: INIT_LEN,
+            next_tok: vec![3; B],
+            // Worst-case capacities up front: an expert can receive every
+            // row, and routing varies step to step — capacity growth mid-
+            // measurement would count as an allocation.
+            groups: (0..E).map(|_| Vec::with_capacity(B)).collect(),
+            slot_info: Vec::with_capacity(B * 2),
+            slot_out: Vec::with_capacity(B * 2),
+            dispatch: (0..E)
+                .map(|e| DispatchEntry {
+                    expert: e as u16,
+                    rows: Vec::with_capacity(B),
+                    slots: Vec::with_capacity(B),
+                })
+                .collect(),
+            ret: (0..E)
+                .map(|e| DispatchEntry {
+                    expert: e as u16,
+                    rows: Vec::with_capacity(B),
+                    slots: Vec::with_capacity(B),
+                })
+                .collect(),
+        }
+    }
+
+    /// One full decode step over the AW→REFE→EW→REFE→AW data path.
+    fn step(&mut self) {
+        assert!(self.len < INIT_LEN + MAX_STEPS, "harness exceeded reserved pages");
+        // ---- AW: embed previous tokens --------------------------------
+        let mut x = Tensor::uninit([B, H]);
+        {
+            let xd = x.data_mut();
+            for i in 0..B {
+                let tok = self.next_tok[i] as usize;
+                xd[i * H..(i + 1) * H].copy_from_slice(&self.embed[tok * H..(tok + 1) * H]);
+            }
+        }
+        for layer in 0..LAYERS {
+            // ---- attention (paged reads, blocked matmuls) -------------
+            let mut n_t = Tensor::uninit([B, H]);
+            kern::rms_norm_into(x.data(), &self.ln1[layer], B, H, RMS_EPS, n_t.data_mut());
+            let mut q = Tensor::uninit([B, H]);
+            kern::matmul_wt_into(n_t.data(), &self.wq[layer].t, B, H, H, q.data_mut());
+            let mut k_new = Tensor::uninit([B, KVD]);
+            kern::matmul_wt_into(n_t.data(), &self.wk[layer].t, B, H, KVD, k_new.data_mut());
+            let mut v_new = Tensor::uninit([B, KVD]);
+            kern::matmul_wt_into(n_t.data(), &self.wv[layer].t, B, H, KVD, v_new.data_mut());
+            let pos = &self.pos;
+            kern::rope_with_freqs(q.data_mut(), B, HEADS, D, &self.freqs, |i| pos[i] as f32);
+            kern::rope_with_freqs(k_new.data_mut(), B, KV, D, &self.freqs, |i| pos[i] as f32);
+            let mut attn = Tensor::zeros([B, H]);
+            let mut scores = Tensor::uninit([S_MAX]);
+            {
+                let read = self.pool.read();
+                let src = kern::PagedKv {
+                    read: &read,
+                    tables: self.tables[layer].as_slice(),
+                    d: D,
+                };
+                kern::attn_decode_into(
+                    q.data(),
+                    k_new.data(),
+                    v_new.data(),
+                    &self.pos,
+                    &src,
+                    B,
+                    HEADS,
+                    KV,
+                    D,
+                    S_MAX,
+                    scores.data_mut(),
+                    attn.data_mut(),
+                );
+            }
+            // Append this step's KV (read lock released above).
+            for i in 0..B {
+                self.kvs[i].write(layer, self.len, k_new.row(i), v_new.row(i));
+            }
+            let mut proj = Tensor::uninit([B, H]);
+            kern::matmul_wt_into(attn.data(), &self.wo[layer].t, B, H, H, proj.data_mut());
+            let mut h_out = Tensor::uninit([B, H]);
+            for ((o, a), p) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+                *o = a + p;
+            }
+            let mut g = Tensor::uninit([B, H]);
+            kern::rms_norm_into(h_out.data(), &self.ln2[layer], B, H, RMS_EPS, g.data_mut());
+            // ---- router + top-2 select (reusable buffers) -------------
+            let mut logits = Tensor::uninit([B, E]);
+            kern::matmul_wt_into(g.data(), &self.wg[layer].t, B, H, E, logits.data_mut());
+            kern::softmax_rows(logits.data_mut(), B, E);
+            for ge in self.groups.iter_mut() {
+                ge.clear();
+            }
+            for i in 0..B {
+                let row = logits.row(i);
+                let mut b0 = 0usize;
+                for (j, &p) in row.iter().enumerate() {
+                    if p > row[b0] {
+                        b0 = j;
+                    }
+                }
+                let mut b1 = usize::MAX;
+                for (j, &p) in row.iter().enumerate() {
+                    if j != b0 && (b1 == usize::MAX || p > row[b1]) {
+                        b1 = j;
+                    }
+                }
+                let (p0, p1) = (row[b0], row[b1]);
+                let sum = p0 + p1;
+                self.groups[b0].push((i, p0 / sum));
+                self.groups[b1].push((i, p1 / sum));
+            }
+            // ---- REFE dispatch build: row views, no copies ------------
+            self.slot_info.clear();
+            for e in 0..E {
+                let entry = &mut self.dispatch[e];
+                entry.rows.clear();
+                entry.slots.clear();
+                for &(row, w) in &self.groups[e] {
+                    entry.slots.push(self.slot_info.len() as u32);
+                    self.slot_info.push((row, w));
+                    entry.rows.push(g.row_tensor(row));
+                }
+                assert!(
+                    entry.rows.iter().all(|r| r.shares_storage(&g)),
+                    "dispatch rows must view the activation tensor"
+                );
+            }
+            self.slot_out.clear();
+            self.slot_out.resize_with(self.slot_info.len(), || None);
+            // ---- EW: bucket staging + expert FFN + return views -------
+            for e in 0..E {
+                let n = self.dispatch[e].slots.len();
+                if n == 0 {
+                    continue;
+                }
+                let mut xe = Tensor::zeros([EXPERT_BUCKET, H]);
+                {
+                    let xd = xe.data_mut();
+                    for (j, r) in self.dispatch[e].rows.iter().enumerate() {
+                        xd[j * H..(j + 1) * H].copy_from_slice(r.data());
+                    }
+                }
+                let (w1t, w3t, w2t) =
+                    (&self.w1[layer][e].t, &self.w3[layer][e].t, &self.w2[layer][e].t);
+                let mut a = Tensor::uninit([EXPERT_BUCKET, F]);
+                kern::matmul_wt_into(xe.data(), w1t, EXPERT_BUCKET, H, F, a.data_mut());
+                let mut gate = Tensor::uninit([EXPERT_BUCKET, F]);
+                kern::matmul_wt_into(xe.data(), w3t, EXPERT_BUCKET, H, F, gate.data_mut());
+                for (av, gv) in a.data_mut().iter_mut().zip(gate.data()) {
+                    *av = kern::silu(*av) * gv;
+                }
+                let mut y = Tensor::uninit([EXPERT_BUCKET, H]);
+                kern::matmul_wt_into(a.data(), w2t, EXPERT_BUCKET, F, H, y.data_mut());
+                let ret = &mut self.ret[e];
+                ret.rows.clear();
+                ret.slots.clear();
+                for j in 0..n {
+                    ret.rows.push(y.row_tensor(j));
+                }
+                ret.slots.extend(self.dispatch[e].slots.iter().copied());
+                assert!(
+                    ret.rows.iter().all(|r| r.shares_storage(&y)),
+                    "return rows must view the kernel output"
+                );
+                // ---- REFE gather: buffer views per slot ---------------
+                for (j, &s) in ret.slots.iter().enumerate() {
+                    self.slot_out[s as usize] = Some(ret.rows[j].clone());
+                }
+            }
+            // ---- canonical slot-ordered accumulation ------------------
+            for s in 0..self.slot_info.len() {
+                if let Some(out) = &self.slot_out[s] {
+                    let (row, w) = self.slot_info[s];
+                    ops::axpy_row(h_out.row_mut(row), w, out.data());
+                }
+            }
+            x = h_out;
+        }
+        // ---- LM head ---------------------------------------------------
+        let mut normed = Tensor::uninit([B, H]);
+        kern::rms_norm_into(x.data(), &self.ln_f, B, H, RMS_EPS, normed.data_mut());
+        let mut logits = Tensor::uninit([B, VOCAB]);
+        kern::matmul_wt_into(normed.data(), &self.lm.t, B, H, VOCAB, logits.data_mut());
+        for i in 0..B {
+            self.next_tok[i] = ops::argmax(logits.row(i)) as u32;
+        }
+        self.len += 1;
+        for i in 0..B {
+            self.kvs[i].set_len(self.len);
+            self.pos[i] = self.len as i32;
+        }
+    }
+}
+
+/// Park `count` blocks of exactly `len` floats in the shared arena, so a
+/// measured step never sees a cold size class even when routing shifts
+/// how many buffers of a class are live at once.
+fn prewarm_class(len: usize, count: usize) {
+    let held: Vec<Tensor> = (0..count).map(|_| Tensor::zeros([len])).collect();
+    drop(held);
+}
+
+#[test]
+fn hot_path_allocation_contract() {
+    scratch::warm();
+    // Every buffer size the step touches (S_MAX and B*H share class 64;
+    // EXPERT_BUCKET*H and B*VOCAB share class 128), with headroom for
+    // the worst simultaneous-live count.
+    prewarm_class(B * H, 16);
+    prewarm_class(B * KVD, 8);
+    prewarm_class(B * E, 4);
+    prewarm_class(EXPERT_BUCKET * H, 16);
+    prewarm_class(EXPERT_BUCKET * F, 8);
+    let mut h = Harness::new();
+
+    // Warmup: populate arena size classes and buffer capacities.
+    for _ in 0..4 {
+        h.step();
+    }
+
+    // 1. Steady state: zero heap allocations per decode step across the
+    //    whole AW→REFE→EW→REFE→AW round trip.
+    let steps = 8;
+    let (allocs, _) = allocations_during(|| {
+        for _ in 0..steps {
+            h.step();
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state decode must be allocation-free ({allocs} allocations over {steps} steps)"
+    );
+
+    // 2. Checkpoint emit: bounded — one payload Vec + one Arc control
+    //    block per segment, nothing proportional to floats beyond the
+    //    payload itself.
+    let n_segs = (LAYERS * h.len) as u64;
+    let (ckpt_allocs, segs) = allocations_during(|| {
+        let mut v = Vec::with_capacity(LAYERS * h.len);
+        for layer in 0..LAYERS {
+            for t in 0..h.len {
+                v.push((layer, t, h.kvs[0].segment_payload(layer, t)));
+            }
+        }
+        v
+    });
+    assert!(
+        ckpt_allocs <= 3 * n_segs + 8,
+        "checkpoint emit must stay O(1) per segment: {ckpt_allocs} allocations for {n_segs} segments"
+    );
+
+    // 3. Restore install: bounded by pages + layers, not by floats.
+    let restore_len = h.len;
+    let m = mspec();
+    let (restore_allocs, restored) = allocations_during(|| {
+        let mut r = RequestKv::new(&m, &h.pool);
+        for (layer, t, seg) in &segs {
+            r.write_segment(*layer, *t, seg.as_slice());
+        }
+        r.set_len(restore_len);
+        r
+    });
+    let pages = restored.allocated_pages() as u64;
+    assert_eq!(restored.len(), restore_len);
+    assert!(
+        restore_allocs <= 4 * pages + LAYERS as u64 + 16,
+        "restore must stay O(1) per page: {restore_allocs} allocations for {pages} pages"
+    );
+    drop(restored);
+
+    // The generation advanced and stayed in-vocab (the harness computes
+    // real tokens, not dead code the optimizer could strip).
+    assert!(h.next_tok.iter().all(|&t| (t as usize) < VOCAB));
+    assert_eq!(h.len, INIT_LEN + 4 + steps);
+}
