@@ -129,6 +129,43 @@ impl Default for SchedConfig {
     }
 }
 
+/// Elastic expert-worker scaling (DESIGN.md §11): the orchestrator's
+/// utilization-driven scale-out/scale-in policy over the EWs' per-expert
+/// activation beacons. Disabled by default — scaling actions are then
+/// operator/scenario-driven only (`scale_ew up` / `scale_ew down`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalerConfig {
+    /// Run the automatic policy (beacons are only posted when enabled).
+    pub enabled: bool,
+    /// EW-side accounting window: per-expert token counters accumulate
+    /// for one window, then ride an `EwStatus` beacon to the orchestrator.
+    pub window: Duration,
+    /// Tokens routed to a single expert within one window at/above which
+    /// the expert is hot (scale-out: shadow promotion, else a fresh EW).
+    pub hot_threshold: u64,
+    /// Tokens executed by a whole EW within one window strictly below
+    /// which the EW is cold (scale-in candidate). 0 disables scale-in.
+    pub cold_threshold: u64,
+    /// Minimum spacing between scaling actions (flap damping).
+    pub cooldown: Duration,
+    /// How long a retired EW lingers to serve in-flight dispatches routed
+    /// under pre-retirement ERT versions before it leaves the fabric.
+    pub retire_linger: Duration,
+}
+
+impl Default for ScalerConfig {
+    fn default() -> Self {
+        ScalerConfig {
+            enabled: false,
+            window: Duration::from_millis(10),
+            hot_threshold: 256,
+            cold_threshold: 2,
+            cooldown: Duration::from_millis(250),
+            retire_linger: Duration::from_millis(50),
+        }
+    }
+}
+
 /// Resilience feature switches. Defaults = full TARRAGON. The Fig. 15
 /// ablation variants:
 ///   Alt-1 = checkpointing off;
@@ -268,6 +305,11 @@ pub struct WorkloadConfig {
     /// Run duration cap in seconds.
     pub duration_secs: f64,
     pub seed: u64,
+    /// Skew the router onto this expert: every token routes to it (in
+    /// addition to its natural top-(k-1) picks). Workload-shaping — it
+    /// applies for the whole run, so token streams stay comparable across
+    /// fault schedules. The scenario DSL's `hotspot e<K>`.
+    pub hotspot_expert: Option<usize>,
 }
 
 impl Default for WorkloadConfig {
@@ -278,6 +320,7 @@ impl Default for WorkloadConfig {
             num_requests: 0,
             duration_secs: 20.0,
             seed: 7,
+            hotspot_expert: None,
         }
     }
 }
@@ -289,6 +332,7 @@ pub struct Config {
     pub transport: TransportConfig,
     pub workload: WorkloadConfig,
     pub sched: SchedConfig,
+    pub scaler: ScalerConfig,
 }
 
 impl Config {
@@ -391,6 +435,15 @@ impl Config {
         sc.low_watermark = get_f64("sched.low_watermark", sc.low_watermark)?;
         sc.status_interval = get_ms("sched.status_interval_ms", sc.status_interval)?;
 
+        let sl = &mut self.scaler;
+        sl.enabled = get_bool("scaler.enabled", sl.enabled)?;
+        sl.window = get_ms("scaler.window_ms", sl.window)?;
+        sl.hot_threshold = get_usize("scaler.hot_threshold", sl.hot_threshold as usize)? as u64;
+        sl.cold_threshold =
+            get_usize("scaler.cold_threshold", sl.cold_threshold as usize)? as u64;
+        sl.cooldown = get_ms("scaler.cooldown_ms", sl.cooldown)?;
+        sl.retire_linger = get_ms("scaler.retire_linger_ms", sl.retire_linger)?;
+
         let w = &mut self.workload;
         if let Some(v) = m.get("workload.kind") {
             let s = v.as_str().ok_or_else(|| bad("workload.kind"))?;
@@ -401,6 +454,14 @@ impl Config {
         w.num_requests = get_usize("workload.num_requests", w.num_requests)?;
         w.duration_secs = get_f64("workload.duration_secs", w.duration_secs)?;
         w.seed = get_usize("workload.seed", w.seed as usize)? as u64;
+        if let Some(v) = m.get("workload.hotspot_expert") {
+            w.hotspot_expert = Some(
+                v.as_i64()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| bad("workload.hotspot_expert"))?,
+            );
+        }
         Ok(())
     }
 
@@ -436,6 +497,24 @@ impl Config {
                  are restored from their checkpoints)"
                     .into(),
             ));
+        }
+        let sl = &self.scaler;
+        if sl.enabled {
+            if sl.window.is_zero() {
+                return Err(ConfigError::Invalid(
+                    "scaler.window_ms must be > 0 when the scaler is enabled".into(),
+                ));
+            }
+            if sl.hot_threshold == 0 {
+                return Err(ConfigError::Invalid(
+                    "scaler.hot_threshold must be > 0 when the scaler is enabled".into(),
+                ));
+            }
+            if sl.cold_threshold >= sl.hot_threshold {
+                return Err(ConfigError::Invalid(
+                    "scaler.cold_threshold must be < scaler.hot_threshold".into(),
+                ));
+            }
         }
         if self.workload.rate_rps <= 0.0 {
             return Err(ConfigError::Invalid("rate_rps must be > 0".into()));
@@ -537,6 +616,52 @@ status_interval_ms = 2
         assert_eq!(RouterPolicy::parse("least_pressure"), Some(RouterPolicy::LeastPressure));
         assert_eq!(RouterPolicy::parse("round_robin").unwrap().name(), "round_robin");
         assert!(RouterPolicy::parse("random").is_none());
+    }
+
+    #[test]
+    fn parses_scaler_section_and_hotspot() {
+        let cfg = Config::from_toml_str(
+            r#"
+[scaler]
+enabled = true
+window_ms = 20
+hot_threshold = 64
+cold_threshold = 4
+cooldown_ms = 500
+retire_linger_ms = 30
+
+[workload]
+hotspot_expert = 3
+"#,
+        )
+        .unwrap();
+        assert!(cfg.scaler.enabled);
+        assert_eq!(cfg.scaler.window, Duration::from_millis(20));
+        assert_eq!(cfg.scaler.hot_threshold, 64);
+        assert_eq!(cfg.scaler.cold_threshold, 4);
+        assert_eq!(cfg.scaler.cooldown, Duration::from_millis(500));
+        assert_eq!(cfg.scaler.retire_linger, Duration::from_millis(30));
+        assert_eq!(cfg.workload.hotspot_expert, Some(3));
+        // Default: disabled, no hotspot.
+        let d = Config::default();
+        assert!(!d.scaler.enabled);
+        assert_eq!(d.workload.hotspot_expert, None);
+    }
+
+    #[test]
+    fn rejects_invalid_scaler() {
+        // Cold threshold must sit strictly below hot.
+        assert!(Config::from_toml_str(
+            "[scaler]\nenabled = true\nhot_threshold = 4\ncold_threshold = 4\n"
+        )
+        .is_err());
+        assert!(
+            Config::from_toml_str("[scaler]\nenabled = true\nhot_threshold = 0\n").is_err()
+        );
+        assert!(Config::from_toml_str("[scaler]\nenabled = true\nwindow_ms = 0\n").is_err());
+        // Disabled scaler skips the threshold checks.
+        assert!(Config::from_toml_str("[scaler]\nhot_threshold = 0\n").is_ok());
+        assert!(Config::from_toml_str("[workload]\nhotspot_expert = -1\n").is_err());
     }
 
     #[test]

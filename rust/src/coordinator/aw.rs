@@ -150,6 +150,9 @@ pub struct AwWorker {
     /// routing set) are bounced straight back instead of served, so a
     /// drain eventually empties the worker even under backlog.
     draining: bool,
+    /// Workload-shaping router skew (scenario `hotspot e<K>`): every
+    /// token routes to this expert in addition to its natural picks.
+    hotspot: Option<usize>,
     /// Last load-beacon post (virtual/wall clock reading).
     last_status_at: Duration,
     pub steps: u64,
@@ -201,6 +204,7 @@ impl AwWorker {
         let streamer = CkptStreamer::new(p.cfg.resilience.checkpointing, 4096);
         let asm = BatchAssembler::new(&p.manifest.model);
         let names = HotNames::new(&p.manifest);
+        let hotspot = p.cfg.workload.hotspot_expert;
         Ok(AwWorker {
             idx: p.idx,
             node,
@@ -226,6 +230,7 @@ impl AwWorker {
             was_active: false,
             stop: p.stop,
             draining: false,
+            hotspot,
             last_status_at: Duration::ZERO,
             steps: 0,
             preemptions: 0,
@@ -703,7 +708,7 @@ impl AwWorker {
                     vec![ArgValue::f32(g.clone()), self.names.router_weights[layer].clone()],
                 )
                 .map_err(|_| StepError::Fatal)?;
-            let routes = router::select_top_k(&probs[0], p_len, m.top_k);
+            let routes = router::select_top_k_hotspot(&probs[0], p_len, m.top_k, self.hotspot);
             let groups = ExpertGroups::from_routes(&routes);
             let mut h = h;
             self.expert_io(layer as u32, &g, &groups, &mut h)?;
@@ -862,7 +867,7 @@ impl AwWorker {
                     vec![ArgValue::f32(g.clone()), self.names.router_weights[layer].clone()],
                 )
                 .map_err(|_| StepError::Fatal)?;
-            let routes = router::select_top_k(&probs[0], b, m.top_k);
+            let routes = router::select_top_k_hotspot(&probs[0], b, m.top_k, self.hotspot);
             let groups = ExpertGroups::from_routes(&routes);
             let mut h = h;
             self.expert_io(layer as u32, &g, &groups, &mut h)?;

@@ -215,6 +215,14 @@ pub struct ClusterReport {
     pub preemptions: u64,
     /// Requests rejected at admission (oversized).
     pub rejected: usize,
+    /// Elastic EW scaling (DESIGN.md §11): fresh EWs provisioned, EWs
+    /// retired, shadow promotions, and scale-in refusals of any kind —
+    /// last-replica guard, dead/unknown target, or the fabric-liveness
+    /// coverage check.
+    pub scale_outs: u64,
+    pub scale_ins: u64,
+    pub shadow_promotions: u64,
+    pub scale_rejected: u64,
 }
 
 impl Cluster {
@@ -361,6 +369,7 @@ impl Cluster {
         // bring-up above is excluded from run timelines; T_w is reported
         // separately via InitStats).
         let events = Arc::new(EventLog::with_clock(clock.clone()));
+        state.attach_events(events.clone());
         let pool_cfg = PoolConfig::from_model(&manifest.model);
         let limits = AdmissionLimits {
             max_prompt: manifest
@@ -441,6 +450,21 @@ impl Cluster {
         self.spawner.kill(NodeId::Ew(idx));
     }
 
+    /// Manual scale-out (the scenario DSL's `scale_ew up`): provision one
+    /// fresh EW as a warm tail candidate (shadow) for every expert.
+    pub fn scale_ew_up(&self) {
+        self.post_admin_verb(ClusterMsg::ScaleEwUp);
+    }
+
+    /// Manual scale-in (the scenario DSL's `scale_ew down ew<N>`): remap
+    /// the EW's primaries onto the remaining candidates and retire it.
+    /// Rejected by the orchestrator (reflected in
+    /// [`ClusterReport::scale_rejected`]) if the EW is the last replica
+    /// of any expert — a scale-in can demote, never strand.
+    pub fn scale_ew_down(&self, idx: u32) {
+        self.post_admin_verb(ClusterMsg::ScaleEwDown { ew: idx });
+    }
+
     /// Respawn a previously killed AW on its original slot and integrate
     /// it (membership broadcast) — the scenario DSL's `respawn aw<i>`.
     pub fn respawn_aw(&self, idx: u32) -> Result<(), String> {
@@ -512,6 +536,10 @@ impl Cluster {
             restarts: self.state.restarts.load(Ordering::Relaxed),
             preemptions: self.state.preemptions.load(Ordering::Relaxed),
             rejected: self.gw.rejected_count(),
+            scale_outs: self.state.scale_outs.load(Ordering::Relaxed),
+            scale_ins: self.state.scale_ins.load(Ordering::Relaxed),
+            shadow_promotions: self.state.shadow_promotions.load(Ordering::Relaxed),
+            scale_rejected: self.state.scale_rejected.load(Ordering::Relaxed),
         }
     }
 }

@@ -85,6 +85,15 @@ impl Ert {
     /// Apply an orchestrator update (monotonic in version). Local dead-set
     /// is cleared: the orchestrator's table already reflects the failure
     /// (and possibly a replacement EW reusing the index).
+    ///
+    /// Scaling updates (DESIGN.md §11) can broadcast a table that still
+    /// lists an EW this holder probe-confirmed dead moments ago (the
+    /// failure report is still in flight). Clearing is deliberate even
+    /// then: the mark cannot distinguish "orchestrator doesn't know yet"
+    /// from "the EW was respawned on its slot", and keeping it would
+    /// permanently blind this AW to a recovered worker. Re-resolving to
+    /// a still-dead EW just re-pays one silence-window probe before the
+    /// local mark returns — bounded latency, never wrong output.
     pub fn apply(&mut self, version: u64, table: ErtTable) -> bool {
         if version <= self.version {
             return false;

@@ -83,6 +83,19 @@ pub struct EwWorker {
     /// names — cloning a template never allocates).
     weight_args: HashMap<(usize, usize), [ArgValue; 3]>,
     stop: Arc<AtomicBool>,
+    /// Per-expert activation counters for the current scaler window:
+    /// token rows executed per expert since the last `EwStatus` beacon
+    /// (DESIGN.md §11). Only maintained when the scaler is enabled, so
+    /// the default-config data path stays allocation-identical.
+    expert_tokens: BTreeMap<u16, u64>,
+    /// Clock reading of the last `EwStatus` beacon.
+    last_load_post: Duration,
+    /// Set by `RetireEw`: this EW was removed from the ERT at the given
+    /// version. It keeps serving dispatches routed under older versions
+    /// (the straddle guarantee), bounces newer ones with `Stale`, and
+    /// leaves the fabric once drained past the linger deadline.
+    retired: Option<u64>,
+    retire_deadline: Duration,
     /// Counters for experiments.
     pub batches_executed: u64,
     pub partial_batches: u64,
@@ -155,6 +168,10 @@ impl EwWorker {
             expert_names: HashMap::new(),
             weight_args: HashMap::new(),
             stop: p.stop,
+            expert_tokens: BTreeMap::new(),
+            last_load_post: Duration::ZERO,
+            retired: None,
+            retire_deadline: Duration::ZERO,
             batches_executed: 0,
             partial_batches: 0,
             urgent_executions: 0,
@@ -170,8 +187,51 @@ impl EwWorker {
                 Err(_) => break, // killed
             }
             self.check_buffers();
+            self.post_expert_load();
+            if self.maybe_finish_retire() {
+                break;
+            }
         }
         self.device.kill();
+    }
+
+    /// Beacon the window's per-expert activation counters to the
+    /// orchestrator (the expert-tier load signal, DESIGN.md §11).
+    fn post_expert_load(&mut self) {
+        if !self.cfg.scaler.enabled {
+            return;
+        }
+        let now = self.clock.now();
+        if now.saturating_sub(self.last_load_post) < self.cfg.scaler.window {
+            return;
+        }
+        self.last_load_post = now;
+        let tokens: Vec<(u16, u64)> = std::mem::take(&mut self.expert_tokens)
+            .into_iter()
+            .collect();
+        let ew = self.idx;
+        if let Some(qp) = self.orch_qp_mut() {
+            let msg = ClusterMsg::EwStatus(crate::proto::EwStatus { ew, tokens });
+            let bytes = msg.wire_bytes();
+            let _ = qp.post(msg, bytes, TrafficClass::Admin);
+        }
+    }
+
+    /// Retirement exit: once every buffered dispatch is served and the
+    /// linger window has passed, leave the fabric — stragglers routed
+    /// under pre-retirement versions were covered by the linger; anything
+    /// later fails over through the normal probe path (and the
+    /// orchestrator already treats this node as handled: planned
+    /// mobility, not a failure).
+    fn maybe_finish_retire(&mut self) -> bool {
+        if self.retired.is_none()
+            || !self.buffers.is_empty()
+            || self.clock.now() < self.retire_deadline
+        {
+            return false;
+        }
+        self.fabric.kill(self.node);
+        true
     }
 
     fn handle_msg(&mut self, env: Envelope<ClusterMsg>) {
@@ -181,6 +241,36 @@ impl EwWorker {
                     NodeId::Aw(a) => a,
                     _ => return,
                 };
+                // Retired (§11): dispatches routed under a pre-retirement
+                // ERT version are served normally — the straddle
+                // guarantee. A dispatch routed under the version that
+                // removed us (or later) is bounced as `Stale` so the
+                // REFE re-resolves it; heartbeats need no reply. Today
+                // this bounce is defense-in-depth: retirement removes
+                // this EW from every table at `v`, versions are
+                // monotonic, and retired indices are not reused, so a
+                // correctly-routed dispatch can only carry an older
+                // version. The protocol guards table shapes that re-add
+                // indices (and any version-skew bug) from silently
+                // executing on a retiring worker.
+                if let Some(v) = self.retired {
+                    if d.ert_version >= v {
+                        if !d.entries.is_empty() {
+                            let slots: Vec<u32> =
+                                d.entries.iter().flat_map(|e| e.slots.iter().copied()).collect();
+                            let msg = ClusterMsg::Stale {
+                                layer: d.layer,
+                                round: d.round,
+                                version: v,
+                                slots,
+                            };
+                            let bytes = msg.wire_bytes();
+                            let qp = self.data_qp(aw);
+                            let _ = qp.post(msg, bytes, TrafficClass::ExpertReturn);
+                        }
+                        return;
+                    }
+                }
                 self.aws.entry(aw).or_insert(AwInfo { active: true, dead: false }).active = true;
                 if d.urgent {
                     // §5.1: replayed requests are prioritized — execute now.
@@ -199,6 +289,12 @@ impl EwWorker {
             ClusterMsg::ActiveBeacon { active } => {
                 if let NodeId::Aw(a) = env.from {
                     self.aws.entry(a).or_insert(AwInfo { active, dead: false }).active = active;
+                }
+            }
+            ClusterMsg::RetireEw { version } => {
+                if self.retired.is_none() {
+                    self.retired = Some(version);
+                    self.retire_deadline = self.clock.now() + self.cfg.scaler.retire_linger;
                 }
             }
             ClusterMsg::AwSet { aws } => {
@@ -420,6 +516,11 @@ impl EwWorker {
         rows: &[(u32, u32, Tensor)],
         hidden: usize,
     ) -> Vec<Tensor> {
+        // Scaler window accounting: token rows executed for this expert
+        // (gated so the default-config hot path stays untouched).
+        if self.cfg.scaler.enabled {
+            *self.expert_tokens.entry(expert as u16).or_insert(0) += rows.len() as u64;
+        }
         // Cold-load weights if this expert is not resident (shadow-less
         // failover, or a provisioning race) — the §5.3 cost shadows avoid.
         if !self.resident.contains(&expert) {

@@ -13,6 +13,9 @@
 //! - [`sched`]: overload-aware scheduling policy — KV-pressure
 //!   bookkeeping, the pluggable admission router, and preemption victim
 //!   selection (DESIGN.md §9).
+//! - [`scaler`]: elastic EW scaling policy — hot/cold expert detection
+//!   over the EW activation beacons, shadow promotion, EW retirement
+//!   (DESIGN.md §11).
 //! - [`cluster`]: builds and wires the whole thing; fault injection API.
 
 pub mod aw;
@@ -23,6 +26,7 @@ pub mod gateway;
 pub mod orchestrator;
 pub mod refe;
 pub mod router;
+pub mod scaler;
 pub mod sched;
 
 pub use cluster::{Cluster, ClusterReport};

@@ -9,7 +9,9 @@
 
 use super::cluster::Spawner;
 use super::ert::Ert;
+use super::scaler::{self, ScalePlan, Scaler};
 use super::sched;
+use crate::metrics::{EventKind, EventLog};
 use crate::proto::{ClusterMsg, CommitMeta, ErtTable, HDR_BYTES};
 use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane, Qp};
 use crate::util::clock::{self, Clock};
@@ -45,9 +47,20 @@ pub struct OrchState {
     pub restarts: AtomicU64,
     /// Requests preempted (pressure shedding + drains), cluster-wide.
     pub preemptions: AtomicU64,
+    /// Elastic EW scaling counters (DESIGN.md §11): fresh EWs
+    /// provisioned, EWs retired, shadows promoted to primary, and
+    /// scale-in requests refused for any reason (last-replica guard,
+    /// dead/unknown target, fabric-liveness coverage).
+    pub scale_outs: AtomicU64,
+    pub scale_ins: AtomicU64,
+    pub shadow_promotions: AtomicU64,
+    pub scale_rejected: AtomicU64,
     /// Stall bookkeeping for coarse restarts (Fig. 9a): set while a full
     /// restart is in progress.
     pub restarting: AtomicBool,
+    /// The cluster event log, attached by `Cluster::launch` once the
+    /// schedule epoch starts (scaling events are recorded through it).
+    events: Mutex<Option<Arc<EventLog>>>,
 }
 
 #[derive(Default)]
@@ -137,6 +150,49 @@ impl OrchState {
     /// its original slot).
     pub(crate) fn clear_handled(&self, node: NodeId) {
         self.handled.lock().unwrap().remove(&node);
+    }
+
+    /// Attach the cluster event log (scaling events are recorded on it).
+    pub(crate) fn attach_events(&self, events: Arc<EventLog>) {
+        *self.events.lock().unwrap() = Some(events);
+    }
+
+    pub(crate) fn ew_alive(&self, ew: u32) -> bool {
+        self.inner.lock().unwrap().ews.get(&ew).map(|e| e.alive).unwrap_or(false)
+    }
+
+    pub(crate) fn set_ew_alive(&self, ew: u32, alive: bool) {
+        if let Some(e) = self.inner.lock().unwrap().ews.get_mut(&ew) {
+            e.alive = alive;
+        }
+    }
+
+    /// The canonical ERT edit path for scaling actions: apply `edit` to
+    /// a copy of the current table; when it returns true, bump the
+    /// version, install the new table, and return (table, version, live
+    /// AWs) for broadcast. A false edit (or no table yet) installs
+    /// nothing. Keeping the bump/install/collect sequence in one place
+    /// stops the promote/retire/integrate call sites from drifting.
+    pub(crate) fn edit_ert<F>(&self, edit: F) -> Option<(ErtTable, u64, Vec<u32>)>
+    where
+        F: FnOnce(&mut ErtTable) -> bool,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        let mut table = inner.ert.as_ref()?.table().clone();
+        if !edit(&mut table) {
+            return None;
+        }
+        inner.ert_version += 1;
+        let v = inner.ert_version;
+        inner.ert = Some(Ert::new(v, table.clone()));
+        let aws: Vec<u32> = inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+        Some((table, v, aws))
+    }
+
+    fn record(&self, kind: EventKind, request: u64, worker: u32) {
+        if let Some(ev) = self.events.lock().unwrap().as_ref() {
+            ev.record(kind, request, 0, worker);
+        }
     }
 
     fn clear_all_handled(&self) {
@@ -271,6 +327,11 @@ fn orch_main(p: OrchParams) {
         parked: VecDeque::new(),
         loads: sched::LoadMap::default(),
         drain_targets: BTreeMap::new(),
+        scaler: if p.spawner.cfg.scaler.enabled {
+            Some(Scaler::new(p.spawner.cfg.scaler.clone()))
+        } else {
+            None
+        },
         next_ew_idx: 0,
         next_aw_idx: 0,
         last_restart: None,
@@ -319,6 +380,9 @@ struct Orch {
     loads: sched::LoadMap,
     /// Draining AW -> forced migration target (None = least pressure).
     drain_targets: BTreeMap<u32, Option<u32>>,
+    /// Elastic EW scaling policy (None when `[scaler]` is disabled —
+    /// manual `scale_ew` verbs still work without it).
+    scaler: Option<Scaler>,
     next_ew_idx: u32,
     next_aw_idx: u32,
     /// Stale failure reports within this window after a full restart are
@@ -407,8 +471,180 @@ impl Orch {
                 self.post(NodeId::Gateway, ClusterMsg::Resubmit { requests });
             }
             ClusterMsg::DrainAw { aw, target } => self.drain_aw(aw, target),
+            // ---- elastic EW scaling (DESIGN.md §11) ----
+            ClusterMsg::EwStatus(st) => self.on_ew_status(st.ew, st.tokens),
+            ClusterMsg::ScaleEwUp => self.provision_universal_ew(),
+            ClusterMsg::ScaleEwDown { ew } => {
+                self.retire_ew(ew);
+            }
             _ => {}
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Elastic EW scaling (DESIGN.md §11)
+    // -----------------------------------------------------------------
+
+    /// Feed an EW activation beacon to the scaler and execute whatever it
+    /// plans. Promotion and retirement are pure ERT edits on the
+    /// failure-recovery datapath (version bump + broadcast); provisioning
+    /// reuses the §5.4 background path.
+    fn on_ew_status(&mut self, ew: u32, tokens: Vec<(u16, u64)>) {
+        let now = self.clock.now();
+        let Some(sc) = self.scaler.as_mut() else { return };
+        sc.ingest(ew, tokens);
+        let plan = {
+            let inner = self.state.inner.lock().unwrap();
+            let Some(ert) = inner.ert.as_ref() else { return };
+            // `inner.ews` can lag a failure whose report is still in
+            // flight; cross-check the fabric so the policy never plans
+            // around (or onto) a corpse.
+            let live: Vec<u32> = inner
+                .ews
+                .iter()
+                .filter(|(_, e)| e.alive)
+                .map(|(&i, _)| i)
+                .filter(|&i| self.fabric.is_alive(NodeId::Ew(i)))
+                .collect();
+            self.scaler.as_mut().unwrap().plan(now, ert.table(), &live)
+        };
+        match plan {
+            None => {}
+            Some(ScalePlan::PromoteShadow { expert, to }) => self.promote_shadow(expert, to),
+            Some(ScalePlan::ProvisionFresh { expert }) => self.provision_expert_ew(expert),
+            Some(ScalePlan::Retire { ew }) => {
+                self.retire_ew(ew);
+            }
+        }
+    }
+
+    /// Warm scale-out: make a hot expert's live shadow its primary. Pure
+    /// table edit — the shadow's weights are already resident (§5.3), so
+    /// nothing is uploaded on the critical path.
+    fn promote_shadow(&mut self, expert: usize, to: u32) {
+        // Same lag defense as retire_ew: never install a fabric-dead EW
+        // as primary, even if its failure report has not landed yet.
+        if !self.fabric.is_alive(NodeId::Ew(to)) {
+            return;
+        }
+        let Some((table, version, aws)) =
+            self.state.edit_ert(|t| scaler::promote(t, expert, to))
+        else {
+            return;
+        };
+        for a in aws {
+            self.post(NodeId::Aw(a), ClusterMsg::ErtUpdate { version, table: table.clone() });
+        }
+        self.state.shadow_promotions.fetch_add(1, Ordering::Relaxed);
+        self.state.record(EventKind::ShadowPromoted, expert as u64, to);
+    }
+
+    /// Scale-out when a hot expert has no live alternate replica:
+    /// provision a fresh EW hosting it (background, §5.4 path) and
+    /// promote the new EW to primary once it is up.
+    fn provision_expert_ew(&mut self, expert: usize) {
+        // Event tag is expert id + 1 (0 is reserved for universal
+        // shadows) so expert 0 is distinguishable in the event log.
+        self.spawn_background_ew("scaleout-ew", vec![expert], Vec::new(), Some(expert as u64 + 1));
+    }
+
+    /// Manual `scale_ew up`: one fresh EW joining as a warm tail
+    /// candidate (shadow) for every expert — new capacity that later
+    /// promotions or failovers can lean on.
+    fn provision_universal_ew(&mut self) {
+        let experts = self.spawner.manifest.model.experts;
+        self.spawn_background_ew("scaleout-ew", Vec::new(), (0..experts).collect(), Some(0));
+    }
+
+    /// The one background EW-provisioning path (§5.4): spawn, integrate
+    /// into the ERT, broadcast the new table. Shared by failure recovery
+    /// (`scale_tag: None`) and elastic scale-out (`Some(tag)` — bumps the
+    /// counter and records a `ScaleOut` event tagged with expert id + 1,
+    /// or 0 for a universal shadow).
+    fn spawn_background_ew(
+        &mut self,
+        name_prefix: &str,
+        primaries: Vec<usize>,
+        shadows: Vec<usize>,
+        scale_tag: Option<u64>,
+    ) {
+        let idx = self.next_ew_idx;
+        self.next_ew_idx += 1;
+        let spawner = self.spawner.clone();
+        let state = self.state.clone();
+        let stop = self.stop.clone();
+        let name = format!("{name_prefix}{idx}");
+        clock::spawn_participant(&self.clock, name, move || {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let aws = state.live_aws();
+            if spawner.spawn_ew(idx, primaries.clone(), shadows.clone(), aws).is_err() {
+                return;
+            }
+            let Some((table, version, live_aws)) = state.integrate_ew(idx, primaries, shadows)
+            else {
+                return;
+            };
+            for a in live_aws {
+                spawner.post_admin(
+                    NodeId::Aw(a),
+                    ClusterMsg::ErtUpdate { version, table: table.clone() },
+                );
+            }
+            if let Some(tag) = scale_tag {
+                state.scale_outs.fetch_add(1, Ordering::Relaxed);
+                state.record(EventKind::ScaleOut, tag, idx);
+            }
+        })
+        .ok();
+    }
+
+    /// Scale-in: remap the EW's primaries onto the remaining candidates
+    /// (shadows become primary where it led), bump + broadcast the ERT,
+    /// then tell the EW to retire — it serves in-flight dispatches routed
+    /// under older versions and leaves after the linger window. Rejected
+    /// outright if the EW is the last replica of any expert: a scale-in
+    /// can demote, never strand. Planned mobility — `ew_failures` stays
+    /// untouched and failure reports about the node are suppressed.
+    fn retire_ew(&mut self, ew: u32) -> bool {
+        // Beyond the table-membership guard inside `retire`, every expert
+        // must keep a candidate that is alive at the *fabric* level — the
+        // table (and `inner.ews`) can lag a failure whose report is still
+        // in flight, and a retire racing that window must not strand the
+        // expert on a corpse.
+        let fabric = &self.fabric;
+        let updated = if self.state.ew_alive(ew) {
+            self.state.edit_ert(|t| {
+                scaler::retire(t, ew)
+                    && t.iter().all(|cands| {
+                        cands.iter().any(|&c| fabric.is_alive(NodeId::Ew(c)))
+                    })
+            })
+        } else {
+            None
+        };
+        let Some((table, version, aws)) = updated else {
+            // Dead/unknown EW, fabric-dead coverage, or the last replica
+            // of some expert: a scale-in can demote, never strand —
+            // reject it.
+            self.state.scale_rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        // Suppress failure handling for the retired node before anything
+        // can observe its departure.
+        self.state.set_ew_alive(ew, false);
+        self.state.mark_handled(NodeId::Ew(ew));
+        if let Some(sc) = self.scaler.as_mut() {
+            sc.forget(ew);
+        }
+        for a in aws {
+            self.post(NodeId::Aw(a), ClusterMsg::ErtUpdate { version, table: table.clone() });
+        }
+        self.post(NodeId::Ew(ew), ClusterMsg::RetireEw { version });
+        self.state.scale_ins.fetch_add(1, Ordering::Relaxed);
+        self.state.record(EventKind::ScaleIn, 0, ew);
+        true
     }
 
     // -----------------------------------------------------------------
@@ -552,6 +788,9 @@ impl Orch {
 
     fn recover_ew(&mut self, ew: u32) {
         self.state.ew_failures.fetch_add(1, Ordering::Relaxed);
+        if let Some(sc) = self.scaler.as_mut() {
+            sc.forget(ew);
+        }
         let (new_table, version, primaries, shadows, aws) = {
             let mut inner = self.state.inner.lock().unwrap();
             if let Some(e) = inner.ews.get_mut(&ew) {
@@ -584,35 +823,11 @@ impl Orch {
             self.post(NodeId::Aw(*a), ClusterMsg::ErtUpdate { version, table: new_table.clone() });
         }
 
-        // Background capacity restoration (§5.4).
+        // Background capacity restoration (§5.4): the same provisioning
+        // path elastic scale-out uses — integrate_ew re-promotes the new
+        // EW to primary for the lost experts.
         if self.spawner.cfg.resilience.provisioning && !primaries.is_empty() {
-            let idx = self.next_ew_idx;
-            self.next_ew_idx += 1;
-            let spawner = self.spawner.clone();
-            let state = self.state.clone();
-            let prim = primaries.clone();
-            let shad = shadows.clone();
-            let stop = self.stop.clone();
-            clock::spawn_participant(&self.clock, format!("provision-ew{idx}"), move || {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                let aws = state.live_aws();
-                if spawner.spawn_ew(idx, prim.clone(), shad.clone(), aws).is_err() {
-                    return;
-                }
-                // Integrate: make the new EW primary again.
-                let Some((table, version, live_aws)) = state.integrate_ew(idx, prim, shad) else {
-                    return;
-                };
-                for a in live_aws {
-                    spawner.post_admin(
-                        NodeId::Aw(a),
-                        ClusterMsg::ErtUpdate { version, table: table.clone() },
-                    );
-                }
-            })
-            .ok();
+            self.spawn_background_ew("provision-ew", primaries, shadows, None);
         }
     }
 

@@ -205,7 +205,13 @@ impl Refe {
                 slots.extend(entries.iter().flat_map(|e| e.slots.iter().copied()));
                 outstanding.insert(ew, slots);
             }
-            let msg = DispatchMsg { layer, round, entries, urgent: false };
+            let msg = DispatchMsg {
+                layer,
+                round,
+                ert_version: self.ert.version(),
+                entries,
+                urgent: false,
+            };
             let bytes = msg.wire_bytes();
             self.dispatch_bytes += bytes as u64;
             let qp = self.data_qp(ew);
@@ -229,6 +235,11 @@ impl Refe {
         slot_out.clear();
         slot_out.resize_with(slot_info.len(), || None);
         let mut remaining = slot_info.len();
+        // Slots bounced by a retired EW (`Stale`) whose replacement route
+        // is not visible yet: parked until an `ErtUpdate` at/after the
+        // bounce version arrives (applied right here in the gather loop —
+        // deferring it to the AW main loop would deadlock the round).
+        let mut parked: Vec<(u64, Vec<u32>)> = Vec::new();
         let start = self.clock.now();
         let mut last_progress = start;
         while remaining > 0 {
@@ -259,6 +270,70 @@ impl Refe {
                         last_progress = self.clock.now();
                     }
                     ClusterMsg::Return(_) => {} // stale round/layer
+                    ClusterMsg::ErtUpdate { version, table } => {
+                        // Applied inside the gather so parked replays (and
+                        // retirement reroutes) cannot wait on the AW loop.
+                        if self.ert.apply(version, table) {
+                            let v = self.ert.version();
+                            let mut i = 0;
+                            while i < parked.len() {
+                                if parked[i].0 <= v {
+                                    let (_, pending) = parked.swap_remove(i);
+                                    let res = self.replay(
+                                        layer,
+                                        round,
+                                        &pending,
+                                        entry_of_slot,
+                                        slot_info,
+                                        g,
+                                        &mut outstanding,
+                                        u32_pool,
+                                    );
+                                    give_u32(u32_pool, pending);
+                                    res?;
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                        }
+                    }
+                    ClusterMsg::Stale { layer: l, round: r, version, slots }
+                        if l == layer && r == round =>
+                    {
+                        // A retired EW bounced this round's dispatch: the
+                        // listed slots re-resolve against a table at/after
+                        // the retirement version (§11). The EW is alive —
+                        // no dead-mark, no failure report. Its per-EW
+                        // bookkeeping is retired alongside it.
+                        let NodeId::Ew(ew) = env.from else { continue };
+                        let mut pending = take_u32(u32_pool);
+                        pending.extend(slots.iter().copied().filter(|&s| {
+                            (s as usize) < done.len() && !done[s as usize]
+                        }));
+                        if let Some(owed) = outstanding.remove(&ew) {
+                            give_u32(u32_pool, owed);
+                        }
+                        if pending.is_empty() {
+                            give_u32(u32_pool, pending);
+                        } else if self.ert.version() >= version {
+                            let res = self.replay(
+                                layer,
+                                round,
+                                &pending,
+                                entry_of_slot,
+                                slot_info,
+                                g,
+                                &mut outstanding,
+                                u32_pool,
+                            );
+                            give_u32(u32_pool, pending);
+                            res?;
+                        } else {
+                            parked.push((version, pending));
+                        }
+                        last_progress = self.clock.now();
+                    }
+                    ClusterMsg::Stale { .. } => {} // stale round/layer
                     _ => deferred.push(env),
                 },
                 Err(QpError::Timeout) => {}
@@ -378,6 +453,7 @@ impl Refe {
             let msg = DispatchMsg {
                 layer,
                 round,
+                ert_version: self.ert.version(),
                 entries: vec![DispatchEntry { expert: expert as u16, rows, slots }],
                 urgent: true,
             };

@@ -16,11 +16,37 @@ pub struct RowRoute {
 
 /// Route every row of `probs` ([B, E], only first `rows` valid).
 pub fn select_top_k(probs: &Tensor, rows: usize, top_k: usize) -> Vec<RowRoute> {
+    select_top_k_hotspot(probs, rows, top_k, None)
+}
+
+/// Top-k routing with an optional hotspot skew (DESIGN.md §11): when
+/// `hotspot` names an expert, every row routes to it — if it missed the
+/// natural top-k, it replaces the lowest-probability pick (at its own
+/// router probability) before renormalization. Deterministic, so the
+/// skew is a workload property: the same prompts produce the same
+/// streams under any fault/scaling schedule.
+pub fn select_top_k_hotspot(
+    probs: &Tensor,
+    rows: usize,
+    top_k: usize,
+    hotspot: Option<usize>,
+) -> Vec<RowRoute> {
     let e = probs.row_len();
     assert!(top_k <= e);
     (0..rows)
         .map(|i| {
             let mut gates = ops::top_k(probs.row(i), top_k);
+            if let Some(hk) = hotspot {
+                if hk < e && !gates.is_empty() && !gates.iter().any(|&(x, _)| x == hk) {
+                    let last = gates.len() - 1;
+                    gates[last] = (hk, probs.row(i)[hk]);
+                    gates.sort_by(|a, b| {
+                        b.1.partial_cmp(&a.1)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.0.cmp(&b.0))
+                    });
+                }
+            }
             ops::renormalize(&mut gates);
             RowRoute { gates }
         })
@@ -97,6 +123,32 @@ mod tests {
         assert_eq!(g.groups[&1].len(), 2);
         assert_eq!(g.groups[&3].len(), 1);
         assert_eq!(g.batch_sizes(), vec![(0, 2), (1, 2), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn hotspot_skew_routes_every_row_to_the_expert() {
+        let p = probs(vec![
+            vec![0.6, 0.3, 0.05, 0.05], // natural: e0, e1
+            vec![0.1, 0.6, 0.25, 0.05], // natural: e1, e2
+        ]);
+        let routes = select_top_k_hotspot(&p, 2, 2, Some(3));
+        for r in &routes {
+            assert!(r.gates.iter().any(|&(e, _)| e == 3), "hotspot missing: {r:?}");
+            assert_eq!(r.gates.len(), 2);
+            let sum: f32 = r.gates.iter().map(|(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            // Descending weights preserved after the swap.
+            assert!(r.gates.windows(2).all(|w| w[0].1 >= w[1].1));
+        }
+        // Row 0 keeps its top pick; the weaker e1 was displaced.
+        assert_eq!(routes[0].gates[0].0, 0);
+        // Already-selected hotspot rows are untouched.
+        let natural = select_top_k(&p, 2, 2);
+        let skewed = select_top_k_hotspot(&p, 2, 2, Some(1));
+        assert_eq!(natural[0].gates.len(), skewed[0].gates.len());
+        assert_eq!(natural[1], skewed[1], "row already routing to e1 must not change");
+        // Out-of-range hotspot is ignored.
+        assert_eq!(select_top_k_hotspot(&p, 2, 2, Some(99)), natural);
     }
 
     #[test]

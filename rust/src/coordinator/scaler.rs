@@ -1,0 +1,383 @@
+//! Elastic expert-worker scaling policy (DESIGN.md §11).
+//!
+//! The EWs accumulate per-expert activation counters (tokens routed per
+//! expert per `[scaler]` window) and beacon them to the orchestrator as
+//! [`EwStatus`](crate::proto::ClusterMsg::EwStatus) — the expert-tier
+//! sibling of the AW load beacon. This module is the pure *policy* side
+//! consuming those beacons:
+//!
+//! - a **hot** expert (window tokens at/above `hot_threshold`) scales
+//!   out: its least-loaded live shadow replica is promoted to primary
+//!   (warm — the weights are already resident, so nothing is uploaded on
+//!   the critical path), or a fresh EW is provisioned when no alternate
+//!   candidate exists;
+//! - a **cold** EW (window tokens strictly below `cold_threshold`)
+//!   scales in: its primaries are remapped onto the remaining candidates
+//!   and the EW is retired — rejected up front if it is the last replica
+//!   of any expert, so tokens can never be stranded;
+//! - `cooldown` spaces actions out (flap damping), and an all-idle
+//!   cluster never scales in (there is nothing to learn from silence).
+//!
+//! The *mechanism* lives with its owners: the orchestrator edits the ERT
+//! through [`promote`]/[`retire`] (version bump + broadcast), the EW
+//! serves straddling dispatches routed under pre-retirement versions and
+//! answers newer ones with `Stale`, and the REFE re-resolves stale slots
+//! once its table catches up. Everything here is deterministic: ordered
+//! maps, ascending iteration, ties toward the lowest id.
+
+use crate::config::ScalerConfig;
+use crate::proto::ErtTable;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// One scaling decision, executed by the orchestrator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScalePlan {
+    /// Reorder `expert`'s candidate list so `to` (a live shadow) leads.
+    PromoteShadow { expert: usize, to: u32 },
+    /// No alternate replica exists: provision a fresh EW for `expert`.
+    ProvisionFresh { expert: usize },
+    /// Remap `ew`'s primaries onto the remaining candidates, retire it.
+    Retire { ew: u32 },
+}
+
+/// Move `ew` to the front of `expert`'s candidate list. Returns false if
+/// `ew` is not a candidate or already primary (nothing to do).
+pub fn promote(table: &mut ErtTable, expert: usize, ew: u32) -> bool {
+    let Some(cands) = table.get_mut(expert) else { return false };
+    if cands.first() == Some(&ew) || !cands.contains(&ew) {
+        return false;
+    }
+    cands.retain(|&c| c != ew);
+    cands.insert(0, ew);
+    true
+}
+
+/// Would removing `ew` leave some expert with no candidate at all? The
+/// last-replica guard shared by [`retire`] and the planner's cold-EW
+/// screening (which must not pay a table clone per candidate).
+pub fn retire_strands(table: &ErtTable, ew: u32) -> bool {
+    table.iter().any(|c| !c.is_empty() && c.iter().all(|&x| x == ew))
+}
+
+/// Remove `ew` from every candidate list. Refuses (table untouched) if
+/// that would leave any expert with no candidate — the last-replica
+/// guard: a retirement can demote, never strand.
+pub fn retire(table: &mut ErtTable, ew: u32) -> bool {
+    if retire_strands(table, ew) {
+        return false;
+    }
+    for cands in table.iter_mut() {
+        cands.retain(|&c| c != ew);
+    }
+    true
+}
+
+/// The utilization-driven scaling policy.
+pub struct Scaler {
+    cfg: ScalerConfig,
+    /// Latest window's per-expert counts, per reporting EW.
+    counts: BTreeMap<u32, BTreeMap<u16, u64>>,
+    last_action: Option<Duration>,
+    /// expert -> (the EW it was last promoted *off*, when). A still-hot
+    /// expert must not be promoted straight back where it just came
+    /// from — that is the A<->B flip-flop, which moves load in a circle
+    /// while bumping the ERT version every cooldown. The entry expires
+    /// after a few cooldowns so a *persistently* lopsided expert (e.g. a
+    /// two-replica ring) can still rebalance, just at a bounded cadence.
+    last_moved_from: BTreeMap<usize, (u32, Duration)>,
+    /// expert -> when a fresh-EW provision was issued for it: spawning +
+    /// integration outlast a cooldown, so without this a hot expert
+    /// would be re-provisioned every period until the first EW lands.
+    /// Cleared once the expert shows an alternate candidate (the fresh
+    /// EW integrated into the table); expires after a few cooldowns so a
+    /// failed spawn — or a fresh EW that integrated and then died — does
+    /// not block provisioning for that expert forever.
+    pending_fresh: BTreeMap<usize, Duration>,
+}
+
+impl Scaler {
+    pub fn new(cfg: ScalerConfig) -> Scaler {
+        Scaler {
+            cfg,
+            counts: BTreeMap::new(),
+            last_action: None,
+            last_moved_from: BTreeMap::new(),
+            pending_fresh: BTreeMap::new(),
+        }
+    }
+
+    /// Record an EW's window beacon (replaces its previous window).
+    pub fn ingest(&mut self, ew: u32, tokens: Vec<(u16, u64)>) {
+        self.counts.insert(ew, tokens.into_iter().collect());
+    }
+
+    /// Drop a departed EW's counts (failure or retirement).
+    pub fn forget(&mut self, ew: u32) {
+        self.counts.remove(&ew);
+    }
+
+    /// Evaluate the latest windows against the current ERT and live EW
+    /// set. Issuing a plan starts the cooldown and clears the windows —
+    /// deliberately even if the orchestrator then rejects the plan
+    /// (e.g. its fabric-liveness cross-checks fire during a failure
+    /// window): the cooldown doubles as reject backoff, one retry per
+    /// period instead of one per beacon, until cluster state converges.
+    pub fn plan(&mut self, now: Duration, table: &ErtTable, live: &[u32]) -> Option<ScalePlan> {
+        if let Some(t) = self.last_action {
+            if now.saturating_sub(t) < self.cfg.cooldown {
+                return None;
+            }
+        }
+        // Per-expert and per-EW totals over the live reporters.
+        let mut expert_totals: BTreeMap<u16, u64> = BTreeMap::new();
+        let mut ew_totals: BTreeMap<u32, u64> = BTreeMap::new();
+        for (&ew, window) in &self.counts {
+            if !live.contains(&ew) {
+                continue;
+            }
+            let mut total = 0u64;
+            for (&e, &n) in window {
+                *expert_totals.entry(e).or_insert(0) += n;
+                total += n;
+            }
+            ew_totals.insert(ew, total);
+        }
+
+        // Hot expert: highest window total at/above the threshold
+        // (ties break toward the lowest expert id).
+        let hot = expert_totals
+            .iter()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            .map(|(&e, &n)| (e as usize, n));
+        // Both memories expire on the same patience horizon: long enough
+        // to outlast a spawn + integration, short enough that a failed
+        // spawn or a genuinely persistent imbalance unblocks again.
+        let patience = self.cfg.cooldown * 4;
+        if let Some((expert, n)) = hot {
+            if n >= self.cfg.hot_threshold {
+                if let Some(cands) = table.get(expert) {
+                    let has_live_alternate =
+                        cands.iter().skip(1).any(|c| live.contains(c));
+                    if has_live_alternate {
+                        // A *live* alternate is visible: any in-flight
+                        // fresh provision for this expert has integrated
+                        // (mere table membership of a dead shadow does
+                        // not count — that is exactly the lagging-table
+                        // window the latch exists for).
+                        self.pending_fresh.remove(&expert);
+                    }
+                    // Least-loaded live alternate candidate (ties: lowest
+                    // id); its weights are already resident — promotion
+                    // is a pure table edit. The EW this expert was just
+                    // promoted off is excluded while the damping window
+                    // lasts (flip-flop damping); afterwards it becomes a
+                    // candidate again so a persistent imbalance can still
+                    // rebalance, at a bounded cadence.
+                    let moved_from = self
+                        .last_moved_from
+                        .get(&expert)
+                        .and_then(|&(ew, t0)| {
+                            (now.saturating_sub(t0) < patience).then_some(ew)
+                        });
+                    let alt = cands
+                        .iter()
+                        .skip(1)
+                        .filter(|&&c| live.contains(&c) && Some(c) != moved_from)
+                        .min_by_key(|&&c| (ew_totals.get(&c).copied().unwrap_or(0), c))
+                        .copied();
+                    if let Some(to) = alt {
+                        if let Some(&primary) = cands.first() {
+                            self.last_moved_from.insert(expert, (primary, now));
+                        }
+                        self.last_action = Some(now);
+                        self.counts.clear();
+                        return Some(ScalePlan::PromoteShadow { expert, to });
+                    }
+                    let latched = self
+                        .pending_fresh
+                        .get(&expert)
+                        .is_some_and(|&t0| now.saturating_sub(t0) < patience);
+                    if !has_live_alternate && !latched {
+                        self.pending_fresh.insert(expert, now);
+                        self.last_action = Some(now);
+                        self.counts.clear();
+                        return Some(ScalePlan::ProvisionFresh { expert });
+                    }
+                    // Alternates exist but are all damped, or a fresh EW
+                    // is already on its way: hold position.
+                }
+            }
+        }
+
+        // Cold EWs: window totals strictly below the threshold, coldest
+        // first — the first one whose retirement keeps every expert
+        // covered wins, so a last-replica-guarded coldest EW cannot
+        // head-of-line-block shedding the others. An all-idle cluster is
+        // not "cold" — silence carries no load signal.
+        let grand: u64 = ew_totals.values().sum();
+        if self.cfg.cold_threshold > 0 && grand > 0 && live.len() > 1 {
+            let mut cold: Vec<(u64, u32)> = ew_totals
+                .iter()
+                .filter(|kv| *kv.1 < self.cfg.cold_threshold)
+                .map(|kv| (*kv.1, *kv.0))
+                .collect();
+            cold.sort_unstable();
+            for (_, ew) in cold {
+                if !retire_strands(table, ew) {
+                    self.last_action = Some(now);
+                    self.counts.clear();
+                    return Some(ScalePlan::Retire { ew });
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ScalerConfig {
+        ScalerConfig {
+            enabled: true,
+            window: Duration::from_millis(10),
+            hot_threshold: 10,
+            cold_threshold: 2,
+            cooldown: Duration::from_millis(100),
+            retire_linger: Duration::from_millis(20),
+        }
+    }
+
+    /// 4 experts over 2 EWs, ring shadows (the small_test layout).
+    fn table2() -> ErtTable {
+        vec![vec![0, 1], vec![1, 0], vec![0, 1], vec![1, 0]]
+    }
+
+    #[test]
+    fn promote_reorders_and_rejects_non_candidates() {
+        let mut t = table2();
+        assert!(promote(&mut t, 1, 0));
+        assert_eq!(t[1], vec![0, 1]);
+        assert!(!promote(&mut t, 1, 0), "already primary");
+        assert!(!promote(&mut t, 1, 7), "not a candidate");
+        assert!(!promote(&mut t, 99, 0), "unknown expert");
+    }
+
+    #[test]
+    fn retire_remaps_or_refuses_last_replica() {
+        let mut t = table2();
+        assert!(retire(&mut t, 0));
+        assert_eq!(t, vec![vec![1], vec![1], vec![1], vec![1]]);
+        // Now EW1 is the last replica everywhere: retirement must refuse
+        // and leave the table untouched.
+        let before = t.clone();
+        assert!(!retire(&mut t, 1));
+        assert_eq!(t, before);
+    }
+
+    #[test]
+    fn hot_expert_promotes_least_loaded_live_shadow() {
+        let mut s = Scaler::new(cfg());
+        s.ingest(0, vec![(0, 3), (2, 2)]);
+        s.ingest(1, vec![(1, 12), (3, 1)]);
+        let plan = s.plan(Duration::from_millis(10), &table2(), &[0, 1]);
+        assert_eq!(plan, Some(ScalePlan::PromoteShadow { expert: 1, to: 0 }));
+        // Cooldown gates the next action.
+        s.ingest(1, vec![(1, 50)]);
+        assert_eq!(s.plan(Duration::from_millis(20), &table2(), &[0, 1]), None);
+        // ...and expires.
+        s.ingest(1, vec![(1, 50)]);
+        assert!(s.plan(Duration::from_millis(200), &table2(), &[0, 1]).is_some());
+    }
+
+    #[test]
+    fn hot_expert_without_live_alternate_provisions_fresh_once() {
+        let mut s = Scaler::new(cfg());
+        s.ingest(1, vec![(1, 12)]);
+        // Only EW1 is live: expert 1's shadow (EW0) is down.
+        let plan = s.plan(Duration::from_millis(10), &table2(), &[1]);
+        assert_eq!(plan, Some(ScalePlan::ProvisionFresh { expert: 1 }));
+        // Still hot past the cooldown, fresh EW still spawning: no
+        // duplicate provision.
+        s.ingest(1, vec![(1, 12)]);
+        assert_eq!(s.plan(Duration::from_millis(200), &table2(), &[1]), None);
+        // The latch expires (failed spawn / fresh EW died) after a few
+        // cooldowns: provisioning unblocks rather than sticking forever.
+        s.ingest(1, vec![(1, 12)]);
+        let plan = s.plan(Duration::from_millis(1500), &table2(), &[1]);
+        assert_eq!(plan, Some(ScalePlan::ProvisionFresh { expert: 1 }));
+        // The fresh EW integrated (an alternate is visible again): the
+        // pending latch clears and promotion takes over.
+        let integrated: ErtTable = vec![vec![0, 1], vec![2, 1], vec![0, 1], vec![1, 0]];
+        s.ingest(1, vec![(1, 12)]);
+        let plan = s.plan(Duration::from_millis(1700), &integrated, &[1, 2]);
+        assert_eq!(plan, Some(ScalePlan::PromoteShadow { expert: 1, to: 1 }));
+    }
+
+    #[test]
+    fn promotion_never_flips_straight_back() {
+        let mut s = Scaler::new(cfg());
+        s.ingest(0, vec![(0, 2)]);
+        s.ingest(1, vec![(1, 12)]);
+        let mut table = table2();
+        let plan = s.plan(Duration::from_millis(10), &table, &[0, 1]);
+        assert_eq!(plan, Some(ScalePlan::PromoteShadow { expert: 1, to: 0 }));
+        assert!(promote(&mut table, 1, 0));
+        // Expert 1 stays hot on its new primary (EW0): promoting it
+        // straight back to EW1 would be the flip-flop — hold position.
+        // (EW1 keeps enough traffic to stay above the cold threshold.)
+        s.ingest(0, vec![(1, 12)]);
+        s.ingest(1, vec![(3, 5)]);
+        assert_eq!(s.plan(Duration::from_millis(200), &table, &[0, 1]), None);
+    }
+
+    #[test]
+    fn cold_ew_retires_but_idle_cluster_does_not() {
+        let mut s = Scaler::new(cfg());
+        // All idle: no scale-in from silence.
+        s.ingest(0, vec![]);
+        s.ingest(1, vec![]);
+        assert_eq!(s.plan(Duration::from_millis(10), &table2(), &[0, 1]), None);
+        // EW0 busy, EW1 cold: retire EW1.
+        s.ingest(0, vec![(0, 5), (2, 4)]);
+        s.ingest(1, vec![(1, 1)]);
+        let plan = s.plan(Duration::from_millis(20), &table2(), &[0, 1]);
+        assert_eq!(plan, Some(ScalePlan::Retire { ew: 1 }));
+    }
+
+    #[test]
+    fn cold_retire_respects_last_replica_guard() {
+        let mut s = Scaler::new(cfg());
+        // Single-candidate table (no shadows): EW1 cold but irreplaceable.
+        let t: ErtTable = vec![vec![0], vec![1]];
+        s.ingest(0, vec![(0, 5)]);
+        s.ingest(1, vec![(1, 1)]);
+        assert_eq!(s.plan(Duration::from_millis(10), &t, &[0, 1]), None);
+    }
+
+    #[test]
+    fn guarded_coldest_ew_does_not_block_other_cold_retirements() {
+        let mut s = Scaler::new(cfg());
+        // EW2 is the coldest but the sole replica of expert 2; EW1 is
+        // also cold and fully covered. Shedding must skip past EW2.
+        let t: ErtTable = vec![vec![0, 1], vec![1, 0], vec![2]];
+        s.ingest(0, vec![(0, 6)]);
+        s.ingest(1, vec![(1, 1)]);
+        s.ingest(2, vec![(2, 0)]);
+        let plan = s.plan(Duration::from_millis(10), &t, &[0, 1, 2]);
+        assert_eq!(plan, Some(ScalePlan::Retire { ew: 1 }));
+    }
+
+    #[test]
+    fn dead_reporters_are_excluded() {
+        let mut s = Scaler::new(cfg());
+        s.ingest(0, vec![(0, 50)]);
+        s.forget(0);
+        assert_eq!(s.plan(Duration::from_millis(10), &table2(), &[0, 1]), None);
+        // Live filter also excludes stale counts from departed EWs.
+        s.ingest(7, vec![(0, 50)]);
+        assert_eq!(s.plan(Duration::from_millis(20), &table2(), &[0, 1]), None);
+    }
+}

@@ -120,6 +120,7 @@ pub fn run_serving(spec: &ServeSpec) -> ServeOutcome {
         num_requests: 0,
         duration_secs: spec.duration_secs,
         seed: spec.seed,
+        hotspot_expert: None,
     };
     let limits = Limits::from_model(&manifest.model, &manifest.buckets);
     let schedule = workload::generate(&wl, limits);

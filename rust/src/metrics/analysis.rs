@@ -116,6 +116,8 @@ impl RunAnalysis {
                 EventKind::Finished => finished += 1,
                 EventKind::Preempted => preemptions += 1,
                 EventKind::Rejected => rejections += 1,
+                // Cluster reconfiguration markers, not request lifecycle.
+                EventKind::ScaleOut | EventKind::ScaleIn | EventKind::ShadowPromoted => {}
             }
         }
 

@@ -37,6 +37,15 @@ pub enum EventKind {
     /// Request was preempted under KV pressure or a drain: checkpoint
     /// flushed, pages evicted, parked for re-admission.
     Preempted,
+    /// Expert tier grew: a fresh EW was provisioned (`request` = expert
+    /// id + 1 it hosts, or 0 for a universal shadow; `worker` = new EW).
+    ScaleOut,
+    /// Expert tier shrank: an EW was retired after remapping its
+    /// primaries onto the remaining candidates (`worker` = retired EW).
+    ScaleIn,
+    /// A hot expert's shadow replica became primary — warm scale-out,
+    /// no weight upload (`request` = expert id, `worker` = promoted EW).
+    ShadowPromoted,
 }
 
 impl EventKind {
@@ -49,6 +58,9 @@ impl EventKind {
             EventKind::Migrated => "migrated",
             EventKind::Rejected => "rejected",
             EventKind::Preempted => "preempted",
+            EventKind::ScaleOut => "scale_out",
+            EventKind::ScaleIn => "scale_in",
+            EventKind::ShadowPromoted => "shadow_promoted",
         }
     }
 }

@@ -67,6 +67,11 @@ pub struct DispatchMsg {
     pub layer: u32,
     /// AW-local step counter (debugging/tracing).
     pub round: u64,
+    /// The ERT version this dispatch was routed under (DESIGN.md §11):
+    /// an EW retired at version v serves straddling dispatches with
+    /// `ert_version < v` and answers newer ones with `Stale`, so token
+    /// streams stay byte-identical across scaling remaps.
+    pub ert_version: u64,
     pub entries: Vec<DispatchEntry>,
     /// Replayed after a failure: the EW must execute immediately without
     /// waiting for the layer batch (§5.1 "replayed requests are
@@ -206,6 +211,18 @@ impl AwStatus {
     }
 }
 
+/// EW load beacon (EW -> orchestrator), the expert-tier sibling of the
+/// AW `Status` beacon: tokens routed per expert over the last `[scaler]`
+/// window. Counts accumulate once per (token row, layer) execution —
+/// a uniform per-layer multiplier, fine for a relative utilization
+/// signal. Drives the elastic scaling policy (DESIGN.md §11).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EwStatus {
+    pub ew: u32,
+    /// (expert, token rows executed in the window), expert-ascending.
+    pub tokens: Vec<(u16, u64)>,
+}
+
 // ---------------------------------------------------------------------------
 // Orchestration / admin
 // ---------------------------------------------------------------------------
@@ -280,6 +297,25 @@ pub enum ClusterMsg {
     /// it and migrate its residents (to `target` if given, else to the
     /// least-pressure live AWs).
     DrainAw { aw: u32, target: Option<u32> },
+    // ---- elastic EW scaling (DESIGN.md §11) ----
+    /// EW -> orchestrator: per-expert activation counters for the last
+    /// scaler window (the expert-tier load beacon).
+    EwStatus(EwStatus),
+    /// orchestrator -> EW: you are retired as of this ERT version. Serve
+    /// in-flight dispatches routed under older versions, answer newer
+    /// ones with `Stale`, then leave the fabric after the linger window.
+    RetireEw { version: u64 },
+    /// EW -> AW: this EW no longer serves the dispatched experts as of
+    /// `version` — the REFE must re-resolve the listed slots against an
+    /// ERT at/after that version and replay them.
+    Stale { layer: u32, round: u64, version: u64, slots: Vec<u32> },
+    /// admin -> orchestrator: provision one fresh EW as a warm tail
+    /// candidate (shadow) for every expert — manual scale-out.
+    ScaleEwUp,
+    /// admin -> orchestrator: retire this EW, remapping its primaries
+    /// onto the remaining candidates — manual scale-in. Rejected (not
+    /// stranded) if the EW is the last replica of any of its experts.
+    ScaleEwDown { ew: u32 },
 }
 
 impl ClusterMsg {
@@ -302,6 +338,8 @@ impl ClusterMsg {
                 HDR_BYTES + requests.len() * 8
             }
             ClusterMsg::Rejected { reason, .. } => HDR_BYTES + reason.len(),
+            ClusterMsg::EwStatus(st) => HDR_BYTES + st.tokens.len() * 12,
+            ClusterMsg::Stale { slots, .. } => HDR_BYTES + slots.len() * 4,
             _ => HDR_BYTES,
         }
     }
@@ -313,11 +351,13 @@ mod tests {
 
     #[test]
     fn wire_sizes_scale_with_payload() {
-        let small = DispatchMsg { layer: 0, round: 0, entries: vec![], urgent: false };
+        let small =
+            DispatchMsg { layer: 0, round: 0, ert_version: 1, entries: vec![], urgent: false };
         let g = Tensor::zeros(vec![4, 128]);
         let big = DispatchMsg {
             layer: 0,
             round: 0,
+            ert_version: 1,
             entries: vec![DispatchEntry {
                 expert: 1,
                 rows: (0..4).map(|i| g.row_tensor(i)).collect(),

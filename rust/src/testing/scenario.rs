@@ -38,6 +38,50 @@ pub enum Fault {
     DrainAw(u32),
     /// Planned migration: drain `from`, steering its requests onto `to`.
     MigrateAw(u32, u32),
+    /// Elastic scale-out (DESIGN.md §11): provision one fresh EW as a
+    /// warm tail candidate for every expert.
+    ScaleEwUp,
+    /// Elastic scale-in: remap the EW's primaries onto the remaining
+    /// candidates and retire it (rejected for a last replica).
+    ScaleEwDown(u32),
+    /// Workload-shaping: skew the router onto expert K for the whole run
+    /// (installed at launch regardless of the scheduled time, so token
+    /// streams stay comparable across fault schedules; kept by
+    /// [`Scenario::without_faults`] for the same reason).
+    Hotspot(u32),
+}
+
+/// The DSL verb table — the single source for parsing, the usage/error
+/// text, and the canonical rendering. Adding a verb means adding a row
+/// here (the drift-guard tests parse every `example` and require the
+/// error text to advertise every `name`).
+pub const VERBS: &[VerbSpec] = &[
+    VerbSpec { name: "kill", usage: "kill <aw|ew><N>", example: "at 10ms kill ew1" },
+    VerbSpec { name: "respawn", usage: "respawn <aw|ew><N>", example: "at 10ms respawn aw0" },
+    VerbSpec { name: "drain", usage: "drain aw<N>", example: "at 10ms drain aw0" },
+    VerbSpec { name: "sever", usage: "sever <node> <node>", example: "at 10ms sever aw0 ew0" },
+    VerbSpec { name: "heal", usage: "heal <node> <node>", example: "at 10ms heal aw0 ew0" },
+    VerbSpec { name: "migrate", usage: "migrate aw<A> aw<B>", example: "at 10ms migrate aw0 aw1" },
+    VerbSpec {
+        name: "scale_ew",
+        usage: "scale_ew up | scale_ew down ew<N>",
+        example: "at 10ms scale_ew down ew1",
+    },
+    VerbSpec { name: "hotspot", usage: "hotspot e<K>", example: "at 10ms hotspot e2" },
+];
+
+/// One row of the verb table.
+#[derive(Debug, Clone, Copy)]
+pub struct VerbSpec {
+    pub name: &'static str,
+    pub usage: &'static str,
+    pub example: &'static str,
+}
+
+/// The usage string advertised by parse errors — generated from [`VERBS`]
+/// so new verbs cannot drift out of the error text.
+pub fn verb_usage() -> String {
+    VERBS.iter().map(|v| v.usage).collect::<Vec<_>>().join(", ")
 }
 
 /// A fault scheduled at an offset from the schedule start.
@@ -48,17 +92,20 @@ pub struct ScheduledFault {
 }
 
 impl ScheduledFault {
-    /// Parse one DSL line: `at <N>(us|ms|s) <verb> <node> [<node>]`, e.g.
+    /// Parse one DSL line: `at <N>(us|ms|s) <verb> ...`, e.g.
     /// `at 120ms kill ew1`, `at 300ms sever aw0 store`,
-    /// `at 800ms respawn aw0`, `at 900ms heal aw0 store`.
+    /// `at 500ms scale_ew down ew0`, `at 0ms hotspot e2`.
     pub fn parse(line: &str) -> Result<ScheduledFault, String> {
         let toks: Vec<&str> = line.split_whitespace().collect();
         let bad = |msg: &str| Err(format!("bad fault '{line}': {msg}"));
         if toks.len() < 4 || toks[0] != "at" {
-            return bad("expected `at <time> <verb> <node> [<node>]`");
+            return bad(&format!("expected `at <time> <verb> ...` ({})", verb_usage()));
         }
         let at = parse_time(toks[1]).ok_or_else(|| format!("bad fault '{line}': bad time"))?;
         let verb = toks[2];
+        let Some(spec) = VERBS.iter().find(|v| v.name == verb) else {
+            return bad(&format!("unknown verb '{verb}' (supported: {})", verb_usage()));
+        };
         let node =
             |t: &str| parse_node(t).ok_or_else(|| format!("bad fault '{line}': bad node '{t}'"));
         let fault = match (verb, toks.len()) {
@@ -82,14 +129,47 @@ impl ScheduledFault {
             },
             ("sever", 5) => Fault::Sever(node(toks[3])?, node(toks[4])?),
             ("heal", 5) => Fault::Heal(node(toks[3])?, node(toks[4])?),
-            _ => {
-                return bad(
-                    "unknown verb/arity (kill|respawn|drain <node>, \
-                     sever|heal|migrate <a> <b>)",
-                )
+            ("scale_ew", 4) if toks[3] == "up" => Fault::ScaleEwUp,
+            ("scale_ew", 5) if toks[3] == "down" => match node(toks[4])? {
+                NodeId::Ew(i) => Fault::ScaleEwDown(i),
+                other => return bad(&format!("cannot scale down {other} (EWs only)")),
+            },
+            ("hotspot", 4) => {
+                let expert = toks[3]
+                    .strip_prefix('e')
+                    .and_then(|v| v.parse::<u32>().ok())
+                    .ok_or_else(|| format!("bad fault '{line}': bad expert '{}'", toks[3]))?;
+                Fault::Hotspot(expert)
             }
+            _ => return bad(&format!("bad arity for '{verb}' (usage: {})", spec.usage)),
         };
         Ok(ScheduledFault { at, fault })
+    }
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::KillAw(i) => write!(f, "kill aw{i}"),
+            Fault::KillEw(i) => write!(f, "kill ew{i}"),
+            Fault::Sever(a, b) => write!(f, "sever {a} {b}"),
+            Fault::Heal(a, b) => write!(f, "heal {a} {b}"),
+            Fault::RespawnAw(i) => write!(f, "respawn aw{i}"),
+            Fault::RespawnEw(i) => write!(f, "respawn ew{i}"),
+            Fault::DrainAw(i) => write!(f, "drain aw{i}"),
+            Fault::MigrateAw(a, b) => write!(f, "migrate aw{a} aw{b}"),
+            Fault::ScaleEwUp => write!(f, "scale_ew up"),
+            Fault::ScaleEwDown(i) => write!(f, "scale_ew down ew{i}"),
+            Fault::Hotspot(e) => write!(f, "hotspot e{e}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ScheduledFault {
+    /// Canonical DSL rendering — `parse(x.to_string())` round-trips, so
+    /// failing chaos schedules print in directly replayable form.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "at {}us {}", self.at.as_micros(), self.fault)
     }
 }
 
@@ -189,10 +269,12 @@ impl Scenario {
     }
 
     /// A copy with the fault schedule stripped — the failure-free baseline
-    /// the matrix tests compare token streams against.
+    /// the matrix tests compare token streams against. Workload-shaping
+    /// verbs (`hotspot`) are kept: they define *what* is computed, not
+    /// what fails, so the baseline must compute the same streams.
     pub fn without_faults(&self) -> Scenario {
         let mut s = self.clone();
-        s.faults.clear();
+        s.faults.retain(|f| matches!(f.fault, Fault::Hotspot(_)));
         s.name = format!("{}-baseline", s.name);
         s
     }
@@ -203,13 +285,25 @@ impl Scenario {
         let clock = Clock::virtual_seeded(self.seed);
         let guard = clock.register();
         let opts = LaunchOptions { clock: clock.clone(), ..Default::default() };
-        let cluster =
-            Cluster::launch(self.cfg.clone(), manifest, weights, self.schedule.clone(), opts);
+        // Hotspot verbs are workload-shaping: they configure the routers
+        // at launch (whole-run skew) rather than firing at their
+        // scheduled time — a mid-run routing flip would make streams
+        // depend on where each request's decode happened to be when the
+        // flip landed, destroying cross-schedule comparability.
+        let mut cfg = self.cfg.clone();
+        let mut timed: Vec<ScheduledFault> = Vec::new();
+        for f in &self.faults {
+            match f.fault {
+                Fault::Hotspot(e) => cfg.workload.hotspot_expert = Some(e as usize),
+                _ => timed.push(f.clone()),
+            }
+        }
+        let cluster = Cluster::launch(cfg, manifest, weights, self.schedule.clone(), opts);
 
         // The gateway's schedule clock and the event log both start at
         // launch return (bring-up excluded); anchor fault times there too.
         let t0 = clock.now();
-        let mut faults = self.faults.clone();
+        let mut faults = timed;
         faults.sort_by_key(|f| f.at);
         for f in &faults {
             clock.sleep_until(t0 + f.at);
@@ -254,6 +348,10 @@ fn apply(cluster: &Cluster, fault: &Fault) {
         }
         Fault::DrainAw(i) => cluster.drain_aw(*i),
         Fault::MigrateAw(a, b) => cluster.migrate_aw(*a, *b),
+        Fault::ScaleEwUp => cluster.scale_ew_up(),
+        Fault::ScaleEwDown(i) => cluster.scale_ew_down(*i),
+        // Workload-shaping: consumed at launch by `Scenario::run`.
+        Fault::Hotspot(_) => {}
     }
 }
 
@@ -328,6 +426,18 @@ mod tests {
             ScheduledFault::parse("at 1s migrate aw0 aw1").unwrap(),
             ScheduledFault { at: Duration::from_secs(1), fault: Fault::MigrateAw(0, 1) }
         );
+        assert_eq!(
+            ScheduledFault::parse("at 100ms scale_ew up").unwrap(),
+            ScheduledFault { at: Duration::from_millis(100), fault: Fault::ScaleEwUp }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 100ms scale_ew down ew2").unwrap(),
+            ScheduledFault { at: Duration::from_millis(100), fault: Fault::ScaleEwDown(2) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 0ms hotspot e3").unwrap(),
+            ScheduledFault { at: Duration::ZERO, fault: Fault::Hotspot(3) }
+        );
     }
 
     #[test]
@@ -345,8 +455,46 @@ mod tests {
             "at 10ms drain store",
             "at 10ms migrate aw0 ew1",
             "at 10ms migrate aw0",
+            "at 10ms scale_ew sideways",
+            "at 10ms scale_ew down aw0",
+            "at 10ms scale_ew down",
+            "at 10ms hotspot ew1",
+            "at 10ms hotspot 3",
         ] {
             assert!(ScheduledFault::parse(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    /// Drift guards: the verb table is the single source — every row's
+    /// example parses, every row's name appears in the unknown-verb error
+    /// text, and the canonical rendering round-trips through the parser.
+    #[test]
+    fn verb_table_examples_parse_and_errors_advertise_every_verb() {
+        for spec in VERBS {
+            let parsed = ScheduledFault::parse(spec.example)
+                .unwrap_or_else(|e| panic!("example for '{}' failed: {e}", spec.name));
+            // Round-trip: canonical rendering parses back to the same fault.
+            let reparsed = ScheduledFault::parse(&parsed.to_string()).unwrap();
+            assert_eq!(parsed, reparsed, "rendering of '{}' does not round-trip", spec.name);
+        }
+        let err = ScheduledFault::parse("at 10ms explode ew0").unwrap_err();
+        for spec in VERBS {
+            assert!(
+                err.contains(spec.usage),
+                "error text omits '{}' (got: {err})",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn without_faults_strips_failures_but_keeps_hotspot() {
+        let s = Scenario::new("wf", Config::small_test())
+            .fault("at 10ms kill ew0")
+            .fault("at 0ms hotspot e1")
+            .fault("at 20ms scale_ew down ew1");
+        let base = s.without_faults();
+        assert_eq!(base.faults.len(), 1);
+        assert_eq!(base.faults[0].fault, Fault::Hotspot(1));
     }
 }

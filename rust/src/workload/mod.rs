@@ -93,7 +93,14 @@ mod tests {
     }
 
     fn cfg(kind: WorkloadKind, rate: f64, dur: f64, seed: u64) -> WorkloadConfig {
-        WorkloadConfig { kind, rate_rps: rate, num_requests: 0, duration_secs: dur, seed }
+        WorkloadConfig {
+            kind,
+            rate_rps: rate,
+            num_requests: 0,
+            duration_secs: dur,
+            seed,
+            hotspot_expert: None,
+        }
     }
 
     #[test]

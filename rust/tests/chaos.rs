@@ -1,0 +1,484 @@
+//! Chaos/soak fuzz suite: seeded random schedules over the full scenario
+//! verb set (kill / respawn / sever+heal / drain / migrate / scale_ew /
+//! hotspot) against a full cluster on the virtual clock.
+//!
+//! Per seed, the generator composes a random workload plus a random fault
+//! schedule that a small cluster model keeps *survivable* (every expert
+//! keeps a reachable replica, at least one routable AW remains), then
+//! asserts the paper's recovery guarantee end to end:
+//!   - the workload drains within the virtual budget,
+//!   - nothing is rejected,
+//!   - the per-request token streams are byte-identical to the
+//!     failure-free baseline (same workload + hotspot, no faults),
+//!   - the KV page budget is never exceeded on any AW arena,
+//!   - same-seed reruns produce byte-identical event logs.
+//!
+//! On failure the schedule is delta-minimized (drop one fault at a time
+//! while the failure reproduces) and printed in DSL form, so the exact
+//! repro is one `Scenario::fault(line)` per printed line.
+//!
+//! Knobs (for CI and local soaking):
+//!   TARRAGON_CHAOS_SEEDS  comma-separated seed list (default 1..=8)
+//!   TARRAGON_CHAOS_STEPS  fault-schedule length per seed (default 10)
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+use tarragon::config::Config;
+use tarragon::testing::scenario::{Fault, Scenario, ScenarioOutcome, ScheduledFault};
+use tarragon::testing::synthetic;
+use tarragon::transport::NodeId;
+use tarragon::util::rng::Pcg;
+
+const DEFAULT_SEEDS: [u64; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+const DEFAULT_STEPS: usize = 10;
+/// How many extra runs the minimizer may spend on a failing seed.
+const MINIMIZE_BUDGET: usize = 24;
+
+fn seeds() -> Vec<u64> {
+    match std::env::var("TARRAGON_CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|t| t.trim().parse::<u64>().ok())
+            .collect(),
+        Err(_) => DEFAULT_SEEDS.to_vec(),
+    }
+}
+
+fn steps() -> usize {
+    std::env::var("TARRAGON_CHAOS_STEPS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_STEPS)
+}
+
+fn chaos_cfg() -> Config {
+    let mut cfg = Config::small_test();
+    cfg.transport.latency = Duration::from_millis(1);
+    cfg.transport.worker_extra_init = Duration::from_millis(50);
+    // The generator owns every respawn: background provisioning would
+    // add replacement EWs the cluster model cannot track.
+    cfg.resilience.provisioning = false;
+    // Bounded arenas so the soak also exercises preemption/restore under
+    // mobility; every generated request fits (<= 4 pages of 16).
+    cfg.sched.kv_budget_pages = 16;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Survivability model: mirrors just enough cluster state to only emit
+// schedules the recovery machinery is *supposed* to mask.
+// ---------------------------------------------------------------------------
+
+struct Model {
+    /// EW -> virtual time from which the router may count on it.
+    ew_ready: BTreeMap<u32, Duration>,
+    /// Scale-up EWs (shadow-everything tail candidates).
+    universal: BTreeSet<u32>,
+    ew_killed: BTreeSet<u32>,
+    ew_retired: BTreeSet<u32>,
+    aw_live: BTreeSet<u32>,
+    aw_killed: BTreeSet<u32>,
+    aw_draining: BTreeSet<u32>,
+    /// AWs that ever drained: never respawned (drain state is sticky on
+    /// the manual respawn path).
+    aw_drained_ever: BTreeSet<u32>,
+    /// An aw<->ew link is severed until this time (at most one at once;
+    /// EW removals are forbidden while it is open).
+    sever_until: Option<Duration>,
+    ups: u32,
+    hotspot_used: bool,
+}
+
+impl Model {
+    fn new() -> Model {
+        Model {
+            ew_ready: [(0, Duration::ZERO), (1, Duration::ZERO)].into_iter().collect(),
+            universal: BTreeSet::new(),
+            ew_killed: BTreeSet::new(),
+            ew_retired: BTreeSet::new(),
+            aw_live: [0, 1].into_iter().collect(),
+            aw_killed: BTreeSet::new(),
+            aw_draining: BTreeSet::new(),
+            aw_drained_ever: BTreeSet::new(),
+            sever_until: None,
+            ups: 0,
+            hotspot_used: false,
+        }
+    }
+
+    fn ew_avail(&self, ew: u32, t: Duration, removed: Option<u32>) -> bool {
+        Some(ew) != removed
+            && !self.ew_killed.contains(&ew)
+            && !self.ew_retired.contains(&ew)
+            && self.ew_ready.get(&ew).map(|&r| r <= t).unwrap_or(false)
+    }
+
+    /// Every expert keeps a usable replica if `removed` goes away: the
+    /// initial ring spans EWs {0, 1} for every expert, and universal
+    /// scale-ups shadow everything.
+    fn covered_without(&self, t: Duration, removed: u32) -> bool {
+        [0u32, 1].iter().any(|&e| self.ew_avail(e, t, Some(removed)))
+            || self.universal.iter().any(|&e| self.ew_avail(e, t, Some(removed)))
+    }
+
+    fn sever_active(&self, t: Duration) -> bool {
+        self.sever_until.map(|until| t < until).unwrap_or(false)
+    }
+
+    fn routable_aws_without(&self, removed: Option<u32>) -> usize {
+        self.aw_live
+            .iter()
+            .filter(|&&a| Some(a) != removed && !self.aw_draining.contains(&a))
+            .count()
+    }
+}
+
+/// One candidate generator action (pre-legality-checked).
+#[derive(Clone)]
+enum Act {
+    KillEw(u32),
+    RespawnEw(u32),
+    ScaleUp,
+    ScaleDown(u32),
+    KillAw(u32),
+    RespawnAw(u32),
+    Drain(u32),
+    Migrate(u32, u32),
+    Sever(u32, u32),
+    Hotspot(u32),
+}
+
+/// Generate one survivable fault schedule; the model is advanced in time
+/// order so each verb's legality is judged against the state it will
+/// actually meet.
+fn gen_faults(rng: &mut Pcg, steps: usize) -> Vec<ScheduledFault> {
+    let mut m = Model::new();
+    let mut out: Vec<ScheduledFault> = Vec::new();
+    let mut t = Duration::from_millis(30);
+    for _ in 0..steps {
+        t += Duration::from_millis(rng.range(15, 50));
+
+        // Enumerate the verbs that are legal right now.
+        let mut acts: Vec<Act> = Vec::new();
+        let sever_open = m.sever_active(t);
+        if !sever_open {
+            for &e in m.ew_ready.keys() {
+                if m.ew_avail(e, t, None) && m.covered_without(t, e) {
+                    acts.push(Act::KillEw(e));
+                    acts.push(Act::ScaleDown(e));
+                }
+            }
+        }
+        for &e in &m.ew_killed {
+            if e <= 1 {
+                acts.push(Act::RespawnEw(e));
+            }
+        }
+        if m.ups < 2 {
+            acts.push(Act::ScaleUp);
+        }
+        for &a in &m.aw_live {
+            if m.routable_aws_without(Some(a)) >= 1 {
+                acts.push(Act::KillAw(a));
+            }
+        }
+        for &a in &m.aw_killed {
+            if !m.aw_drained_ever.contains(&a) {
+                acts.push(Act::RespawnAw(a));
+            }
+        }
+        if m.aw_draining.is_empty() {
+            for &a in &m.aw_live {
+                if m.routable_aws_without(Some(a)) >= 1 {
+                    acts.push(Act::Drain(a));
+                    for &b in &m.aw_live {
+                        if b != a {
+                            acts.push(Act::Migrate(a, b));
+                        }
+                    }
+                }
+            }
+        }
+        if !sever_open {
+            for &a in &m.aw_live {
+                for &e in m.ew_ready.keys() {
+                    if m.ew_avail(e, t, None) && m.covered_without(t, e) {
+                        acts.push(Act::Sever(a, e));
+                    }
+                }
+            }
+        }
+        if !m.hotspot_used {
+            for k in 0..4u32 {
+                acts.push(Act::Hotspot(k));
+            }
+        }
+        if acts.is_empty() {
+            continue;
+        }
+
+        match acts[rng.index(acts.len())].clone() {
+            Act::KillEw(e) => {
+                m.ew_killed.insert(e);
+                out.push(ScheduledFault { at: t, fault: Fault::KillEw(e) });
+            }
+            Act::RespawnEw(e) => {
+                m.ew_killed.remove(&e);
+                m.ew_ready.insert(e, t + Duration::from_millis(150));
+                out.push(ScheduledFault { at: t, fault: Fault::RespawnEw(e) });
+            }
+            Act::ScaleUp => {
+                let idx = 2 + m.ups;
+                m.ups += 1;
+                m.universal.insert(idx);
+                m.ew_ready.insert(idx, t + Duration::from_millis(250));
+                out.push(ScheduledFault { at: t, fault: Fault::ScaleEwUp });
+            }
+            Act::ScaleDown(e) => {
+                m.ew_retired.insert(e);
+                out.push(ScheduledFault { at: t, fault: Fault::ScaleEwDown(e) });
+            }
+            Act::KillAw(a) => {
+                m.aw_live.remove(&a);
+                if m.aw_draining.remove(&a) {
+                    m.aw_drained_ever.insert(a);
+                }
+                m.aw_killed.insert(a);
+                out.push(ScheduledFault { at: t, fault: Fault::KillAw(a) });
+            }
+            Act::RespawnAw(a) => {
+                m.aw_killed.remove(&a);
+                m.aw_live.insert(a);
+                out.push(ScheduledFault { at: t, fault: Fault::RespawnAw(a) });
+            }
+            Act::Drain(a) => {
+                m.aw_draining.insert(a);
+                m.aw_drained_ever.insert(a);
+                out.push(ScheduledFault { at: t, fault: Fault::DrainAw(a) });
+            }
+            Act::Migrate(a, b) => {
+                m.aw_draining.insert(a);
+                m.aw_drained_ever.insert(a);
+                out.push(ScheduledFault { at: t, fault: Fault::MigrateAw(a, b) });
+            }
+            Act::Sever(a, e) => {
+                let heal = t + Duration::from_millis(rng.range(20, 60));
+                m.sever_until = Some(heal);
+                out.push(ScheduledFault {
+                    at: t,
+                    fault: Fault::Sever(NodeId::Aw(a), NodeId::Ew(e)),
+                });
+                out.push(ScheduledFault {
+                    at: heal,
+                    fault: Fault::Heal(NodeId::Aw(a), NodeId::Ew(e)),
+                });
+            }
+            Act::Hotspot(k) => {
+                m.hotspot_used = true;
+                out.push(ScheduledFault { at: t, fault: Fault::Hotspot(k) });
+            }
+        }
+    }
+    out
+}
+
+fn gen_scenario(seed: u64, steps: usize) -> Scenario {
+    let mut rng = Pcg::seeded(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(seed));
+    let mut s = Scenario::new(format!("chaos-{seed}"), chaos_cfg()).seed(seed);
+    let n_reqs = rng.range_usize(4, 7);
+    for id in 0..n_reqs as u64 {
+        // Strictly increasing arrivals: the gateway consumes the
+        // schedule in order.
+        let arrival = Duration::from_millis(id * 10 + rng.range(0, 8));
+        let len = rng.range_usize(3, 9);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.range(1, 127) as u32).collect();
+        let max_new = rng.range_usize(6, 15);
+        s = s.request(id, arrival, prompt, max_new);
+    }
+    for f in gen_faults(&mut rng, steps) {
+        s = s.fault_at(f.at, f.fault);
+    }
+    s
+}
+
+fn render_schedule(s: &Scenario) -> String {
+    s.faults.iter().map(|f| format!("  {f}\n")).collect()
+}
+
+/// Run a scenario and check every chaos invariant against the baseline.
+fn run_and_check(
+    s: &Scenario,
+    base: &ScenarioOutcome,
+    manifest: &std::sync::Arc<tarragon::modelcfg::Manifest>,
+    weights: &tarragon::modelcfg::weights::Weights,
+) -> Result<ScenarioOutcome, String> {
+    let out = s.run(manifest.clone(), weights.clone());
+    if !out.completed {
+        return Err(format!(
+            "did not drain (finished {}/{})",
+            out.report.finished, out.report.submitted
+        ));
+    }
+    if !out.rejections.is_empty() {
+        return Err(format!("unexpected rejections: {:?}", out.rejections));
+    }
+    if out.kv_budget > 0 {
+        for (aw, &peak) in &out.kv_peaks {
+            if peak > out.kv_budget {
+                return Err(format!(
+                    "aw{aw} peaked at {peak} pages (budget {})",
+                    out.kv_budget
+                ));
+            }
+        }
+    }
+    if out.tokens != base.tokens {
+        let diff: Vec<u64> = base
+            .tokens
+            .keys()
+            .filter(|id| base.tokens.get(*id) != out.tokens.get(*id))
+            .copied()
+            .collect();
+        return Err(format!("token streams diverged from baseline for requests {diff:?}"));
+    }
+    Ok(out)
+}
+
+/// The schedule with fault `i` (plus its dependent repair, if any)
+/// removed, or None when `i` must not be removed: a removal is only
+/// sound if it can never *reduce* what the surviving schedule can rely
+/// on. Hotspot is workload-shaping (part of the baseline too); heals
+/// and respawns are repairs that only leave together with the
+/// sever/kill they repair (dropping one alone manufactures a schedule
+/// the survivability model never emits, so the "minimized" failure
+/// would be an artifact); `scale_ew up` adds capacity later verbs may
+/// depend on. Removing a kill/sever/drain/migrate/scale-down only ever
+/// leaves the cluster healthier.
+fn candidate_without(s: &Scenario, i: usize) -> Option<Scenario> {
+    let mut cand = s.clone();
+    // Remove fault `i` and the first matching repair scheduled after it.
+    fn remove_with_repair(
+        cand: &mut Scenario,
+        i: usize,
+        is_repair: impl Fn(&Fault) -> bool,
+    ) {
+        cand.faults.remove(i);
+        if let Some(j) = cand.faults.iter().skip(i).position(|f| is_repair(&f.fault)) {
+            cand.faults.remove(i + j);
+        }
+    }
+    match cand.faults[i].fault {
+        Fault::Hotspot(_)
+        | Fault::Heal(..)
+        | Fault::RespawnEw(_)
+        | Fault::RespawnAw(_)
+        | Fault::ScaleEwUp => return None,
+        Fault::Sever(a, b) => remove_with_repair(&mut cand, i, |f| {
+            matches!(f, Fault::Heal(x, y) if *x == a && *y == b)
+        }),
+        Fault::KillEw(e) => remove_with_repair(&mut cand, i, |f| {
+            matches!(f, Fault::RespawnEw(x) if *x == e)
+        }),
+        Fault::KillAw(a) => remove_with_repair(&mut cand, i, |f| {
+            matches!(f, Fault::RespawnAw(x) if *x == a)
+        }),
+        _ => {
+            cand.faults.remove(i);
+        }
+    }
+    Some(cand)
+}
+
+/// Greedy delta-minimization: drop one fault (or sever+heal pair) at a
+/// time while the failure still reproduces.
+fn minimize(
+    mut s: Scenario,
+    base: &ScenarioOutcome,
+    manifest: &std::sync::Arc<tarragon::modelcfg::Manifest>,
+    weights: &tarragon::modelcfg::weights::Weights,
+) -> Scenario {
+    let mut budget = MINIMIZE_BUDGET;
+    'outer: loop {
+        for i in 0..s.faults.len() {
+            let Some(cand) = candidate_without(&s, i) else { continue };
+            if budget == 0 {
+                break 'outer;
+            }
+            budget -= 1;
+            if run_and_check(&cand, base, manifest, weights).is_err() {
+                s = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    s
+}
+
+#[test]
+fn chaos_soak_full_verb_set() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let seeds = seeds();
+    let steps = steps();
+    assert!(!seeds.is_empty(), "TARRAGON_CHAOS_SEEDS parsed to an empty list");
+    eprintln!("chaos: seeds {seeds:?}, {steps} steps each (replay: TARRAGON_CHAOS_SEEDS=<seed>)");
+
+    for (si, &seed) in seeds.iter().enumerate() {
+        let s = gen_scenario(seed, steps);
+        eprintln!("chaos seed {seed}: {} faults\n{}", s.faults.len(), render_schedule(&s));
+        let base = s.without_faults().run(manifest.clone(), weights.clone());
+        assert!(base.completed, "seed {seed}: baseline did not drain");
+
+        match run_and_check(&s, &base, &manifest, &weights) {
+            Ok(out) => {
+                // Same-seed rerun must replay byte-identically (checked on
+                // the first two seeds to bound suite runtime).
+                if si < 2 {
+                    let again = s.run(manifest.clone(), weights.clone());
+                    assert_eq!(
+                        out.event_log, again.event_log,
+                        "seed {seed}: same-seed rerun diverged (event logs differ)"
+                    );
+                    assert_eq!(out.tokens, again.tokens);
+                }
+            }
+            Err(e) => {
+                eprintln!("chaos seed {seed} FAILED: {e}\nminimizing...");
+                let min = minimize(s, &base, &manifest, &weights);
+                let err = run_and_check(&min, &base, &manifest, &weights)
+                    .err()
+                    .unwrap_or_else(|| "minimized schedule stopped failing".into());
+                panic!(
+                    "chaos seed {seed} failed: {e}\n\
+                     minimized schedule ({}):\n{}\
+                     replay each line via Scenario::fault(..) with seed {seed}",
+                    err,
+                    render_schedule(&min)
+                );
+            }
+        }
+    }
+}
+
+/// The generator itself is deterministic: the same seed produces the
+/// same schedule (the suite's replay contract), and every generated
+/// line round-trips through the DSL parser.
+#[test]
+fn chaos_generator_is_deterministic_and_dsl_clean() {
+    let a = gen_scenario(42, 12);
+    let b = gen_scenario(42, 12);
+    assert_eq!(a.faults, b.faults, "generator must be seed-deterministic");
+    assert_eq!(a.schedule.len(), b.schedule.len());
+    for (x, y) in a.schedule.iter().zip(&b.schedule) {
+        assert_eq!(x.prompt, y.prompt);
+        assert_eq!(x.arrival_s, y.arrival_s);
+    }
+    for f in &a.faults {
+        let line = f.to_string();
+        assert_eq!(
+            &ScheduledFault::parse(&line).unwrap(),
+            f,
+            "generated fault does not round-trip: {line}"
+        );
+    }
+}

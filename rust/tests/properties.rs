@@ -4,6 +4,8 @@
 use tarragon::checkpoint::store::StoreLog;
 use tarragon::coordinator::ert::Ert;
 use tarragon::coordinator::router::{self, ExpertGroups};
+use tarragon::coordinator::scaler;
+use tarragon::proto::ErtTable;
 use tarragon::kvcache::{BatchAssembler, KvPool, PageId, RequestKv};
 use tarragon::modelcfg::{Buckets, ModelSpec};
 use tarragon::proto::{CommitMeta, SegmentMsg};
@@ -111,6 +113,157 @@ fn prop_ert_resolution_is_consistent_under_failures() {
         assert!(ert.apply(v, table));
         for ew in &dead {
             assert!(!ert.is_dead(*ew));
+        }
+    });
+}
+
+/// Elastic-scaling ERT invariants (DESIGN.md §11): under arbitrary
+/// interleavings of local dead-marks, delayed update delivery, shadow
+/// promotions and EW retirements —
+///   (1) the orchestrator's table always keeps every expert covered
+///       (retire can demote, never strand);
+///   (2) an AW replica's version is strictly monotonic (stale updates
+///       rejected, accepted updates strictly newer);
+///   (3) no expert ever resolves to a retired EW once the remap version
+///       that removed it is visible at that replica.
+#[test]
+fn prop_ert_scaling_interleavings_hold_invariants() {
+    check("ert scaling interleavings", 150, |rng, _| {
+        let experts = rng.range_usize(2, 10);
+        let ews = rng.range_usize(2, 7);
+        let initial = Ert::initial(experts, ews, true);
+        let mut table: ErtTable = initial.table().clone();
+        let mut version = initial.version();
+        let mut aw = initial.clone();
+        // Updates the orchestrator has issued but the AW has not applied
+        // yet (in-order delivery, arbitrary lag).
+        let mut pending: std::collections::VecDeque<(u64, ErtTable)> =
+            std::collections::VecDeque::new();
+        // ew -> version at which it was retired.
+        let mut retired: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
+        let mut last_aw_version = aw.version();
+
+        for _ in 0..rng.range_usize(20, 60) {
+            match rng.index(5) {
+                // AW-local probe-confirmed dead mark.
+                0 => aw.mark_dead(rng.range(0, ews as u64) as u32),
+                // Deliver the next pending orchestrator update.
+                1 => {
+                    if let Some((v, t)) = pending.pop_front() {
+                        let accepted = aw.apply(v, t);
+                        assert_eq!(accepted, v > last_aw_version, "apply acceptance wrong");
+                        assert!(aw.version() >= last_aw_version, "version regressed");
+                        last_aw_version = aw.version();
+                    }
+                }
+                // Replay a stale update (must always be rejected).
+                2 => {
+                    let v = aw.version();
+                    assert!(!aw.apply(v, table.clone()), "stale update accepted");
+                    assert_eq!(aw.version(), v);
+                }
+                // Shadow promotion of a random candidate.
+                3 => {
+                    let e = rng.index(experts);
+                    if table[e].len() > 1 {
+                        let to = table[e][rng.index(table[e].len())];
+                        if scaler::promote(&mut table, e, to) {
+                            version += 1;
+                            assert_eq!(table[e][0], to);
+                            pending.push_back((version, table.clone()));
+                        }
+                    }
+                }
+                // Retirement of a random still-live EW.
+                _ => {
+                    let ew = rng.range(0, ews as u64) as u32;
+                    if !retired.contains_key(&ew) {
+                        let before = table.clone();
+                        if scaler::retire(&mut table, ew) {
+                            version += 1;
+                            retired.insert(ew, version);
+                            pending.push_back((version, table.clone()));
+                            assert!(
+                                table.iter().all(|c| !c.contains(&ew)),
+                                "retired EW still referenced"
+                            );
+                        } else {
+                            assert_eq!(table, before, "refused retire mutated the table");
+                        }
+                    }
+                }
+            }
+
+            // (1) Orchestrator-side coverage: every expert keeps >= 1
+            // candidate, and none of them is retired.
+            for (e, cands) in table.iter().enumerate() {
+                assert!(!cands.is_empty(), "expert {e} stranded");
+                for c in cands {
+                    assert!(!retired.contains_key(c), "expert {e} lists retired ew{c}");
+                }
+            }
+            // (3) Replica-side: a resolve may land on a retired EW only
+            // while the remap that removed it is still undelivered.
+            for e in 0..experts {
+                if let Some(w) = aw.resolve(e) {
+                    if let Some(&vr) = retired.get(&w) {
+                        assert!(
+                            aw.version() < vr,
+                            "expert {e} routed to ew{w} retired at v{vr}, \
+                             but replica already applied v{}",
+                            aw.version()
+                        );
+                    }
+                }
+            }
+        }
+
+        // Drain delivery: fully caught up, every expert resolves and no
+        // retired EW is ever routed to again. A final update supersedes
+        // any leftover local dead-marks (probe false positives are
+        // cleared by fresh orchestrator knowledge).
+        version += 1;
+        pending.push_back((version, table.clone()));
+        while let Some((v, t)) = pending.pop_front() {
+            aw.apply(v, t);
+        }
+        for e in 0..experts {
+            let w = aw.resolve(e).expect("caught-up replica must resolve every expert");
+            assert!(!retired.contains_key(&w), "caught-up replica routed to a retired EW");
+        }
+    });
+}
+
+/// The last-replica guard in isolation: retiring an EW that uniquely
+/// hosts some expert must refuse (table untouched); retiring a covered
+/// EW must fully remove it without stranding anyone.
+#[test]
+fn prop_ert_retire_never_strands() {
+    check("ert retire guard", 200, |rng, _| {
+        let experts = rng.range_usize(1, 8);
+        let ews = rng.range_usize(1, 6);
+        // Random table: each expert gets 1..=3 distinct candidates.
+        let mut table: ErtTable = Vec::new();
+        for _ in 0..experts {
+            let n = rng.range_usize(1, 4.min(ews + 1));
+            let mut cands: Vec<u32> = (0..ews as u32).collect();
+            rng.shuffle(&mut cands);
+            cands.truncate(n);
+            table.push(cands);
+        }
+        let victim = rng.range(0, ews as u64) as u32;
+        let sole = table.iter().any(|c| c.len() == 1 && c[0] == victim);
+        let before = table.clone();
+        let ok = scaler::retire(&mut table, victim);
+        if sole {
+            assert!(!ok, "retire of a sole replica must refuse");
+            assert_eq!(table, before, "refused retire must not mutate");
+        } else {
+            assert!(ok);
+            for (e, cands) in table.iter().enumerate() {
+                assert!(!cands.contains(&victim), "victim survives in expert {e}");
+                assert!(!cands.is_empty(), "expert {e} stranded by a permitted retire");
+            }
         }
     });
 }

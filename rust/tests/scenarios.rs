@@ -136,6 +136,104 @@ fn kill_then_respawn_without_provisioning_restores_capacity() {
     assert!(faulty.report.ew_failures >= 1);
 }
 
+// ---------------------------------------------------------------------------
+// Elastic EW scaling (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scale_in_during_decode_keeps_streams_identical() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Retire ew0 mid-decode: its primaries remap onto ew1 (ring shadows
+    // are already resident), in-flight dispatches resolve under the ERT
+    // version they were routed under, and the streams must not move.
+    let s = two_request_scenario("scale-in", Duration::from_millis(1))
+        .fault("at 60ms scale_ew down ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "scale-in");
+    assert_eq!(faulty.tokens, clean.tokens, "scale-in changed token streams");
+    assert!(faulty.report.scale_ins >= 1, "scale-in went unexecuted");
+    // Planned mobility, not a failure: zero EW/AW recoveries.
+    assert_eq!(faulty.report.ew_failures, 0, "scale-in must not count as an EW failure");
+    assert_eq!(faulty.report.aw_failures, 0);
+}
+
+#[test]
+fn hotspot_drives_shadow_promotion_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let mut cfg = scenario_cfg(Duration::from_millis(1));
+    cfg.scaler.enabled = true;
+    cfg.scaler.window = Duration::from_millis(30);
+    cfg.scaler.hot_threshold = 4;
+    cfg.scaler.cold_threshold = 0; // scale-in off: isolate the promotion
+    cfg.scaler.cooldown = Duration::from_secs(10); // at most one action
+    let s = Scenario::new("hotspot-promote", cfg.clone())
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 0ms hotspot e1");
+    // Baseline: same workload and hotspot skew, scaler off — proves the
+    // promotion (not the skew) is what is being exercised, and that it
+    // leaves the streams untouched.
+    let mut base_cfg = cfg;
+    base_cfg.scaler.enabled = false;
+    let base = Scenario::new("hotspot-base", base_cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 0ms hotspot e1");
+    let clean = base.run(manifest.clone(), weights.clone());
+    let scaled = s.run(manifest, weights);
+    assert!(clean.completed && scaled.completed);
+    assert_eq!(scaled.tokens, clean.tokens, "shadow promotion changed token streams");
+    assert!(
+        scaled.report.shadow_promotions >= 1,
+        "hotspot never drove a promotion (scale_outs={}, event log:\n{})",
+        scaled.report.scale_outs,
+        scaled.event_log
+    );
+    assert_eq!(scaled.report.ew_failures, 0, "promotion must not count as a failure");
+    assert!(scaled.event_log.contains("shadow_promoted"), "event log missing the promotion");
+}
+
+#[test]
+fn scale_out_racing_an_ew_kill_recovers_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // A fresh universal-shadow EW provisions while ew0 dies: the failover
+    // (to ring shadows) and the scale-out (new tail candidates) interleave
+    // on the same ERT datapath, and the streams still must not move.
+    let s = two_request_scenario("scale-race", Duration::from_millis(1))
+        .fault("at 55ms scale_ew up")
+        .fault("at 60ms kill ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "scale-race");
+    assert_eq!(faulty.tokens, clean.tokens, "scale-out racing a kill changed streams");
+    assert!(faulty.report.ew_failures >= 1, "the kill is a real failure");
+    assert!(faulty.report.scale_outs >= 1, "scale-out went unexecuted");
+}
+
+#[test]
+fn scale_down_of_last_replica_is_rejected_not_stranded() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let mut cfg = scenario_cfg(Duration::from_millis(1));
+    // No shadows: every expert has exactly one replica, so retiring any
+    // EW would strand its experts — the orchestrator must refuse and the
+    // workload must still drain on the untouched layout.
+    cfg.resilience.shadow_experts = false;
+    let s = Scenario::new("scale-down-last", cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 60ms scale_ew down ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed, "rejected scale-in must not strand tokens");
+    assert_eq!(faulty.tokens, clean.tokens);
+    assert!(faulty.report.scale_rejected >= 1, "last-replica scale-in must be rejected");
+    assert_eq!(faulty.report.scale_ins, 0, "nothing may actually retire");
+    assert_eq!(faulty.report.ew_failures, 0);
+}
+
 #[test]
 fn same_seed_replays_byte_identical_event_logs() {
     let (manifest, weights, _) = synthetic::ensure();
