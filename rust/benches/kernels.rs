@@ -1,0 +1,228 @@
+//! Kernel-backend microbenchmark: the three FLOP-dominant decode ops —
+//! blocked W^T matmul, RMSNorm, and one-step decode attention — timed
+//! under the `reference` and `simd` backends (DESIGN.md §12).
+//!
+//! Every timed pair is also cross-checked numerically before it is
+//! reported (ULP-style relative tolerance, the same contract the
+//! property suite in `runtime/kern/simd.rs` pins), so a green bench run
+//! doubles as a smoke check that the simd backend agrees with the
+//! reference on realistic shapes.
+//!
+//! Run:   cargo bench --bench kernels            (full sweep, emits
+//!        BENCH_kernels.json in the working directory)
+//!        cargo bench --bench kernels -- --smoke (CI: tiny sweep)
+
+use tarragon::runtime::kern::{self, BackendKind, KernelBackend};
+use tarragon::testing::bench::{bench, black_box};
+use tarragon::util::json::{arr, num, obj, s};
+use tarragon::util::rng::Pcg;
+
+const RMS_EPS: f32 = 1e-5;
+
+fn rand_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * 0.2).collect()
+}
+
+/// Relative agreement check between the two backends' outputs: reduction
+/// ops may differ by accumulation order, never by more than tight ULPs.
+fn assert_close(op: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{op}: output lengths differ");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-4 * (1.0 + x.abs().max(y.abs()));
+        assert!(
+            (x - y).abs() <= tol,
+            "{op}: backends disagree at {i}: reference={x} simd={y}"
+        );
+    }
+}
+
+struct Row {
+    op: &'static str,
+    shape: String,
+    ref_median_us: f64,
+    simd_median_us: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.ref_median_us / self.simd_median_us
+    }
+}
+
+fn backends() -> [(&'static str, &'static dyn KernelBackend); 2] {
+    [
+        ("reference", kern::backend(BackendKind::Reference)),
+        ("simd", kern::backend(BackendKind::Simd)),
+    ]
+}
+
+fn bench_matmul(rows: &mut Vec<Row>, n: usize, k: usize, m: usize, warmup: usize, iters: usize) {
+    let mut rng = Pcg::seeded(0x4A11 + (n * 31 + k * 7 + m) as u64);
+    let x = rand_vec(&mut rng, n * k);
+    let wt = rand_vec(&mut rng, m * k);
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut medians = [0.0f64; 2];
+    for (i, (name, bk)) in backends().into_iter().enumerate() {
+        let mut out = vec![0.0f32; n * m];
+        let label = format!("matmul[{n}x{k}x{m}] {name}");
+        let r = bench(&label, warmup, iters, || {
+            bk.matmul_wt_into(&x, &wt, n, k, m, &mut out);
+            black_box(out.first().copied());
+        });
+        medians[i] = r.median_us;
+        outs.push(out);
+    }
+    assert_close("matmul", &outs[0], &outs[1]);
+    rows.push(Row {
+        op: "matmul_wt_into",
+        shape: format!("{n}x{k}x{m}"),
+        ref_median_us: medians[0],
+        simd_median_us: medians[1],
+    });
+}
+
+fn bench_rms_norm(rows: &mut Vec<Row>, n: usize, h: usize, warmup: usize, iters: usize) {
+    let mut rng = Pcg::seeded(0x4312 + (n * 131 + h) as u64);
+    let x = rand_vec(&mut rng, n * h);
+    let gamma = rand_vec(&mut rng, h);
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut medians = [0.0f64; 2];
+    for (i, (name, bk)) in backends().into_iter().enumerate() {
+        let mut out = vec![0.0f32; n * h];
+        let label = format!("rms_norm[{n}x{h}] {name}");
+        let r = bench(&label, warmup, iters, || {
+            bk.rms_norm_into(&x, &gamma, n, h, RMS_EPS, &mut out);
+            black_box(out.first().copied());
+        });
+        medians[i] = r.median_us;
+        outs.push(out);
+    }
+    assert_close("rms_norm", &outs[0], &outs[1]);
+    rows.push(Row {
+        op: "rms_norm_into",
+        shape: format!("{n}x{h}"),
+        ref_median_us: medians[0],
+        simd_median_us: medians[1],
+    });
+}
+
+/// One-step GQA decode attention over a dense KV cache at context `ctx`
+/// (batch 8, 4 heads over 1 KV head, head_dim 32 — the decode shape the
+/// synthetic cluster runs, scaled up to a realistic head width).
+fn bench_attn_decode(rows: &mut Vec<Row>, ctx: usize, warmup: usize, iters: usize) {
+    const B: usize = 8;
+    const HEADS: usize = 4;
+    const KV: usize = 1;
+    const D: usize = 32;
+    let s_max = ctx + 1;
+    let mut rng = Pcg::seeded(0xA77 + ctx as u64);
+    let q = rand_vec(&mut rng, B * HEADS * D);
+    let k_new = rand_vec(&mut rng, B * KV * D);
+    let v_new = rand_vec(&mut rng, B * KV * D);
+    let k_cache = rand_vec(&mut rng, B * s_max * KV * D);
+    let v_cache = rand_vec(&mut rng, B * s_max * KV * D);
+    let pos = vec![ctx as i32; B];
+    let src = kern::DenseKv { k: &k_cache, v: &v_cache, s: s_max, kv: KV, d: D };
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut medians = [0.0f64; 2];
+    for (i, (name, bk)) in backends().into_iter().enumerate() {
+        let mut scores = vec![0.0f32; s_max];
+        let mut attn = vec![0.0f32; B * HEADS * D];
+        let label = format!("attn_decode[b{B} ctx{ctx}] {name}");
+        let r = bench(&label, warmup, iters, || {
+            attn.iter_mut().for_each(|v| *v = 0.0);
+            bk.attn_decode_into(
+                &q, &k_new, &v_new, &pos, &src, B, HEADS, KV, D, s_max, &mut scores, &mut attn,
+            );
+            black_box(attn.first().copied());
+        });
+        medians[i] = r.median_us;
+        outs.push(attn);
+    }
+    assert_close("attn_decode", &outs[0], &outs[1]);
+    rows.push(Row {
+        op: "attn_decode_into",
+        shape: format!("b{B} ctx{ctx}"),
+        ref_median_us: medians[0],
+        simd_median_us: medians[1],
+    });
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, iters) = if smoke { (3, 20) } else { (10, 200) };
+    println!("== kernel backend sweep (smoke={smoke}) ==");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let matmul_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(8, 128, 128), (8, 128, 512)]
+    } else {
+        &[(8, 128, 128), (8, 128, 512), (64, 128, 128), (128, 256, 256)]
+    };
+    for &(n, k, m) in matmul_shapes {
+        bench_matmul(&mut rows, n, k, m, warmup, iters);
+    }
+    let rms_shapes: &[(usize, usize)] = if smoke { &[(8, 128)] } else { &[(8, 128), (64, 256)] };
+    for &(n, h) in rms_shapes {
+        bench_rms_norm(&mut rows, n, h, warmup, iters);
+    }
+    let ctxs: &[usize] = if smoke { &[128] } else { &[128, 512, 2048] };
+    for &ctx in ctxs {
+        bench_attn_decode(&mut rows, ctx, warmup, iters);
+    }
+
+    for r in &rows {
+        println!(
+            "{:<18} {:<12} reference {:>9.2} us | simd {:>9.2} us | speedup {:.2}x",
+            r.op,
+            r.shape,
+            r.ref_median_us,
+            r.simd_median_us,
+            r.speedup()
+        );
+    }
+    write_report(&rows, smoke);
+    println!("== done ==");
+}
+
+fn write_report(rows: &[Row], smoke: bool) {
+    let entries = rows.iter().map(|r| {
+        obj(vec![
+            ("op", s(r.op)),
+            ("shape", s(&r.shape)),
+            ("reference_median_us", num(r.ref_median_us)),
+            ("simd_median_us", num(r.simd_median_us)),
+            ("speedup_simd", num(r.speedup())),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("kernel backends: reference (cache-blocked f32) vs simd (AVX2 / 8-lane \
+               scalar fallback) on matmul, rms_norm, decode attention"),
+        ),
+        ("command", s("cargo bench --bench kernels")),
+        ("smoke", s(if smoke { "true" } else { "false" })),
+        (
+            "acceptance",
+            obj(vec![
+                (
+                    "agreement",
+                    s("every timed pair is cross-checked: |ref - simd| <= 1e-4 * (1 + max|.|)"),
+                ),
+                (
+                    "determinism",
+                    s("each backend is bitwise run-to-run (pinned lane order; see \
+                       runtime/kern/simd.rs)"),
+                ),
+                ("speedup_simd_target", s(">= 1.0x on AVX2 hosts for matmul-bound shapes")),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_kernels.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

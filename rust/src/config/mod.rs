@@ -3,6 +3,7 @@
 //! timing model, and workload parameters. Loadable from a TOML-subset file
 //! (`util::toml`) or built programmatically by the harnesses.
 
+use crate::runtime::kern;
 use crate::util::toml::{self, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -325,6 +326,24 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Kernel-backend selection (DESIGN.md §12): which
+/// [`BackendKind`](crate::runtime::kern::BackendKind) every device in the
+/// cluster executes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelsConfig {
+    /// `"reference"` (bitwise-pinned seed numerics), `"simd"`
+    /// (lane-split, deterministic per backend), or `"auto"`.
+    pub backend: kern::BackendKind,
+}
+
+impl Default for KernelsConfig {
+    fn default() -> Self {
+        // The process default honors TARRAGON_KERNEL_BACKEND, so one env
+        // var flips a whole test binary (the CI simd matrix leg).
+        KernelsConfig { backend: kern::default_kind() }
+    }
+}
+
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub cluster: ClusterConfig,
@@ -333,6 +352,7 @@ pub struct Config {
     pub workload: WorkloadConfig,
     pub sched: SchedConfig,
     pub scaler: ScalerConfig,
+    pub kernels: KernelsConfig,
 }
 
 impl Config {
@@ -443,6 +463,12 @@ impl Config {
             get_usize("scaler.cold_threshold", sl.cold_threshold as usize)? as u64;
         sl.cooldown = get_ms("scaler.cooldown_ms", sl.cooldown)?;
         sl.retire_linger = get_ms("scaler.retire_linger_ms", sl.retire_linger)?;
+
+        if let Some(v) = m.get("kernels.backend") {
+            let s = v.as_str().ok_or_else(|| bad("kernels.backend"))?;
+            self.kernels.backend = kern::BackendKind::parse(s)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown kernel backend '{s}'")))?;
+        }
 
         let w = &mut self.workload;
         if let Some(v) = m.get("workload.kind") {
@@ -662,6 +688,21 @@ hotspot_expert = 3
         // Disabled scaler skips the threshold checks.
         assert!(Config::from_toml_str("[scaler]\nhot_threshold = 0\n").is_ok());
         assert!(Config::from_toml_str("[workload]\nhotspot_expert = -1\n").is_err());
+    }
+
+    #[test]
+    fn parses_kernels_section() {
+        let cfg = Config::from_toml_str("[kernels]\nbackend = \"simd\"\n").unwrap();
+        assert_eq!(cfg.kernels.backend, kern::BackendKind::Simd);
+        let auto = Config::from_toml_str("[kernels]\nbackend = \"auto\"\n").unwrap();
+        assert_eq!(auto.kernels.backend, kern::BackendKind::Auto);
+        assert_eq!(auto.kernels.backend.resolve(), kern::BackendKind::Simd);
+        let refe = Config::from_toml_str("[kernels]\nbackend = \"reference\"\n").unwrap();
+        assert_eq!(refe.kernels.backend, kern::BackendKind::Reference);
+        // Default follows the process default (env-overridable).
+        assert_eq!(Config::default().kernels.backend, kern::default_kind());
+        assert!(Config::from_toml_str("[kernels]\nbackend = \"gpu\"\n").is_err());
+        assert!(Config::from_toml_str("[kernels]\nbackend = 3\n").is_err());
     }
 
     #[test]

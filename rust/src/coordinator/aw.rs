@@ -187,13 +187,14 @@ impl AwWorker {
         let node = NodeId::Aw(p.idx);
         let clock = p.fabric.clock().clone();
         let (inbox, handle) = p.fabric.register(node);
-        let device = Device::spawn_clocked(
+        let device = Device::spawn_kernel(
             format!("aw{}", p.idx),
             p.manifest.clone(),
             p.weights.clone(),
             DeviceRole::Attention.plan(&p.manifest),
             p.cfg.transport.worker_extra_init,
             clock.clone(),
+            p.cfg.kernels.backend,
         )
         .map_err(|e| e.to_string())?;
         let refe = Refe::new(p.idx, p.ert, p.cfg.resilience.clone(), p.fabric.clone());

@@ -135,13 +135,14 @@ impl EwWorker {
         if p.cfg.resilience.shadow_experts {
             experts.extend(p.shadows.iter().copied());
         }
-        let device = Device::spawn_clocked(
+        let device = Device::spawn_kernel(
             format!("ew{}", p.idx),
             p.manifest.clone(),
             p.weights.clone(),
             DeviceRole::Expert { experts: experts.clone() }.plan(&p.manifest),
             p.cfg.transport.worker_extra_init,
             clock.clone(),
+            p.cfg.kernels.backend,
         )
         .map_err(|e| e.to_string())?;
         let aws = p

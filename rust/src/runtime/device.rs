@@ -2,7 +2,7 @@
 //! executables, and device-resident weight buffers; serves execution
 //! requests over a channel. See module docs in `runtime`.
 
-use super::{xla, ArgValue, RolePlan};
+use super::{kern, xla, ArgValue, RolePlan};
 use crate::modelcfg::{DType, Manifest};
 use crate::modelcfg::weights::Weights;
 use crate::tensor::Tensor;
@@ -125,6 +125,7 @@ impl Device {
     /// Spawn on an explicit clock. Under a virtual clock the caller must
     /// be a registered participant; `extra_init` then costs virtual time
     /// only, and the device thread registers itself as a participant.
+    /// Kernels run on the process-default backend ([`kern::default_kind`]).
     pub fn spawn_clocked(
         id: impl Into<String>,
         manifest: Arc<Manifest>,
@@ -132,6 +133,21 @@ impl Device {
         plan: RolePlan,
         extra_init: Duration,
         clock: Clock,
+    ) -> Result<Device, DeviceError> {
+        Self::spawn_kernel(id, manifest, weights, plan, extra_init, clock, kern::default_kind())
+    }
+
+    /// [`Device::spawn_clocked`] with an explicit kernel backend — the
+    /// `[kernels] backend` config plumbs through here (coordinators pass
+    /// `cfg.kernels.backend`), so a whole cluster runs on one backend.
+    pub fn spawn_kernel(
+        id: impl Into<String>,
+        manifest: Arc<Manifest>,
+        weights: Weights,
+        plan: RolePlan,
+        extra_init: Duration,
+        clock: Clock,
+        backend: kern::BackendKind,
     ) -> Result<Device, DeviceError> {
         let id = id.into();
         let (tx, rx) = clock::channel::<Msg>(&clock);
@@ -151,6 +167,7 @@ impl Device {
                 init_tx,
                 killed2,
                 thread_clock,
+                backend,
             )
         })
         .map_err(|e| DeviceError::Init(e.to_string()))?;
@@ -235,6 +252,7 @@ fn device_main(
     init_tx: clock::Sender<Result<InitStats, DeviceError>>,
     killed: Arc<AtomicBool>,
     clock: Clock,
+    backend: kern::BackendKind,
 ) {
     // ---- initialization (the T_w critical path) --------------------------
     // `total` is measured on the device's clock so a virtual-time
@@ -247,13 +265,7 @@ fn device_main(
     clock.sleep(extra_init);
 
     let t0 = Instant::now();
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            let _ = init_tx.send(Err(DeviceError::Init(e.to_string())));
-            return;
-        }
-    };
+    let client = xla::PjRtClient::cpu_with(backend);
     let client_init = t0.elapsed();
 
     let t0 = Instant::now();

@@ -1,0 +1,233 @@
+//! Pluggable kernel backends (DESIGN.md §12).
+//!
+//! The decode hot path is FLOP-bound in these kernels, so their
+//! implementation is swappable behind [`KernelBackend`]: the cache-blocked
+//! f32 [`Reference`] backend (the seed numerics, bitwise-pinned by the
+//! golden token streams) and the lane-split [`Simd`] backend (AVX2 where
+//! the CPU has it, with a bitwise-identical scalar 8-lane fallback).
+//! Selection is by [`BackendKind`] — config `[kernels] backend =
+//! "reference" | "simd" | "auto"`, overridable process-wide with the
+//! `TARRAGON_KERNEL_BACKEND` environment variable (how CI runs the whole
+//! suite under `simd`).
+//!
+//! **Equivalence contract.** Per op, across backends:
+//! - *bitwise*: `transpose`, `rope`/`rope_with_freqs`, `silu_mul`,
+//!   `softmax_rows` — element-wise math with no reduction to reassociate;
+//! - *ULP-tolerance*: `matmul_wt_into`, `rms_norm_into`, the q·k dots of
+//!   `attn_prefill_into`/`attn_decode_into` — lane-split accumulation
+//!   legitimately rounds differently from the reference's single
+//!   ascending-index accumulator.
+//!
+//! Each backend is individually deterministic: same input ⇒ same bits on
+//! every run (the SIMD backend fixes its per-lane partial-sum order and
+//! its horizontal-reduction tree; see `simd.rs`). The scenario/chaos
+//! suites compare cluster streams against a baseline computed under the
+//! *same* backend, so they hold under either.
+//!
+//! The free functions re-exported here (`matmul_wt_into`, `rope`, …) are
+//! the reference implementations — the stable call surface for the
+//! allocation-contract test and benches, unchanged from when this module
+//! lived inside `runtime::xla`.
+
+mod reference;
+mod simd;
+
+pub use reference::{
+    attn_decode_into, attn_prefill_into, dot, matmul_naive, matmul_wt_into, rms_norm_into, rope,
+    rope_freqs, rope_with_freqs, silu, silu_mul, softmax_rows, transpose, DenseKv, KvSource,
+    PagedKv, Reference,
+};
+pub use simd::Simd;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The pinned kernel contract of the reference executor: every op the
+/// five artifact kinds need, over caller-provided scratch (no kernel
+/// allocates). Object-safe so executables can hold `&'static dyn
+/// KernelBackend` and dispatch without monomorphizing the executor.
+pub trait KernelBackend: Sync {
+    /// Backend name as spelled in config (`"reference"` / `"simd"`).
+    fn name(&self) -> &'static str;
+
+    /// Blocked `[n, k] @ [k, m]` against a pre-transposed weight
+    /// (`wt` is `[m, k]` row-major), into `out` (`[n, m]`).
+    fn matmul_wt_into(&self, x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]);
+
+    /// RMSNorm over the last axis; `x` viewed as `[n, h]`, written into
+    /// `out` (which may not alias `x`).
+    fn rms_norm_into(
+        &self,
+        x: &[f32],
+        gamma: &[f32],
+        n: usize,
+        h: usize,
+        eps: f32,
+        out: &mut [f32],
+    );
+
+    /// Rotary embedding (rotate-half) with a caller-held frequency table
+    /// (`freqs.len() == d / 2`); `x` viewed as `[n, heads, d]`.
+    fn rope_with_freqs(
+        &self,
+        x: &mut [f32],
+        n: usize,
+        heads: usize,
+        d: usize,
+        freqs: &[f32],
+        pos_of: &dyn Fn(usize) -> f32,
+    );
+
+    /// Row-wise softmax in place (`x` viewed as `[n, m]`).
+    fn softmax_rows(&self, x: &mut [f32], n: usize, m: usize);
+
+    /// SwiGLU gate in place: `acts[i] <- silu(acts[i]) * gate[i]`.
+    fn silu_mul(&self, acts: &mut [f32], gate: &[f32]);
+
+    /// Causal GQA attention over a prefill window. `attn` (`[t, heads *
+    /// d]`) must be zeroed; `scores` is a `t`-float scratch row.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_prefill_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    );
+
+    /// One-step GQA decode attention over a [`KvSource`]. `attn`
+    /// (`[b, heads * d]`) must be zeroed; `scores` holds `s_limit` floats.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_decode_into(
+        &self,
+        q: &[f32],
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: &[i32],
+        src: &dyn KvSource,
+        b: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        s_limit: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    );
+}
+
+/// Backend selector, as spelled in config and the
+/// `TARRAGON_KERNEL_BACKEND` environment variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The seed's cache-blocked f32 kernels — bitwise-pinned numerics.
+    Reference,
+    /// Lane-split kernels (AVX2 or the bitwise-equal scalar fallback).
+    Simd,
+    /// Resolve to the fastest backend available ([`BackendKind::Simd`];
+    /// both are deterministic, so auto is safe everywhere).
+    Auto,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "reference" => Some(BackendKind::Reference),
+            "simd" => Some(BackendKind::Simd),
+            "auto" => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Simd => "simd",
+            BackendKind::Auto => "auto",
+        }
+    }
+
+    /// Collapse [`BackendKind::Auto`] to the concrete backend it selects.
+    pub fn resolve(self) -> BackendKind {
+        match self {
+            BackendKind::Auto => BackendKind::Simd,
+            other => other,
+        }
+    }
+}
+
+/// Process-default backend: `TARRAGON_KERNEL_BACKEND` when set (this is
+/// how the CI matrix leg flips every test binary to `simd`), otherwise
+/// [`BackendKind::Reference`] — existing goldens and the bitwise
+/// determinism tests stay the default gate.
+pub fn default_kind() -> BackendKind {
+    static KIND: OnceLock<BackendKind> = OnceLock::new();
+    *KIND.get_or_init(|| {
+        std::env::var("TARRAGON_KERNEL_BACKEND")
+            .ok()
+            .and_then(|s| BackendKind::parse(&s))
+            .unwrap_or(BackendKind::Reference)
+    })
+}
+
+static REFERENCE: Reference = Reference;
+static SIMD: Simd = Simd;
+
+/// The backend instance for a selector (Auto resolves here). Backends
+/// are zero-sized statics, so this never allocates.
+pub fn backend(kind: BackendKind) -> &'static dyn KernelBackend {
+    match kind.resolve() {
+        BackendKind::Simd => &SIMD,
+        _ => &REFERENCE,
+    }
+}
+
+/// Memoized rotate-half frequency table per `(d, theta)` — the rope
+/// analogue of the per-weight `W^T` memo: first use computes the table,
+/// every later call (including [`rope`]'s internal lookup) is a map hit
+/// plus an `Arc` bump, so no rope caller can re-enter an allocating path
+/// on the hot loop.
+pub fn rope_freqs_cached(d: usize, theta: f32) -> Arc<Vec<f32>> {
+    static FREQS: OnceLock<Mutex<BTreeMap<(usize, u32), Arc<Vec<f32>>>>> = OnceLock::new();
+    let memo = FREQS.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = memo.lock().unwrap();
+    map.entry((d, theta.to_bits()))
+        .or_insert_with(|| Arc::new(rope_freqs(d, theta)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for kind in [BackendKind::Reference, BackendKind::Simd, BackendKind::Auto] {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+        }
+        assert!(BackendKind::parse("gpu").is_none());
+        assert_eq!(BackendKind::Auto.resolve(), BackendKind::Simd);
+        assert_eq!(BackendKind::Reference.resolve(), BackendKind::Reference);
+    }
+
+    #[test]
+    fn backend_lookup_matches_kind() {
+        assert_eq!(backend(BackendKind::Reference).name(), "reference");
+        assert_eq!(backend(BackendKind::Simd).name(), "simd");
+        assert_eq!(backend(BackendKind::Auto).name(), "simd");
+    }
+
+    #[test]
+    fn rope_freqs_memo_shares_and_matches() {
+        let a = rope_freqs_cached(16, 10000.0);
+        let b = rope_freqs_cached(16, 10000.0);
+        assert!(Arc::ptr_eq(&a, &b), "same (d, theta) must share one table");
+        assert_eq!(a.as_slice(), rope_freqs(16, 10000.0).as_slice());
+        let c = rope_freqs_cached(16, 500.0);
+        assert!(!Arc::ptr_eq(&a, &c), "distinct theta must get its own table");
+    }
+}

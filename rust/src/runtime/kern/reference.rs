@@ -1,0 +1,428 @@
+//! Reference kernels, shared by the executor, the numeric-equivalence
+//! property tests, and `benches/decode.rs`.
+//!
+//! **Accumulation-order contract.** Every kernel here accumulates each
+//! output element over its reduction axis in ascending index order with
+//! a single f32 accumulator — exactly like the seed's naive loops — so
+//! the blocked/transposed variants are bitwise-equal to the originals
+//! (f32 addition is not reassociated, only re-tiled over the *output*
+//! dimensions). Determinism tests and the scenario suite's golden token
+//! streams depend on this; do not vectorize the reduction without
+//! revisiting them — that is what [`super::Simd`] exists for, behind the
+//! documented ULP-tolerance contract.
+
+use crate::kvcache::{PageId, PagesRead};
+
+/// Ascending-index dot product (the seed's `zip().map().sum()`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// The seed's `[n, k] @ [k, m]` triple loop, kept verbatim as the
+/// equivalence oracle and the benchmark baseline.
+pub fn matmul_naive(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let xr = &x[i * k..(i + 1) * k];
+        let or_ = &mut out[i * m..(i + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                or_[j] += xv * wr[j];
+            }
+        }
+    }
+    out
+}
+
+/// `W^T` of a row-major `[k, m]` matrix (result `[m, k]` row-major).
+pub fn transpose(w: &[f32], k: usize, m: usize) -> Vec<f32> {
+    let mut wt = vec![0.0f32; k * m];
+    for kk in 0..k {
+        for j in 0..m {
+            wt[j * k + kk] = w[kk * m + j];
+        }
+    }
+    wt
+}
+
+/// Cache-blocked `[n, k] @ [k, m]` against a pre-transposed weight
+/// (`wt` is `[m, k]`). Tiles only the output dims (i, j); each
+/// element is one ascending-k dot product, so results are bitwise
+/// identical to [`matmul_naive`] for finite weights (the naive
+/// kernel's `xv == 0.0` skip only elides exact `+0.0` terms).
+pub fn matmul_wt_into(x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(wt.len(), m * k);
+    debug_assert_eq!(out.len(), n * m);
+    // x tile: IB rows of k floats; wt tile: JB rows of k floats —
+    // both L1-resident for the shapes this system runs (k <= 2048).
+    const IB: usize = 4;
+    const JB: usize = 64;
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + IB).min(n);
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + JB).min(m);
+            for i in i0..i1 {
+                let xr = &x[i * k..(i + 1) * k];
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in j0..j1 {
+                    orow[j] = dot(xr, &wt[j * k..(j + 1) * k]);
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+/// RMSNorm over the last axis; `x` viewed as `[n, h]`, written into
+/// `out` (which may not alias `x`).
+pub fn rms_norm_into(x: &[f32], gamma: &[f32], n: usize, h: usize, eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n * h);
+    for i in 0..n {
+        let row = &x[i * h..(i + 1) * h];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for j in 0..h {
+            out[i * h + j] = row[j] * inv * gamma[j];
+        }
+    }
+}
+
+/// The rotate-half frequency table for head dim `d` (`d / 2` floats).
+pub fn rope_freqs(d: usize, theta: f32) -> Vec<f32> {
+    let half = d / 2;
+    (0..half).map(|j| 1.0 / theta.powf(j as f32 / half as f32)).collect()
+}
+
+/// Rotary embedding, rotate-half convention (ref.rope_ref). `x`
+/// viewed as `[n, heads, d]`; `pos_of(i)` is row i's position. The
+/// frequency table comes from the per-(d, theta) memo
+/// ([`super::rope_freqs_cached`]), so repeat calls never re-allocate it.
+pub fn rope(
+    x: &mut [f32],
+    n: usize,
+    heads: usize,
+    d: usize,
+    theta: f32,
+    pos_of: impl Fn(usize) -> f32,
+) {
+    let freqs = super::rope_freqs_cached(d, theta);
+    rope_with_freqs(x, n, heads, d, &freqs, pos_of);
+}
+
+/// [`rope`] with a caller-held frequency table (allocation-free hot
+/// path; `freqs.len()` must be `d / 2`).
+pub fn rope_with_freqs(
+    x: &mut [f32],
+    n: usize,
+    heads: usize,
+    d: usize,
+    freqs: &[f32],
+    pos_of: impl Fn(usize) -> f32,
+) {
+    let half = d / 2;
+    debug_assert_eq!(freqs.len(), half);
+    for i in 0..n {
+        let p = pos_of(i);
+        for hh in 0..heads {
+            let base = (i * heads + hh) * d;
+            for j in 0..half {
+                let ang = p * freqs[j];
+                let (s, c) = ang.sin_cos();
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn silu(v: f32) -> f32 {
+    v * (1.0 / (1.0 + (-v).exp()))
+}
+
+/// SwiGLU gate in place: `acts[i] <- silu(acts[i]) * gate[i]` — the
+/// expert FFN's elementwise nonlinearity, shared by both backends.
+pub fn silu_mul(acts: &mut [f32], gate: &[f32]) {
+    debug_assert_eq!(acts.len(), gate.len());
+    for (av, &gv) in acts.iter_mut().zip(gate) {
+        *av = silu(*av) * gv;
+    }
+}
+
+/// Row-wise softmax in place (`x` viewed as `[n, m]`), the router's
+/// gating nonlinearity.
+pub fn softmax_rows(x: &mut [f32], n: usize, m: usize) {
+    for i in 0..n {
+        let row = &mut x[i * m..(i + 1) * m];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            denom += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+/// Where decode attention reads cached K/V rows from: a dense
+/// `[b, s, kv, d]` tensor pair, or the paged arena in place.
+pub trait KvSource {
+    /// Cached K row (d floats) for (batch row, position, kv head).
+    fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32];
+    /// Cached V row (d floats) for (batch row, position, kv head).
+    fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32];
+}
+
+// References forward, so `&dyn KvSource` (the trait-object form the
+// `KernelBackend` methods take) satisfies the `impl KvSource` bounds of
+// the free functions.
+impl<T: KvSource + ?Sized> KvSource for &T {
+    fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        (**self).k_row(bi, t, kvh)
+    }
+
+    fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        (**self).v_row(bi, t, kvh)
+    }
+}
+
+/// Contiguous `[b, s, kv, d]` cache tensors (the seed layout; still
+/// used by the monolithic oracle and back-compat callers).
+pub struct DenseKv<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub s: usize,
+    pub kv: usize,
+    pub d: usize,
+}
+
+impl KvSource for DenseKv<'_> {
+    fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        let o = ((bi * self.s + t) * self.kv + kvh) * self.d;
+        &self.k[o..o + self.d]
+    }
+
+    fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        let o = ((bi * self.s + t) * self.kv + kvh) * self.d;
+        &self.v[o..o + self.d]
+    }
+}
+
+/// Paged arena access: page tables + the held pool read lock. Rows
+/// at or beyond `tables.len()` are padding and must never be read
+/// (their pos is 0, so the kernel issues no reads for them).
+pub struct PagedKv<'a> {
+    pub read: &'a PagesRead<'a>,
+    pub tables: &'a [Vec<PageId>],
+    pub d: usize,
+}
+
+impl KvSource for PagedKv<'_> {
+    fn k_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        let pt = self.read.page_tokens();
+        let (k, _) = self.read.kv_rows(self.tables[bi][t / pt], t % pt);
+        &k[kvh * self.d..(kvh + 1) * self.d]
+    }
+
+    fn v_row(&self, bi: usize, t: usize, kvh: usize) -> &[f32] {
+        let pt = self.read.page_tokens();
+        let (_, v) = self.read.kv_rows(self.tables[bi][t / pt], t % pt);
+        &v[kvh * self.d..(kvh + 1) * self.d]
+    }
+}
+
+/// Causal GQA attention over a prefill window (the seed loop,
+/// verbatim). `attn` (`[t, heads * d]`) must be zeroed; `scores` is
+/// a `t`-float scratch row.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_prefill_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    heads: usize,
+    kv: usize,
+    d: usize,
+    scores: &mut [f32],
+    attn: &mut [f32],
+) {
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    for hh in 0..heads {
+        let kvh = hh / group;
+        for qi in 0..t {
+            let qrow = &q[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                let krow = &k[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                let s = dot(qrow, krow) * scale;
+                *sc = s;
+                mx = mx.max(s);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(qi + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            for ki in 0..=qi {
+                let w = scores[ki] / denom;
+                let vrow = &v[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// One-step GQA decode attention over a [`KvSource`] (the seed loop,
+/// verbatim modulo the source indirection — reads and arithmetic
+/// happen in the same order for dense and paged sources, so outputs
+/// are bitwise identical). `attn` (`[b, heads * d]`) must be zeroed;
+/// `scores` holds `s_limit` floats.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_decode_into(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    pos: &[i32],
+    src: &impl KvSource,
+    b: usize,
+    heads: usize,
+    kv: usize,
+    d: usize,
+    s_limit: usize,
+    scores: &mut [f32],
+    attn: &mut [f32],
+) {
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    for bi in 0..b {
+        let valid = (pos[bi].max(0) as usize).min(s_limit);
+        for hh in 0..heads {
+            let kvh = hh / group;
+            let qrow = &q[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            let krow_cur = &k_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let s_cur = dot(qrow, krow_cur) * scale;
+            let mut mx = s_cur;
+            for (t, sc) in scores.iter_mut().enumerate().take(valid) {
+                let sv = dot(qrow, src.k_row(bi, t, kvh)) * scale;
+                *sc = sv;
+                mx = mx.max(sv);
+            }
+            let mut denom = (s_cur - mx).exp();
+            let e_cur = denom;
+            for sc in scores.iter_mut().take(valid) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            for t in 0..valid {
+                let w = scores[t] / denom;
+                let vrow = src.v_row(bi, t, kvh);
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+            let vrow_cur = &v_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let wc = e_cur / denom;
+            for j in 0..d {
+                out[j] += wc * vrow_cur[j];
+            }
+        }
+    }
+}
+
+/// The seed's cache-blocked f32 kernels behind the [`super::KernelBackend`]
+/// trait — a zero-sized dispatcher onto the free functions above, so the
+/// trait route and the direct-call route are the same code.
+pub struct Reference;
+
+impl super::KernelBackend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn matmul_wt_into(&self, x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        matmul_wt_into(x, wt, n, k, m, out);
+    }
+
+    fn rms_norm_into(
+        &self,
+        x: &[f32],
+        gamma: &[f32],
+        n: usize,
+        h: usize,
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        rms_norm_into(x, gamma, n, h, eps, out);
+    }
+
+    fn rope_with_freqs(
+        &self,
+        x: &mut [f32],
+        n: usize,
+        heads: usize,
+        d: usize,
+        freqs: &[f32],
+        pos_of: &dyn Fn(usize) -> f32,
+    ) {
+        rope_with_freqs(x, n, heads, d, freqs, pos_of);
+    }
+
+    fn softmax_rows(&self, x: &mut [f32], n: usize, m: usize) {
+        softmax_rows(x, n, m);
+    }
+
+    fn silu_mul(&self, acts: &mut [f32], gate: &[f32]) {
+        silu_mul(acts, gate);
+    }
+
+    fn attn_prefill_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        attn_prefill_into(q, k, v, t, heads, kv, d, scores, attn);
+    }
+
+    fn attn_decode_into(
+        &self,
+        q: &[f32],
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: &[i32],
+        src: &dyn KvSource,
+        b: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        s_limit: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        attn_decode_into(q, k_new, v_new, pos, &src, b, heads, kv, d, s_limit, scores, attn);
+    }
+}

@@ -1,0 +1,548 @@
+//! Lane-split SIMD kernels (`backend = "simd"`).
+//!
+//! The reference kernels reduce every dot product with a single f32
+//! accumulator in ascending index order — bitwise-pinned, but serial.
+//! This backend splits each reduction across [`LANES`] = 8 independent
+//! per-lane partial sums (one AVX2 `f32x8` register) and combines them
+//! with a **fixed** tree, which is what makes it deterministic:
+//!
+//! ```text
+//! lane j accumulates  acc[j] += a[c*8 + j] * b[c*8 + j]   (mul, then add)
+//! hsum8:   a0 = acc[0]+acc[4]   a1 = acc[1]+acc[5]
+//!          a2 = acc[2]+acc[6]   a3 = acc[3]+acc[7]
+//!          result = (a0 + a2) + (a1 + a3)
+//! tail (len % 8 elements): added scalar, ascending, after the tree
+//! ```
+//!
+//! The AVX2 path (`std::arch`, runtime-detected) performs exactly these
+//! IEEE f32 operations in exactly this order — `_mm256_add_ps` of
+//! `_mm256_mul_ps`, never FMA (fused rounding would differ) — and its
+//! horizontal reduction replays `hsum8`'s tree, so AVX2 and the scalar
+//! fallback are **bitwise identical**: same input ⇒ same bits on every
+//! run, on every x86-64 machine, with or without AVX2. What legitimately
+//! moves (by a few ULP) relative to the `Reference` backend is anything
+//! downstream of a lane-split reduction: matmul, rms_norm, and the q·k
+//! scores inside attention. Element-wise ops (rope, silu, softmax rows,
+//! the weighted-V accumulation) delegate to the reference code and stay
+//! bitwise-equal across backends — the contract the property tests at
+//! the bottom of this file pin.
+
+use super::reference::{self, KvSource};
+
+#[cfg(target_arch = "x86_64")]
+use std::sync::OnceLock;
+
+/// AVX2-oriented lane width: one 256-bit register of f32.
+const LANES: usize = 8;
+
+/// Fixed reduction tree over the 8 lane accumulators. Both dot paths
+/// funnel through this order; changing it changes every simd golden.
+#[inline]
+fn hsum8(acc: &[f32; LANES]) -> f32 {
+    let a0 = acc[0] + acc[4];
+    let a1 = acc[1] + acc[5];
+    let a2 = acc[2] + acc[6];
+    let a3 = acc[3] + acc[7];
+    (a0 + a2) + (a1 + a3)
+}
+
+/// Scalar 8-lane dot: the portable fallback and the bitwise spec the
+/// AVX2 path must reproduce. Autovectorizes on most targets.
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ao = &a[c * LANES..(c + 1) * LANES];
+        let bo = &b[c * LANES..(c + 1) * LANES];
+        for j in 0..LANES {
+            acc[j] += ao[j] * bo[j];
+        }
+    }
+    let mut sum = hsum8(&acc);
+    for i in chunks * LANES..n {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+}
+
+/// AVX2 dot, bitwise-identical to [`dot_lanes`]: per-lane
+/// multiply-then-add (no FMA — fused rounding would diverge from the
+/// scalar fallback), then a shuffle sequence that replays [`hsum8`]'s
+/// exact tree, then the scalar ascending tail.
+///
+/// # Safety
+/// Caller must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let va = _mm256_loadu_ps(a.as_ptr().add(c * LANES));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(c * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    // hsum8's tree in register form: lo+hi pairs lane j with lane j+4,
+    // movehl pairs (a0,a2)/(a1,a3), the final shuffle adds them.
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let s = _mm_add_ps(lo, hi);
+    let shuf = _mm_movehl_ps(s, s);
+    let s2 = _mm_add_ps(s, shuf);
+    let shuf2 = _mm_shuffle_ps::<0b01>(s2, s2);
+    let s3 = _mm_add_ss(s2, shuf2);
+    let mut sum = _mm_cvtss_f32(s3);
+    for i in chunks * LANES..n {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+/// Lane-split dot with runtime AVX2 dispatch. Both paths compute the
+/// same bits, so which one runs is invisible to callers.
+#[inline]
+fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        return unsafe { dot_avx2(a, b) };
+    }
+    dot_lanes(a, b)
+}
+
+fn matmul_wt_into(x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(wt.len(), m * k);
+    debug_assert_eq!(out.len(), n * m);
+    // Same output tiling as the reference kernel (see its L1 sizing
+    // note); only the per-element dot is lane-split.
+    const IB: usize = 4;
+    const JB: usize = 64;
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + IB).min(n);
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + JB).min(m);
+            for i in i0..i1 {
+                let xr = &x[i * k..(i + 1) * k];
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in j0..j1 {
+                    orow[j] = dot_simd(xr, &wt[j * k..(j + 1) * k]);
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+fn rms_norm_into(x: &[f32], gamma: &[f32], n: usize, h: usize, eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n * h);
+    for i in 0..n {
+        let row = &x[i * h..(i + 1) * h];
+        // Sum of squares as a lane-split self-dot; the normalization
+        // below is element-wise and matches the reference ordering.
+        let ms = dot_simd(row, row) / h as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for j in 0..h {
+            out[i * h + j] = row[j] * inv * gamma[j];
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_prefill_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    heads: usize,
+    kv: usize,
+    d: usize,
+    scores: &mut [f32],
+    attn: &mut [f32],
+) {
+    // The reference loop with lane-split q·k scores; softmax and the
+    // weighted-V accumulation keep the reference's scalar ascending
+    // order (element-wise over d — no reduction to reassociate).
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    for hh in 0..heads {
+        let kvh = hh / group;
+        for qi in 0..t {
+            let qrow = &q[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                let krow = &k[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                let s = dot_simd(qrow, krow) * scale;
+                *sc = s;
+                mx = mx.max(s);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(qi + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(qi * heads + hh) * d..(qi * heads + hh + 1) * d];
+            for ki in 0..=qi {
+                let w = scores[ki] / denom;
+                let vrow = &v[(ki * kv + kvh) * d..(ki * kv + kvh + 1) * d];
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_decode_into(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    pos: &[i32],
+    src: &dyn KvSource,
+    b: usize,
+    heads: usize,
+    kv: usize,
+    d: usize,
+    s_limit: usize,
+    scores: &mut [f32],
+    attn: &mut [f32],
+) {
+    let group = heads / kv;
+    let scale = 1.0 / (d as f32).sqrt();
+    for bi in 0..b {
+        let valid = (pos[bi].max(0) as usize).min(s_limit);
+        for hh in 0..heads {
+            let kvh = hh / group;
+            let qrow = &q[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            let krow_cur = &k_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let s_cur = dot_simd(qrow, krow_cur) * scale;
+            let mut mx = s_cur;
+            for (t, sc) in scores.iter_mut().enumerate().take(valid) {
+                let sv = dot_simd(qrow, src.k_row(bi, t, kvh)) * scale;
+                *sc = sv;
+                mx = mx.max(sv);
+            }
+            let mut denom = (s_cur - mx).exp();
+            let e_cur = denom;
+            for sc in scores.iter_mut().take(valid) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let out = &mut attn[(bi * heads + hh) * d..(bi * heads + hh + 1) * d];
+            for t in 0..valid {
+                let w = scores[t] / denom;
+                let vrow = src.v_row(bi, t, kvh);
+                for j in 0..d {
+                    out[j] += w * vrow[j];
+                }
+            }
+            let vrow_cur = &v_new[(bi * kv + kvh) * d..(bi * kv + kvh + 1) * d];
+            let wc = e_cur / denom;
+            for j in 0..d {
+                out[j] += wc * vrow_cur[j];
+            }
+        }
+    }
+}
+
+/// The lane-split backend behind [`super::KernelBackend`]. Element-wise
+/// ops delegate to the reference implementations (bitwise contract);
+/// reductions go through [`dot_simd`].
+pub struct Simd;
+
+impl super::KernelBackend for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn matmul_wt_into(&self, x: &[f32], wt: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        matmul_wt_into(x, wt, n, k, m, out);
+    }
+
+    fn rms_norm_into(
+        &self,
+        x: &[f32],
+        gamma: &[f32],
+        n: usize,
+        h: usize,
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        rms_norm_into(x, gamma, n, h, eps, out);
+    }
+
+    fn rope_with_freqs(
+        &self,
+        x: &mut [f32],
+        n: usize,
+        heads: usize,
+        d: usize,
+        freqs: &[f32],
+        pos_of: &dyn Fn(usize) -> f32,
+    ) {
+        reference::rope_with_freqs(x, n, heads, d, freqs, pos_of);
+    }
+
+    fn softmax_rows(&self, x: &mut [f32], n: usize, m: usize) {
+        reference::softmax_rows(x, n, m);
+    }
+
+    fn silu_mul(&self, acts: &mut [f32], gate: &[f32]) {
+        reference::silu_mul(acts, gate);
+    }
+
+    fn attn_prefill_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        t: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        attn_prefill_into(q, k, v, t, heads, kv, d, scores, attn);
+    }
+
+    fn attn_decode_into(
+        &self,
+        q: &[f32],
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: &[i32],
+        src: &dyn KvSource,
+        b: usize,
+        heads: usize,
+        kv: usize,
+        d: usize,
+        s_limit: usize,
+        scores: &mut [f32],
+        attn: &mut [f32],
+    ) {
+        attn_decode_into(q, k_new, v_new, pos, src, b, heads, kv, d, s_limit, scores, attn);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{backend, BackendKind, KernelBackend};
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Pcg;
+
+    /// Relative tolerance for lane-split vs single-accumulator sums.
+    /// f32 has ~7 decimal digits; reassociating a few-hundred-term sum
+    /// moves results by at most a handful of ULP, far under 1e-4.
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Random values with the awkward cases mixed in: exact ±0.0 and
+    /// subnormals (|v| ≈ 1e-41 < f32::MIN_POSITIVE), which exercise the
+    /// naive kernel's zero-skip and AVX2's (absent) DAZ/FTZ behavior.
+    fn awkward_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                3 => -0.0,
+                5 => 1e-41,
+                6 => -1e-41,
+                _ => (rng.f32() - 0.5) * 2.0,
+            })
+            .collect()
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_dot_is_bitwise_equal_to_scalar_lanes() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Pcg::seeded(0x51AD);
+        for len in 0..=67 {
+            let a = awkward_vec(&mut rng, len);
+            let b = awkward_vec(&mut rng, len);
+            let scalar = dot_lanes(&a, &b);
+            // SAFETY: AVX2 presence checked above.
+            let vector = unsafe { dot_avx2(&a, &b) };
+            assert_eq!(
+                scalar.to_bits(),
+                vector.to_bits(),
+                "len={len}: scalar {scalar} != avx2 {vector}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_dot_is_deterministic_run_to_run() {
+        let mut rng = Pcg::seeded(7);
+        let a = awkward_vec(&mut rng, 300);
+        let b = awkward_vec(&mut rng, 300);
+        let first = dot_simd(&a, &b);
+        for _ in 0..10 {
+            assert_eq!(first.to_bits(), dot_simd(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn cross_backend_matmul_close_on_ragged_shapes() {
+        let refe = backend(BackendKind::Reference);
+        let simd = backend(BackendKind::Simd);
+        prop::check("cross_backend_matmul", 60, |rng, case| {
+            // Deliberately straddle the lane width: k in [0, 25) hits
+            // k = 0 (empty reduction), k < 8 (tail only), k = 8/16
+            // (exact chunks), and non-multiples.
+            let n = rng.range_usize(0, 6);
+            let k = rng.range_usize(0, 25);
+            let m = rng.range_usize(0, 70);
+            let x = awkward_vec(rng, n * k);
+            let w = awkward_vec(rng, k * m);
+            let wt = reference::transpose(&w, k, m);
+            let mut a = vec![f32::NAN; n * m];
+            let mut b = vec![f32::NAN; n * m];
+            refe.matmul_wt_into(&x, &wt, n, k, m, &mut a);
+            simd.matmul_wt_into(&x, &wt, n, k, m, &mut b);
+            for (i, (&ra, &rb)) in a.iter().zip(&b).enumerate() {
+                assert!(close(ra, rb), "case {case} ({n}x{k}x{m}) elem {i}: {ra} vs {rb}");
+            }
+        });
+    }
+
+    #[test]
+    fn cross_backend_rms_norm_close() {
+        let refe = backend(BackendKind::Reference);
+        let simd = backend(BackendKind::Simd);
+        prop::check("cross_backend_rms_norm", 40, |rng, case| {
+            let n = rng.range_usize(0, 5);
+            let h = rng.range_usize(1, 40);
+            let x = awkward_vec(rng, n * h);
+            let gamma = awkward_vec(rng, h);
+            let mut a = vec![f32::NAN; n * h];
+            let mut b = vec![f32::NAN; n * h];
+            refe.rms_norm_into(&x, &gamma, n, h, 1e-5, &mut a);
+            simd.rms_norm_into(&x, &gamma, n, h, 1e-5, &mut b);
+            for (i, (&ra, &rb)) in a.iter().zip(&b).enumerate() {
+                assert!(close(ra, rb), "case {case} ({n}x{h}) elem {i}: {ra} vs {rb}");
+            }
+        });
+    }
+
+    #[test]
+    fn cross_backend_elementwise_ops_are_bitwise() {
+        let refe = backend(BackendKind::Reference);
+        let simd = backend(BackendKind::Simd);
+        prop::check("cross_backend_elementwise", 30, |rng, case| {
+            let heads = rng.range_usize(1, 4);
+            let d = 2 * rng.range_usize(1, 9);
+            let n = rng.range_usize(0, 5);
+            let freqs = reference::rope_freqs(d, 10000.0);
+            let mut a = awkward_vec(rng, n * heads * d);
+            let mut b = a.clone();
+            refe.rope_with_freqs(&mut a, n, heads, d, &freqs, &|i| i as f32);
+            simd.rope_with_freqs(&mut b, n, heads, d, &freqs, &|i| i as f32);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: rope must be bitwise across backends"
+            );
+
+            let gate = awkward_vec(rng, a.len());
+            let mut ga = a.clone();
+            let mut gb = a.clone();
+            refe.silu_mul(&mut ga, &gate);
+            simd.silu_mul(&mut gb, &gate);
+            assert!(
+                ga.iter().zip(&gb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: silu_mul must be bitwise across backends"
+            );
+
+            let rows = rng.range_usize(1, 4);
+            let cols = rng.range_usize(1, 12);
+            let mut sa: Vec<f32> = (0..rows * cols).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let mut sb = sa.clone();
+            refe.softmax_rows(&mut sa, rows, cols);
+            simd.softmax_rows(&mut sb, rows, cols);
+            assert!(
+                sa.iter().zip(&sb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: softmax_rows must be bitwise across backends"
+            );
+        });
+    }
+
+    #[test]
+    fn cross_backend_attention_close() {
+        let refe = backend(BackendKind::Reference);
+        let simd = backend(BackendKind::Simd);
+        prop::check("cross_backend_attention", 25, |rng, case| {
+            let kv = rng.range_usize(1, 3);
+            let heads = kv * rng.range_usize(1, 3);
+            let d = rng.range_usize(2, 21); // straddles the lane width
+            let t = rng.range_usize(1, 7);
+            let q: Vec<f32> = awkward_vec(rng, t * heads * d);
+            let k: Vec<f32> = awkward_vec(rng, t * kv * d);
+            let v: Vec<f32> = awkward_vec(rng, t * kv * d);
+            let mut scores = vec![0.0f32; t];
+            let mut a = vec![0.0f32; t * heads * d];
+            let mut b = vec![0.0f32; t * heads * d];
+            refe.attn_prefill_into(&q, &k, &v, t, heads, kv, d, &mut scores, &mut a);
+            simd.attn_prefill_into(&q, &k, &v, t, heads, kv, d, &mut scores, &mut b);
+            for (i, (&ra, &rb)) in a.iter().zip(&b).enumerate() {
+                assert!(close(ra, rb), "case {case} prefill elem {i}: {ra} vs {rb}");
+            }
+
+            // Decode step over a dense cache, including pos = 0 rows
+            // (zero-length cached history — the current token only).
+            let bsz = rng.range_usize(1, 4);
+            let s = t;
+            let q1 = awkward_vec(rng, bsz * heads * d);
+            let kc = awkward_vec(rng, bsz * s * kv * d);
+            let vc = awkward_vec(rng, bsz * s * kv * d);
+            let kn = awkward_vec(rng, bsz * kv * d);
+            let vn = awkward_vec(rng, bsz * kv * d);
+            let pos: Vec<i32> = (0..bsz).map(|_| rng.range_usize(0, s + 1) as i32).collect();
+            let src = reference::DenseKv { k: &kc, v: &vc, s, kv, d };
+            let mut ds = vec![0.0f32; s];
+            let mut da = vec![0.0f32; bsz * heads * d];
+            let mut db = vec![0.0f32; bsz * heads * d];
+            refe.attn_decode_into(
+                &q1, &kn, &vn, &pos, &src, bsz, heads, kv, d, s, &mut ds, &mut da,
+            );
+            simd.attn_decode_into(
+                &q1, &kn, &vn, &pos, &src, bsz, heads, kv, d, s, &mut ds, &mut db,
+            );
+            for (i, (&ra, &rb)) in da.iter().zip(&db).enumerate() {
+                assert!(close(ra, rb), "case {case} decode elem {i}: {ra} vs {rb}");
+            }
+        });
+    }
+
+    #[test]
+    fn simd_matmul_is_deterministic_run_to_run() {
+        let simd = backend(BackendKind::Simd);
+        let mut rng = Pcg::seeded(0xD37);
+        let (n, k, m) = (5, 37, 43);
+        let x = awkward_vec(&mut rng, n * k);
+        let wt = awkward_vec(&mut rng, m * k);
+        let mut first = vec![0.0f32; n * m];
+        simd.matmul_wt_into(&x, &wt, n, k, m, &mut first);
+        for _ in 0..5 {
+            let mut again = vec![0.0f32; n * m];
+            simd.matmul_wt_into(&x, &wt, n, k, m, &mut again);
+            assert!(first.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+}

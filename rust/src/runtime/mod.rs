@@ -11,13 +11,17 @@
 //!
 //! The [`xla`] module is an in-repo stand-in for the external `xla` crate
 //! (unavailable offline): same call surface, reference-math execution of
-//! the five artifact kinds (see its module docs).
+//! the five artifact kinds (see its module docs). Its kernels live in
+//! [`kern`] behind the pluggable [`kern::KernelBackend`] trait
+//! (DESIGN.md §12); each device picks its backend at spawn from
+//! `[kernels] backend`.
 //!
 //! Messages carry host tensors (`Vec<f32>`/`Vec<i32>`); weights are
 //! referenced by name and resolved from the device-resident cache, so the
 //! steady state uploads only activations.
 
 pub mod device;
+pub mod kern;
 pub mod roles;
 pub mod xla;
 

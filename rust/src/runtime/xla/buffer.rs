@@ -1,0 +1,163 @@
+//! Zero-copy buffer and literal types (the PJRT data surface).
+//!
+//! Buffers wrap refcounted [`Tensor`] storage, so upload/readback are
+//! refcount bumps; weight buffers memoize their transpose for the
+//! blocked matmul (computed once, prewarmed at weight upload).
+
+use super::{err, XlaError};
+use crate::kvcache::PagedKvView;
+use crate::runtime::kern;
+use crate::tensor::{ShapeDims, Tensor};
+use std::sync::{Arc, OnceLock};
+
+#[derive(Debug, Clone)]
+pub(crate) enum BufData {
+    F32(Tensor),
+    I32(Arc<Vec<i32>>, ShapeDims),
+    /// Paged KV cache by reference (decode attention only): stands in
+    /// for the (k_cache, v_cache) tensor pair.
+    Paged(PagedKvView),
+    Tuple(Vec<PjRtBuffer>),
+}
+
+/// Host-resident "device" buffer. Clones are refcount bumps — tensor
+/// storage is shared, never copied.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    pub(crate) data: BufData,
+    /// Memoized `W^T` of a 2-D weight buffer: computed at most once per
+    /// resident buffer (prewarmed during weight upload — the "compile
+    /// time" transpose), then reused by every matmul against it.
+    wt: OnceLock<Arc<Vec<f32>>>,
+}
+
+impl PjRtBuffer {
+    pub(crate) fn wrap(data: BufData) -> PjRtBuffer {
+        PjRtBuffer { data, wt: OnceLock::new() }
+    }
+
+    pub(crate) fn from_tensor(t: Tensor) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::F32(t))
+    }
+
+    pub(crate) fn from_i32_vec(v: Vec<i32>, shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::I32(Arc::new(v), ShapeDims::from_slice(shape)))
+    }
+
+    pub(crate) fn paged(view: PagedKvView) -> PjRtBuffer {
+        PjRtBuffer::wrap(BufData::Paged(view))
+    }
+
+    pub(crate) fn f32_buf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
+        PjRtBuffer::from_tensor(Tensor::new(shape, data))
+    }
+
+    /// Copy-free host readback: the literal shares this buffer's storage.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(Literal { buf: self.clone() })
+    }
+
+    pub(crate) fn tensor(&self) -> Result<&Tensor, XlaError> {
+        match &self.data {
+            BufData::F32(t) => Ok(t),
+            _ => Err(err("expected f32 buffer")),
+        }
+    }
+
+    pub(crate) fn f32s(&self) -> Result<&[f32], XlaError> {
+        Ok(self.tensor()?.data())
+    }
+
+    pub(crate) fn i32s(&self) -> Result<&[i32], XlaError> {
+        match &self.data {
+            BufData::I32(v, _) => Ok(v.as_slice()),
+            _ => Err(err("expected i32 buffer")),
+        }
+    }
+
+    pub(crate) fn dims(&self) -> &[usize] {
+        match &self.data {
+            BufData::F32(t) => t.shape(),
+            BufData::I32(_, sh) => sh.as_slice(),
+            _ => &[],
+        }
+    }
+
+    /// The memoized transpose of this (weight) buffer, validated as
+    /// `[k, m]`. First call computes `W^T`; every later call is a slice
+    /// borrow. Transposition is a pure data movement, so the memo is
+    /// valid under every kernel backend.
+    pub(crate) fn wt_slice(&self, k: usize, m: usize) -> Result<&[f32], XlaError> {
+        let t = self.tensor()?;
+        if t.shape() != [k, m] {
+            return Err(err(format!("weight shape {:?}, want [{k}, {m}]", t.shape())));
+        }
+        Ok(self.wt.get_or_init(|| Arc::new(kern::transpose(t.data(), k, m))).as_slice())
+    }
+
+    /// Eagerly compute the transpose of a 2-D f32 buffer (weight upload
+    /// path, so no execution ever pays it).
+    pub(crate) fn prewarm_transpose(&self) {
+        if let BufData::F32(t) = &self.data {
+            if let [k, m] = *t.shape() {
+                let _ = self.wt_slice(k, m);
+            }
+        }
+    }
+}
+
+pub struct Literal {
+    buf: PjRtBuffer,
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self.buf.data {
+            BufData::Tuple(parts) => {
+                Ok(parts.into_iter().map(|buf| Literal { buf }).collect())
+            }
+            _ => Err(err("literal is not a tuple")),
+        }
+    }
+
+    /// Copying extraction (legacy surface; prefer [`Literal::into_tensor`]
+    /// when the caller owns the literal).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        T::extract(&self.buf)
+    }
+
+    /// Zero-copy extraction: the returned tensor shares the executor's
+    /// output storage (no `to_vec` on the readback path).
+    pub fn into_tensor(self) -> Result<Tensor, XlaError> {
+        match self.buf.data {
+            BufData::F32(t) => Ok(t),
+            _ => Err(err("literal is not an f32 tensor")),
+        }
+    }
+}
+
+/// Element types transferable to/from buffers.
+pub trait Element: Copy {
+    fn wrap(data: &[Self], shape: &[usize]) -> PjRtBuffer;
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<Self>, XlaError>;
+}
+
+impl Element for f32 {
+    fn wrap(data: &[f32], shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer::f32_buf(data.to_vec(), shape.to_vec())
+    }
+
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<f32>, XlaError> {
+        Ok(buf.f32s()?.to_vec())
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: &[i32], shape: &[usize]) -> PjRtBuffer {
+        PjRtBuffer::from_i32_vec(data.to_vec(), shape)
+    }
+
+    fn extract(buf: &PjRtBuffer) -> Result<Vec<i32>, XlaError> {
+        Ok(buf.i32s()?.to_vec())
+    }
+}

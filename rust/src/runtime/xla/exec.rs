@@ -1,0 +1,248 @@
+//! Reference executor (mirrors python/compile/model.py entry points).
+//!
+//! Each artifact kind lowers to a short sequence of [`kern`] ops. All
+//! kernel math goes through the executable's [`kern::KernelBackend`], so
+//! a device runs entirely on one backend; everything around the kernels
+//! (scratch tensors, residual adds, zero-copy plumbing) is backend-
+//! independent.
+
+use super::buffer::{BufData, PjRtBuffer};
+use super::{err, XlaError, RMS_EPS, ROPE_THETA};
+use crate::modelcfg::{ArtifactKind, ArtifactSpec};
+use crate::runtime::kern::{self, KernelBackend};
+use crate::tensor::{ShapeDims, Tensor};
+
+pub(super) fn run_reference(
+    spec: &ArtifactSpec,
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    match spec.kind {
+        ArtifactKind::AttnPrefill => attn_prefill(spec, bk, args),
+        ArtifactKind::AttnDecode => attn_decode(spec, bk, args),
+        ArtifactKind::Router => router(bk, args),
+        ArtifactKind::Expert => expert_ffn(bk, args),
+        ArtifactKind::LmHead => lm_head(bk, args),
+    }
+}
+
+/// `x @ w` via the backend's blocked kernel and `w`'s memoized
+/// transpose, into a fresh scratch-arena tensor of the given shape.
+fn matmul_t(
+    bk: &dyn kern::KernelBackend,
+    x: &[f32],
+    w: &PjRtBuffer,
+    n: usize,
+    k: usize,
+    m: usize,
+    shape: impl Into<ShapeDims>,
+) -> Result<Tensor, XlaError> {
+    let wt = w.wt_slice(k, m)?;
+    let mut out = Tensor::uninit(shape);
+    bk.matmul_wt_into(x, wt, n, k, m, out.data_mut());
+    Ok(out)
+}
+
+/// attn_prefill(x, wq, wk, wv, wo, ln1, ln2) -> (h, g, k, v)
+pub(super) fn attn_prefill(
+    spec: &ArtifactSpec,
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].tensor()?;
+    let (t, h) = (x.shape()[0], x.shape()[1]);
+    // Output 2 is k: [T, kv_heads, head_dim] — the head split.
+    let kv = spec.outputs[2].shape[1];
+    let d = spec.outputs[2].shape[2];
+    let heads = h / d;
+    let kvd = kv * d;
+    let (ln1, ln2) = (args[5].f32s()?, args[6].f32s()?);
+
+    // Fused input staging: normalize once into a scratch tensor, feed
+    // all three projections from it.
+    let mut n_t = Tensor::uninit([t, h]);
+    bk.rms_norm_into(x.data(), ln1, t, h, RMS_EPS, n_t.data_mut());
+    let mut q = matmul_t(bk, n_t.data(), args[1], t, h, h, [t, h])?;
+    let mut k = matmul_t(bk, n_t.data(), args[2], t, h, kvd, [t, kv, d])?;
+    let v = matmul_t(bk, n_t.data(), args[3], t, h, kvd, [t, kv, d])?;
+    let freqs = kern::rope_freqs_cached(d, ROPE_THETA);
+    bk.rope_with_freqs(q.data_mut(), t, heads, d, freqs.as_slice(), &|i: usize| i as f32);
+    bk.rope_with_freqs(k.data_mut(), t, kv, d, freqs.as_slice(), &|i: usize| i as f32);
+
+    let mut attn = Tensor::zeros([t, h]);
+    let mut scores = Tensor::uninit([t]);
+    bk.attn_prefill_into(
+        q.data(),
+        k.data(),
+        v.data(),
+        t,
+        heads,
+        kv,
+        d,
+        scores.data_mut(),
+        attn.data_mut(),
+    );
+
+    let proj = matmul_t(bk, attn.data(), args[4], t, h, h, [t, h])?;
+    let mut h_out = Tensor::uninit([t, h]);
+    for ((o, a), b) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+        *o = a + b;
+    }
+    let mut g = Tensor::uninit([t, h]);
+    bk.rms_norm_into(h_out.data(), ln2, t, h, RMS_EPS, g.data_mut());
+    Ok(vec![
+        PjRtBuffer::from_tensor(h_out),
+        PjRtBuffer::from_tensor(g),
+        PjRtBuffer::from_tensor(k),
+        PjRtBuffer::from_tensor(v),
+    ])
+}
+
+/// attn_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, ln1, ln2)
+/// -> (h, g, k_new, v_new)
+///
+/// The cache pair may instead be a single paged argument
+/// (x, paged_kv, pos, wq, ...): same arithmetic, reads in place.
+pub(super) fn attn_decode(
+    spec: &ArtifactSpec,
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    match &args[1].data {
+        BufData::Paged(view) => {
+            // Geometry is pinned by the spec's k_cache input [b, s, kv, d].
+            let kshape = spec
+                .inputs
+                .get(1)
+                .map(|io| io.shape.as_slice())
+                .ok_or_else(|| err("paged decode requires a k_cache input spec"))?;
+            if kshape.len() != 4 {
+                return Err(err(format!("k_cache spec must be rank 4, got {kshape:?}")));
+            }
+            let (s, kv, d) = (kshape[1], kshape[2], kshape[3]);
+            if view.pool.row_elems() != kv * d {
+                return Err(err(format!(
+                    "paged arena row_elems {} does not match kv*d = {}",
+                    view.pool.row_elems(),
+                    kv * d
+                )));
+            }
+            let pos = args[2].i32s()?;
+            let read = view.pool.read();
+            let src = kern::PagedKv { read: &read, tables: &view.tables, d };
+            attn_decode_with(bk, args[0], pos, &src, s, kv, d, &args[3..9])
+        }
+        _ => {
+            let k_cache = args[1].f32s()?;
+            let v_cache = args[2].f32s()?;
+            let dims = args[1].dims();
+            let (s, kv, d) = (dims[1], dims[2], dims[3]);
+            let pos = args[3].i32s()?;
+            let src = kern::DenseKv { k: k_cache, v: v_cache, s, kv, d };
+            attn_decode_with(bk, args[0], pos, &src, s, kv, d, &args[4..10])
+        }
+    }
+}
+
+/// Shared decode-attention body; `w` is [wq, wk, wv, wo, ln1, ln2].
+#[allow(clippy::too_many_arguments)]
+fn attn_decode_with(
+    bk: &dyn kern::KernelBackend,
+    x_buf: &PjRtBuffer,
+    pos: &[i32],
+    src: &dyn kern::KvSource,
+    s: usize,
+    kv: usize,
+    d: usize,
+    w: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = x_buf.tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
+    let heads = h / d;
+    let kvd = kv * d;
+    let (ln1, ln2) = (w[4].f32s()?, w[5].f32s()?);
+
+    let mut n_t = Tensor::uninit([b, h]);
+    bk.rms_norm_into(x.data(), ln1, b, h, RMS_EPS, n_t.data_mut());
+    let mut q = matmul_t(bk, n_t.data(), w[0], b, h, h, [b, h])?;
+    let mut k_new = matmul_t(bk, n_t.data(), w[1], b, h, kvd, [b, kv, d])?;
+    let v_new = matmul_t(bk, n_t.data(), w[2], b, h, kvd, [b, kv, d])?;
+    let freqs = kern::rope_freqs_cached(d, ROPE_THETA);
+    bk.rope_with_freqs(q.data_mut(), b, heads, d, freqs.as_slice(), &|i: usize| pos[i] as f32);
+    bk.rope_with_freqs(k_new.data_mut(), b, kv, d, freqs.as_slice(), &|i: usize| pos[i] as f32);
+
+    let mut attn = Tensor::zeros([b, h]);
+    let mut scores = Tensor::uninit([s]);
+    bk.attn_decode_into(
+        q.data(),
+        k_new.data(),
+        v_new.data(),
+        pos,
+        src,
+        b,
+        heads,
+        kv,
+        d,
+        s,
+        scores.data_mut(),
+        attn.data_mut(),
+    );
+
+    let proj = matmul_t(bk, attn.data(), w[3], b, h, h, [b, h])?;
+    let mut h_out = Tensor::uninit([b, h]);
+    for ((o, a), c) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
+        *o = a + c;
+    }
+    let mut g = Tensor::uninit([b, h]);
+    bk.rms_norm_into(h_out.data(), ln2, b, h, RMS_EPS, g.data_mut());
+    Ok(vec![
+        PjRtBuffer::from_tensor(h_out),
+        PjRtBuffer::from_tensor(g),
+        PjRtBuffer::from_tensor(k_new),
+        PjRtBuffer::from_tensor(v_new),
+    ])
+}
+
+/// router(g, wg) -> softmax(g @ wg)
+pub(super) fn router(
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let g = args[0].tensor()?;
+    let (b, h) = (g.shape()[0], g.shape()[1]);
+    let e = args[1].dims()[1];
+    let mut logits = matmul_t(bk, g.data(), args[1], b, h, e, [b, e])?;
+    bk.softmax_rows(logits.data_mut(), b, e);
+    Ok(vec![PjRtBuffer::from_tensor(logits)])
+}
+
+/// expert_ffn(x, w1, w3, w2) -> (silu(x@w1) * (x@w3)) @ w2
+pub(super) fn expert_ffn(
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
+    let f = args[1].dims()[1];
+    let mut a = matmul_t(bk, x.data(), args[1], b, h, f, [b, f])?;
+    let g = matmul_t(bk, x.data(), args[2], b, h, f, [b, f])?;
+    // Gate in place: a <- silu(a) * g.
+    bk.silu_mul(a.data_mut(), g.data());
+    let y = matmul_t(bk, a.data(), args[3], b, f, h, [b, h])?;
+    Ok(vec![PjRtBuffer::from_tensor(y)])
+}
+
+/// lm_head(h, ln_f, wlm) -> rms_norm(h) @ wlm
+pub(super) fn lm_head(
+    bk: &dyn kern::KernelBackend,
+    args: &[&PjRtBuffer],
+) -> Result<Vec<PjRtBuffer>, XlaError> {
+    let x = args[0].tensor()?;
+    let (b, h) = (x.shape()[0], x.shape()[1]);
+    let ln_f = args[1].f32s()?;
+    let v = args[2].dims()[1];
+    let mut normed = Tensor::uninit([b, h]);
+    bk.rms_norm_into(x.data(), ln_f, b, h, RMS_EPS, normed.data_mut());
+    let logits = matmul_t(bk, normed.data(), args[2], b, h, v, [b, v])?;
+    Ok(vec![PjRtBuffer::from_tensor(logits)])
+}

@@ -1,0 +1,208 @@
+//! In-repo stand-in for the external `xla` crate (PJRT CPU client).
+//!
+//! The build environment is offline: neither xla-rs nor the XLA C++
+//! runtime can be fetched. This module keeps `runtime::device`'s call
+//! surface (`PjRtClient` / `HloModuleProto` / `PjRtLoadedExecutable` /
+//! `PjRtBuffer` / `Literal`) and executes each artifact with dense f32
+//! reference math mirroring `python/compile` (kernels/ref.py, model.py):
+//! RMSNorm + RoPE + GQA attention, softmax gating, SwiGLU expert FFN,
+//! final-norm LM head. The artifact's HLO file is only validated to
+//! exist; semantics are pinned by the manifest's [`ArtifactSpec`] (kind
+//! and I/O shapes) plus the weights passed at call time, so results
+//! match the pure-jnp oracle up to f32 accumulation order.
+//!
+//! Decode hot path (DESIGN.md §10): buffers wrap [`Tensor`]s, so host
+//! upload (`buffer_from_tensor`), device→host readback
+//! (`Literal::into_tensor`), and `to_literal_sync` are refcount bumps,
+//! never float copies. Matmuls run cache-blocked against a transposed
+//! weight copy computed **once** per resident weight buffer
+//! ([`PjRtBuffer::wt_slice`], memoized; prewarmed at weight upload), and
+//! decode attention can read the paged KV arena in place
+//! (`BufData::Paged`) instead of a contiguous per-step copy.
+//!
+//! Kernel dispatch (DESIGN.md §12): every client carries a
+//! [`kern::KernelBackend`], stamped into each compiled executable, so a
+//! whole device runs either the bitwise-pinned `Reference` kernels (the
+//! default — the scenario suite's golden token streams cannot move) or
+//! the lane-split `Simd` kernels, selected via `[kernels] backend` or
+//! `TARRAGON_KERNEL_BACKEND`. Module layout: [`kern`] (re-exported from
+//! `runtime::kern`) holds the kernels, `buffer` the zero-copy
+//! buffer/literal types, `exec` the per-artifact reference executor.
+//!
+//! [`Tensor`]: crate::tensor::Tensor
+//! [`ArtifactSpec`]: crate::modelcfg::ArtifactSpec
+//! [`BufData::Paged`]: buffer::BufData::Paged
+
+mod buffer;
+mod exec;
+#[cfg(test)]
+mod tests;
+
+// Kernels lived at `runtime::xla::kern` before backends were pluggable;
+// the path stays valid for the allocation-contract test and benches.
+pub use crate::runtime::kern;
+
+pub use buffer::{Element, Literal, PjRtBuffer};
+pub(crate) use buffer::BufData;
+
+use crate::modelcfg::ArtifactSpec;
+use crate::runtime::kern::KernelBackend;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Mirrors `python/compile/configs.py` (`ModelConfig.rms_eps` /
+/// `.rope_theta`) — the only two model scalars not carried by the
+/// manifest's numeric fields.
+pub(crate) const RMS_EPS: f32 = 1e-5;
+pub(crate) const ROPE_THETA: f32 = 10000.0;
+
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub(crate) fn err(msg: impl Into<String>) -> XlaError {
+    XlaError { msg: msg.into() }
+}
+
+// ---------------------------------------------------------------------------
+// Client / compilation
+// ---------------------------------------------------------------------------
+
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    /// Validate the artifact file exists and record its name; the HLO
+    /// text itself is not interpreted (see module docs).
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, XlaError> {
+        if !path.exists() {
+            return Err(err(format!("missing artifact file {}", path.display())));
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string();
+        Ok(HloModuleProto { name })
+    }
+}
+
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { name: p.name.clone() }
+    }
+}
+
+pub struct PjRtClient {
+    backend: &'static dyn kern::KernelBackend,
+}
+
+impl PjRtClient {
+    /// Client on the process-default backend ([`kern::default_kind`]).
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient::cpu_with(kern::default_kind()))
+    }
+
+    /// Client on an explicitly selected kernel backend (the
+    /// `[kernels] backend` config plumbs through here via the device).
+    pub fn cpu_with(kind: kern::BackendKind) -> PjRtClient {
+        PjRtClient { backend: kern::backend(kind) }
+    }
+
+    /// Name of the kernel backend this client executes with.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// "Compile" an artifact: bind its manifest spec (shared via `Arc` —
+    /// executions never clone it) and the client's kernel backend, which
+    /// pins the computation for the reference executor.
+    pub fn compile(
+        &self,
+        _c: &XlaComputation,
+        spec: &ArtifactSpec,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Ok(PjRtLoadedExecutable { spec: Arc::new(spec.clone()), backend: self.backend })
+    }
+
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        data: &[T],
+        shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(err(format!(
+                "host buffer length {} does not match shape {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(T::wrap(data, shape))
+    }
+
+    /// Zero-copy "upload": the device buffer shares the host tensor's
+    /// storage (the activation path).
+    pub fn buffer_from_tensor(&self, t: crate::tensor::Tensor) -> PjRtBuffer {
+        PjRtBuffer::from_tensor(t)
+    }
+
+    /// Zero-copy i32 upload (decode position vectors).
+    pub fn buffer_from_i32_vec(
+        &self,
+        v: Vec<i32>,
+        shape: &[usize],
+    ) -> Result<PjRtBuffer, XlaError> {
+        if shape.iter().product::<usize>() != v.len() {
+            return Err(err(format!(
+                "host buffer length {} does not match shape {shape:?}",
+                v.len()
+            )));
+        }
+        Ok(PjRtBuffer::from_i32_vec(v, shape))
+    }
+
+    /// Paged KV argument (decode attention): stands in for the
+    /// (k_cache, v_cache) pair; the kernel reads the arena in place.
+    pub fn buffer_from_paged_kv(&self, view: crate::kvcache::PagedKvView) -> PjRtBuffer {
+        PjRtBuffer::paged(view)
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    spec: Arc<ArtifactSpec>,
+    backend: &'static dyn kern::KernelBackend,
+}
+
+impl PjRtLoadedExecutable {
+    /// The spec this executable was compiled against (shared, not cloned).
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Name of the kernel backend this executable runs on.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Execute with borrowed argument buffers; returns per-replica output
+    /// lists holding one tuple buffer (return_tuple=True convention).
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        let outputs = exec::run_reference(&self.spec, self.backend, args)?;
+        Ok(vec![vec![PjRtBuffer::wrap(BufData::Tuple(outputs))]])
+    }
+}

@@ -1,0 +1,327 @@
+use super::exec::{attn_decode, attn_prefill, expert_ffn, router};
+use super::*;
+use crate::kvcache::{KvPool, RequestKv};
+use crate::modelcfg::{ArtifactKind, ArtifactSpec, DType, IoSpec, ModelSpec};
+use crate::runtime::kern::KernelBackend;
+use crate::tensor::Tensor;
+use crate::testing::prop;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+
+fn io(name: &str, shape: Vec<usize>, dtype: DType) -> IoSpec {
+    IoSpec { name: name.into(), shape, dtype }
+}
+
+fn fbuf(data: Vec<f32>, shape: Vec<usize>) -> PjRtBuffer {
+    PjRtBuffer::f32_buf(data, shape)
+}
+
+fn rand_vec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect()
+}
+
+/// The pre-refactor executor ran exactly these kernels; tests that pin
+/// bitwise behavior (goldens, paged-vs-dense) run against it.
+fn rbk() -> &'static dyn kern::KernelBackend {
+    kern::backend(kern::BackendKind::Reference)
+}
+
+#[test]
+fn blocked_matmul_is_bitwise_equal_to_naive() {
+    // Ragged shapes straddling the tile sizes (IB=4, JB=64),
+    // including zero entries to exercise the naive skip path.
+    prop::check("matmul_wt == matmul_naive", 40, |rng, case| {
+        let n = rng.range_usize(1, 9);
+        let k = rng.range_usize(1, 130);
+        let m = rng.range_usize(1, 140);
+        let mut x = rand_vec(rng, n * k);
+        if case % 3 == 0 {
+            for v in x.iter_mut().step_by(3) {
+                *v = 0.0;
+            }
+        }
+        let w = rand_vec(rng, k * m);
+        let naive = kern::matmul_naive(&x, &w, n, k, m);
+        let wt = kern::transpose(&w, k, m);
+        let mut blocked = vec![0.0f32; n * m];
+        kern::matmul_wt_into(&x, &wt, n, k, m, &mut blocked);
+        assert!(
+            naive.iter().zip(&blocked).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "blocked matmul diverged at n={n} k={k} m={m}"
+        );
+    });
+}
+
+#[test]
+fn rms_norm_matches_scalar_reference() {
+    prop::check("rms_norm_into == scalar", 20, |rng, _| {
+        let n = rng.range_usize(1, 6);
+        let h = rng.range_usize(1, 70);
+        let x = rand_vec(rng, n * h);
+        let gamma = rand_vec(rng, h);
+        let mut out = vec![0.0f32; n * h];
+        kern::rms_norm_into(&x, &gamma, n, h, RMS_EPS, &mut out);
+        for i in 0..n {
+            let row = &x[i * h..(i + 1) * h];
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+            let inv = 1.0 / (ms + RMS_EPS).sqrt();
+            for j in 0..h {
+                assert_eq!(out[i * h + j].to_bits(), (row[j] * inv * gamma[j]).to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn paged_decode_is_bitwise_equal_to_dense() {
+    let m = ModelSpec {
+        layers: 1,
+        hidden: 8,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 4,
+        ffn: 16,
+        experts: 2,
+        top_k: 1,
+        vocab: 16,
+        max_seq: 12,
+    };
+    let spec = ArtifactSpec {
+        name: "attn_decode_b2".into(),
+        kind: ArtifactKind::AttnDecode,
+        bucket: 2,
+        file: "x.hlo".into(),
+        inputs: vec![
+            io("x", vec![2, 8], DType::F32),
+            io("k_cache", vec![2, 12, 1, 4], DType::F32),
+            io("v_cache", vec![2, 12, 1, 4], DType::F32),
+            io("pos", vec![2], DType::I32),
+        ],
+        outputs: vec![],
+    };
+    prop::check("paged attn == dense attn", 12, |rng, _| {
+        // Paged KV with a small page size so sequences span pages.
+        let pool = KvPool::with_page_tokens(&m, 4);
+        let seg = m.kv_heads * m.head_dim;
+        let len0 = rng.range_usize(0, 11);
+        let len1 = rng.range_usize(0, 11);
+        let mut kvs = [RequestKv::new(&m, &pool), RequestKv::new(&m, &pool)];
+        for (r, &len) in kvs.iter_mut().zip(&[len0, len1]) {
+            for t in 0..len {
+                r.write(0, t, &rand_vec(rng, seg), &rand_vec(rng, seg));
+            }
+            r.set_len(len);
+        }
+        // Dense copies of the same state.
+        let row = m.max_seq * seg;
+        let mut kc = vec![0.0f32; 2 * row];
+        let mut vc = vec![0.0f32; 2 * row];
+        for (i, r) in kvs.iter().enumerate() {
+            let (ks, vs) = (&mut kc[i * row..(i + 1) * row], &mut vc[i * row..(i + 1) * row]);
+            r.copy_layer_into(0, ks, vs);
+        }
+        let x = fbuf(rand_vec(rng, 2 * m.hidden), vec![2, m.hidden]);
+        let wq = fbuf(rand_vec(rng, 64), vec![8, 8]);
+        let wk = fbuf(rand_vec(rng, 32), vec![8, 4]);
+        let wv = fbuf(rand_vec(rng, 32), vec![8, 4]);
+        let wo = fbuf(rand_vec(rng, 64), vec![8, 8]);
+        let ln1 = fbuf(vec![1.0; 8], vec![8]);
+        let ln2 = fbuf(vec![1.0; 8], vec![8]);
+        let pos = i32::wrap(&[len0 as i32, len1 as i32], &[2]);
+        let kv_shape = vec![2, m.max_seq, m.kv_heads, m.head_dim];
+        let kcb = fbuf(kc, kv_shape.clone());
+        let vcb = fbuf(vc, kv_shape);
+        let view = crate::kvcache::PagedKvView {
+            pool: pool.clone(),
+            tables: Arc::new(vec![
+                kvs[0].page_table(0).to_vec(),
+                kvs[1].page_table(0).to_vec(),
+            ]),
+        };
+        let paged_buf = PjRtBuffer::paged(view);
+        // The paged source must read back the same bits as the dense
+        // copy under every backend (reads and arithmetic happen in the
+        // same order; only the storage differs).
+        for kind in [kern::BackendKind::Reference, kern::BackendKind::Simd] {
+            let bk = kern::backend(kind);
+            let dense = attn_decode(
+                &spec,
+                bk,
+                &[&x, &kcb, &vcb, &pos, &wq, &wk, &wv, &wo, &ln1, &ln2],
+            )
+            .unwrap();
+            let paged = attn_decode(
+                &spec,
+                bk,
+                &[&x, &paged_buf, &pos, &wq, &wk, &wv, &wo, &ln1, &ln2],
+            )
+            .unwrap();
+            for (a, b) in dense.iter().zip(&paged) {
+                let (da, db) = (a.f32s().unwrap(), b.f32s().unwrap());
+                assert!(
+                    da.iter().zip(db).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "paged decode diverged under {} (len0={len0}, len1={len1})",
+                    bk.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn weight_transpose_is_computed_once() {
+    let w = fbuf(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+    let a = w.wt_slice(2, 3).unwrap().as_ptr();
+    assert_eq!(w.wt_slice(2, 3).unwrap(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    let b = w.wt_slice(2, 3).unwrap().as_ptr();
+    assert_eq!(a, b, "transpose must be memoized");
+    assert!(w.wt_slice(3, 2).is_err(), "shape mismatch must be rejected");
+}
+
+#[test]
+fn readback_shares_storage_end_to_end() {
+    let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let buf = PjRtClient::cpu().unwrap().buffer_from_tensor(t.clone());
+    let lit = buf.to_literal_sync().unwrap();
+    let back = lit.into_tensor().unwrap();
+    assert!(back.shares_storage(&t), "upload + readback must be copy-free");
+    assert_eq!(back, t);
+}
+
+#[test]
+fn executable_carries_selected_backend() {
+    let spec = ArtifactSpec {
+        name: "router_b2".into(),
+        kind: ArtifactKind::Router,
+        bucket: 2,
+        file: "x.hlo".into(),
+        inputs: vec![],
+        outputs: vec![],
+    };
+    let comp = XlaComputation { name: "router_b2".into() };
+    for (kind, want) in [
+        (kern::BackendKind::Reference, "reference"),
+        (kern::BackendKind::Simd, "simd"),
+        (kern::BackendKind::Auto, "simd"),
+    ] {
+        let client = PjRtClient::cpu_with(kind);
+        assert_eq!(client.backend_name(), want);
+        let exe = client.compile(&comp, &spec).unwrap();
+        assert_eq!(exe.backend_name(), want);
+        // The executable must actually run on its backend's kernels.
+        let g = fbuf(vec![0.5, -1.0, 2.0, 0.0, 0.25, -0.5], vec![2, 3]);
+        let wg = fbuf(vec![0.1; 12], vec![3, 4]);
+        let out = exe.execute_b(&[&g, &wg]).unwrap();
+        let lits = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        let probs = lits[0].to_vec::<f32>().unwrap();
+        assert_eq!(probs.len(), 8);
+        assert!(probs.iter().all(|&p| p > 0.0 && p.is_finite()));
+    }
+}
+
+#[test]
+fn router_rows_are_distributions() {
+    let g = fbuf(vec![0.5, -1.0, 2.0, 0.0, 0.25, -0.5], vec![2, 3]);
+    let wg = fbuf(
+        vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6, 0.7, 0.8, -0.9, 1.0, 1.1, -1.2],
+        vec![3, 4],
+    );
+    let out = router(rbk(), &[&g, &wg]).unwrap();
+    assert_eq!(out[0].dims(), &[2, 4]);
+    let probs = out[0].f32s().unwrap();
+    for i in 0..2 {
+        let sum: f32 = probs[i * 4..(i + 1) * 4].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(probs[i * 4..(i + 1) * 4].iter().all(|&p| p > 0.0));
+    }
+}
+
+#[test]
+fn expert_zero_input_is_zero() {
+    let x = fbuf(vec![0.0; 2 * 4], vec![2, 4]);
+    let w1 = fbuf(vec![0.3; 4 * 8], vec![4, 8]);
+    let w3 = fbuf(vec![-0.2; 4 * 8], vec![4, 8]);
+    let w2 = fbuf(vec![0.1; 8 * 4], vec![8, 4]);
+    let y = expert_ffn(rbk(), &[&x, &w1, &w3, &w2]).unwrap();
+    assert!(y[0].f32s().unwrap().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn decode_ignores_cache_beyond_pos() {
+    // b=1, heads=2, kv=1, d=2, h=4, s=3.
+    let spec = ArtifactSpec {
+        name: "attn_decode_b1".into(),
+        kind: ArtifactKind::AttnDecode,
+        bucket: 1,
+        file: "x.hlo".into(),
+        inputs: vec![],
+        outputs: vec![],
+    };
+    let x = fbuf(vec![0.1, -0.2, 0.3, 0.4], vec![1, 4]);
+    let eye4: Vec<f32> = (0..16).map(|i| if i % 5 == 0 { 0.5 } else { 0.1 }).collect();
+    let wq = fbuf(eye4.clone(), vec![4, 4]);
+    let wk = fbuf(vec![0.2; 4 * 2], vec![4, 2]);
+    let wv = fbuf(vec![-0.1; 4 * 2], vec![4, 2]);
+    let wo = fbuf(eye4, vec![4, 4]);
+    let ln = fbuf(vec![1.0; 4], vec![4]);
+    let pos = i32::wrap(&[1], &[1]);
+    let mk_cache = |poison: f32| {
+        (
+            fbuf(vec![0.3, 0.3, poison, poison, poison, poison], vec![1, 3, 1, 2]),
+            fbuf(vec![-0.4, 0.4, poison, poison, poison, poison], vec![1, 3, 1, 2]),
+        )
+    };
+    let (kc1, vc1) = mk_cache(0.0);
+    let (kc2, vc2) = mk_cache(1e6);
+    let args1 = [&x, &kc1, &vc1, &pos, &wq, &wk, &wv, &wo, &ln, &ln];
+    let args2 = [&x, &kc2, &vc2, &pos, &wq, &wk, &wv, &wo, &ln, &ln];
+    let o1 = attn_decode(&spec, rbk(), &args1).unwrap();
+    let o2 = attn_decode(&spec, rbk(), &args2).unwrap();
+    assert_eq!(o1[0].f32s().unwrap(), o2[0].f32s().unwrap(), "pos mask violated");
+    assert!(o1[0].f32s().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn prefill_is_causal() {
+    // Changing a later token must not affect earlier rows' outputs.
+    let spec = ArtifactSpec {
+        name: "attn_prefill_t4".into(),
+        kind: ArtifactKind::AttnPrefill,
+        bucket: 4,
+        file: "x.hlo".into(),
+        inputs: vec![],
+        outputs: vec![
+            io("h", vec![4, 4], DType::F32),
+            io("g", vec![4, 4], DType::F32),
+            io("k", vec![4, 1, 2], DType::F32),
+            io("v", vec![4, 1, 2], DType::F32),
+        ],
+    };
+    let base: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.05).collect();
+    let mut changed = base.clone();
+    for v in &mut changed[12..16] {
+        *v += 5.0; // perturb the last token only
+    }
+    let w = |n| fbuf(vec![0.11; n], vec![4, if n == 8 { 2 } else { 4 }]);
+    let ln = fbuf(vec![1.0; 4], vec![4]);
+    let run = |xdata: Vec<f32>| {
+        let x = fbuf(xdata, vec![4, 4]);
+        attn_prefill(&spec, rbk(), &[&x, &w(16), &w(8), &w(8), &w(16), &ln, &ln]).unwrap()
+    };
+    let o1 = run(base);
+    let o2 = run(changed);
+    let h1 = o1[0].f32s().unwrap();
+    let h2 = o2[0].f32s().unwrap();
+    assert_eq!(&h1[..12], &h2[..12], "causality violated");
+    assert_ne!(&h1[12..], &h2[12..]);
+}
+
+#[test]
+fn tuple_literal_roundtrip() {
+    let parts = vec![fbuf(vec![1.0, 2.0], vec![2]), fbuf(vec![3.0], vec![1])];
+    let buf = PjRtBuffer::wrap(BufData::Tuple(parts));
+    let lits = buf.to_literal_sync().unwrap().to_tuple().unwrap();
+    assert_eq!(lits.len(), 2);
+    assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    assert_eq!(lits[1].to_vec::<f32>().unwrap(), vec![3.0]);
+}

@@ -5,7 +5,8 @@
 //!    attention → router → top-k select → dispatch build (row views) →
 //!    EW bucket staging → expert FFN → return views → slot-ordered
 //!    accumulation → LM head — performs **zero** heap allocations once
-//!    arenas and capacities are warm;
+//!    arenas and capacities are warm, under **both** kernel backends
+//!    (`reference` and `simd`; DESIGN.md §12);
 //! 2. checkpoint segment emit and request restore stay **bounded**
 //!    (O(1) allocations per segment / per page, never per float).
 //!
@@ -30,6 +31,7 @@ use tarragon::kvcache::{KvPool, PageId, PoolConfig, RequestKv};
 use tarragon::modelcfg::ModelSpec;
 use tarragon::proto::DispatchEntry;
 use tarragon::runtime::xla::kern;
+use tarragon::runtime::xla::kern::KernelBackend;
 use tarragon::tensor::{ops, scratch, Tensor};
 use tarragon::testing::alloccount::{allocations_during, CountingAlloc};
 use tarragon::util::rng::Pcg;
@@ -88,6 +90,9 @@ fn wt(rng: &mut Pcg, k: usize, m: usize) -> Wt {
 }
 
 struct Harness {
+    /// Kernel backend driving every FLOP of the step (the zero-alloc
+    /// contract must hold whichever backend a device selects).
+    bk: &'static dyn kern::KernelBackend,
     // weights (transposed where matmul'd)
     embed: Vec<f32>,
     wq: Vec<Wt>,
@@ -119,7 +124,7 @@ struct Harness {
 }
 
 impl Harness {
-    fn new() -> Harness {
+    fn new(bk: &'static dyn kern::KernelBackend) -> Harness {
         let m = mspec();
         let mut rng = Pcg::seeded(0xA110C);
         let pool = KvPool::new(PoolConfig { page_tokens: PAGE_TOKENS, seg: KVD });
@@ -147,6 +152,7 @@ impl Harness {
             (0..LAYERS).map(|_| (0..E).map(|_| wt(rng, k, mm)).collect()).collect()
         };
         Harness {
+            bk,
             embed: rand_vec(&mut rng, VOCAB * H),
             wq: per_layer(&mut rng, H, H),
             wk: per_layer(&mut rng, H, KVD),
@@ -204,17 +210,18 @@ impl Harness {
         }
         for layer in 0..LAYERS {
             // ---- attention (paged reads, blocked matmuls) -------------
+            let bk = self.bk;
             let mut n_t = Tensor::uninit([B, H]);
-            kern::rms_norm_into(x.data(), &self.ln1[layer], B, H, RMS_EPS, n_t.data_mut());
+            bk.rms_norm_into(x.data(), &self.ln1[layer], B, H, RMS_EPS, n_t.data_mut());
             let mut q = Tensor::uninit([B, H]);
-            kern::matmul_wt_into(n_t.data(), &self.wq[layer].t, B, H, H, q.data_mut());
+            bk.matmul_wt_into(n_t.data(), &self.wq[layer].t, B, H, H, q.data_mut());
             let mut k_new = Tensor::uninit([B, KVD]);
-            kern::matmul_wt_into(n_t.data(), &self.wk[layer].t, B, H, KVD, k_new.data_mut());
+            bk.matmul_wt_into(n_t.data(), &self.wk[layer].t, B, H, KVD, k_new.data_mut());
             let mut v_new = Tensor::uninit([B, KVD]);
-            kern::matmul_wt_into(n_t.data(), &self.wv[layer].t, B, H, KVD, v_new.data_mut());
+            bk.matmul_wt_into(n_t.data(), &self.wv[layer].t, B, H, KVD, v_new.data_mut());
             let pos = &self.pos;
-            kern::rope_with_freqs(q.data_mut(), B, HEADS, D, &self.freqs, |i| pos[i] as f32);
-            kern::rope_with_freqs(k_new.data_mut(), B, KV, D, &self.freqs, |i| pos[i] as f32);
+            bk.rope_with_freqs(q.data_mut(), B, HEADS, D, &self.freqs, &|i: usize| pos[i] as f32);
+            bk.rope_with_freqs(k_new.data_mut(), B, KV, D, &self.freqs, &|i: usize| pos[i] as f32);
             let mut attn = Tensor::zeros([B, H]);
             let mut scores = Tensor::uninit([S_MAX]);
             {
@@ -224,7 +231,7 @@ impl Harness {
                     tables: self.tables[layer].as_slice(),
                     d: D,
                 };
-                kern::attn_decode_into(
+                bk.attn_decode_into(
                     q.data(),
                     k_new.data(),
                     v_new.data(),
@@ -244,17 +251,17 @@ impl Harness {
                 self.kvs[i].write(layer, self.len, k_new.row(i), v_new.row(i));
             }
             let mut proj = Tensor::uninit([B, H]);
-            kern::matmul_wt_into(attn.data(), &self.wo[layer].t, B, H, H, proj.data_mut());
+            bk.matmul_wt_into(attn.data(), &self.wo[layer].t, B, H, H, proj.data_mut());
             let mut h_out = Tensor::uninit([B, H]);
             for ((o, a), p) in h_out.data_mut().iter_mut().zip(x.data()).zip(proj.data()) {
                 *o = a + p;
             }
             let mut g = Tensor::uninit([B, H]);
-            kern::rms_norm_into(h_out.data(), &self.ln2[layer], B, H, RMS_EPS, g.data_mut());
+            bk.rms_norm_into(h_out.data(), &self.ln2[layer], B, H, RMS_EPS, g.data_mut());
             // ---- router + top-2 select (reusable buffers) -------------
             let mut logits = Tensor::uninit([B, E]);
-            kern::matmul_wt_into(g.data(), &self.wg[layer].t, B, H, E, logits.data_mut());
-            kern::softmax_rows(logits.data_mut(), B, E);
+            bk.matmul_wt_into(g.data(), &self.wg[layer].t, B, H, E, logits.data_mut());
+            bk.softmax_rows(logits.data_mut(), B, E);
             for ge in self.groups.iter_mut() {
                 ge.clear();
             }
@@ -311,14 +318,12 @@ impl Harness {
                 let (w1t, w3t, w2t) =
                     (&self.w1[layer][e].t, &self.w3[layer][e].t, &self.w2[layer][e].t);
                 let mut a = Tensor::uninit([EXPERT_BUCKET, F]);
-                kern::matmul_wt_into(xe.data(), w1t, EXPERT_BUCKET, H, F, a.data_mut());
+                bk.matmul_wt_into(xe.data(), w1t, EXPERT_BUCKET, H, F, a.data_mut());
                 let mut gate = Tensor::uninit([EXPERT_BUCKET, F]);
-                kern::matmul_wt_into(xe.data(), w3t, EXPERT_BUCKET, H, F, gate.data_mut());
-                for (av, gv) in a.data_mut().iter_mut().zip(gate.data()) {
-                    *av = kern::silu(*av) * gv;
-                }
+                bk.matmul_wt_into(xe.data(), w3t, EXPERT_BUCKET, H, F, gate.data_mut());
+                bk.silu_mul(a.data_mut(), gate.data());
                 let mut y = Tensor::uninit([EXPERT_BUCKET, H]);
-                kern::matmul_wt_into(a.data(), w2t, EXPERT_BUCKET, F, H, y.data_mut());
+                bk.matmul_wt_into(a.data(), w2t, EXPERT_BUCKET, F, H, y.data_mut());
                 let ret = &mut self.ret[e];
                 ret.rows.clear();
                 ret.slots.clear();
@@ -345,10 +350,11 @@ impl Harness {
             x = h_out;
         }
         // ---- LM head ---------------------------------------------------
+        let bk = self.bk;
         let mut normed = Tensor::uninit([B, H]);
-        kern::rms_norm_into(x.data(), &self.ln_f, B, H, RMS_EPS, normed.data_mut());
+        bk.rms_norm_into(x.data(), &self.ln_f, B, H, RMS_EPS, normed.data_mut());
         let mut logits = Tensor::uninit([B, VOCAB]);
-        kern::matmul_wt_into(normed.data(), &self.lm.t, B, H, VOCAB, logits.data_mut());
+        bk.matmul_wt_into(normed.data(), &self.lm.t, B, H, VOCAB, logits.data_mut());
         for i in 0..B {
             self.next_tok[i] = ops::argmax(logits.row(i)) as u32;
         }
@@ -379,25 +385,40 @@ fn hot_path_allocation_contract() {
     prewarm_class(B * E, 4);
     prewarm_class(EXPERT_BUCKET * H, 16);
     prewarm_class(EXPERT_BUCKET * F, 8);
-    let mut h = Harness::new();
-
-    // Warmup: populate arena size classes and buffer capacities.
-    for _ in 0..4 {
-        h.step();
-    }
-
     // 1. Steady state: zero heap allocations per decode step across the
-    //    whole AW→REFE→EW→REFE→AW round trip.
+    //    whole AW→REFE→EW→REFE→AW round trip — under BOTH kernel
+    //    backends (warmup also covers one-time backend init such as the
+    //    AVX2 feature probe and the rope-frequency memo).
     let steps = 8;
-    let (allocs, _) = allocations_during(|| {
-        for _ in 0..steps {
-            h.step();
+    let mut h = None;
+    for kind in [kern::BackendKind::Reference, kern::BackendKind::Simd] {
+        let bk = kern::backend(kind);
+        let mut hb = Harness::new(bk);
+
+        // Warmup: populate arena size classes and buffer capacities.
+        for _ in 0..4 {
+            hb.step();
         }
-    });
-    assert_eq!(
-        allocs, 0,
-        "steady-state decode must be allocation-free ({allocs} allocations over {steps} steps)"
-    );
+
+        let (allocs, _) = allocations_during(|| {
+            for _ in 0..steps {
+                hb.step();
+            }
+        });
+        assert_eq!(
+            allocs,
+            0,
+            "steady-state decode must be allocation-free under the {} backend \
+             ({allocs} allocations over {steps} steps)",
+            bk.name()
+        );
+        // The generation advanced and stayed in-vocab (the harness
+        // computes real tokens, not dead code the optimizer could strip).
+        assert!(hb.next_tok.iter().all(|&t| (t as usize) < VOCAB));
+        assert_eq!(hb.len, INIT_LEN + 4 + steps);
+        h = Some(hb);
+    }
+    let h = h.unwrap();
 
     // 2. Checkpoint emit: bounded — one payload Vec + one Arc control
     //    block per segment, nothing proportional to floats beyond the
@@ -414,7 +435,8 @@ fn hot_path_allocation_contract() {
     });
     assert!(
         ckpt_allocs <= 3 * n_segs + 8,
-        "checkpoint emit must stay O(1) per segment: {ckpt_allocs} allocations for {n_segs} segments"
+        "checkpoint emit must stay O(1) per segment: {ckpt_allocs} allocations \
+         for {n_segs} segments"
     );
 
     // 3. Restore install: bounded by pages + layers, not by floats.
@@ -435,9 +457,4 @@ fn hot_path_allocation_contract() {
         "restore must stay O(1) per page: {restore_allocs} allocations for {pages} pages"
     );
     drop(restored);
-
-    // The generation advanced and stayed in-vocab (the harness computes
-    // real tokens, not dead code the optimizer could strip).
-    assert!(h.next_tok.iter().all(|&t| (t as usize) < VOCAB));
-    assert_eq!(h.len, INIT_LEN + 4 + steps);
 }

@@ -9,6 +9,7 @@
 
 use std::time::Duration;
 use tarragon::config::Config;
+use tarragon::runtime::kern;
 use tarragon::testing::scenario::Scenario;
 use tarragon::testing::synthetic;
 
@@ -50,6 +51,29 @@ fn ew_kill_mid_decode_replays_to_shadows_with_identical_streams() {
     assert_eq!(faulty.tokens, clean.tokens, "EW failover changed token streams");
     assert!(faulty.report.ew_failures >= 1, "EW failure went unhandled");
     assert_eq!(faulty.report.aw_failures, 0);
+}
+
+#[test]
+fn ew_kill_under_simd_backend_keeps_streams_identical() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The recovery guarantee is backend-relative: a cluster running the
+    // simd kernels everywhere must replay onto shadows with streams
+    // identical to its own failure-free run (which is itself
+    // deterministic — same bits on every execution).
+    let mut cfg = scenario_cfg(Duration::from_millis(1));
+    cfg.kernels.backend = kern::BackendKind::Simd;
+    let s = Scenario::new("ew-kill-simd", cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 60ms kill ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let again = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_streams_match(&faulty, "ew-kill-simd");
+    assert_eq!(clean.tokens, again.tokens, "simd backend must be deterministic run to run");
+    assert_eq!(faulty.tokens, clean.tokens, "EW failover under simd changed token streams");
+    assert!(faulty.report.ew_failures >= 1, "EW failure went unhandled");
 }
 
 #[test]
