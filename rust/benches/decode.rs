@@ -256,10 +256,11 @@ impl Sim {
                     );
                 }
                 Mode::ZeroCopy => {
-                    // Paged reads in place — the only per-step work the
-                    // gather does is cloning page-id tables.
+                    // Paged reads in place — the gather refills recycled
+                    // page-table rows, so steady state allocates nothing.
                     let refs: Vec<&RequestKv> = self.kvs.iter().collect();
-                    let (view, _pos) = self.asm.gather_paged(&refs, layer, b);
+                    let view =
+                        self.asm.gather_paged(self.kvs[0].pool(), &refs, layer, b, &mut self.pos);
                     let read = view.pool.read();
                     let src = kern::PagedKv { read: &read, tables: &view.tables, d: D };
                     kern::attn_decode_into(

@@ -21,6 +21,7 @@ use tarragon::testing::scenario::Scenario;
 use tarragon::testing::synthetic;
 use tarragon::util::json::{arr, num, obj, s, Json};
 use tarragon::util::stats;
+use tarragon::workload;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -32,6 +33,7 @@ fn main() {
     }
 
     load_sweep(smoke);
+    shared_prefix_sweep(smoke);
 }
 
 /// Artifact-level microbenches (only with Python-built artifacts).
@@ -171,6 +173,125 @@ fn load_sweep(smoke: bool) {
         points.push(p);
     }
     write_report(&points, smoke, n, BUDGET_PAGES);
+}
+
+struct SharePoint {
+    ratio: f64,
+    peak_pages: usize,
+    prefix_hits: u64,
+    cow_breaks: u64,
+    pages_shared: u64,
+}
+
+/// Shared-prefix sweep (DESIGN.md §13): a fraction of requests carries
+/// one identical 16-token prompt — exactly one sealed KV page per layer
+/// on the synthetic model — against all-distinct prompts at the same
+/// offered load. Prefix caching must cut the *physical* page peak while
+/// the budget holds; the vLLM-family baselines in `src/baselines` share
+/// through the same `write_prompt_layer` path, so this is the
+/// like-for-like comparison axis (`workload.shared_prefix_ratio`).
+fn shared_prefix_sweep(smoke: bool) {
+    const PREFIX_TOKENS: usize = 16;
+    const MAX_NEW: usize = 8;
+    const BUDGET_PAGES: usize = 24; // roomy: compare footprints, not preemption
+    let n: usize = if smoke { 8 } else { 16 };
+
+    println!("\n== shared-prefix sweep (identical one-page prompts vs distinct) ==");
+    let (manifest, weights, _) = synthetic::ensure();
+    let vocab = manifest.model.vocab;
+    let shared: Vec<u32> = (0..PREFIX_TOKENS)
+        .map(|i| workload::shared_prefix_token(i, vocab))
+        .collect();
+
+    let mut points: Vec<SharePoint> = Vec::new();
+    for &ratio in &[0.0, 0.8] {
+        let mut cfg = Config::small_test();
+        cfg.transport.latency = Duration::from_millis(1);
+        cfg.transport.worker_extra_init = Duration::from_millis(50);
+        cfg.sched.kv_budget_pages = BUDGET_PAGES;
+        cfg.workload.shared_prefix_ratio = ratio;
+        let n_shared = (ratio * n as f64).round() as u64;
+        let mut scen = Scenario::new(format!("share-r{ratio}"), cfg);
+        for i in 0..n as u64 {
+            let prompt: Vec<u32> = if i < n_shared {
+                shared.clone()
+            } else {
+                // distinct full pages: token walks never coincide within
+                // the sweep's request count
+                (0..PREFIX_TOKENS)
+                    .map(|t| 1 + ((i as usize * PREFIX_TOKENS + t) % (vocab - 1)) as u32)
+                    .collect()
+            };
+            scen = scen.request(i, Duration::from_millis(2) * i as u32, prompt, MAX_NEW);
+        }
+        scen.drain_timeout = Duration::from_secs(300);
+
+        let out = scen.run(manifest.clone(), weights.clone());
+        out.assert_kv_budget_held();
+        assert!(out.completed, "shared-prefix sweep did not drain at ratio {ratio}");
+        assert_eq!(out.report.finished, n);
+        let peak: usize = out.kv_peaks.values().sum();
+        let sh = out.report.sharing;
+        if ratio > 0.0 {
+            assert!(sh.prefix_hits > 0, "identical prompts must hit the prefix index");
+        } else {
+            assert_eq!(sh.prefix_hits, 0, "distinct prompts must not share");
+        }
+        println!(
+            "ratio {ratio:<4} | physical peak pages {peak:>3} (sum over AWs) | prefix hits {:>3} | cow breaks {:>2} | shared-page peak {:>3}",
+            sh.prefix_hits, sh.cow_breaks, sh.pages_shared,
+        );
+        points.push(SharePoint {
+            ratio,
+            peak_pages: peak,
+            prefix_hits: sh.prefix_hits,
+            cow_breaks: sh.cow_breaks,
+            pages_shared: sh.pages_shared,
+        });
+    }
+    assert!(
+        points[1].peak_pages < points[0].peak_pages,
+        "sharing must reduce the physical KV peak at equal load ({} !< {})",
+        points[1].peak_pages,
+        points[0].peak_pages,
+    );
+    write_share_report(&points, smoke, n);
+}
+
+fn write_share_report(points: &[SharePoint], smoke: bool, n_reqs: usize) {
+    let entries = points.iter().map(|p| {
+        obj(vec![
+            ("shared_prefix_ratio", num(p.ratio)),
+            ("physical_peak_pages", num(p.peak_pages as f64)),
+            ("prefix_hits", num(p.prefix_hits as f64)),
+            ("cow_breaks", num(p.cow_breaks as f64)),
+            ("pages_shared_peak", num(p.pages_shared as f64)),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("shared-prefix sweep: physical KV peak vs prefix-sharing ratio at equal load"),
+        ),
+        ("command", s("cargo bench --bench serving")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "setup",
+            obj(vec![
+                ("cluster", s("2 AW x 2 EW, virtual clock, synthetic model")),
+                ("requests", num(n_reqs as f64)),
+                ("prompt_tokens", num(16.0)),
+                ("max_new_tokens", num(8.0)),
+                ("kv_budget_pages_per_aw", num(24.0)),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_serving_prefix.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn write_report(points: &[SweepPoint], smoke: bool, n_reqs: usize, budget: usize) {

@@ -59,9 +59,11 @@ pub fn local_prefill_layer(
     args.extend(attn_weight_args(layer));
     let outs = device.execute(&format!("attn_prefill_t{bucket}"), args)?;
     let (h, g, k, v) = unpack4(outs);
-    for posn in 0..p_len {
-        kv.write(layer, posn, k.row(posn), v.row(posn));
-    }
+    // Page-level prefix sharing works in the monolithic baselines too
+    // (vLLM-style prefix caching): full pages whose content is already
+    // sealed in the arena are refcounted instead of rewritten, so the
+    // shared-prefix comparison in `benches/serving.rs` is like-for-like.
+    kv.write_prompt_layer(layer, p_len, &k, &v);
     let mut h = h;
     local_moe(device, manifest, layer, &g, &mut h, p_len)?;
     for i in p_len..bucket {

@@ -32,12 +32,26 @@ struct RequestLog {
 #[derive(Debug, Default)]
 pub struct StoreLog {
     layers: u16,
+    /// Page geometry for the content index (0 = indexing disabled; the
+    /// legacy constructor keeps it off so segment-level tests see the
+    /// old behavior unchanged).
+    page_tokens: u32,
     reqs: HashMap<u64, RequestLog>,
     /// Requests reclaimed via [`StoreLog::forget`]. Straggler segments and
     /// commits for these must not resurrect a log entry, or finished
     /// requests would leak segment payloads forever. (The tombstone itself
     /// is 8 bytes per request — negligible next to the payloads it guards.)
     finished: HashSet<u64>,
+    /// Content-addressed page index (DESIGN.md §13): hash of a *complete*
+    /// page's K||V segments -> those `page_tokens` payloads, in slot
+    /// order. Filled automatically as ordinary segments complete pages;
+    /// consumed by [`StoreLog::page_ref`] to materialize a sharing
+    /// request's page from one header-sized message. Entries are `Arc`
+    /// clones, so they survive `forget` of the original owner — the
+    /// index is content-addressed, not request-scoped. Unbounded for now
+    /// (production would LRU-evict; the serving runs here hold a handful
+    /// of distinct prefixes).
+    page_index: HashMap<u64, Vec<SegPayload>>,
     /// Counters for the §7.4 experiments.
     pub segments_received: u64,
     pub commits_accepted: u64,
@@ -45,11 +59,28 @@ pub struct StoreLog {
     pub bytes_received: u64,
     /// Straggler messages dropped against a tombstone.
     pub stragglers_dropped: u64,
+    /// Shared-page refs resolved from the index / missed (degraded to a
+    /// forever-deferred commit, i.e. the request restores from scratch).
+    pub page_refs_resolved: u64,
+    pub page_refs_missed: u64,
+    /// Distinct pages published in the content index.
+    pub pages_indexed: u64,
 }
 
 impl StoreLog {
     pub fn new(layers: usize) -> StoreLog {
         StoreLog { layers: layers as u16, ..Default::default() }
+    }
+
+    /// A log with the page content index enabled (the cluster's store —
+    /// `page_tokens` must match the AWs' pool geometry or hashes never
+    /// match and every ref degrades to a miss).
+    pub fn with_page_tokens(layers: usize, page_tokens: usize) -> StoreLog {
+        StoreLog {
+            layers: layers as u16,
+            page_tokens: page_tokens as u32,
+            ..Default::default()
+        }
     }
 
     /// Ingest one segment write.
@@ -63,20 +94,85 @@ impl StoreLog {
         let r = self.reqs.entry(s.request).or_default();
         r.owner_aw = owner_aw;
         r.segments.insert((s.pos, s.layer), s.data);
-        // Try deferred commits newest-first.
-        if !r.pending_commits.is_empty() {
-            let pending = std::mem::take(&mut r.pending_commits);
-            let layers = self.layers;
-            let rlog = self.reqs.get_mut(&s.request).unwrap();
-            for c in pending {
-                if Self::complete_prefix(rlog, c.committed_pos, layers) {
-                    Self::accept(rlog, c);
-                    self.commits_accepted += 1;
-                } else {
-                    rlog.pending_commits.push(c);
-                }
+        if self.page_tokens > 0 {
+            self.maybe_index_page(s.request, s.pos, s.layer);
+        }
+        self.replay_pending(s.request);
+    }
+
+    /// Try deferred commits of a request, newest-first.
+    fn replay_pending(&mut self, request: u64) {
+        let layers = self.layers;
+        let Some(rlog) = self.reqs.get_mut(&request) else { return };
+        if rlog.pending_commits.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut rlog.pending_commits);
+        for c in pending {
+            if Self::complete_prefix(rlog, c.committed_pos, layers) {
+                Self::accept(rlog, c);
+                self.commits_accepted += 1;
+            } else {
+                rlog.pending_commits.push(c);
             }
         }
+    }
+
+    /// If the page containing `(pos, layer)` just became complete,
+    /// publish it in the content index. Hashing matches the AW pool's
+    /// page hash exactly: layer-seeded FNV over each slot's K||V floats
+    /// in slot order — so a prefill-sealed page and its store-side image
+    /// hash identically.
+    fn maybe_index_page(&mut self, request: u64, pos: u32, layer: u16) {
+        let pt = self.page_tokens;
+        let first = pos - pos % pt;
+        let Some(r) = self.reqs.get(&request) else { return };
+        let mut payloads = Vec::with_capacity(pt as usize);
+        for slot in 0..pt {
+            match r.segments.get(&(first + slot, layer)) {
+                Some(p) => payloads.push(p.clone()),
+                None => return, // page not complete yet
+            }
+        }
+        let mut h = crate::kvcache::page_hash_seed(layer as usize);
+        for p in &payloads {
+            h = crate::kvcache::page_hash_update(h, p.as_slice());
+        }
+        if !self.page_index.contains_key(&h) {
+            self.page_index.insert(h, payloads);
+            self.pages_indexed += 1;
+        }
+    }
+
+    /// Ingest a shared-page reference (DESIGN.md §13): install the
+    /// indexed page's payloads into the request's log as if the segments
+    /// had arrived on the wire. Returns true if the hash resolved. A miss
+    /// leaves the request's prefix incomplete, so any covering commit
+    /// stays deferred — the safe degradation is "restore from scratch"
+    /// (Resubmit), never a wrong restore.
+    pub fn page_ref(&mut self, owner_aw: u32, request: u64, layer: u16, first_pos: u32, hash: u64) -> bool {
+        if self.finished.contains(&request) {
+            self.stragglers_dropped += 1;
+            return false;
+        }
+        let Some(payloads) = self.page_index.get(&hash) else {
+            self.page_refs_missed += 1;
+            return false;
+        };
+        let payloads = payloads.clone(); // Arc bumps, no float copies
+        let r = self.reqs.entry(request).or_default();
+        r.owner_aw = owner_aw;
+        for (i, data) in payloads.into_iter().enumerate() {
+            r.segments.insert((first_pos + i as u32, layer), data);
+        }
+        self.page_refs_resolved += 1;
+        self.replay_pending(request);
+        true
+    }
+
+    /// Whether the content index holds `hash` (tests / introspection).
+    pub fn has_page(&self, hash: u64) -> bool {
+        self.page_index.contains_key(&hash)
     }
 
     /// Ingest a commit record.
@@ -205,6 +301,15 @@ impl CkptStore {
         CkptStore { log: StoreLog::new(layers), pending_pulls: BTreeMap::new() }
     }
 
+    /// A store with the page content index enabled (see
+    /// [`StoreLog::with_page_tokens`]).
+    pub fn with_page_tokens(layers: usize, page_tokens: usize) -> CkptStore {
+        CkptStore {
+            log: StoreLog::with_page_tokens(layers, page_tokens),
+            pending_pulls: BTreeMap::new(),
+        }
+    }
+
     /// Restore pulls currently deferred (tests / introspection).
     pub fn pending_pulls(&self) -> usize {
         self.pending_pulls.len()
@@ -236,6 +341,17 @@ impl CkptStore {
                     // A segment can complete a deferred commit, which in
                     // turn can answer a deferred pull.
                     return self.serve_pending(req).into_iter().collect();
+                }
+                vec![]
+            }
+            ClusterMsg::CkptPageRef { request, layer, first_pos, hash } => {
+                if let NodeId::Aw(aw) = from {
+                    // A resolved ref can complete a deferred commit, which
+                    // in turn can answer a deferred pull — same cascade as
+                    // a segment arrival.
+                    if self.log.page_ref(aw, request, layer, first_pos, hash) {
+                        return self.serve_pending(request).into_iter().collect();
+                    }
                 }
                 vec![]
             }
@@ -491,6 +607,97 @@ mod tests {
         store.handle(NodeId::Gateway, ClusterMsg::ReqFinished { request: 7 });
         assert!(store.handle(NodeId::Aw(1), ClusterMsg::RestorePull { request: 7 }).is_empty());
         assert_eq!(store.pending_pulls(), 0, "finished requests must not park pulls");
+    }
+
+    /// A distinct per-slot payload so page hashes differ between pages.
+    fn seg_v(req: u64, pos: u32, layer: u16, val: f32) -> SegmentMsg {
+        SegmentMsg { request: req, pos, layer, data: std::sync::Arc::new(vec![val; 8]) }
+    }
+
+    fn page_hash(payloads: &[std::sync::Arc<Vec<f32>>], layer: usize) -> u64 {
+        let mut h = crate::kvcache::page_hash_seed(layer);
+        for p in payloads {
+            h = crate::kvcache::page_hash_update(h, p.as_slice());
+        }
+        h
+    }
+
+    #[test]
+    fn completed_pages_are_auto_indexed() {
+        let mut log = StoreLog::with_page_tokens(1, 2);
+        let s0 = seg_v(1, 0, 0, 3.0);
+        let s1 = seg_v(1, 1, 0, 4.0);
+        let h = page_hash(&[s0.data.clone(), s1.data.clone()], 0);
+        log.segment(0, s0);
+        assert!(!log.has_page(h), "partial page must not be indexed");
+        log.segment(0, s1);
+        assert!(log.has_page(h));
+        assert_eq!(log.pages_indexed, 1);
+        // The same content from another request does not re-index.
+        log.segment(0, seg_v(2, 0, 0, 3.0));
+        log.segment(0, seg_v(2, 1, 0, 4.0));
+        assert_eq!(log.pages_indexed, 1);
+    }
+
+    #[test]
+    fn page_ref_completes_prefix_and_survives_owner_forget() {
+        let mut log = StoreLog::with_page_tokens(1, 2);
+        let s0 = seg_v(1, 0, 0, 3.0);
+        let s1 = seg_v(1, 1, 0, 4.0);
+        let h = page_hash(&[s0.data.clone(), s1.data.clone()], 0);
+        let orig = s0.data.clone();
+        log.segment(0, s0);
+        log.segment(0, s1);
+        // The original owner finishes; the index keeps the payloads alive.
+        log.forget(1);
+        // A sharing request commits past the shared page: deferred until
+        // the ref resolves, accepted right after — with the very same
+        // payload allocations (no copies on the ref path).
+        log.commit(2, commit(2, 2, 1));
+        assert!(log.committed(2).is_none());
+        assert!(log.page_ref(2, 2, 0, 0, h));
+        assert_eq!(log.page_refs_resolved, 1);
+        assert_eq!(log.committed(2).unwrap().committed_pos, 2);
+        let stored = log.segment_data(2, 0, 0).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&orig, &stored));
+    }
+
+    #[test]
+    fn missing_page_ref_degrades_to_deferred_commit() {
+        let mut log = StoreLog::with_page_tokens(1, 2);
+        assert!(!log.page_ref(0, 5, 0, 0, 0xdead_beef));
+        assert_eq!(log.page_refs_missed, 1);
+        // The covering commit stays deferred — restore_data never lies.
+        log.commit(0, commit(5, 2, 1));
+        assert!(log.committed(5).is_none());
+        assert!(log.restore_data(5).is_none());
+    }
+
+    #[test]
+    fn handler_page_ref_cascades_to_parked_pull() {
+        use crate::transport::NodeId;
+        let mut store = CkptStore::with_page_tokens(1, 2);
+        let s0 = seg_v(1, 0, 0, 3.0);
+        let s1 = seg_v(1, 1, 0, 4.0);
+        let h = page_hash(&[s0.data.clone(), s1.data.clone()], 0);
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(s0));
+        store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(s1));
+        // Request 2 shares the page; its commit is deferred on the ref,
+        // and a restore pull parks behind the commit.
+        store.handle(NodeId::Aw(1), ClusterMsg::CkptCommit(commit(2, 2, 1)));
+        assert!(store.handle(NodeId::Aw(3), ClusterMsg::RestorePull { request: 2 }).is_empty());
+        let replies = store.handle(
+            NodeId::Aw(1),
+            ClusterMsg::CkptPageRef { request: 2, layer: 0, first_pos: 0, hash: h },
+        );
+        assert_eq!(replies.len(), 1);
+        match &replies[0] {
+            (NodeId::Aw(3), ClusterMsg::Restore(d)) => {
+                assert_eq!(d.meta.committed_pos, 2);
+                assert_eq!(d.segments.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -16,6 +16,9 @@ use std::sync::Arc;
 enum Item {
     Segment(SegmentMsg),
     Commit(CommitMeta),
+    /// A whole shared page by reference (DESIGN.md §13): the store
+    /// already holds these bytes under `hash`, so only a header travels.
+    PageRef { request: u64, layer: u16, first_pos: u32, hash: u64 },
 }
 
 pub struct CkptStreamer {
@@ -26,6 +29,7 @@ pub struct CkptStreamer {
     // counters
     pub segments_sent: u64,
     pub commits_sent: u64,
+    pub page_refs_sent: u64,
     pub bytes_sent: u64,
     pub forced_flushes: u64,
 }
@@ -38,6 +42,7 @@ impl CkptStreamer {
             enabled,
             segments_sent: 0,
             commits_sent: 0,
+            page_refs_sent: 0,
             bytes_sent: 0,
             forced_flushes: 0,
         }
@@ -52,6 +57,15 @@ impl CkptStreamer {
     pub fn push_commit(&mut self, c: CommitMeta) {
         if self.enabled {
             self.queue.push_back(Item::Commit(c));
+        }
+    }
+
+    /// Queue a shared-page reference in place of `page_tokens` segments.
+    /// Ordering matters exactly like segments: refs must precede the
+    /// commit that covers them.
+    pub fn push_page_ref(&mut self, request: u64, layer: u16, first_pos: u32, hash: u64) {
+        if self.enabled {
+            self.queue.push_back(Item::PageRef { request, layer, first_pos, hash });
         }
     }
 
@@ -115,6 +129,15 @@ impl CkptStreamer {
                 let bytes = c.wire_bytes();
                 if qp.post(ClusterMsg::CkptCommit(c), bytes, TrafficClass::Checkpoint).is_ok() {
                     self.commits_sent += 1;
+                    self.bytes_sent += bytes as u64;
+                    return 1;
+                }
+            }
+            Item::PageRef { request, layer, first_pos, hash } => {
+                let msg = ClusterMsg::CkptPageRef { request, layer, first_pos, hash };
+                let bytes = msg.wire_bytes();
+                if qp.post(msg, bytes, TrafficClass::Checkpoint).is_ok() {
+                    self.page_refs_sent += 1;
                     self.bytes_sent += bytes as u64;
                     return 1;
                 }

@@ -311,6 +311,11 @@ pub struct WorkloadConfig {
     /// applies for the whole run, so token streams stay comparable across
     /// fault schedules. The scenario DSL's `hotspot e<K>`.
     pub hotspot_expert: Option<usize>,
+    /// Fraction of requests stamped with the fixed shared system-prompt
+    /// prefix (`workload::SHARED_PREFIX_TOKENS` tokens) — the prefix-
+    /// caching workload axis. 0.0 (default) leaves the request stream
+    /// bit-identical to the legacy generator.
+    pub shared_prefix_ratio: f64,
 }
 
 impl Default for WorkloadConfig {
@@ -322,6 +327,7 @@ impl Default for WorkloadConfig {
             duration_secs: 20.0,
             seed: 7,
             hotspot_expert: None,
+            shared_prefix_ratio: 0.0,
         }
     }
 }
@@ -480,6 +486,7 @@ impl Config {
         w.num_requests = get_usize("workload.num_requests", w.num_requests)?;
         w.duration_secs = get_f64("workload.duration_secs", w.duration_secs)?;
         w.seed = get_usize("workload.seed", w.seed as usize)? as u64;
+        w.shared_prefix_ratio = get_f64("workload.shared_prefix_ratio", w.shared_prefix_ratio)?;
         if let Some(v) = m.get("workload.hotspot_expert") {
             w.hotspot_expert = Some(
                 v.as_i64()
@@ -544,6 +551,11 @@ impl Config {
         }
         if self.workload.rate_rps <= 0.0 {
             return Err(ConfigError::Invalid("rate_rps must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.workload.shared_prefix_ratio) {
+            return Err(ConfigError::Invalid(
+                "shared_prefix_ratio must be in [0,1]".into(),
+            ));
         }
         if self.transport.bandwidth_bps <= 0.0 {
             return Err(ConfigError::Invalid("bandwidth must be > 0".into()));
@@ -619,6 +631,15 @@ duration_secs = 30
         assert!(Config::from_toml_str("[workload]\nrate_rps = -1\n").is_err());
         assert!(Config::from_toml_str("[workload]\nkind = \"bogus\"\n").is_err());
         assert!(Config::from_toml_str("[cluster]\ndecode_batch = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_shared_prefix_ratio() {
+        let cfg = Config::from_toml_str("[workload]\nshared_prefix_ratio = 0.8\n").unwrap();
+        assert_eq!(cfg.workload.shared_prefix_ratio, 0.8);
+        assert_eq!(Config::default().workload.shared_prefix_ratio, 0.0);
+        assert!(Config::from_toml_str("[workload]\nshared_prefix_ratio = 1.5\n").is_err());
+        assert!(Config::from_toml_str("[workload]\nshared_prefix_ratio = -0.1\n").is_err());
     }
 
     #[test]

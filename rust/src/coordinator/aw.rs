@@ -23,7 +23,7 @@ use super::router::{self, ExpertGroups};
 use super::sched;
 use crate::config::Config;
 use crate::coordinator::ert::Ert;
-use crate::kvcache::{BatchAssembler, KvPool, RequestKv};
+use crate::kvcache::{page_hash_seed, page_hash_update, BatchAssembler, KvPool, RequestKv};
 use crate::modelcfg::{weights::Weights, Buckets, Manifest};
 use crate::proto::{AwStatus, ClusterMsg, CommitMeta, RequestMeta, SegmentMsg, HDR_BYTES};
 use crate::runtime::{ArgValue, Device, DeviceRole};
@@ -573,11 +573,51 @@ impl AwWorker {
         // Pages are allocated for exactly the committed prefix — restore
         // cost scales with the sequence, not with `max_seq`.
         let mut kv = RequestKv::new(&m, &self.pool);
-        // Headroom for the prefix (+1 decode step), shedding if needed.
-        // If the arena cannot take it even after shedding, bounce the
+        let committed = meta.committed_pos as usize;
+        let pt = self.pool.page_tokens();
+        let layers = m.layers;
+        let full_pages = committed / pt;
+        // Share-aware install (DESIGN.md §13): hash each full page of the
+        // restored prefix and take references on pages the arena already
+        // holds sealed, instead of re-allocating and re-writing them. The
+        // shared run is installed *before* the headroom check so its
+        // refcounts pin the pages — shedding during `ensure_headroom`
+        // cannot unseal them underneath us. `data.segments` is ordered
+        // pos-major, layer-minor (restore_data), so the segment for
+        // (pos, layer) sits at `pos * layers + layer`.
+        let mut hashes: Vec<Vec<u64>> = vec![Vec::with_capacity(full_pages); layers];
+        for (layer, row) in hashes.iter_mut().enumerate() {
+            for page in 0..full_pages {
+                let mut h = page_hash_seed(layer);
+                for t in 0..pt {
+                    let seg = &data.segments[(page * pt + t) * layers + layer].2;
+                    h = page_hash_update(h, seg.as_slice());
+                }
+                row.push(h);
+            }
+        }
+        for layer in 0..layers {
+            for page in 0..full_pages {
+                let hit = kv.try_share_page(layer, hashes[layer][page], |raw| {
+                    (0..pt).all(|t| {
+                        let seg = &data.segments[(page * pt + t) * layers + layer].2;
+                        let sl = seg.len();
+                        raw[t * sl..(t + 1) * sl] == seg[..]
+                    })
+                });
+                if !hit {
+                    break; // only a *leading* run can be shared in order
+                }
+            }
+        }
+        // Headroom for the remaining prefix (+1 decode step), shedding if
+        // needed. Shared pages are already in the tables, so
+        // `pages_to_extend` only counts what must still be allocated. If
+        // the arena cannot take it even after shedding, bounce the
         // request back to the orchestrator — its durable state is already
-        // in the store, so this is just a re-park.
-        let needed = kv.pages_to_extend(meta.committed_pos as usize + 1);
+        // in the store, so this is just a re-park (the dropped `kv`
+        // returns the shared references).
+        let needed = kv.pages_to_extend(committed + 1);
         if !self.ensure_headroom(needed, 0) {
             self.bounce_restore(meta);
             return;
@@ -585,11 +625,22 @@ impl AwWorker {
         // Reserve the prefix *and the next decode position* now, so the
         // headroom just checked cannot be stolen by a later install — a
         // fresh restore is guaranteed its first decode step.
-        kv.reserve(meta.committed_pos as usize + 1);
+        kv.reserve(committed + 1);
         for (pos, layer, seg) in &data.segments {
+            // Positions covered by the shared run are already resident.
+            if (*pos as usize) / pt < kv.shared_prefix_pages(*layer as usize) {
+                continue;
+            }
             kv.write_segment(*layer as usize, *pos as usize, seg.as_slice());
         }
-        kv.set_len(meta.committed_pos as usize);
+        // Seal the full pages we did write, so the next restore or prefill
+        // with this prefix shares instead of re-materializing.
+        for layer in 0..layers {
+            for page in kv.shared_prefix_pages(layer)..full_pages {
+                kv.seal_page(layer, page, hashes[layer][page]);
+            }
+        }
+        kv.set_len(committed);
         let id = meta.request;
         self.reqs.insert(
             id,
@@ -684,20 +735,38 @@ impl AwWorker {
                 .execute_shared(&self.names.attn_prefill[&bucket], args)
                 .map_err(|_| StepError::Fatal)?;
             let (h, g, k, v) = unpack4(outs);
-            // KV cache + checkpoint segments for all prompt positions.
+            // KV cache + checkpoint traffic for all prompt positions.
+            // Full pages whose content is already sealed in the arena are
+            // *shared* (refcount bump, no write-back); the store learns of
+            // them through one header-sized page ref instead of
+            // `page_tokens` segments (DESIGN.md §13).
             {
                 let req = self.reqs.get_mut(&id).unwrap();
-                for pos in 0..p_len {
-                    req.kv.write(layer, pos, k.row(pos), v.row(pos));
-                    // Materializing a payload costs a pool read-back +
-                    // allocation — skip it entirely when not checkpointing.
-                    if self.streamer.enabled {
-                        self.streamer.push_segment(SegmentMsg {
-                            request: id,
-                            pos: pos as u32,
-                            layer: layer as u16,
-                            data: req.kv.segment_payload(layer, pos),
-                        });
+                let out = req.kv.write_prompt_layer(layer, p_len, &k, &v);
+                // Materializing a payload costs a pool read-back +
+                // allocation — skip it entirely when not checkpointing.
+                // Refs and segments are queued in *positional* order: a
+                // prompt can self-share (page N repeats page M < N), and
+                // the store can only resolve that ref after the earlier
+                // page's segments arrived and indexed the hash.
+                if self.streamer.enabled {
+                    let (mut si, mut wi) = (0, 0);
+                    while si < out.shared.len() || wi < out.written.len() {
+                        let ns = out.shared.get(si).map_or(usize::MAX, |&(p, _)| p);
+                        let nw = out.written.get(wi).copied().unwrap_or(usize::MAX);
+                        if ns < nw {
+                            let (first_pos, hash) = out.shared[si];
+                            si += 1;
+                            self.streamer.push_page_ref(id, layer as u16, first_pos as u32, hash);
+                        } else {
+                            wi += 1;
+                            self.streamer.push_segment(SegmentMsg {
+                                request: id,
+                                pos: nw as u32,
+                                layer: layer as u16,
+                                data: req.kv.segment_payload(layer, nw),
+                            });
+                        }
                     }
                 }
             }
@@ -833,8 +902,10 @@ impl AwWorker {
             // the shared arena and reads rows in place — no `[B, S, kv, d]`
             // staging copy per layer per step.
             let (paged, pos) = {
+                let mut pos = Vec::new();
                 let kvs: Vec<&RequestKv> = batch.iter().map(|id| &self.reqs[id].kv).collect();
-                self.asm.gather_paged(&kvs, layer, bucket)
+                let view = self.asm.gather_paged(&self.pool, &kvs, layer, bucket, &mut pos);
+                (view, pos)
             };
             let mut args = Vec::with_capacity(9);
             args.push(ArgValue::f32(x.clone()));

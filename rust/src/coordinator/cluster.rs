@@ -15,7 +15,7 @@ use super::sched::AdmissionLimits;
 use crate::checkpoint::store::CkptStore;
 use crate::config::Config;
 use crate::kvcache::{KvPool, PoolConfig};
-use crate::metrics::{EventLog, RunAnalysis};
+use crate::metrics::{EventLog, RunAnalysis, SharingStats};
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
 use crate::runtime::Device;
@@ -142,6 +142,19 @@ impl Spawner {
             .collect()
     }
 
+    /// Prefix-sharing counters summed across all AW slot arenas
+    /// (DESIGN.md §13).
+    pub fn sharing_totals(&self) -> SharingStats {
+        let pools = self.kv_pools.lock().unwrap();
+        let mut s = SharingStats::default();
+        for p in pools.values() {
+            s.prefix_hits += p.prefix_hits();
+            s.cow_breaks += p.cow_breaks();
+            s.pages_shared += p.pages_shared_peak() as u64;
+        }
+        s
+    }
+
     /// Post an admin message as the orchestrator (provisioning threads).
     pub fn post_admin(&self, to: NodeId, msg: ClusterMsg) {
         if let Ok(qp) = self.fabric.qp(NodeId::Orchestrator, to, Plane::Control) {
@@ -223,6 +236,9 @@ pub struct ClusterReport {
     pub scale_ins: u64,
     pub shadow_promotions: u64,
     pub scale_rejected: u64,
+    /// KV prefix-sharing counters summed over all AW arenas (§13):
+    /// prefill page hits, CoW privatizations, peak pages shared.
+    pub sharing: SharingStats,
 }
 
 impl Cluster {
@@ -251,7 +267,12 @@ impl Cluster {
         });
 
         // --- checkpoint store service (its own node, §7.1) -------------
-        let store = Arc::new(Mutex::new(CkptStore::new(manifest.model.layers)));
+        // The store's page content index must use the same page geometry
+        // as the AW arenas, or prefill page refs never resolve.
+        let store = Arc::new(Mutex::new(CkptStore::with_page_tokens(
+            manifest.model.layers,
+            PoolConfig::from_model(&manifest.model).page_tokens,
+        )));
         let (store_inbox, store_handle) = fabric.register(NodeId::Store);
         let store_thread = {
             let store = store.clone();
@@ -540,6 +561,7 @@ impl Cluster {
             scale_ins: self.state.scale_ins.load(Ordering::Relaxed),
             shadow_promotions: self.state.shadow_promotions.load(Ordering::Relaxed),
             scale_rejected: self.state.scale_rejected.load(Ordering::Relaxed),
+            sharing: self.spawner.sharing_totals(),
         }
     }
 }

@@ -213,6 +213,11 @@ impl AdmissionLimits {
             ));
         }
         if self.budget_pages > 0 {
+            // Deliberately worst-case *physical* page math: prefix sharing
+            // (DESIGN.md §13) may later satisfy part of the prompt with
+            // refcount bumps, but admission cannot assume a hit — a shared
+            // page can be privatized (CoW) or its last co-holder evicted at
+            // any time, at which point the request must still fit alone.
             let pages =
                 crate::kvcache::pages_for_tokens(prompt_len + max_new, self.page_tokens, self.layers);
             if pages > self.budget_pages {

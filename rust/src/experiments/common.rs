@@ -68,6 +68,9 @@ pub struct ServeSpec {
     /// Fast worker bring-up for steady-state experiments (failure-free
     /// runs don't need the full simulated cold-start cost).
     pub fast_init: bool,
+    /// Fraction of requests stamped with the shared system-prompt prefix
+    /// (the prefix-caching workload axis); 0.0 = legacy stream.
+    pub shared_prefix_ratio: f64,
 }
 
 impl ServeSpec {
@@ -85,6 +88,7 @@ impl ServeSpec {
             record_traffic: false,
             drain_timeout: Duration::from_secs(120),
             fast_init: true,
+            shared_prefix_ratio: 0.0,
         }
     }
 }
@@ -121,6 +125,7 @@ pub fn run_serving(spec: &ServeSpec) -> ServeOutcome {
         duration_secs: spec.duration_secs,
         seed: spec.seed,
         hotspot_expert: None,
+        shared_prefix_ratio: spec.shared_prefix_ratio,
     };
     let limits = Limits::from_model(&manifest.model, &manifest.buckets);
     let schedule = workload::generate(&wl, limits);

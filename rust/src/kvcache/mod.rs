@@ -17,7 +17,9 @@
 
 pub mod pool;
 
-pub use pool::{KvPool, PageId, PagesRead, PoolConfig, DEFAULT_PAGE_TOKENS};
+pub use pool::{
+    page_hash_seed, page_hash_update, KvPool, PageId, PagesRead, PoolConfig, DEFAULT_PAGE_TOKENS,
+};
 
 /// Worst-case pool pages for a request spanning `tokens` positions across
 /// `layers` layers — the admission-time fit check: a request whose
@@ -61,6 +63,18 @@ impl std::fmt::Debug for PagedKvView {
     }
 }
 
+/// Which positions of one prompt layer a bulk write actually touched:
+/// full pages satisfied by a verified share (prefix hits — the caller
+/// checkpoints them as one page *reference* each) vs. positions written
+/// physically (the caller checkpoints them as ordinary segments).
+#[derive(Debug, Default)]
+pub struct PrefillOutcome {
+    /// `(first_pos, content_hash)` per full page installed by sharing.
+    pub shared: Vec<(usize, u64)>,
+    /// Every position written physically (full pages get sealed).
+    pub written: Vec<usize>,
+}
+
 /// Per-request KV cache across all layers, backed by pool pages.
 pub struct RequestKv {
     pool: Arc<KvPool>,
@@ -71,6 +85,11 @@ pub struct RequestKv {
     s_max: usize,
     /// Elements of one K (or V) row: kv_heads * head_dim.
     seg: usize,
+    /// Per layer: leading pages installed by sharing (DESIGN.md §13).
+    /// Writes to a page below this watermark must `make_unique` first —
+    /// in practice only the last, partially-filled page is ever written
+    /// after install, so the check is a cold integer compare.
+    shared_prefix: Vec<usize>,
 }
 
 impl std::fmt::Debug for RequestKv {
@@ -100,6 +119,7 @@ impl RequestKv {
             len: 0,
             s_max: m.max_seq,
             seg,
+            shared_prefix: vec![0; m.layers],
         }
     }
 
@@ -182,9 +202,13 @@ impl RequestKv {
 
     /// Write K/V for position `pos` of `layer` (decode append or prefill
     /// bulk write). Does NOT advance `len` — call `set_len` once all layers
-    /// for a position are written (the per-step commit point).
+    /// for a position are written (the per-step commit point). A write
+    /// landing inside the shared prefix breaks that page copy-on-write
+    /// first (never hit in steady state: only the partial tail is
+    /// written after install).
     pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         assert!(pos < self.s_max, "kv overflow: pos {pos} >= {}", self.s_max);
+        self.cow_guard(layer, pos);
         let (page, slot) = self.locate_mut(layer, pos);
         self.pool.write_rows(page, slot, k_row, v_row);
     }
@@ -194,8 +218,166 @@ impl RequestKv {
     pub fn write_segment(&mut self, layer: usize, pos: usize, seg_data: &[f32]) {
         assert!(pos < self.s_max, "kv overflow: pos {pos} >= {}", self.s_max);
         assert_eq!(seg_data.len(), 2 * self.seg, "bad segment size");
+        self.cow_guard(layer, pos);
         let (page, slot) = self.locate_mut(layer, pos);
         self.pool.write_segment(page, slot, seg_data);
+    }
+
+    /// CoW safety valve on the write paths: a position inside the shared
+    /// prefix gets its page privatized before mutation.
+    fn cow_guard(&mut self, layer: usize, pos: usize) {
+        let page_idx = pos / self.pool.page_tokens();
+        if page_idx < self.shared_prefix[layer] {
+            self.make_unique(layer, page_idx);
+        }
+    }
+
+    // ---- prefix sharing (DESIGN.md §13) ----------------------------------
+
+    /// Per-layer watermark: leading pages installed by sharing.
+    pub fn shared_prefix_pages(&self, layer: usize) -> usize {
+        self.shared_prefix[layer]
+    }
+
+    /// Append the next page of `layer` by taking a verified reference on
+    /// a sealed pool page with this content hash, if one is published.
+    /// Pages must be installed in order (the page lands at the current
+    /// end of the layer's table). Returns whether the share happened.
+    pub fn try_share_page<F: FnOnce(&[f32]) -> bool>(
+        &mut self,
+        layer: usize,
+        hash: u64,
+        verify: F,
+    ) -> bool {
+        match self.pool.share_by_hash(hash, verify) {
+            Some(id) => {
+                let page_idx = self.tables[layer].len();
+                self.tables[layer].push(id);
+                self.shared_prefix[layer] = self.shared_prefix[layer].max(page_idx + 1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Seal a fully-written page of `layer` under its content hash,
+    /// publishing it for sharing by later requests.
+    pub fn seal_page(&mut self, layer: usize, page_idx: usize, hash: u64) {
+        self.pool.seal(self.tables[layer][page_idx], hash);
+    }
+
+    /// Privatize one page of `layer`: if it is shared, copy-on-write into
+    /// a fresh private page and swap the table entry. Idempotent on a
+    /// private page. Panics at the page budget, like every serving-path
+    /// alloc (callers reserve headroom first).
+    pub fn make_unique(&mut self, layer: usize, page_idx: usize) {
+        let id = self.tables[layer][page_idx];
+        let fresh = self.pool.cow_break(id).unwrap_or_else(|| {
+            panic!("kv page budget exceeded ({} pages)", self.pool.budget_pages())
+        });
+        self.tables[layer][page_idx] = fresh;
+    }
+
+    /// Bulk-write one layer's prompt K/V rows (`p_len` rows of `k`/`v`),
+    /// sharing instead of writing wherever a full page's content is
+    /// already sealed in the pool. Full pages that miss are written and
+    /// sealed (so the *next* request with this prompt hits); the partial
+    /// tail is written privately and never sealed. The outcome tells the
+    /// caller which positions need ordinary checkpoint segments and
+    /// which pages are covered by a single page reference.
+    ///
+    /// Sharing only engages when the layer's table is empty (prefill
+    /// writes each layer exactly once, from the front). Re-prefilling an
+    /// already-populated cache (micro-benchmarks, replay baselines) falls
+    /// back to plain in-place overwrites — the CoW guard on `write`
+    /// privatizes any page the overwrite would otherwise clobber.
+    pub fn write_prompt_layer(
+        &mut self,
+        layer: usize,
+        p_len: usize,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> PrefillOutcome {
+        assert!(p_len <= self.s_max, "kv overflow: prompt {p_len} > {}", self.s_max);
+        if !self.tables[layer].is_empty() {
+            let mut out = PrefillOutcome::default();
+            for t in 0..p_len {
+                self.write(layer, t, k.row(t), v.row(t));
+                out.written.push(t);
+            }
+            return out;
+        }
+        let pt = self.pool.page_tokens();
+        let seg = self.seg;
+        let mut out = PrefillOutcome::default();
+        let mut pos = 0;
+        while pos + pt <= p_len {
+            let mut h = page_hash_seed(layer);
+            for t in pos..pos + pt {
+                h = page_hash_update(h, k.row(t));
+                h = page_hash_update(h, v.row(t));
+            }
+            let hit = self.try_share_page(layer, h, |raw| {
+                (0..pt).all(|t| {
+                    let off = t * 2 * seg;
+                    raw[off..off + seg] == *k.row(pos + t)
+                        && raw[off + seg..off + 2 * seg] == *v.row(pos + t)
+                })
+            });
+            if hit {
+                out.shared.push((pos, h));
+            } else {
+                let page_idx = pos / pt;
+                for t in pos..pos + pt {
+                    self.write(layer, t, k.row(t), v.row(t));
+                }
+                self.seal_page(layer, page_idx, h);
+                out.written.extend(pos..pos + pt);
+            }
+            pos += pt;
+        }
+        for t in pos..p_len {
+            self.write(layer, t, k.row(t), v.row(t));
+            out.written.push(t);
+        }
+        out
+    }
+
+    /// Fallible deep copy: `try_alloc` with full rollback — if the pool
+    /// runs out of budget mid-copy, every page already allocated for the
+    /// half-built clone is returned and `None` comes back (the infallible
+    /// `Clone` used to leak those pages by panicking mid-build). Pages
+    /// are copied page-to-page under one pool lock each, not one heap
+    /// `Vec` per slot.
+    pub fn try_clone(&self) -> Option<RequestKv> {
+        let mut tables: Vec<Vec<PageId>> = Vec::with_capacity(self.tables.len());
+        for table in &self.tables {
+            let mut t: Vec<PageId> = Vec::with_capacity(table.len());
+            for &src in table {
+                match self.pool.try_alloc() {
+                    Some(dst) => {
+                        self.pool.copy_page(src, dst);
+                        t.push(dst);
+                    }
+                    None => {
+                        for &p in t.iter().chain(tables.iter().flatten()) {
+                            self.pool.free(p);
+                        }
+                        return None;
+                    }
+                }
+            }
+            tables.push(t);
+        }
+        Some(RequestKv {
+            pool: self.pool.clone(),
+            tables,
+            len: self.len,
+            s_max: self.s_max,
+            seg: self.seg,
+            // The clone owns every page privately.
+            shared_prefix: vec![0; self.tables.len()],
+        })
     }
 
     /// Read one segment back (K||V) — the checkpoint streamer's source.
@@ -280,33 +462,12 @@ impl Drop for RequestKv {
 impl Clone for RequestKv {
     /// Deep copy: allocates fresh pages and copies every allocated slot
     /// (not just the valid prefix — in-flight positions above `len` are
-    /// preserved too).
+    /// preserved too). Panics at the page budget; use
+    /// [`RequestKv::try_clone`] when failure must not leak.
     fn clone(&self) -> RequestKv {
-        let pt = self.pool.page_tokens();
-        let tables = self
-            .tables
-            .iter()
-            .map(|table| {
-                table
-                    .iter()
-                    .map(|&src| {
-                        let dst = self.pool.alloc();
-                        for slot in 0..pt {
-                            let data = self.pool.read_segment(src, slot);
-                            self.pool.write_segment(dst, slot, &data);
-                        }
-                        dst
-                    })
-                    .collect()
-            })
-            .collect();
-        RequestKv {
-            pool: self.pool.clone(),
-            tables,
-            len: self.len,
-            s_max: self.s_max,
-            seg: self.seg,
-        }
+        self.try_clone().unwrap_or_else(|| {
+            panic!("kv page budget exceeded ({} pages)", self.pool.budget_pages())
+        })
     }
 }
 
@@ -316,11 +477,24 @@ impl Clone for RequestKv {
 pub struct BatchAssembler {
     s_max: usize,
     seg: usize,
+    /// Recycled paged-view storage: the `Arc` handed out by
+    /// [`gather_paged`](Self::gather_paged) comes back here; once the
+    /// caller drops its view, `Arc::get_mut` reclaims the buffer in
+    /// place, so steady-state decode does zero heap allocation (the same
+    /// contract `IoScratch` gives the expert-I/O path).
+    paged_scratch: Option<Arc<Vec<Vec<PageId>>>>,
+    /// Warm per-row page-id vectors parked across batch-size changes.
+    spare_rows: Vec<Vec<PageId>>,
 }
 
 impl BatchAssembler {
     pub fn new(m: &ModelSpec) -> BatchAssembler {
-        BatchAssembler { s_max: m.max_seq, seg: m.kv_heads * m.head_dim }
+        BatchAssembler {
+            s_max: m.max_seq,
+            seg: m.kv_heads * m.head_dim,
+            paged_scratch: None,
+            spare_rows: Vec::new(),
+        }
     }
 
     /// Gather `layer`'s caches of `reqs` into [B, S, kv, d] K/V tensors
@@ -355,29 +529,51 @@ impl BatchAssembler {
 
     /// Copy-free gather: hand the decode artifact each request's page
     /// table plus the shared arena instead of materializing contiguous
-    /// K/V tensors. The only per-call work is cloning `reqs.len()` small
-    /// page-id vectors; KV floats are read in place by the kernel.
-    /// Returns the view and the pos vector (padded to `bucket`).
+    /// K/V tensors. KV floats are read in place by the kernel, and the
+    /// page-id rows live in recycled storage — once the caller drops the
+    /// previous step's view, a gather allocates nothing.
+    ///
+    /// The arena comes in as a parameter (not stolen from `reqs[0]`) so
+    /// an *empty* batch — a bucket drained by a preemption race between
+    /// batch selection and gather — yields a valid zero-row view instead
+    /// of a panic, mirroring the dense `gather`. `pos` is cleared and
+    /// refilled (padded to `bucket`).
     pub fn gather_paged(
         &mut self,
+        pool: &Arc<KvPool>,
         reqs: &[&RequestKv],
         layer: usize,
         bucket: usize,
-    ) -> (PagedKvView, Vec<i32>) {
-        assert!(!reqs.is_empty() && reqs.len() <= bucket);
-        let pool = reqs[0].pool().clone();
-        let mut tables = Vec::with_capacity(reqs.len());
-        let mut pos = Vec::with_capacity(bucket);
-        for r in reqs {
+        pos: &mut Vec<i32>,
+    ) -> PagedKvView {
+        assert!(reqs.len() <= bucket);
+        let mut arc = self.paged_scratch.take().unwrap_or_else(|| Arc::new(Vec::new()));
+        if Arc::get_mut(&mut arc).is_none() {
+            // The caller still holds the previous view; start fresh.
+            arc = Arc::new(Vec::new());
+        }
+        let tables = Arc::get_mut(&mut arc).unwrap();
+        while tables.len() > reqs.len() {
+            self.spare_rows.push(tables.pop().unwrap());
+        }
+        while tables.len() < reqs.len() {
+            tables.push(self.spare_rows.pop().unwrap_or_default());
+        }
+        pos.clear();
+        for (i, r) in reqs.iter().enumerate() {
             debug_assert!(
-                Arc::ptr_eq(r.pool(), &pool),
+                Arc::ptr_eq(r.pool(), pool),
                 "batched requests must share one KV arena"
             );
-            tables.push(r.page_table(layer).to_vec());
+            let t = &mut tables[i];
+            t.clear();
+            t.extend_from_slice(r.page_table(layer));
             pos.push(r.len() as i32);
         }
         pos.resize(bucket, 0);
-        (PagedKvView { pool, tables: Arc::new(tables) }, pos)
+        let view = PagedKvView { pool: pool.clone(), tables: arc.clone() };
+        self.paged_scratch = Some(arc);
+        view
     }
 }
 
@@ -521,7 +717,8 @@ mod tests {
         r1.set_len(3);
         let mut asm = BatchAssembler::new(&m);
         let (k, v, pos_dense) = asm.gather(&[&r1], 0, 2, m.kv_heads, m.head_dim);
-        let (view, pos) = asm.gather_paged(&[&r1], 0, 2);
+        let mut pos = Vec::new();
+        let view = asm.gather_paged(&pool, &[&r1], 0, 2, &mut pos);
         assert_eq!(pos, pos_dense);
         assert_eq!(view.rows(), 1);
         assert_eq!(view.tables[0], r1.page_table(0));
@@ -534,6 +731,126 @@ mod tests {
             assert_eq!(kr, &k.data()[t * seg..(t + 1) * seg]);
             assert_eq!(vr, &v.data()[t * seg..(t + 1) * seg]);
         }
+    }
+
+    #[test]
+    fn paged_gather_accepts_empty_batch() {
+        let m = spec();
+        let pool = KvPool::for_model(&m);
+        let mut asm = BatchAssembler::new(&m);
+        let mut pos = Vec::new();
+        // A bucket drained by a preemption race must not panic the AW.
+        let view = asm.gather_paged(&pool, &[], 0, 4, &mut pos);
+        assert_eq!(view.rows(), 0);
+        assert_eq!(pos, vec![0; 4], "empty batch still pads pos to the bucket");
+    }
+
+    #[test]
+    fn paged_gather_recycles_view_storage() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let mut r1 = RequestKv::new(&m, &pool);
+        r1.write(0, 0, &[1.0; 4], &[2.0; 4]);
+        r1.set_len(1);
+        let mut asm = BatchAssembler::new(&m);
+        let mut pos = Vec::new();
+        let first = asm.gather_paged(&pool, &[&r1], 0, 2, &mut pos);
+        let ptr = Arc::as_ptr(&first.tables);
+        drop(first);
+        let second = asm.gather_paged(&pool, &[&r1], 0, 2, &mut pos);
+        assert_eq!(
+            Arc::as_ptr(&second.tables),
+            ptr,
+            "dropped view's storage must be reused in place"
+        );
+        assert_eq!(second.tables[0], r1.page_table(0));
+        // Held view forces a fresh buffer (correctness over recycling).
+        let third = asm.gather_paged(&pool, &[&r1], 0, 2, &mut pos);
+        assert_ne!(Arc::as_ptr(&third.tables), Arc::as_ptr(&second.tables));
+        assert_eq!(third.tables[0], r1.page_table(0));
+    }
+
+    #[test]
+    fn try_clone_rolls_back_on_budget_without_leaking() {
+        let m = spec();
+        // Budget fits the source (3 pages) plus only 2 more: the clone
+        // needs 3, so it must fail and return every partial page.
+        let pool = KvPool::bounded(PoolConfig { page_tokens: 2, seg: 4 }, 5);
+        let mut kv = RequestKv::new(&m, &pool);
+        for pos in 0..3 {
+            kv.write(0, pos, &[pos as f32; 4], &[pos as f32; 4]);
+        }
+        kv.write(1, 0, &[7.0; 4], &[7.0; 4]);
+        kv.set_len(3);
+        assert_eq!(pool.pages_in_use(), 3);
+        assert!(kv.try_clone().is_none(), "clone cannot fit under the budget");
+        assert_eq!(pool.pages_in_use(), 3, "failed clone must leak nothing");
+        // With headroom the clone succeeds and is a bitwise deep copy.
+        pool.set_budget(6);
+        let c = kv.try_clone().expect("fits now");
+        assert_eq!(pool.pages_in_use(), 6);
+        assert_eq!(c.read_segment(0, 2), kv.read_segment(0, 2));
+        assert_eq!(c.read_segment(1, 0), kv.read_segment(1, 0));
+        drop(c);
+        assert_eq!(pool.pages_in_use(), 3);
+    }
+
+    #[test]
+    fn prompt_layer_share_hits_and_cow_diverges() {
+        let m = spec();
+        let pool = KvPool::with_page_tokens(&m, 2);
+        let seg = m.kv_heads * m.head_dim;
+        // 5-token prompt = 2 full pages + 1 tail token per layer.
+        let p_len = 5;
+        let k = Tensor::new(
+            vec![p_len, seg],
+            (0..p_len * seg).map(|i| i as f32).collect(),
+        );
+        let v = Tensor::new(
+            vec![p_len, seg],
+            (0..p_len * seg).map(|i| -(i as f32)).collect(),
+        );
+
+        let mut a = RequestKv::new(&m, &pool);
+        let out_a = a.write_prompt_layer(0, p_len, &k, &v);
+        a.set_len(p_len);
+        assert!(out_a.shared.is_empty(), "first request has nothing to share");
+        assert_eq!(out_a.written, (0..p_len).collect::<Vec<_>>());
+        let pages_after_a = pool.pages_in_use();
+
+        let mut b = RequestKv::new(&m, &pool);
+        let out_b = b.write_prompt_layer(0, p_len, &k, &v);
+        b.set_len(p_len);
+        assert_eq!(out_b.shared.len(), 2, "both full pages must hit");
+        assert_eq!(out_b.written, vec![4], "only the tail is written");
+        assert_eq!(b.shared_prefix_pages(0), 2);
+        assert_eq!(
+            pool.pages_in_use(),
+            pages_after_a + 1,
+            "the sharing request pays one physical page (its tail)"
+        );
+        assert_eq!(b.page_table(0)[..2], a.page_table(0)[..2]);
+        assert_ne!(b.page_table(0)[2], a.page_table(0)[2]);
+
+        // Byte-identical reads through the shared pages.
+        for pos in 0..p_len {
+            assert_eq!(b.read_segment(0, pos), a.read_segment(0, pos));
+        }
+
+        // Divergence inside the shared prefix triggers CoW: both
+        // variants remain readable, bitwise.
+        let before = a.read_segment(0, 1);
+        b.write(0, 1, &[99.0; 4], &[98.0; 4]);
+        assert_eq!(pool.cow_breaks(), 1);
+        assert_ne!(b.page_table(0)[0], a.page_table(0)[0]);
+        assert_eq!(a.read_segment(0, 1), before, "original untouched");
+        assert_eq!(b.read_segment(0, 1), [[99.0; 4], [98.0; 4]].concat());
+        assert_eq!(b.read_segment(0, 0), a.read_segment(0, 0), "untouched slot copied over");
+
+        // Drops balance: every physical page comes back.
+        drop(b);
+        drop(a);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 
     #[test]

@@ -27,9 +27,55 @@
 //! decisions off. `alloc` panics when the budget is exceeded: every
 //! caller on the serving path must have reserved headroom first, so an
 //! over-budget grab is a scheduler bug, not a condition to paper over.
+//!
+//! **Sharing + copy-on-write (DESIGN.md §13).** Pages carry a refcount
+//! and *completed* (full) pages can be *sealed*: hashed by content and
+//! published in a pool-wide index. A later request whose prompt produces
+//! an identical page takes a reference ([`KvPool::share_by_hash`],
+//! verified bitwise against the candidate — a hash collision can never
+//! alias wrong data) instead of allocating and rewriting a physical
+//! page. Sealed pages are immutable: every write path asserts
+//! `refs <= 1`, and [`KvPool::cow_break`] is the escape hatch — copy
+//! into a fresh private page, drop the shared reference. All accounting
+//! (`in_use`, `pressure`, `free_pages`, `peak_pages`) counts *physical*
+//! pages — a refcount bump changes none of them, which is exactly why
+//! sharing saves budget.
 
 use crate::modelcfg::ModelSpec;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+// ---- content hashing ------------------------------------------------------
+//
+// FNV-1a over the little-endian bytes of `f32::to_bits`, seeded per
+// layer so identical K/V floats at different layers never collide into
+// one index entry. The same byte stream is produced by every hasher of a
+// page's content — prefill (K row then V row per slot), the restore path
+// (one K||V segment per slot), and the checkpoint store (segment
+// payloads) — so a page hashes identically no matter which path
+// materialized it.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Starting hash state for one layer's page content.
+pub fn page_hash_seed(layer: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in (layer as u64).to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold a run of floats (bitwise) into a page-content hash.
+pub fn page_hash_update(mut h: u64, data: &[f32]) -> u64 {
+    for &x in data {
+        for b in x.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
 
 /// Default tokens per page. 16 matches vLLM-style paged attention block
 /// sizes and keeps internal fragmentation at most 15 token slots per
@@ -73,6 +119,12 @@ impl PoolConfig {
 struct PageSlot {
     data: Box<[f32]>,
     in_use: bool,
+    /// References held on this physical page. 1 = private; > 1 = shared
+    /// (immutable until every extra reference is dropped or CoW-broken).
+    refs: u32,
+    /// Content hash when sealed (full, immutable, index-published).
+    /// `None` for mutable pages — decode tails are never sealed.
+    hash: Option<u64>,
 }
 
 #[derive(Default)]
@@ -85,6 +137,16 @@ struct PoolInner {
     total_frees: u64,
     /// Hard cap on pages in use (0 = unbounded).
     budget: usize,
+    /// Content hash -> sealed page holding that content (first sealer
+    /// wins; entry removed when the page is written to or fully freed).
+    index: HashMap<u64, u32>,
+    /// Successful verified shares (prefill or restore prefix hits).
+    prefix_hits: u64,
+    /// Copy-on-write breaks (shared page about to be mutated).
+    cow_breaks: u64,
+    /// Pages currently shared (refs > 1) and the high-water mark.
+    shared_now: usize,
+    shared_peak: usize,
 }
 
 /// Shared KV page arena. Cheap to clone the `Arc`; all mutation goes
@@ -161,12 +223,16 @@ impl KvPool {
             debug_assert!(!slot.in_use);
             slot.data.fill(0.0);
             slot.in_use = true;
+            slot.refs = 1;
+            slot.hash = None;
             PageId(idx)
         } else {
             let idx = inner.slots.len() as u32;
             inner.slots.push(PageSlot {
                 data: vec![0.0f32; self.cfg.page_floats()].into_boxed_slice(),
                 in_use: true,
+                refs: 1,
+                hash: None,
             });
             PageId(idx)
         };
@@ -185,19 +251,159 @@ impl KvPool {
         })
     }
 
-    /// Return a page. Panics on double free or a foreign id — a paging
-    /// bug upstream must not silently corrupt another request's KV.
+    /// Return one reference on a page. On a shared page this only drops
+    /// the caller's reference; the physical page is released (and its
+    /// index entry retired) when the *last* reference goes — the
+    /// share-aware evict contract. Panics on double free or a foreign
+    /// id — a paging bug upstream must not silently corrupt another
+    /// request's KV.
     pub fn free(&self, id: PageId) {
         let mut inner = self.inner.lock().unwrap();
-        let slot = inner
-            .slots
-            .get_mut(id.index())
-            .unwrap_or_else(|| panic!("free of unknown page {id:?}"));
-        assert!(slot.in_use, "double free of page {id:?}");
-        slot.in_use = false;
+        let (refs_left, hash) = {
+            let slot = inner
+                .slots
+                .get_mut(id.index())
+                .unwrap_or_else(|| panic!("free of unknown page {id:?}"));
+            assert!(slot.in_use, "double free of page {id:?}");
+            debug_assert!(slot.refs > 0);
+            slot.refs -= 1;
+            (slot.refs, slot.hash)
+        };
+        if refs_left == 1 {
+            inner.shared_now -= 1;
+        }
+        if refs_left > 0 {
+            return; // other holders keep the physical page alive
+        }
+        if let Some(h) = hash {
+            if inner.index.get(&h) == Some(&id.0) {
+                inner.index.remove(&h);
+            }
+            inner.slots[id.index()].hash = None;
+        }
+        inner.slots[id.index()].in_use = false;
         inner.free.push(id.0);
         inner.in_use -= 1;
         inner.total_frees += 1;
+    }
+
+    // ---- sharing / copy-on-write ----------------------------------------
+
+    /// Take a reference on the sealed page published under `hash`, after
+    /// `verify` confirms bitwise that the candidate's raw floats really
+    /// are the content the caller computed (hash collisions must never
+    /// alias wrong data). Does not change physical accounting: `in_use`,
+    /// `pressure`, and `free_pages` are untouched — that is the saving.
+    pub fn share_by_hash<F: FnOnce(&[f32]) -> bool>(&self, hash: u64, verify: F) -> Option<PageId> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = *inner.index.get(&hash)?;
+        {
+            let slot = &inner.slots[idx as usize];
+            debug_assert!(slot.in_use && slot.hash == Some(hash));
+            if !verify(&slot.data) {
+                return None;
+            }
+        }
+        let newly_shared = {
+            let slot = &mut inner.slots[idx as usize];
+            slot.refs += 1;
+            slot.refs == 2
+        };
+        if newly_shared {
+            inner.shared_now += 1;
+            inner.shared_peak = inner.shared_peak.max(inner.shared_now);
+        }
+        inner.prefix_hits += 1;
+        Some(PageId(idx))
+    }
+
+    /// Seal a *full* page: record its content hash and publish it for
+    /// sharing. First sealer of a given hash owns the index entry; a
+    /// page obtained via [`share_by_hash`](Self::share_by_hash) may be
+    /// re-sealed with the same hash (idempotent). Sealed pages are
+    /// immutable — any write path unseals (and asserts unshared) first.
+    pub fn seal(&self, id: PageId, hash: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        {
+            let slot = &mut inner.slots[id.index()];
+            assert!(slot.in_use, "access to freed page {id:?}");
+            debug_assert!(
+                slot.hash.is_none() || slot.hash == Some(hash),
+                "re-seal of page {id:?} with a different hash"
+            );
+            slot.hash = Some(hash);
+        }
+        inner.index.entry(hash).or_insert(id.0);
+    }
+
+    /// Is a sealed page with this content hash available for sharing?
+    pub fn has_sealed(&self, hash: u64) -> bool {
+        self.inner.lock().unwrap().index.contains_key(&hash)
+    }
+
+    /// References currently held on a page.
+    pub fn ref_count(&self, id: PageId) -> u32 {
+        let inner = self.inner.lock().unwrap();
+        let slot = &inner.slots[id.index()];
+        assert!(slot.in_use, "access to freed page {id:?}");
+        slot.refs
+    }
+
+    /// Does anyone else hold a reference on this page?
+    pub fn is_shared(&self, id: PageId) -> bool {
+        self.ref_count(id) > 1
+    }
+
+    /// The content hash a page was sealed with, if sealed.
+    pub fn page_hash(&self, id: PageId) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        let slot = &inner.slots[id.index()];
+        assert!(slot.in_use, "access to freed page {id:?}");
+        slot.hash
+    }
+
+    /// Copy the full content of `src` into `dst` under one lock. `dst`
+    /// must be private (refs <= 1); it is unsealed by the write.
+    pub fn copy_page(&self, src: PageId, dst: PageId) {
+        let (si, di) = (src.index(), dst.index());
+        assert_ne!(si, di, "copy_page onto itself");
+        let mut inner = self.inner.lock().unwrap();
+        {
+            let s = &inner.slots[si];
+            assert!(s.in_use, "access to freed page {src:?}");
+            let d = &inner.slots[di];
+            assert!(d.in_use, "access to freed page {dst:?}");
+            assert!(d.refs <= 1, "write to shared page {dst:?} (refs {})", d.refs);
+        }
+        if let Some(h) = inner.slots[di].hash.take() {
+            if inner.index.get(&h) == Some(&(di as u32)) {
+                inner.index.remove(&h);
+            }
+        }
+        let (lo, hi) = inner.slots.split_at_mut(si.max(di));
+        let (s, d) = if si < di { (&lo[si], &mut hi[0]) } else { (&hi[0], &mut lo[di]) };
+        d.data.copy_from_slice(&s.data);
+    }
+
+    /// Copy-on-write break: give the caller a private copy of a shared
+    /// page and drop its reference on the original. Returns the same id
+    /// when the page is already private (idempotent), `None` when the
+    /// pool is at budget (caller must make headroom first, exactly like
+    /// any other allocation on the serving path).
+    pub fn cow_break(&self, id: PageId) -> Option<PageId> {
+        {
+            let inner = self.inner.lock().unwrap();
+            let slot = &inner.slots[id.index()];
+            assert!(slot.in_use, "access to freed page {id:?}");
+            if slot.refs <= 1 {
+                return Some(id);
+            }
+        }
+        let fresh = self.try_alloc()?;
+        self.copy_page(id, fresh);
+        self.free(id); // drop our reference; others keep the original
+        self.inner.lock().unwrap().cow_breaks += 1;
+        Some(fresh)
     }
 
     // ---- data plane ------------------------------------------------------
@@ -271,10 +477,26 @@ impl KvPool {
         &slot.data
     }
 
+    /// Mutable access to a page's floats — every write path funnels
+    /// through here, which is where the sharing invariants bite: a
+    /// shared page must be CoW-broken before mutation, and a sealed page
+    /// loses its seal (and index entry) the moment it is written.
     fn page_mut<'a>(&self, inner: &'a mut PoolInner, id: PageId) -> &'a mut [f32] {
-        let slot = &mut inner.slots[id.index()];
-        assert!(slot.in_use, "access to freed page {id:?}");
-        &mut slot.data
+        {
+            let slot = &inner.slots[id.index()];
+            assert!(slot.in_use, "access to freed page {id:?}");
+            assert!(
+                slot.refs <= 1,
+                "write to shared page {id:?} (refs {}): CoW break required",
+                slot.refs
+            );
+        }
+        if let Some(h) = inner.slots[id.index()].hash.take() {
+            if inner.index.get(&h) == Some(&id.0) {
+                inner.index.remove(&h);
+            }
+        }
+        &mut inner.slots[id.index()].data
     }
 
     // ---- accounting ------------------------------------------------------
@@ -343,6 +565,26 @@ impl KvPool {
 
     pub fn total_frees(&self) -> u64 {
         self.inner.lock().unwrap().total_frees
+    }
+
+    /// Successful verified prefix shares.
+    pub fn prefix_hits(&self) -> u64 {
+        self.inner.lock().unwrap().prefix_hits
+    }
+
+    /// Copy-on-write breaks taken.
+    pub fn cow_breaks(&self) -> u64 {
+        self.inner.lock().unwrap().cow_breaks
+    }
+
+    /// Pages currently shared (refs > 1).
+    pub fn pages_shared_now(&self) -> usize {
+        self.inner.lock().unwrap().shared_now
+    }
+
+    /// High-water mark of simultaneously shared pages.
+    pub fn pages_shared_peak(&self) -> usize {
+        self.inner.lock().unwrap().shared_peak
     }
 }
 
@@ -491,5 +733,142 @@ mod tests {
         let id = p.alloc();
         p.free(id);
         p.read_segment(id, 0);
+    }
+
+    /// Fill every slot of a page with `base + slot` and return its hash
+    /// the way prefill computes it (K row, then V row, per slot).
+    fn fill_and_hash(p: &KvPool, id: PageId, layer: usize, base: f32) -> u64 {
+        let seg = p.row_elems();
+        let mut h = page_hash_seed(layer);
+        for t in 0..p.page_tokens() {
+            let k = vec![base + t as f32; seg];
+            let v = vec![-(base + t as f32); seg];
+            p.write_rows(id, t, &k, &v);
+            h = page_hash_update(h, &k);
+            h = page_hash_update(h, &v);
+        }
+        h
+    }
+
+    #[test]
+    fn share_bumps_refs_but_not_physical_accounting() {
+        let p = pool(2, 2);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        assert!(p.has_sealed(h));
+        assert_eq!(p.page_hash(a), Some(h));
+
+        let b = p.share_by_hash(h, |_| true).expect("sealed page must be shareable");
+        assert_eq!(b, a, "share must return the indexed physical page");
+        assert_eq!(p.ref_count(a), 2);
+        assert!(p.is_shared(a));
+        assert_eq!(p.prefix_hits(), 1);
+        assert_eq!(p.pages_shared_now(), 1);
+        assert_eq!(p.pages_shared_peak(), 1);
+        // Physical accounting untouched by the share.
+        assert_eq!(p.pages_in_use(), 1);
+        assert_eq!(p.peak_pages(), 1);
+
+        p.free(b);
+        assert_eq!(p.ref_count(a), 1, "free of a shared page drops one reference");
+        assert_eq!(p.pages_in_use(), 1);
+        assert_eq!(p.pages_shared_now(), 0);
+        assert!(p.has_sealed(h), "page stays sealed while a holder remains");
+        p.free(a);
+        assert_eq!(p.pages_in_use(), 0);
+        assert!(!p.has_sealed(h), "last free retires the index entry");
+    }
+
+    #[test]
+    fn share_verify_rejects_mismatched_content() {
+        let p = pool(2, 2);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        // A verify that rejects (hash collision with different bytes)
+        // must fail the share without touching refcounts.
+        assert!(p.share_by_hash(h, |_| false).is_none());
+        assert_eq!(p.ref_count(a), 1);
+        assert_eq!(p.prefix_hits(), 0);
+        // Unknown hash: no candidate at all.
+        assert!(p.share_by_hash(h ^ 1, |_| true).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "write to shared page")]
+    fn write_to_shared_page_panics() {
+        let p = pool(2, 2);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        let _b = p.share_by_hash(h, |_| true).unwrap();
+        p.write_rows(a, 0, &[9.0, 9.0], &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn cow_break_gives_private_copy_and_keeps_original() {
+        let p = pool(2, 2);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        let b = p.share_by_hash(h, |_| true).unwrap();
+        let before = p.read_segment(a, 1);
+
+        let c = p.cow_break(b).expect("unbounded pool can always CoW");
+        assert_ne!(c, a, "CoW must hand out a fresh physical page");
+        assert_eq!(p.read_segment(c, 1), before, "copy must be bitwise identical");
+        assert_eq!(p.ref_count(a), 1, "CoW drops the shared reference");
+        assert_eq!(p.cow_breaks(), 1);
+        assert_eq!(p.pages_in_use(), 2);
+        assert!(p.page_hash(c).is_none(), "the copy starts unsealed/private");
+        assert!(p.has_sealed(h), "the original stays sealed for future sharers");
+
+        // Now diverge the copy and read back both variants.
+        p.write_rows(c, 1, &[7.0, 7.0], &[8.0, 8.0]);
+        assert_eq!(p.read_segment(c, 1), vec![7.0, 7.0, 8.0, 8.0]);
+        assert_eq!(p.read_segment(a, 1), before, "original untouched by divergence");
+
+        // cow_break on a private page is the identity.
+        assert_eq!(p.cow_break(c), Some(c));
+        assert_eq!(p.cow_breaks(), 1);
+    }
+
+    #[test]
+    fn cow_break_respects_budget() {
+        let p = KvPool::bounded(PoolConfig { page_tokens: 2, seg: 2 }, 1);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        let b = p.share_by_hash(h, |_| true).unwrap();
+        assert!(p.cow_break(b).is_none(), "no headroom: CoW must fail, not panic");
+        assert_eq!(p.ref_count(a), 2, "failed CoW must leave the reference intact");
+        p.free(b);
+        p.free(a);
+    }
+
+    #[test]
+    fn write_unseals_a_private_sealed_page() {
+        let p = pool(2, 2);
+        let a = p.alloc();
+        let h = fill_and_hash(&p, a, 0, 1.0);
+        p.seal(a, h);
+        assert!(p.has_sealed(h));
+        p.write_rows(a, 0, &[9.0, 9.0], &[9.0, 9.0]);
+        assert!(!p.has_sealed(h), "mutation retires the index entry");
+        assert_eq!(p.page_hash(a), None);
+    }
+
+    #[test]
+    fn layer_seed_separates_identical_content() {
+        let data = [1.0f32, 2.0, 3.0];
+        let h0 = page_hash_update(page_hash_seed(0), &data);
+        let h1 = page_hash_update(page_hash_seed(1), &data);
+        assert_ne!(h0, h1);
+        // Incremental and one-shot hashing agree.
+        let mut inc = page_hash_seed(0);
+        inc = page_hash_update(inc, &data[..1]);
+        inc = page_hash_update(inc, &data[1..]);
+        assert_eq!(inc, h0);
     }
 }

@@ -18,6 +18,20 @@ use std::time::Duration;
 
 pub use analysis::{LatencySummary, RunAnalysis};
 
+/// KV prefix-sharing counters (DESIGN.md §13), summed over all AW
+/// arenas by [`crate::coordinator::cluster::Spawner::sharing_totals`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SharingStats {
+    /// Prefill/restore pages satisfied by a refcount bump on an already-
+    /// sealed identical page (no recompute write-back, no fresh page).
+    pub prefix_hits: u64,
+    /// Copy-on-write privatizations: writes that landed on a page with
+    /// refs > 1 and paid one page copy.
+    pub cow_breaks: u64,
+    /// Peak number of pages concurrently shared (refs > 1).
+    pub pages_shared: u64,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     /// Request submitted to the gateway.

@@ -249,6 +249,13 @@ pub enum ClusterMsg {
     // AW -> store
     CkptSegment(SegmentMsg),
     CkptCommit(CommitMeta),
+    /// AW -> store: the page of `request` starting at `(layer, first_pos)`
+    /// is backed by a shared pool page whose content the store already
+    /// holds (auto-indexed under `hash` when the original owner's
+    /// segments completed the page). The store installs its indexed
+    /// payloads into this request's log — one header on the wire instead
+    /// of `page_tokens` float segments (DESIGN.md §13).
+    CkptPageRef { request: u64, layer: u16, first_pos: u32, hash: u64 },
     // store -> AW
     Restore(RestoreData),
     // AW -> store (pull for an adopted request)

@@ -850,7 +850,8 @@ mod numeric_tests {
         dense_args.extend(weights_args());
         let dense = dev.execute(&name, dense_args).unwrap();
 
-        let (paged, pos2) = asm.gather_paged(&refs, 0, b);
+        let mut pos2 = Vec::new();
+        let paged = asm.gather_paged(&pool, &refs, 0, b, &mut pos2);
         assert_eq!(pos, pos2);
         let mut paged_args = vec![
             ArgValue::f32(x),

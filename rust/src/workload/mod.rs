@@ -8,7 +8,20 @@
 //!   decode-stressing workload.
 
 use crate::config::{WorkloadConfig, WorkloadKind};
+use crate::kvcache::DEFAULT_PAGE_TOKENS;
 use crate::util::rng::Pcg;
+
+/// Tokens of the deterministic shared prompt prefix stamped onto
+/// requests selected by `shared_prefix_ratio` — two pool pages at the
+/// default page size, so prefix caching has whole pages to share.
+pub const SHARED_PREFIX_TOKENS: usize = 2 * DEFAULT_PAGE_TOKENS;
+
+/// Token `i` of the shared prefix: fixed across seeds and requests (it
+/// models one system prompt served to everyone), always in `[1, vocab)`.
+pub fn shared_prefix_token(i: usize, vocab: usize) -> u32 {
+    debug_assert!(vocab >= 2);
+    1 + ((i as u64).wrapping_mul(7919) % (vocab as u64 - 1)) as u32
+}
 
 /// One generated request.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,14 +43,20 @@ pub struct Limits {
 
 impl Limits {
     /// Derive from a model spec: prompt is capped by the largest prefill
-    /// bucket; prompt+output must fit in max_seq.
+    /// bucket, and `max_prompt + max_new <= max_seq` always holds — when
+    /// the largest bucket reaches `max_seq`, the prompt cap shrinks to
+    /// leave decode room instead of letting `prompt + output` overflow
+    /// the sequence (which would trip `kv overflow` in `RequestKv::write`
+    /// on the last generated token).
     pub fn from_model(m: &crate::modelcfg::ModelSpec, buckets: &crate::modelcfg::Buckets) -> Limits {
-        let max_prompt = buckets.prefill_t.iter().copied().max().unwrap_or(32);
-        Limits {
-            vocab: m.vocab,
-            max_prompt,
-            max_new: m.max_seq.saturating_sub(max_prompt).max(1),
-        }
+        let bucket_cap = buckets.prefill_t.iter().copied().max().unwrap_or(32);
+        let room = m.max_seq.saturating_sub(bucket_cap);
+        // Prefer at least 2 decode tokens (the heterogeneity floor of the
+        // ShareGPT sampler), never more than max_seq - 1 (the prompt
+        // keeps at least one token).
+        let max_new = room.max(2).min(m.max_seq.saturating_sub(1)).max(1);
+        let max_prompt = bucket_cap.min(m.max_seq - max_new).max(1);
+        Limits { vocab: m.vocab, max_prompt, max_new }
     }
 }
 
@@ -56,9 +75,23 @@ pub fn generate(cfg: &WorkloadConfig, limits: Limits) -> Vec<Request> {
             break;
         }
         let (prompt_len, new_tokens) = sample_lengths(cfg.kind, &mut rng, limits);
-        let prompt = (0..prompt_len)
+        let mut prompt: Vec<u32> = (0..prompt_len)
             .map(|_| rng.range(1, limits.vocab as u64) as u32)
             .collect();
+        // Shared-prefix axis: a `shared_prefix_ratio` fraction of
+        // requests open with one fixed system-prompt prefix (extended to
+        // cover it in full, so prefix caching sees whole pages). The rng
+        // draw is gated on ratio > 0.0 — at 0.0 the stream, and thus
+        // every existing golden schedule, is unchanged.
+        if cfg.shared_prefix_ratio > 0.0 && rng.f64() < cfg.shared_prefix_ratio {
+            let n = SHARED_PREFIX_TOKENS.min(limits.max_prompt);
+            if prompt.len() < n {
+                prompt.resize(n, 0);
+            }
+            for (i, tok) in prompt[..n].iter_mut().enumerate() {
+                *tok = shared_prefix_token(i, limits.vocab);
+            }
+        }
         out.push(Request { id, arrival_s: t, prompt, max_new_tokens: new_tokens });
         id += 1;
     }
@@ -78,7 +111,13 @@ fn sample_lengths(kind: WorkloadKind, rng: &mut Pcg, limits: Limits) -> (usize, 
             // prompts on average).
             let p = rng.lognormal(3.2, 0.8).round() as usize;
             let o = rng.lognormal(3.5, 0.7).round() as usize;
-            (p.clamp(2, limits.max_prompt), o.clamp(2, limits.max_new))
+            // min-then-max (not `clamp`) so degenerate limits with
+            // max_prompt/max_new below 2 cap cleanly instead of
+            // panicking on an inverted clamp range.
+            (
+                p.min(limits.max_prompt).max(2.min(limits.max_prompt)),
+                o.min(limits.max_new).max(2.min(limits.max_new)),
+            )
         }
     }
 }
@@ -100,6 +139,7 @@ mod tests {
             duration_secs: dur,
             seed,
             hotspot_expert: None,
+            shared_prefix_ratio: 0.0,
         }
     }
 
@@ -151,5 +191,105 @@ mod tests {
         w.num_requests = 25;
         let reqs = generate(&w, limits());
         assert_eq!(reqs.len(), 25);
+    }
+
+    #[test]
+    fn limits_fit_max_seq_when_bucket_equals_max_seq() {
+        use crate::modelcfg::{Buckets, ModelSpec};
+        let m = ModelSpec {
+            layers: 2,
+            hidden: 8,
+            heads: 2,
+            kv_heads: 1,
+            head_dim: 4,
+            ffn: 16,
+            experts: 4,
+            top_k: 2,
+            vocab: 32,
+            max_seq: 64,
+        };
+        // Regression: the largest prefill bucket reaches max_seq. The old
+        // derivation kept max_prompt = 64 and max_new = 1, so a max-length
+        // prompt plus its first generated token overflowed the sequence.
+        let b = Buckets {
+            prefill_t: vec![16, 64],
+            decode_b: vec![1],
+            expert_b: vec![1],
+            router_b: vec![1],
+            lm_head_b: vec![1],
+        };
+        let l = Limits::from_model(&m, &b);
+        assert!(
+            l.max_prompt + l.max_new <= m.max_seq,
+            "prompt {} + output {} must fit max_seq {}",
+            l.max_prompt,
+            l.max_new,
+            m.max_seq
+        );
+        assert!(l.max_new >= 2 && l.max_prompt >= 1);
+        // Every sampled pair respects the invariant too (both kinds).
+        let mut rng = Pcg::seeded(7);
+        for kind in [WorkloadKind::Random, WorkloadKind::ShareGpt] {
+            for _ in 0..200 {
+                let (p, o) = sample_lengths(kind, &mut rng, l);
+                assert!(p + o <= m.max_seq, "sampled {p}+{o} > {}", m.max_seq);
+            }
+        }
+        // The ordinary case is unchanged: bucket well under max_seq.
+        let b2 = Buckets {
+            prefill_t: vec![16],
+            decode_b: vec![1],
+            expert_b: vec![1],
+            router_b: vec![1],
+            lm_head_b: vec![1],
+        };
+        let l2 = Limits::from_model(&m, &b2);
+        assert_eq!((l2.max_prompt, l2.max_new), (16, 48));
+        // Degenerate tiny model: the sampler must not panic on an
+        // inverted clamp range.
+        let tiny = ModelSpec { max_seq: 2, ..m };
+        let lt = Limits::from_model(&tiny, &b2);
+        assert!(lt.max_prompt + lt.max_new <= 2);
+        let _ = sample_lengths(WorkloadKind::ShareGpt, &mut rng, lt);
+    }
+
+    #[test]
+    fn shared_prefix_ratio_stamps_one_common_prefix() {
+        let mut w = cfg(WorkloadKind::ShareGpt, 20.0, 50.0, 9);
+        w.shared_prefix_ratio = 1.0;
+        let reqs = generate(&w, limits());
+        assert!(!reqs.is_empty());
+        let n = SHARED_PREFIX_TOKENS.min(limits().max_prompt);
+        for r in &reqs {
+            assert!(r.prompt.len() >= n, "prefixed prompts cover the full prefix");
+            assert!(r.prompt.len() <= limits().max_prompt);
+            for (i, &t) in r.prompt[..n].iter().enumerate() {
+                assert_eq!(t, shared_prefix_token(i, limits().vocab));
+                assert!(t > 0 && (t as usize) < limits().vocab);
+            }
+        }
+
+        // A fractional ratio mixes prefixed and unprefixed requests.
+        let mut w = cfg(WorkloadKind::ShareGpt, 20.0, 50.0, 9);
+        w.shared_prefix_ratio = 0.5;
+        let reqs = generate(&w, limits());
+        let prefixed = reqs
+            .iter()
+            .filter(|r| {
+                r.prompt.len() >= n
+                    && r.prompt[..n]
+                        .iter()
+                        .enumerate()
+                        .all(|(i, &t)| t == shared_prefix_token(i, limits().vocab))
+            })
+            .count();
+        assert!(prefixed > 0 && prefixed < reqs.len(), "{prefixed}/{}", reqs.len());
+
+        // Ratio 0.0 must leave the stream bit-identical to the legacy
+        // generator (no extra rng draw).
+        let a = generate(&cfg(WorkloadKind::ShareGpt, 20.0, 50.0, 9), limits());
+        let mut w0 = cfg(WorkloadKind::ShareGpt, 20.0, 50.0, 9);
+        w0.shared_prefix_ratio = 0.0;
+        assert_eq!(a, generate(&w0, limits()));
     }
 }

@@ -16,18 +16,20 @@
 //! single-threaded so the process-global counters are attributable.
 //!
 //! **Scope.** The hard zero covers the decode *data path* — everything
-//! whose cost scales with hidden dim, context, or batch floats. The
-//! threaded coordinator adds bounded per-step *control metadata* on
-//! top (page-table clones in `gather_paged`, `DispatchEntry` shells,
-//! channel nodes): O(batch x experts) words per layer, independent of
-//! tensor sizes — measured as allocs/token by `benches/decode.rs`,
-//! which runs `gather_paged` in its step loop. See DESIGN.md §10.
+//! whose cost scales with hidden dim, context, or batch floats — AND
+//! the per-step page-table gather: `gather_paged` recycles its view
+//! storage (`Arc::get_mut` reclamation), so the steady-state step
+//! drives the real assembler at zero allocations too. The threaded
+//! coordinator still adds bounded control metadata on top
+//! (`DispatchEntry` shells, channel nodes): O(batch x experts) words
+//! per layer, independent of tensor sizes — measured as allocs/token
+//! by `benches/decode.rs`. See DESIGN.md §10.
 //!
 //! Everything lives in ONE #[test]: a second parallel test would
 //! pollute the global allocation counters.
 
 use std::sync::Arc;
-use tarragon::kvcache::{KvPool, PageId, PoolConfig, RequestKv};
+use tarragon::kvcache::{BatchAssembler, KvPool, PoolConfig, RequestKv};
 use tarragon::modelcfg::ModelSpec;
 use tarragon::proto::DispatchEntry;
 use tarragon::runtime::xla::kern;
@@ -111,7 +113,9 @@ struct Harness {
     // KV state (pages reserved up front: steady state never allocates)
     pool: Arc<KvPool>,
     kvs: Vec<RequestKv>,
-    tables: Vec<Vec<Vec<PageId>>>, // [layer][row] page table snapshot
+    /// The real per-step gather: recycled view storage, zero allocs warm.
+    asm: BatchAssembler,
+    gpos: Vec<i32>, // gather_paged's reusable position scratch
     pos: Vec<i32>,
     len: usize,
     next_tok: Vec<u32>,
@@ -142,9 +146,6 @@ impl Harness {
             }
             r.set_len(INIT_LEN);
         }
-        let tables: Vec<Vec<Vec<PageId>>> = (0..LAYERS)
-            .map(|layer| kvs.iter().map(|r| r.page_table(layer).to_vec()).collect())
-            .collect();
         let per_layer = |rng: &mut Pcg, k: usize, mm: usize| -> Vec<Wt> {
             (0..LAYERS).map(|_| wt(rng, k, mm)).collect()
         };
@@ -169,7 +170,8 @@ impl Harness {
             freqs: kern::rope_freqs(D, ROPE_THETA),
             pool,
             kvs,
-            tables,
+            asm: BatchAssembler::new(&m),
+            gpos: Vec::with_capacity(B),
             pos: vec![INIT_LEN as i32; B],
             len: INIT_LEN,
             next_tok: vec![3; B],
@@ -225,10 +227,19 @@ impl Harness {
             let mut attn = Tensor::zeros([B, H]);
             let mut scores = Tensor::uninit([S_MAX]);
             {
+                // Per-step page-table gather through the real assembler —
+                // the view recycles its storage, so this is part of the
+                // zero-allocation contract. Dropped at block end so the
+                // next layer's gather can reclaim the buffer in place.
+                let view = {
+                    let refs: [&RequestKv; B] = [&self.kvs[0], &self.kvs[1]];
+                    self.asm.gather_paged(&self.pool, &refs, layer, B, &mut self.gpos)
+                };
+                debug_assert_eq!(self.gpos, self.pos);
                 let read = self.pool.read();
                 let src = kern::PagedKv {
                     read: &read,
-                    tables: self.tables[layer].as_slice(),
+                    tables: view.tables.as_slice(),
                     d: D,
                 };
                 bk.attn_decode_into(

@@ -6,7 +6,9 @@ use tarragon::coordinator::ert::Ert;
 use tarragon::coordinator::router::{self, ExpertGroups};
 use tarragon::coordinator::scaler;
 use tarragon::proto::ErtTable;
-use tarragon::kvcache::{BatchAssembler, KvPool, PageId, RequestKv};
+use tarragon::kvcache::{
+    page_hash_seed, page_hash_update, BatchAssembler, KvPool, PageId, RequestKv,
+};
 use tarragon::modelcfg::{Buckets, ModelSpec};
 use tarragon::proto::{CommitMeta, SegmentMsg};
 use tarragon::tensor::Tensor;
@@ -701,6 +703,277 @@ fn paged_short_requests_use_under_10pct_of_preallocation() {
     );
     // And it is exactly one page per (request, layer) here.
     assert_eq!(pool.pages_in_use(), n_reqs * m.layers);
+}
+
+// ---------------------------------------------------------------------------
+// Prefix sharing / copy-on-write invariants (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Deterministic prompt K/V for content class `c`: identical `c` means
+/// bitwise-identical rows, so full pages hash-match and share; distinct
+/// `c` (or distinct positions) never collide within `max_seq`.
+fn prompt_kv(m: &ModelSpec, c: usize, len: usize) -> (Tensor, Tensor) {
+    let seg = m.kv_heads * m.head_dim;
+    let f = |t: usize, j: usize, salt: usize| ((c * 131 + t * 17 + j * 3 + salt) % 97) as f32 * 0.125;
+    let k = Tensor::new(vec![len, seg], (0..len * seg).map(|i| f(i / seg, i % seg, 0)).collect());
+    let v = Tensor::new(vec![len, seg], (0..len * seg).map(|i| f(i / seg, i % seg, 1)).collect());
+    (k, v)
+}
+
+/// Under random admit / deep-clone / drop churn with prompts drawn from a
+/// few canonical contents, refcounts always balance: physical pages never
+/// exceed logical page references, and a full drain returns every page.
+#[test]
+fn prop_shared_pages_refcount_balances() {
+    check("shared refcount balance", 60, |rng, _| {
+        let m = rand_model(rng);
+        let pt = rng.range_usize(1, 9);
+        let pool = KvPool::with_page_tokens(&m, pt);
+        let mut live: Vec<RequestKv> = Vec::new();
+        for _ in 0..rng.range_usize(10, 50) {
+            let roll = rng.f64();
+            if live.is_empty() || roll < 0.55 {
+                let c = rng.index(3);
+                let len = rng.range_usize(1, m.max_seq + 1);
+                let (k, v) = prompt_kv(&m, c, len);
+                let mut kv = RequestKv::new(&m, &pool);
+                for layer in 0..m.layers {
+                    let out = kv.write_prompt_layer(layer, len, &k, &v);
+                    // shared + written partition the prompt exactly
+                    assert_eq!(out.shared.len() * pt + out.written.len(), len);
+                }
+                kv.set_len(len);
+                live.push(kv);
+            } else if roll < 0.75 {
+                // Deep copy: duplicates physical pages, shares nothing.
+                let src = rng.index(live.len());
+                if let Some(dup) = live[src].try_clone() {
+                    live.push(dup);
+                }
+            } else {
+                live.swap_remove(rng.index(live.len()));
+            }
+            let logical: usize = live.iter().map(|kv| kv.allocated_pages()).sum();
+            let physical = pool.pages_in_use();
+            assert!(physical <= logical, "physical {physical} > logical {logical}");
+            assert!(pool.pages_shared_now() <= physical);
+        }
+        live.clear();
+        assert_eq!(pool.pages_in_use(), 0, "sharing churn leaked pages");
+        assert_eq!(pool.pages_shared_now(), 0);
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}
+
+/// Copy-on-write isolation, bitwise: after two requests share a prefix, a
+/// write into the shared region privatizes exactly one page for the writer;
+/// the co-holder's bytes never change, and the writer diverges only at the
+/// written position.
+#[test]
+fn prop_cow_divergence_is_bitwise_isolated() {
+    check("cow diverge", 60, |rng, _| {
+        let m = rand_model(rng);
+        let pt = rng.range_usize(1, m.max_seq.min(8) + 1); // >= one full page
+        let seg = m.kv_heads * m.head_dim;
+        let pool = KvPool::with_page_tokens(&m, pt);
+        let len = rng.range_usize(pt, m.max_seq + 1);
+        let (k, v) = prompt_kv(&m, 0, len);
+        let mut a = RequestKv::new(&m, &pool);
+        let mut b = RequestKv::new(&m, &pool);
+        for layer in 0..m.layers {
+            a.write_prompt_layer(layer, len, &k, &v);
+            let out = b.write_prompt_layer(layer, len, &k, &v);
+            assert_eq!(out.shared.len(), len / pt, "every full page must hit");
+        }
+        a.set_len(len);
+        b.set_len(len);
+        assert_eq!(pool.prefix_hits(), (m.layers * (len / pt)) as u64);
+        // Physical footprint: A's pages plus only B's partial tail.
+        let tail = usize::from(len % pt != 0);
+        assert_eq!(pool.pages_in_use(), m.layers * (len.div_ceil(pt) + tail));
+        let snap: Vec<Vec<f32>> = (0..m.layers)
+            .flat_map(|l| (0..len).map(move |p| (l, p)))
+            .map(|(l, p)| a.read_segment(l, p))
+            .collect();
+        // B mutates one random position inside the shared prefix.
+        let physical_before = pool.pages_in_use();
+        let wl = rng.index(m.layers);
+        let wp = rng.range_usize(0, (len / pt) * pt);
+        b.write(wl, wp, &vec![-1.0; seg], &vec![-2.0; seg]);
+        assert_eq!(pool.cow_breaks(), 1, "exactly one page privatized");
+        assert_eq!(pool.pages_in_use(), physical_before + 1);
+        for l in 0..m.layers {
+            for p in 0..len {
+                assert_eq!(a.read_segment(l, p), snap[l * len + p], "CoW mutated the co-holder");
+                if (l, p) == (wl, wp) {
+                    let got = b.read_segment(l, p);
+                    assert_eq!(&got[..seg], &vec![-1.0; seg][..]);
+                    assert_eq!(&got[seg..], &vec![-2.0; seg][..]);
+                } else {
+                    // the privatized page was copied before the write, so
+                    // every other position still mirrors A bitwise
+                    assert_eq!(b.read_segment(l, p), a.read_segment(l, p));
+                }
+            }
+        }
+        drop(a);
+        drop(b);
+        assert_eq!(pool.pages_in_use(), 0, "CoW divergence leaked pages");
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}
+
+/// The restore path's sharing install (aw::install_restored): an adopting
+/// request re-derives page hashes from checkpoint segments, takes verified
+/// references on the sealed prefix, writes only the tail — and dropping
+/// sharer and sharee in either order returns every physical page.
+#[test]
+fn prop_shared_restore_returns_every_page_on_drop() {
+    check("shared restore drop", 60, |rng, _| {
+        let m = rand_model(rng);
+        let pt = rng.range_usize(1, 9);
+        let seg = m.kv_heads * m.head_dim;
+        let pool = KvPool::with_page_tokens(&m, pt);
+        let len = rng.range_usize(1, m.max_seq + 1);
+        let (k, v) = prompt_kv(&m, 1, len);
+        let mut src = RequestKv::new(&m, &pool);
+        for layer in 0..m.layers {
+            src.write_prompt_layer(layer, len, &k, &v);
+        }
+        src.set_len(len);
+        let src_pages = pool.pages_in_use();
+        let full = len / pt;
+        let mut dst = RequestKv::new(&m, &pool);
+        for layer in 0..m.layers {
+            for page in 0..full {
+                let mut h = page_hash_seed(layer);
+                for t in page * pt..(page + 1) * pt {
+                    h = page_hash_update(h, k.row(t));
+                    h = page_hash_update(h, v.row(t));
+                }
+                let ok = dst.try_share_page(layer, h, |raw| {
+                    (0..pt).all(|t| {
+                        let off = t * 2 * seg;
+                        raw[off..off + seg] == *k.row(page * pt + t)
+                            && raw[off + seg..off + 2 * seg] == *v.row(page * pt + t)
+                    })
+                });
+                assert!(ok, "sealed prefix page must be shareable on restore");
+            }
+            assert_eq!(dst.shared_prefix_pages(layer), full);
+            for pos in full * pt..len {
+                dst.write_segment(layer, pos, &src.read_segment(layer, pos));
+            }
+        }
+        dst.set_len(len);
+        // Shared install added only the partial tail physically.
+        assert_eq!(pool.pages_in_use(), src_pages + m.layers * usize::from(len % pt != 0));
+        for layer in 0..m.layers {
+            for pos in 0..len {
+                assert_eq!(dst.read_segment(layer, pos), src.read_segment(layer, pos));
+            }
+        }
+        if rng.f64() < 0.5 {
+            drop(src);
+            drop(dst);
+        } else {
+            drop(dst);
+            drop(src);
+        }
+        assert_eq!(pool.pages_in_use(), 0, "shared restore leaked pages");
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}
+
+/// `try_clone` at the page budget: succeeds iff a full deep copy fits;
+/// a refusal rolls back completely — no page leaked, and every page of
+/// the remaining headroom is still allocatable.
+#[test]
+fn prop_try_clone_rolls_back_without_leaking_at_budget() {
+    use tarragon::kvcache::PoolConfig;
+    check("try_clone budget rollback", 100, |rng, _| {
+        let m = rand_model(rng);
+        let pt = rng.range_usize(1, 9);
+        let seg = m.kv_heads * m.head_dim;
+        let len = rng.range_usize(1, m.max_seq + 1);
+        let pages = m.layers * len.div_ceil(pt);
+        let budget = pages + rng.range_usize(0, pages + 3);
+        let pool = KvPool::bounded(PoolConfig { page_tokens: pt, seg }, budget);
+        let mut kv = RequestKv::new(&m, &pool);
+        for pos in 0..len {
+            for layer in 0..m.layers {
+                kv.write(layer, pos, &vec![pos as f32; seg], &vec![layer as f32; seg]);
+            }
+        }
+        kv.set_len(len);
+        assert_eq!(pool.pages_in_use(), pages);
+        match kv.try_clone() {
+            Some(dup) => {
+                assert!(budget >= 2 * pages, "clone succeeded without headroom");
+                assert_eq!(pool.pages_in_use(), 2 * pages);
+                for pos in 0..len {
+                    for layer in 0..m.layers {
+                        assert_eq!(dup.read_segment(layer, pos), kv.read_segment(layer, pos));
+                    }
+                }
+                drop(dup);
+                assert_eq!(pool.pages_in_use(), pages);
+            }
+            None => {
+                assert!(budget < 2 * pages, "clone refused despite headroom");
+                assert_eq!(pool.pages_in_use(), pages, "failed clone leaked pages");
+                // the rollback returned every page: headroom is exactly intact
+                let headroom: Vec<PageId> =
+                    (0..budget - pages).map(|_| pool.try_alloc().unwrap()).collect();
+                assert!(pool.try_alloc().is_none());
+                for id in headroom {
+                    pool.free(id);
+                }
+            }
+        }
+        drop(kv);
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.total_allocs(), pool.total_frees());
+    });
+}
+
+/// `gather_paged` over any batch size 0..=bucket: never panics (a bucket
+/// drained by a preemption race gathers an empty view), `pos` pads to the
+/// bucket, and each live row mirrors that request's page table.
+#[test]
+fn prop_paged_gather_handles_any_batch_size() {
+    check("paged gather batch sizes", 100, |rng, _| {
+        let m = rand_model(rng);
+        let pool = KvPool::with_page_tokens(&m, rng.range_usize(1, 9));
+        let layer = m.layers - 1;
+        let n = rng.range_usize(0, 5);
+        let bucket = n.max(1) + rng.range_usize(0, 3);
+        let mut kvs: Vec<RequestKv> = Vec::new();
+        for _ in 0..n {
+            let mut kv = RequestKv::new(&m, &pool);
+            let len = rng.range_usize(0, m.max_seq + 1);
+            for pos in 0..len {
+                let seg = m.kv_heads * m.head_dim;
+                kv.write(layer, pos, &vec![1.0; seg], &vec![2.0; seg]);
+            }
+            kv.set_len(len);
+            kvs.push(kv);
+        }
+        let mut asm = BatchAssembler::new(&m);
+        let refs: Vec<&RequestKv> = kvs.iter().collect();
+        let mut pos = Vec::new();
+        let view = asm.gather_paged(&pool, &refs, layer, bucket, &mut pos);
+        assert_eq!(pos.len(), bucket);
+        assert_eq!(view.tables.len(), n, "one table row per live request");
+        for i in 0..bucket {
+            if i < n {
+                assert_eq!(pos[i] as usize, kvs[i].len());
+                assert_eq!(view.tables[i].as_slice(), kvs[i].page_table(layer));
+            } else {
+                assert_eq!(pos[i], 0, "padding rows must read as empty");
+            }
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------

@@ -114,6 +114,42 @@ fn aw_kill_after_commit_adopts_restores_and_resumes() {
 }
 
 #[test]
+fn aw_kill_with_warm_shared_prefix_adopts_and_streams_identically() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Requests 0 and 2 land on aw0 (gateway round-robin) with an
+    // identical 16-token prompt — exactly one full KV page per layer
+    // (page_tokens = 16), so the later prefill takes verified refs on
+    // the sealed pages instead of rewriting them, and its checkpoint
+    // emits page references the store resolves from its content index.
+    // Killing aw0 then forces the adopter to rebuild both requests from
+    // the store, re-sealing and re-sharing the warm prefix; the streams
+    // must still be byte-identical to the failure-free run.
+    let prompt: Vec<u32> = (1..=16).collect();
+    let s = Scenario::new("aw-kill-shared-prefix", scenario_cfg(Duration::from_millis(1)))
+        .request(0, Duration::ZERO, prompt.clone(), 16)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 16)
+        .request(2, Duration::from_millis(10), prompt, 16)
+        .fault("at 70ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    for (id, toks) in &faulty.tokens {
+        assert_eq!(toks.len(), 16, "shared-prefix: req {id} truncated");
+    }
+    assert_eq!(faulty.tokens, clean.tokens, "warm shared prefix changed recovery streams");
+    assert!(
+        clean.report.sharing.prefix_hits > 0,
+        "identical one-page prompts on one AW must share"
+    );
+    assert!(
+        faulty.report.sharing.prefix_hits > 0,
+        "recovery must re-establish the shared prefix"
+    );
+    assert!(faulty.report.aw_failures >= 1);
+    assert_eq!(faulty.report.finished, 3);
+}
+
+#[test]
 fn link_sever_self_heals_locally_without_global_recovery() {
     let (manifest, weights, _) = synthetic::ensure();
     let s = two_request_scenario("sever", Duration::from_millis(1))
