@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tarragon::config::Config;
+use tarragon::metrics::hist::LogHistogram;
 use tarragon::modelcfg::{weights::Weights, Manifest};
 use tarragon::runtime::{ArgValue, Device, DeviceRole};
 use tarragon::tensor::Tensor;
@@ -20,7 +21,6 @@ use tarragon::testing::bench::bench;
 use tarragon::testing::scenario::Scenario;
 use tarragon::testing::synthetic;
 use tarragon::util::json::{arr, num, obj, s, Json};
-use tarragon::util::stats;
 use tarragon::workload;
 
 fn main() {
@@ -145,15 +145,19 @@ fn load_sweep(smoke: bool) {
         assert_eq!(out.report.finished, n, "load sweep dropped requests at x{mult}");
 
         let a = &out.report.analysis;
+        // Log-bucketed tails: O(buckets) memory however long the sweep
+        // runs, with <= 5% relative quantile error (metrics::hist).
+        let ttft = LogHistogram::of(&a.ttft_ms);
+        let tbt = LogHistogram::of(&a.tbt_ms);
         let p = SweepPoint {
             offered_rps: 1000.0 / (gap.as_secs_f64() * 1000.0),
             completed: out.completed,
             finished: out.report.finished,
             throughput_tps: a.throughput_tps,
-            ttft_p50_ms: stats::median(&a.ttft_ms),
-            ttft_p99_ms: stats::percentile(&a.ttft_ms, 99.0),
-            tbt_p50_ms: stats::median(&a.tbt_ms),
-            tbt_p99_ms: stats::percentile(&a.tbt_ms, 99.0),
+            ttft_p50_ms: ttft.percentile(50.0),
+            ttft_p99_ms: ttft.percentile(99.0),
+            tbt_p50_ms: tbt.percentile(50.0),
+            tbt_p99_ms: tbt.percentile(99.0),
             preemptions: out.report.preemptions,
             preemption_rate: out.report.preemptions as f64 / out.report.finished.max(1) as f64,
             wall_ms: wall.as_secs_f64() * 1e3,

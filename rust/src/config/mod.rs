@@ -350,6 +350,27 @@ impl Default for KernelsConfig {
     }
 }
 
+/// Span tracing (DESIGN.md §14). Off by default: with `enabled = false`
+/// no worker holds a trace handle, the hot paths make no clock reads,
+/// and runs are bitwise-identical to a trace-free build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Record spans into per-worker ring buffers.
+    pub enabled: bool,
+    /// Spans retained per worker ring (preallocated at registration;
+    /// overwrite-oldest on overflow).
+    pub ring_capacity: usize,
+    /// Initial reservation of the cluster event log; past it, the log
+    /// grows in fixed chunks (applies whether or not tracing is on).
+    pub event_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, ring_capacity: 4096, event_capacity: 4096 }
+    }
+}
+
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub cluster: ClusterConfig,
@@ -359,6 +380,7 @@ pub struct Config {
     pub sched: SchedConfig,
     pub scaler: ScalerConfig,
     pub kernels: KernelsConfig,
+    pub trace: TraceConfig,
 }
 
 impl Config {
@@ -470,6 +492,11 @@ impl Config {
         sl.cooldown = get_ms("scaler.cooldown_ms", sl.cooldown)?;
         sl.retire_linger = get_ms("scaler.retire_linger_ms", sl.retire_linger)?;
 
+        let tr = &mut self.trace;
+        tr.enabled = get_bool("trace.enabled", tr.enabled)?;
+        tr.ring_capacity = get_usize("trace.ring_capacity", tr.ring_capacity)?;
+        tr.event_capacity = get_usize("trace.event_capacity", tr.event_capacity)?;
+
         if let Some(v) = m.get("kernels.backend") {
             let s = v.as_str().ok_or_else(|| bad("kernels.backend"))?;
             self.kernels.backend = kern::BackendKind::parse(s)
@@ -559,6 +586,12 @@ impl Config {
         }
         if self.transport.bandwidth_bps <= 0.0 {
             return Err(ConfigError::Invalid("bandwidth must be > 0".into()));
+        }
+        if self.trace.ring_capacity == 0 {
+            return Err(ConfigError::Invalid("trace.ring_capacity must be > 0".into()));
+        }
+        if self.trace.event_capacity == 0 {
+            return Err(ConfigError::Invalid("trace.event_capacity must be > 0".into()));
         }
         Ok(())
     }
@@ -724,6 +757,29 @@ hotspot_expert = 3
         assert_eq!(Config::default().kernels.backend, kern::default_kind());
         assert!(Config::from_toml_str("[kernels]\nbackend = \"gpu\"\n").is_err());
         assert!(Config::from_toml_str("[kernels]\nbackend = 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_trace_section() {
+        let cfg = Config::from_toml_str(
+            r#"
+[trace]
+enabled = true
+ring_capacity = 128
+event_capacity = 256
+"#,
+        )
+        .unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.ring_capacity, 128);
+        assert_eq!(cfg.trace.event_capacity, 256);
+        // Default: disabled, with non-zero capacities.
+        let d = Config::default();
+        assert!(!d.trace.enabled);
+        assert!(d.trace.ring_capacity > 0 && d.trace.event_capacity > 0);
+        assert!(Config::from_toml_str("[trace]\nring_capacity = 0\n").is_err());
+        assert!(Config::from_toml_str("[trace]\nevent_capacity = 0\n").is_err());
+        assert!(Config::from_toml_str("[trace]\nenabled = 3\n").is_err());
     }
 
     #[test]

@@ -30,6 +30,8 @@ use crate::runtime::{ArgValue, Device, DeviceRole};
 use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeHandle, NodeId, Plane, Qp};
 use crate::checkpoint::CkptStreamer;
+use crate::metrics::trace::{SpanKind, TraceHandle};
+use crate::metrics::{EventKind, EventLog};
 use crate::util::clock::{self, Clock};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -94,6 +96,12 @@ pub struct AwParams {
     /// arena instead of re-growing it.
     pub pool: Arc<KvPool>,
     pub stop: Arc<AtomicBool>,
+    /// Cluster event log — failure-lifecycle events (`RestoreStarted`,
+    /// `Restored`) are recorded unconditionally, like every other event.
+    pub events: Arc<EventLog>,
+    /// Per-worker span recorder; `None` unless `[trace]` is enabled, so
+    /// the hot paths take no clock reads when tracing is off.
+    pub trace: Option<TraceHandle>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -155,6 +163,11 @@ pub struct AwWorker {
     hotspot: Option<usize>,
     /// Last load-beacon post (virtual/wall clock reading).
     last_status_at: Duration,
+    events: Arc<EventLog>,
+    trace: Option<TraceHandle>,
+    /// Restore pulls in flight: request -> pull start (tracing only; the
+    /// `RestorePull` span closes when the store's `Restore` data lands).
+    pull_started: HashMap<u64, Duration>,
     pub steps: u64,
     /// Requests preempted by this worker (pressure shedding + drains).
     pub preemptions: u64,
@@ -197,7 +210,14 @@ impl AwWorker {
             p.cfg.kernels.backend,
         )
         .map_err(|e| e.to_string())?;
-        let refe = Refe::new(p.idx, p.ert, p.cfg.resilience.clone(), p.fabric.clone());
+        let refe = Refe::new(
+            p.idx,
+            p.ert,
+            p.cfg.resilience.clone(),
+            p.fabric.clone(),
+            p.events.clone(),
+            p.trace.clone(),
+        );
         let store_qp = p.fabric.qp(node, NodeId::Store, Plane::Data).map_err(|e| e.to_string())?;
         let gw_qp = p.fabric.qp(node, NodeId::Gateway, Plane::Control).map_err(|e| e.to_string())?;
         let orch_qp =
@@ -233,6 +253,9 @@ impl AwWorker {
             draining: false,
             hotspot,
             last_status_at: Duration::ZERO,
+            events: p.events,
+            trace: p.trace,
+            pull_started: HashMap::new(),
             steps: 0,
             preemptions: 0,
         })
@@ -306,7 +329,13 @@ impl AwWorker {
     }
 
     fn flush_ckpt(&mut self) {
-        self.streamer.flush(&self.store_qp, self.handle.egress());
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
+        let posted = self.streamer.flush(&self.store_qp, self.handle.egress());
+        // Only flushes that moved data produce spans — the opportunistic
+        // no-op calls on every loop iteration would drown the trace.
+        if let (true, Some(tr), Some(t0)) = (posted > 0, &self.trace, span_t0) {
+            tr.record(SpanKind::CkptEmit, 0, posted as u64, t0);
+        }
     }
 
     // ---------------------------------------------------------------------
@@ -537,10 +566,14 @@ impl AwWorker {
                 self.prefill_q.push_back(id);
             }
             ClusterMsg::ErtUpdate { version, table } => {
-                self.refe.ert.apply(version, table);
+                self.refe.apply_ert(version, table);
             }
             ClusterMsg::AdoptRequest { meta } => {
                 // §6.2: pull the request's durable state from the store.
+                self.events.record(EventKind::RestoreStarted, meta.request, 0, self.idx);
+                if let Some(tr) = &self.trace {
+                    self.pull_started.insert(meta.request, tr.start());
+                }
                 let _ = self.store_qp.post(
                     ClusterMsg::RestorePull { request: meta.request },
                     HDR_BYTES,
@@ -562,6 +595,17 @@ impl AwWorker {
     fn install_restored(&mut self, data: crate::proto::RestoreData) {
         let m = self.manifest.model.clone();
         let meta = data.meta;
+        // Close the RestorePull span (store round-trip) and open the
+        // install span, regardless of whether the install succeeds.
+        let install_t0 = if let Some(tr) = &self.trace {
+            let t0 = tr.start();
+            if let Some(pull_t0) = self.pull_started.remove(&meta.request) {
+                tr.record_span(SpanKind::RestorePull, meta.request, 0, pull_t0, t0);
+            }
+            Some(t0)
+        } else {
+            None
+        };
         if self.reqs.contains_key(&meta.request) {
             return; // duplicate restore (idempotent)
         }
@@ -659,6 +703,10 @@ impl AwWorker {
             },
         );
         self.active.push_back(id);
+        self.events.record(EventKind::Restored, id, 0, self.idx);
+        if let (Some(tr), Some(t0)) = (&self.trace, install_t0) {
+            tr.record(SpanKind::RestoreInstall, id, committed as u64, t0);
+        }
     }
 
     // ---------------------------------------------------------------------
@@ -699,6 +747,7 @@ impl AwWorker {
     }
 
     fn prefill(&mut self, id: u64) -> Result<(), StepError> {
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         let m = self.manifest.model.clone();
         let req = match self.reqs.get(&id) {
             Some(r) => r,
@@ -803,6 +852,9 @@ impl AwWorker {
         }
         self.emit_token(id, 0, token);
         self.commit(id);
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            tr.record(SpanKind::Prefill, id, p_len as u64, t0);
+        }
         let req = &self.reqs[&id];
         if req.generated >= req.meta.max_new_tokens {
             self.finish(id);
@@ -852,6 +904,10 @@ impl AwWorker {
     }
 
     fn decode_step(&mut self) -> Result<(), StepError> {
+        // Span bookkeeping is two clock reads and a write into a
+        // preallocated ring — the zero-allocation decode contract
+        // (`tests/alloc.rs`) holds with tracing on.
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         self.reserve_decode_headroom();
         self.steps += 1;
         let m = self.manifest.model.clone();
@@ -970,6 +1026,11 @@ impl AwWorker {
                 self.finish(*id);
             }
         }
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            // One span per batched step; `request` is the batch head and
+            // `aux` carries the batch size.
+            tr.record(SpanKind::DecodeStep, batch[0], b as u64, t0);
+        }
         Ok(())
     }
 
@@ -1019,15 +1080,20 @@ impl AwWorker {
     }
 
     fn commit(&mut self, id: u64) {
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         let req = &self.reqs[&id];
+        let committed_pos = req.kv.len() as u32;
         self.streamer.push_commit(CommitMeta {
             request: id,
-            committed_pos: req.kv.len() as u32,
+            committed_pos,
             last_token: req.next_input,
             generated: req.generated,
             max_new_tokens: req.meta.max_new_tokens,
             prompt_len: req.prompt_len,
         });
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            tr.record(SpanKind::CkptCommit, id, committed_pos as u64, t0);
+        }
     }
 
     fn finish(&mut self, id: u64) {

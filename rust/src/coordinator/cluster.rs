@@ -15,6 +15,7 @@ use super::sched::AdmissionLimits;
 use crate::checkpoint::store::CkptStore;
 use crate::config::Config;
 use crate::kvcache::{KvPool, PoolConfig};
+use crate::metrics::trace::{Tracer, EW_TID_OFFSET, GATEWAY_TID};
 use crate::metrics::{EventLog, RunAnalysis, SharingStats};
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
@@ -36,6 +37,12 @@ pub struct Spawner {
     pub weights: Weights,
     pub cfg: Config,
     pub stop: Arc<AtomicBool>,
+    /// Cluster event log: workers record failure-lifecycle events here
+    /// (the gateway records the request lifecycle through its own Arc).
+    pub events: Arc<EventLog>,
+    /// Span tracer, present only with `[trace] enabled = true`; workers
+    /// register a preallocated ring at spawn (DESIGN.md §14).
+    pub tracer: Option<Arc<Tracer>>,
     registry: Mutex<HashMap<NodeId, WorkerCtl>>,
     /// Per-AW-slot KV page arenas. The arena belongs to the host slot,
     /// not the worker thread: a respawned AW (coarse restart,
@@ -77,6 +84,8 @@ impl Spawner {
             fabric: self.fabric.clone(),
             pool,
             stop: self.stop.clone(),
+            events: self.events.clone(),
+            trace: self.tracer.as_ref().map(|t| t.handle(idx)),
         })?;
         self.registry
             .lock()
@@ -105,6 +114,7 @@ impl Spawner {
             weights: self.weights.clone(),
             fabric: self.fabric.clone(),
             stop: self.stop.clone(),
+            trace: self.tracer.as_ref().map(|t| t.handle(EW_TID_OFFSET + idx)),
         })?;
         self.registry
             .lock()
@@ -205,6 +215,8 @@ pub struct Cluster {
     pub spawner: Arc<Spawner>,
     pub state: Arc<OrchState>,
     pub events: Arc<EventLog>,
+    /// Present only with `[trace] enabled = true`.
+    pub tracer: Option<Arc<Tracer>>,
     pub gw: Arc<GatewayShared>,
     pub store: Arc<Mutex<CkptStore>>,
     clock: Clock,
@@ -256,12 +268,24 @@ impl Cluster {
             Fabric::with_clock(cfg.transport.clone(), clock.clone());
         let stop = Arc::new(AtomicBool::new(false));
         let gw_shared = Arc::new(GatewayShared::default());
+        // Event log and span tracer exist before any worker spawns, so
+        // every role holds its recording handle from birth. The epoch is
+        // rebased to the schedule start below — bring-up records nothing,
+        // so run timelines are unchanged by the early creation.
+        let events = Arc::new(EventLog::with_clock_capacity(
+            clock.clone(),
+            cfg.trace.event_capacity,
+        ));
+        let tracer =
+            cfg.trace.enabled.then(|| Tracer::new(clock.clone(), cfg.trace.ring_capacity));
         let spawner = Arc::new(Spawner {
             fabric: fabric.clone(),
             manifest: manifest.clone(),
             weights: weights.clone(),
             cfg: cfg.clone(),
             stop: stop.clone(),
+            events: events.clone(),
+            tracer: tracer.clone(),
             registry: Mutex::new(HashMap::new()),
             kv_pools: Mutex::new(HashMap::new()),
         });
@@ -389,7 +413,10 @@ impl Cluster {
         // The event epoch starts here: t=0 is the schedule start (worker
         // bring-up above is excluded from run timelines; T_w is reported
         // separately via InitStats).
-        let events = Arc::new(EventLog::with_clock(clock.clone()));
+        events.rebase();
+        if let Some(t) = &tracer {
+            t.rebase();
+        }
         state.attach_events(events.clone());
         let pool_cfg = PoolConfig::from_model(&manifest.model);
         let limits = AdmissionLimits {
@@ -411,6 +438,7 @@ impl Cluster {
             initial_aws: initial_aws.clone(),
             fabric: fabric.clone(),
             events: events.clone(),
+            trace: tracer.as_ref().map(|t| t.handle(GATEWAY_TID)),
             shared: gw_shared.clone(),
             stop: stop.clone(),
             drain_timeout: opts.drain_timeout,
@@ -424,6 +452,7 @@ impl Cluster {
             spawner,
             state,
             events,
+            tracer,
             gw: gw_shared,
             store,
             clock,

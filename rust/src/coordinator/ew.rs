@@ -24,6 +24,7 @@
 //! cost the paper's shadows avoid.
 
 use crate::config::Config;
+use crate::metrics::trace::{SpanKind, TraceHandle};
 use crate::modelcfg::{weights::Weights, Buckets, Manifest};
 use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, ReturnMsg};
 use crate::runtime::{roles, ArgValue, Device, DeviceRole};
@@ -45,6 +46,8 @@ pub struct EwParams {
     pub weights: Weights,
     pub fabric: Arc<Fabric<ClusterMsg>>,
     pub stop: Arc<AtomicBool>,
+    /// Per-worker span recorder (`None` unless `[trace]` is enabled).
+    pub trace: Option<TraceHandle>,
 }
 
 struct AwInfo {
@@ -96,6 +99,7 @@ pub struct EwWorker {
     /// leaves the fabric once drained past the linger deadline.
     retired: Option<u64>,
     retire_deadline: Duration,
+    trace: Option<TraceHandle>,
     /// Counters for experiments.
     pub batches_executed: u64,
     pub partial_batches: u64,
@@ -173,6 +177,7 @@ impl EwWorker {
             last_load_post: Duration::ZERO,
             retired: None,
             retire_deadline: Duration::ZERO,
+            trace: p.trace,
             batches_executed: 0,
             partial_batches: 0,
             urgent_executions: 0,
@@ -353,6 +358,18 @@ impl EwWorker {
                     for aw in &missing {
                         if !self.probe_aw(*aw) {
                             self.mark_aw_dead(*aw);
+                            // The silence that triggered this probe is the
+                            // detection window for the dead AW.
+                            if let Some(tr) = &self.trace {
+                                let end = tr.start();
+                                tr.record_span(
+                                    SpanKind::DetectionWindow,
+                                    0,
+                                    *aw as u64,
+                                    end.saturating_sub(age),
+                                    end,
+                                );
+                            }
                         }
                     }
                     // Re-evaluate completeness with dead AWs omitted.
@@ -412,6 +429,7 @@ impl EwWorker {
     }
 
     fn execute_layer(&mut self, layer: u32, partial: bool) {
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         let buf = match self.buffers.remove(&layer) {
             Some(b) => b,
             None => return,
@@ -464,10 +482,14 @@ impl EwWorker {
             let qp = self.data_qp(aw);
             let _ = qp.post(ClusterMsg::Return(msg), bytes, TrafficClass::ExpertReturn);
         }
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            tr.record(SpanKind::ExpertBatch, 0, layer as u64, t0);
+        }
     }
 
     /// Execute one urgent (replayed) dispatch immediately for one AW.
     fn execute_for_aw(&mut self, aw: u32, d: DispatchMsg) {
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         let hidden = self.manifest.model.hidden;
         let mut entries = Vec::with_capacity(d.entries.len());
         for e in d.entries {
@@ -484,6 +506,9 @@ impl EwWorker {
         let bytes = msg.wire_bytes();
         let qp = self.data_qp(aw);
         let _ = qp.post(ClusterMsg::Return(msg), bytes, TrafficClass::ExpertReturn);
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            tr.record(SpanKind::ExpertBatch, 0, d.layer as u64, t0);
+        }
     }
 
     fn expert_name(&mut self, bucket: usize) -> Arc<str> {

@@ -16,6 +16,7 @@
 
 use super::sched::{AdmissionLimits, AwLoad, LoadMap, Router, Watermarks};
 use crate::config::SchedConfig;
+use crate::metrics::trace::{SpanKind, TraceHandle};
 use crate::metrics::{EventKind, EventLog};
 use crate::proto::{ClusterMsg, RequestMeta};
 use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
@@ -33,6 +34,9 @@ pub struct GatewayParams {
     pub initial_aws: Vec<u32>,
     pub fabric: Arc<Fabric<ClusterMsg>>,
     pub events: Arc<EventLog>,
+    /// Span recording handle; `None` when tracing is disabled (the hot
+    /// path then makes no clock reads for spans).
+    pub trace: Option<TraceHandle>,
     pub shared: Arc<GatewayShared>,
     pub stop: Arc<AtomicBool>,
     /// Give up this long after the last scheduled arrival even if some
@@ -114,6 +118,9 @@ struct GwReq {
     queued: bool,
     /// The next dispatch is a resubmission (record Migrated, not Admitted).
     resubmit: bool,
+    /// When the request entered the admission queue — set only while
+    /// tracing, closed into a GatewayQueue span at dispatch.
+    queued_since: Option<Duration>,
 }
 
 pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
@@ -125,6 +132,7 @@ pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
 struct Gw {
     fabric: Arc<Fabric<ClusterMsg>>,
     events: Arc<EventLog>,
+    trace: Option<TraceHandle>,
     shared: Arc<GatewayShared>,
     qps: HashMap<u32, Qp<ClusterMsg>>,
     orch_qp: Option<Qp<ClusterMsg>>,
@@ -145,6 +153,7 @@ fn gateway_main(p: GatewayParams) {
     let mut gw = Gw {
         fabric: p.fabric.clone(),
         events: p.events.clone(),
+        trace: p.trace.clone(),
         shared: p.shared.clone(),
         qps: HashMap::new(),
         orch_qp: p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok(),
@@ -228,6 +237,7 @@ impl Gw {
                 rejected: rejected.is_some(),
                 queued: false,
                 resubmit: false,
+                queued_since: None,
             },
         );
         match rejected {
@@ -264,6 +274,9 @@ impl Gw {
         }
         r.queued = true;
         r.resubmit = r.resubmit || resubmit;
+        if let Some(tr) = &self.trace {
+            r.queued_since = Some(tr.start());
+        }
         self.admit_q.push_back(id);
         self.shared.inner.lock().unwrap().queued = self.admit_q.len();
     }
@@ -290,13 +303,16 @@ impl Gw {
 
     /// Send a request to an AW and account for it.
     fn dispatch(&mut self, id: u64, aw: u32) {
-        let (meta, resubmit) = {
+        let (meta, resubmit, queued_since) = {
             let r = self.reqs.get_mut(&id).expect("dispatch of unknown request");
             r.queued = false;
             let resubmit = r.resubmit;
             r.resubmit = false;
-            (r.meta.clone(), resubmit)
+            (r.meta.clone(), resubmit, r.queued_since.take())
         };
+        if let (Some(tr), Some(t0)) = (&self.trace, queued_since) {
+            tr.record(SpanKind::GatewayQueue, id, aw as u64, t0);
+        }
         let fabric = self.fabric.clone();
         let qp = self.qps.entry(aw).or_insert_with(|| {
             fabric.qp(NodeId::Gateway, NodeId::Aw(aw), Plane::Control).expect("gw qp")

@@ -190,8 +190,15 @@ impl OrchState {
     }
 
     fn record(&self, kind: EventKind, request: u64, worker: u32) {
+        self.record_tagged(kind, request, 0, worker);
+    }
+
+    /// Record with an explicit `token_index` tag — the failure-lifecycle
+    /// events overload that field as a class discriminator (e.g.
+    /// `Detected` uses 0 = AW, 1 = EW).
+    fn record_tagged(&self, kind: EventKind, request: u64, token_index: u64, worker: u32) {
         if let Some(ev) = self.events.lock().unwrap().as_ref() {
-            ev.record(kind, request, 0, worker);
+            ev.record(kind, request, token_index, worker);
         }
     }
 
@@ -776,8 +783,16 @@ impl Orch {
         }
         self.state.mark_handled(suspect);
         match suspect {
-            NodeId::Ew(i) => self.recover_ew(i),
-            NodeId::Aw(i) => self.recover_aw(i),
+            NodeId::Ew(i) => {
+                // token_index 1 = EW failure class (RecoveryReport reads it).
+                self.state.record_tagged(EventKind::Detected, 0, 1, i);
+                self.recover_ew(i);
+            }
+            NodeId::Aw(i) => {
+                // token_index 0 = AW failure class.
+                self.state.record_tagged(EventKind::Detected, 0, 0, i);
+                self.recover_aw(i);
+            }
             _ => {}
         }
     }
@@ -902,6 +917,7 @@ impl Orch {
             self.adopt_rr += 1;
             let req = meta.request;
             self.bound.insert(req, target);
+            self.state.record(EventKind::Adopted, req, target);
             self.post(NodeId::Aw(target), ClusterMsg::AdoptRequest { meta });
             self.post(NodeId::Gateway, ClusterMsg::Rebind { request: req, new_aw: target });
         }

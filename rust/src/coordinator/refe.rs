@@ -15,7 +15,9 @@
 use super::ert::Ert;
 use super::router::ExpertGroups;
 use crate::config::ResilienceConfig;
-use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, HDR_BYTES};
+use crate::metrics::trace::{SpanKind, TraceHandle};
+use crate::metrics::{EventKind, EventLog};
+use crate::proto::{ClusterMsg, DispatchEntry, DispatchMsg, ErtTable, HDR_BYTES};
 use crate::tensor::{ops, Tensor};
 use crate::transport::{link::TrafficClass, Envelope, Fabric, Inbox, NodeId, Plane, Qp, QpError};
 use crate::util::clock::Clock;
@@ -89,6 +91,10 @@ pub struct Refe {
     orch_qp: Option<Qp<ClusterMsg>>,
     round: u64,
     io: IoScratch,
+    /// Cluster event log (failure-lifecycle events, unconditional).
+    events: Arc<EventLog>,
+    /// Owning AW's span recorder (`None` unless `[trace]` is enabled).
+    trace: Option<TraceHandle>,
     // Self-healing counters (§7 ablations / Fig. 9 analysis).
     pub ew_failovers: u64,
     pub rows_replayed: u64,
@@ -102,6 +108,8 @@ impl Refe {
         ert: Ert,
         resilience: ResilienceConfig,
         fabric: Arc<Fabric<ClusterMsg>>,
+        events: Arc<EventLog>,
+        trace: Option<TraceHandle>,
     ) -> Refe {
         let clock = fabric.clock().clone();
         Refe {
@@ -116,6 +124,8 @@ impl Refe {
             orch_qp: None,
             round: 0,
             io: IoScratch::default(),
+            events,
+            trace,
             ew_failovers: 0,
             rows_replayed: 0,
             probes_sent: 0,
@@ -141,9 +151,13 @@ impl Refe {
     ) -> Result<(), RefeError> {
         // Move the reusable gather state out so `&mut self` methods stay
         // callable while it is borrowed; put it back whatever happens.
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
         let mut io = std::mem::take(&mut self.io);
         let result = self.expert_io_inner(layer, g, groups, h, inbox, deferred, &mut io);
         self.io = io;
+        if let (Some(tr), Some(t0)) = (&self.trace, span_t0) {
+            tr.record(SpanKind::DispatchRound, 0, layer as u64, t0);
+        }
         result
     }
 
@@ -273,7 +287,7 @@ impl Refe {
                     ClusterMsg::ErtUpdate { version, table } => {
                         // Applied inside the gather so parked replays (and
                         // retirement reroutes) cannot wait on the AW loop.
-                        if self.ert.apply(version, table) {
+                        if self.apply_ert(version, table) {
                             let v = self.ert.version();
                             let mut i = 0;
                             while i < parked.len() {
@@ -354,6 +368,18 @@ impl Refe {
                     }
                     any_dead = true;
                     self.on_ew_death(ew);
+                    // The detection window ran from the last gather
+                    // progress to the probe verdict just rendered.
+                    if let Some(tr) = &self.trace {
+                        let end = tr.start();
+                        tr.record_span(
+                            SpanKind::DetectionWindow,
+                            0,
+                            ew as u64,
+                            end.saturating_sub(waited),
+                            end,
+                        );
+                    }
                     let mut pending = take_u32(u32_pool);
                     if let Some(slots) = outstanding.remove(&ew) {
                         pending.extend(slots.iter().copied().filter(|&s| !done[s as usize]));
@@ -371,6 +397,9 @@ impl Refe {
                     );
                     give_u32(u32_pool, pending);
                     replayed?;
+                    // Rows are back on the wire toward live candidates:
+                    // the reroute for this EW's loss is complete.
+                    self.events.record(EventKind::Rerouted, ew as u64, 0, self.aw);
                 }
                 if !any_dead {
                     // All owers are alive; reset the window so we don't
@@ -479,9 +508,25 @@ impl Refe {
         false
     }
 
+    /// Apply an ERT update, recording an `ErtRemap` span when the table
+    /// actually changed. Shared by the AW admin path and the in-gather
+    /// update path.
+    pub fn apply_ert(&mut self, version: u64, table: ErtTable) -> bool {
+        let span_t0 = self.trace.as_ref().map(|t| t.start());
+        let applied = self.ert.apply(version, table);
+        if let (true, Some(tr), Some(t0)) = (applied, &self.trace, span_t0) {
+            tr.record(SpanKind::ErtRemap, 0, version, t0);
+        }
+        applied
+    }
+
     fn on_ew_death(&mut self, ew: u32) {
         self.ew_failovers += 1;
         self.ert.mark_dead(ew);
+        // token_index 1 = EW failure class (RecoveryReport reads it). The
+        // orchestrator records its own `Detected` on confirmation; the
+        // report's merge window folds the two into one incident.
+        self.events.record(EventKind::Detected, 0, 1, ew);
         let node = self.node;
         if let Some(qp) = self.orch() {
             let _ = qp.post(

@@ -118,6 +118,13 @@ impl RunAnalysis {
                 EventKind::Rejected => rejections += 1,
                 // Cluster reconfiguration markers, not request lifecycle.
                 EventKind::ScaleOut | EventKind::ScaleIn | EventKind::ShadowPromoted => {}
+                // Failure-lifecycle markers: consumed by RecoveryReport,
+                // not by the base latency/throughput metrics.
+                EventKind::Detected
+                | EventKind::Rerouted
+                | EventKind::Adopted
+                | EventKind::RestoreStarted
+                | EventKind::Restored => {}
             }
         }
 
@@ -158,6 +165,263 @@ impl RunAnalysis {
 
     pub fn tbt(&self) -> LatencySummary {
         LatencySummary::of(&self.tbt_ms)
+    }
+}
+
+/// Which role the failed node played in a recovery incident.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureClass {
+    Aw,
+    Ew,
+}
+
+impl FailureClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureClass::Aw => "aw",
+            FailureClass::Ew => "ew",
+        }
+    }
+}
+
+/// One victim request's stall, decomposed into recovery phases
+/// (the in-repo analog of the paper's Fig. 9 anatomy). All phases are
+/// clamped non-negative; a phase the recovery path did not exercise
+/// (e.g. restore for a resubmit-from-prompt) is 0.
+#[derive(Debug, Clone)]
+pub struct VictimStall {
+    pub request: u64,
+    /// Last progress (token, or submission) → death confirmed.
+    pub detect_s: f64,
+    /// Death confirmed → first reroute action (replay / adopt / resubmit).
+    pub reroute_s: f64,
+    /// Checkpoint pull requested → checkpoint installed.
+    pub restore_s: f64,
+    /// Last recovery action → first post-recovery token.
+    pub recompute_s: f64,
+    /// Last pre-fault progress → first post-fault token (the visible
+    /// per-request stall; `detect + reroute + restore` when no token
+    /// follows).
+    pub total_stall_s: f64,
+}
+
+/// One confirmed worker death and the per-request stalls it induced.
+#[derive(Debug, Clone)]
+pub struct Incident {
+    pub class: FailureClass,
+    pub worker: u32,
+    /// Seconds since the log epoch at which the death was confirmed
+    /// (earliest `Detected` event for this worker).
+    pub t_detect_s: f64,
+    pub victims: Vec<VictimStall>,
+}
+
+/// Stall attribution for every fault in a run, computed purely from the
+/// failure-lifecycle events in the log (DESIGN.md §14).
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    pub incidents: Vec<Incident>,
+}
+
+/// Duplicate `Detected` events for the same (class, worker) inside this
+/// window collapse into one incident: the REFE-local detection and the
+/// orchestrator's confirmation of the same death both record.
+const DETECT_MERGE_WINDOW_S: f64 = 0.2;
+
+impl RecoveryReport {
+    pub fn from_log(log: &EventLog) -> RecoveryReport {
+        Self::from_events(&log.snapshot())
+    }
+
+    pub fn from_events(events: &[Event]) -> RecoveryReport {
+        let mut events: Vec<Event> = events.to_vec();
+        events.sort_by(|a, b| a.at.cmp(&b.at));
+        let secs = |at: std::time::Duration| at.as_secs_f64();
+
+        // Per-request progress history.
+        let mut submitted: HashMap<u64, f64> = HashMap::new();
+        let mut tokens: HashMap<u64, Vec<f64>> = HashMap::new();
+        for e in &events {
+            let t = secs(e.at);
+            match e.kind {
+                EventKind::Submitted => {
+                    submitted.entry(e.request).or_insert(t);
+                }
+                EventKind::Token => tokens.entry(e.request).or_default().push(t),
+                _ => {}
+            }
+        }
+
+        // Confirmed deaths, merged across duplicate detections.
+        let mut heads: Vec<(FailureClass, u32, f64)> = Vec::new();
+        for e in &events {
+            if e.kind != EventKind::Detected {
+                continue;
+            }
+            let class = if e.token_index == 1 { FailureClass::Ew } else { FailureClass::Aw };
+            let t = secs(e.at);
+            let dup = heads
+                .iter()
+                .any(|&(c, w, t0)| c == class && w == e.worker && t - t0 < DETECT_MERGE_WINDOW_S);
+            if !dup {
+                heads.push((class, e.worker, t));
+            }
+        }
+
+        let mut incidents = Vec::with_capacity(heads.len());
+        for (i, &(class, worker, t_detect)) in heads.iter().enumerate() {
+            // Attribution window: up to the next confirmed death of the
+            // same class (or the end of the run).
+            let window_end = heads
+                .iter()
+                .skip(i + 1)
+                .filter(|&&(c, _, _)| c == class)
+                .map(|&(_, _, t)| t)
+                .fold(f64::INFINITY, f64::min);
+            let in_window = |t: f64| t >= t_detect && t < window_end;
+
+            // Victim set.
+            let mut victims: Vec<u64> = Vec::new();
+            match class {
+                FailureClass::Aw => {
+                    for e in &events {
+                        let recovery = matches!(
+                            e.kind,
+                            EventKind::Adopted
+                                | EventKind::Migrated
+                                | EventKind::RestoreStarted
+                                | EventKind::Restored
+                        );
+                        if recovery && in_window(secs(e.at)) && !victims.contains(&e.request) {
+                            victims.push(e.request);
+                        }
+                    }
+                }
+                FailureClass::Ew => {
+                    // Every request whose token stream straddles the
+                    // death stalled on the reroute.
+                    for (&req, toks) in &tokens {
+                        if toks.iter().any(|&t| t < t_detect) && toks.iter().any(|&t| in_window(t))
+                        {
+                            victims.push(req);
+                        }
+                    }
+                    victims.sort_unstable();
+                }
+            }
+
+            let stalls = victims
+                .iter()
+                .map(|&req| {
+                    let toks = tokens.get(&req).map(Vec::as_slice).unwrap_or(&[]);
+                    let t_stall_start = toks
+                        .iter()
+                        .rev()
+                        .find(|&&t| t < t_detect)
+                        .copied()
+                        .or_else(|| submitted.get(&req).copied())
+                        .unwrap_or(t_detect);
+                    let detect_s = (t_detect - t_stall_start).max(0.0);
+
+                    // First reroute action for this victim.
+                    let t_reroute = events
+                        .iter()
+                        .filter(|e| match class {
+                            FailureClass::Aw => {
+                                matches!(e.kind, EventKind::Adopted | EventKind::Migrated)
+                                    && e.request == req
+                            }
+                            FailureClass::Ew => {
+                                e.kind == EventKind::Rerouted && e.request == worker as u64
+                            }
+                        })
+                        .map(|e| secs(e.at))
+                        .find(|&t| in_window(t));
+
+                    // Checkpoint restore, when the path exercised one.
+                    let t_pull = events
+                        .iter()
+                        .filter(|e| e.kind == EventKind::RestoreStarted && e.request == req)
+                        .map(|e| secs(e.at))
+                        .find(|&t| in_window(t));
+                    let t_installed = events
+                        .iter()
+                        .filter(|e| e.kind == EventKind::Restored && e.request == req)
+                        .map(|e| secs(e.at))
+                        .find(|&t| t_pull.is_some_and(|p| t >= p) && in_window(t));
+                    let restore_s = match (t_pull, t_installed) {
+                        (Some(p), Some(r)) => (r - p).max(0.0),
+                        _ => 0.0,
+                    };
+
+                    let reroute_s = t_reroute.map(|t| (t - t_detect).max(0.0)).unwrap_or(0.0);
+                    let t_rec_end = [Some(t_detect), t_reroute, t_pull, t_installed]
+                        .into_iter()
+                        .flatten()
+                        .fold(t_detect, f64::max);
+                    let t_next = toks.iter().copied().find(|&t| t >= t_detect);
+                    let recompute_s =
+                        t_next.map(|t| (t - t_rec_end).max(0.0)).unwrap_or(0.0);
+                    let total_stall_s = t_next
+                        .map(|t| (t - t_stall_start).max(0.0))
+                        .unwrap_or(detect_s + reroute_s + restore_s);
+                    VictimStall {
+                        request: req,
+                        detect_s,
+                        reroute_s,
+                        restore_s,
+                        recompute_s,
+                        total_stall_s,
+                    }
+                })
+                .collect();
+
+            incidents.push(Incident { class, worker, t_detect_s: t_detect, victims: stalls });
+        }
+        RecoveryReport { incidents }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.incidents.is_empty()
+    }
+
+    /// Worst per-victim detect phase over every incident (0 if none).
+    pub fn max_detect_s(&self) -> f64 {
+        self.victims().map(|v| v.detect_s).fold(0.0, f64::max)
+    }
+
+    /// Worst per-victim total stall over every incident (0 if none).
+    pub fn max_total_stall_s(&self) -> f64 {
+        self.victims().map(|v| v.total_stall_s).fold(0.0, f64::max)
+    }
+
+    pub fn victims(&self) -> impl Iterator<Item = &VictimStall> {
+        self.incidents.iter().flat_map(|i| i.victims.iter())
+    }
+
+    /// Compact one-incident-per-line rendering for assertion messages.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for i in &self.incidents {
+            let _ = writeln!(
+                out,
+                "incident {}{} detected at {:.4}s ({} victims)",
+                i.class.name(),
+                i.worker,
+                i.t_detect_s,
+                i.victims.len()
+            );
+            for v in &i.victims {
+                let _ = writeln!(
+                    out,
+                    "  req={} detect={:.4}s reroute={:.4}s restore={:.4}s \
+                     recompute={:.4}s total={:.4}s",
+                    v.request, v.detect_s, v.reroute_s, v.restore_s, v.recompute_s, v.total_stall_s
+                );
+            }
+        }
+        out
     }
 }
 
@@ -245,5 +509,132 @@ mod tests {
         let a = RunAnalysis::from_log(&log, 1.0);
         assert_eq!(a.total_tokens, 0);
         assert!(a.ttft().median_ms.is_nan());
+    }
+
+    #[test]
+    fn max_gap_after_edge_cases() {
+        let events = vec![
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(100, EventKind::Token, 1, 0),
+            ev(150, EventKind::Token, 1, 1),
+            ev(400, EventKind::Token, 1, 2),
+        ];
+        let a = RunAnalysis::from_events(&events, 1.0);
+        // t0 past the last token: no gap starts after it.
+        assert_eq!(a.max_gap_after(0.5), (0.0, 0.0));
+        // t0 exactly on a token time: the gap starting there counts.
+        let (g, t) = a.max_gap_after(0.15);
+        assert!((g - 0.25).abs() < 1e-9 && (t - 0.15).abs() < 1e-9);
+        // Single-token run: windows(2) is empty, no gap.
+        let one = vec![ev(0, EventKind::Submitted, 1, 0), ev(10, EventKind::Token, 1, 0)];
+        let a1 = RunAnalysis::from_events(&one, 1.0);
+        assert_eq!(a1.max_gap_after(0.0), (0.0, 0.0));
+        // Empty run.
+        let a0 = RunAnalysis::from_events(&[], 1.0);
+        assert_eq!(a0.max_gap_after(0.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn from_events_accepts_every_event_kind() {
+        let events: Vec<Event> =
+            EventKind::ALL.iter().enumerate().map(|(i, &k)| ev(i as u64, k, 1, 0)).collect();
+        let a = RunAnalysis::from_events(&events, 1.0);
+        assert_eq!(a.total_tokens, 1);
+        // And the recovery decomposition tolerates the same stew.
+        let _ = RecoveryReport::from_events(&events);
+    }
+
+    #[test]
+    fn recovery_report_decomposes_an_aw_adoption() {
+        // Hand-built lifecycle: tokens flow, AW 0 dies at t=100ms, death
+        // confirmed at 130ms, adopted at 150ms, restore 160→200ms, first
+        // post-fault token at 240ms.
+        let mut events = vec![
+            ev(0, EventKind::Submitted, 7, 0),
+            ev(50, EventKind::Token, 7, 0),
+            ev(100, EventKind::Token, 7, 1),
+        ];
+        events.push(Event {
+            at: Duration::from_millis(130),
+            kind: EventKind::Detected,
+            request: 0,
+            token_index: 0, // AW class
+            worker: 0,
+        });
+        events.push(ev(150, EventKind::Adopted, 7, 0));
+        events.push(ev(160, EventKind::RestoreStarted, 7, 0));
+        events.push(ev(200, EventKind::Restored, 7, 0));
+        events.push(ev(240, EventKind::Token, 7, 2));
+        let r = RecoveryReport::from_events(&events);
+        assert_eq!(r.incidents.len(), 1);
+        let i = &r.incidents[0];
+        assert_eq!(i.class, FailureClass::Aw);
+        assert_eq!(i.worker, 0);
+        assert_eq!(i.victims.len(), 1);
+        let v = &i.victims[0];
+        assert_eq!(v.request, 7);
+        assert!((v.detect_s - 0.030).abs() < 1e-9, "detect {}", v.detect_s);
+        assert!((v.reroute_s - 0.020).abs() < 1e-9, "reroute {}", v.reroute_s);
+        assert!((v.restore_s - 0.040).abs() < 1e-9, "restore {}", v.restore_s);
+        assert!((v.recompute_s - 0.040).abs() < 1e-9, "recompute {}", v.recompute_s);
+        assert!((v.total_stall_s - 0.140).abs() < 1e-9, "total {}", v.total_stall_s);
+        assert!((r.max_total_stall_s() - 0.140).abs() < 1e-9);
+        assert!((r.max_detect_s() - 0.030).abs() < 1e-9);
+        assert!(r.render().contains("req=7"));
+    }
+
+    #[test]
+    fn recovery_report_merges_duplicate_detections_and_handles_ew_reroutes() {
+        // EW 2 dies: the REFE detects at 60ms and replays at 62ms; the
+        // orchestrator confirms the same death at 75ms (merged). Request
+        // 1 straddles the death, request 9 finished long before it.
+        let det = |t_ms: u64, class: u32, worker: u32| Event {
+            at: Duration::from_millis(t_ms),
+            kind: EventKind::Detected,
+            request: 0,
+            token_index: class,
+            worker,
+        };
+        let events = vec![
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(0, EventKind::Submitted, 9, 0),
+            ev(10, EventKind::Token, 9, 0),
+            ev(11, EventKind::Finished, 9, 0),
+            ev(50, EventKind::Token, 1, 0),
+            det(60, 1, 2),
+            Event {
+                at: Duration::from_millis(62),
+                kind: EventKind::Rerouted,
+                request: 2, // failed EW index
+                token_index: 0,
+                worker: 0,
+            },
+            det(75, 1, 2), // duplicate confirmation, merged away
+            ev(90, EventKind::Token, 1, 1),
+        ];
+        let r = RecoveryReport::from_events(&events);
+        assert_eq!(r.incidents.len(), 1, "duplicate detections must merge:\n{}", r.render());
+        let i = &r.incidents[0];
+        assert_eq!(i.class, FailureClass::Ew);
+        assert_eq!(i.worker, 2);
+        // Request 9 finished before the fault: not a victim.
+        assert_eq!(i.victims.len(), 1);
+        let v = &i.victims[0];
+        assert_eq!(v.request, 1);
+        assert!((v.detect_s - 0.010).abs() < 1e-9);
+        assert!((v.reroute_s - 0.002).abs() < 1e-9);
+        assert_eq!(v.restore_s, 0.0, "EW reroute exercises no checkpoint restore");
+        assert!((v.recompute_s - 0.028).abs() < 1e-9);
+        assert!((v.total_stall_s - 0.040).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_report_is_empty_without_detections() {
+        let events = vec![
+            ev(0, EventKind::Submitted, 1, 0),
+            ev(50, EventKind::Token, 1, 0),
+            ev(90, EventKind::Migrated, 1, 0), // planned drain, no death
+        ];
+        assert!(RecoveryReport::from_events(&events).is_empty());
     }
 }

@@ -1,0 +1,279 @@
+//! Exporters: Chrome/Perfetto trace-event JSON from a span log, and a
+//! Prometheus text-exposition snapshot of a [`ClusterReport`]
+//! (DESIGN.md §14).
+//!
+//! Both are plain-text formats emitted through the in-repo `util::json`
+//! builders (no serde), so any scenario or chaos run can dump an
+//! artifact that standard tooling (ui.perfetto.dev, promtool) loads
+//! directly.
+
+use super::trace::Span;
+use crate::coordinator::cluster::ClusterReport;
+use crate::util::json::{arr, num, obj, s, Json};
+use std::fmt::Write as _;
+
+/// Chrome trace-event JSON (the Perfetto/`chrome://tracing` format):
+/// one complete-duration ("ph":"X") event per span, microsecond
+/// timestamps, `pid` 0 and `tid` = worker index so each worker renders
+/// as its own track.
+pub fn perfetto_json(spans: &[Span]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|sp| {
+            let ts_us = sp.start.as_secs_f64() * 1e6;
+            let dur_us = (sp.end.saturating_sub(sp.start)).as_secs_f64() * 1e6;
+            obj(vec![
+                ("name", s(sp.kind.name())),
+                ("cat", s(sp.kind.category())),
+                ("ph", s("X")),
+                ("ts", num(ts_us)),
+                ("dur", num(dur_us)),
+                ("pid", num(0.0)),
+                ("tid", num(sp.worker as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("request", num(sp.request as f64)),
+                        ("aux", num(sp.aux as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![("traceEvents", arr(events)), ("displayTimeUnit", s("ms"))])
+}
+
+fn metric(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Prometheus text exposition of a finished run's [`ClusterReport`]:
+/// request lifecycle counters, failure/recovery counters, elastic
+/// scaling counters, KV prefix-sharing stats, and the headline latency
+/// summaries. Empty-sample summaries expose as `NaN`, which the
+/// exposition format permits.
+pub fn prometheus_text(r: &ClusterReport) -> String {
+    let mut out = String::with_capacity(4096);
+    let a = &r.analysis;
+    metric(
+        &mut out,
+        "tarragon_requests_submitted_total",
+        "Requests submitted to the gateway.",
+        "counter",
+        r.submitted as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_requests_finished_total",
+        "Requests that generated their full output.",
+        "counter",
+        r.finished as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_requests_rejected_total",
+        "Requests rejected at admission (oversized).",
+        "counter",
+        r.rejected as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_preemptions_total",
+        "Requests preempted under KV pressure or planned drains.",
+        "counter",
+        r.preemptions as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_aw_failures_total",
+        "Attention-worker deaths confirmed by the orchestrator.",
+        "counter",
+        r.aw_failures as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_ew_failures_total",
+        "Expert-worker deaths confirmed by the orchestrator.",
+        "counter",
+        r.ew_failures as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_coarse_restarts_total",
+        "Full cluster restarts (baseline recovery mode).",
+        "counter",
+        r.restarts as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_scale_outs_total",
+        "Fresh EWs provisioned by elastic scaling.",
+        "counter",
+        r.scale_outs as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_scale_ins_total",
+        "EWs retired by elastic scaling.",
+        "counter",
+        r.scale_ins as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_shadow_promotions_total",
+        "Shadow replicas promoted to primary.",
+        "counter",
+        r.shadow_promotions as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_scale_rejected_total",
+        "Scale-in refusals (last-replica guard, liveness checks).",
+        "counter",
+        r.scale_rejected as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_kv_prefix_hits_total",
+        "Prefill/restore pages satisfied by prefix sharing.",
+        "counter",
+        r.sharing.prefix_hits as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_kv_cow_breaks_total",
+        "Copy-on-write privatizations of shared KV pages.",
+        "counter",
+        r.sharing.cow_breaks as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_kv_pages_shared_peak",
+        "Peak number of KV pages concurrently shared.",
+        "gauge",
+        r.sharing.pages_shared as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_tokens_total",
+        "Output tokens emitted cluster-wide.",
+        "counter",
+        a.total_tokens as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_throughput_tokens_per_second",
+        "Output tokens per second over the whole run.",
+        "gauge",
+        a.throughput_tps,
+    );
+    metric(
+        &mut out,
+        "tarragon_ttft_median_milliseconds",
+        "Median time to first token.",
+        "gauge",
+        a.ttft().median_ms,
+    );
+    metric(
+        &mut out,
+        "tarragon_ttft_p95_milliseconds",
+        "95th-percentile time to first token.",
+        "gauge",
+        a.ttft().p95_ms,
+    );
+    metric(
+        &mut out,
+        "tarragon_tbt_median_milliseconds",
+        "Median gap between consecutive tokens of a request.",
+        "gauge",
+        a.tbt().median_ms,
+    );
+    metric(
+        &mut out,
+        "tarragon_tbt_p95_milliseconds",
+        "95th-percentile gap between consecutive tokens of a request.",
+        "gauge",
+        a.tbt().p95_ms,
+    );
+    metric(
+        &mut out,
+        "tarragon_max_token_gap_seconds",
+        "Longest cluster-wide token-stream stall.",
+        "gauge",
+        a.max_token_gap_s,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::SpanKind;
+    use crate::metrics::{RunAnalysis, SharingStats};
+    use std::time::Duration;
+
+    fn span(kind: SpanKind, start_ms: u64, dur_ms: u64, worker: u32) -> Span {
+        Span {
+            kind,
+            request: 5,
+            worker,
+            aux: 2,
+            start: Duration::from_millis(start_ms),
+            end: Duration::from_millis(start_ms + dur_ms),
+        }
+    }
+
+    #[test]
+    fn perfetto_export_round_trips_through_the_parser() {
+        let spans = vec![
+            span(SpanKind::DecodeStep, 10, 2, 0),
+            span(SpanKind::RestoreInstall, 40, 8, 1),
+        ];
+        let text = perfetto_json(&spans).to_string();
+        let doc = Json::parse(&text).expect("exported trace must be valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let e = &events[1];
+        assert_eq!(e.get("name").unwrap().as_str(), Some("restore_install"));
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("ts").unwrap().as_f64(), Some(40_000.0));
+        assert_eq!(e.get("dur").unwrap().as_f64(), Some(8_000.0));
+        assert_eq!(e.get("tid").unwrap().as_u64(), Some(1));
+        assert_eq!(e.get("args").unwrap().get("request").unwrap().as_u64(), Some(5));
+    }
+
+    #[test]
+    fn prometheus_text_exposes_the_report() {
+        let r = ClusterReport {
+            analysis: RunAnalysis::from_events(&[], 1.0),
+            submitted: 4,
+            finished: 3,
+            aw_failures: 1,
+            ew_failures: 2,
+            restarts: 0,
+            preemptions: 5,
+            rejected: 1,
+            scale_outs: 1,
+            scale_ins: 0,
+            shadow_promotions: 1,
+            scale_rejected: 0,
+            sharing: SharingStats { prefix_hits: 7, cow_breaks: 1, pages_shared: 3 },
+        };
+        let text = prometheus_text(&r);
+        assert!(text.contains("tarragon_requests_submitted_total 4"));
+        assert!(text.contains("tarragon_aw_failures_total 1"));
+        assert!(text.contains("tarragon_ew_failures_total 2"));
+        assert!(text.contains("tarragon_kv_prefix_hits_total 7"));
+        // Empty-sample latency summaries are NaN — legal in the
+        // exposition format.
+        assert!(text.contains("tarragon_ttft_median_milliseconds NaN"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+    }
+}

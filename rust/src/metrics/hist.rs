@@ -1,0 +1,169 @@
+//! Log-bucketed latency histogram.
+//!
+//! Benches summarize TTFT/TBT/restore-latency samples through this
+//! instead of sorting full sample vectors: pushes are O(1) into a
+//! fixed set of geometric buckets (~5% wide, so any quantile is
+//! within one half-bucket ≈ 2.5% of the exact sample), and the
+//! summary cost is independent of run length.
+
+/// Geometric bucket growth factor (each bucket is 5% wider).
+const GROWTH: f64 = 1.05;
+/// Lower edge of bucket 0; anything at or below lands in bucket 0.
+/// Samples are milliseconds in practice, so this is 1 ns.
+const V0: f64 = 1e-3;
+/// Fixed bucket count: covers V0 · 1.05^512 ≈ 7e7 ms on the top end.
+const BUCKETS: usize = 512;
+
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn of(samples: &[f64]) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for &v in samples {
+            h.push(v);
+        }
+        h
+    }
+
+    fn index(v: f64) -> usize {
+        if v <= V0 {
+            return 0;
+        }
+        let i = (v / V0).ln() / GROWTH.ln();
+        (i as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one sample; non-finite samples are ignored.
+    pub fn push(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of the pushed samples (NaN when empty, like
+    /// `stats::mean` — the JSON writer serializes that as `null`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Exact maximum (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max
+    }
+
+    /// Exact minimum (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.min
+    }
+
+    /// Approximate quantile (`q` in 0..=1): the geometric midpoint of
+    /// the bucket holding the q-th sample, clamped to the exact
+    /// observed [min, max]. NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let rep = V0 * GROWTH.powf(i as f64 + 0.5);
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Percentile convenience matching `stats::percentile` (`p` in
+    /// 0..=100).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.quantile(p / 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_track_exact_values_within_bucket_width() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let h = LogHistogram::of(&samples);
+        assert_eq!(h.count(), 1000);
+        for (q, exact) in [(0.5, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let got = h.quantile(q);
+            assert!(
+                (got - exact).abs() / exact < 0.05,
+                "q{q}: got {got}, exact {exact}"
+            );
+        }
+        assert_eq!(h.quantile(1.0), 1000.0, "top quantile clamps to the exact max");
+        assert_eq!(h.quantile(0.0), 1.0, "bottom quantile clamps to the exact min");
+        assert!((h.mean() - 500.5).abs() < 1e-9, "mean is exact");
+        assert_eq!(h.max(), 1000.0);
+        assert_eq!(h.min(), 1.0);
+        assert!((h.percentile(99.0) - h.quantile(0.99)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_degenerate_samples() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.quantile(0.5).is_nan() && h.mean().is_nan() && h.max().is_nan());
+        let mut h = LogHistogram::new();
+        h.push(f64::NAN); // ignored
+        h.push(0.0); // clamps into bucket 0
+        h.push(42.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 42.0);
+    }
+}

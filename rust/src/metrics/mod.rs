@@ -10,13 +10,18 @@
 //! text form the determinism tests compare byte-for-byte.
 
 pub mod analysis;
+pub mod export;
+pub mod hist;
+pub mod trace;
 
 use crate::util::clock::Clock;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-pub use analysis::{LatencySummary, RunAnalysis};
+pub use analysis::{FailureClass, LatencySummary, RecoveryReport, RunAnalysis};
+pub use hist::LogHistogram;
 
 /// KV prefix-sharing counters (DESIGN.md §13), summed over all AW
 /// arenas by [`crate::coordinator::cluster::Spawner::sharing_totals`].
@@ -60,9 +65,45 @@ pub enum EventKind {
     /// A hot expert's shadow replica became primary — warm scale-out,
     /// no weight upload (`request` = expert id, `worker` = promoted EW).
     ShadowPromoted,
+    /// A worker death was confirmed (failure-lifecycle; DESIGN.md §14).
+    /// `worker` = failed node index; `token_index` encodes the class
+    /// (0 = AW, 1 = EW); `request` = 0 (cluster-scoped).
+    Detected,
+    /// A REFE replayed in-flight expert rows around a dead EW
+    /// (`request` = failed EW index, `worker` = rerouting AW).
+    Rerouted,
+    /// An orphaned committed request was assigned to a surviving AW
+    /// (`worker` = adopting AW).
+    Adopted,
+    /// The adopting AW asked the store for the request's checkpoint
+    /// (`worker` = adopting AW).
+    RestoreStarted,
+    /// The checkpoint was installed and the request rejoined the active
+    /// decode set (`worker` = adopting AW).
+    Restored,
 }
 
 impl EventKind {
+    /// Every variant, in declaration order — the drift-guard tests walk
+    /// this to prove `name`/`parse` and every consumer stay exhaustive.
+    pub const ALL: [EventKind; 15] = [
+        EventKind::Submitted,
+        EventKind::Admitted,
+        EventKind::Token,
+        EventKind::Finished,
+        EventKind::Migrated,
+        EventKind::Rejected,
+        EventKind::Preempted,
+        EventKind::ScaleOut,
+        EventKind::ScaleIn,
+        EventKind::ShadowPromoted,
+        EventKind::Detected,
+        EventKind::Rerouted,
+        EventKind::Adopted,
+        EventKind::RestoreStarted,
+        EventKind::Restored,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             EventKind::Submitted => "submitted",
@@ -75,7 +116,17 @@ impl EventKind {
             EventKind::ScaleOut => "scale_out",
             EventKind::ScaleIn => "scale_in",
             EventKind::ShadowPromoted => "shadow_promoted",
+            EventKind::Detected => "detected",
+            EventKind::Rerouted => "rerouted",
+            EventKind::Adopted => "adopted",
+            EventKind::RestoreStarted => "restore_started",
+            EventKind::Restored => "restored",
         }
+    }
+
+    /// Inverse of [`EventKind::name`]; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == name)
     }
 }
 
@@ -91,11 +142,21 @@ pub struct Event {
     pub worker: u32,
 }
 
-/// Thread-safe append-only event log with a fixed epoch.
+/// Fixed growth quantum for the event vector: once the pre-sized
+/// capacity is exhausted, `record` reserves exactly this many more
+/// slots, so a long soak run pays small constant-size reallocations
+/// under the lock instead of doubling ever-larger buffers.
+pub const EVENT_GROW_CHUNK: usize = 1024;
+
+/// Thread-safe append-only event log with a rebasable epoch.
 pub struct EventLog {
     clock: Clock,
-    /// Clock reading at log creation; `Event::at` is relative to this.
-    start: Duration,
+    /// Clock reading (nanos) at log creation or the last [`rebase`];
+    /// `Event::at` is relative to this. Atomic so the epoch can be
+    /// re-pinned after cluster bring-up without blocking recorders.
+    ///
+    /// [`rebase`]: EventLog::rebase
+    start_nanos: AtomicU64,
     events: Mutex<Vec<Event>>,
 }
 
@@ -114,13 +175,44 @@ impl EventLog {
     /// A log timestamped by an explicit clock; the epoch is the clock's
     /// current reading (so bring-up before log creation is excluded).
     pub fn with_clock(clock: Clock) -> EventLog {
+        Self::with_clock_capacity(clock, 0)
+    }
+
+    /// Like [`with_clock`], pre-sizing the event vector so steady-state
+    /// recording never reallocates until `capacity` events are logged
+    /// (`trace.event_capacity` in config).
+    ///
+    /// [`with_clock`]: EventLog::with_clock
+    pub fn with_clock_capacity(clock: Clock, capacity: usize) -> EventLog {
         let start = clock.now();
-        EventLog { clock, start, events: Mutex::new(Vec::new()) }
+        EventLog {
+            clock,
+            start_nanos: AtomicU64::new(start.as_nanos() as u64),
+            events: Mutex::new(Vec::with_capacity(capacity)),
+        }
+    }
+
+    /// Re-pin the epoch to the clock's current reading. Called once
+    /// after cluster bring-up so event timestamps exclude worker
+    /// provisioning time; recording before a rebase is allowed (the
+    /// events keep their old offsets).
+    pub fn rebase(&self) {
+        self.start_nanos.store(self.clock.now().as_nanos() as u64, Ordering::Relaxed);
     }
 
     pub fn record(&self, kind: EventKind, request: u64, token_index: u32, worker: u32) {
-        let at = self.clock.now().saturating_sub(self.start);
-        self.events.lock().unwrap().push(Event { at, kind, request, token_index, worker });
+        let start = Duration::from_nanos(self.start_nanos.load(Ordering::Relaxed));
+        let at = self.clock.now().saturating_sub(start);
+        let mut events = self.events.lock().unwrap();
+        if events.len() == events.capacity() {
+            events.reserve_exact(EVENT_GROW_CHUNK);
+        }
+        events.push(Event { at, kind, request, token_index, worker });
+    }
+
+    /// Current capacity of the event vector (growth-policy tests).
+    pub fn capacity(&self) -> usize {
+        self.events.lock().unwrap().capacity()
     }
 
     pub fn snapshot(&self) -> Vec<Event> {
@@ -180,6 +272,56 @@ mod tests {
         assert_eq!(snap[1].kind, EventKind::Token);
         assert_eq!(snap[1].worker, 2);
         assert!(log.secs(snap[1].at) >= log.secs(snap[0].at));
+    }
+
+    #[test]
+    fn event_capacity_is_reserved_and_grows_in_chunks() {
+        let log = EventLog::with_clock_capacity(Clock::wall(), 8);
+        assert!(log.capacity() >= 8, "configured capacity must be pre-reserved");
+        let base = log.capacity();
+        for _ in 0..base {
+            log.record(EventKind::Token, 1, 0, 0);
+        }
+        assert_eq!(log.capacity(), base, "recording within capacity must not grow");
+        log.record(EventKind::Token, 1, 0, 0);
+        assert_eq!(
+            log.capacity(),
+            base + EVENT_GROW_CHUNK,
+            "overflow must grow by one fixed chunk, not by doubling"
+        );
+    }
+
+    #[test]
+    fn rebase_repins_the_epoch() {
+        let clock = Clock::virtual_seeded(7);
+        let _g = clock.register();
+        let log = EventLog::with_clock(clock.clone());
+        clock.sleep(Duration::from_millis(40));
+        log.rebase();
+        clock.sleep(Duration::from_millis(3));
+        log.record(EventKind::Token, 1, 0, 0);
+        assert_eq!(log.snapshot()[0].at, Duration::from_millis(3));
+        clock.shutdown();
+    }
+
+    #[test]
+    fn event_kind_names_round_trip_and_render_covers_every_variant() {
+        let mut seen = std::collections::HashSet::new();
+        for k in EventKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate event name {}", k.name());
+            assert_eq!(EventKind::parse(k.name()), Some(k), "name round-trip for {}", k.name());
+        }
+        assert_eq!(EventKind::parse("bogus"), None);
+        // Render one event of every kind: each line carries its name.
+        let log = EventLog::new();
+        for k in EventKind::ALL {
+            log.record(k, 1, 0, 0);
+        }
+        let render = log.render();
+        assert_eq!(render.lines().count(), EventKind::ALL.len());
+        for (line, k) in render.lines().zip(EventKind::ALL) {
+            assert!(line.contains(k.name()), "render line {line:?} missing {}", k.name());
+        }
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Span tracing: the request-scoped recovery-anatomy layer (DESIGN.md
+//! §14).
+//!
+//! Each worker records [`Span`]s — gateway queueing, AW prefill/decode
+//! steps, REFE dispatch rounds, EW expert batches, checkpoint
+//! emit/commit, restore pull/install, detection windows, ERT remaps —
+//! into a preallocated per-worker [`TraceRing`], overwrite-oldest on
+//! overflow. Timestamps come from the cluster [`Clock`], so
+//! virtual-clock runs produce deterministic traces.
+//!
+//! Invariants future PRs must preserve:
+//! - **Gated**: workers hold `Option<TraceHandle>`; with `[trace]
+//!   enabled = false` the option is `None` and the hot paths make no
+//!   clock reads and no ring writes — runs are bitwise-identical to a
+//!   build without this module.
+//! - **Zero-alloc**: `TraceRing::push` writes into storage reserved at
+//!   construction; recording a span in the steady-state decode loop
+//!   performs no heap allocation (pinned by `rust/tests/alloc.rs`).
+
+use crate::util::clock::Clock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Track-id convention for [`Span::worker`] (the exporter's `tid`):
+/// AWs use their index directly, EWs add this offset, and the gateway
+/// uses [`GATEWAY_TID`] — distinct tracks per role in the trace UI.
+pub const EW_TID_OFFSET: u32 = 100;
+pub const GATEWAY_TID: u32 = 999;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Gateway: request accepted → dispatched to an AW.
+    GatewayQueue,
+    /// AW: one prefill pass (aux = prompt length).
+    Prefill,
+    /// AW: one steady-state decode step (aux = batch size).
+    DecodeStep,
+    /// REFE: one expert dispatch round trip (aux = round index).
+    DispatchRound,
+    /// EW: one expert FFN batch (aux = expert id).
+    ExpertBatch,
+    /// AW: checkpoint segment flush to the store (aux = queue depth).
+    CkptEmit,
+    /// AW: commit record pushed (aux = committed position).
+    CkptCommit,
+    /// AW: adoption → restore chunks requested from the store.
+    RestorePull,
+    /// AW: restore chunks received → KV installed, request active.
+    RestoreInstall,
+    /// REFE/EW: silence observed → peer death confirmed (aux = suspect).
+    DetectionWindow,
+    /// REFE: ERT failover remap of a dead EW (aux = dead EW index).
+    ErtRemap,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::GatewayQueue,
+        SpanKind::Prefill,
+        SpanKind::DecodeStep,
+        SpanKind::DispatchRound,
+        SpanKind::ExpertBatch,
+        SpanKind::CkptEmit,
+        SpanKind::CkptCommit,
+        SpanKind::RestorePull,
+        SpanKind::RestoreInstall,
+        SpanKind::DetectionWindow,
+        SpanKind::ErtRemap,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::GatewayQueue => "gateway_queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::DispatchRound => "dispatch_round",
+            SpanKind::ExpertBatch => "expert_batch",
+            SpanKind::CkptEmit => "ckpt_emit",
+            SpanKind::CkptCommit => "ckpt_commit",
+            SpanKind::RestorePull => "restore_pull",
+            SpanKind::RestoreInstall => "restore_install",
+            SpanKind::DetectionWindow => "detection_window",
+            SpanKind::ErtRemap => "ert_remap",
+        }
+    }
+
+    /// Perfetto category for the kind (groups tracks in the UI).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::GatewayQueue => "gateway",
+            SpanKind::Prefill | SpanKind::DecodeStep => "compute",
+            SpanKind::DispatchRound | SpanKind::ExpertBatch => "expert",
+            SpanKind::CkptEmit | SpanKind::CkptCommit => "checkpoint",
+            SpanKind::RestorePull | SpanKind::RestoreInstall => "restore",
+            SpanKind::DetectionWindow | SpanKind::ErtRemap => "failure",
+        }
+    }
+}
+
+/// One closed span. All-`Copy` so ring writes are plain stores.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Request id the span serves (0 for cluster-scoped spans).
+    pub request: u64,
+    /// Worker index that recorded the span.
+    pub worker: u32,
+    /// Kind-specific payload (batch size, expert id, suspect index…).
+    pub aux: u64,
+    /// Offsets from the tracer epoch.
+    pub start: Duration,
+    pub end: Duration,
+}
+
+/// Fixed-capacity span ring: storage is reserved once at construction,
+/// and on overflow the oldest span is overwritten (`dropped` counts
+/// overwrites). `push` never allocates.
+pub struct TraceRing {
+    spans: Vec<Span>,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing { spans: Vec::with_capacity(capacity.max(1)), head: 0, dropped: 0 }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if self.spans.len() < self.spans.capacity() {
+            self.spans.push(span);
+        } else {
+            self.spans[self.head] = span;
+            self.head = (self.head + 1) % self.spans.len();
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans overwritten by ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Spans in record order (oldest first, unwrapping the ring).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.spans.len());
+        out.extend_from_slice(&self.spans[self.head..]);
+        out.extend_from_slice(&self.spans[..self.head]);
+        out
+    }
+}
+
+/// Cluster-wide span sink: one preallocated [`TraceRing`] per worker,
+/// all sharing one clock and a rebasable epoch (matching
+/// `EventLog::rebase` so spans and events share a timeline).
+pub struct Tracer {
+    clock: Clock,
+    epoch_nanos: AtomicU64,
+    ring_capacity: usize,
+    rings: Mutex<Vec<Arc<Mutex<TraceRing>>>>,
+}
+
+impl Tracer {
+    pub fn new(clock: Clock, ring_capacity: usize) -> Arc<Tracer> {
+        let epoch = clock.now();
+        Arc::new(Tracer {
+            clock,
+            epoch_nanos: AtomicU64::new(epoch.as_nanos() as u64),
+            ring_capacity,
+            rings: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Re-pin the epoch (called alongside `EventLog::rebase` after
+    /// cluster bring-up).
+    pub fn rebase(&self) {
+        self.epoch_nanos.store(self.clock.now().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Register a worker: allocates its ring up front and hands back a
+    /// recording handle. Allocation happens here, never on record.
+    pub fn handle(self: &Arc<Self>, worker: u32) -> TraceHandle {
+        let ring = Arc::new(Mutex::new(TraceRing::new(self.ring_capacity)));
+        self.rings.lock().unwrap().push(ring.clone());
+        TraceHandle { tracer: self.clone(), ring, worker }
+    }
+
+    fn now_rel(&self) -> Duration {
+        let epoch = Duration::from_nanos(self.epoch_nanos.load(Ordering::Relaxed));
+        self.clock.now().saturating_sub(epoch)
+    }
+
+    /// Total spans lost to ring overflow, over every worker.
+    pub fn dropped(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        rings.iter().map(|r| r.lock().unwrap().dropped()).sum::<u64>()
+    }
+
+    /// Merge every worker's ring, ordered by span start (ties keep
+    /// worker registration order) — the exporters' input.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let rings = self.rings.lock().unwrap();
+        let mut out: Vec<Span> = Vec::new();
+        for r in rings.iter() {
+            out.extend(r.lock().unwrap().snapshot());
+        }
+        out.sort_by_key(|s| s.start);
+        out
+    }
+}
+
+/// A worker's recording handle. Cheap to clone; `None` at the worker
+/// when tracing is disabled, so disabled runs never read the clock.
+#[derive(Clone)]
+pub struct TraceHandle {
+    tracer: Arc<Tracer>,
+    ring: Arc<Mutex<TraceRing>>,
+    worker: u32,
+}
+
+impl TraceHandle {
+    /// Epoch-relative "now": capture before the work a span covers.
+    pub fn start(&self) -> Duration {
+        self.tracer.now_rel()
+    }
+
+    /// Close a span that began at `start` (from [`TraceHandle::start`])
+    /// and ends now.
+    pub fn record(&self, kind: SpanKind, request: u64, aux: u64, start: Duration) {
+        let end = self.tracer.now_rel();
+        self.record_span(kind, request, aux, start, end);
+    }
+
+    /// Record a fully-specified span (both endpoints known).
+    pub fn record_span(
+        &self,
+        kind: SpanKind,
+        request: u64,
+        aux: u64,
+        start: Duration,
+        end: Duration,
+    ) {
+        let span = Span { kind, request, worker: self.worker, aux, start, end: end.max(start) };
+        self.ring.lock().unwrap().push(span);
+    }
+
+    pub fn worker(&self) -> u32 {
+        self.worker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start_us: u64) -> Span {
+        Span {
+            kind,
+            request: 1,
+            worker: 0,
+            aux: 0,
+            start: Duration::from_micros(start_us),
+            end: Duration::from_micros(start_us + 10),
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_never_grows() {
+        let mut r = TraceRing::new(3);
+        let cap = r.spans.capacity();
+        for i in 0..5 {
+            r.push(span(SpanKind::DecodeStep, i * 100));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.spans.capacity(), cap, "ring storage must never grow");
+        assert_eq!(r.dropped(), 2);
+        let snap = r.snapshot();
+        let starts: Vec<u64> = snap.iter().map(|s| s.start.as_micros() as u64).collect();
+        assert_eq!(starts, vec![200, 300, 400], "oldest spans overwritten first");
+    }
+
+    #[test]
+    fn tracer_merges_rings_in_start_order() {
+        let clock = Clock::virtual_seeded(3);
+        let g = clock.register();
+        let tracer = Tracer::new(clock.clone(), 8);
+        let h0 = tracer.handle(0);
+        let h1 = tracer.handle(1);
+        clock.sleep(Duration::from_millis(2));
+        let t0 = h0.start();
+        clock.sleep(Duration::from_millis(1));
+        h1.record(SpanKind::ExpertBatch, 4, 2, h1.start());
+        clock.sleep(Duration::from_millis(1));
+        h0.record(SpanKind::DecodeStep, 4, 1, t0);
+        let spans = tracer.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind, SpanKind::DecodeStep, "earlier start sorts first");
+        assert_eq!(spans[0].start, Duration::from_millis(2));
+        assert_eq!(spans[0].end, Duration::from_millis(4));
+        assert_eq!(spans[1].worker, 1);
+        assert_eq!(tracer.dropped(), 0);
+        drop(g);
+        clock.shutdown();
+    }
+
+    #[test]
+    fn rebase_repins_span_epoch() {
+        let clock = Clock::virtual_seeded(4);
+        let g = clock.register();
+        let tracer = Tracer::new(clock.clone(), 4);
+        let h = tracer.handle(0);
+        clock.sleep(Duration::from_millis(50));
+        tracer.rebase();
+        clock.sleep(Duration::from_millis(3));
+        h.record(SpanKind::Prefill, 1, 8, h.start());
+        let spans = tracer.snapshot();
+        assert_eq!(spans[0].start, Duration::from_millis(3));
+        drop(g);
+        clock.shutdown();
+    }
+
+    #[test]
+    fn span_kind_names_are_unique_and_categorized() {
+        let mut seen = std::collections::HashSet::new();
+        for k in SpanKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate span name {}", k.name());
+            assert!(!k.category().is_empty());
+        }
+    }
+}

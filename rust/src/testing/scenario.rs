@@ -16,6 +16,8 @@
 
 use crate::config::Config;
 use crate::coordinator::cluster::{Cluster, ClusterReport, LaunchOptions};
+use crate::metrics::trace::Span;
+use crate::metrics::RecoveryReport;
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::transport::NodeId;
 use crate::util::clock::Clock;
@@ -316,6 +318,8 @@ impl Scenario {
             .map(|r| (r.id, cluster.gw.generated_of(r.id)))
             .collect();
         let event_log = cluster.events.render();
+        let recovery = RecoveryReport::from_log(&cluster.events);
+        let spans = cluster.tracer.as_ref().map(|t| t.snapshot()).unwrap_or_default();
         let rejections = cluster.gw.rejections();
         let kv_peaks = cluster.spawner.kv_peaks();
         let kv_budget = self.cfg.sched.kv_budget_pages;
@@ -326,6 +330,8 @@ impl Scenario {
             completed,
             tokens,
             event_log,
+            recovery,
+            spans,
             rejections,
             kv_peaks,
             kv_budget,
@@ -364,6 +370,12 @@ pub struct ScenarioOutcome {
     pub tokens: BTreeMap<u64, Vec<u32>>,
     /// Canonical event-log rendering (byte-comparable across runs).
     pub event_log: String,
+    /// Per-victim stall anatomy recovered from the failure-lifecycle
+    /// events (empty when no fault was detected).
+    pub recovery: RecoveryReport,
+    /// Trace spans captured during the run; empty unless
+    /// `cfg.trace.enabled` was set.
+    pub spans: Vec<Span>,
     /// Rejected requests with their stream-level errors.
     pub rejections: BTreeMap<u64, String>,
     /// Peak pages-in-use per AW arena (budget-invariant assertions).
@@ -385,6 +397,51 @@ impl ScenarioOutcome {
                 "{}: aw{aw} peaked at {peak} pages (budget {})",
                 self.name,
                 self.kv_budget
+            );
+        }
+    }
+
+    /// Panics unless the run's `RecoveryReport` shows at least
+    /// `min_incidents` detected faults, every incident was detected
+    /// within `max_detect`, every victim's total stall stayed within
+    /// `max_stall`, and each victim's phase decomposition is coherent
+    /// (no negative phases; stall covers at least the detect phase).
+    pub fn assert_recovery(&self, min_incidents: usize, max_detect: Duration, max_stall: Duration) {
+        let r = &self.recovery;
+        assert!(
+            r.incidents.len() >= min_incidents,
+            "{}: expected >= {min_incidents} recovery incidents, got {}:\n{}",
+            self.name,
+            r.incidents.len(),
+            r.render()
+        );
+        assert!(
+            r.max_detect_s() <= max_detect.as_secs_f64(),
+            "{}: detection took {:.3}s (budget {:?}):\n{}",
+            self.name,
+            r.max_detect_s(),
+            max_detect,
+            r.render()
+        );
+        assert!(
+            r.max_total_stall_s() <= max_stall.as_secs_f64(),
+            "{}: victim stalled {:.3}s (budget {:?}):\n{}",
+            self.name,
+            r.max_total_stall_s(),
+            max_stall,
+            r.render()
+        );
+        for v in r.victims() {
+            let nonneg = v.detect_s >= 0.0
+                && v.reroute_s >= 0.0
+                && v.restore_s >= 0.0
+                && v.recompute_s >= 0.0;
+            assert!(nonneg, "{}: negative phase for req {}: {v:?}", self.name, v.request);
+            assert!(
+                v.total_stall_s + 1e-9 >= v.detect_s,
+                "{}: stall smaller than its detect phase for req {}",
+                self.name,
+                v.request
             );
         }
     }

@@ -119,7 +119,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; an empty-sample
+                    // summary (e.g. `LatencySummary::of(&[])`) must not
+                    // poison a BENCH_*.json file with invalid syntax.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -424,5 +429,17 @@ mod tests {
     fn integers_write_without_fraction() {
         assert_eq!(Json::Num(4.0).to_string(), "4");
         assert_eq!(Json::Num(4.5).to_string(), "4.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_write_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // The empty-sample summary shape stays parseable end to end.
+        let doc = obj(vec![("median_ms", num(f64::NAN)), ("count", num(0.0))]);
+        let text = doc.to_string();
+        assert_eq!(text, r#"{"count":0,"median_ms":null}"#);
+        assert_eq!(Json::parse(&text).unwrap().get("median_ms"), Some(&Json::Null));
     }
 }

@@ -30,6 +30,7 @@
 
 use std::sync::Arc;
 use tarragon::kvcache::{BatchAssembler, KvPool, PoolConfig, RequestKv};
+use tarragon::metrics::trace::{SpanKind, Tracer};
 use tarragon::modelcfg::ModelSpec;
 use tarragon::proto::DispatchEntry;
 use tarragon::runtime::xla::kern;
@@ -399,7 +400,12 @@ fn hot_path_allocation_contract() {
     // 1. Steady state: zero heap allocations per decode step across the
     //    whole AW→REFE→EW→REFE→AW round trip — under BOTH kernel
     //    backends (warmup also covers one-time backend init such as the
-    //    AVX2 feature probe and the rope-frequency memo).
+    //    AVX2 feature probe and the rope-frequency memo) — WITH span
+    //    tracing live: the ring is preallocated at handle registration,
+    //    so recording a DecodeStep span per step is two clock reads
+    //    plus a plain store.
+    let tracer = Tracer::new(tarragon::util::clock::Clock::wall(), 64);
+    let trace = tracer.handle(0);
     let steps = 8;
     let mut h = None;
     for kind in [kern::BackendKind::Reference, kern::BackendKind::Simd] {
@@ -413,14 +419,16 @@ fn hot_path_allocation_contract() {
 
         let (allocs, _) = allocations_during(|| {
             for _ in 0..steps {
+                let t0 = trace.start();
                 hb.step();
+                trace.record(SpanKind::DecodeStep, 0, B as u64, t0);
             }
         });
         assert_eq!(
             allocs,
             0,
             "steady-state decode must be allocation-free under the {} backend \
-             ({allocs} allocations over {steps} steps)",
+             ({allocs} allocations over {steps} steps, tracing enabled)",
             bk.name()
         );
         // The generation advanced and stayed in-vocab (the harness
@@ -430,6 +438,9 @@ fn hot_path_allocation_contract() {
         h = Some(hb);
     }
     let h = h.unwrap();
+    // Every traced step landed in the preallocated ring (both backends).
+    assert_eq!(tracer.snapshot().len(), 2 * steps);
+    assert_eq!(tracer.dropped(), 0);
 
     // 2. Checkpoint emit: bounded — one payload Vec + one Arc control
     //    block per segment, nothing proportional to floats beyond the

@@ -33,6 +33,8 @@ const DEFAULT_SEEDS: [u64; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
 const DEFAULT_STEPS: usize = 10;
 /// How many extra runs the minimizer may spend on a failing seed.
 const MINIMIZE_BUDGET: usize = 24;
+/// Worst end-to-end stall any victim may see across stacked faults.
+const MAX_STALL_S: f64 = 3.0;
 
 fn seeds() -> Vec<u64> {
     match std::env::var("TARRAGON_CHAOS_SEEDS") {
@@ -341,6 +343,25 @@ fn run_and_check(
             .collect();
         return Err(format!("token streams diverged from baseline for requests {diff:?}"));
     }
+    // Recovery anatomy: every detected fault must decompose into
+    // coherent phases, and no victim may stall past the chaos budget
+    // (looser than the scenario suite — stacked faults can chain).
+    for v in out.recovery.victims() {
+        if v.detect_s < 0.0 || v.reroute_s < 0.0 || v.restore_s < 0.0 || v.recompute_s < 0.0 {
+            return Err(format!(
+                "negative recovery phase for req {}: {v:?}\n{}",
+                v.request,
+                out.recovery.render()
+            ));
+        }
+    }
+    if out.recovery.max_total_stall_s() > MAX_STALL_S {
+        return Err(format!(
+            "victim stalled {:.3}s (budget {MAX_STALL_S}s):\n{}",
+            out.recovery.max_total_stall_s(),
+            out.recovery.render()
+        ));
+    }
     Ok(out)
 }
 
@@ -415,6 +436,32 @@ fn minimize(
     s
 }
 
+/// Re-run the minimized failing schedule with span tracing enabled and
+/// dump a Perfetto trace-event JSON next to the test binary, so the
+/// anatomy of the failing recovery can be opened in ui.perfetto.dev.
+/// Returns a human-readable path (or an explanation when the dump
+/// itself failed — the panic must still fire either way).
+fn dump_failure_trace(
+    min: &Scenario,
+    seed: u64,
+    manifest: &std::sync::Arc<tarragon::modelcfg::Manifest>,
+    weights: &tarragon::modelcfg::weights::Weights,
+) -> String {
+    let mut traced = min.clone();
+    traced.cfg.trace.enabled = true;
+    let out = traced.run(manifest.clone(), weights.clone());
+    let json = tarragon::metrics::export::perfetto_json(&out.spans).to_string();
+    // The export must itself be well-formed trace-event JSON.
+    if let Err(e) = tarragon::util::json::Json::parse(&json) {
+        return format!("<perfetto export did not parse: {e}>");
+    }
+    let path = std::env::temp_dir().join(format!("chaos-{seed}-trace.json"));
+    match std::fs::write(&path, &json) {
+        Ok(()) => path.display().to_string(),
+        Err(e) => format!("<could not write trace: {e}>"),
+    }
+}
+
 #[test]
 fn chaos_soak_full_verb_set() {
     let (manifest, weights, _) = synthetic::ensure();
@@ -448,9 +495,11 @@ fn chaos_soak_full_verb_set() {
                 let err = run_and_check(&min, &base, &manifest, &weights)
                     .err()
                     .unwrap_or_else(|| "minimized schedule stopped failing".into());
+                let trace_path = dump_failure_trace(&min, seed, &manifest, &weights);
                 panic!(
                     "chaos seed {seed} failed: {e}\n\
                      minimized schedule ({}):\n{}\
+                     recovery trace: {trace_path}\n\
                      replay each line via Scenario::fault(..) with seed {seed}",
                     err,
                     render_schedule(&min)

@@ -9,9 +9,18 @@
 
 use std::time::Duration;
 use tarragon::config::Config;
+use tarragon::metrics::FailureClass;
 use tarragon::runtime::kern;
 use tarragon::testing::scenario::Scenario;
 use tarragon::testing::synthetic;
+
+/// Stall budgets for the recovery-anatomy assertions: detection must
+/// land within the silence window plus the full probe ladder (10ms
+/// silence + 3 probes x (15ms timeout + 10ms interval) at 1ms wire
+/// latency, measured from the victim's last pre-fault progress), and
+/// no victim may stall longer than `MAX_STALL` end to end.
+const MAX_DETECT: Duration = Duration::from_millis(250);
+const MAX_STALL: Duration = Duration::from_secs(2);
 
 /// Scenario base: 2 AWs × 2 EWs, and a transport latency high enough
 /// that decode pacing is dominated by (virtual) wire time — failure
@@ -51,6 +60,13 @@ fn ew_kill_mid_decode_replays_to_shadows_with_identical_streams() {
     assert_eq!(faulty.tokens, clean.tokens, "EW failover changed token streams");
     assert!(faulty.report.ew_failures >= 1, "EW failure went unhandled");
     assert_eq!(faulty.report.aw_failures, 0);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+    assert!(
+        faulty.recovery.incidents.iter().all(|i| i.class == FailureClass::Ew),
+        "EW kill must attribute as an EW incident:\n{}",
+        faulty.recovery.render()
+    );
+    assert!(clean.recovery.is_empty(), "failure-free run must have no incidents");
 }
 
 #[test]
@@ -74,6 +90,7 @@ fn ew_kill_under_simd_backend_keeps_streams_identical() {
     assert_eq!(clean.tokens, again.tokens, "simd backend must be deterministic run to run");
     assert_eq!(faulty.tokens, clean.tokens, "EW failover under simd changed token streams");
     assert!(faulty.report.ew_failures >= 1, "EW failure went unhandled");
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
 }
 
 #[test]
@@ -95,6 +112,13 @@ fn aw_kill_before_first_commit_resubmits_from_prompt() {
         "expected a resubmission in the event log:\n{}",
         faulty.event_log
     );
+    // 5ms wire latency slows every probe hop: looser detect budget.
+    faulty.assert_recovery(1, Duration::from_millis(500), MAX_STALL);
+    assert!(
+        faulty.recovery.incidents.iter().any(|i| i.class == FailureClass::Aw),
+        "AW kill must attribute as an AW incident:\n{}",
+        faulty.recovery.render()
+    );
 }
 
 #[test]
@@ -111,6 +135,15 @@ fn aw_kill_after_commit_adopts_restores_and_resumes() {
     // Mid-decode kill with committed checkpoints: restoration, not
     // resubmission — the stream continues from the committed token.
     assert_eq!(faulty.report.finished, 2);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+    // The adopt path pulls from the checkpoint store: at least one
+    // victim must show a real (non-zero) restore phase, ordered inside
+    // its total stall.
+    assert!(
+        faulty.recovery.victims().any(|v| v.restore_s > 0.0),
+        "adoption must exercise a checkpoint restore:\n{}",
+        faulty.recovery.render()
+    );
 }
 
 #[test]
@@ -147,6 +180,7 @@ fn aw_kill_with_warm_shared_prefix_adopts_and_streams_identically() {
     );
     assert!(faulty.report.aw_failures >= 1);
     assert_eq!(faulty.report.finished, 3);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
 }
 
 #[test]
@@ -162,6 +196,19 @@ fn link_sever_self_heals_locally_without_global_recovery() {
     // reports as stale (nodes reachable) — purely local rerouting.
     assert_eq!(faulty.report.ew_failures, 0, "sever must not trigger EW recovery");
     assert_eq!(faulty.report.aw_failures, 0, "sever must not trigger AW recovery");
+    // The severed REFE still sees its probe fail and reroutes locally;
+    // any incident it logs must be EW-class with a pure local reroute —
+    // no checkpoint restore phase (that would mean global recovery ran).
+    for i in &faulty.recovery.incidents {
+        assert_eq!(i.class, FailureClass::Ew, "sever can only look like a local EW loss");
+        for v in &i.victims {
+            assert_eq!(
+                v.restore_s, 0.0,
+                "sever must self-heal without a restore:\n{}",
+                faulty.recovery.render()
+            );
+        }
+    }
 }
 
 #[test]
@@ -177,6 +224,14 @@ fn simultaneous_aw_and_ew_failure_recovers_both() {
     assert_eq!(faulty.tokens, clean.tokens, "simultaneous failure changed token streams");
     assert!(faulty.report.aw_failures >= 1);
     assert!(faulty.report.ew_failures >= 1);
+    // Two distinct incidents — one per class — each within budget.
+    faulty.assert_recovery(2, MAX_DETECT, MAX_STALL);
+    let classes: Vec<_> = faulty.recovery.incidents.iter().map(|i| i.class).collect();
+    assert!(
+        classes.contains(&FailureClass::Aw) && classes.contains(&FailureClass::Ew),
+        "expected one AW and one EW incident:\n{}",
+        faulty.recovery.render()
+    );
 }
 
 #[test]
@@ -194,6 +249,7 @@ fn kill_then_respawn_without_provisioning_restores_capacity() {
     assert!(clean.completed && faulty.completed);
     assert_eq!(faulty.tokens, clean.tokens, "kill+respawn changed token streams");
     assert!(faulty.report.ew_failures >= 1);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
 }
 
 // ---------------------------------------------------------------------------
@@ -217,6 +273,11 @@ fn scale_in_during_decode_keeps_streams_identical() {
     // Planned mobility, not a failure: zero EW/AW recoveries.
     assert_eq!(faulty.report.ew_failures, 0, "scale-in must not count as an EW failure");
     assert_eq!(faulty.report.aw_failures, 0);
+    assert!(
+        faulty.recovery.is_empty(),
+        "planned retirement must not register as an incident:\n{}",
+        faulty.recovery.render()
+    );
 }
 
 #[test]
@@ -253,6 +314,11 @@ fn hotspot_drives_shadow_promotion_with_identical_streams() {
     );
     assert_eq!(scaled.report.ew_failures, 0, "promotion must not count as a failure");
     assert!(scaled.event_log.contains("shadow_promoted"), "event log missing the promotion");
+    assert!(
+        scaled.recovery.is_empty(),
+        "promotion must not register as an incident:\n{}",
+        scaled.recovery.render()
+    );
 }
 
 #[test]
@@ -271,6 +337,7 @@ fn scale_out_racing_an_ew_kill_recovers_with_identical_streams() {
     assert_eq!(faulty.tokens, clean.tokens, "scale-out racing a kill changed streams");
     assert!(faulty.report.ew_failures >= 1, "the kill is a real failure");
     assert!(faulty.report.scale_outs >= 1, "scale-out went unexecuted");
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
 }
 
 #[test]
@@ -292,6 +359,7 @@ fn scale_down_of_last_replica_is_rejected_not_stranded() {
     assert!(faulty.report.scale_rejected >= 1, "last-replica scale-in must be rejected");
     assert_eq!(faulty.report.scale_ins, 0, "nothing may actually retire");
     assert_eq!(faulty.report.ew_failures, 0);
+    assert!(faulty.recovery.is_empty(), "a refused scale-in must leave no incident");
 }
 
 #[test]

@@ -1,0 +1,103 @@
+//! End-to-end recovery-anatomy tracing (DESIGN.md §14): a full cluster
+//! run with `[trace]` enabled must capture the failure lifecycle as
+//! spans — queueing, prefill/decode, dispatch, checkpoint emit/commit,
+//! detection, restore pull/install — and export them as Perfetto
+//! trace-event JSON that parses and carries the restore anatomy.
+//!
+//! The flip side is the observer-effect contract: enabling tracing must
+//! not move the workload. Token streams and the canonical event-log
+//! rendering are asserted byte-identical between a trace-off and a
+//! trace-on run of the same scenario + seed.
+
+use std::time::Duration;
+use tarragon::metrics::export::{perfetto_json, prometheus_text};
+use tarragon::metrics::trace::SpanKind;
+use tarragon::testing::scenario::Scenario;
+use tarragon::testing::synthetic;
+use tarragon::util::json::Json;
+
+/// The aw-kill-adopt scenario from the scenario suite: mid-decode AW
+/// death with committed checkpoints, so the full detect → adopt →
+/// restore → resume anatomy runs.
+fn adopt_scenario(trace: bool) -> Scenario {
+    let mut cfg = tarragon::config::Config::small_test();
+    cfg.transport.latency = Duration::from_millis(1);
+    cfg.transport.worker_extra_init = Duration::from_millis(200);
+    cfg.trace.enabled = trace;
+    Scenario::new(if trace { "trace-on" } else { "trace-off" }, cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 60ms kill aw0")
+}
+
+#[test]
+fn traced_failure_run_exports_restore_anatomy_as_perfetto_json() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let out = adopt_scenario(true).run(manifest, weights);
+    assert!(out.completed, "traced run did not drain");
+    assert!(!out.spans.is_empty(), "trace-on run captured no spans");
+
+    // The span log covers the whole recovery anatomy, not just the
+    // steady state.
+    let has = |k: SpanKind| out.spans.iter().any(|sp| sp.kind == k);
+    assert!(has(SpanKind::GatewayQueue), "missing gateway queueing span");
+    assert!(has(SpanKind::Prefill), "missing prefill span");
+    assert!(has(SpanKind::DecodeStep), "missing decode-step span");
+    assert!(has(SpanKind::DispatchRound), "missing REFE dispatch span");
+    assert!(has(SpanKind::ExpertBatch), "missing EW expert-batch span");
+    assert!(has(SpanKind::CkptEmit), "missing checkpoint-emit span");
+    assert!(has(SpanKind::CkptCommit), "missing checkpoint-commit span");
+    assert!(has(SpanKind::RestorePull), "missing restore-pull span");
+    assert!(has(SpanKind::RestoreInstall), "missing restore-install span");
+
+    // Every span is well-formed: end >= start, restore spans name the
+    // adopted request.
+    for sp in &out.spans {
+        assert!(sp.end >= sp.start, "span ends before it starts: {sp:?}");
+    }
+    assert!(
+        out.spans
+            .iter()
+            .any(|sp| sp.kind == SpanKind::RestoreInstall && sp.request == 0),
+        "restore-install must carry the victim request id"
+    );
+
+    // The Perfetto export parses and carries >= 1 restore_install event.
+    let text = perfetto_json(&out.spans).to_string();
+    let doc = Json::parse(&text).expect("perfetto export must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), out.spans.len());
+    let installs = events
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("restore_install"))
+        .count();
+    assert!(installs >= 1, "exported trace lost the restore anatomy");
+
+    // Prometheus exposition of the same run stays well-formed.
+    let prom = prometheus_text(&out.report);
+    assert!(prom.contains("tarragon_aw_failures_total 1"));
+    for line in prom.lines() {
+        assert!(
+            line.starts_with('#') || line.split_whitespace().count() == 2,
+            "malformed exposition line: {line:?}"
+        );
+    }
+}
+
+#[test]
+fn tracing_does_not_perturb_the_run() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let off = adopt_scenario(false).run(manifest.clone(), weights.clone());
+    let on = adopt_scenario(true).run(manifest, weights);
+    assert!(off.completed && on.completed);
+    assert!(off.spans.is_empty(), "trace-off run must record no spans");
+    assert_eq!(on.tokens, off.tokens, "tracing changed the token streams");
+    assert_eq!(
+        on.event_log, off.event_log,
+        "tracing changed the event log — the observer effect is real"
+    );
+    // Stall attribution is derived from the (unconditional) lifecycle
+    // events, so it is available with tracing off too.
+    assert!(!off.recovery.is_empty());
+    assert_eq!(off.recovery.incidents.len(), on.recovery.incidents.len());
+}
