@@ -10,7 +10,9 @@
 //! unit-tested without threads; the service loop in `cluster` drives it
 //! from fabric messages.
 
-use crate::proto::{ClusterMsg, CommitMeta, RestoreData, SegPayload, SegmentMsg};
+use crate::proto::{
+    ClusterMsg, CommitMeta, RequestSync, RestoreData, SegPayload, SegmentMsg, StoreSnapshot,
+};
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 #[derive(Debug, Default)]
@@ -284,6 +286,67 @@ impl StoreLog {
     pub fn segment_data(&self, request: u64, pos: u32, layer: u16) -> Option<SegPayload> {
         self.reqs.get(&request)?.segments.get(&(pos, layer)).cloned()
     }
+
+    /// Export the full log for peer re-sync (DESIGN.md §15). Everything
+    /// payload-sized is `Arc`-shared — a snapshot is refcount bumps.
+    /// Deterministically ordered so replay on the importer is reproducible.
+    pub fn export_sync(&self) -> StoreSnapshot {
+        let mut requests: Vec<RequestSync> = self
+            .reqs
+            .iter()
+            .map(|(&id, r)| {
+                let mut segments: Vec<(u32, u16, SegPayload)> =
+                    r.segments.iter().map(|(&(p, l), d)| (p, l, d.clone())).collect();
+                segments.sort_by_key(|&(p, l, _)| (p, l));
+                let mut commits: Vec<CommitMeta> = r.committed.iter().cloned().collect();
+                commits.extend(r.pending_commits.iter().cloned());
+                RequestSync { request: id, owner_aw: r.owner_aw, commits, segments }
+            })
+            .collect();
+        requests.sort_by_key(|r| r.request);
+        let mut finished: Vec<u64> = self.finished.iter().copied().collect();
+        finished.sort_unstable();
+        let mut page_index: Vec<(u64, Vec<SegPayload>)> =
+            self.page_index.iter().map(|(&h, ps)| (h, ps.clone())).collect();
+        page_index.sort_by_key(|&(h, _)| h);
+        StoreSnapshot { requests, finished, page_index }
+    }
+
+    /// Merge a peer's snapshot into this log (rebuilt-replica re-sync).
+    /// Segments and commits replay through the normal ingest paths, so
+    /// deferral and monotonicity behave exactly as for live traffic, and
+    /// re-importing is idempotent (duplicate segments overwrite with the
+    /// same payload; stale commits never regress an accepted one).
+    pub fn import_sync(&mut self, snap: StoreSnapshot) {
+        for f in &snap.finished {
+            self.forget(*f);
+        }
+        for (h, payloads) in snap.page_index {
+            if !self.page_index.contains_key(&h) {
+                self.page_index.insert(h, payloads);
+                self.pages_indexed += 1;
+            }
+        }
+        for r in snap.requests {
+            if self.finished.contains(&r.request) {
+                continue;
+            }
+            for (pos, layer, data) in r.segments {
+                self.segment(r.owner_aw, SegmentMsg { request: r.request, pos, layer, data });
+            }
+            for c in r.commits {
+                self.commit(r.owner_aw, c);
+            }
+        }
+    }
+
+    /// Drop the content index (fault injection: a replica that lost its
+    /// index). Subsequent `page_ref`s miss, their covering commits stay
+    /// deferred, and restores against this replica degrade to
+    /// restore-from-scratch — never a wrong restore.
+    pub fn drop_page_index(&mut self) {
+        self.page_index.clear();
+    }
 }
 
 /// Store message handler used by the service loop: returns the reply (if
@@ -372,8 +435,9 @@ impl CkptStore {
             }
             ClusterMsg::ReqFinished { request } => {
                 // Gateway-reported end-of-request: reclaim the segment log
-                // and commit records (bounded store memory).
-                if from == NodeId::Gateway {
+                // and commit records (bounded store memory). Any gateway
+                // shard may reclaim (each broadcasts to every replica).
+                if matches!(from, NodeId::Gateway(_)) {
                     self.log.forget(request);
                     self.pending_pulls.remove(&request);
                 }
@@ -397,6 +461,17 @@ impl CkptStore {
             ClusterMsg::QueryActive { aw } => {
                 let reqs = self.log.active_of(aw);
                 vec![(NodeId::Orchestrator, ClusterMsg::ActiveReqs { aw, reqs })]
+            }
+            ClusterMsg::StoreSyncPull { from: peer } => {
+                // A rebuilt replica asks for our full log.
+                vec![(NodeId::Store(peer), ClusterMsg::StoreSyncData(self.log.export_sync()))]
+            }
+            ClusterMsg::StoreSyncData(snap) => {
+                self.log.import_sync(snap);
+                // Importing can complete deferred commits, which in turn
+                // can answer pulls parked on this (rebuilt) replica.
+                let parked: Vec<u64> = self.pending_pulls.keys().copied().collect();
+                parked.into_iter().filter_map(|r| self.serve_pending(r)).collect()
             }
             _ => vec![],
         }
@@ -549,7 +624,7 @@ mod tests {
         assert_eq!(store.log.num_requests(), 1);
         assert!(store.log.resident_bytes() > 0);
         // Gateway reports the request finished: state is dropped.
-        store.handle(NodeId::Gateway, ClusterMsg::ReqFinished { request: 5 });
+        store.handle(NodeId::Gateway(0), ClusterMsg::ReqFinished { request: 5 });
         assert_eq!(store.log.num_requests(), 0);
         assert_eq!(store.log.resident_bytes(), 0);
         // A straggler segment/commit must not resurrect the log entry.
@@ -604,7 +679,7 @@ mod tests {
         let mut store = CkptStore::new(1);
         store.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(7, 0, 0)));
         store.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(7, 1, 1)));
-        store.handle(NodeId::Gateway, ClusterMsg::ReqFinished { request: 7 });
+        store.handle(NodeId::Gateway(0), ClusterMsg::ReqFinished { request: 7 });
         assert!(store.handle(NodeId::Aw(1), ClusterMsg::RestorePull { request: 7 }).is_empty());
         assert_eq!(store.pending_pulls(), 0, "finished requests must not park pulls");
     }
@@ -698,6 +773,114 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn sync_roundtrip_rebuilds_a_replica() {
+        // Replica A has segments, an accepted commit, a deferred commit,
+        // a tombstone, and an indexed page. A fresh replica B imports the
+        // snapshot and agrees on all of it — with shared payloads.
+        let mut a = StoreLog::with_page_tokens(1, 2);
+        a.segment(0, seg(1, 0, 0));
+        a.segment(0, seg(1, 1, 0));
+        a.commit(0, commit(1, 2, 2));
+        a.segment(1, seg(2, 0, 0));
+        a.commit(1, commit(2, 2, 1)); // deferred: pos 1 missing
+        a.segment(0, seg(3, 0, 0));
+        a.forget(3);
+        assert_eq!(a.pages_indexed, 1);
+
+        let mut b = StoreLog::with_page_tokens(1, 2);
+        b.import_sync(a.export_sync());
+        assert_eq!(b.committed(1).unwrap().committed_pos, 2);
+        assert!(b.committed(2).is_none(), "deferred commit must stay deferred");
+        assert!(b.is_finished(3));
+        assert_eq!(b.pages_indexed, 1);
+        // Payloads are shared, not copied.
+        let pa = a.segment_data(1, 0, 0).unwrap();
+        let pb = b.segment_data(1, 0, 0).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&pa, &pb));
+        // The straggler segment completes request 2's prefix on B exactly
+        // as it would have on A.
+        b.segment(1, seg(2, 1, 0));
+        assert_eq!(b.committed(2).unwrap().committed_pos, 2);
+        // Re-import is idempotent.
+        let accepted = b.commits_accepted;
+        b.import_sync(a.export_sync());
+        assert_eq!(b.commits_accepted, accepted);
+        assert_eq!(b.committed(2).unwrap().committed_pos, 2);
+    }
+
+    #[test]
+    fn parked_pull_survives_replica_failover() {
+        // Satellite (a): a pull parked against an in-flight commit on a
+        // dying replica must still be answered. With fan-out, the pull
+        // parks on EVERY live replica; whichever one sees the completing
+        // commit serves its own parked copy — replica A's death is
+        // irrelevant.
+        use crate::transport::NodeId;
+        let mut a = CkptStore::new(1);
+        let mut b = CkptStore::new(1);
+        // Both replicas got the segment; the covering commit is in flight.
+        for s in [&mut a, &mut b] {
+            s.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(9, 0, 0)));
+        }
+        // The adopting AW's pull fans out and parks on both replicas.
+        assert!(a.handle(NodeId::Aw(2), ClusterMsg::RestorePull { request: 9 }).is_empty());
+        assert!(b.handle(NodeId::Aw(2), ClusterMsg::RestorePull { request: 9 }).is_empty());
+        assert_eq!(a.pending_pulls(), 1);
+        assert_eq!(b.pending_pulls(), 1);
+        // Replica A dies before the commit lands.
+        drop(a);
+        // The commit reaches surviving replica B, which serves its parked
+        // pull — the pull was never "owned" by the dead replica.
+        let replies = b.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(9, 1, 1)));
+        assert_eq!(replies.len(), 1);
+        match &replies[0] {
+            (NodeId::Aw(2), ClusterMsg::Restore(d)) => assert_eq!(d.meta.committed_pos, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.pending_pulls(), 0);
+    }
+
+    #[test]
+    fn sync_import_serves_parked_pulls() {
+        // A rebuilt replica can have a pull parked before its re-sync
+        // completes; importing the peer snapshot must answer it.
+        use crate::transport::NodeId;
+        let mut peer = CkptStore::new(1);
+        peer.handle(NodeId::Aw(0), ClusterMsg::CkptSegment(seg(4, 0, 0)));
+        peer.handle(NodeId::Aw(0), ClusterMsg::CkptCommit(commit(4, 1, 1)));
+        let mut rebuilt = CkptStore::new(1);
+        assert!(rebuilt
+            .handle(NodeId::Aw(3), ClusterMsg::RestorePull { request: 4 })
+            .is_empty());
+        let sync = peer.handle(NodeId::Store(1), ClusterMsg::StoreSyncPull { from: 1 });
+        assert_eq!(sync.len(), 1);
+        let (to, msg) = sync.into_iter().next().unwrap();
+        assert_eq!(to, NodeId::Store(1));
+        let replies = rebuilt.handle(NodeId::Store(0), msg);
+        assert_eq!(replies.len(), 1);
+        assert!(matches!(&replies[0], (NodeId::Aw(3), ClusterMsg::Restore(_))));
+    }
+
+    #[test]
+    fn dropped_page_index_degrades_refs_to_misses() {
+        let mut log = StoreLog::with_page_tokens(1, 2);
+        let s0 = seg_v(1, 0, 0, 3.0);
+        let s1 = seg_v(1, 1, 0, 4.0);
+        let h = page_hash(&[s0.data.clone(), s1.data.clone()], 0);
+        log.segment(0, s0);
+        log.segment(0, s1);
+        assert!(log.has_page(h));
+        log.drop_page_index();
+        assert!(!log.has_page(h));
+        // The ref now misses; the covering commit stays deferred forever,
+        // so restore_data never lies and recovery falls back to Resubmit.
+        assert!(!log.page_ref(2, 2, 0, 0, h));
+        assert_eq!(log.page_refs_missed, 1);
+        log.commit(2, commit(2, 2, 1));
+        assert!(log.restore_data(2).is_none());
     }
 
     #[test]

@@ -73,10 +73,12 @@ impl CkptStreamer {
         self.queue.len()
     }
 
-    /// Opportunistically drain the queue through `qp` while the egress
-    /// link stays idle (or unconditionally while over the soft cap).
-    /// Returns the number of messages posted.
-    pub fn flush(&mut self, qp: &Qp<ClusterMsg>, egress: &Arc<Link>) -> usize {
+    /// Opportunistically drain the queue through every store-replica QP
+    /// while the egress link stays idle (or unconditionally while over
+    /// the soft cap). Returns the number of queue items posted; each item
+    /// fans out to all `qps` (DESIGN.md §15 — the payload `Arc` makes the
+    /// K-way fan-out refcount bumps, not float copies).
+    pub fn flush(&mut self, qps: &[Qp<ClusterMsg>], egress: &Arc<Link>) -> usize {
         if !self.enabled {
             return 0;
         }
@@ -91,7 +93,7 @@ impl CkptStreamer {
             }
             let _ = item; // popped next
             let next = self.queue.pop_front().unwrap();
-            posted += self.post_item(next, qp);
+            posted += self.post_item(next, qps);
         }
         posted
     }
@@ -101,13 +103,13 @@ impl CkptStreamer {
     /// so the adopting AW's restore pull can be served). The posts still
     /// serialize behind any in-flight traffic on the egress link — this
     /// only bypasses the opportunistic deferral.
-    pub fn flush_now(&mut self, qp: &Qp<ClusterMsg>) -> usize {
+    pub fn flush_now(&mut self, qps: &[Qp<ClusterMsg>]) -> usize {
         if !self.enabled {
             return 0;
         }
         let mut posted = 0;
         while let Some(item) = self.queue.pop_front() {
-            posted += self.post_item(item, qp);
+            posted += self.post_item(item, qps);
         }
         if posted > 0 {
             self.forced_flushes += 1;
@@ -115,35 +117,32 @@ impl CkptStreamer {
         posted
     }
 
-    fn post_item(&mut self, item: Item, qp: &Qp<ClusterMsg>) -> usize {
-        match item {
-            Item::Segment(s) => {
-                let bytes = s.wire_bytes();
-                if qp.post(ClusterMsg::CkptSegment(s), bytes, TrafficClass::Checkpoint).is_ok() {
-                    self.segments_sent += 1;
-                    self.bytes_sent += bytes as u64;
-                    return 1;
-                }
-            }
-            Item::Commit(c) => {
-                let bytes = c.wire_bytes();
-                if qp.post(ClusterMsg::CkptCommit(c), bytes, TrafficClass::Checkpoint).is_ok() {
-                    self.commits_sent += 1;
-                    self.bytes_sent += bytes as u64;
-                    return 1;
-                }
-            }
+    fn post_item(&mut self, item: Item, qps: &[Qp<ClusterMsg>]) -> usize {
+        let msg = match item {
+            Item::Segment(s) => ClusterMsg::CkptSegment(s),
+            Item::Commit(c) => ClusterMsg::CkptCommit(c),
             Item::PageRef { request, layer, first_pos, hash } => {
-                let msg = ClusterMsg::CkptPageRef { request, layer, first_pos, hash };
-                let bytes = msg.wire_bytes();
-                if qp.post(msg, bytes, TrafficClass::Checkpoint).is_ok() {
-                    self.page_refs_sent += 1;
-                    self.bytes_sent += bytes as u64;
-                    return 1;
-                }
+                ClusterMsg::CkptPageRef { request, layer, first_pos, hash }
+            }
+        };
+        let bytes = msg.wire_bytes();
+        let mut any = false;
+        for qp in qps {
+            // Cloning the message is cheap: segment payloads are Arcs.
+            if qp.post(msg.clone(), bytes, TrafficClass::Checkpoint).is_ok() {
+                any = true;
+                self.bytes_sent += bytes as u64;
             }
         }
-        0
+        if !any {
+            return 0;
+        }
+        match msg {
+            ClusterMsg::CkptSegment(_) => self.segments_sent += 1,
+            ClusterMsg::CkptCommit(_) => self.commits_sent += 1,
+            _ => self.page_refs_sent += 1,
+        }
+        1
     }
 }
 
@@ -160,9 +159,9 @@ mod tests {
             bandwidth_bps: bw,
             worker_extra_init: Duration::ZERO,
         });
-        let (store_inbox, _sh) = fabric.register(NodeId::Store);
+        let (store_inbox, _sh) = fabric.register(NodeId::Store(0));
         let (_ai, ah) = fabric.register(NodeId::Aw(0));
-        let qp = fabric.qp(NodeId::Aw(0), NodeId::Store, Plane::Data).unwrap();
+        let qp = fabric.qp(NodeId::Aw(0), NodeId::Store(0), Plane::Data).unwrap();
         let egress = ah.egress().clone();
         (fabric, store_inbox, qp, egress)
     }
@@ -189,7 +188,7 @@ mod tests {
         // serialization window; drain with retries like the AW loop does.
         let mut n = 0;
         for _ in 0..100 {
-            n += s.flush(&qp, &egress);
+            n += s.flush(std::slice::from_ref(&qp), &egress);
             if s.pending() == 0 {
                 break;
             }
@@ -213,10 +212,10 @@ mod tests {
         egress.reserve(5_000, TrafficClass::ExpertDispatch); // 50 ms busy
         let mut s = CkptStreamer::new(true, 1000);
         s.push_segment(seg(0));
-        assert_eq!(s.flush(&qp, &egress), 0, "must defer to busy link");
+        assert_eq!(s.flush(std::slice::from_ref(&qp), &egress), 0, "must defer to busy link");
         assert_eq!(s.pending(), 1);
         std::thread::sleep(Duration::from_millis(60));
-        assert_eq!(s.flush(&qp, &egress), 1);
+        assert_eq!(s.flush(std::slice::from_ref(&qp), &egress), 1);
         assert_eq!(s.pending(), 0);
     }
 
@@ -228,7 +227,7 @@ mod tests {
         for p in 0..5 {
             s.push_segment(seg(p));
         }
-        let n = s.flush(&qp, &egress);
+        let n = s.flush(std::slice::from_ref(&qp), &egress);
         assert!(n >= 3, "over-cap items must flush despite busy link, n={n}");
         assert!(s.forced_flushes > 0);
         assert!(s.pending() <= 2);
@@ -242,8 +241,8 @@ mod tests {
         for p in 0..4 {
             s.push_segment(seg(p));
         }
-        assert_eq!(s.flush(&qp, &egress), 0, "opportunistic flush defers");
-        assert_eq!(s.flush_now(&qp), 4, "preemption flush must not defer");
+        assert_eq!(s.flush(std::slice::from_ref(&qp), &egress), 0, "opportunistic flush defers");
+        assert_eq!(s.flush_now(std::slice::from_ref(&qp)), 4, "preemption flush must not defer");
         assert_eq!(s.pending(), 0);
         assert_eq!(s.segments_sent, 4);
     }
@@ -256,7 +255,7 @@ mod tests {
         let emitted: crate::proto::SegPayload = Arc::new(vec![7.0; 64]);
         s.push_segment(SegmentMsg { request: 9, pos: 0, layer: 0, data: emitted.clone() });
         for _ in 0..100 {
-            s.flush(&qp, &egress);
+            s.flush(std::slice::from_ref(&qp), &egress);
             if s.pending() == 0 {
                 break;
             }
@@ -275,11 +274,39 @@ mod tests {
     }
 
     #[test]
+    fn fan_out_reaches_every_replica_with_shared_payloads() {
+        let fabric: Arc<Fabric<ClusterMsg>> = Fabric::new(TransportConfig {
+            latency: Duration::ZERO,
+            bandwidth_bps: 1e9,
+            worker_extra_init: Duration::ZERO,
+        });
+        let (in0, _h0) = fabric.register(NodeId::Store(0));
+        let (in1, _h1) = fabric.register(NodeId::Store(1));
+        let (_ai, _ah) = fabric.register(NodeId::Aw(0));
+        let qps = vec![
+            fabric.qp(NodeId::Aw(0), NodeId::Store(0), Plane::Data).unwrap(),
+            fabric.qp(NodeId::Aw(0), NodeId::Store(1), Plane::Data).unwrap(),
+        ];
+        let mut s = CkptStreamer::new(true, 1000);
+        let emitted: crate::proto::SegPayload = Arc::new(vec![3.0; 64]);
+        s.push_segment(SegmentMsg { request: 2, pos: 0, layer: 0, data: emitted.clone() });
+        assert_eq!(s.flush_now(&qps), 1, "one item, fanned out");
+        assert_eq!(s.segments_sent, 1, "item counters count items, not replicas");
+        let bytes = SegmentMsg { request: 2, pos: 0, layer: 0, data: emitted.clone() }.wire_bytes();
+        assert_eq!(s.bytes_sent, 2 * bytes as u64, "wire bytes count every replica");
+        for inbox in [&in0, &in1] {
+            let env = inbox.recv(Duration::from_millis(100)).unwrap();
+            let ClusterMsg::CkptSegment(m) = env.msg else { panic!("expected segment") };
+            assert!(Arc::ptr_eq(&emitted, &m.data), "fan-out must share the payload");
+        }
+    }
+
+    #[test]
     fn disabled_streamer_drops_everything() {
         let (_f, _inbox, qp, egress) = mk_fabric(1e9);
         let mut s = CkptStreamer::new(false, 10);
         s.push_segment(seg(0));
         assert_eq!(s.pending(), 0);
-        assert_eq!(s.flush(&qp, &egress), 0);
+        assert_eq!(s.flush(std::slice::from_ref(&qp), &egress), 0);
     }
 }

@@ -58,11 +58,26 @@ pub struct ClusterConfig {
     pub decode_batch: usize,
     /// Max concurrent requests resident on one AW (admission cap).
     pub max_resident: usize,
+    /// Checkpoint-store replicas (DESIGN.md §15). 1 = the classic single
+    /// store; K > 1 fans every segment/commit/page-ref out to all live
+    /// replicas and restores fall over to survivors.
+    pub num_stores: usize,
+    /// Gateway shards; requests are owned by shard
+    /// `chash::owner(request_id, live_gateways)`. 1 = the classic single
+    /// gateway.
+    pub num_gateways: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { num_aws: 4, num_ews: 4, decode_batch: 8, max_resident: 16 }
+        ClusterConfig {
+            num_aws: 4,
+            num_ews: 4,
+            decode_batch: 8,
+            max_resident: 16,
+            num_stores: 1,
+            num_gateways: 1,
+        }
     }
 }
 
@@ -209,6 +224,10 @@ pub struct ResilienceConfig {
     /// wait exceeds this reports a fatal communicator error — the NCCL
     /// abort-timeout analogue that triggers coarse-grained restart.
     pub ccl_abort_timeout: Duration,
+    /// Run a warm-standby orchestrator (DESIGN.md §15): mirrors the
+    /// active's state via `OrchSync` and promotes itself when the active
+    /// goes silent past the probe budget (or on a planned `promote orch`).
+    pub orch_standby: bool,
 }
 
 impl Default for ResilienceConfig {
@@ -228,6 +247,7 @@ impl Default for ResilienceConfig {
             partial_batch_wait: Duration::from_millis(4),
             min_batch_fraction: 0.5,
             ccl_abort_timeout: Duration::from_secs(2),
+            orch_standby: false,
         }
     }
 }
@@ -447,6 +467,8 @@ impl Config {
         cl.num_ews = get_usize("cluster.num_ews", cl.num_ews)?;
         cl.decode_batch = get_usize("cluster.decode_batch", cl.decode_batch)?;
         cl.max_resident = get_usize("cluster.max_resident", cl.max_resident)?;
+        cl.num_stores = get_usize("cluster.num_stores", cl.num_stores)?;
+        cl.num_gateways = get_usize("cluster.num_gateways", cl.num_gateways)?;
 
         let r = &mut self.resilience;
         r.checkpointing = get_bool("resilience.checkpointing", r.checkpointing)?;
@@ -465,6 +487,7 @@ impl Config {
             get_usize("resilience.probe_retries", r.probe_retries as usize)? as u32;
         r.min_batch_fraction =
             get_f64("resilience.min_batch_fraction", r.min_batch_fraction)?;
+        r.orch_standby = get_bool("resilience.orch_standby", r.orch_standby)?;
 
         let t = &mut self.transport;
         t.latency = get_ms("transport.latency_ms", t.latency)?;
@@ -528,6 +551,12 @@ impl Config {
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.cluster.num_aws == 0 || self.cluster.num_ews == 0 {
             return Err(ConfigError::Invalid("need at least 1 AW and 1 EW".into()));
+        }
+        if self.cluster.num_stores == 0 {
+            return Err(ConfigError::Invalid("num_stores must be >= 1".into()));
+        }
+        if self.cluster.num_gateways == 0 {
+            return Err(ConfigError::Invalid("num_gateways must be >= 1".into()));
         }
         if self.cluster.decode_batch == 0 {
             return Err(ConfigError::Invalid("decode_batch must be >= 1".into()));
@@ -780,6 +809,32 @@ event_capacity = 256
         assert!(Config::from_toml_str("[trace]\nring_capacity = 0\n").is_err());
         assert!(Config::from_toml_str("[trace]\nevent_capacity = 0\n").is_err());
         assert!(Config::from_toml_str("[trace]\nenabled = 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_control_plane_replication() {
+        let cfg = Config::from_toml_str(
+            r#"
+[cluster]
+num_stores = 3
+num_gateways = 2
+
+[resilience]
+orch_standby = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.num_stores, 3);
+        assert_eq!(cfg.cluster.num_gateways, 2);
+        assert!(cfg.resilience.orch_standby);
+        // Defaults keep the classic single-instance control plane.
+        let d = Config::default();
+        assert_eq!(d.cluster.num_stores, 1);
+        assert_eq!(d.cluster.num_gateways, 1);
+        assert!(!d.resilience.orch_standby);
+        assert!(Config::from_toml_str("[cluster]\nnum_stores = 0\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\nnum_gateways = 0\n").is_err());
+        assert!(Config::from_toml_str("[resilience]\norch_standby = 2\n").is_err());
     }
 
     #[test]

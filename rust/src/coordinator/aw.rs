@@ -110,6 +110,19 @@ enum ReqPhase {
     Decode,
 }
 
+/// Per-request token history (multi-gateway deployments only): every
+/// token this AW emitted for the request, from `base` onward. When a
+/// gateway shard dies, tokens in flight to it are lost on the wire; on
+/// the orchestrator's `GatewaySet` the AW re-emits the history of every
+/// request whose owner shard changed, and the surviving shards' gap-fill
+/// dedup drops what they already saw. Retained after finish (the
+/// re-emission must be able to close the stream on the new owner).
+struct TokenLog {
+    base: u32,
+    tokens: Vec<u32>,
+    finished: bool,
+}
+
 struct Req {
     meta: RequestMeta,
     kv: RequestKv,
@@ -139,8 +152,19 @@ pub struct AwWorker {
     clock: Clock,
     refe: Refe,
     streamer: CkptStreamer,
-    store_qp: Qp<ClusterMsg>,
-    gw_qp: Qp<ClusterMsg>,
+    /// One data-plane QP per checkpoint-store replica: segments, commits
+    /// and page refs fan out to every replica (`Arc`-shared payloads, so
+    /// replication costs refcount bumps, not float copies).
+    store_qps: Vec<Qp<ClusterMsg>>,
+    /// One control-plane QP per gateway shard, indexed by shard id
+    /// (shards never respawn, so the index is stable for the run).
+    gw_qps: Vec<Qp<ClusterMsg>>,
+    /// Live gateway shards (orchestrator `GatewaySet` keeps it current).
+    /// Request ownership is `chash::owner(request_id, &gateways)`.
+    gateways: Vec<u32>,
+    /// Token history per request; maintained only when `gw_qps.len() > 1`
+    /// (single-gateway runs have no failover to replay into).
+    token_log: BTreeMap<u64, TokenLog>,
     orch_qp: Qp<ClusterMsg>,
     pool: Arc<KvPool>,
     /// Ordered map: iteration order (PCR snapshots, diagnostics) must be
@@ -218,8 +242,15 @@ impl AwWorker {
             p.events.clone(),
             p.trace.clone(),
         );
-        let store_qp = p.fabric.qp(node, NodeId::Store, Plane::Data).map_err(|e| e.to_string())?;
-        let gw_qp = p.fabric.qp(node, NodeId::Gateway, Plane::Control).map_err(|e| e.to_string())?;
+        let store_qps = (0..p.cfg.cluster.num_stores.max(1) as u32)
+            .map(|k| p.fabric.qp(node, NodeId::Store(k), Plane::Data))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| e.to_string())?;
+        let gw_qps = (0..p.cfg.cluster.num_gateways.max(1) as u32)
+            .map(|g| p.fabric.qp(node, NodeId::Gateway(g), Plane::Control))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| e.to_string())?;
+        let gateways: Vec<u32> = (0..gw_qps.len() as u32).collect();
         let orch_qp =
             p.fabric.qp(node, NodeId::Orchestrator, Plane::Control).map_err(|e| e.to_string())?;
         let streamer = CkptStreamer::new(p.cfg.resilience.checkpointing, 4096);
@@ -238,8 +269,10 @@ impl AwWorker {
             clock,
             refe,
             streamer,
-            store_qp,
-            gw_qp,
+            store_qps,
+            gw_qps,
+            gateways,
+            token_log: BTreeMap::new(),
             orch_qp,
             pool: p.pool,
             reqs: BTreeMap::new(),
@@ -328,9 +361,58 @@ impl AwWorker {
         self.device.kill();
     }
 
+    /// Whether per-request token histories are maintained (sharded
+    /// gateway deployments only).
+    fn track_tokens(&self) -> bool {
+        self.gw_qps.len() > 1
+    }
+
+    /// The QP of the gateway shard that owns `id` under the current live
+    /// set (falls back to shard 0 — the orchestrator never removes the
+    /// last gateway, so the live set is non-empty in practice).
+    fn gw_owner_qp(&self, id: u64) -> &Qp<ClusterMsg> {
+        let shard = crate::util::chash::owner(id, &self.gateways).unwrap_or(0);
+        &self.gw_qps[shard as usize]
+    }
+
+    /// Gateway failover repair: for every request whose owner shard
+    /// changed between `old` and the current live set, re-emit the full
+    /// token history (and the final `Finished`, if reached) to the new
+    /// owner. Tokens the old owner already recorded into the shared
+    /// stream are deduplicated by the gateways' gap-fill logic; only the
+    /// window that was in flight to the dead shard is actually new.
+    fn replay_moved_streams(&mut self, old: &[u32]) {
+        for (&id, log) in &self.token_log {
+            if crate::util::chash::owner(id, old) == crate::util::chash::owner(id, &self.gateways)
+            {
+                continue;
+            }
+            let qp = self.gw_owner_qp(id);
+            for (i, &token) in log.tokens.iter().enumerate() {
+                let _ = qp.post(
+                    ClusterMsg::Token {
+                        request: id,
+                        index: log.base + i as u32,
+                        token,
+                        worker: self.idx,
+                    },
+                    HDR_BYTES,
+                    TrafficClass::Control,
+                );
+            }
+            if log.finished {
+                let _ = qp.post(
+                    ClusterMsg::Finished { request: id, worker: self.idx },
+                    HDR_BYTES,
+                    TrafficClass::Control,
+                );
+            }
+        }
+    }
+
     fn flush_ckpt(&mut self) {
         let span_t0 = self.trace.as_ref().map(|t| t.start());
-        let posted = self.streamer.flush(&self.store_qp, self.handle.egress());
+        let posted = self.streamer.flush(&self.store_qps, self.handle.egress());
         // Only flushes that moved data produce spans — the opportunistic
         // no-op calls on every loop iteration would drown the trace.
         if let (true, Some(tr), Some(t0)) = (posted > 0, &self.trace, span_t0) {
@@ -358,7 +440,9 @@ impl AwWorker {
             queue_depth: (self.prefill_q.len() + self.active.len()) as u32,
             resident: self.reqs.len() as u32,
         });
-        let _ = self.gw_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Admin);
+        for &g in &self.gateways {
+            let _ = self.gw_qps[g as usize].post(msg.clone(), HDR_BYTES, TrafficClass::Admin);
+        }
         let _ = self.orch_qp.post(msg, HDR_BYTES, TrafficClass::Admin);
     }
 
@@ -423,7 +507,7 @@ impl AwWorker {
     /// meta to the orchestrator, which re-admits the request later via
     /// the same `AdoptRequest`/restore path that heals AW failures.
     fn preempt(&mut self, id: u64) {
-        self.streamer.flush_now(&self.store_qp);
+        self.streamer.flush_now(&self.store_qps);
         self.active.retain(|&r| r != id);
         let req = self.reqs.remove(&id).expect("preempt of unknown request");
         let meta = CommitMeta {
@@ -438,8 +522,8 @@ impl AwWorker {
         self.preemptions += 1;
         let msg = ClusterMsg::Preempted { aw: self.idx, meta };
         let _ = self.orch_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Control);
-        // Informational copy for the gateway's event log.
-        let _ = self.gw_qp.post(msg, HDR_BYTES, TrafficClass::Control);
+        // Informational copy for the owning gateway's event log.
+        let _ = self.gw_owner_qp(id).post(msg, HDR_BYTES, TrafficClass::Control);
     }
 
     /// Planned drain/migration: evict everything. Committed requests go
@@ -476,9 +560,10 @@ impl AwWorker {
     /// orchestrator (authoritative) and the gateway (event log), keeping
     /// every preemption counter consistent.
     fn bounce_restore(&mut self, meta: CommitMeta) {
+        let id = meta.request;
         let msg = ClusterMsg::Preempted { aw: self.idx, meta };
         let _ = self.orch_qp.post(msg.clone(), HDR_BYTES, TrafficClass::Control);
-        let _ = self.gw_qp.post(msg, HDR_BYTES, TrafficClass::Control);
+        let _ = self.gw_owner_qp(id).post(msg, HDR_BYTES, TrafficClass::Control);
     }
 
     /// Reject a request that can never be served here, surfacing a
@@ -487,7 +572,7 @@ impl AwWorker {
     fn reject(&mut self, id: u64, reason: String) {
         self.reqs.remove(&id);
         self.prefill_q.retain(|&r| r != id);
-        let _ = self.gw_qp.post(
+        let _ = self.gw_owner_qp(id).post(
             ClusterMsg::Rejected { request: id, worker: self.idx, reason },
             HDR_BYTES,
             TrafficClass::Control,
@@ -514,7 +599,9 @@ impl AwWorker {
                         data,
                     });
                     let bytes = msg.wire_bytes();
-                    let _ = self.store_qp.post(msg, bytes, TrafficClass::Checkpoint);
+                    for qp in &self.store_qps {
+                        let _ = qp.post(msg.clone(), bytes, TrafficClass::Checkpoint);
+                    }
                 }
             }
             let req = &self.reqs[&id];
@@ -527,7 +614,9 @@ impl AwWorker {
                 prompt_len: req.prompt_len,
             });
             let bytes = msg.wire_bytes();
-            let _ = self.store_qp.post(msg, bytes, TrafficClass::Checkpoint);
+            for qp in &self.store_qps {
+                let _ = qp.post(msg.clone(), bytes, TrafficClass::Checkpoint);
+            }
         }
         // Pause until the snapshot is fully on the wire.
         let busy = self.handle.egress().busy_for();
@@ -550,6 +639,15 @@ impl AwWorker {
                     return;
                 }
                 let prompt_len = meta.prompt.len() as u32;
+                if self.track_tokens() {
+                    // Fresh submission (or resubmission from the prompt):
+                    // generation restarts deterministically from token 0,
+                    // so any stale history is superseded wholesale.
+                    self.token_log.insert(
+                        id,
+                        TokenLog { base: 0, tokens: Vec::new(), finished: false },
+                    );
+                }
                 let kv = RequestKv::new(&self.manifest.model, &self.pool);
                 self.reqs.insert(
                     id,
@@ -574,13 +672,26 @@ impl AwWorker {
                 if let Some(tr) = &self.trace {
                     self.pull_started.insert(meta.request, tr.start());
                 }
-                let _ = self.store_qp.post(
-                    ClusterMsg::RestorePull { request: meta.request },
-                    HDR_BYTES,
-                    TrafficClass::Control,
-                );
+                // Pull from every replica: the first complete answer wins
+                // (duplicate `Restore`s are idempotent) and a replica that
+                // died or lost the request simply never replies.
+                for qp in &self.store_qps {
+                    let _ = qp.post(
+                        ClusterMsg::RestorePull { request: meta.request },
+                        HDR_BYTES,
+                        TrafficClass::Control,
+                    );
+                }
             }
             ClusterMsg::Restore(data) => self.install_restored(data),
+            ClusterMsg::GatewaySet { gateways } => {
+                if gateways != self.gateways && !gateways.is_empty() {
+                    let old = std::mem::replace(&mut self.gateways, gateways);
+                    if self.track_tokens() {
+                        self.replay_moved_streams(&old);
+                    }
+                }
+            }
             ClusterMsg::PreemptAll => {
                 self.draining = true;
                 self.preempt_all();
@@ -686,6 +797,22 @@ impl AwWorker {
         }
         kv.set_len(committed);
         let id = meta.request;
+        if self.track_tokens() {
+            // Adopt the history if it is contiguous with the committed
+            // state (this AW preempted the request earlier and is now
+            // readopting it); otherwise start a fresh log at the restore
+            // point — earlier tokens already live in another AW's log.
+            let keep = self
+                .token_log
+                .get(&id)
+                .map_or(false, |l| l.base + l.tokens.len() as u32 == meta.generated);
+            if !keep {
+                self.token_log.insert(
+                    id,
+                    TokenLog { base: meta.generated, tokens: Vec::new(), finished: false },
+                );
+            }
+        }
         self.reqs.insert(
             id,
             Req {
@@ -1072,7 +1199,12 @@ impl AwWorker {
     }
 
     fn emit_token(&mut self, id: u64, index: u32, token: u32) {
-        let _ = self.gw_qp.post(
+        if self.track_tokens() {
+            if let Some(log) = self.token_log.get_mut(&id) {
+                log.tokens.push(token);
+            }
+        }
+        let _ = self.gw_owner_qp(id).post(
             ClusterMsg::Token { request: id, index, token, worker: self.idx },
             HDR_BYTES,
             TrafficClass::Control,
@@ -1097,7 +1229,12 @@ impl AwWorker {
     }
 
     fn finish(&mut self, id: u64) {
-        let _ = self.gw_qp.post(
+        if self.track_tokens() {
+            if let Some(log) = self.token_log.get_mut(&id) {
+                log.finished = true;
+            }
+        }
+        let _ = self.gw_owner_qp(id).post(
             ClusterMsg::Finished { request: id, worker: self.idx },
             HDR_BYTES,
             TrafficClass::Control,

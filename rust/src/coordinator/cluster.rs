@@ -1,6 +1,7 @@
-//! Cluster assembly: builds the fabric, spawns the checkpoint store,
-//! orchestrator, gateway, AWs and EWs, and exposes the fault-injection
-//! and reporting API the experiments use.
+//! Cluster assembly: builds the fabric, spawns the checkpoint-store
+//! replicas, orchestrator (plus optional warm standby), gateway shards,
+//! AWs and EWs, and exposes the fault-injection and reporting API the
+//! experiments use.
 //!
 //! Every service thread registers with the cluster's [`Clock`] and blocks
 //! only through it, so the whole cluster runs unchanged on wall time or —
@@ -10,7 +11,7 @@ use super::aw::{self, AwParams};
 use super::ert::Ert;
 use super::ew::{self, EwParams};
 use super::gateway::{self, GatewayParams, GatewayShared};
-use super::orchestrator::{self, OrchParams, OrchState, RecoveryMode};
+use super::orchestrator::{self, OrchParams, OrchState, RecoveryMode, StandbyParams};
 use super::sched::AdmissionLimits;
 use crate::checkpoint::store::CkptStore;
 use crate::config::Config;
@@ -20,7 +21,7 @@ use crate::metrics::{EventLog, RunAnalysis, SharingStats};
 use crate::modelcfg::{weights::Weights, Manifest};
 use crate::proto::ClusterMsg;
 use crate::runtime::Device;
-use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane};
+use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeHandle, NodeId, Plane};
 use crate::util::clock::{self, Clock};
 use crate::workload::Request;
 use std::collections::{BTreeMap, HashMap};
@@ -218,14 +219,21 @@ pub struct Cluster {
     /// Present only with `[trace] enabled = true`.
     pub tracer: Option<Arc<Tracer>>,
     pub gw: Arc<GatewayShared>,
+    /// Checkpoint-store replicas (DESIGN.md §15); `store` aliases replica
+    /// 0 for the single-store callers.
+    pub stores: Vec<Arc<Mutex<CkptStore>>>,
     pub store: Arc<Mutex<CkptStore>>,
     clock: Clock,
     stop: Arc<AtomicBool>,
-    service_threads: Vec<std::thread::JoinHandle<()>>,
+    /// Service threads (stores, orchestrator(+standby), gateways). Behind
+    /// a mutex so `respawn_store` can add the rebuilt replica's thread.
+    service_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pub initial_aws: Vec<u32>,
     pub initial_ews: Vec<u32>,
     /// Initial (ew, primaries, shadows) layout — the respawn template.
     ew_specs: Vec<(u32, Vec<usize>, Vec<usize>)>,
+    num_stores: usize,
+    num_gateways: usize,
 }
 
 /// Summary returned by `Cluster::finish`.
@@ -248,14 +256,60 @@ pub struct ClusterReport {
     pub scale_ins: u64,
     pub shadow_promotions: u64,
     pub scale_rejected: u64,
+    /// Control-plane failovers survived (DESIGN.md §15): store-replica
+    /// deaths, gateway-shard deaths, standby orchestrator promotions.
+    pub store_failovers: u64,
+    pub gateway_failovers: u64,
+    pub orch_promotions: u64,
+    /// Accepted-commit spread (max − min) across live store replicas at
+    /// run end — 0 when the replicas agree (or K = 1).
+    pub store_replica_lag: u64,
     /// KV prefix-sharing counters summed over all AW arenas (§13):
     /// prefill page hits, CoW privatizations, peak pages shared.
     pub sharing: SharingStats,
 }
 
+/// Service loop of one checkpoint-store replica: handle messages, post
+/// the replies the store computed. Shared by initial bring-up and the
+/// `respawn_store` rebuild path.
+fn spawn_store_thread(
+    idx: u32,
+    store: Arc<Mutex<CkptStore>>,
+    inbox: Inbox<ClusterMsg>,
+    handle: NodeHandle,
+    fabric: Arc<Fabric<ClusterMsg>>,
+    stop: Arc<AtomicBool>,
+    clock: &Clock,
+) -> std::thread::JoinHandle<()> {
+    clock::spawn_participant(clock, format!("ckpt-store{idx}"), move || {
+        let mut qps: HashMap<NodeId, crate::transport::Qp<ClusterMsg>> = HashMap::new();
+        while !stop.load(Ordering::Relaxed) && handle.is_alive() {
+            match inbox.recv(Duration::from_millis(2)) {
+                Ok(env) => {
+                    let replies = store.lock().unwrap().handle(env.from, env.msg);
+                    for (to, msg) in replies {
+                        let class = match &msg {
+                            ClusterMsg::Restore(_) => TrafficClass::Restore,
+                            _ => TrafficClass::Admin,
+                        };
+                        let bytes = msg.wire_bytes();
+                        let qp = qps.entry(to).or_insert_with(|| {
+                            fabric.qp(NodeId::Store(idx), to, Plane::Data).expect("qp")
+                        });
+                        let _ = qp.post(msg, bytes, class);
+                    }
+                }
+                Err(crate::transport::QpError::Timeout) => {}
+                Err(_) => break,
+            }
+        }
+    })
+    .expect("store thread")
+}
+
 impl Cluster {
     /// Build and start the full cluster; returns once every worker is
-    /// initialized and the gateway is running the schedule.
+    /// initialized and the gateways are running the schedule.
     pub fn launch(
         cfg: Config,
         manifest: Arc<Manifest>,
@@ -290,48 +344,42 @@ impl Cluster {
             kv_pools: Mutex::new(HashMap::new()),
         });
 
-        // --- checkpoint store service (its own node, §7.1) -------------
-        // The store's page content index must use the same page geometry
-        // as the AW arenas, or prefill page refs never resolve.
-        let store = Arc::new(Mutex::new(CkptStore::with_page_tokens(
-            manifest.model.layers,
-            PoolConfig::from_model(&manifest.model).page_tokens,
-        )));
-        let (store_inbox, store_handle) = fabric.register(NodeId::Store);
-        let store_thread = {
-            let store = store.clone();
-            let fabric = fabric.clone();
-            let stop = stop.clone();
-            clock::spawn_participant(&clock, "ckpt-store", move || {
-                let mut qps: HashMap<NodeId, crate::transport::Qp<ClusterMsg>> = HashMap::new();
-                while !stop.load(Ordering::Relaxed) && store_handle.is_alive() {
-                    match store_inbox.recv(Duration::from_millis(2)) {
-                        Ok(env) => {
-                            let replies = store.lock().unwrap().handle(env.from, env.msg);
-                            for (to, msg) in replies {
-                                let class = match &msg {
-                                    ClusterMsg::Restore(_) => TrafficClass::Restore,
-                                    _ => TrafficClass::Admin,
-                                };
-                                let bytes = msg.wire_bytes();
-                                let qp = qps.entry(to).or_insert_with(|| {
-                                    fabric.qp(NodeId::Store, to, Plane::Data).expect("qp")
-                                });
-                                let _ = qp.post(msg, bytes, class);
-                            }
-                        }
-                        Err(crate::transport::QpError::Timeout) => {}
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("store thread")
-        };
+        let num_stores = cfg.cluster.num_stores.max(1);
+        let num_gateways = cfg.cluster.num_gateways.max(1);
+
+        // --- checkpoint store replicas (their own nodes, §7.1/§15) -----
+        // Each replica's page content index must use the same page
+        // geometry as the AW arenas, or prefill page refs never resolve.
+        // AWs fan commits out to every replica, so each holds the full
+        // durable state independently.
+        let mut service_threads = Vec::new();
+        let mut stores = Vec::new();
+        for k in 0..num_stores as u32 {
+            let store = Arc::new(Mutex::new(CkptStore::with_page_tokens(
+                manifest.model.layers,
+                PoolConfig::from_model(&manifest.model).page_tokens,
+            )));
+            let (inbox, handle) = fabric.register(NodeId::Store(k));
+            service_threads.push(spawn_store_thread(
+                k,
+                store.clone(),
+                inbox,
+                handle,
+                fabric.clone(),
+                stop.clone(),
+                &clock,
+            ));
+            stores.push(store);
+        }
 
         // Pre-register the static service nodes so workers can create QPs
         // toward them during their own init.
         let (orch_inbox, _orch_handle) = fabric.register(NodeId::Orchestrator);
-        let (gw_inbox, _gw_handle) = fabric.register(NodeId::Gateway);
+        let mut gw_inboxes = Vec::new();
+        for g in 0..num_gateways as u32 {
+            let (inbox, _handle) = fabric.register(NodeId::Gateway(g));
+            gw_inboxes.push(inbox);
+        }
 
         // --- expert layout + initial ERT --------------------------------
         let e = manifest.model.experts;
@@ -351,9 +399,9 @@ impl Cluster {
             ew_specs.push((i, primaries, shadows));
         }
 
-        // --- orchestrator ------------------------------------------------
+        // --- orchestrator (+ optional warm standby) ----------------------
         let state = Arc::new(OrchState::default());
-        let orch_thread = orchestrator::spawn(OrchParams {
+        service_threads.push(orchestrator::spawn(OrchParams {
             inbox: orch_inbox,
             mode: opts.mode,
             spawner: spawner.clone(),
@@ -361,9 +409,22 @@ impl Cluster {
             initial_ert: ert.clone(),
             initial_aws: initial_aws.clone(),
             initial_ews: ew_specs.clone(),
+            num_stores,
+            num_gateways,
+            sync_standby: cfg.resilience.orch_standby,
             stop: stop.clone(),
             http_port: opts.http_port,
-        });
+        }));
+        if cfg.resilience.orch_standby {
+            let (standby_inbox, _standby_handle) = fabric.register(NodeId::OrchStandby);
+            service_threads.push(orchestrator::spawn_standby(StandbyParams {
+                inbox: standby_inbox,
+                mode: opts.mode,
+                spawner: spawner.clone(),
+                state: state.clone(),
+                stop: stop.clone(),
+            }));
+        }
 
         // --- workers (parallel bring-up) ---------------------------------
         // Helper threads report through a clock channel (a raw `join` on a
@@ -409,10 +470,12 @@ impl Cluster {
             }
         }
 
-        // --- gateway -------------------------------------------------------
+        // --- gateway shards ------------------------------------------------
         // The event epoch starts here: t=0 is the schedule start (worker
         // bring-up above is excluded from run timelines; T_w is reported
-        // separately via InitStats).
+        // separately via InitStats). Every shard sees the full schedule
+        // and admits only the requests it owns under the consistent hash;
+        // all shards merge into one `GatewayShared`.
         events.rebase();
         if let Some(t) = &tracer {
             t.rebase();
@@ -432,21 +495,27 @@ impl Cluster {
             page_tokens: pool_cfg.page_tokens,
             budget_pages: cfg.sched.kv_budget_pages,
         };
-        let gw_thread = gateway::spawn(GatewayParams {
-            inbox: gw_inbox,
-            schedule,
-            initial_aws: initial_aws.clone(),
-            fabric: fabric.clone(),
-            events: events.clone(),
-            trace: tracer.as_ref().map(|t| t.handle(GATEWAY_TID)),
-            shared: gw_shared.clone(),
-            stop: stop.clone(),
-            drain_timeout: opts.drain_timeout,
-            sched: cfg.sched.clone(),
-            limits,
-            max_per_aw: cfg.cluster.max_resident,
-        });
+        for (g, inbox) in gw_inboxes.into_iter().enumerate() {
+            service_threads.push(gateway::spawn(GatewayParams {
+                shard: g as u32,
+                num_shards: num_gateways,
+                num_stores,
+                inbox,
+                schedule: schedule.clone(),
+                initial_aws: initial_aws.clone(),
+                fabric: fabric.clone(),
+                events: events.clone(),
+                trace: tracer.as_ref().map(|t| t.handle(GATEWAY_TID + g as u32)),
+                shared: gw_shared.clone(),
+                stop: stop.clone(),
+                drain_timeout: opts.drain_timeout,
+                sched: cfg.sched.clone(),
+                limits: limits.clone(),
+                max_per_aw: cfg.cluster.max_resident,
+            }));
+        }
 
+        let store = stores[0].clone();
         Cluster {
             fabric,
             spawner,
@@ -454,13 +523,16 @@ impl Cluster {
             events,
             tracer,
             gw: gw_shared,
+            stores,
             store,
             clock,
             stop,
-            service_threads: vec![store_thread, orch_thread, gw_thread],
+            service_threads: Mutex::new(service_threads),
             initial_aws,
             initial_ews: ew_specs.iter().map(|(i, _, _)| *i).collect(),
             ew_specs,
+            num_stores,
+            num_gateways,
         }
     }
 
@@ -487,17 +559,108 @@ impl Cluster {
         self.post_admin_verb(ClusterMsg::DrainAw { aw: from, target: Some(to) });
     }
 
-    /// Post an admin-plane verb to the orchestrator (as the gateway node,
-    /// the cluster's external entry point).
-    fn post_admin_verb(&self, msg: ClusterMsg) {
-        if let Ok(qp) = self.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control) {
+    /// The lowest live gateway shard — the cluster's external entry point
+    /// for admin verbs (falls back to shard 0 if none is live).
+    fn entry_gateway(&self) -> NodeId {
+        (0..self.num_gateways as u32)
+            .map(NodeId::Gateway)
+            .find(|&g| self.fabric.is_alive(g))
+            .unwrap_or(NodeId::Gateway(0))
+    }
+
+    fn post_as_gateway(&self, to: NodeId, msg: ClusterMsg) {
+        if let Ok(qp) = self.fabric.qp(self.entry_gateway(), to, Plane::Control) {
             let bytes = msg.wire_bytes();
             let _ = qp.post(msg, bytes, TrafficClass::Admin);
         }
     }
 
+    /// Post an admin-plane verb to the orchestrator (as a gateway node,
+    /// the cluster's external entry point).
+    fn post_admin_verb(&self, msg: ClusterMsg) {
+        self.post_as_gateway(NodeId::Orchestrator, msg);
+    }
+
     pub fn kill_ew(&self, idx: u32) {
         self.spawner.kill(NodeId::Ew(idx));
+    }
+
+    /// Fail-stop a checkpoint-store replica (DESIGN.md §15): the node
+    /// goes silent; AWs keep committing to the survivors and parked
+    /// restore pulls are re-driven against them.
+    pub fn kill_store(&self, idx: u32) {
+        self.fabric.kill(NodeId::Store(idx));
+    }
+
+    /// Fail-stop a gateway shard. Its recorded streams live in the
+    /// shared gateway state; the orchestrator rebinds its in-flight
+    /// requests and the survivors re-admit the rest.
+    pub fn kill_gateway(&self, idx: u32) {
+        self.fabric.kill(NodeId::Gateway(idx));
+    }
+
+    /// Fail-stop the active orchestrator. With `orch_standby` enabled the
+    /// standby detects the silence and promotes itself.
+    pub fn kill_orch(&self) {
+        self.fabric.kill(NodeId::Orchestrator);
+    }
+
+    /// Planned orchestrator handover (the scenario DSL's `promote orch`):
+    /// ask the standby to take over; it demotes the active first and only
+    /// assumes the role once the demotion is acked.
+    pub fn promote_orch(&self) {
+        self.post_as_gateway(NodeId::OrchStandby, ClusterMsg::PromoteOrch);
+    }
+
+    /// Drop replica `idx`'s sealed-page content index (keeps the commit
+    /// log) — the `page_refs_missed` degradation fault: restores fall
+    /// back to recompute/resubmit instead of page-ref resolution.
+    pub fn corrupt_store_index(&self, idx: u32) {
+        if let Some(s) = self.stores.get(idx as usize) {
+            s.lock().unwrap().log.drop_page_index();
+        }
+    }
+
+    /// Rebuild a previously killed store replica on its original slot:
+    /// fresh empty state, new service thread (re-registration swaps a new
+    /// inbox under every existing QP toward the node id), then an
+    /// anti-entropy pull from the lowest live peer re-syncs the full
+    /// durable state.
+    pub fn respawn_store(&self, idx: u32) -> Result<(), String> {
+        if (idx as usize) >= self.num_stores {
+            return Err(format!("store{idx} was not part of the initial layout"));
+        }
+        let store = self.stores[idx as usize].clone();
+        *store.lock().unwrap() = CkptStore::with_page_tokens(
+            self.spawner.manifest.model.layers,
+            PoolConfig::from_model(&self.spawner.manifest.model).page_tokens,
+        );
+        let (inbox, handle) = self.fabric.register(NodeId::Store(idx));
+        self.service_threads.lock().unwrap().push(spawn_store_thread(
+            idx,
+            store,
+            inbox,
+            handle,
+            self.fabric.clone(),
+            self.stop.clone(),
+            &self.clock,
+        ));
+        // Anti-entropy: pull the full snapshot from a surviving peer.
+        if let Some(peer) = (0..self.num_stores as u32)
+            .filter(|&p| p != idx)
+            .find(|&p| self.fabric.is_alive(NodeId::Store(p)))
+        {
+            if let Ok(qp) =
+                self.fabric.qp(NodeId::Store(idx), NodeId::Store(peer), Plane::Data)
+            {
+                let msg = ClusterMsg::StoreSyncPull { from: idx };
+                let bytes = msg.wire_bytes();
+                let _ = qp.post(msg, bytes, TrafficClass::Admin);
+            }
+        }
+        self.state.set_store_alive(idx, true);
+        self.state.clear_handled(NodeId::Store(idx));
+        Ok(())
     }
 
     /// Manual scale-out (the scenario DSL's `scale_ew up`): provision one
@@ -525,8 +688,11 @@ impl Cluster {
             self.spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
         }
         // The gateway's routing set excludes draining AWs.
-        self.spawner
-            .post_admin(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
+        let gw_aws = self.state.gateway_aws();
+        for g in self.state.live_gateways() {
+            self.spawner
+                .post_admin(NodeId::Gateway(g), ClusterMsg::AwSet { aws: gw_aws.clone() });
+        }
         self.state.clear_handled(NodeId::Aw(idx));
         Ok(())
     }
@@ -569,11 +735,25 @@ impl Cluster {
     }
 
     /// Stop everything and produce the run report.
-    pub fn finish(mut self, window_secs: f64) -> ClusterReport {
+    pub fn finish(self, window_secs: f64) -> ClusterReport {
         self.stop.store(true, Ordering::Release);
+        // Replica lag is sampled before teardown, over live replicas only
+        // (a killed replica is not lag — its state died with it).
+        let store_replica_lag = if self.num_stores > 1 {
+            let accepted: Vec<u64> = (0..self.num_stores as u32)
+                .filter(|&k| self.fabric.is_alive(NodeId::Store(k)))
+                .map(|k| self.stores[k as usize].lock().unwrap().log.commits_accepted)
+                .collect();
+            match (accepted.iter().max(), accepted.iter().min()) {
+                (Some(max), Some(min)) => max - min,
+                _ => 0,
+            }
+        } else {
+            0
+        };
         // Free-run teardown: participants drain on real time from here.
         self.clock.shutdown();
-        for t in self.service_threads.drain(..) {
+        for t in self.service_threads.lock().unwrap().drain(..) {
             let _ = t.join();
         }
         self.spawner.join_all();
@@ -590,6 +770,10 @@ impl Cluster {
             scale_ins: self.state.scale_ins.load(Ordering::Relaxed),
             shadow_promotions: self.state.shadow_promotions.load(Ordering::Relaxed),
             scale_rejected: self.state.scale_rejected.load(Ordering::Relaxed),
+            store_failovers: self.state.store_failovers.load(Ordering::Relaxed),
+            gateway_failovers: self.state.gateway_failovers.load(Ordering::Relaxed),
+            orch_promotions: self.state.orch_promotions.load(Ordering::Relaxed),
+            store_replica_lag,
             sharing: self.spawner.sharing_totals(),
         }
     }

@@ -10,6 +10,14 @@
 //! that can never fit an AW's page budget) are rejected at admission with
 //! a stream-level error surfaced through [`GatewayShared`].
 //!
+//! Deployments may run N gateway *shards* (DESIGN.md §15): every shard
+//! holds the full arrival schedule but accepts only the requests it owns
+//! under rendezvous hashing over the live shard set. All shards share one
+//! [`GatewayShared`], so recorded tokens survive any single shard's death;
+//! when the orchestrator shrinks the live set (`GatewaySet`), survivors
+//! rescan the already-due prefix of the schedule and re-admit the dead
+//! shard's unfinished requests through their own admission queues.
+//!
 //! Under coarse-grained restarts it re-submits unfinished requests and
 //! de-duplicates re-emitted tokens, so the metrics see recomputation as a
 //! token-stream *gap*, not as extra throughput.
@@ -20,13 +28,22 @@ use crate::metrics::trace::{SpanKind, TraceHandle};
 use crate::metrics::{EventKind, EventLog};
 use crate::proto::{ClusterMsg, RequestMeta};
 use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
+use crate::util::chash;
 use crate::workload::Request;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 pub struct GatewayParams {
+    /// This shard's index (0-based; `NodeId::Gateway(shard)`).
+    pub shard: u32,
+    /// Total gateway shards at launch (shards never respawn, so the
+    /// initial live set is `0..num_shards`).
+    pub num_shards: usize,
+    /// Checkpoint-store replica count (`ReqFinished` reclamation notices
+    /// fan out to every replica).
+    pub num_stores: usize,
     /// Pre-registered inbox (the cluster registers the gateway node before
     /// spawning workers, which create QPs toward it at init).
     pub inbox: Inbox<ClusterMsg>,
@@ -50,7 +67,11 @@ pub struct GatewayParams {
     pub max_per_aw: usize,
 }
 
-/// State shared with the harness (inspectable during/after the run).
+/// State shared with the harness — and, in sharded deployments, *between*
+/// the gateway shards. Keeping the token streams and the terminal-state
+/// sets here (rather than per shard) is what makes a gateway death
+/// non-destructive: everything a dead shard ever recorded is still
+/// visible to the survivors and the harness.
 #[derive(Default)]
 pub struct GatewayShared {
     inner: Mutex<SharedInner>,
@@ -59,12 +80,19 @@ pub struct GatewayShared {
 
 #[derive(Default)]
 struct SharedInner {
-    /// request id -> generated token ids (deduped).
+    /// request id -> generated token ids (deduped; `u32::MAX` marks a
+    /// gap — a token index seen only via a later index — until the AW's
+    /// failover replay fills it).
     generated: HashMap<u64, Vec<u32>>,
-    finished: usize,
+    /// Every request id any shard has accepted (dedup for `submitted`
+    /// and the resubmit/admit distinction across shard failovers).
+    known: HashSet<u64>,
+    /// Requests that reached `Finished` (idempotent across duplicate
+    /// notices and shard failovers).
+    finished_ids: HashSet<u64>,
     submitted: usize,
-    /// Requests currently waiting in the admission queue.
-    queued: usize,
+    /// Per-shard admission-queue depths (backpressure gauge).
+    queued: HashMap<u32, usize>,
     /// Preemption notices observed (cluster-wide).
     preempted: u64,
     /// request id -> stream-level error for rejected requests.
@@ -77,17 +105,17 @@ impl GatewayShared {
     }
 
     pub fn finished(&self) -> usize {
-        self.inner.lock().unwrap().finished
+        self.inner.lock().unwrap().finished_ids.len()
     }
 
     pub fn submitted(&self) -> usize {
         self.inner.lock().unwrap().submitted
     }
 
-    /// Requests waiting in the admission queue right now (backpressure
-    /// gauge).
+    /// Requests waiting in the admission queues right now (backpressure
+    /// gauge; summed over shards).
     pub fn queued(&self) -> usize {
-        self.inner.lock().unwrap().queued
+        self.inner.lock().unwrap().queued.values().sum()
     }
 
     /// Preemption notices observed so far.
@@ -125,19 +153,25 @@ struct GwReq {
 
 pub fn spawn(params: GatewayParams) -> std::thread::JoinHandle<()> {
     let clock = params.fabric.clock().clone();
-    crate::util::clock::spawn_participant(&clock, "gateway", move || gateway_main(params))
+    let name = format!("gateway{}", params.shard);
+    crate::util::clock::spawn_participant(&clock, name, move || gateway_main(params))
         .expect("spawn gateway")
 }
 
 struct Gw {
+    shard: u32,
+    node: NodeId,
     fabric: Arc<Fabric<ClusterMsg>>,
     events: Arc<EventLog>,
     trace: Option<TraceHandle>,
     shared: Arc<GatewayShared>,
     qps: HashMap<u32, Qp<ClusterMsg>>,
     orch_qp: Option<Qp<ClusterMsg>>,
-    store_qp: Option<Qp<ClusterMsg>>,
+    store_qps: Vec<Qp<ClusterMsg>>,
     aws: Vec<u32>,
+    /// Live gateway shards (kept current by the orchestrator's
+    /// `GatewaySet`); request ownership is `chash::owner(id, &gateways)`.
+    gateways: Vec<u32>,
     router: Router,
     loads: LoadMap,
     limits: AdmissionLimits,
@@ -145,20 +179,33 @@ struct Gw {
     reqs: BTreeMap<u64, GwReq>,
     /// Admission queue: due-but-unplaced requests (backpressure).
     admit_q: VecDeque<u64>,
+    /// Full arrival schedule (shared by all shards) and its id index —
+    /// failover rescans and `Rebind` adoption need arbitrary lookups.
+    schedule: Vec<Request>,
+    by_id: HashMap<u64, usize>,
+    /// Arrivals due so far (schedule prefix already offered to `accept`).
+    next: usize,
 }
 
 fn gateway_main(p: GatewayParams) {
     let clock = p.fabric.clock().clone();
     let inbox = &p.inbox;
+    let node = NodeId::Gateway(p.shard);
+    let by_id = p.schedule.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
     let mut gw = Gw {
+        shard: p.shard,
+        node,
         fabric: p.fabric.clone(),
         events: p.events.clone(),
         trace: p.trace.clone(),
         shared: p.shared.clone(),
         qps: HashMap::new(),
-        orch_qp: p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok(),
-        store_qp: p.fabric.qp(NodeId::Gateway, NodeId::Store, Plane::Control).ok(),
+        orch_qp: p.fabric.qp(node, NodeId::Orchestrator, Plane::Control).ok(),
+        store_qps: (0..p.num_stores.max(1) as u32)
+            .filter_map(|k| p.fabric.qp(node, NodeId::Store(k), Plane::Control).ok())
+            .collect(),
         aws: p.initial_aws.clone(),
+        gateways: (0..p.num_shards.max(1) as u32).collect(),
         router: Router::new(
             p.sched.policy,
             Watermarks { high: p.sched.high_watermark, low: p.sched.low_watermark },
@@ -168,10 +215,16 @@ fn gateway_main(p: GatewayParams) {
         limits: p.limits,
         reqs: BTreeMap::new(),
         admit_q: VecDeque::new(),
+        schedule: p.schedule,
+        by_id,
+        next: 0,
     };
     let start = clock.now();
-    let mut next = 0usize;
-    let last_arrival = p.schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
+    let last_arrival = gw.schedule.last().map(|r| r.arrival_s).unwrap_or(0.0);
+    let total = gw.schedule.len();
+    // Whether this shard exited cleanly (run over / harness stop) rather
+    // than dying — a killed shard must NOT mark the whole run done.
+    let mut completed = true;
 
     loop {
         if p.stop.load(Ordering::Relaxed) {
@@ -179,12 +232,16 @@ fn gateway_main(p: GatewayParams) {
         }
         let now = clock.now().saturating_sub(start).as_secs_f64();
 
-        // 1. Accept due arrivals: reject oversized ones outright, queue
-        //    the rest for admission.
-        while next < p.schedule.len() && p.schedule[next].arrival_s <= now {
-            let r = &p.schedule[next];
-            next += 1;
-            gw.accept(r);
+        // 1. Accept due arrivals this shard owns: reject oversized ones
+        //    outright, queue the rest for admission. Non-owned arrivals
+        //    are skipped here; a failover rescan picks them up if their
+        //    owner changes later.
+        while gw.next < gw.schedule.len() && gw.schedule[gw.next].arrival_s <= now {
+            let i = gw.next;
+            gw.next += 1;
+            if gw.owns(gw.schedule[i].id) {
+                gw.accept_idx(i);
+            }
         }
 
         // 2. Place queued requests while some AW has headroom.
@@ -194,19 +251,24 @@ fn gateway_main(p: GatewayParams) {
         match inbox.recv(Duration::from_millis(1)) {
             Ok(env) => gw.handle(env.msg),
             Err(crate::transport::QpError::Timeout) => {}
-            Err(_) => break,
+            Err(_) => {
+                completed = false; // this shard was killed
+                break;
+            }
         }
         // Keep the orchestrator QP fresh if it was unavailable at start.
         if gw.orch_qp.is_none() {
-            gw.orch_qp = p.fabric.qp(NodeId::Gateway, NodeId::Orchestrator, Plane::Control).ok();
+            gw.orch_qp = p.fabric.qp(node, NodeId::Orchestrator, Plane::Control).ok();
         }
 
-        // 4. Exit conditions: everything finished (rejected requests are
-        //    terminal), or drain timeout.
-        if next >= p.schedule.len() {
-            let unfinished =
-                gw.reqs.values().filter(|r| !r.finished && !r.rejected).count();
-            if unfinished == 0 {
+        // 4. Exit conditions: everything finished cluster-wide (rejected
+        //    requests are terminal), or drain timeout.
+        if gw.next >= gw.schedule.len() {
+            let terminal = {
+                let inner = gw.shared.inner.lock().unwrap();
+                inner.finished_ids.len() + inner.rejected.len()
+            };
+            if terminal >= total {
                 break;
             }
             if now > last_arrival + p.drain_timeout.as_secs_f64() {
@@ -214,35 +276,62 @@ fn gateway_main(p: GatewayParams) {
             }
         }
     }
-    p.shared.done.store(true, Ordering::Release);
+    if completed {
+        p.shared.done.store(true, Ordering::Release);
+    }
 }
 
 impl Gw {
-    /// Accept one arrival: reject it if it can never be served, else
-    /// queue it for admission.
-    fn accept(&mut self, r: &Request) {
+    fn owns(&self, id: u64) -> bool {
+        chash::owner(id, &self.gateways) == Some(self.shard)
+    }
+
+    /// Accept the schedule entry at `i`: reject it if it can never be
+    /// served, else queue it for admission. Requests another shard
+    /// already accepted (failover re-admission) count as resubmissions
+    /// and requests already terminal are only tracked, not re-dispatched.
+    fn accept_idx(&mut self, i: usize) {
+        let r = &self.schedule[i];
+        let id = r.id;
+        if self.reqs.contains_key(&id) {
+            return; // already tracked by this shard
+        }
         let meta = RequestMeta {
-            id: r.id,
+            id,
             prompt: r.prompt.clone(),
             max_new_tokens: r.max_new_tokens as u32,
         };
-        self.events.record(EventKind::Submitted, r.id, 0, 0);
-        self.shared.inner.lock().unwrap().submitted += 1;
-        let rejected = self.limits.reject_reason(r.prompt.len(), r.max_new_tokens);
+        let oversized = self.limits.reject_reason(r.prompt.len(), r.max_new_tokens);
+        let (newly_known, already_finished, already_rejected) = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            let newly = inner.known.insert(id);
+            if newly {
+                inner.submitted += 1;
+            }
+            (newly, inner.finished_ids.contains(&id), inner.rejected.contains_key(&id))
+        };
+        if newly_known {
+            self.events.record(EventKind::Submitted, id, 0, self.shard);
+        }
         self.reqs.insert(
-            r.id,
+            id,
             GwReq {
                 meta,
-                finished: false,
-                rejected: rejected.is_some(),
+                finished: already_finished,
+                rejected: already_rejected,
                 queued: false,
-                resubmit: false,
+                // A request some other shard accepted first restarts from
+                // the prompt here — that is a migration, not an admission.
+                resubmit: !newly_known,
                 queued_since: None,
             },
         );
-        match rejected {
-            Some(reason) => self.mark_rejected(r.id, 0, reason),
-            None => self.enqueue(r.id, false),
+        if already_finished || already_rejected {
+            return;
+        }
+        match oversized {
+            Some(reason) => self.mark_rejected(id, 0, reason),
+            None => self.enqueue(id, false),
         }
     }
 
@@ -259,10 +348,14 @@ impl Gw {
         if was_queued {
             self.admit_q.retain(|&q| q != id);
         }
-        self.events.record(EventKind::Rejected, id, 0, worker);
         let mut inner = self.shared.inner.lock().unwrap();
+        let newly = !inner.rejected.contains_key(&id);
         inner.rejected.entry(id).or_insert(reason);
-        inner.queued = self.admit_q.len();
+        inner.queued.insert(self.shard, self.admit_q.len());
+        drop(inner);
+        if newly {
+            self.events.record(EventKind::Rejected, id, 0, worker);
+        }
     }
 
     /// Queue a request for (re)admission; `resubmit` marks dispatches
@@ -278,7 +371,9 @@ impl Gw {
             r.queued_since = Some(tr.start());
         }
         self.admit_q.push_back(id);
-        self.shared.inner.lock().unwrap().queued = self.admit_q.len();
+        let mut inner = self.shared.inner.lock().unwrap();
+        let depth = self.admit_q.len();
+        inner.queued.insert(self.shard, depth);
     }
 
     /// Place queued requests until the router backpressures.
@@ -298,7 +393,9 @@ impl Gw {
             self.admit_q.pop_front();
             self.dispatch(id, aw);
         }
-        self.shared.inner.lock().unwrap().queued = self.admit_q.len();
+        let mut inner = self.shared.inner.lock().unwrap();
+        let depth = self.admit_q.len();
+        inner.queued.insert(self.shard, depth);
     }
 
     /// Send a request to an AW and account for it.
@@ -314,8 +411,9 @@ impl Gw {
             tr.record(SpanKind::GatewayQueue, id, aw as u64, t0);
         }
         let fabric = self.fabric.clone();
+        let node = self.node;
         let qp = self.qps.entry(aw).or_insert_with(|| {
-            fabric.qp(NodeId::Gateway, NodeId::Aw(aw), Plane::Control).expect("gw qp")
+            fabric.qp(node, NodeId::Aw(aw), Plane::Control).expect("gw qp")
         });
         let bytes = meta.wire_bytes();
         // Optimistic page estimate (the prompt's prefill footprint) so a
@@ -340,14 +438,41 @@ impl Gw {
         self.loads.note_pages(aw, est_pages);
     }
 
+    /// Gateway failover: the orchestrator shrank the live shard set.
+    /// Rescan the already-due schedule prefix for requests this shard now
+    /// owns but does not track — the dead shard's accepted-but-unfinished
+    /// work — and pull them through the normal accept path (terminal
+    /// requests are only tracked; live ones re-enter admission). Requests
+    /// the dead shard had *dispatched* arrive as `Rebind`s on the same
+    /// FIFO QP before this message, so they are tracked already and are
+    /// not re-dispatched here.
+    fn rescan_owned(&mut self) {
+        for i in 0..self.next {
+            let id = self.schedule[i].id;
+            if self.owns(id) && !self.reqs.contains_key(&id) {
+                self.accept_idx(i);
+            }
+        }
+    }
+
     fn handle(&mut self, msg: ClusterMsg) {
         match msg {
             ClusterMsg::Token { request, index, token, worker } => {
                 let mut inner = self.shared.inner.lock().unwrap();
                 let gen = inner.generated.entry(request).or_default();
                 if (index as usize) < gen.len() {
-                    // Re-emitted during replay/restart: recomputation,
-                    // not new output. Keep the original.
+                    if gen[index as usize] == u32::MAX {
+                        // Filling a gap left by an out-of-order failover
+                        // replay: this index was never recorded, only
+                        // skipped over. (Decode emits strictly increasing
+                        // indices, so a real token is never u32::MAX —
+                        // argmax over the vocab cannot produce it.)
+                        gen[index as usize] = token;
+                        drop(inner);
+                        self.events.record(EventKind::Token, request, index, worker);
+                    }
+                    // else: re-emitted during replay/restart —
+                    // recomputation, not new output. Keep the original.
                 } else {
                     gen.resize(index as usize, u32::MAX);
                     gen.push(token);
@@ -356,20 +481,16 @@ impl Gw {
                 }
             }
             ClusterMsg::Finished { request, worker } => {
-                let mut newly = false;
+                let newly = self.shared.inner.lock().unwrap().finished_ids.insert(request);
                 if let Some(r) = self.reqs.get_mut(&request) {
-                    if !r.finished {
-                        r.finished = true;
-                        newly = true;
-                    }
+                    r.finished = true;
                 }
                 if newly {
                     self.events.record(EventKind::Finished, request, 0, worker);
-                    self.shared.inner.lock().unwrap().finished += 1;
                     self.loads.note_departure(worker);
-                    // Let the checkpoint store reclaim the request's
-                    // segment log (bounded memory).
-                    if let Some(q) = self.store_qp.as_ref() {
+                    // Let the checkpoint store replicas reclaim the
+                    // request's segment log (bounded memory).
+                    for q in &self.store_qps {
                         let _ = q.post(
                             ClusterMsg::ReqFinished { request },
                             crate::proto::HDR_BYTES,
@@ -394,14 +515,58 @@ impl Gw {
             ClusterMsg::AwSet { aws: new_aws } => {
                 self.aws = new_aws;
             }
+            ClusterMsg::GatewaySet { gateways } => {
+                if gateways != self.gateways && !gateways.is_empty() {
+                    self.gateways = gateways;
+                    self.rescan_owned();
+                }
+            }
             ClusterMsg::Rebind { request, new_aw } => {
-                // A restored request resumed elsewhere: a migration.
-                self.events.record(EventKind::Migrated, request, 0, new_aw);
+                // A request resumed on a different AW (restore) or moved
+                // to this shard (gateway failover): make sure it is
+                // tracked here, and record the migration unless it is
+                // already terminal.
+                let terminal = {
+                    let inner = self.shared.inner.lock().unwrap();
+                    (
+                        inner.finished_ids.contains(&request),
+                        inner.rejected.contains_key(&request),
+                    )
+                };
+                if !self.reqs.contains_key(&request) {
+                    if let Some(&i) = self.by_id.get(&request) {
+                        let r = &self.schedule[i];
+                        self.reqs.insert(
+                            request,
+                            GwReq {
+                                meta: RequestMeta {
+                                    id: request,
+                                    prompt: r.prompt.clone(),
+                                    max_new_tokens: r.max_new_tokens as u32,
+                                },
+                                finished: terminal.0,
+                                rejected: terminal.1,
+                                queued: false,
+                                resubmit: false,
+                                queued_since: None,
+                            },
+                        );
+                    }
+                }
+                if !terminal.0 && !terminal.1 {
+                    self.events.record(EventKind::Migrated, request, 0, new_aw);
+                }
             }
             ClusterMsg::Resubmit { requests } => {
                 // Lost before any checkpoint: restart from the prompt
                 // (through the admission queue — backpressure applies).
                 for id in requests {
+                    if !self.reqs.contains_key(&id) {
+                        if let Some(&i) = self.by_id.get(&id) {
+                            self.accept_idx(i);
+                            continue; // accept_idx already enqueued it
+                        }
+                    }
                     self.enqueue(id, true);
                 }
             }

@@ -4,6 +4,16 @@
 //! `CoarseRestart` mode — the MegaScale-baseline behavior of tearing down
 //! and rebuilding the whole cluster on any failure.
 //!
+//! Control-plane resilience (DESIGN.md §15): when the deployment runs
+//! replicated checkpoint stores or sharded gateways, the probe sweep
+//! covers them too — a dead store replica re-drives its in-flight
+//! active-set queries against a survivor, and a dead gateway shard
+//! triggers `Rebind`s plus a `GatewaySet` broadcast so the survivors
+//! adopt its requests. A warm standby (`spawn_standby`) mirrors the
+//! orchestrator-local state over periodic `OrchSync` messages and takes
+//! over the `NodeId::Orchestrator` role address on planned handover or
+//! on probe-confirmed death.
+//!
 //! Also exposes the paper's HTTP admin endpoints (/health, /workers,
 //! /ert) through `util::http`.
 
@@ -12,8 +22,9 @@ use super::ert::Ert;
 use super::scaler::{self, ScalePlan, Scaler};
 use super::sched;
 use crate::metrics::{EventKind, EventLog};
-use crate::proto::{ClusterMsg, CommitMeta, ErtTable, HDR_BYTES};
-use crate::transport::{link::TrafficClass, Fabric, NodeId, Plane, Qp};
+use crate::proto::{ClusterMsg, CommitMeta, ErtTable, OrchSnapshot, HDR_BYTES};
+use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeId, Plane, Qp};
+use crate::util::chash;
 use crate::util::clock::{self, Clock};
 use crate::util::http::{Handler, HttpServer};
 use crate::util::json::{arr, num, obj, Json};
@@ -36,7 +47,8 @@ pub struct OrchState {
     inner: Mutex<StateInner>,
     /// Failures already being handled (dedup of concurrent reports).
     /// Shared (not orchestrator-local) so a respawn on the original slot
-    /// can re-arm detection for that node id.
+    /// can re-arm detection for that node id — and so a promoted standby
+    /// does not re-detect failures the old orchestrator already handled.
     handled: Mutex<HashSet<NodeId>>,
     /// AWs being drained (scale-in / migration): still alive, but the
     /// gateway must not route new requests to them.
@@ -55,6 +67,10 @@ pub struct OrchState {
     pub scale_ins: AtomicU64,
     pub shadow_promotions: AtomicU64,
     pub scale_rejected: AtomicU64,
+    /// Control-plane failovers survived (DESIGN.md §15).
+    pub store_failovers: AtomicU64,
+    pub gateway_failovers: AtomicU64,
+    pub orch_promotions: AtomicU64,
     /// Stall bookkeeping for coarse restarts (Fig. 9a): set while a full
     /// restart is in progress.
     pub restarting: AtomicBool,
@@ -67,8 +83,16 @@ pub struct OrchState {
 struct StateInner {
     aws: BTreeMap<u32, bool>,
     ews: BTreeMap<u32, EwInfo>,
+    /// Checkpoint-store replicas (id -> alive).
+    stores: BTreeMap<u32, bool>,
+    /// Gateway shards (id -> alive).
+    gateways: BTreeMap<u32, bool>,
     ert: Option<Ert>,
     ert_version: u64,
+}
+
+fn live_ids(map: &BTreeMap<u32, bool>) -> Vec<u32> {
+    map.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
 }
 
 #[derive(Clone, Debug)]
@@ -80,14 +104,7 @@ struct EwInfo {
 
 impl OrchState {
     pub fn live_aws(&self) -> Vec<u32> {
-        self.inner
-            .lock()
-            .unwrap()
-            .aws
-            .iter()
-            .filter(|(_, &a)| a)
-            .map(|(&i, _)| i)
-            .collect()
+        live_ids(&self.inner.lock().unwrap().aws)
     }
 
     pub fn live_ews(&self) -> Vec<u32> {
@@ -99,6 +116,21 @@ impl OrchState {
             .filter(|(_, e)| e.alive)
             .map(|(&i, _)| i)
             .collect()
+    }
+
+    /// Live checkpoint-store replicas.
+    pub fn live_stores(&self) -> Vec<u32> {
+        live_ids(&self.inner.lock().unwrap().stores)
+    }
+
+    /// Live gateway shards.
+    pub fn live_gateways(&self) -> Vec<u32> {
+        live_ids(&self.inner.lock().unwrap().gateways)
+    }
+
+    /// Mark a store replica live/dead (cluster respawn path).
+    pub(crate) fn set_store_alive(&self, idx: u32, alive: bool) {
+        self.inner.lock().unwrap().stores.insert(idx, alive);
     }
 
     pub fn ert_version(&self) -> u64 {
@@ -185,7 +217,7 @@ impl OrchState {
         inner.ert_version += 1;
         let v = inner.ert_version;
         inner.ert = Some(Ert::new(v, table.clone()));
-        let aws: Vec<u32> = inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+        let aws = live_ids(&inner.aws);
         Some((table, v, aws))
     }
 
@@ -195,8 +227,9 @@ impl OrchState {
 
     /// Record with an explicit `token_index` tag — the failure-lifecycle
     /// events overload that field as a class discriminator (e.g.
-    /// `Detected` uses 0 = AW, 1 = EW).
-    fn record_tagged(&self, kind: EventKind, request: u64, token_index: u64, worker: u32) {
+    /// `Detected` uses 0 = AW, 1 = EW, 2 = store, 3 = gateway, 4 =
+    /// orchestrator).
+    fn record_tagged(&self, kind: EventKind, request: u64, token_index: u32, worker: u32) {
         if let Some(ev) = self.events.lock().unwrap().as_ref() {
             ev.record(kind, request, token_index, worker);
         }
@@ -211,7 +244,7 @@ impl OrchState {
     pub(crate) fn integrate_aw(&self, idx: u32) -> Vec<u32> {
         let mut inner = self.inner.lock().unwrap();
         inner.aws.insert(idx, true);
-        inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
+        live_ids(&inner.aws)
     }
 
     /// Register a (re)spawned EW, promote it in the ERT (primary for its
@@ -241,7 +274,7 @@ impl OrchState {
         inner.ert_version += 1;
         let v = inner.ert_version;
         inner.ert = Some(Ert::new(v, table.clone()));
-        let aws: Vec<u32> = inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+        let aws = live_ids(&inner.aws);
         Some((table, v, aws))
     }
 
@@ -265,6 +298,18 @@ impl OrchState {
                     ])
                 })),
             ),
+            (
+                "stores",
+                arr(inner.stores.iter().map(|(&i, &alive)| {
+                    obj(vec![("id", num(i as f64)), ("alive", Json::Bool(alive))])
+                })),
+            ),
+            (
+                "gateways",
+                arr(inner.gateways.iter().map(|(&i, &alive)| {
+                    obj(vec![("id", num(i as f64)), ("alive", Json::Bool(alive))])
+                })),
+            ),
             ("ert_version", num(inner.ert_version as f64)),
         ])
     }
@@ -279,6 +324,13 @@ pub struct OrchParams {
     pub initial_ert: Ert,
     pub initial_aws: Vec<u32>,
     pub initial_ews: Vec<(u32, Vec<usize>, Vec<usize>)>,
+    /// Checkpoint-store replica count (replica 0..n are registered live).
+    pub num_stores: usize,
+    /// Gateway shard count (shard 0..n are registered live).
+    pub num_gateways: usize,
+    /// Mirror orchestrator-local state to a warm standby
+    /// (`NodeId::OrchStandby`) every probe interval.
+    pub sync_standby: bool,
     pub stop: Arc<AtomicBool>,
     /// Bind the HTTP admin server (port 0 = ephemeral; None = disabled).
     pub http_port: Option<u16>,
@@ -291,8 +343,6 @@ pub fn spawn(params: OrchParams) -> std::thread::JoinHandle<()> {
 }
 
 fn orch_main(p: OrchParams) {
-    let fabric = p.spawner.fabric.clone();
-    let clock = fabric.clock().clone();
     let inbox = p.inbox;
     {
         let mut inner = p.state.inner.lock().unwrap();
@@ -304,6 +354,12 @@ fn orch_main(p: OrchParams) {
                 *i,
                 EwInfo { alive: true, primaries: prim.clone(), shadows: shad.clone() },
             );
+        }
+        for s in 0..p.num_stores.max(1) as u32 {
+            inner.stores.insert(s, true);
+        }
+        for g in 0..p.num_gateways.max(1) as u32 {
+            inner.gateways.insert(g, true);
         }
         inner.ert_version = p.initial_ert.version();
         inner.ert = Some(p.initial_ert.clone());
@@ -320,49 +376,8 @@ fn orch_main(p: OrchParams) {
         HttpServer::start(port, handler)
     });
 
-    let mut o = Orch {
-        fabric,
-        clock: clock.clone(),
-        spawner: p.spawner,
-        state: p.state,
-        mode: p.mode,
-        stop: p.stop,
-        qps: BTreeMap::new(),
-        pending_adoptions: VecDeque::new(),
-        adopt_rr: 0,
-        bound: BTreeMap::new(),
-        parked: VecDeque::new(),
-        loads: sched::LoadMap::default(),
-        drain_targets: BTreeMap::new(),
-        scaler: if p.spawner.cfg.scaler.enabled {
-            Some(Scaler::new(p.spawner.cfg.scaler.clone()))
-        } else {
-            None
-        },
-        next_ew_idx: 0,
-        next_aw_idx: 0,
-        last_restart: None,
-    };
-    {
-        let inner = o.state.inner.lock().unwrap();
-        o.next_aw_idx = inner.aws.keys().max().map(|m| m + 1).unwrap_or(0);
-        o.next_ew_idx = inner.ews.keys().max().map(|m| m + 1).unwrap_or(0);
-    }
-
-    let probe_interval = o.spawner.cfg.resilience.probe_interval;
-    let detection = o.spawner.cfg.resilience.detection;
-    let mut last_sweep = clock.now();
-    while !o.stop.load(Ordering::Relaxed) {
-        match inbox.recv(Duration::from_millis(2)) {
-            Ok(env) => o.handle(env.msg),
-            Err(crate::transport::QpError::Timeout) => {}
-            Err(_) => break,
-        }
-        if detection && clock.now().saturating_sub(last_sweep) >= probe_interval {
-            last_sweep = clock.now();
-            o.probe_sweep();
-        }
-    }
+    let mut o = Orch::new(p.spawner, p.state, p.mode, p.stop, p.sync_standby);
+    o.run(&inbox);
 }
 
 struct Orch {
@@ -387,6 +402,9 @@ struct Orch {
     loads: sched::LoadMap,
     /// Draining AW -> forced migration target (None = least pressure).
     drain_targets: BTreeMap<u32, Option<u32>>,
+    /// Active-set queries in flight: failed AW -> store replica asked.
+    /// Re-driven against a survivor if that replica dies before replying.
+    outstanding_queries: BTreeMap<u32, u32>,
     /// Elastic EW scaling policy (None when `[scaler]` is disabled —
     /// manual `scale_ew` verbs still work without it).
     scaler: Option<Scaler>,
@@ -395,9 +413,81 @@ struct Orch {
     /// Stale failure reports within this window after a full restart are
     /// absorbed (the communicator re-init already covered them).
     last_restart: Option<Duration>,
+    /// Mirror local state to the warm standby every probe interval.
+    sync_standby: bool,
+    /// Set by `DemoteOrch` (planned handover): ack sent, loop exits.
+    demoted: bool,
 }
 
 impl Orch {
+    fn new(
+        spawner: Arc<Spawner>,
+        state: Arc<OrchState>,
+        mode: RecoveryMode,
+        stop: Arc<AtomicBool>,
+        sync_standby: bool,
+    ) -> Orch {
+        let fabric = spawner.fabric.clone();
+        let clock = fabric.clock().clone();
+        let mut o = Orch {
+            fabric,
+            clock,
+            spawner: spawner.clone(),
+            state,
+            mode,
+            stop,
+            qps: BTreeMap::new(),
+            pending_adoptions: VecDeque::new(),
+            adopt_rr: 0,
+            bound: BTreeMap::new(),
+            parked: VecDeque::new(),
+            loads: sched::LoadMap::default(),
+            drain_targets: BTreeMap::new(),
+            outstanding_queries: BTreeMap::new(),
+            scaler: if spawner.cfg.scaler.enabled {
+                Some(Scaler::new(spawner.cfg.scaler.clone()))
+            } else {
+                None
+            },
+            next_ew_idx: 0,
+            next_aw_idx: 0,
+            last_restart: None,
+            sync_standby,
+            demoted: false,
+        };
+        {
+            let inner = o.state.inner.lock().unwrap();
+            o.next_aw_idx = inner.aws.keys().max().map(|m| m + 1).unwrap_or(0);
+            o.next_ew_idx = inner.ews.keys().max().map(|m| m + 1).unwrap_or(0);
+        }
+        o
+    }
+
+    /// The orchestrator service loop — shared by the initially-active
+    /// instance and a promoted standby.
+    fn run(&mut self, inbox: &Inbox<ClusterMsg>) {
+        let probe_interval = self.spawner.cfg.resilience.probe_interval;
+        let detection = self.spawner.cfg.resilience.detection;
+        let mut last_sweep = self.clock.now();
+        let mut last_sync = self.clock.now();
+        while !self.stop.load(Ordering::Relaxed) && !self.demoted {
+            match inbox.recv(Duration::from_millis(2)) {
+                Ok(env) => self.handle(env.msg),
+                Err(crate::transport::QpError::Timeout) => {}
+                Err(_) => break,
+            }
+            let now = self.clock.now();
+            if detection && now.saturating_sub(last_sweep) >= probe_interval {
+                last_sweep = now;
+                self.probe_sweep();
+            }
+            if self.sync_standby && now.saturating_sub(last_sync) >= probe_interval {
+                last_sync = now;
+                self.post_standby_sync();
+            }
+        }
+    }
+
     fn qp(&mut self, to: NodeId, plane: Plane) -> Option<&Qp<ClusterMsg>> {
         if !self.qps.contains_key(&to) {
             let q = self.fabric.qp(NodeId::Orchestrator, to, plane).ok()?;
@@ -411,6 +501,66 @@ impl Orch {
         if let Some(qp) = self.qp(to, Plane::Control) {
             let _ = qp.post(msg, bytes, TrafficClass::Admin);
         }
+    }
+
+    /// Broadcast to every live gateway shard.
+    fn post_gateways(&mut self, msg: ClusterMsg) {
+        for g in self.state.live_gateways() {
+            self.post(NodeId::Gateway(g), msg.clone());
+        }
+    }
+
+    /// Post to the gateway shard owning `request` under the live set.
+    fn post_gateway_owner(&mut self, request: u64, msg: ClusterMsg) {
+        let gws = self.state.live_gateways();
+        if let Some(owner) = chash::owner(request, &gws) {
+            self.post(NodeId::Gateway(owner), msg);
+        }
+    }
+
+    /// Resubmit-from-prompt, routed per request to its owner shard.
+    fn post_resubmit(&mut self, requests: Vec<u64>) {
+        let gws = self.state.live_gateways();
+        let mut by_owner: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        for id in requests {
+            if let Some(owner) = chash::owner(id, &gws) {
+                by_owner.entry(owner).or_default().push(id);
+            }
+        }
+        for (gw, reqs) in by_owner {
+            self.post(NodeId::Gateway(gw), ClusterMsg::Resubmit { requests: reqs });
+        }
+    }
+
+    /// Ask a live store replica for the failed AW's committed active set;
+    /// tracked so a store death before the reply re-drives the query.
+    fn query_active(&mut self, aw: u32) {
+        let Some(&store) = self.state.live_stores().first() else { return };
+        self.outstanding_queries.insert(aw, store);
+        self.post(NodeId::Store(store), ClusterMsg::QueryActive { aw });
+    }
+
+    /// Mirror orchestrator-local recovery state to the warm standby.
+    fn post_standby_sync(&mut self) {
+        let snap = {
+            let inner = self.state.inner.lock().unwrap();
+            OrchSnapshot {
+                ert_version: inner.ert_version,
+                ert: inner.ert.as_ref().map(|e| e.table().clone()).unwrap_or_default(),
+                aws: live_ids(&inner.aws),
+                ews: inner
+                    .ews
+                    .iter()
+                    .filter(|(_, e)| e.alive)
+                    .map(|(&i, e)| (i, e.primaries.iter().map(|&p| p as u32).collect()))
+                    .collect(),
+                bound: self.bound.iter().map(|(&r, &a)| (r, a)).collect(),
+                parked: self.parked.iter().map(|(m, _)| m.clone()).collect(),
+                gateways: live_ids(&inner.gateways),
+                stores: live_ids(&inner.stores),
+            }
+        };
+        self.post(NodeId::OrchStandby, ClusterMsg::OrchSync(snap));
     }
 
     fn handle(&mut self, msg: ClusterMsg) {
@@ -436,6 +586,7 @@ impl Orch {
                 self.confirm_and_recover(suspect);
             }
             ClusterMsg::ActiveReqs { aw, reqs } => {
+                self.outstanding_queries.remove(&aw);
                 // Requests bound to the failed AW but absent from the
                 // store's committed set died before any checkpoint (e.g.
                 // mid-prefill): they must restart from the prompt (§3.1 —
@@ -449,10 +600,15 @@ impl Orch {
                     .map(|(&id, _)| id)
                     .collect();
                 if !lost.is_empty() {
-                    self.post(NodeId::Gateway, ClusterMsg::Resubmit { requests: lost });
+                    self.post_resubmit(lost);
                 }
                 for r in reqs {
-                    self.pending_adoptions.push_back(r);
+                    // A promoted standby may re-query an AW slot the old
+                    // orchestrator already recovered: adoptions of
+                    // requests that moved on are filtered by the binding.
+                    if self.bound.get(&r.request).map_or(true, |&b| b == aw) {
+                        self.pending_adoptions.push_back(r);
+                    }
                 }
                 self.drain_adoptions();
             }
@@ -475,7 +631,7 @@ impl Orch {
                 // No durable state: restart from the prompt. The gateway
                 // already routes around the draining AW (AwSet update).
                 self.loads.note_departure(aw);
-                self.post(NodeId::Gateway, ClusterMsg::Resubmit { requests });
+                self.post_resubmit(requests);
             }
             ClusterMsg::DrainAw { aw, target } => self.drain_aw(aw, target),
             // ---- elastic EW scaling (DESIGN.md §11) ----
@@ -483,6 +639,12 @@ impl Orch {
             ClusterMsg::ScaleEwUp => self.provision_universal_ew(),
             ClusterMsg::ScaleEwDown { ew } => {
                 self.retire_ew(ew);
+            }
+            // ---- control plane (DESIGN.md §15) ----
+            ClusterMsg::DemoteOrch => {
+                // Planned handover: ack to the standby, then go inert.
+                self.post(NodeId::OrchStandby, ClusterMsg::DemoteAck);
+                self.demoted = true;
             }
             _ => {}
         }
@@ -668,7 +830,8 @@ impl Orch {
         }
         self.state.set_draining(aw);
         self.drain_targets.insert(aw, target);
-        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
+        let aws = self.state.gateway_aws();
+        self.post_gateways(ClusterMsg::AwSet { aws });
         self.post(NodeId::Aw(aw), ClusterMsg::PreemptAll);
     }
 
@@ -689,7 +852,7 @@ impl Orch {
             self.loads.note_submit(aw);
             self.loads.note_pages(aw, footprint);
             self.post(NodeId::Aw(aw), ClusterMsg::AdoptRequest { meta });
-            self.post(NodeId::Gateway, ClusterMsg::Rebind { request, new_aw: aw });
+            self.post_gateway_owner(request, ClusterMsg::Rebind { request, new_aw: aw });
         }
     }
 
@@ -730,11 +893,16 @@ impl Orch {
     }
 
     fn probe_sweep(&mut self) {
-        let (aws, ews): (Vec<u32>, Vec<u32>) = {
+        let (aws, ews, stores, gateways) = {
             let inner = self.state.inner.lock().unwrap();
             (
-                inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect(),
-                inner.ews.iter().filter(|(_, e)| e.alive).map(|(&i, _)| i).collect(),
+                live_ids(&inner.aws),
+                inner.ews.iter().filter(|(_, e)| e.alive).map(|(&i, _)| i).collect::<Vec<_>>(),
+                // Control-plane probing only engages in replicated
+                // deployments — single-replica defaults keep the exact
+                // pre-§15 probe traffic.
+                if inner.stores.len() > 1 { live_ids(&inner.stores) } else { Vec::new() },
+                if inner.gateways.len() > 1 { live_ids(&inner.gateways) } else { Vec::new() },
             )
         };
         for a in aws {
@@ -742,6 +910,12 @@ impl Orch {
         }
         for e in ews {
             self.check_liveness(NodeId::Ew(e));
+        }
+        for s in stores {
+            self.check_liveness(NodeId::Store(s));
+        }
+        for g in gateways {
+            self.check_liveness(NodeId::Gateway(g));
         }
         self.drain_adoptions();
     }
@@ -793,6 +967,16 @@ impl Orch {
                 self.state.record_tagged(EventKind::Detected, 0, 0, i);
                 self.recover_aw(i);
             }
+            NodeId::Store(i) => {
+                // token_index 2 = store-replica failure class.
+                self.state.record_tagged(EventKind::Detected, 0, 2, i);
+                self.recover_store(i);
+            }
+            NodeId::Gateway(g) => {
+                // token_index 3 = gateway-shard failure class.
+                self.state.record_tagged(EventKind::Detected, 0, 3, g);
+                self.recover_gateway(g);
+            }
             _ => {}
         }
     }
@@ -822,8 +1006,7 @@ impl Orch {
             inner.ert_version += 1;
             let v = inner.ert_version;
             inner.ert = Some(Ert::new(v, table.clone()));
-            let aws: Vec<u32> =
-                inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect();
+            let aws = live_ids(&inner.aws);
             (
                 table,
                 v,
@@ -859,18 +1042,19 @@ impl Orch {
         let live_aws: Vec<u32> = {
             let mut inner = self.state.inner.lock().unwrap();
             inner.aws.insert(aw, false);
-            inner.aws.iter().filter(|(_, &a)| a).map(|(&i, _)| i).collect()
+            live_ids(&inner.aws)
         };
-        // Tell EWs + gateway about the membership change (the gateway's
+        // Tell EWs + gateways about the membership change (the gateway's
         // set additionally excludes draining AWs).
         let ews = self.state.live_ews();
         for e in ews {
             self.post(NodeId::Ew(e), ClusterMsg::AwSet { aws: live_aws.clone() });
         }
-        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: self.state.gateway_aws() });
-        // Ask the store which requests were on the failed AW; the reply
-        // (ActiveReqs) drives adoption.
-        self.post(NodeId::Store, ClusterMsg::QueryActive { aw });
+        let gw_aws = self.state.gateway_aws();
+        self.post_gateways(ClusterMsg::AwSet { aws: gw_aws });
+        // Ask a store replica which requests were on the failed AW; the
+        // reply (ActiveReqs) drives adoption.
+        self.query_active(aw);
 
         // Background replacement AW.
         if self.spawner.cfg.resilience.provisioning {
@@ -895,12 +1079,81 @@ impl Orch {
                 for e in state.live_ews() {
                     spawner.post_admin(NodeId::Ew(e), ClusterMsg::AwSet { aws: live.clone() });
                 }
-                spawner.post_admin(
-                    NodeId::Gateway,
-                    ClusterMsg::AwSet { aws: state.gateway_aws() },
-                );
+                let gw_aws = state.gateway_aws();
+                for g in state.live_gateways() {
+                    spawner.post_admin(
+                        NodeId::Gateway(g),
+                        ClusterMsg::AwSet { aws: gw_aws.clone() },
+                    );
+                }
             })
             .ok();
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Store-replica failure (DESIGN.md §15)
+    // -----------------------------------------------------------------
+
+    /// A checkpoint-store replica died. Durable state survives on the
+    /// peers (AWs fan commits out to every replica), so the only repair
+    /// is local: stop routing queries at the corpse and re-drive the
+    /// active-set queries it never answered.
+    fn recover_store(&mut self, store: u32) {
+        self.state.store_failovers.fetch_add(1, Ordering::Relaxed);
+        self.state.inner.lock().unwrap().stores.insert(store, false);
+        self.state.record(EventKind::StoreFailover, 0, store);
+        let redo: Vec<u32> = self
+            .outstanding_queries
+            .iter()
+            .filter(|(_, &s)| s == store)
+            .map(|(&aw, _)| aw)
+            .collect();
+        for aw in redo {
+            self.query_active(aw);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Gateway-shard failure (DESIGN.md §15)
+    // -----------------------------------------------------------------
+
+    /// A gateway shard died. Its recorded state (token streams, terminal
+    /// sets) lives in the shared gateway state, so nothing durable was
+    /// lost; the survivors must adopt its requests. Ordering matters:
+    /// `Rebind`s for in-flight (dispatched) requests go to each new owner
+    /// *before* the `GatewaySet` on the same FIFO QP, so the owner tracks
+    /// them and its schedule rescan does not re-dispatch work an AW is
+    /// still decoding. AWs get the same `GatewaySet` and re-emit token
+    /// history for moved streams (closing the in-flight-loss window).
+    fn recover_gateway(&mut self, gw: u32) {
+        self.state.gateway_failovers.fetch_add(1, Ordering::Relaxed);
+        let (old_set, new_set) = {
+            let mut inner = self.state.inner.lock().unwrap();
+            let old = live_ids(&inner.gateways);
+            inner.gateways.insert(gw, false);
+            (old, live_ids(&inner.gateways))
+        };
+        self.state.record(EventKind::GatewayFailover, 0, gw);
+        if new_set.is_empty() {
+            return; // last shard: nothing to fail over to
+        }
+        let rebinds: Vec<(u64, u32)> = self
+            .bound
+            .iter()
+            .filter(|(&id, _)| chash::owner(id, &old_set) == Some(gw))
+            .map(|(&id, &aw)| (id, aw))
+            .collect();
+        for (request, aw) in rebinds {
+            if let Some(owner) = chash::owner(request, &new_set) {
+                self.post(NodeId::Gateway(owner), ClusterMsg::Rebind { request, new_aw: aw });
+            }
+        }
+        for &g in &new_set {
+            self.post(NodeId::Gateway(g), ClusterMsg::GatewaySet { gateways: new_set.clone() });
+        }
+        for a in self.state.live_aws() {
+            self.post(NodeId::Aw(a), ClusterMsg::GatewaySet { gateways: new_set.clone() });
         }
     }
 
@@ -919,7 +1172,7 @@ impl Orch {
             self.bound.insert(req, target);
             self.state.record(EventKind::Adopted, req, target);
             self.post(NodeId::Aw(target), ClusterMsg::AdoptRequest { meta });
-            self.post(NodeId::Gateway, ClusterMsg::Rebind { request: req, new_aw: target });
+            self.post_gateway_owner(req, ClusterMsg::Rebind { request: req, new_aw: target });
         }
     }
 
@@ -1008,15 +1261,168 @@ impl Orch {
         for (e, _) in &ews {
             self.post(NodeId::Ew(*e), ClusterMsg::AwSet { aws: aws.clone() });
         }
-        self.post(NodeId::Gateway, ClusterMsg::AwSet { aws: aws.clone() });
-        self.post(NodeId::Gateway, ClusterMsg::RestartNotice);
+        self.post_gateways(ClusterMsg::AwSet { aws: aws.clone() });
+        self.post_gateways(ClusterMsg::RestartNotice);
         self.state.clear_all_handled();
         self.last_restart = Some(self.clock.now());
         self.state.restarting.store(false, Ordering::Release);
     }
 }
 
-#[allow(dead_code)]
-fn unused_hdr() -> usize {
-    HDR_BYTES
+// ---------------------------------------------------------------------------
+// Warm standby (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+pub struct StandbyParams {
+    /// Pre-registered inbox for `NodeId::OrchStandby`.
+    pub inbox: crate::transport::Inbox<ClusterMsg>,
+    pub mode: RecoveryMode,
+    pub spawner: Arc<Spawner>,
+    /// The same shared state object the active orchestrator uses —
+    /// membership and the ERT are live-mirrored for free; `OrchSync`
+    /// carries only the orchestrator-local recovery state (bindings,
+    /// parked requests).
+    pub state: Arc<OrchState>,
+    pub stop: Arc<AtomicBool>,
+}
+
+pub fn spawn_standby(params: StandbyParams) -> std::thread::JoinHandle<()> {
+    let clock = params.spawner.fabric.clock().clone();
+    clock::spawn_participant(&clock, "orch-standby", move || standby_main(params))
+        .expect("spawn orch standby")
+}
+
+enum Handover {
+    /// The active orchestrator acked its demotion.
+    Acked,
+    /// No ack and the active is fabric-dead: promote as a failover.
+    Dead,
+    /// No ack but the active is still alive: abort (no split-brain).
+    Alive,
+}
+
+fn standby_main(p: StandbyParams) {
+    let fabric = p.spawner.fabric.clone();
+    let clock = fabric.clock().clone();
+    let probe_interval = p.spawner.cfg.resilience.probe_interval;
+    let probe_timeout = p.spawner.cfg.resilience.probe_timeout;
+    let retries = p.spawner.cfg.resilience.probe_retries.max(1);
+    let detection = p.spawner.cfg.resilience.detection;
+    let probe_qp = fabric.qp(NodeId::OrchStandby, NodeId::Orchestrator, Plane::Control).ok();
+    let mut mirror = OrchSnapshot::default();
+    let mut last_probe = clock.now();
+    let mut misses = 0u32;
+    loop {
+        if p.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match p.inbox.recv(Duration::from_millis(2)) {
+            Ok(env) => match env.msg {
+                ClusterMsg::OrchSync(s) => mirror = s,
+                ClusterMsg::PromoteOrch => {
+                    // Planned handover: demote the active first and only
+                    // take the role once it acks (or is provably dead) —
+                    // two live orchestrators would split the brain.
+                    match demote_active(&p, &clock, probe_timeout, &mut mirror) {
+                        Handover::Acked => return promote(p, mirror, true),
+                        Handover::Dead => return promote(p, mirror, false),
+                        Handover::Alive => {} // refused: stay standby
+                    }
+                }
+                _ => {}
+            },
+            Err(crate::transport::QpError::Timeout) => {}
+            Err(_) => return, // standby killed
+        }
+        // Probe the active orchestrator; `probe_retries` consecutive
+        // misses confirm its death and trigger an unplanned promotion.
+        if detection && clock.now().saturating_sub(last_probe) >= probe_interval {
+            last_probe = clock.now();
+            let dead = match probe_qp.as_ref() {
+                Some(qp) => !qp.peer_reachable() && qp.probe(probe_timeout).is_err(),
+                None => false,
+            };
+            if dead {
+                misses += 1;
+                if misses >= retries {
+                    return promote(p, mirror, false);
+                }
+            } else {
+                misses = 0;
+            }
+        }
+    }
+}
+
+/// Ask the active orchestrator to demote itself and wait for the ack
+/// (keeping the mirror fresh if syncs race the ack).
+fn demote_active(
+    p: &StandbyParams,
+    clock: &Clock,
+    probe_timeout: Duration,
+    mirror: &mut OrchSnapshot,
+) -> Handover {
+    let fabric = &p.spawner.fabric;
+    if let Ok(qp) = fabric.qp(NodeId::OrchStandby, NodeId::Orchestrator, Plane::Control) {
+        let _ = qp.post(ClusterMsg::DemoteOrch, HDR_BYTES, TrafficClass::Admin);
+    }
+    let deadline = clock.now() + probe_timeout * 4;
+    loop {
+        let left = deadline.saturating_sub(clock.now());
+        if left.is_zero() {
+            break;
+        }
+        match p.inbox.recv(left) {
+            Ok(env) => match env.msg {
+                ClusterMsg::DemoteAck => return Handover::Acked,
+                ClusterMsg::OrchSync(s) => *mirror = s,
+                _ => {}
+            },
+            Err(crate::transport::QpError::Timeout) => break,
+            Err(_) => return Handover::Alive, // the standby itself died
+        }
+    }
+    if fabric.is_alive(NodeId::Orchestrator) {
+        Handover::Alive
+    } else {
+        Handover::Dead
+    }
+}
+
+/// Take over the orchestrator role: re-register `NodeId::Orchestrator`
+/// (the fabric swaps a fresh inbox under every existing QP toward the
+/// role address — workers keep posting, unaware), rebuild the service
+/// state from the shared `OrchState` plus the mirrored snapshot, re-drive
+/// possibly-lost recovery work, and run the normal service loop.
+fn promote(p: StandbyParams, mirror: OrchSnapshot, planned: bool) {
+    let fabric = p.spawner.fabric.clone();
+    let (inbox, _handle) = fabric.register(NodeId::Orchestrator);
+    p.state.orch_promotions.fetch_add(1, Ordering::Relaxed);
+    // token_index 1 = planned handover, 0 = failover promotion.
+    p.state.record_tagged(EventKind::OrchPromoted, 0, if planned { 1 } else { 0 }, 0);
+    if !planned {
+        // token_index 4 = orchestrator failure class.
+        p.state.record_tagged(EventKind::Detected, 0, 4, 0);
+    }
+    let mut o = Orch::new(p.spawner, p.state, p.mode, p.stop, false);
+    o.bound = mirror.bound.into_iter().collect();
+    o.parked = mirror.parked.into_iter().map(|m| (m, None)).collect();
+    // The old orchestrator may have died mid-recovery: between a
+    // `QueryActive` and its reply, or between an AW death and its
+    // handling. Re-query the active set of every dead AW slot — the
+    // store's answer is idempotent downstream (duplicate adoptions
+    // install idempotently and regenerate identical tokens).
+    let dead_aws: Vec<u32> = {
+        let inner = o.state.inner.lock().unwrap();
+        inner.aws.iter().filter(|(_, &a)| !a).map(|(&i, _)| i).collect()
+    };
+    for aw in dead_aws {
+        o.query_active(aw);
+    }
+    if !planned {
+        // Catch anything that died in the takeover window right away.
+        o.probe_sweep();
+    }
+    o.try_readmit();
+    o.run(&inbox);
 }

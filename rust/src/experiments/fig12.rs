@@ -188,7 +188,7 @@ fn tarragon_restore(
     cluster.wait_done(Duration::from_secs(180));
     let restore_bytes = cluster
         .fabric
-        .egress_of(NodeId::Store)
+        .egress_of(NodeId::Store(0))
         .map(|l| l.stats().bytes_of(TrafficClass::Restore))
         .unwrap_or(0);
     let report = cluster.finish(0.25);

@@ -124,7 +124,10 @@ impl RunAnalysis {
                 | EventKind::Rerouted
                 | EventKind::Adopted
                 | EventKind::RestoreStarted
-                | EventKind::Restored => {}
+                | EventKind::Restored
+                | EventKind::StoreFailover
+                | EventKind::GatewayFailover
+                | EventKind::OrchPromoted => {}
             }
         }
 
@@ -173,6 +176,12 @@ impl RunAnalysis {
 pub enum FailureClass {
     Aw,
     Ew,
+    /// Checkpoint-store replica (DESIGN.md §15).
+    Store,
+    /// Gateway shard.
+    Gateway,
+    /// The active orchestrator (standby promotion).
+    Orch,
 }
 
 impl FailureClass {
@@ -180,6 +189,30 @@ impl FailureClass {
         match self {
             FailureClass::Aw => "aw",
             FailureClass::Ew => "ew",
+            FailureClass::Store => "store",
+            FailureClass::Gateway => "gateway",
+            FailureClass::Orch => "orch",
+        }
+    }
+
+    /// The `Detected` event's `token_index` encoding of this class.
+    pub fn code(self) -> u32 {
+        match self {
+            FailureClass::Aw => 0,
+            FailureClass::Ew => 1,
+            FailureClass::Store => 2,
+            FailureClass::Gateway => 3,
+            FailureClass::Orch => 4,
+        }
+    }
+
+    fn decode(code: u32) -> FailureClass {
+        match code {
+            1 => FailureClass::Ew,
+            2 => FailureClass::Store,
+            3 => FailureClass::Gateway,
+            4 => FailureClass::Orch,
+            _ => FailureClass::Aw,
         }
     }
 }
@@ -258,7 +291,7 @@ impl RecoveryReport {
             if e.kind != EventKind::Detected {
                 continue;
             }
-            let class = if e.token_index == 1 { FailureClass::Ew } else { FailureClass::Aw };
+            let class = FailureClass::decode(e.token_index);
             let t = secs(e.at);
             let dup = heads
                 .iter()
@@ -283,7 +316,23 @@ impl RecoveryReport {
             // Victim set.
             let mut victims: Vec<u64> = Vec::new();
             match class {
-                FailureClass::Aw => {
+                FailureClass::Ew => {
+                    // Every request whose token stream straddles the
+                    // death stalled on the reroute.
+                    for (&req, toks) in &tokens {
+                        if toks.iter().any(|&t| t < t_detect) && toks.iter().any(|&t| in_window(t))
+                        {
+                            victims.push(req);
+                        }
+                    }
+                    victims.sort_unstable();
+                }
+                // AW deaths and control-plane failovers (store replica,
+                // gateway shard, orchestrator) all surface per-request
+                // recovery actions in the window; an incident with no
+                // such actions (e.g. a survivable store kill, a planned
+                // orch promotion) simply has no victims.
+                _ => {
                     for e in &events {
                         let recovery = matches!(
                             e.kind,
@@ -296,17 +345,6 @@ impl RecoveryReport {
                             victims.push(e.request);
                         }
                     }
-                }
-                FailureClass::Ew => {
-                    // Every request whose token stream straddles the
-                    // death stalled on the reroute.
-                    for (&req, toks) in &tokens {
-                        if toks.iter().any(|&t| t < t_detect) && toks.iter().any(|&t| in_window(t))
-                        {
-                            victims.push(req);
-                        }
-                    }
-                    victims.sort_unstable();
                 }
             }
 
@@ -327,12 +365,12 @@ impl RecoveryReport {
                     let t_reroute = events
                         .iter()
                         .filter(|e| match class {
-                            FailureClass::Aw => {
-                                matches!(e.kind, EventKind::Adopted | EventKind::Migrated)
-                                    && e.request == req
-                            }
                             FailureClass::Ew => {
                                 e.kind == EventKind::Rerouted && e.request == worker as u64
+                            }
+                            _ => {
+                                matches!(e.kind, EventKind::Adopted | EventKind::Migrated)
+                                    && e.request == req
                             }
                         })
                         .map(|e| secs(e.at))
@@ -626,6 +664,49 @@ mod tests {
         assert_eq!(v.restore_s, 0.0, "EW reroute exercises no checkpoint restore");
         assert!((v.recompute_s - 0.028).abs() < 1e-9);
         assert!((v.total_stall_s - 0.040).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_report_attributes_control_plane_classes() {
+        let det = |t_ms: u64, class: u32, worker: u32| Event {
+            at: Duration::from_millis(t_ms),
+            kind: EventKind::Detected,
+            request: 0,
+            token_index: class,
+            worker,
+        };
+        // A store-replica death (class 2) stalls request 3 through a
+        // re-driven restore; a later orchestrator failover (class 4) has
+        // no per-request fallout.
+        let events = vec![
+            ev(0, EventKind::Submitted, 3, 0),
+            ev(50, EventKind::Token, 3, 0),
+            det(60, FailureClass::Store.code(), 0),
+            ev(70, EventKind::RestoreStarted, 3, 0),
+            ev(90, EventKind::Restored, 3, 0),
+            ev(120, EventKind::Token, 3, 1),
+            det(400, FailureClass::Orch.code(), 0),
+        ];
+        let r = RecoveryReport::from_events(&events);
+        assert_eq!(r.incidents.len(), 2, "{}", r.render());
+        let store = &r.incidents[0];
+        assert_eq!(store.class, FailureClass::Store);
+        assert_eq!(store.class.name(), "store");
+        assert_eq!(store.victims.len(), 1);
+        let v = &store.victims[0];
+        assert_eq!(v.request, 3);
+        assert!((v.restore_s - 0.020).abs() < 1e-9, "restore {}", v.restore_s);
+        assert!((v.total_stall_s - 0.070).abs() < 1e-9, "total {}", v.total_stall_s);
+        let orch = &r.incidents[1];
+        assert_eq!(orch.class, FailureClass::Orch);
+        assert!(orch.victims.is_empty(), "planned promotion has no victims");
+        // Gateway class decodes too.
+        let g = RecoveryReport::from_events(&[
+            ev(0, EventKind::Submitted, 1, 0),
+            det(10, FailureClass::Gateway.code(), 1),
+        ]);
+        assert_eq!(g.incidents[0].class, FailureClass::Gateway);
+        assert_eq!(g.incidents[0].worker, 1);
     }
 
     #[test]

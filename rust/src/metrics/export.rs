@@ -136,6 +136,35 @@ pub fn prometheus_text(r: &ClusterReport) -> String {
     );
     metric(
         &mut out,
+        "tarragon_store_failovers_total",
+        "Checkpoint-store replica deaths survived by fan-out replication.",
+        "counter",
+        r.store_failovers as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_gateway_failovers_total",
+        "Gateway shard deaths survived by consistent-hash re-admission.",
+        "counter",
+        r.gateway_failovers as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_orch_promotions_total",
+        "Standby orchestrator promotions (planned or failover).",
+        "counter",
+        r.orch_promotions as f64,
+    );
+    metric(
+        &mut out,
+        "tarragon_store_replica_lag",
+        "Accepted-commit spread (max - min) across live store replicas \
+         at run end (0 when replicas agree or K = 1).",
+        "gauge",
+        r.store_replica_lag as f64,
+    );
+    metric(
+        &mut out,
         "tarragon_kv_prefix_hits_total",
         "Prefill/restore pages satisfied by prefix sharing.",
         "counter",
@@ -259,12 +288,20 @@ mod tests {
             scale_ins: 0,
             shadow_promotions: 1,
             scale_rejected: 0,
+            store_failovers: 1,
+            gateway_failovers: 2,
+            orch_promotions: 1,
+            store_replica_lag: 3,
             sharing: SharingStats { prefix_hits: 7, cow_breaks: 1, pages_shared: 3 },
         };
         let text = prometheus_text(&r);
         assert!(text.contains("tarragon_requests_submitted_total 4"));
         assert!(text.contains("tarragon_aw_failures_total 1"));
         assert!(text.contains("tarragon_ew_failures_total 2"));
+        assert!(text.contains("tarragon_store_failovers_total 1"));
+        assert!(text.contains("tarragon_gateway_failovers_total 2"));
+        assert!(text.contains("tarragon_orch_promotions_total 1"));
+        assert!(text.contains("tarragon_store_replica_lag 3"));
         assert!(text.contains("tarragon_kv_prefix_hits_total 7"));
         // Empty-sample latency summaries are NaN — legal in the
         // exposition format.

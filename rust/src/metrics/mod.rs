@@ -67,7 +67,8 @@ pub enum EventKind {
     ShadowPromoted,
     /// A worker death was confirmed (failure-lifecycle; DESIGN.md §14).
     /// `worker` = failed node index; `token_index` encodes the class
-    /// (0 = AW, 1 = EW); `request` = 0 (cluster-scoped).
+    /// (0 = AW, 1 = EW, 2 = store replica, 3 = gateway shard,
+    /// 4 = orchestrator); `request` = 0 (cluster-scoped).
     Detected,
     /// A REFE replayed in-flight expert rows around a dead EW
     /// (`request` = failed EW index, `worker` = rerouting AW).
@@ -81,12 +82,21 @@ pub enum EventKind {
     /// The checkpoint was installed and the request rejoined the active
     /// decode set (`worker` = adopting AW).
     Restored,
+    /// A checkpoint-store replica failed; survivors keep serving
+    /// (`worker` = dead replica index; DESIGN.md §15).
+    StoreFailover,
+    /// A gateway shard failed; its requests re-admitted through the
+    /// surviving shards (`worker` = dead shard index).
+    GatewayFailover,
+    /// The standby orchestrator took over the role address (`worker` = 0;
+    /// `token_index` = 1 for a planned promotion, 0 for failover).
+    OrchPromoted,
 }
 
 impl EventKind {
     /// Every variant, in declaration order — the drift-guard tests walk
     /// this to prove `name`/`parse` and every consumer stay exhaustive.
-    pub const ALL: [EventKind; 15] = [
+    pub const ALL: [EventKind; 18] = [
         EventKind::Submitted,
         EventKind::Admitted,
         EventKind::Token,
@@ -102,6 +112,9 @@ impl EventKind {
         EventKind::Adopted,
         EventKind::RestoreStarted,
         EventKind::Restored,
+        EventKind::StoreFailover,
+        EventKind::GatewayFailover,
+        EventKind::OrchPromoted,
     ];
 
     pub fn name(self) -> &'static str {
@@ -121,6 +134,9 @@ impl EventKind {
             EventKind::Adopted => "adopted",
             EventKind::RestoreStarted => "restore_started",
             EventKind::Restored => "restored",
+            EventKind::StoreFailover => "store_failover",
+            EventKind::GatewayFailover => "gateway_failover",
+            EventKind::OrchPromoted => "orch_promoted",
         }
     }
 

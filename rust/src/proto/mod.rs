@@ -175,6 +175,92 @@ impl RestoreData {
 }
 
 // ---------------------------------------------------------------------------
+// Control-plane resilience (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One request's checkpoint state, as exported by a store replica for
+/// peer re-sync. Segments share the replica's `Arc` payloads — a full
+/// snapshot is refcount bumps, not float copies.
+#[derive(Debug, Clone)]
+pub struct RequestSync {
+    pub request: u64,
+    /// Which AW owned the request when the snapshot was taken.
+    pub owner_aw: u32,
+    /// Accepted + still-deferred commit records, oldest first. Replayed
+    /// through the normal commit path on import, so a commit whose
+    /// segments are still in flight defers exactly as a live one would.
+    pub commits: Vec<CommitMeta>,
+    /// (pos, layer, K||V data), every segment the replica holds.
+    pub segments: Vec<(u32, u16, SegPayload)>,
+}
+
+/// Full store-replica state for rebuild-time re-sync (one message in the
+/// simulation; its wire size reflects the real volume streamed).
+#[derive(Debug, Clone, Default)]
+pub struct StoreSnapshot {
+    pub requests: Vec<RequestSync>,
+    /// Tombstoned (finished) request ids.
+    pub finished: Vec<u64>,
+    /// Content index: page hash -> complete-page payloads in slot order
+    /// (payloads shared with the exporting replica's log).
+    pub page_index: Vec<(u64, Vec<SegPayload>)>,
+}
+
+impl StoreSnapshot {
+    pub fn wire_bytes(&self) -> usize {
+        let seg_bytes = |segs: &[(u32, u16, SegPayload)]| {
+            segs.iter().map(|(_, _, d)| d.len() * 4 + 8).sum::<usize>()
+        };
+        HDR_BYTES
+            + self
+                .requests
+                .iter()
+                .map(|r| HDR_BYTES * (1 + r.commits.len()) + seg_bytes(&r.segments))
+                .sum::<usize>()
+            + self.finished.len() * 8
+            + self
+                .page_index
+                .iter()
+                .map(|(_, ps)| 8 + ps.iter().map(|p| p.len() * 4).sum::<usize>())
+                .sum::<usize>()
+    }
+}
+
+/// Orchestrator state mirror for the warm standby: everything the standby
+/// needs to take over without a coarse restart. Worker beacons keep the
+/// load view fresh; this carries the parts beacons cannot rebuild.
+#[derive(Debug, Clone, Default)]
+pub struct OrchSnapshot {
+    pub ert_version: u64,
+    pub ert: ErtTable,
+    /// Live AW ids.
+    pub aws: Vec<u32>,
+    /// Live EW ids with their served experts.
+    pub ews: Vec<(u32, Vec<u32>)>,
+    /// request -> AW bindings (for failure mapping after promotion).
+    pub bound: Vec<(u64, u32)>,
+    /// Parked (preempted, committed) requests awaiting re-admission.
+    pub parked: Vec<CommitMeta>,
+    /// Live gateway shard ids.
+    pub gateways: Vec<u32>,
+    /// Live store replica ids.
+    pub stores: Vec<u32>,
+}
+
+impl OrchSnapshot {
+    pub fn wire_bytes(&self) -> usize {
+        HDR_BYTES
+            + self.ert.iter().map(|c| 4 + c.len() * 4).sum::<usize>()
+            + self.aws.len() * 4
+            + self.ews.iter().map(|(_, e)| 4 + e.len() * 4).sum::<usize>()
+            + self.bound.len() * 12
+            + self.parked.len() * HDR_BYTES
+            + self.gateways.len() * 4
+            + self.stores.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Overload-aware scheduling (DESIGN.md §9)
 // ---------------------------------------------------------------------------
 
@@ -323,6 +409,24 @@ pub enum ClusterMsg {
     /// onto the remaining candidates — manual scale-in. Rejected (not
     /// stranded) if the EW is the last replica of any of its experts.
     ScaleEwDown { ew: u32 },
+    // ---- control-plane resilience (DESIGN.md §15) ----
+    /// orchestrator -> gateways + AWs: the set of live gateway shards.
+    /// Gateways rescan their schedule for stranded owned admissions; AWs
+    /// re-emit token history for requests whose owner shard changed.
+    GatewaySet { gateways: Vec<u32> },
+    /// rebuilt store replica -> a live peer: send me your full log.
+    StoreSyncPull { from: u32 },
+    /// peer -> rebuilt replica: full state snapshot (payloads shared).
+    StoreSyncData(StoreSnapshot),
+    /// active orchestrator -> standby: periodic state mirror.
+    OrchSync(OrchSnapshot),
+    /// admin -> standby: planned promotion — the standby drives an
+    /// orderly handover (demote active, then take over the role address).
+    PromoteOrch,
+    /// standby -> active: stop serving, ack, and go inert.
+    DemoteOrch,
+    /// active -> standby: handover complete; take over the role address.
+    DemoteAck,
 }
 
 impl ClusterMsg {
@@ -347,6 +451,9 @@ impl ClusterMsg {
             ClusterMsg::Rejected { reason, .. } => HDR_BYTES + reason.len(),
             ClusterMsg::EwStatus(st) => HDR_BYTES + st.tokens.len() * 12,
             ClusterMsg::Stale { slots, .. } => HDR_BYTES + slots.len() * 4,
+            ClusterMsg::GatewaySet { gateways } => HDR_BYTES + gateways.len() * 4,
+            ClusterMsg::StoreSyncData(s) => s.wire_bytes(),
+            ClusterMsg::OrchSync(s) => s.wire_bytes(),
             _ => HDR_BYTES,
         }
     }

@@ -46,6 +46,22 @@ pub enum Fault {
     /// Elastic scale-in: remap the EW's primaries onto the remaining
     /// candidates and retire it (rejected for a last replica).
     ScaleEwDown(u32),
+    /// Fail-stop a checkpoint-store replica (DESIGN.md §15).
+    KillStore(u32),
+    /// Rebuild a killed store replica on its slot (anti-entropy re-sync
+    /// from a surviving peer).
+    RespawnStore(u32),
+    /// Fail-stop a gateway shard; survivors re-admit its requests.
+    KillGateway(u32),
+    /// Fail-stop the active orchestrator (the warm standby promotes).
+    KillOrch,
+    /// Planned orchestrator handover: standby demotes the active, then
+    /// assumes the role (zero-incident mobility).
+    PromoteOrch,
+    /// Drop a store replica's sealed-page content index — the
+    /// `page_refs_missed` degradation: restores fall back to
+    /// recompute/resubmit instead of page-ref resolution.
+    CorruptStoreIndex(u32),
     /// Workload-shaping: skew the router onto expert K for the whole run
     /// (installed at launch regardless of the scheduled time, so token
     /// streams stay comparable across fault schedules; kept by
@@ -58,8 +74,16 @@ pub enum Fault {
 /// here (the drift-guard tests parse every `example` and require the
 /// error text to advertise every `name`).
 pub const VERBS: &[VerbSpec] = &[
-    VerbSpec { name: "kill", usage: "kill <aw|ew><N>", example: "at 10ms kill ew1" },
-    VerbSpec { name: "respawn", usage: "respawn <aw|ew><N>", example: "at 10ms respawn aw0" },
+    VerbSpec {
+        name: "kill",
+        usage: "kill <aw|ew|store|gateway><N> | kill orch",
+        example: "at 10ms kill ew1",
+    },
+    VerbSpec {
+        name: "respawn",
+        usage: "respawn <aw|ew|store><N>",
+        example: "at 10ms respawn aw0",
+    },
     VerbSpec { name: "drain", usage: "drain aw<N>", example: "at 10ms drain aw0" },
     VerbSpec { name: "sever", usage: "sever <node> <node>", example: "at 10ms sever aw0 ew0" },
     VerbSpec { name: "heal", usage: "heal <node> <node>", example: "at 10ms heal aw0 ew0" },
@@ -70,6 +94,12 @@ pub const VERBS: &[VerbSpec] = &[
         example: "at 10ms scale_ew down ew1",
     },
     VerbSpec { name: "hotspot", usage: "hotspot e<K>", example: "at 10ms hotspot e2" },
+    VerbSpec { name: "promote", usage: "promote orch", example: "at 10ms promote orch" },
+    VerbSpec {
+        name: "corrupt_index",
+        usage: "corrupt_index store<N>",
+        example: "at 10ms corrupt_index store0",
+    },
 ];
 
 /// One row of the verb table.
@@ -114,12 +144,24 @@ impl ScheduledFault {
             ("kill", 4) => match node(toks[3])? {
                 NodeId::Aw(i) => Fault::KillAw(i),
                 NodeId::Ew(i) => Fault::KillEw(i),
+                NodeId::Store(i) => Fault::KillStore(i),
+                NodeId::Gateway(i) => Fault::KillGateway(i),
+                NodeId::Orchestrator => Fault::KillOrch,
                 other => return bad(&format!("cannot kill {other}")),
             },
             ("respawn", 4) => match node(toks[3])? {
                 NodeId::Aw(i) => Fault::RespawnAw(i),
                 NodeId::Ew(i) => Fault::RespawnEw(i),
+                NodeId::Store(i) => Fault::RespawnStore(i),
                 other => return bad(&format!("cannot respawn {other}")),
+            },
+            ("promote", 4) => match node(toks[3])? {
+                NodeId::Orchestrator => Fault::PromoteOrch,
+                other => return bad(&format!("cannot promote {other} (orch only)")),
+            },
+            ("corrupt_index", 4) => match node(toks[3])? {
+                NodeId::Store(i) => Fault::CorruptStoreIndex(i),
+                other => return bad(&format!("cannot corrupt {other} (stores only)")),
             },
             ("drain", 4) => match node(toks[3])? {
                 NodeId::Aw(i) => Fault::DrainAw(i),
@@ -163,6 +205,12 @@ impl std::fmt::Display for Fault {
             Fault::ScaleEwUp => write!(f, "scale_ew up"),
             Fault::ScaleEwDown(i) => write!(f, "scale_ew down ew{i}"),
             Fault::Hotspot(e) => write!(f, "hotspot e{e}"),
+            Fault::KillStore(i) => write!(f, "kill store{i}"),
+            Fault::RespawnStore(i) => write!(f, "respawn store{i}"),
+            Fault::KillGateway(i) => write!(f, "kill gateway{i}"),
+            Fault::KillOrch => write!(f, "kill orch"),
+            Fault::PromoteOrch => write!(f, "promote orch"),
+            Fault::CorruptStoreIndex(i) => write!(f, "corrupt_index store{i}"),
         }
     }
 }
@@ -198,8 +246,10 @@ fn parse_time(t: &str) -> Option<Duration> {
 
 fn parse_node(t: &str) -> Option<NodeId> {
     match t {
-        "store" => return Some(NodeId::Store),
-        "gateway" => return Some(NodeId::Gateway),
+        // Bare role names address replica/shard 0 (the single-instance
+        // deployments every pre-§15 scenario was written against).
+        "store" => return Some(NodeId::Store(0)),
+        "gateway" => return Some(NodeId::Gateway(0)),
         "orch" | "orchestrator" => return Some(NodeId::Orchestrator),
         _ => {}
     }
@@ -208,6 +258,12 @@ fn parse_node(t: &str) -> Option<NodeId> {
     }
     if let Some(i) = t.strip_prefix("ew") {
         return i.parse().ok().map(NodeId::Ew);
+    }
+    if let Some(i) = t.strip_prefix("store") {
+        return i.parse().ok().map(NodeId::Store);
+    }
+    if let Some(i) = t.strip_prefix("gateway") {
+        return i.parse().ok().map(NodeId::Gateway);
     }
     None
 }
@@ -356,6 +412,14 @@ fn apply(cluster: &Cluster, fault: &Fault) {
         Fault::MigrateAw(a, b) => cluster.migrate_aw(*a, *b),
         Fault::ScaleEwUp => cluster.scale_ew_up(),
         Fault::ScaleEwDown(i) => cluster.scale_ew_down(*i),
+        Fault::KillStore(i) => cluster.kill_store(*i),
+        Fault::RespawnStore(i) => {
+            let _ = cluster.respawn_store(*i);
+        }
+        Fault::KillGateway(i) => cluster.kill_gateway(*i),
+        Fault::KillOrch => cluster.kill_orch(),
+        Fault::PromoteOrch => cluster.promote_orch(),
+        Fault::CorruptStoreIndex(i) => cluster.corrupt_store_index(*i),
         // Workload-shaping: consumed at launch by `Scenario::run`.
         Fault::Hotspot(_) => {}
     }
@@ -461,7 +525,7 @@ mod tests {
             ScheduledFault::parse("at 300ms sever aw0 store").unwrap(),
             ScheduledFault {
                 at: Duration::from_millis(300),
-                fault: Fault::Sever(NodeId::Aw(0), NodeId::Store),
+                fault: Fault::Sever(NodeId::Aw(0), NodeId::Store(0)),
             }
         );
         assert_eq!(
@@ -495,6 +559,36 @@ mod tests {
             ScheduledFault::parse("at 0ms hotspot e3").unwrap(),
             ScheduledFault { at: Duration::ZERO, fault: Fault::Hotspot(3) }
         );
+        // Control-plane verbs (DESIGN.md §15). A bare role name means
+        // replica/shard 0.
+        assert_eq!(
+            ScheduledFault::parse("at 10ms kill store1").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::KillStore(1) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms kill store").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::KillStore(0) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms respawn store1").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::RespawnStore(1) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms kill gateway0").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::KillGateway(0) }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms kill orch").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::KillOrch }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms promote orch").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::PromoteOrch }
+        );
+        assert_eq!(
+            ScheduledFault::parse("at 10ms corrupt_index store0").unwrap(),
+            ScheduledFault { at: Duration::from_millis(10), fault: Fault::CorruptStoreIndex(0) }
+        );
     }
 
     #[test]
@@ -502,7 +596,6 @@ mod tests {
         for bad in [
             "kill ew1",
             "at 10ms",
-            "at 10ms kill store",
             "at 10ms kill",
             "at tenms kill ew1",
             "at 10ms sever aw0",
@@ -517,6 +610,11 @@ mod tests {
             "at 10ms scale_ew down",
             "at 10ms hotspot ew1",
             "at 10ms hotspot 3",
+            "at 10ms respawn orch",
+            "at 10ms promote aw0",
+            "at 10ms promote",
+            "at 10ms corrupt_index aw0",
+            "at 10ms corrupt_index",
         ] {
             assert!(ScheduledFault::parse(bad).is_err(), "accepted: {bad}");
         }

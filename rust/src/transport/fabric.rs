@@ -419,8 +419,8 @@ mod tests {
         assert!(!fabric.is_alive(NodeId::Aw(5)));
         let (inbox2, _h2) = fabric.register(NodeId::Aw(5));
         assert!(fabric.is_alive(NodeId::Aw(5)));
-        let (_ig, _hg) = fabric.register(NodeId::Gateway);
-        let qp = fabric.qp(NodeId::Gateway, NodeId::Aw(5), Plane::Control).unwrap();
+        let (_ig, _hg) = fabric.register(NodeId::Gateway(0));
+        let qp = fabric.qp(NodeId::Gateway(0), NodeId::Aw(5), Plane::Control).unwrap();
         qp.post(9, 8, TrafficClass::Admin).unwrap();
         assert_eq!(inbox2.recv(Duration::from_millis(200)).unwrap().msg, 9);
     }
@@ -431,9 +431,9 @@ mod tests {
         cfg.bandwidth_bps = 1e6; // 1 MB/s
         cfg.latency = Duration::ZERO;
         let fabric: Arc<Fabric<u32>> = Fabric::new(cfg);
-        let (inbox, _h) = fabric.register(NodeId::Store);
+        let (inbox, _h) = fabric.register(NodeId::Store(0));
         let (_i2, _h2) = fabric.register(NodeId::Aw(0));
-        let qp = fabric.qp(NodeId::Aw(0), NodeId::Store, Plane::Data).unwrap();
+        let qp = fabric.qp(NodeId::Aw(0), NodeId::Store(0), Plane::Data).unwrap();
         let t0 = Instant::now();
         qp.post(0, 10_000, TrafficClass::Checkpoint).unwrap(); // 10 ms transfer
         inbox.recv(Duration::from_secs(1)).unwrap();

@@ -34,10 +34,16 @@ use std::fmt;
 pub enum NodeId {
     Aw(u32),
     Ew(u32),
-    /// Checkpoint store (its own node, §7.1).
-    Store,
+    /// Checkpoint store replica `k` of `K` (its own node, §7.1).
+    Store(u32),
+    /// The *role* address of the active orchestrator. A promoted standby
+    /// re-registers this id, swapping a fresh inbox under every existing
+    /// QP (delivery resolves the receiver at post time).
     Orchestrator,
-    Gateway,
+    /// Warm-standby orchestrator, mirroring state until promotion.
+    OrchStandby,
+    /// Gateway shard `n` of `N` (consistent-hash admission sharding).
+    Gateway(u32),
 }
 
 impl fmt::Display for NodeId {
@@ -45,9 +51,10 @@ impl fmt::Display for NodeId {
         match self {
             NodeId::Aw(i) => write!(f, "aw{i}"),
             NodeId::Ew(i) => write!(f, "ew{i}"),
-            NodeId::Store => write!(f, "store"),
+            NodeId::Store(i) => write!(f, "store{i}"),
             NodeId::Orchestrator => write!(f, "orch"),
-            NodeId::Gateway => write!(f, "gateway"),
+            NodeId::OrchStandby => write!(f, "orch-standby"),
+            NodeId::Gateway(i) => write!(f, "gateway{i}"),
         }
     }
 }

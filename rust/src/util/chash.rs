@@ -1,0 +1,92 @@
+//! Rendezvous (highest-random-weight) hashing for gateway sharding
+//! (DESIGN.md §15).
+//!
+//! Every party that knows a key and the live shard set independently
+//! computes the same owner, with no coordination and no ring state: the
+//! owner of `key` is the live shard with the highest `mix(key, shard)`
+//! weight. Removing a shard reassigns only the keys it owned (each key's
+//! weights against the surviving shards are unchanged), and adding a
+//! shard steals only the keys whose weight against the newcomer beats
+//! their current maximum — the minimal-disruption property the
+//! gateway-failover path depends on: survivors keep their requests, so a
+//! gateway death never reshuffles healthy streams.
+
+/// SplitMix64 finalizer: a cheap, well-distributed 64-bit mix.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous weight of `key` against `shard`.
+pub fn weight(key: u64, shard: u32) -> u64 {
+    mix(key ^ mix(shard as u64 ^ 0xa076_1d64_78bd_642f))
+}
+
+/// The live shard that owns `key`: highest weight, ties broken toward the
+/// lowest shard id (deterministic for every caller). Returns `None` for
+/// an empty shard set.
+pub fn owner(key: u64, shards: &[u32]) -> Option<u32> {
+    shards
+        .iter()
+        .copied()
+        .max_by_key(|&s| (weight(key, s), std::cmp::Reverse(s)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_is_deterministic_and_in_set() {
+        let shards = [0, 1, 2, 3];
+        for key in 0..256u64 {
+            let a = owner(key, &shards).unwrap();
+            let b = owner(key, &shards).unwrap();
+            assert_eq!(a, b);
+            assert!(shards.contains(&a));
+        }
+        assert_eq!(owner(7, &[]), None);
+        assert_eq!(owner(7, &[5]), Some(5));
+    }
+
+    #[test]
+    fn removal_only_remaps_the_dead_shards_keys() {
+        let full = [0u32, 1, 2, 3];
+        let survivors = [0u32, 1, 3];
+        for key in 0..512u64 {
+            let before = owner(key, &full).unwrap();
+            let after = owner(key, &survivors).unwrap();
+            if before != 2 {
+                assert_eq!(before, after, "key {key} moved off a surviving shard");
+            } else {
+                assert!(survivors.contains(&after));
+            }
+        }
+    }
+
+    #[test]
+    fn addition_only_steals_keys_for_the_new_shard() {
+        let old = [0u32, 1];
+        let new = [0u32, 1, 2];
+        for key in 0..512u64 {
+            let before = owner(key, &old).unwrap();
+            let after = owner(key, &new).unwrap();
+            assert!(after == before || after == 2, "key {key} moved between old shards");
+        }
+    }
+
+    #[test]
+    fn spread_is_roughly_balanced() {
+        let shards = [0u32, 1, 2, 3];
+        let mut counts = [0usize; 4];
+        for key in 0..4096u64 {
+            counts[owner(key, &shards).unwrap() as usize] += 1;
+        }
+        for &c in &counts {
+            // Expect ~1024 per shard; allow a generous band.
+            assert!((700..1400).contains(&c), "unbalanced spread: {counts:?}");
+        }
+    }
+}

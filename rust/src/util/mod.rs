@@ -4,6 +4,7 @@
 //! DESIGN.md §2), so the usual ecosystem crates (serde, rand, clap, ...)
 //! are replaced by the minimal, tested implementations in this module.
 
+pub mod chash;
 pub mod cli;
 pub mod clock;
 pub mod http;

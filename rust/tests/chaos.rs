@@ -1,6 +1,8 @@
 //! Chaos/soak fuzz suite: seeded random schedules over the full scenario
 //! verb set (kill / respawn / sever+heal / drain / migrate / scale_ew /
-//! hotspot) against a full cluster on the virtual clock.
+//! hotspot, plus the §15 control-plane verbs: kill/respawn store
+//! replicas, kill gateway shards, kill or hand over the orchestrator)
+//! against a full cluster on the virtual clock.
 //!
 //! Per seed, the generator composes a random workload plus a random fault
 //! schedule that a small cluster model keeps *survivable* (every expert
@@ -63,6 +65,11 @@ fn chaos_cfg() -> Config {
     // Bounded arenas so the soak also exercises preemption/restore under
     // mobility; every generated request fits (<= 4 pages of 16).
     cfg.sched.kv_budget_pages = 16;
+    // Replicated control plane (§15) so its failure verbs are legal:
+    // two store replicas, two gateway shards, a warm orchestrator standby.
+    cfg.cluster.num_stores = 2;
+    cfg.cluster.num_gateways = 2;
+    cfg.resilience.orch_standby = true;
     cfg
 }
 
@@ -89,6 +96,17 @@ struct Model {
     sever_until: Option<Duration>,
     ups: u32,
     hotspot_used: bool,
+    /// §15 control plane: live store replicas / gateway shards (never
+    /// drop the last of either — the cluster is only *replica*-tolerant).
+    store_live: BTreeSet<u32>,
+    store_killed: BTreeSet<u32>,
+    gateway_live: BTreeSet<u32>,
+    /// The orchestrator slot acts at most once per run (kill *or* planned
+    /// promotion): there is exactly one standby to consume.
+    orch_acted: bool,
+    /// Control-plane faults are spaced out so each failover (probe
+    /// detection + takeover) lands before the next one stacks on top.
+    control_ready: Duration,
 }
 
 impl Model {
@@ -105,6 +123,11 @@ impl Model {
             sever_until: None,
             ups: 0,
             hotspot_used: false,
+            store_live: [0, 1].into_iter().collect(),
+            store_killed: BTreeSet::new(),
+            gateway_live: [0, 1].into_iter().collect(),
+            orch_acted: false,
+            control_ready: Duration::ZERO,
         }
     }
 
@@ -148,6 +171,11 @@ enum Act {
     Migrate(u32, u32),
     Sever(u32, u32),
     Hotspot(u32),
+    KillStore(u32),
+    RespawnStore(u32),
+    KillGateway(u32),
+    KillOrch,
+    PromoteOrch,
 }
 
 /// Generate one survivable fault schedule; the model is advanced in time
@@ -215,6 +243,29 @@ fn gen_faults(rng: &mut Pcg, steps: usize) -> Vec<ScheduledFault> {
                 acts.push(Act::Hotspot(k));
             }
         }
+        // §15 control-plane verbs: only once the previous control-plane
+        // failover has had time to land, and never the last replica of a
+        // role. Dead gateways stay dead (no respawn verb — survivors own
+        // the whole hash ring for the rest of the run).
+        if t >= m.control_ready {
+            if m.store_live.len() >= 2 {
+                for &s in &m.store_live {
+                    acts.push(Act::KillStore(s));
+                }
+            }
+            for &s in &m.store_killed {
+                acts.push(Act::RespawnStore(s));
+            }
+            if m.gateway_live.len() >= 2 {
+                for &g in &m.gateway_live {
+                    acts.push(Act::KillGateway(g));
+                }
+            }
+            if !m.orch_acted {
+                acts.push(Act::KillOrch);
+                acts.push(Act::PromoteOrch);
+            }
+        }
         if acts.is_empty() {
             continue;
         }
@@ -278,6 +329,35 @@ fn gen_faults(rng: &mut Pcg, steps: usize) -> Vec<ScheduledFault> {
             Act::Hotspot(k) => {
                 m.hotspot_used = true;
                 out.push(ScheduledFault { at: t, fault: Fault::Hotspot(k) });
+            }
+            Act::KillStore(s) => {
+                m.store_live.remove(&s);
+                m.store_killed.insert(s);
+                m.control_ready = t + Duration::from_millis(200);
+                out.push(ScheduledFault { at: t, fault: Fault::KillStore(s) });
+            }
+            Act::RespawnStore(s) => {
+                m.store_killed.remove(&s);
+                m.store_live.insert(s);
+                // Re-sync from the surviving peer is one snapshot message;
+                // the cooldown is plenty for it to land.
+                m.control_ready = t + Duration::from_millis(200);
+                out.push(ScheduledFault { at: t, fault: Fault::RespawnStore(s) });
+            }
+            Act::KillGateway(g) => {
+                m.gateway_live.remove(&g);
+                m.control_ready = t + Duration::from_millis(200);
+                out.push(ScheduledFault { at: t, fault: Fault::KillGateway(g) });
+            }
+            Act::KillOrch => {
+                m.orch_acted = true;
+                m.control_ready = t + Duration::from_millis(200);
+                out.push(ScheduledFault { at: t, fault: Fault::KillOrch });
+            }
+            Act::PromoteOrch => {
+                m.orch_acted = true;
+                m.control_ready = t + Duration::from_millis(200);
+                out.push(ScheduledFault { at: t, fault: Fault::PromoteOrch });
             }
         }
     }
@@ -393,6 +473,7 @@ fn candidate_without(s: &Scenario, i: usize) -> Option<Scenario> {
         | Fault::Heal(..)
         | Fault::RespawnEw(_)
         | Fault::RespawnAw(_)
+        | Fault::RespawnStore(_)
         | Fault::ScaleEwUp => return None,
         Fault::Sever(a, b) => remove_with_repair(&mut cand, i, |f| {
             matches!(f, Fault::Heal(x, y) if *x == a && *y == b)
@@ -403,6 +484,11 @@ fn candidate_without(s: &Scenario, i: usize) -> Option<Scenario> {
         Fault::KillAw(a) => remove_with_repair(&mut cand, i, |f| {
             matches!(f, Fault::RespawnAw(x) if *x == a)
         }),
+        Fault::KillStore(s) => remove_with_repair(&mut cand, i, |f| {
+            matches!(f, Fault::RespawnStore(x) if *x == s)
+        }),
+        // KillGateway / KillOrch / PromoteOrch have no dependent repair:
+        // removing one only ever leaves the control plane healthier.
         _ => {
             cand.faults.remove(i);
         }

@@ -448,6 +448,164 @@ fn prop_store_tombstones_reject_stragglers_without_leaking() {
     });
 }
 
+/// K-replica convergence (DESIGN.md §15): the AW fans every segment,
+/// commit and forget out to all store replicas, but one-sided writes
+/// reorder freely per link. Whatever interleaving each replica observes,
+/// all replicas converge to the same observable state — same accepted
+/// commit, same restorable prefix, same tombstones — because segments
+/// are idempotent inserts, commits are monotonic high-water marks, and
+/// tombstones dominate stragglers in either order.
+#[test]
+fn prop_replicated_stores_converge_under_any_interleaving() {
+    #[derive(Clone)]
+    enum Op {
+        Seg(u64, u32, u16),
+        Commit(u64, u32),
+        Forget(u64),
+    }
+    check("replica convergence", 120, |rng, _| {
+        let layers = rng.range_usize(1, 4);
+        let replicas = rng.range_usize(2, 5);
+        let requests = rng.range_usize(1, 4) as u64;
+        // One canonical op multiset, as the AW would fan it out.
+        let mut ops: Vec<Op> = Vec::new();
+        for req in 1..=requests {
+            let positions = rng.range_usize(1, 6) as u32;
+            for p in 0..positions {
+                for l in 0..layers as u16 {
+                    ops.push(Op::Seg(req, p, l));
+                }
+            }
+            for _ in 0..rng.range_usize(1, 4) {
+                ops.push(Op::Commit(req, rng.range(1, positions as u64 + 1) as u32));
+            }
+            if rng.f64() < 0.3 {
+                ops.push(Op::Forget(req));
+            }
+        }
+        let seg = |req: u64, p: u32, l: u16| SegmentMsg {
+            request: req,
+            pos: p,
+            layer: l,
+            // content-addressed payload: every replica logs identical bytes
+            data: Arc::new(vec![(req * 1000 + p as u64 * 10 + l as u64) as f32; 4]),
+        };
+        let mut logs: Vec<StoreLog> = Vec::new();
+        for _ in 0..replicas {
+            let mut order = ops.clone();
+            rng.shuffle(&mut order); // per-replica wire reordering
+            let mut log = StoreLog::new(layers);
+            for op in order {
+                match op {
+                    Op::Seg(req, p, l) => log.segment(0, seg(req, p, l)),
+                    Op::Commit(req, upto) => log.commit(
+                        0,
+                        CommitMeta {
+                            request: req,
+                            committed_pos: upto,
+                            last_token: upto,
+                            generated: upto,
+                            max_new_tokens: 1000,
+                            prompt_len: 0,
+                        },
+                    ),
+                    Op::Forget(req) => log.forget(req),
+                }
+            }
+            logs.push(log);
+        }
+        // Every replica agrees on the observable state of every request.
+        let (first, rest) = logs.split_first().unwrap();
+        for other in rest {
+            assert_eq!(first.num_requests(), other.num_requests(), "replica request sets differ");
+            for req in 1..=requests {
+                assert_eq!(first.is_finished(req), other.is_finished(req), "tombstones diverged");
+                assert_eq!(first.committed(req), other.committed(req), "commit records diverged");
+                match (first.restore_data(req), other.restore_data(req)) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.meta, b.meta);
+                        assert_eq!(a.segments.len(), b.segments.len());
+                        for (x, y) in a.segments.iter().zip(b.segments.iter()) {
+                            assert_eq!((x.0, x.1), (y.0, y.1), "restore prefix order diverged");
+                            assert_eq!(x.2.as_slice(), y.2.as_slice(), "restore payload diverged");
+                        }
+                    }
+                    _ => panic!("replicas disagree on restorability of request {req}"),
+                }
+            }
+        }
+        // A rebuilt replica re-synced from any survivor matches it, and the
+        // anti-entropy import is idempotent.
+        let donor = &logs[rng.index(replicas)];
+        let snap = donor.export_sync();
+        let mut rebuilt = StoreLog::new(layers);
+        rebuilt.import_sync(snap.clone());
+        rebuilt.import_sync(snap); // duplicate sync must be harmless
+        assert_eq!(rebuilt.num_requests(), donor.num_requests());
+        for req in 1..=requests {
+            assert_eq!(rebuilt.is_finished(req), donor.is_finished(req));
+            assert_eq!(rebuilt.committed(req), donor.committed(req), "re-sync lost a commit");
+            if let Some(a) = donor.restore_data(req) {
+                let b = rebuilt.restore_data(req).expect("re-synced replica must serve restores");
+                assert_eq!(a.meta, b.meta);
+                for (x, y) in a.segments.iter().zip(b.segments.iter()) {
+                    assert_eq!(x.2.as_slice(), y.2.as_slice(), "re-synced payload differs");
+                }
+            }
+        }
+        assert_eq!(rebuilt.resident_bytes(), donor.resident_bytes(), "re-sync leaked or lost bytes");
+    });
+}
+
+/// Rendezvous sharding stability (DESIGN.md §15): the owner is always a
+/// member of the live set, is independent of the set's order, and losing
+/// a shard reassigns exactly that shard's keys — every other request
+/// keeps its gateway, so one gateway failure never reshuffles the
+/// survivors' admissions. Restoring the shard restores the original map.
+#[test]
+fn prop_chash_sharding_is_stable_and_minimal() {
+    use tarragon::util::chash;
+    check("chash stability", 300, |rng, _| {
+        let n = rng.range_usize(1, 8);
+        let mut shards: Vec<u32> = (0..16).collect();
+        rng.shuffle(&mut shards);
+        shards.truncate(n);
+        let keys: Vec<u64> = (0..rng.range_usize(1, 40)).map(|_| rng.range(0, 1 << 48)).collect();
+        assert_eq!(chash::owner(keys[0], &[]), None, "empty set must own nothing");
+        let before: Vec<u32> = keys
+            .iter()
+            .map(|&k| {
+                let o = chash::owner(k, &shards).unwrap();
+                assert!(shards.contains(&o), "owner outside the shard set");
+                // deterministic and order-independent
+                let mut perm = shards.clone();
+                rng.shuffle(&mut perm);
+                assert_eq!(chash::owner(k, &perm), Some(o), "owner depends on set order");
+                o
+            })
+            .collect();
+        if n == 1 {
+            assert!(before.iter().all(|&o| o == shards[0]));
+            return;
+        }
+        // Kill one shard: only its keys move; every survivor's keys stay.
+        let dead = shards[rng.index(n)];
+        let live: Vec<u32> = shards.iter().copied().filter(|&s| s != dead).collect();
+        for (&k, &was) in keys.iter().zip(before.iter()) {
+            let now = chash::owner(k, &live).unwrap();
+            assert!(live.contains(&now));
+            if was != dead {
+                assert_eq!(now, was, "failover moved a key the dead shard never owned");
+            }
+        }
+        // Respawn: the original assignment comes back exactly.
+        for (&k, &was) in keys.iter().zip(before.iter()) {
+            assert_eq!(chash::owner(k, &shards), Some(was), "respawn must restore the map");
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // KV cache / batch assembly invariants
 // ---------------------------------------------------------------------------

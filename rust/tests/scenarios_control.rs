@@ -1,0 +1,372 @@
+//! Control-plane failure scenarios (DESIGN.md §15) on the virtual clock:
+//! replicated checkpoint stores, sharded gateways, and orchestrator
+//! failover. Every test runs the full cluster under deterministic
+//! virtual time and asserts the same guarantee the worker-failure matrix
+//! does — the generated token streams are byte-identical to the
+//! failure-free run — now with the control plane itself as the victim.
+
+use std::time::Duration;
+use tarragon::config::Config;
+use tarragon::metrics::FailureClass;
+use tarragon::testing::scenario::Scenario;
+use tarragon::testing::synthetic;
+use tarragon::util::chash;
+
+const MAX_DETECT: Duration = Duration::from_millis(250);
+const MAX_STALL: Duration = Duration::from_secs(2);
+
+/// Scenario base: 2 AWs x 2 EWs at 1 ms wire latency, with the control
+/// plane replicated — 2 checkpoint-store replicas, 2 gateway shards, and
+/// a warm orchestrator standby.
+fn control_cfg() -> Config {
+    let mut cfg = Config::small_test();
+    cfg.transport.latency = Duration::from_millis(1);
+    cfg.transport.worker_extra_init = Duration::from_millis(200);
+    cfg.cluster.num_stores = 2;
+    cfg.cluster.num_gateways = 2;
+    cfg.resilience.orch_standby = true;
+    cfg
+}
+
+fn two_request_scenario(name: &str, cfg: Config) -> Scenario {
+    Scenario::new(name, cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+}
+
+fn assert_full_streams(faulty: &tarragon::testing::scenario::ScenarioOutcome, name: &str) {
+    assert!(faulty.completed, "{name}: faulty run did not drain");
+    for (id, toks) in &faulty.tokens {
+        assert_eq!(toks.len(), 32, "{name}: req {id} truncated");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replicated checkpoint store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn store_replica_kill_mid_run_keeps_streams_identical() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // AWs fan every commit out to both replicas, so killing one mid-run
+    // loses nothing durable; decode never even stalls.
+    let s = two_request_scenario("store-kill", control_cfg()).fault("at 60ms kill store0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "store-kill");
+    assert_eq!(faulty.tokens, clean.tokens, "store failover changed token streams");
+    assert!(faulty.report.store_failovers >= 1, "store death went undetected");
+    assert_eq!(faulty.report.aw_failures, 0);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+    assert!(
+        faulty.recovery.incidents.iter().any(|i| i.class == FailureClass::Store),
+        "store kill must attribute as a store incident:\n{}",
+        faulty.recovery.render()
+    );
+    assert!(clean.recovery.is_empty(), "failure-free run must have no incidents");
+    assert_eq!(clean.report.store_replica_lag, 0, "healthy replicas must agree");
+}
+
+#[test]
+fn restore_pull_survives_store_failover_during_aw_recovery() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // aw0 dies mid-decode; while its requests are being adopted and
+    // restored, the store replica the orchestrator queried dies too. The
+    // restore pull was fanned out to every replica, so the survivor
+    // serves it (a replica that was still catching up parks the pull and
+    // replays it) — whichever interleaving the clock produces, the
+    // streams must not move.
+    let s = two_request_scenario("store-failover-restore", control_cfg())
+        .fault("at 60ms kill aw0")
+        .fault("at 130ms kill store0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "store-failover-restore");
+    assert_eq!(faulty.tokens, clean.tokens, "restore across store failover changed streams");
+    assert!(faulty.report.aw_failures >= 1);
+    assert!(faulty.report.store_failovers >= 1);
+    faulty.assert_recovery(2, MAX_DETECT, MAX_STALL);
+    let classes: Vec<_> = faulty.recovery.incidents.iter().map(|i| i.class).collect();
+    assert!(
+        classes.contains(&FailureClass::Aw) && classes.contains(&FailureClass::Store),
+        "expected one AW and one store incident:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn store_death_before_aw_death_fails_queries_over_to_the_survivor() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Reverse order: the replica dies first, then the AW. The active-set
+    // query and the restore must both route to the survivor.
+    let s = two_request_scenario("store-first", control_cfg())
+        .fault("at 40ms kill store0")
+        .fault("at 90ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "store-first");
+    assert_eq!(faulty.tokens, clean.tokens, "survivor-served recovery changed streams");
+    assert!(faulty.report.store_failovers >= 1);
+    assert!(faulty.report.aw_failures >= 1);
+    faulty.assert_recovery(2, MAX_DETECT, MAX_STALL);
+}
+
+#[test]
+fn respawned_store_resyncs_and_serves_after_the_peer_dies() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The strongest replication chain: store0 dies, is rebuilt empty and
+    // anti-entropy-syncs from store1; then store1 dies, leaving the
+    // *resynced* replica as the only store; then aw0 dies and every
+    // restore must be served from state store0 only has via the re-sync.
+    let s = two_request_scenario("store-resync", control_cfg())
+        .fault("at 50ms kill store0")
+        .fault("at 300ms respawn store0")
+        .fault("at 400ms kill store1")
+        .fault("at 500ms kill aw0")
+        .request(2, Duration::from_millis(450), vec![21, 22, 23], 32);
+    let mut s = s;
+    s.drain_timeout = Duration::from_secs(90);
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "resynced-replica recovery changed streams");
+    assert!(faulty.report.store_failovers >= 2, "both replica deaths must be detected");
+    assert!(faulty.report.aw_failures >= 1);
+}
+
+#[test]
+fn corrupt_page_index_degrades_restores_without_changing_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The page_refs_missed degradation: drop the sole store's sealed-page
+    // content index, then kill an AW. Restores can no longer resolve
+    // prefill page references and must fall back to recompute/resubmit —
+    // slower, but byte-identical. Single-replica config: the corruption
+    // cannot be masked by a healthy peer.
+    let mut cfg = control_cfg();
+    cfg.cluster.num_stores = 1;
+    cfg.cluster.num_gateways = 1;
+    cfg.resilience.orch_standby = false;
+    // One-page shared prompts so the commits actually carry page refs.
+    let prompt: Vec<u32> = (1..=16).collect();
+    let s = Scenario::new("corrupt-index", cfg)
+        .request(0, Duration::ZERO, prompt.clone(), 32)
+        .request(1, Duration::from_millis(5), prompt, 32)
+        .fault("at 55ms corrupt_index store0")
+        .fault("at 60ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "corrupt-index");
+    assert_eq!(faulty.tokens, clean.tokens, "degraded restore changed token streams");
+    assert!(faulty.report.aw_failures >= 1);
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded gateway
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gateway_shard_kill_readmits_through_survivors_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Kill the shard that owns request 0 (rendezvous hash over the two
+    // shards), mid-decode: its in-flight admissions re-admit through the
+    // survivor, AWs replay recorded token history to the new owner, and
+    // the merged shared state must show full byte-identical streams.
+    let victim = chash::owner(0, &[0, 1]).unwrap();
+    let s = two_request_scenario("gateway-kill", control_cfg())
+        .request(2, Duration::from_millis(10), vec![12, 13, 14], 32)
+        .request(3, Duration::from_millis(15), vec![15, 16, 17], 32)
+        .fault(&format!("at 60ms kill gateway{victim}"));
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "gateway-kill");
+    assert_eq!(faulty.tokens, clean.tokens, "gateway failover changed token streams");
+    assert!(faulty.report.gateway_failovers >= 1, "gateway death went undetected");
+    assert_eq!(faulty.report.aw_failures, 0);
+    assert_eq!(faulty.report.finished, 4, "every request must still finish");
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+    assert!(
+        faulty.recovery.incidents.iter().any(|i| i.class == FailureClass::Gateway),
+        "gateway kill must attribute as a gateway incident:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn gateway_kill_before_arrivals_moves_ownership_of_future_requests() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // Kill a shard before most of the schedule has arrived: later
+    // arrivals must be admitted by the survivor under the updated live
+    // set (no request may be stranded waiting for its dead owner).
+    let victim = chash::owner(2, &[0, 1]).unwrap();
+    let s = Scenario::new("gateway-early-kill", control_cfg())
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4], 32)
+        .request(1, Duration::from_millis(5), vec![5, 6, 7], 32)
+        .request(2, Duration::from_millis(200), vec![8, 9, 10], 32)
+        .request(3, Duration::from_millis(210), vec![11, 12, 13], 32)
+        .fault(&format!("at 40ms kill gateway{victim}"));
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "post-failover arrivals changed streams");
+    assert!(faulty.report.gateway_failovers >= 1);
+    assert_eq!(faulty.report.finished, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Orchestrator failover
+// ---------------------------------------------------------------------------
+
+#[test]
+fn orch_kill_promotes_the_standby_with_identical_streams() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The orchestrator is off the decode datapath: killing it must not
+    // move a single token even before the standby takes over.
+    let s = two_request_scenario("orch-kill", control_cfg()).fault("at 40ms kill orch");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "orch-kill");
+    assert_eq!(faulty.tokens, clean.tokens, "orchestrator failover changed token streams");
+    assert!(faulty.report.orch_promotions >= 1, "standby never promoted");
+    assert!(
+        faulty.event_log.contains("orch_promoted"),
+        "event log missing the promotion:\n{}",
+        faulty.event_log
+    );
+    assert!(
+        faulty.recovery.incidents.iter().any(|i| i.class == FailureClass::Orch),
+        "unplanned promotion must attribute an orch incident:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn promoted_standby_recovers_a_subsequent_aw_kill() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The real test of the takeover: the promoted standby must drive a
+    // full AW recovery (query a store replica, adopt, rebind, restore)
+    // exactly like the original orchestrator would have. Promotion takes
+    // ~3 missed probes (~75ms); the AW dies well after.
+    let s = two_request_scenario("orch-then-aw", control_cfg())
+        .fault("at 40ms kill orch")
+        .fault("at 200ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "orch-then-aw");
+    assert_eq!(faulty.tokens, clean.tokens, "post-promotion AW recovery changed streams");
+    assert!(faulty.report.orch_promotions >= 1);
+    assert!(faulty.report.aw_failures >= 1, "the promoted standby must handle the AW kill");
+    faulty.assert_recovery(2, MAX_DETECT, MAX_STALL);
+    let classes: Vec<_> = faulty.recovery.incidents.iter().map(|i| i.class).collect();
+    assert!(
+        classes.contains(&FailureClass::Orch) && classes.contains(&FailureClass::Aw),
+        "expected an orch and an AW incident:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn orch_kill_racing_an_aw_kill_still_recovers() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The nastiest window: the AW dies while the orchestrator is already
+    // dead but the standby has not promoted yet. The promoted standby's
+    // catch-up sweep plus the re-driven active-set queries must pick the
+    // orphan up.
+    let s = two_request_scenario("orch-race-aw", control_cfg())
+        .fault("at 40ms kill orch")
+        .fault("at 55ms kill aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "orch-race-aw");
+    assert_eq!(faulty.tokens, clean.tokens, "takeover-window AW death changed streams");
+    assert!(faulty.report.orch_promotions >= 1);
+    assert!(faulty.report.aw_failures >= 1);
+    // The AW stall includes the promotion latency; detection is measured
+    // from the victim's last progress, so give it the promotion window
+    // (3 probes) on top of the normal ladder.
+    faulty.assert_recovery(2, Duration::from_millis(500), MAX_STALL);
+}
+
+#[test]
+fn planned_orch_promotion_is_a_zero_incident_handover() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // `promote orch` demotes the active first (acked handover): planned
+    // mobility must report zero incidents and move zero tokens.
+    let s = two_request_scenario("orch-promote", control_cfg()).fault("at 60ms promote orch");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "orch-promote");
+    assert_eq!(faulty.tokens, clean.tokens, "planned handover changed token streams");
+    assert_eq!(faulty.report.orch_promotions, 1, "exactly one planned promotion");
+    assert_eq!(faulty.report.aw_failures, 0);
+    assert_eq!(faulty.report.ew_failures, 0);
+    assert!(faulty.event_log.contains("orch_promoted"));
+    assert!(
+        faulty.recovery.is_empty(),
+        "planned handover must not register an incident:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn promoted_orch_after_planned_handover_still_recovers_failures() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("promote-then-kill", control_cfg())
+        .fault("at 60ms promote orch")
+        .fault("at 200ms kill ew0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_eq!(faulty.tokens, clean.tokens, "post-handover EW recovery changed streams");
+    assert_eq!(faulty.report.orch_promotions, 1);
+    assert!(faulty.report.ew_failures >= 1, "the promoted orchestrator must handle the kill");
+    faulty.assert_recovery(1, MAX_DETECT, MAX_STALL);
+}
+
+// ---------------------------------------------------------------------------
+// Planned mobility + determinism under the replicated control plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_drain_under_replicated_control_plane_reports_zero_incidents() {
+    let (manifest, weights, _) = synthetic::ensure();
+    // The §9 planned-mobility guarantee must survive §15: draining an AW
+    // with replicated stores, sharded gateways and a live standby still
+    // produces identical streams and zero incidents.
+    let s = two_request_scenario("drain-replicated", control_cfg()).fault("at 60ms drain aw0");
+    let clean = s.without_faults().run(manifest.clone(), weights.clone());
+    let faulty = s.run(manifest, weights);
+    assert!(clean.completed && faulty.completed);
+    assert_full_streams(&faulty, "drain-replicated");
+    assert_eq!(faulty.tokens, clean.tokens, "planned drain changed token streams");
+    assert_eq!(faulty.report.aw_failures, 0, "a drain is not a failure");
+    assert!(
+        faulty.recovery.is_empty(),
+        "planned mobility must report zero incidents:\n{}",
+        faulty.recovery.render()
+    );
+}
+
+#[test]
+fn control_plane_failover_replays_byte_identical_event_logs() {
+    let (manifest, weights, _) = synthetic::ensure();
+    let s = two_request_scenario("control-determinism", control_cfg())
+        .fault("at 40ms kill store0")
+        .fault("at 60ms kill gateway1")
+        .seed(42);
+    let a = s.run(manifest.clone(), weights.clone());
+    let b = s.run(manifest, weights);
+    assert!(a.completed && b.completed);
+    assert!(!a.event_log.is_empty());
+    assert_eq!(a.event_log, b.event_log, "same scenario + seed must replay identically");
+    assert_eq!(a.tokens, b.tokens);
+}
