@@ -40,7 +40,8 @@ fn main() {
     println!("reference run (no failures)...");
     let c = Cluster::launch(cfg(), manifest.clone(), weights.clone(), schedule(), LaunchOptions::default());
     assert!(c.wait_done(Duration::from_secs(180)));
-    let reference: Vec<Vec<u32>> = (0..4).map(|i| c.gw.generated_of(i)).collect();
+    let reference: Vec<Vec<u32>> =
+        (0..4).map(|i| c.gw.generated_of(i).expect("reference stream missing")).collect();
     c.finish(1.0);
 
     // --- failure run: kill EW 0, then AW 0 ------------------------------
@@ -56,7 +57,7 @@ fn main() {
 
     let mut all_equal = true;
     for i in 0..4u64 {
-        let got = c.gw.generated_of(i);
+        let got = c.gw.generated_of(i).expect("request stream missing after recovery");
         let same = got == reference[i as usize];
         all_equal &= same;
         println!(

@@ -51,7 +51,7 @@ fn main() {
     assert!(cluster.wait_done(Duration::from_secs(120)), "did not finish");
 
     for id in 0..3u64 {
-        println!("request {id}: tokens {:?}", cluster.gw.generated_of(id));
+        println!("request {id}: tokens {:?}", cluster.gw.generated_of(id).unwrap_or_default());
     }
     let report = cluster.finish(1.0);
     let ttft = report.analysis.ttft();

@@ -1,0 +1,135 @@
+//! Macro-sim fleet-scale benchmark: how fast the discrete-event
+//! simulator (`tarragon::sim`) replays serving traces as fleet size
+//! grows — wall time, simulated-requests/sec and recorded-events/sec at
+//! O(100) through O(1000) workers, each run with an AW kill and an EW
+//! kill mid-trace so the recovery paths are on the measured path.
+//! Results are written to `BENCH_fleet.json`.
+//!
+//! Run: cargo bench --offline --bench fleet
+//! CI smoke: cargo bench --offline --bench fleet -- --smoke
+//! (The 10^6-request replay lives in the `#[ignore]`d test
+//! `full_scale_fleet_replays_a_million_requests` in tests/sim_fleet.rs.)
+
+use std::time::Duration;
+
+use tarragon::sim::{run_fleet, EventLevel, FleetConfig, TraceSpec};
+use tarragon::testing::scenario::ScheduledFault;
+use tarragon::util::json::{arr, num, obj, s, Json};
+
+struct Point {
+    aws: usize,
+    ews: usize,
+    requests: usize,
+    sim_s: f64,
+    wall_ms: f64,
+    events: usize,
+    finished: usize,
+    preemptions: u64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // (AWs, EWs, offered rps, trace seconds). Offered load is ~60% of
+    // the cost-model capacity (~8.5 rps/AW at the default trace length
+    // profile), so queues stay bounded and wall time measures the
+    // engine, not a death spiral.
+    let scales: &[(usize, usize, f64, u64)] = if smoke {
+        &[(64, 16, 320.0, 5)]
+    } else {
+        &[(100, 25, 500.0, 10), (250, 64, 1250.0, 10), (1000, 250, 5000.0, 20)]
+    };
+
+    println!("== macro-sim fleet sweep (discrete-event clock, cost-model steps) ==");
+    let mut points = Vec::new();
+    for &(aws, ews, rps, secs) in scales {
+        let trace =
+            TraceSpec::bursty(rps, Duration::from_secs(secs), 0xF1EE7).generate();
+        let faults: Vec<ScheduledFault> = [
+            format!("at {}ms kill aw1", secs * 300),
+            format!("at {}ms kill ew1", secs * 500),
+        ]
+        .iter()
+        .map(|l| ScheduledFault::parse(l).expect("fault line"))
+        .collect();
+        let mut cfg = FleetConfig::new(aws, ews);
+        // Lifecycle keeps the log proportional to requests, not tokens —
+        // the regime any fleet-sized run uses.
+        cfg.event_level = EventLevel::Lifecycle;
+
+        let t0 = std::time::Instant::now();
+        let r = run_fleet(cfg, &trace, &faults);
+        let wall = t0.elapsed();
+        assert_eq!(
+            r.report.finished + r.report.rejected,
+            trace.len(),
+            "fleet bench lost requests at {aws} AWs"
+        );
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.unpaired_departures, 0);
+
+        let events = r.events.snapshot().len();
+        let p = Point {
+            aws,
+            ews,
+            requests: trace.len(),
+            sim_s: r.sim_end.as_secs_f64(),
+            wall_ms: wall.as_secs_f64() * 1e3,
+            events,
+            finished: r.report.finished,
+            preemptions: r.report.preemptions,
+        };
+        println!(
+            "{:>5} AW x {:>4} EW | {:>7} reqs | sim {:>7.1}s in wall {:>8.1}ms ({:>9.0} req/s, {:>9.0} ev/s) | preempt {:>4}",
+            p.aws,
+            p.ews,
+            p.requests,
+            p.sim_s,
+            p.wall_ms,
+            p.requests as f64 / (wall.as_secs_f64().max(1e-9)),
+            p.events as f64 / (wall.as_secs_f64().max(1e-9)),
+            p.preemptions,
+        );
+        points.push(p);
+    }
+    write_report(&points, smoke);
+}
+
+fn write_report(points: &[Point], smoke: bool) {
+    let entries = points.iter().map(|p| {
+        obj(vec![
+            ("aws", num(p.aws as f64)),
+            ("ews", num(p.ews as f64)),
+            ("requests", num(p.requests as f64)),
+            ("finished", num(p.finished as f64)),
+            ("sim_seconds", num(p.sim_s)),
+            ("wall_ms", num(p.wall_ms)),
+            ("events_recorded", num(p.events as f64)),
+            ("requests_per_wall_s", num(p.requests as f64 / (p.wall_ms / 1e3).max(1e-9))),
+            ("events_per_wall_s", num(p.events as f64 / (p.wall_ms / 1e3).max(1e-9))),
+            ("preemptions", num(p.preemptions as f64)),
+        ])
+    });
+    let j = obj(vec![
+        (
+            "bench",
+            s("macro-sim fleet sweep: wall time vs fleet size with mid-trace AW+EW kills"),
+        ),
+        ("command", s("cargo bench --bench fleet")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "setup",
+            obj(vec![
+                ("trace", s("bursty 4x/200ms-per-2s, default length profile, fixed seed")),
+                ("event_level", s("lifecycle")),
+                ("faults", s("kill aw1 at 30% of trace, kill ew1 at 50%")),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, j.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

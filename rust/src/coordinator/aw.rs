@@ -34,7 +34,7 @@ use crate::metrics::trace::{SpanKind, TraceHandle};
 use crate::metrics::{EventKind, EventLog};
 use crate::util::clock::{self, Clock};
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -102,6 +102,9 @@ pub struct AwParams {
     /// Per-worker span recorder; `None` unless `[trace]` is enabled, so
     /// the hot paths take no clock reads when tracing is off.
     pub trace: Option<TraceHandle>,
+    /// Cluster-wide REFE scratch-pool miss counter (owned by the
+    /// `Spawner`); the worker flushes its local count here on exit.
+    pub pool_misses: Arc<AtomicU64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -185,8 +188,11 @@ pub struct AwWorker {
     /// Workload-shaping router skew (scenario `hotspot e<K>`): every
     /// token routes to this expert in addition to its natural picks.
     hotspot: Option<usize>,
-    /// Last load-beacon post (virtual/wall clock reading).
-    last_status_at: Duration,
+    /// Load-beacon cadence. `Periodic` keeps "never posted" as a real
+    /// state: a respawned/late-provisioned AW arms on its first tick
+    /// instead of treating the clock epoch as a previous post and
+    /// beaconing immediately.
+    status_beacon: clock::Periodic,
     events: Arc<EventLog>,
     trace: Option<TraceHandle>,
     /// Restore pulls in flight: request -> pull start (tracing only; the
@@ -195,6 +201,10 @@ pub struct AwWorker {
     pub steps: u64,
     /// Requests preempted by this worker (pressure shedding + drains).
     pub preemptions: u64,
+    /// Cluster-wide scratch-pool miss counter; REFE's local count is
+    /// flushed here when the worker exits (normal drain *or* fail-stop —
+    /// the thread leaves its loop either way before `finish` joins it).
+    pool_misses: Arc<AtomicU64>,
 }
 
 /// Spawn an AW worker thread; blocks until initialized (T_w) and returns
@@ -257,6 +267,7 @@ impl AwWorker {
         let asm = BatchAssembler::new(&p.manifest.model);
         let names = HotNames::new(&p.manifest);
         let hotspot = p.cfg.workload.hotspot_expert;
+        let status_beacon = clock::Periodic::new(p.cfg.sched.status_interval);
         Ok(AwWorker {
             idx: p.idx,
             node,
@@ -285,12 +296,13 @@ impl AwWorker {
             stop: p.stop,
             draining: false,
             hotspot,
-            last_status_at: Duration::ZERO,
+            status_beacon,
             events: p.events,
             trace: p.trace,
             pull_started: HashMap::new(),
             steps: 0,
             preemptions: 0,
+            pool_misses: p.pool_misses,
         })
     }
 
@@ -358,6 +370,7 @@ impl AwWorker {
                 self.pause_checkpoint_resume();
             }
         }
+        self.pool_misses.fetch_add(self.refe.pool_misses, Ordering::Relaxed);
         self.device.kill();
     }
 
@@ -429,10 +442,9 @@ impl AwWorker {
     /// (routing/admission) and the orchestrator (parked re-admission).
     fn post_status_if_due(&mut self) {
         let now = self.clock.now();
-        if now.saturating_sub(self.last_status_at) < self.cfg.sched.status_interval {
+        if !self.status_beacon.due(now) {
             return;
         }
-        self.last_status_at = now;
         let msg = ClusterMsg::Status(AwStatus {
             aw: self.idx,
             pages_in_use: self.pool.pages_in_use() as u32,

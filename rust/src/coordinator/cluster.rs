@@ -25,7 +25,7 @@ use crate::transport::{link::TrafficClass, Fabric, Inbox, NodeHandle, NodeId, Pl
 use crate::util::clock::{self, Clock};
 use crate::workload::Request;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -49,6 +49,11 @@ pub struct Spawner {
     /// not the worker thread: a respawned AW (coarse restart,
     /// provisioning) reuses the already-grown arena — warm restore.
     kv_pools: Mutex<HashMap<u32, Arc<KvPool>>>,
+    /// REFE scratch-pool misses summed over all AW workers (alive and
+    /// dead): each worker flushes its local counter here on thread exit,
+    /// and `finish` joins every worker before reading — the zero-alloc
+    /// decode gauge survives worker death and coarse restarts.
+    pool_misses: Arc<AtomicU64>,
 }
 
 struct WorkerCtl {
@@ -87,6 +92,7 @@ impl Spawner {
             stop: self.stop.clone(),
             events: self.events.clone(),
             trace: self.tracer.as_ref().map(|t| t.handle(idx)),
+            pool_misses: self.pool_misses.clone(),
         })?;
         self.registry
             .lock()
@@ -267,6 +273,11 @@ pub struct ClusterReport {
     /// KV prefix-sharing counters summed over all AW arenas (§13):
     /// prefill page hits, CoW privatizations, peak pages shared.
     pub sharing: SharingStats,
+    /// REFE scratch-pool misses summed over all AW workers — dispatches
+    /// that had to allocate because the recycled-vector pool underflowed
+    /// (or held only undersized vectors). Zero in steady state: the
+    /// zero-alloc decode gauge.
+    pub pool_misses: u64,
 }
 
 /// Service loop of one checkpoint-store replica: handle messages, post
@@ -342,6 +353,7 @@ impl Cluster {
             tracer: tracer.clone(),
             registry: Mutex::new(HashMap::new()),
             kv_pools: Mutex::new(HashMap::new()),
+            pool_misses: Arc::new(AtomicU64::new(0)),
         });
 
         let num_stores = cfg.cluster.num_stores.max(1);
@@ -775,6 +787,7 @@ impl Cluster {
             orch_promotions: self.state.orch_promotions.load(Ordering::Relaxed),
             store_replica_lag,
             sharing: self.spawner.sharing_totals(),
+            pool_misses: self.spawner.pool_misses.load(Ordering::Relaxed),
         }
     }
 }

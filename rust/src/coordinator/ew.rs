@@ -91,8 +91,11 @@ pub struct EwWorker {
     /// (DESIGN.md §11). Only maintained when the scaler is enabled, so
     /// the default-config data path stays allocation-identical.
     expert_tokens: BTreeMap<u16, u64>,
-    /// Clock reading of the last `EwStatus` beacon.
-    last_load_post: Duration,
+    /// `EwStatus` beacon cadence. `Periodic` keeps "never posted" as a
+    /// real state: a scaled-out EW provisioned mid-run arms on its first
+    /// loop tick instead of reading the epoch as a previous beacon and
+    /// posting an empty window immediately.
+    load_beacon: clock::Periodic,
     /// Set by `RetireEw`: this EW was removed from the ERT at the given
     /// version. It keeps serving dispatches routed under older versions
     /// (the straddle guarantee), bounces newer ones with `Stale`, and
@@ -154,6 +157,7 @@ impl EwWorker {
             .iter()
             .map(|&a| (a, AwInfo { active: false, dead: false }))
             .collect();
+        let load_beacon = clock::Periodic::new(p.cfg.scaler.window);
         Ok(EwWorker {
             idx: p.idx,
             node,
@@ -174,7 +178,7 @@ impl EwWorker {
             weight_args: HashMap::new(),
             stop: p.stop,
             expert_tokens: BTreeMap::new(),
-            last_load_post: Duration::ZERO,
+            load_beacon,
             retired: None,
             retire_deadline: Duration::ZERO,
             trace: p.trace,
@@ -208,10 +212,9 @@ impl EwWorker {
             return;
         }
         let now = self.clock.now();
-        if now.saturating_sub(self.last_load_post) < self.cfg.scaler.window {
+        if !self.load_beacon.due(now) {
             return;
         }
-        self.last_load_post = now;
         let tokens: Vec<(u16, u64)> = std::mem::take(&mut self.expert_tokens)
             .into_iter()
             .collect();

@@ -100,8 +100,13 @@ struct SharedInner {
 }
 
 impl GatewayShared {
-    pub fn generated_of(&self, id: u64) -> Vec<u32> {
-        self.inner.lock().unwrap().generated.get(&id).cloned().unwrap_or_default()
+    /// The generated token stream of `id` — `None` when the gateway has
+    /// never recorded a token for that request. Callers must distinguish
+    /// the two: an unknown id usually means a *lost* request (or a typo'd
+    /// one), which the old `unwrap_or_default()` silently rendered as an
+    /// empty-but-plausible stream.
+    pub fn generated_of(&self, id: u64) -> Option<Vec<u32>> {
+        self.inner.lock().unwrap().generated.get(&id).cloned()
     }
 
     pub fn finished(&self) -> usize {
@@ -330,12 +335,15 @@ impl Gw {
             return;
         }
         match oversized {
-            Some(reason) => self.mark_rejected(id, 0, reason),
+            Some(reason) => {
+                self.mark_rejected(id, 0, reason);
+            }
             None => self.enqueue(id, false),
         }
     }
 
-    fn mark_rejected(&mut self, id: u64, worker: u32, reason: String) {
+    /// Returns whether this was the first rejection notice for `id`.
+    fn mark_rejected(&mut self, id: u64, worker: u32, reason: String) -> bool {
         let was_queued = match self.reqs.get_mut(&id) {
             Some(r) => {
                 r.rejected = true;
@@ -356,6 +364,7 @@ impl Gw {
         if newly {
             self.events.record(EventKind::Rejected, id, 0, worker);
         }
+        newly
     }
 
     /// Queue a request for (re)admission; `resubmit` marks dispatches
@@ -503,8 +512,14 @@ impl Gw {
                 self.loads.update(st.aw, AwLoad::from_status(&st));
             }
             ClusterMsg::Rejected { request, worker, reason } => {
-                // AW-side defense in depth: terminal, surfaced as an error.
-                self.mark_rejected(request, worker, reason);
+                // AW-side defense in depth: terminal, surfaced as an
+                // error. The request was dispatched (submit-bumped), so
+                // the first notice pairs the departure — otherwise the
+                // rejecting AW carries a phantom resident until its next
+                // beacon.
+                if self.mark_rejected(request, worker, reason) {
+                    self.loads.note_departure(worker);
+                }
             }
             ClusterMsg::Preempted { aw, meta } => {
                 // Informational: the orchestrator owns re-admission.
@@ -555,6 +570,13 @@ impl Gw {
                 }
                 if !terminal.0 && !terminal.1 {
                     self.events.record(EventKind::Migrated, request, 0, new_aw);
+                    // The restored request is now resident on `new_aw`,
+                    // but it never went through `dispatch` here — without
+                    // this bump its eventual Finished/Preempted departure
+                    // has no matching submit and the decrement used to be
+                    // silently clamped away, making rebind targets look
+                    // emptier than they are.
+                    self.loads.note_submit(new_aw);
                 }
             }
             ClusterMsg::Resubmit { requests } => {
@@ -585,5 +607,25 @@ impl Gw {
             }
             _ => {}
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_request_is_none_not_empty_stream() {
+        // Regression: `generated_of` used to `unwrap_or_default()`, so a
+        // lost (or mistyped) request id was indistinguishable from a
+        // request that finished with an empty stream.
+        let shared = GatewayShared::default();
+        assert_eq!(shared.generated_of(7), None, "unknown id must not look finished-empty");
+        shared.inner.lock().unwrap().generated.insert(7, vec![11, 12]);
+        assert_eq!(shared.generated_of(7), Some(vec![11, 12]));
+        // A tracked-but-tokenless request (entry created, nothing emitted
+        // yet) is `Some(empty)` — the distinction the fix preserves.
+        shared.inner.lock().unwrap().generated.insert(8, Vec::new());
+        assert_eq!(shared.generated_of(8), Some(Vec::new()));
     }
 }

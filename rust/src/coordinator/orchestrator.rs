@@ -468,8 +468,11 @@ impl Orch {
     fn run(&mut self, inbox: &Inbox<ClusterMsg>) {
         let probe_interval = self.spawner.cfg.resilience.probe_interval;
         let detection = self.spawner.cfg.resilience.detection;
-        let mut last_sweep = self.clock.now();
-        let mut last_sync = self.clock.now();
+        // `Periodic` arms on the first tick: a promoted standby entering
+        // this loop mid-run waits a full interval before its first sweep
+        // instead of measuring elapsed time against a stale anchor.
+        let mut sweep = clock::Periodic::new(probe_interval);
+        let mut sync = clock::Periodic::new(probe_interval);
         while !self.stop.load(Ordering::Relaxed) && !self.demoted {
             match inbox.recv(Duration::from_millis(2)) {
                 Ok(env) => self.handle(env.msg),
@@ -477,12 +480,10 @@ impl Orch {
                 Err(_) => break,
             }
             let now = self.clock.now();
-            if detection && now.saturating_sub(last_sweep) >= probe_interval {
-                last_sweep = now;
+            if detection && sweep.due(now) {
                 self.probe_sweep();
             }
-            if self.sync_standby && now.saturating_sub(last_sync) >= probe_interval {
-                last_sync = now;
+            if self.sync_standby && sync.due(now) {
                 self.post_standby_sync();
             }
         }
@@ -630,7 +631,12 @@ impl Orch {
             ClusterMsg::PreemptedUncommitted { aw, requests } => {
                 // No durable state: restart from the prompt. The gateway
                 // already routes around the draining AW (AwSet update).
-                self.loads.note_departure(aw);
+                // One departure *per request* — this notice batches a
+                // whole drain, and a single decrement left phantom
+                // residents on the drained AW until its next beacon.
+                for _ in &requests {
+                    self.loads.note_departure(aw);
+                }
                 self.post_resubmit(requests);
             }
             ClusterMsg::DrainAw { aw, target } => self.drain_aw(aw, target),
@@ -1310,7 +1316,7 @@ fn standby_main(p: StandbyParams) {
     let detection = p.spawner.cfg.resilience.detection;
     let probe_qp = fabric.qp(NodeId::OrchStandby, NodeId::Orchestrator, Plane::Control).ok();
     let mut mirror = OrchSnapshot::default();
-    let mut last_probe = clock.now();
+    let mut probe_tick = clock::Periodic::new(probe_interval);
     let mut misses = 0u32;
     loop {
         if p.stop.load(Ordering::Relaxed) {
@@ -1336,8 +1342,7 @@ fn standby_main(p: StandbyParams) {
         }
         // Probe the active orchestrator; `probe_retries` consecutive
         // misses confirm its death and trigger an unplanned promotion.
-        if detection && clock.now().saturating_sub(last_probe) >= probe_interval {
-            last_probe = clock.now();
+        if detection && probe_tick.due(clock.now()) {
             let dead = match probe_qp.as_ref() {
                 Some(qp) => !qp.peer_reachable() && qp.probe(probe_timeout).is_err(),
                 None => false,

@@ -70,8 +70,28 @@ struct IoScratch {
     u32_pool: Vec<Vec<u32>>,
 }
 
-fn take_u32(pool: &mut Vec<Vec<u32>>) -> Vec<u32> {
-    pool.pop().unwrap_or_default()
+/// Take a recycled vector with at least `want` capacity. A pool
+/// underflow used to hand out `Vec::default()` — zero capacity, so the
+/// caller's first `extend` broke the zero-alloc decode contract with a
+/// silent realloc-and-grow. Now the miss allocates *once*, sized from
+/// the shape the caller is about to fill, and is counted so the
+/// contract stays observable (`Refe::pool_misses`).
+fn take_u32(pool: &mut Vec<Vec<u32>>, want: usize, misses: &mut u64) -> Vec<u32> {
+    match pool.pop() {
+        Some(v) if v.capacity() >= want => v,
+        Some(mut v) => {
+            // Recycled but undersized for this shape: one sized growth,
+            // counted. (Vectors are given back cleared, so `reserve`
+            // targets the full `want`.)
+            *misses += 1;
+            v.reserve(want);
+            v
+        }
+        None => {
+            *misses += 1;
+            Vec::with_capacity(want)
+        }
+    }
 }
 
 fn give_u32(pool: &mut Vec<Vec<u32>>, mut v: Vec<u32>) {
@@ -100,6 +120,10 @@ pub struct Refe {
     pub rows_replayed: u64,
     pub probes_sent: u64,
     pub dispatch_bytes: u64,
+    /// Scratch-pool misses: dispatches that had to allocate because the
+    /// recycled-vector pool underflowed (or held only undersized
+    /// vectors). Zero in steady state — the zero-alloc decode gauge.
+    pub pool_misses: u64,
 }
 
 impl Refe {
@@ -130,6 +154,7 @@ impl Refe {
             rows_replayed: 0,
             probes_sent: 0,
             dispatch_bytes: 0,
+            pool_misses: 0,
         }
     }
 
@@ -215,7 +240,8 @@ impl Refe {
                 // Borrow each entry's slot list; the old code cloned every
                 // one of them just to flatten (doubling the dispatch-path
                 // allocations), and the vector itself is recycled now.
-                let mut slots = take_u32(u32_pool);
+                let want: usize = entries.iter().map(|e| e.slots.len()).sum();
+                let mut slots = take_u32(u32_pool, want, &mut self.pool_misses);
                 slots.extend(entries.iter().flat_map(|e| e.slots.iter().copied()));
                 outstanding.insert(ew, slots);
             }
@@ -320,7 +346,7 @@ impl Refe {
                         // no dead-mark, no failure report. Its per-EW
                         // bookkeeping is retired alongside it.
                         let NodeId::Ew(ew) = env.from else { continue };
-                        let mut pending = take_u32(u32_pool);
+                        let mut pending = take_u32(u32_pool, slots.len(), &mut self.pool_misses);
                         pending.extend(slots.iter().copied().filter(|&s| {
                             (s as usize) < done.len() && !done[s as usize]
                         }));
@@ -380,7 +406,8 @@ impl Refe {
                             end,
                         );
                     }
-                    let mut pending = take_u32(u32_pool);
+                    let owed = outstanding.get(&ew).map_or(0, |s| s.len());
+                    let mut pending = take_u32(u32_pool, owed, &mut self.pool_misses);
                     if let Some(slots) = outstanding.remove(&ew) {
                         pending.extend(slots.iter().copied().filter(|&s| !done[s as usize]));
                         give_u32(u32_pool, slots);
@@ -465,7 +492,10 @@ impl Refe {
         for &s in pending {
             by_expert
                 .entry(entry_of_slot[s as usize].0)
-                .or_insert_with(|| take_u32(u32_pool))
+                // `pending.len()` bounds any one expert's share of the
+                // replayed slots — the pool converges on right-sized
+                // vectors instead of growing them push by push.
+                .or_insert_with(|| take_u32(u32_pool, pending.len(), &mut self.pool_misses))
                 .push(s);
         }
         for (expert, slots) in by_expert {
@@ -477,7 +507,10 @@ impl Refe {
                 slots.iter().map(|&s| g.row_tensor(slot_info[s as usize].0)).collect();
             // Record the new owers first, then *move* the slot list into
             // the message — no clone on the failover path.
-            outstanding.entry(ew).or_insert_with(|| take_u32(u32_pool)).extend(&slots);
+            outstanding
+                .entry(ew)
+                .or_insert_with(|| take_u32(u32_pool, slots.len(), &mut self.pool_misses))
+                .extend(&slots);
             self.rows_replayed += slots.len() as u64;
             let msg = DispatchMsg {
                 layer,
@@ -573,5 +606,46 @@ impl Refe {
                 TrafficClass::Control,
             );
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_miss_allocates_sized_and_is_counted() {
+        // Regression: an underflowing pool handed out `Vec::default()`
+        // (capacity 0), so the caller's extend reallocated silently.
+        let mut pool: Vec<Vec<u32>> = Vec::new();
+        let mut misses = 0u64;
+        let v = take_u32(&mut pool, 48, &mut misses);
+        assert_eq!(misses, 1, "underflow must be counted");
+        assert!(v.capacity() >= 48, "miss must be sized from the shape, got {}", v.capacity());
+        assert!(v.is_empty());
+        // Recycled with enough capacity: a hit, no growth, no count.
+        give_u32(&mut pool, v);
+        let v = take_u32(&mut pool, 32, &mut misses);
+        assert_eq!(misses, 1);
+        assert!(v.capacity() >= 48, "recycled capacity must be retained");
+        // Recycled but undersized for a bigger shape: counted, regrown.
+        give_u32(&mut pool, v);
+        let v = take_u32(&mut pool, 4096, &mut misses);
+        assert_eq!(misses, 2, "undersized recycle is a miss too");
+        assert!(v.capacity() >= 4096);
+    }
+
+    #[test]
+    fn give_take_roundtrip_clears_but_keeps_capacity() {
+        let mut pool: Vec<Vec<u32>> = Vec::new();
+        let mut misses = 0u64;
+        let mut v = take_u32(&mut pool, 8, &mut misses);
+        v.extend([1, 2, 3]);
+        let cap = v.capacity();
+        give_u32(&mut pool, v);
+        let v = take_u32(&mut pool, 8, &mut misses);
+        assert!(v.is_empty(), "recycled vectors must come back cleared");
+        assert_eq!(v.capacity(), cap);
+        assert_eq!(misses, 1, "only the initial underflow is a miss");
     }
 }

@@ -57,22 +57,74 @@ impl AwLoad {
     }
 }
 
+/// One tracked AW: the beacon-reported baseline plus *signed* optimistic
+/// deltas applied between beacons. Signed deltas make a double-release
+/// observable — the old representation clamped each decrement with
+/// `saturating_sub(1)` directly on the stored `u32`s, so an unpaired
+/// departure silently vanished and a subsequent submit re-inflated the
+/// estimate from the wrong floor, skewing load-based routing.
+#[derive(Debug, Clone, Copy, Default)]
+struct LoadEntry {
+    reported: AwLoad,
+    d_queue: i64,
+    d_resident: i64,
+    d_pages: i64,
+}
+
+fn clamp_add(base: u32, delta: i64) -> u32 {
+    (base as i64 + delta).clamp(0, u32::MAX as i64) as u32
+}
+
+impl LoadEntry {
+    /// Externally-visible estimate (clamped at zero, like the old map).
+    fn view(&self) -> AwLoad {
+        AwLoad {
+            pages_in_use: clamp_add(self.reported.pages_in_use, self.d_pages),
+            pages_budget: self.reported.pages_budget,
+            queue_depth: clamp_add(self.reported.queue_depth, self.d_queue),
+            resident: clamp_add(self.reported.resident, self.d_resident),
+        }
+    }
+}
+
 /// Per-AW load map. Ordered so iteration — and therefore every placement
 /// decision derived from it — is deterministic.
 #[derive(Debug, Default)]
 pub struct LoadMap {
-    loads: BTreeMap<u32, AwLoad>,
+    loads: BTreeMap<u32, LoadEntry>,
+    /// Assert release/submit pairing instead of merely counting it. Only
+    /// sound where beacons cannot race optimistic bumps (the
+    /// single-threaded macro-sim); in the threaded gateway a beacon
+    /// snapshotted just before a dispatch legitimately resets the
+    /// submit's delta, so the matching departure *looks* unpaired.
+    strict: bool,
+    /// Departures that could not be paired with a resident request or an
+    /// optimistic submit — each one is a suspected double-release.
+    unpaired_departures: u64,
 }
 
 impl LoadMap {
+    /// Strict pairing mode for deterministic single-threaded drivers:
+    /// any unpaired departure becomes a debug-assert failure.
+    pub fn strict() -> LoadMap {
+        LoadMap { strict: true, ..LoadMap::default() }
+    }
+
+    /// Suspected double-releases observed so far (see [`LoadMap::strict`]).
+    pub fn unpaired_departures(&self) -> u64 {
+        self.unpaired_departures
+    }
+
     pub fn update(&mut self, aw: u32, load: AwLoad) {
-        self.loads.insert(aw, load);
+        // A fresh beacon is authoritative: it already includes every
+        // dispatch/departure the AW has seen, so the deltas reset.
+        self.loads.insert(aw, LoadEntry { reported: load, ..LoadEntry::default() });
     }
 
     /// The last known load of an AW (zero/unknown if never reported —
     /// a fresh AW is assumed admissible until its first beacon).
     pub fn get(&self, aw: u32) -> AwLoad {
-        self.loads.get(&aw).copied().unwrap_or_default()
+        self.loads.get(&aw).map(|e| e.view()).unwrap_or_default()
     }
 
     pub fn remove(&mut self, aw: u32) {
@@ -83,22 +135,41 @@ impl LoadMap {
     /// `aw`. The next beacon overwrites the estimate.
     pub fn note_submit(&mut self, aw: u32) {
         let e = self.loads.entry(aw).or_default();
-        e.queue_depth += 1;
-        e.resident += 1;
+        e.d_queue += 1;
+        e.d_resident += 1;
     }
 
     /// Optimistic decrement: a request on `aw` finished or was evicted.
+    /// Flags (and in strict mode asserts) decrements that cannot pair
+    /// with any tracked resident or optimistic submit.
     pub fn note_departure(&mut self, aw: u32) {
-        if let Some(e) = self.loads.get_mut(&aw) {
-            e.queue_depth = e.queue_depth.saturating_sub(1);
-            e.resident = e.resident.saturating_sub(1);
+        match self.loads.get_mut(&aw) {
+            Some(e) => {
+                e.d_queue -= 1;
+                e.d_resident -= 1;
+                if e.reported.resident as i64 + e.d_resident < 0 {
+                    self.unpaired_departures += 1;
+                    debug_assert!(
+                        !self.strict,
+                        "unpaired departure on AW {aw}: more releases than \
+                         residents + optimistic submits (double-release?)"
+                    );
+                }
+            }
+            None => {
+                self.unpaired_departures += 1;
+                debug_assert!(
+                    !self.strict,
+                    "departure for untracked AW {aw} (double-release after removal?)"
+                );
+            }
         }
     }
 
     /// Optimistic page bump: a restore with this footprint was just
     /// dispatched to `aw` (anti-thrash accounting between beacons).
     pub fn note_pages(&mut self, aw: u32, pages: u32) {
-        self.loads.entry(aw).or_default().pages_in_use += pages;
+        self.loads.entry(aw).or_default().d_pages += pages as i64;
     }
 }
 
@@ -322,6 +393,57 @@ mod tests {
         loads.note_submit(a);
         // Before any beacon arrives the bump steers the next request away.
         assert_eq!(r.pick(&[0, 1], &loads), Some(1));
+    }
+
+    #[test]
+    fn double_release_is_flagged_not_masked() {
+        // Regression: the old `saturating_sub(1)` representation clamped
+        // the stored counters, so a double-release both vanished from the
+        // estimate and was unobservable. Signed deltas keep the books and
+        // surface the pairing violation.
+        let mut loads = LoadMap::default();
+        loads.update(0, load(0, 0, 1)); // one resident reported
+        loads.note_departure(0); // pairs with the resident
+        assert_eq!(loads.unpaired_departures(), 0);
+        loads.note_departure(0); // double release
+        assert_eq!(loads.unpaired_departures(), 1);
+        // The visible estimate still clamps at zero (old external behavior).
+        assert_eq!(loads.get(0).resident, 0);
+        assert_eq!(loads.get(0).queue_depth, 0);
+        // A later submit is not silently re-inflated from the wrong floor:
+        // the ledger nets the spurious release against the new arrival.
+        loads.note_submit(0);
+        assert_eq!(loads.get(0).resident, 0);
+        // Departure for an AW that was never tracked (or already removed).
+        loads.remove(0);
+        loads.note_departure(0);
+        assert_eq!(loads.unpaired_departures(), 2);
+    }
+
+    #[test]
+    fn submit_departure_pairing_balances() {
+        let mut loads = LoadMap::strict();
+        loads.update(3, load(0, 0, 0));
+        loads.note_submit(3);
+        loads.note_submit(3);
+        assert_eq!(loads.get(3).resident, 2);
+        loads.note_departure(3);
+        loads.note_departure(3);
+        assert_eq!(loads.get(3).resident, 0);
+        assert_eq!(loads.unpaired_departures(), 0, "paired traffic must not be flagged");
+        // A fresh beacon resets the optimistic deltas wholesale.
+        loads.note_submit(3);
+        loads.update(3, load(4, 8, 5));
+        assert_eq!(loads.get(3), load(4, 8, 5));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "unpaired departure")]
+    fn strict_mode_asserts_on_double_release() {
+        let mut loads = LoadMap::strict();
+        loads.update(0, load(0, 0, 0));
+        loads.note_departure(0);
     }
 
     #[test]

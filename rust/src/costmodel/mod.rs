@@ -120,6 +120,73 @@ pub fn tarragon_stall(detection: Duration, p: &Params, site: FailureSite) -> Dur
     }
 }
 
+/// Per-role step costs for the fleet macro-simulator (`crate::sim`):
+/// the Table-1 parameters turned into the wall-time quanta a simulation
+/// actor charges per action. Where the table has no column (checkpoint
+/// restore bandwidth) the field carries an explicitly-calibratable
+/// default rather than a silently invented constant.
+///
+/// The same `Params` drive the closed-form `stall`/`gpu_overhead`
+/// curves and the macro-sim, so the two models are comparable by
+/// construction.
+#[derive(Debug, Clone, Copy)]
+pub struct SimCosts {
+    pub params: Params,
+    /// Transformer layers L (every step is an L-layer sweep).
+    pub layers: usize,
+    /// Prompt length at which `t_pre` was measured; longer prompts
+    /// scale the prefill sweep linearly above it.
+    pub prompt_ref: usize,
+    /// Checkpoint restore: per-KV-page pull+install cost.
+    pub restore_per_page: Duration,
+}
+
+impl SimCosts {
+    pub fn from_params(params: Params, layers: usize) -> SimCosts {
+        SimCosts {
+            params,
+            layers: layers.max(1),
+            prompt_ref: 128,
+            restore_per_page: Duration::from_micros(20),
+        }
+    }
+
+    /// Paper-parameterized default (MegaScale column, Mixtral-scale L).
+    pub fn paper_default() -> SimCosts {
+        Self::from_params(Params::paper_megascale(), 32)
+    }
+
+    /// Worker (re)initialization — the paper's T_w.
+    pub fn worker_init(&self) -> Duration {
+        self.params.t_w
+    }
+
+    /// Wall time to prefill a `prompt_len`-token prompt: one `t_pre`
+    /// layer-sweep per layer (prompt tokens run in parallel within a
+    /// layer), scaled linearly once the prompt exceeds the measurement
+    /// reference length.
+    pub fn prefill(&self, prompt_len: usize) -> Duration {
+        let sweeps = self.params.t_pre * self.layers as u32;
+        let scale = (prompt_len.max(1) as f64 / self.prompt_ref as f64).max(1.0);
+        Duration::from_secs_f64(sweeps.as_secs_f64() * scale)
+    }
+
+    /// Wall time of one batched decode step (every resident request
+    /// advances one token): an L-layer sweep at `t_dec` per layer.
+    /// Layer-synchronized batched decode is batch-size-insensitive until
+    /// compute-bound, so the step cost is constant — admission caps keep
+    /// the sim out of the compute-bound regime, as they do the real
+    /// cluster.
+    pub fn decode_step(&self) -> Duration {
+        self.params.t_dec * self.layers as u32
+    }
+
+    /// Checkpoint restore of a `pages`-page KV prefix onto an adopter.
+    pub fn restore(&self, pages: usize) -> Duration {
+        self.restore_per_page * pages.max(1) as u32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +252,22 @@ mod tests {
         let full_prefill = 128.0 * p.g_pre; // one layer-sweep per token col
         assert!(decode_cost / full_prefill > 4.0, "{}", decode_cost / full_prefill);
         let _ = prefill_cost;
+    }
+
+    #[test]
+    fn sim_costs_derive_from_the_same_table() {
+        let c = SimCosts::paper_default();
+        let p = Params::paper_megascale();
+        assert_eq!(c.worker_init(), p.t_w);
+        assert_eq!(c.decode_step(), p.t_dec * 32);
+        // Short prompts cost one sweep set; a 4x-reference prompt costs 4x.
+        assert_eq!(c.prefill(1), p.t_pre * 32);
+        assert_eq!(c.prefill(128), p.t_pre * 32);
+        let long = c.prefill(512).as_secs_f64();
+        assert!((long / (p.t_pre * 32).as_secs_f64() - 4.0).abs() < 1e-9);
+        // Restore scales with pages and never returns zero.
+        assert_eq!(c.restore(10), c.restore_per_page * 10);
+        assert_eq!(c.restore(0), c.restore_per_page);
     }
 
     #[test]

@@ -181,7 +181,7 @@ fn tarragon_restore(
     // Wait until the i-th token was emitted, then kill the owning AW (aw0
     // serves request 0 under round-robin).
     let deadline = Instant::now() + Duration::from_secs(120);
-    while cluster.gw.generated_of(0).len() < i && Instant::now() < deadline {
+    while cluster.gw.generated_of(0).map_or(0, |g| g.len()) < i && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(2));
     }
     cluster.kill_aw(0);

@@ -14,6 +14,8 @@
 //! - `coordinator` — gateway, orchestrator, ERT/REFE, AW, EW, provisioning,
 //!   and the overload-aware serving scheduler (`sched`, DESIGN.md §9)
 //! - `baselines`   — MegaScale-like coarse restart, vLLM-TP, vLLM-PP
+//! - `sim`         — fleet-scale macro-simulator: O(1000) workers on a
+//!   discrete-event clock driving the real scheduler/scaler/ERT policies
 //! - `workload`/`metrics`/`costmodel` — experiment substrate
 pub mod baselines;
 pub mod checkpoint;
@@ -23,6 +25,7 @@ pub mod coordinator;
 pub mod kvcache;
 pub mod proto;
 pub mod runtime;
+pub mod sim;
 pub mod costmodel;
 pub mod metrics;
 pub mod modelcfg;

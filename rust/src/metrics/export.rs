@@ -186,6 +186,14 @@ pub fn prometheus_text(r: &ClusterReport) -> String {
     );
     metric(
         &mut out,
+        "tarragon_refe_pool_misses_total",
+        "REFE scratch-pool misses (dispatches that allocated; 0 in \
+         steady state — the zero-alloc decode gauge).",
+        "counter",
+        r.pool_misses as f64,
+    );
+    metric(
+        &mut out,
         "tarragon_tokens_total",
         "Output tokens emitted cluster-wide.",
         "counter",
@@ -293,6 +301,7 @@ mod tests {
             orch_promotions: 1,
             store_replica_lag: 3,
             sharing: SharingStats { prefix_hits: 7, cow_breaks: 1, pages_shared: 3 },
+            pool_misses: 2,
         };
         let text = prometheus_text(&r);
         assert!(text.contains("tarragon_requests_submitted_total 4"));
@@ -303,6 +312,7 @@ mod tests {
         assert!(text.contains("tarragon_orch_promotions_total 1"));
         assert!(text.contains("tarragon_store_replica_lag 3"));
         assert!(text.contains("tarragon_kv_prefix_hits_total 7"));
+        assert!(text.contains("tarragon_refe_pool_misses_total 2"));
         // Empty-sample latency summaries are NaN — legal in the
         // exposition format.
         assert!(text.contains("tarragon_ttft_median_milliseconds NaN"));

@@ -219,6 +219,22 @@ impl EventLog {
     pub fn record(&self, kind: EventKind, request: u64, token_index: u32, worker: u32) {
         let start = Duration::from_nanos(self.start_nanos.load(Ordering::Relaxed));
         let at = self.clock.now().saturating_sub(start);
+        self.record_at(at, kind, request, token_index, worker);
+    }
+
+    /// Record an event at an explicit epoch offset, bypassing the clock.
+    /// The macro-simulator uses this to stamp events with exact actor
+    /// times. Callers should append in nondecreasing `at` order (a DES
+    /// pops its queue in time order, so this is natural); consumers that
+    /// need strict ordering (`RecoveryReport`) sort defensively anyway.
+    pub fn record_at(
+        &self,
+        at: Duration,
+        kind: EventKind,
+        request: u64,
+        token_index: u32,
+        worker: u32,
+    ) {
         let mut events = self.events.lock().unwrap();
         if events.len() == events.capacity() {
             events.reserve_exact(EVENT_GROW_CHUNK);

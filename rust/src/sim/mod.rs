@@ -1,0 +1,1308 @@
+//! Fleet-scale macro-simulator (DESIGN.md §16).
+//!
+//! The real-math harness in `coordinator` runs every worker as a thread
+//! with real tensors, which tops out around tens of workers. This module
+//! replays the same control-plane story at O(1000) workers and O(10^6)
+//! requests in one process by swapping the *data plane* for accounting:
+//! AWs and EWs become lightweight actors on a deterministic discrete-
+//! event clock, step durations come from [`SimCosts`], and KV state is
+//! page arithmetic via [`pages_for_tokens`].
+//!
+//! What is *not* simplified is the policy layer: the simulator drives
+//! the production [`Router`]/[`LoadMap`] (in strict ledger mode),
+//! [`AdmissionLimits`], [`pick_victim`] preemption, the elastic
+//! [`Scaler`], and the [`Ert`] remap table — the exact structs the live
+//! gateway and orchestrator use, unmodified. A policy bug observed here
+//! is a policy bug in production code.
+//!
+//! Faults come from the same scenario DSL ([`ScheduledFault`]) the chaos
+//! harness uses, and the output is the same [`EventLog`] /
+//! [`ClusterReport`] / [`RecoveryReport`] triple, so every existing
+//! analysis, stall-budget, and export tool consumes macro-sim runs
+//! unchanged.
+//!
+//! Determinism: no wall clock, no RNG inside the engine (traces are
+//! generated up front from a seeded [`Pcg`](crate::util::rng::Pcg)), all
+//! maps are `BTreeMap`s, and the event queue breaks timestamp ties by
+//! insertion order. Same config + trace + faults ⇒ byte-identical event
+//! log.
+
+pub mod trace;
+
+pub use trace::{SimRequest, Tenant, TraceShape, TraceSpec};
+
+use crate::config::{ResilienceConfig, RouterPolicy, ScalerConfig};
+use crate::coordinator::cluster::ClusterReport;
+use crate::coordinator::ert::Ert;
+use crate::coordinator::scaler::{promote, retire, ScalePlan, Scaler};
+use crate::coordinator::sched::{
+    pick_victim, AdmissionLimits, AwLoad, LoadMap, Router, Watermarks,
+};
+use crate::costmodel::SimCosts;
+use crate::kvcache::pages_for_tokens;
+use crate::metrics::{EventKind, EventLog, RecoveryReport, RunAnalysis, SharingStats};
+use crate::testing::scenario::{Fault, ScheduledFault};
+use crate::transport::NodeId;
+use crate::util::clock::{Clock, EventQueue, Periodic};
+use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+/// `Detected` events carry the failure class in `token_index`
+/// (decoded by [`crate::metrics::FailureClass`]).
+const CLASS_AW: u32 = 0;
+const CLASS_EW: u32 = 1;
+const CLASS_STORE: u32 = 2;
+const CLASS_GATEWAY: u32 = 3;
+const CLASS_ORCH: u32 = 4;
+
+/// Sentinel: no restore in flight for this request.
+const NO_TICKET: u64 = u64::MAX;
+
+/// How much detail the event log keeps. `Full` records every token —
+/// right for analysis parity with the real harness, too heavy for 10^6
+/// requests. `Lifecycle` keeps lifecycle/failure events plus each
+/// request's first and last token, which is exactly what TTFT, incident
+/// attribution, and the recovery report need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventLevel {
+    Full,
+    Lifecycle,
+}
+
+/// Macro-sim fleet shape + policy knobs. The policy fields mirror the
+/// live `SchedConfig`/`ScalerConfig`/`ResilienceConfig` so a scenario
+/// tuned here transfers to the real harness.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub num_aws: usize,
+    pub num_ews: usize,
+    pub num_experts: usize,
+    /// Experts touched per token (drives per-expert load accounting).
+    pub top_k: usize,
+    pub costs: SimCosts,
+    pub policy: RouterPolicy,
+    /// Per-AW KV page budget (0 = unbounded: no pressure, no preemption).
+    pub kv_budget_pages: usize,
+    pub high_watermark: f64,
+    pub low_watermark: f64,
+    /// Router resident cap per AW (0 = uncapped).
+    pub max_per_aw: usize,
+    pub decode_batch: usize,
+    pub page_tokens: usize,
+    pub max_prompt: usize,
+    pub max_seq: usize,
+    /// Checkpoint-store replicas / gateway shards (control-plane
+    /// failover accounting; K > 1 survives a kill).
+    pub num_stores: u32,
+    pub num_gateways: u32,
+    /// Kill-to-`Detected` latency; [`FleetConfig::detection_latency`]
+    /// derives it from a `ResilienceConfig` the same way the live
+    /// detector's silence window + probe exchange does.
+    pub detection: Duration,
+    /// AW load-beacon cadence (LoadMap refresh).
+    pub status_interval: Duration,
+    /// Control sweep cadence: gateway retry, parked re-admission,
+    /// scaler planning. Mirrors `resilience.probe_interval`.
+    pub sweep_interval: Duration,
+    pub scaler: ScalerConfig,
+    /// Ring shadows in the initial ERT (ride-through for EW death).
+    pub shadows: bool,
+    pub event_level: EventLevel,
+    /// Extra simulated time past the last arrival before the run is cut
+    /// off (bounds runs where faults leave work permanently stranded).
+    pub grace: Duration,
+}
+
+impl FleetConfig {
+    /// Paper-table costs, production policy defaults, detection latency
+    /// derived from the default `ResilienceConfig`.
+    pub fn new(num_aws: usize, num_ews: usize) -> FleetConfig {
+        FleetConfig {
+            num_aws: num_aws.max(1),
+            num_ews: num_ews.max(1),
+            num_experts: (num_ews * 4).max(8),
+            top_k: 2,
+            costs: SimCosts::paper_default(),
+            policy: RouterPolicy::LeastPressure,
+            kv_budget_pages: 0,
+            high_watermark: 0.85,
+            low_watermark: 0.60,
+            max_per_aw: 0,
+            decode_batch: 8,
+            page_tokens: 16,
+            max_prompt: 4096,
+            max_seq: 8192,
+            num_stores: 3,
+            num_gateways: 2,
+            detection: Self::detection_latency(&ResilienceConfig::default()),
+            status_interval: Duration::from_millis(5),
+            sweep_interval: Duration::from_millis(10),
+            scaler: ScalerConfig::default(),
+            shadows: true,
+            event_level: EventLevel::Full,
+            grace: Duration::from_secs(120),
+        }
+    }
+
+    /// The live detector confirms a death after a full silence window
+    /// plus every probe retry timing out.
+    pub fn detection_latency(r: &ResilienceConfig) -> Duration {
+        r.silence_window + r.probe_timeout * r.probe_retries
+    }
+
+    fn limits(&self) -> AdmissionLimits {
+        AdmissionLimits {
+            max_prompt: self.max_prompt,
+            max_seq: self.max_seq,
+            layers: self.costs.layers,
+            page_tokens: self.page_tokens,
+            budget_pages: self.kv_budget_pages,
+        }
+    }
+}
+
+/// Everything a macro-sim run produces. `report`/`recovery`/`events`
+/// are the same types the real harness emits, so stall-budget checks,
+/// Prometheus export, and incident tooling run on them unchanged.
+pub struct SimReport {
+    pub report: ClusterReport,
+    pub recovery: RecoveryReport,
+    pub events: EventLog,
+    /// Requests still resident when the horizon cut the run off (0 on
+    /// any run that quiesces).
+    pub unfinished: usize,
+    /// Strict-ledger violations observed by the LoadMap (suspected
+    /// double-releases). Always 0 unless the accounting regresses.
+    pub unpaired_departures: u64,
+    /// Simulated timestamp of the last processed event.
+    pub sim_end: Duration,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AwState {
+    Up,
+    Down,
+    Draining,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Work {
+    Prefill(u64),
+    Decode,
+}
+
+struct SimAw {
+    state: AwState,
+    prefill_q: VecDeque<u64>,
+    active: VecDeque<u64>,
+    pages_in_use: u64,
+    /// Inbound adoptions mid-restore: counted as resident (the live AW
+    /// reserves arena pages at `RestoreStarted`), so beacons and the
+    /// gateway's optimistic ledger stay paired.
+    restoring: u32,
+    restoring_pages: u64,
+    /// EW-death ride-through: step completions are deferred to this
+    /// instant while REFE re-resolves experts.
+    stall_until: Duration,
+    stepping: bool,
+    current: Option<Work>,
+    beacon: Periodic,
+}
+
+impl SimAw {
+    fn new(status_interval: Duration) -> SimAw {
+        SimAw {
+            state: AwState::Up,
+            prefill_q: VecDeque::new(),
+            active: VecDeque::new(),
+            pages_in_use: 0,
+            restoring: 0,
+            restoring_pages: 0,
+            stall_until: Duration::ZERO,
+            stepping: false,
+            current: None,
+            beacon: Periodic::new(status_interval),
+        }
+    }
+
+    fn resident(&self) -> usize {
+        self.prefill_q.len() + self.active.len() + self.restoring as usize
+    }
+}
+
+struct Req {
+    prompt_len: u32,
+    max_new: u32,
+    generated: u32,
+    pages: u32,
+    aw: u32,
+    /// Matches the in-flight `Ev::Restore`; a stale completion (the
+    /// request was reclaimed or re-adopted meanwhile) mismatches and is
+    /// dropped, so a kill/respawn race can never double-install KV.
+    restore_ticket: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EwMode {
+    Respawn,
+    /// Elastic scale-out: warm tail candidate for every expert.
+    Tail,
+    /// Fresh EW provisioned for one hot expert.
+    For(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Trace index arrives at the gateway.
+    Arrive(usize),
+    /// AW step (prefill sweep or one decode batch) completes.
+    Step(u32),
+    /// Scheduled fault index fires.
+    Fault(usize),
+    /// Orchestrator confirms an AW/EW death (detection latency elapsed).
+    DetectAw(u32),
+    DetectEw(u32),
+    /// REFE on one AW reroutes around a severed link.
+    SeverReroute(u32, u32),
+    /// Worker init completes.
+    AwUp(u32),
+    EwUp(u32, EwMode),
+    /// KV restore (ticketed) completes on an AW.
+    Restore(u32, u64, u64),
+    /// Periodic control sweep.
+    Sweep,
+}
+
+struct Fleet {
+    cfg: FleetConfig,
+    limits: AdmissionLimits,
+    log: EventLog,
+    q: EventQueue<Ev>,
+    horizon: Duration,
+
+    aws: Vec<SimAw>,
+    reqs: BTreeMap<u64, Req>,
+    /// Admitted but not yet routable (gateway backpressure / recompute).
+    waiting: VecDeque<u64>,
+    /// Checkpointed and evicted; re-admitted below the low watermark.
+    /// `bool` = reached the parked set through a failure adoption (emits
+    /// `Adopted` when an AW takes it over).
+    parked: VecDeque<(u64, bool)>,
+
+    router: Router,
+    loads: LoadMap,
+
+    ert: Ert,
+    live_ews: Vec<u32>,
+    dead_ews: BTreeSet<u32>,
+    next_ew: u32,
+    scaler: Scaler,
+    scaler_tick: Periodic,
+    /// Per-expert token counters for the current scaler window.
+    win: Vec<u64>,
+    /// Deterministic rotation for expert selection per decoded token.
+    expert_rr: usize,
+    hotspot: Option<usize>,
+    next_ticket: u64,
+
+    stores: BTreeSet<u32>,
+    gateways: BTreeSet<u32>,
+    /// Store index corrupted or all replicas dead: restores fall back to
+    /// recompute (resubmission) instead of page refs.
+    store_degraded: bool,
+
+    submitted: usize,
+    finished: usize,
+    rejected: usize,
+    preemptions: u64,
+    aw_failures: u64,
+    ew_failures: u64,
+    scale_outs: u64,
+    scale_ins: u64,
+    shadow_promotions: u64,
+    scale_rejected: u64,
+    store_failovers: u64,
+    gateway_failovers: u64,
+    orch_promotions: u64,
+    sim_end: Duration,
+}
+
+impl Fleet {
+    fn new(cfg: FleetConfig, trace: &[SimRequest], faults: &[ScheduledFault]) -> Fleet {
+        let limits = cfg.limits();
+        let mut q = EventQueue::default();
+        if !trace.is_empty() {
+            q.push(trace[0].arrival, Ev::Arrive(0));
+        }
+        for (i, f) in faults.iter().enumerate() {
+            q.push(f.at, Ev::Fault(i));
+        }
+        q.push(Duration::ZERO, Ev::Sweep);
+        let horizon =
+            trace.last().map(|r| r.arrival).unwrap_or(Duration::ZERO) + cfg.grace;
+        // Hotspot is workload shaping, installed at launch regardless of
+        // its scheduled time — same contract as the live Scenario runner.
+        let hotspot = faults.iter().find_map(|f| match f.fault {
+            Fault::Hotspot(k) => Some(k as usize % cfg.num_experts.max(1)),
+            _ => None,
+        });
+
+        let mut loads = LoadMap::strict();
+        let fresh = AwLoad {
+            pages_in_use: 0,
+            pages_budget: cfg.kv_budget_pages as u32,
+            queue_depth: 0,
+            resident: 0,
+        };
+        for i in 0..cfg.num_aws {
+            loads.update(i as u32, fresh);
+        }
+
+        // Pre-size the log: Lifecycle keeps ~5 events per finished
+        // request (Submitted/Admitted/first/last Token/Finished).
+        let per_req = match cfg.event_level {
+            EventLevel::Full => 8,
+            EventLevel::Lifecycle => 5,
+        };
+        let cap = trace.len().saturating_mul(per_req).clamp(1024, 1 << 24);
+        Fleet {
+            router: Router::new(
+                cfg.policy,
+                Watermarks { high: cfg.high_watermark, low: cfg.low_watermark },
+                cfg.max_per_aw,
+            ),
+            loads,
+            ert: Ert::initial(cfg.num_experts, cfg.num_ews, cfg.shadows),
+            live_ews: (0..cfg.num_ews as u32).collect(),
+            dead_ews: BTreeSet::new(),
+            next_ew: cfg.num_ews as u32,
+            scaler: Scaler::new(cfg.scaler.clone()),
+            scaler_tick: Periodic::new(cfg.scaler.window),
+            win: vec![0; cfg.num_experts],
+            expert_rr: 0,
+            hotspot,
+            next_ticket: 0,
+            stores: (0..cfg.num_stores).collect(),
+            gateways: (0..cfg.num_gateways).collect(),
+            store_degraded: false,
+            aws: (0..cfg.num_aws).map(|_| SimAw::new(cfg.status_interval)).collect(),
+            reqs: BTreeMap::new(),
+            waiting: VecDeque::new(),
+            parked: VecDeque::new(),
+            log: EventLog::with_clock_capacity(Clock::manual(), cap),
+            q,
+            horizon,
+            limits,
+            cfg,
+            submitted: 0,
+            finished: 0,
+            rejected: 0,
+            preemptions: 0,
+            aw_failures: 0,
+            ew_failures: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            shadow_promotions: 0,
+            scale_rejected: 0,
+            store_failovers: 0,
+            gateway_failovers: 0,
+            orch_promotions: 0,
+            sim_end: Duration::ZERO,
+        }
+    }
+
+    fn aw_load(&self, i: usize) -> AwLoad {
+        let aw = &self.aws[i];
+        let pages = aw.pages_in_use + aw.restoring_pages;
+        AwLoad {
+            pages_in_use: pages.min(u32::MAX as u64) as u32,
+            pages_budget: self.cfg.kv_budget_pages as u32,
+            queue_depth: aw.resident() as u32,
+            resident: aw.resident() as u32,
+        }
+    }
+
+    /// AWs the gateway may route new work to.
+    fn routable(&self) -> Vec<u32> {
+        (0..self.aws.len())
+            .filter(|&i| self.aws[i].state == AwState::Up)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Route one admitted request; false = every candidate saturated
+    /// (backpressure — the caller parks it on the waiting queue).
+    fn dispatch(&mut self, id: u64, t: Duration) -> bool {
+        let live = self.routable();
+        let Some(aw) = self.router.pick(&live, &self.loads) else {
+            return false;
+        };
+        self.loads.note_submit(aw);
+        if let Some(r) = self.reqs.get_mut(&id) {
+            r.aw = aw;
+        }
+        self.log.record_at(t, EventKind::Admitted, id, 0, aw);
+        self.aws[aw as usize].prefill_q.push_back(id);
+        self.wake(aw as usize, t);
+        true
+    }
+
+    /// Schedule the next step on an idle AW that has work.
+    fn wake(&mut self, i: usize, t: Duration) {
+        let (work, dur) = {
+            let aw = &self.aws[i];
+            if aw.state != AwState::Up || aw.stepping {
+                return;
+            }
+            if let Some(&id) = aw.prefill_q.front() {
+                let len = self.reqs.get(&id).map(|r| r.prompt_len).unwrap_or(1);
+                (Work::Prefill(id), self.cfg.costs.prefill(len as usize))
+            } else if !aw.active.is_empty() {
+                (Work::Decode, self.cfg.costs.decode_step())
+            } else {
+                return;
+            }
+        };
+        let fire = t.max(self.aws[i].stall_until) + dur;
+        self.aws[i].stepping = true;
+        self.aws[i].current = Some(work);
+        self.q.push(fire, Ev::Step(i as u32));
+    }
+
+    fn on_step(&mut self, i: usize, t: Duration) {
+        if self.aws[i].state != AwState::Up {
+            // Died or drained mid-step; the fault path already reclaimed
+            // its requests. Drop the completion.
+            self.aws[i].stepping = false;
+            self.aws[i].current = None;
+            return;
+        }
+        if t < self.aws[i].stall_until {
+            // An EW died under this step: REFE stalls the batch until
+            // the reroute lands, then the step completes.
+            let until = self.aws[i].stall_until;
+            self.q.push(until, Ev::Step(i as u32));
+            return;
+        }
+        self.aws[i].stepping = false;
+        match self.aws[i].current.take() {
+            Some(Work::Prefill(id)) => self.finish_prefill(i, id),
+            Some(Work::Decode) => self.decode_batch(i, t),
+            None => {}
+        }
+        self.shed(i, t);
+        if self.aws[i].beacon.due(t) {
+            self.loads.update(i as u32, self.aw_load(i));
+        }
+        self.wake(i, t);
+    }
+
+    fn finish_prefill(&mut self, i: usize, id: u64) {
+        // The request may have been migrated off while the step ran.
+        let Some(pos) = self.aws[i].prefill_q.iter().position(|&x| x == id) else {
+            return;
+        };
+        self.aws[i].prefill_q.remove(pos);
+        let page_tokens = self.cfg.page_tokens;
+        let layers = self.cfg.costs.layers;
+        let Some(r) = self.reqs.get_mut(&id) else { return };
+        let pages = pages_for_tokens(r.prompt_len as usize, page_tokens, layers) as u64;
+        r.pages = pages.min(u32::MAX as u64) as u32;
+        self.aws[i].pages_in_use += pages;
+        self.aws[i].active.push_back(id);
+    }
+
+    fn decode_batch(&mut self, i: usize, t: Duration) {
+        let n = self.cfg.decode_batch.min(self.aws[i].active.len());
+        let page_tokens = self.cfg.page_tokens;
+        let layers = self.cfg.costs.layers;
+        let top_k = self.cfg.top_k;
+        let experts = self.cfg.num_experts;
+        let full = self.cfg.event_level == EventLevel::Full;
+        for _ in 0..n {
+            let Some(id) = self.aws[i].active.pop_front() else { break };
+            let (generated, done, delta, pages_now) = {
+                let Some(r) = self.reqs.get_mut(&id) else { continue };
+                r.generated += 1;
+                let done = r.generated >= r.max_new;
+                let total = (r.prompt_len + r.generated) as usize;
+                let new_pages = pages_for_tokens(total, page_tokens, layers) as u64;
+                let delta = new_pages.saturating_sub(r.pages as u64);
+                r.pages = new_pages.min(u32::MAX as u64) as u32;
+                (r.generated, done, delta, new_pages)
+            };
+            if full || generated == 1 || done {
+                self.log.record_at(t, EventKind::Token, id, generated - 1, i as u32);
+            }
+            self.aws[i].pages_in_use += delta;
+            // Per-expert accounting: top-k experts per token, rotating
+            // deterministically, plus the optional hotspot skew.
+            for j in 0..top_k {
+                self.win[(self.expert_rr + j) % experts] += 1;
+            }
+            self.expert_rr = (self.expert_rr + top_k) % experts;
+            if let Some(h) = self.hotspot {
+                self.win[h] += 2;
+            }
+            if done {
+                self.log.record_at(t, EventKind::Finished, id, generated, i as u32);
+                self.reqs.remove(&id);
+                self.aws[i].pages_in_use =
+                    self.aws[i].pages_in_use.saturating_sub(pages_now);
+                self.loads.note_departure(i as u32);
+                self.finished += 1;
+            } else {
+                self.aws[i].active.push_back(id);
+            }
+        }
+    }
+
+    /// Preempt lowest-progress requests while over the high watermark —
+    /// the same `pick_victim` policy the live AW runs.
+    fn shed(&mut self, i: usize, t: Duration) {
+        let budget = self.cfg.kv_budget_pages as u64;
+        if budget == 0 {
+            return;
+        }
+        loop {
+            let used = self.aws[i].pages_in_use + self.aws[i].restoring_pages;
+            if (used as f64) < budget as f64 * self.cfg.high_watermark {
+                break;
+            }
+            let candidates: Vec<(u64, u32)> = self.aws[i]
+                .active
+                .iter()
+                .filter_map(|&id| self.reqs.get(&id).map(|r| (id, r.generated)))
+                .collect();
+            let Some(victim) = pick_victim(candidates) else { break };
+            self.aws[i].active.retain(|&id| id != victim);
+            let pages = self.reqs.get(&victim).map(|r| r.pages as u64).unwrap_or(0);
+            self.aws[i].pages_in_use = self.aws[i].pages_in_use.saturating_sub(pages);
+            self.loads.note_departure(i as u32);
+            self.log.record_at(t, EventKind::Preempted, victim, 0, i as u32);
+            self.preemptions += 1;
+            self.parked.push_back((victim, false));
+        }
+    }
+
+    /// Lowest-pressure Up AW strictly below the low watermark (the
+    /// re-admission rule the live orchestrator applies to parked work).
+    fn adopter_for(&self) -> Option<u32> {
+        let mut best: Option<(f64, u32, u32)> = None;
+        for i in 0..self.aws.len() {
+            if self.aws[i].state != AwState::Up {
+                continue;
+            }
+            let l = self.loads.get(i as u32);
+            let p = l.pressure();
+            if self.cfg.kv_budget_pages > 0 && p >= self.cfg.low_watermark {
+                continue;
+            }
+            if self.cfg.max_per_aw > 0 && l.resident as usize >= self.cfg.max_per_aw {
+                continue;
+            }
+            let key = (p, l.resident, i as u32);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Begin a checkpoint restore on `aw` (or fall back to recompute
+    /// when the store path is degraded).
+    fn start_restore(&mut self, id: u64, adopted: bool, aw: u32, t: Duration) {
+        if self.store_degraded {
+            // No page refs to restore from: resubmit for full recompute.
+            self.log.record_at(t, EventKind::Migrated, id, 0, aw);
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.generated = 0;
+                r.pages = 0;
+                r.restore_ticket = NO_TICKET;
+            }
+            self.waiting.push_back(id);
+            return;
+        }
+        let page_tokens = self.cfg.page_tokens;
+        let layers = self.cfg.costs.layers;
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let pages = {
+            let Some(r) = self.reqs.get_mut(&id) else { return };
+            r.aw = aw;
+            r.restore_ticket = ticket;
+            let p = pages_for_tokens(
+                (r.prompt_len + r.generated) as usize,
+                page_tokens,
+                layers,
+            ) as u64;
+            r.pages = p.min(u32::MAX as u64) as u32;
+            r.pages
+        };
+        self.loads.note_submit(aw);
+        self.loads.note_pages(aw, pages);
+        self.aws[aw as usize].restoring += 1;
+        self.aws[aw as usize].restoring_pages += pages as u64;
+        if adopted {
+            self.log.record_at(t, EventKind::Adopted, id, 0, aw);
+        }
+        self.log.record_at(t, EventKind::RestoreStarted, id, 0, aw);
+        self.q.push(
+            t + self.cfg.costs.restore(pages as usize),
+            Ev::Restore(aw, id, ticket),
+        );
+    }
+
+    fn on_restore(&mut self, aw: u32, id: u64, ticket: u64, t: Duration) {
+        let i = aw as usize;
+        {
+            let Some(r) = self.reqs.get_mut(&id) else { return };
+            if r.restore_ticket != ticket {
+                return; // superseded: the request was reclaimed meanwhile
+            }
+            r.restore_ticket = NO_TICKET;
+        }
+        let pages = self.reqs.get(&id).map(|r| r.pages as u64).unwrap_or(0);
+        if self.aws[i].state != AwState::Up {
+            // The adopter died or drained mid-restore; its ledger entry
+            // and reservation counters were dropped wholesale. Re-park
+            // for the next sweep.
+            self.parked.push_back((id, true));
+            return;
+        }
+        self.aws[i].restoring = self.aws[i].restoring.saturating_sub(1);
+        self.aws[i].restoring_pages = self.aws[i].restoring_pages.saturating_sub(pages);
+        self.log.record_at(t, EventKind::Restored, id, 0, aw);
+        self.aws[i].pages_in_use += pages;
+        self.aws[i].active.push_back(id);
+        self.wake(i, t);
+    }
+
+    fn on_arrive(&mut self, idx: usize, t: Duration, trace: &[SimRequest]) {
+        if idx + 1 < trace.len() {
+            self.q.push(trace[idx + 1].arrival, Ev::Arrive(idx + 1));
+        }
+        let r = trace[idx];
+        self.submitted += 1;
+        self.log.record_at(t, EventKind::Submitted, r.id, 0, 0);
+        if self
+            .limits
+            .reject_reason(r.prompt_len as usize, r.max_new as usize)
+            .is_some()
+        {
+            self.rejected += 1;
+            self.log.record_at(t, EventKind::Rejected, r.id, 0, 0);
+            return;
+        }
+        self.reqs.insert(
+            r.id,
+            Req {
+                prompt_len: r.prompt_len.max(1),
+                max_new: r.max_new.max(1),
+                generated: 0,
+                pages: 0,
+                aw: u32::MAX,
+                restore_ticket: NO_TICKET,
+            },
+        );
+        if !self.dispatch(r.id, t) {
+            self.waiting.push_back(r.id);
+        }
+    }
+
+    fn on_sweep(&mut self, t: Duration) {
+        // Gateway retry of backpressured arrivals, in order.
+        while let Some(&id) = self.waiting.front() {
+            if self.dispatch(id, t) {
+                self.waiting.pop_front();
+            } else {
+                break;
+            }
+        }
+        // Parked re-admission: restores start only below the low
+        // watermark, steered at the lowest-pressure adopter.
+        let mut still = VecDeque::new();
+        while let Some((id, adopted)) = self.parked.pop_front() {
+            if !self.reqs.contains_key(&id) {
+                continue;
+            }
+            match self.adopter_for() {
+                Some(aw) => self.start_restore(id, adopted, aw, t),
+                None => still.push_back((id, adopted)),
+            }
+        }
+        self.parked = still;
+        if self.cfg.scaler.enabled && self.scaler_tick.due(t) {
+            self.scaler_step(t);
+        }
+        if (!self.reqs.is_empty() || !self.q.is_empty()) && t <= self.horizon {
+            self.q.push(t + self.cfg.sweep_interval, Ev::Sweep);
+        }
+    }
+
+    /// Fold the window's per-expert counters into per-EW beacons (via
+    /// the current ERT, exactly as live EWs report) and let the real
+    /// scaler plan.
+    fn scaler_step(&mut self, t: Duration) {
+        let mut per_ew: BTreeMap<u32, Vec<(u16, u64)>> = BTreeMap::new();
+        for (e, n) in self.win.iter_mut().enumerate() {
+            if *n == 0 {
+                continue;
+            }
+            if let Some(ew) = self.ert.resolve(e) {
+                per_ew.entry(ew).or_default().push((e as u16, *n));
+            }
+            *n = 0;
+        }
+        for (ew, v) in per_ew {
+            self.scaler.ingest(ew, v);
+        }
+        let live = self.live_ews.clone();
+        let Some(plan) = self.scaler.plan(t, self.ert.table(), &live) else {
+            return;
+        };
+        match plan {
+            ScalePlan::PromoteShadow { expert, to } => {
+                let mut tbl = self.ert.table().clone();
+                if promote(&mut tbl, expert, to) {
+                    self.apply_table(tbl);
+                    self.log
+                        .record_at(t, EventKind::ShadowPromoted, 0, expert as u32, to);
+                    self.shadow_promotions += 1;
+                }
+            }
+            ScalePlan::ProvisionFresh { expert } => {
+                let id = self.next_ew;
+                self.next_ew += 1;
+                self.q.push(
+                    t + self.cfg.costs.worker_init(),
+                    Ev::EwUp(id, EwMode::For(expert)),
+                );
+            }
+            ScalePlan::Retire { ew } => self.retire_ew(ew, t),
+        }
+    }
+
+    fn retire_ew(&mut self, ew: u32, t: Duration) {
+        let mut tbl = self.ert.table().clone();
+        if retire(&mut tbl, ew) {
+            self.apply_table(tbl);
+            self.live_ews.retain(|&x| x != ew);
+            self.scaler.forget(ew);
+            self.log.record_at(t, EventKind::ScaleIn, 0, 0, ew);
+            self.scale_ins += 1;
+        } else {
+            self.scale_rejected += 1;
+        }
+    }
+
+    /// Install a new table at version+1 and re-overlay the still-dead
+    /// set (`apply` clears local death marks by design — a respawned EW
+    /// comes back via a fresh version, the rest must stay dead).
+    fn apply_table(&mut self, tbl: Vec<Vec<u32>>) {
+        let v = self.ert.version() + 1;
+        self.ert.apply(v, tbl);
+        for &d in &self.dead_ews.clone() {
+            self.ert.mark_dead(d);
+        }
+    }
+
+    fn on_fault(&mut self, f: Fault, t: Duration) {
+        match f {
+            Fault::KillAw(i) => self.kill_aw(i, t),
+            Fault::KillEw(i) => self.kill_ew(i, t),
+            Fault::DrainAw(i) => self.drain_aw(i, t),
+            Fault::MigrateAw(from, _to) => self.drain_aw(from, t),
+            Fault::RespawnAw(i) => {
+                if (i as usize) < self.aws.len() && self.aws[i as usize].state != AwState::Up
+                {
+                    self.q.push(t + self.cfg.costs.worker_init(), Ev::AwUp(i));
+                }
+            }
+            Fault::RespawnEw(i) => {
+                if self.dead_ews.contains(&i) {
+                    self.q.push(
+                        t + self.cfg.costs.worker_init(),
+                        Ev::EwUp(i, EwMode::Respawn),
+                    );
+                }
+            }
+            Fault::ScaleEwUp => {
+                let id = self.next_ew;
+                self.next_ew += 1;
+                self.q
+                    .push(t + self.cfg.costs.worker_init(), Ev::EwUp(id, EwMode::Tail));
+            }
+            Fault::ScaleEwDown(i) => self.retire_ew(i, t),
+            Fault::Sever(a, b) => {
+                if let Some((aw, ew)) = aw_ew_pair(a, b) {
+                    if (aw as usize) < self.aws.len() {
+                        // Link loss: that AW stalls for one detection
+                        // interval, then REFE reroutes around the link.
+                        let until = t + self.cfg.detection;
+                        let s = &mut self.aws[aw as usize];
+                        s.stall_until = s.stall_until.max(until);
+                        self.q.push(until, Ev::SeverReroute(aw, ew));
+                    }
+                }
+                // Other node pairs have no macro-sim data plane to cut.
+            }
+            Fault::Heal(_, _) => {
+                // The macro data plane has no per-link state to restore;
+                // a healed link simply stops producing future stalls.
+            }
+            Fault::KillStore(i) => {
+                if self.stores.remove(&i) {
+                    self.log.record_at(t, EventKind::Detected, 0, CLASS_STORE, i);
+                    if self.stores.is_empty() {
+                        self.store_degraded = true;
+                    } else {
+                        self.log.record_at(t, EventKind::StoreFailover, 0, 0, i);
+                        self.store_failovers += 1;
+                    }
+                }
+            }
+            Fault::RespawnStore(i) => {
+                self.stores.insert(i);
+                self.store_degraded = false;
+            }
+            Fault::CorruptStoreIndex(_) => {
+                // Sealed-page index lost: restores fall back to full
+                // recompute until a store respawn rebuilds it.
+                self.store_degraded = true;
+            }
+            Fault::KillGateway(i) => {
+                if self.gateways.remove(&i) && !self.gateways.is_empty() {
+                    self.log.record_at(t, EventKind::Detected, 0, CLASS_GATEWAY, i);
+                    self.log.record_at(t, EventKind::GatewayFailover, 0, 0, i);
+                    self.gateway_failovers += 1;
+                }
+            }
+            Fault::KillOrch => {
+                self.log.record_at(t, EventKind::Detected, 0, CLASS_ORCH, 0);
+                self.log.record_at(t, EventKind::OrchPromoted, 0, 0, 1);
+                self.orch_promotions += 1;
+            }
+            Fault::PromoteOrch => {
+                self.log.record_at(t, EventKind::OrchPromoted, 0, 1, 1);
+                self.orch_promotions += 1;
+            }
+            Fault::Hotspot(_) => {} // installed at launch
+        }
+    }
+
+    fn kill_aw(&mut self, i: u32, t: Duration) {
+        let idx = i as usize;
+        if idx >= self.aws.len() || self.aws[idx].state == AwState::Down {
+            return;
+        }
+        self.aws[idx].state = AwState::Down;
+        self.aws[idx].restoring = 0;
+        self.aws[idx].restoring_pages = 0;
+        self.aw_failures += 1;
+        // The gateway drops the dead AW from its ledger wholesale; its
+        // requests re-enter accounting on their adopters.
+        self.loads.remove(i);
+        self.q.push(t + self.cfg.detection, Ev::DetectAw(i));
+    }
+
+    fn on_detect_aw(&mut self, i: u32, t: Duration) {
+        let idx = i as usize;
+        if self.aws[idx].state != AwState::Down {
+            return; // respawned before confirmation
+        }
+        self.log.record_at(t, EventKind::Detected, 0, CLASS_AW, i);
+        let prefills: Vec<u64> = self.aws[idx].prefill_q.drain(..).collect();
+        let actives: Vec<u64> = self.aws[idx].active.drain(..).collect();
+        self.aws[idx].pages_in_use = 0;
+        self.aws[idx].current = None;
+        for id in prefills {
+            // No tokens yet: resubmit for a fresh prefill elsewhere.
+            self.log.record_at(t, EventKind::Migrated, id, 0, i);
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.aw = u32::MAX;
+                r.pages = 0;
+            }
+            self.waiting.push_back(id);
+        }
+        for id in actives {
+            let degraded = self.store_degraded;
+            let Some(r) = self.reqs.get_mut(&id) else { continue };
+            // The token in flight at the kill is lost; everything the
+            // incremental checkpoint stream committed survives.
+            r.generated = r.generated.saturating_sub(1);
+            r.aw = u32::MAX;
+            if r.generated == 0 || degraded {
+                r.generated = 0;
+                r.pages = 0;
+                self.log.record_at(t, EventKind::Migrated, id, 0, i);
+                self.waiting.push_back(id);
+            } else {
+                self.parked.push_back((id, true));
+            }
+        }
+    }
+
+    fn kill_ew(&mut self, i: u32, t: Duration) {
+        if self.dead_ews.contains(&i) || !self.live_ews.contains(&i) {
+            return;
+        }
+        self.dead_ews.insert(i);
+        self.ew_failures += 1;
+        // Every AW whose decode touches this EW's primaries stalls until
+        // detection + reroute. Expert use rotates round-robin, so at
+        // top_k >= 2 effectively every busy AW is exposed.
+        if !self.ert.primaries_of(i).is_empty() {
+            let until = t + self.cfg.detection;
+            for aw in &mut self.aws {
+                if aw.state == AwState::Up && aw.resident() > 0 {
+                    aw.stall_until = aw.stall_until.max(until);
+                }
+            }
+        }
+        self.q.push(t + self.cfg.detection, Ev::DetectEw(i));
+    }
+
+    fn on_detect_ew(&mut self, i: u32, t: Duration) {
+        if !self.dead_ews.contains(&i) {
+            return; // respawned before confirmation
+        }
+        self.log.record_at(t, EventKind::Detected, 0, CLASS_EW, i);
+        self.ert.mark_dead(i);
+        self.live_ews.retain(|&x| x != i);
+        self.scaler.forget(i);
+        // Each stalled AW records its reroute (the REFE hop onto the
+        // shadow candidate), mirroring the live event stream.
+        for (a, aw) in self.aws.iter().enumerate() {
+            if aw.state == AwState::Up && aw.resident() > 0 {
+                self.log.record_at(t, EventKind::Rerouted, i as u64, 0, a as u32);
+            }
+        }
+    }
+
+    fn drain_aw(&mut self, i: u32, t: Duration) {
+        let idx = i as usize;
+        if idx >= self.aws.len() || self.aws[idx].state != AwState::Up {
+            return;
+        }
+        self.aws[idx].state = AwState::Draining;
+        self.aws[idx].restoring = 0;
+        self.aws[idx].restoring_pages = 0;
+        let prefills: Vec<u64> = self.aws[idx].prefill_q.drain(..).collect();
+        let actives: Vec<u64> = self.aws[idx].active.drain(..).collect();
+        self.aws[idx].pages_in_use = 0;
+        self.aws[idx].current = None;
+        self.loads.remove(i);
+        for id in prefills {
+            self.log.record_at(t, EventKind::Migrated, id, 0, i);
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.aw = u32::MAX;
+                r.pages = 0;
+            }
+            self.waiting.push_back(id);
+        }
+        for id in actives {
+            // Planned drain checkpoints synchronously: no token loss.
+            self.log.record_at(t, EventKind::Preempted, id, 0, i);
+            self.preemptions += 1;
+            if let Some(r) = self.reqs.get_mut(&id) {
+                r.aw = u32::MAX;
+            }
+            self.parked.push_back((id, false));
+        }
+    }
+
+    fn on_aw_up(&mut self, i: u32) {
+        let idx = i as usize;
+        self.aws[idx] = SimAw::new(self.cfg.status_interval);
+        self.loads.update(
+            i,
+            AwLoad {
+                pages_in_use: 0,
+                pages_budget: self.cfg.kv_budget_pages as u32,
+                queue_depth: 0,
+                resident: 0,
+            },
+        );
+    }
+
+    fn on_ew_up(&mut self, i: u32, mode: EwMode, t: Duration) {
+        match mode {
+            EwMode::Respawn => {
+                if !self.dead_ews.remove(&i) {
+                    return;
+                }
+                // Same table, fresh version: `apply` clears the local
+                // death overlay for the returning EW, then the rest of
+                // the dead set is re-marked.
+                let tbl = self.ert.table().clone();
+                self.apply_table(tbl);
+                if !self.live_ews.contains(&i) {
+                    self.live_ews.push(i);
+                    self.live_ews.sort_unstable();
+                }
+            }
+            EwMode::Tail => {
+                let mut tbl = self.ert.table().clone();
+                for cands in tbl.iter_mut() {
+                    cands.push(i);
+                }
+                self.apply_table(tbl);
+                self.live_ews.push(i);
+                self.live_ews.sort_unstable();
+                self.log.record_at(t, EventKind::ScaleOut, 0, 0, i);
+                self.scale_outs += 1;
+            }
+            EwMode::For(expert) => {
+                let mut tbl = self.ert.table().clone();
+                if let Some(cands) = tbl.get_mut(expert) {
+                    cands.insert(0, i);
+                }
+                self.apply_table(tbl);
+                self.live_ews.push(i);
+                self.live_ews.sort_unstable();
+                self.log.record_at(t, EventKind::ScaleOut, 0, expert as u32, i);
+                self.scale_outs += 1;
+            }
+        }
+    }
+
+    fn finish(self) -> SimReport {
+        let events = self.log.snapshot();
+        let window = self.sim_end.as_secs_f64().max(1e-9);
+        let analysis = RunAnalysis::from_events(&events, window);
+        let recovery = RecoveryReport::from_events(&events);
+        let report = ClusterReport {
+            analysis,
+            submitted: self.submitted,
+            finished: self.finished,
+            aw_failures: self.aw_failures,
+            ew_failures: self.ew_failures,
+            restarts: 0,
+            preemptions: self.preemptions,
+            rejected: self.rejected,
+            scale_outs: self.scale_outs,
+            scale_ins: self.scale_ins,
+            shadow_promotions: self.shadow_promotions,
+            scale_rejected: self.scale_rejected,
+            store_failovers: self.store_failovers,
+            gateway_failovers: self.gateway_failovers,
+            orch_promotions: self.orch_promotions,
+            store_replica_lag: 0,
+            sharing: SharingStats::default(),
+            pool_misses: 0,
+        };
+        SimReport {
+            report,
+            recovery,
+            events: self.log,
+            unfinished: self.reqs.len(),
+            unpaired_departures: self.loads.unpaired_departures(),
+            sim_end: self.sim_end,
+        }
+    }
+}
+
+/// `sever aw<A> ew<B>` in either order; other node pairs have no
+/// macro-sim effect (the virtual data plane only has AW→EW links).
+fn aw_ew_pair(a: NodeId, b: NodeId) -> Option<(u32, u32)> {
+    match (a, b) {
+        (NodeId::Aw(x), NodeId::Ew(y)) | (NodeId::Ew(y), NodeId::Aw(x)) => Some((x, y)),
+        _ => None,
+    }
+}
+
+/// Run one macro-sim: replay `trace` against a `cfg`-shaped fleet while
+/// injecting `faults`, and return the standard report triple.
+pub fn run_fleet(
+    cfg: FleetConfig,
+    trace: &[SimRequest],
+    faults: &[ScheduledFault],
+) -> SimReport {
+    let mut fleet = Fleet::new(cfg, trace, faults);
+    while let Some((t, ev)) = fleet.q.pop() {
+        fleet.sim_end = t;
+        match ev {
+            Ev::Arrive(idx) => fleet.on_arrive(idx, t, trace),
+            Ev::Step(i) => fleet.on_step(i as usize, t),
+            Ev::Fault(fi) => fleet.on_fault(faults[fi].fault.clone(), t),
+            Ev::DetectAw(i) => fleet.on_detect_aw(i, t),
+            Ev::DetectEw(i) => fleet.on_detect_ew(i, t),
+            Ev::SeverReroute(aw, ew) => {
+                if fleet.aws[aw as usize].state == AwState::Up {
+                    fleet.log.record_at(t, EventKind::Rerouted, ew as u64, 0, aw);
+                }
+            }
+            Ev::AwUp(i) => fleet.on_aw_up(i),
+            Ev::EwUp(i, mode) => fleet.on_ew_up(i, mode, t),
+            Ev::Restore(aw, id, ticket) => fleet.on_restore(aw, id, ticket, t),
+            Ev::Sweep => fleet.on_sweep(t),
+        }
+    }
+    fleet.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_cfg(aws: usize, ews: usize) -> FleetConfig {
+        FleetConfig::new(aws, ews)
+    }
+
+    fn small_trace(n: usize) -> Vec<SimRequest> {
+        (0..n)
+            .map(|i| SimRequest {
+                id: i as u64,
+                arrival: Duration::from_millis(2 * i as u64),
+                prompt_len: 32,
+                max_new: 6,
+                tenant: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_run_finishes_every_request() {
+        let r = run_fleet(quiet_cfg(4, 4), &small_trace(40), &[]);
+        assert_eq!(r.report.submitted, 40);
+        assert_eq!(r.report.finished, 40);
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.unpaired_departures, 0);
+        assert_eq!(r.report.aw_failures, 0);
+        assert!(r.report.analysis.total_tokens >= 40 * 6);
+    }
+
+    #[test]
+    fn lifecycle_level_preserves_ttft_and_counts() {
+        let trace = small_trace(30);
+        let full = run_fleet(quiet_cfg(2, 2), &trace, &[]);
+        let mut cfg = quiet_cfg(2, 2);
+        cfg.event_level = EventLevel::Lifecycle;
+        let lite = run_fleet(cfg, &trace, &[]);
+        assert_eq!(lite.report.finished, full.report.finished);
+        // First/last tokens survive, so TTFT distributions agree exactly.
+        assert_eq!(
+            lite.report.analysis.ttft().median_ms,
+            full.report.analysis.ttft().median_ms
+        );
+        assert!(lite.events.len() < full.events.len());
+    }
+
+    #[test]
+    fn aw_kill_recovers_with_adoption_and_detection_budget() {
+        let cfg = quiet_cfg(3, 2);
+        let detect = cfg.detection;
+        let faults = vec![ScheduledFault {
+            at: Duration::from_millis(400),
+            fault: Fault::KillAw(0),
+        }];
+        let r = run_fleet(cfg, &small_trace(60), &faults);
+        assert_eq!(r.report.aw_failures, 1);
+        assert_eq!(r.report.finished + r.report.rejected, 60);
+        assert_eq!(r.unpaired_departures, 0);
+        let inc = &r.recovery.incidents;
+        assert!(!inc.is_empty(), "AW kill must surface as an incident");
+        // The death is confirmed exactly one detection latency after the
+        // scheduled kill.
+        let expected = 0.4 + detect.as_secs_f64();
+        assert!(
+            (inc[0].t_detect_s - expected).abs() < 1e-6,
+            "detected at {} vs expected {}",
+            inc[0].t_detect_s,
+            expected
+        );
+    }
+
+    #[test]
+    fn ew_kill_stalls_then_reroutes() {
+        let faults = vec![ScheduledFault {
+            at: Duration::from_millis(300),
+            fault: Fault::KillEw(1),
+        }];
+        let r = run_fleet(quiet_cfg(2, 3), &small_trace(50), &faults);
+        assert_eq!(r.report.ew_failures, 1);
+        assert_eq!(r.report.finished + r.report.rejected, 50);
+        let rendered = r.events.render();
+        assert!(rendered.contains("rerouted"), "expected REFE reroute events:\n{rendered}");
+        assert_eq!(r.unpaired_departures, 0);
+    }
+
+    #[test]
+    fn kv_pressure_preempts_and_readmits() {
+        let mut cfg = quiet_cfg(2, 2);
+        // Tight arena: a 32-token prompt is 2 pages/layer × 32 layers.
+        cfg.kv_budget_pages = 3 * 32 * 4;
+        let r = run_fleet(cfg, &small_trace(60), &[]);
+        assert!(r.report.preemptions > 0, "tight budget must preempt");
+        assert_eq!(r.report.finished + r.report.rejected, 60);
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.unpaired_departures, 0);
+    }
+
+    #[test]
+    fn deterministic_same_seed_same_log() {
+        let spec = TraceSpec::bursty(300.0, Duration::from_secs(2), 9);
+        let trace = spec.generate();
+        let faults = vec![
+            ScheduledFault { at: Duration::from_millis(200), fault: Fault::KillEw(0) },
+            ScheduledFault { at: Duration::from_millis(500), fault: Fault::KillAw(1) },
+        ];
+        let a = run_fleet(quiet_cfg(4, 4), &trace, &faults);
+        let b = run_fleet(quiet_cfg(4, 4), &trace, &faults);
+        assert_eq!(a.events.render(), b.events.render());
+        assert_eq!(a.report.finished, b.report.finished);
+    }
+
+    #[test]
+    fn hotspot_drives_the_real_scaler_to_act() {
+        let mut cfg = quiet_cfg(2, 4);
+        cfg.scaler.enabled = true;
+        // ~5-10 tokens decode per 10 ms window at these costs; the
+        // hotspot doubles the skewed expert's count past this threshold
+        // while the round-robin background stays well below it.
+        cfg.scaler.hot_threshold = 8;
+        cfg.scaler.cold_threshold = 0;
+        cfg.scaler.cooldown = Duration::from_millis(50);
+        let faults = vec![ScheduledFault {
+            at: Duration::ZERO,
+            fault: Fault::Hotspot(2),
+        }];
+        let spec = TraceSpec::steady(400.0, Duration::from_secs(2), 3);
+        let r = run_fleet(cfg, &spec.generate(), &faults);
+        assert!(
+            r.report.shadow_promotions + r.report.scale_outs > 0,
+            "hotspot load must trigger shadow promotion or provisioning"
+        );
+        assert_eq!(r.unpaired_departures, 0);
+    }
+
+    #[test]
+    fn store_loss_degrades_restores_to_recompute() {
+        let mut cfg = quiet_cfg(2, 2);
+        cfg.kv_budget_pages = 3 * 32 * 4; // force preemptions
+        cfg.num_stores = 1;
+        let faults = vec![ScheduledFault {
+            at: Duration::from_millis(50),
+            fault: Fault::KillStore(0),
+        }];
+        let r = run_fleet(cfg, &small_trace(60), &faults);
+        // All replicas dead: parked work recomputes instead of restoring,
+        // but nothing is lost.
+        assert_eq!(r.report.finished + r.report.rejected, 60);
+        assert_eq!(r.unfinished, 0);
+    }
+
+    #[test]
+    fn drain_migrates_everything_off_the_aw() {
+        let faults = vec![ScheduledFault {
+            at: Duration::from_millis(100),
+            fault: Fault::DrainAw(0),
+        }];
+        let r = run_fleet(quiet_cfg(2, 2), &small_trace(40), &faults);
+        assert_eq!(r.report.finished + r.report.rejected, 40);
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.unpaired_departures, 0);
+    }
+}

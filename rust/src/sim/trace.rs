@@ -1,0 +1,273 @@
+//! Fleet-scale request traces for the macro-simulator.
+//!
+//! A [`TraceSpec`] turns a seeded [`Pcg`] into a deterministic vector of
+//! compact [`SimRequest`]s (24 bytes each — a million-request trace is
+//! ~24 MB, not a million prompt vectors). Three arrival shapes cover the
+//! paper's serving regimes: steady Poisson, diurnal rate modulation, and
+//! periodic bursts; multi-tenant traces overlay per-tenant length
+//! profiles on any shape.
+//!
+//! Non-homogeneous arrivals use thinning (Lewis–Shedler): exponential
+//! gaps at the peak rate, acceptance with probability `rate(t)/peak`.
+//! Everything is a pure function of the spec — same spec, same trace,
+//! byte for byte.
+
+use crate::util::rng::Pcg;
+use std::time::Duration;
+
+/// One simulated request: arrival offset plus the two lengths that drive
+/// every cost and KV-page computation. No token content — the macro-sim
+/// accounts tokens, it does not decode them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimRequest {
+    pub id: u64,
+    pub arrival: Duration,
+    pub prompt_len: u32,
+    pub max_new: u32,
+    /// Tenant index into [`TraceSpec::tenants`] (0 when single-tenant).
+    pub tenant: u8,
+}
+
+/// Arrival-rate shape over the trace duration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceShape {
+    /// Homogeneous Poisson at the base rate.
+    Steady,
+    /// Sinusoidal day/night modulation: `rate(t) = base * (1 + amplitude
+    /// * sin(2π t / period))`, clamped non-negative. `amplitude` in
+    /// [0, 1] keeps the valley at `base * (1 - amplitude)`.
+    Diurnal { period: Duration, amplitude: f64 },
+    /// Base-rate Poisson with a `factor`-times burst for `len` out of
+    /// every `every` — the flash-crowd shape that exposes admission
+    /// backpressure and preemption at fleet scale.
+    Bursty { every: Duration, len: Duration, factor: f64 },
+}
+
+/// Per-tenant length profile (weights are relative, not normalized).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tenant {
+    pub weight: f64,
+    /// Inclusive prompt-length range.
+    pub prompt: (u32, u32),
+    /// Inclusive decode-length range.
+    pub decode: (u32, u32),
+}
+
+/// A complete trace description; `generate` is deterministic in it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub shape: TraceShape,
+    /// Base mean arrival rate, requests/second.
+    pub rate_rps: f64,
+    pub duration: Duration,
+    pub tenants: Vec<Tenant>,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    fn single_tenant(prompt: (u32, u32), decode: (u32, u32)) -> Vec<Tenant> {
+        vec![Tenant { weight: 1.0, prompt, decode }]
+    }
+
+    /// Steady Poisson with interactive-serving lengths.
+    pub fn steady(rate_rps: f64, duration: Duration, seed: u64) -> TraceSpec {
+        TraceSpec {
+            shape: TraceShape::Steady,
+            rate_rps,
+            duration,
+            tenants: Self::single_tenant((8, 64), (4, 24)),
+            seed,
+        }
+    }
+
+    /// Diurnal modulation: one full day/night cycle per quarter of the
+    /// trace, ±60% around the base rate.
+    pub fn diurnal(rate_rps: f64, duration: Duration, seed: u64) -> TraceSpec {
+        TraceSpec {
+            shape: TraceShape::Diurnal { period: duration / 4, amplitude: 0.6 },
+            ..Self::steady(rate_rps, duration, seed)
+        }
+    }
+
+    /// Bursty: 4x the base rate for 1/10 of every 2-second window.
+    pub fn bursty(rate_rps: f64, duration: Duration, seed: u64) -> TraceSpec {
+        TraceSpec {
+            shape: TraceShape::Bursty {
+                every: Duration::from_secs(2),
+                len: Duration::from_millis(200),
+                factor: 4.0,
+            },
+            ..Self::steady(rate_rps, duration, seed)
+        }
+    }
+
+    /// Three-tenant mix over any shape: chatty short prompts, mid-size
+    /// assistants, and long-document summarizers.
+    pub fn multi_tenant(mut base: TraceSpec) -> TraceSpec {
+        base.tenants = vec![
+            Tenant { weight: 6.0, prompt: (4, 24), decode: (2, 12) },
+            Tenant { weight: 3.0, prompt: (32, 128), decode: (8, 32) },
+            Tenant { weight: 1.0, prompt: (256, 512), decode: (16, 48) },
+        ];
+        base
+    }
+
+    /// Instantaneous arrival rate at offset `t`.
+    pub fn rate_at(&self, t: Duration) -> f64 {
+        match self.shape {
+            TraceShape::Steady => self.rate_rps,
+            TraceShape::Diurnal { period, amplitude } => {
+                let phase = t.as_secs_f64() / period.as_secs_f64().max(1e-9);
+                (self.rate_rps * (1.0 + amplitude * (phase * std::f64::consts::TAU).sin()))
+                    .max(0.0)
+            }
+            TraceShape::Bursty { every, len, factor } => {
+                let into = t.as_nanos() % every.as_nanos().max(1);
+                if into < len.as_nanos() {
+                    self.rate_rps * factor
+                } else {
+                    self.rate_rps
+                }
+            }
+        }
+    }
+
+    /// Peak of `rate_at` over the whole trace (the thinning envelope).
+    fn peak_rate(&self) -> f64 {
+        match self.shape {
+            TraceShape::Steady => self.rate_rps,
+            TraceShape::Diurnal { amplitude, .. } => self.rate_rps * (1.0 + amplitude.max(0.0)),
+            TraceShape::Bursty { factor, .. } => self.rate_rps * factor.max(1.0),
+        }
+    }
+
+    /// Materialize the trace. Requests are id'd in arrival order.
+    pub fn generate(&self) -> Vec<SimRequest> {
+        assert!(!self.tenants.is_empty(), "trace needs at least one tenant profile");
+        let peak = self.peak_rate();
+        if peak <= 0.0 {
+            return Vec::new();
+        }
+        let total_weight: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut rng = Pcg::seeded(self.seed);
+        let mut out = Vec::new();
+        let mut t = 0.0f64;
+        let end = self.duration.as_secs_f64();
+        loop {
+            t += rng.exponential(peak);
+            if t >= end {
+                break;
+            }
+            let at = Duration::from_secs_f64(t);
+            // Thinning: accept with prob rate(t)/peak. The draw happens
+            // unconditionally so the stream position — and therefore the
+            // accepted set — depends only on the spec.
+            let accept = rng.f64() < self.rate_at(at) / peak;
+            if !accept {
+                continue;
+            }
+            let mut pick = rng.f64() * total_weight;
+            let mut tenant = 0usize;
+            for (i, ten) in self.tenants.iter().enumerate() {
+                pick -= ten.weight;
+                if pick <= 0.0 {
+                    tenant = i;
+                    break;
+                }
+            }
+            let ten = &self.tenants[tenant];
+            out.push(SimRequest {
+                id: out.len() as u64,
+                arrival: at,
+                prompt_len: rng.range(ten.prompt.0 as u64, ten.prompt.1 as u64 + 1) as u32,
+                max_new: rng.range(ten.decode.0.max(1) as u64, ten.decode.1.max(1) as u64 + 1)
+                    as u32,
+                tenant: tenant as u8,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_ordered() {
+        let spec = TraceSpec::bursty(200.0, Duration::from_secs(10), 42);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a, b, "same spec must yield the identical trace");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        assert!(a.iter().all(|r| r.max_new >= 1), "zero-decode requests are not generable");
+        // A different seed moves the arrivals.
+        let c = TraceSpec::bursty(200.0, Duration::from_secs(10), 43).generate();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mean_rate_tracks_the_base() {
+        let spec = TraceSpec::steady(500.0, Duration::from_secs(20), 7);
+        let n = spec.generate().len() as f64;
+        let expect = 500.0 * 20.0;
+        assert!((n - expect).abs() < expect * 0.1, "got {n}, expected ~{expect}");
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_the_burst_window() {
+        let spec = TraceSpec::bursty(100.0, Duration::from_secs(20), 7);
+        let TraceShape::Bursty { every, len, .. } = spec.shape else { unreachable!() };
+        let trace = spec.generate();
+        let in_burst = trace
+            .iter()
+            .filter(|r| r.arrival.as_nanos() % every.as_nanos() < len.as_nanos())
+            .count() as f64;
+        let frac = in_burst / trace.len() as f64;
+        // Burst window is 10% of time at 4x rate: expect ~4/13 ≈ 0.31 of
+        // arrivals inside it, far above the 0.10 a steady stream shows.
+        assert!(frac > 0.2, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn diurnal_valley_is_quieter_than_peak() {
+        let spec = TraceSpec::diurnal(400.0, Duration::from_secs(40), 9);
+        let TraceShape::Diurnal { period, .. } = spec.shape else { unreachable!() };
+        let trace = spec.generate();
+        // First quarter-period rides the sine peak, the third rides the
+        // valley (sin > 0 then < 0).
+        let quarter = period.as_secs_f64() / 2.0;
+        let peak_n = trace
+            .iter()
+            .filter(|r| {
+                let phase = r.arrival.as_secs_f64() % period.as_secs_f64();
+                phase < quarter
+            })
+            .count();
+        let valley_n = trace.len() - peak_n;
+        assert!(
+            peak_n as f64 > valley_n as f64 * 1.5,
+            "peak {peak_n} vs valley {valley_n}"
+        );
+    }
+
+    #[test]
+    fn tenants_follow_their_profiles() {
+        let spec =
+            TraceSpec::multi_tenant(TraceSpec::steady(300.0, Duration::from_secs(10), 11));
+        let trace = spec.generate();
+        let mut seen = [false; 3];
+        for r in &trace {
+            let ten = spec.tenants[r.tenant as usize];
+            assert!(r.prompt_len >= ten.prompt.0 && r.prompt_len <= ten.prompt.1);
+            assert!(r.max_new >= ten.decode.0 && r.max_new <= ten.decode.1);
+            seen[r.tenant as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every tenant must appear in a 3k-request trace");
+        // The heavy tenant dominates.
+        let t0 = trace.iter().filter(|r| r.tenant == 0).count();
+        assert!(t0 * 2 > trace.len(), "weight-6 tenant should be the majority");
+    }
+}

@@ -368,15 +368,31 @@ impl Scenario {
             apply(&cluster, &f.fault);
         }
         let completed = cluster.wait_done(self.drain_timeout);
+        let rejections = cluster.gw.rejections();
+        // A scheduled request with no token stream after a completed
+        // drain is *lost*, not "finished empty" — only rejected requests
+        // may legitimately lack one. (`generated_of` returning `Option`
+        // is what makes this detectable; it used to default to empty.)
         let tokens: BTreeMap<u64, Vec<u32>> = self
             .schedule
             .iter()
-            .map(|r| (r.id, cluster.gw.generated_of(r.id)))
+            .map(|r| {
+                let stream = cluster.gw.generated_of(r.id).unwrap_or_else(|| {
+                    assert!(
+                        !completed || rejections.contains_key(&r.id),
+                        "scenario {}: request {} was lost (drained with no \
+                         token stream and no rejection)",
+                        self.name,
+                        r.id
+                    );
+                    Vec::new()
+                });
+                (r.id, stream)
+            })
             .collect();
         let event_log = cluster.events.render();
         let recovery = RecoveryReport::from_log(&cluster.events);
         let spans = cluster.tracer.as_ref().map(|t| t.snapshot()).unwrap_or_default();
-        let rejections = cluster.gw.rejections();
         let kv_peaks = cluster.spawner.kv_peaks();
         let kv_budget = self.cfg.sched.kv_budget_pages;
         let report = cluster.finish(1.0);

@@ -34,8 +34,16 @@
 //! 3. [`Clock::shutdown`] switches the clock to free-running teardown
 //!    mode (sleeps return immediately, recvs fall back to real blocking)
 //!    so `join`-based cleanup works after a run completes.
+//!
+//! A third implementation, [`Clock::manual`], serves the macro-sim
+//! (DESIGN.md §16): a single-threaded discrete-event loop owns the
+//! timeline and *sets* it explicitly as it drains an [`EventQueue`].
+//! There are no participants and no blocking — `sleep` advances the
+//! clock directly — so one thread can play the role of thousands of
+//! workers while unmodified clock consumers (`EventLog`, policy code)
+//! observe simulated time through the same handle.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvError, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -51,6 +59,10 @@ use std::time::{Duration, Instant};
 pub enum Clock {
     Wall(WallClock),
     Virtual(Arc<VirtualClock>),
+    /// Explicitly-set simulated time for single-threaded discrete-event
+    /// loops (the macro-sim). No scheduling, no blocking: `sleep`
+    /// advances the timeline in place.
+    Manual(Arc<ManualClock>),
 }
 
 /// Real time relative to a fixed epoch.
@@ -70,6 +82,7 @@ impl std::fmt::Debug for Clock {
         match self {
             Clock::Wall(_) => write!(f, "Clock::Wall"),
             Clock::Virtual(_) => write!(f, "Clock::Virtual"),
+            Clock::Manual(_) => write!(f, "Clock::Manual"),
         }
     }
 }
@@ -85,6 +98,11 @@ impl Clock {
         Clock::Virtual(VirtualClock::new(seed))
     }
 
+    /// A manually-stepped clock starting at t=0 (macro-sim event loops).
+    pub fn manual() -> Clock {
+        Clock::Manual(Arc::new(ManualClock::new()))
+    }
+
     pub fn is_virtual(&self) -> bool {
         matches!(self, Clock::Virtual(_))
     }
@@ -94,6 +112,7 @@ impl Clock {
         match self {
             Clock::Wall(w) => w.epoch.elapsed(),
             Clock::Virtual(v) => v.now(),
+            Clock::Manual(m) => m.now(),
         }
     }
 
@@ -107,6 +126,7 @@ impl Clock {
                 let t = v.now() + d;
                 v.sleep_until(t);
             }
+            Clock::Manual(m) => m.advance(d),
         }
     }
 
@@ -120,15 +140,16 @@ impl Clock {
                 }
             }
             Clock::Virtual(v) => v.sleep_until(t),
+            Clock::Manual(m) => m.set(t),
         }
     }
 
     /// Register the calling thread as a scheduler participant. No-op
-    /// under wall time. The returned guard must live for the thread's
-    /// whole life (drop order: declare it first).
+    /// under wall and manual time. The returned guard must live for the
+    /// thread's whole life (drop order: declare it first).
     pub fn register(&self) -> ClockGuard {
         match self {
-            Clock::Wall(_) => ClockGuard { clock: None, tid: 0 },
+            Clock::Wall(_) | Clock::Manual(_) => ClockGuard { clock: None, tid: 0 },
             Clock::Virtual(v) => {
                 let tid = v.register();
                 ClockGuard { clock: Some(v.clone()), tid }
@@ -251,7 +272,9 @@ impl<T> Receiver<T> {
 
     pub fn recv(&self) -> Result<T, RecvError> {
         match &self.clock {
-            Clock::Wall(_) => self.rx.recv(),
+            // Manual clocks are single-threaded event loops; a blocking
+            // recv there degenerates to the plain channel semantics.
+            Clock::Wall(_) | Clock::Manual(_) => self.rx.recv(),
             Clock::Virtual(v) => match v.recv_loop(&self.rx, self.id, None) {
                 Ok(x) => Ok(x),
                 Err(_) => Err(RecvError),
@@ -261,7 +284,7 @@ impl<T> Receiver<T> {
 
     pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
         match &self.clock {
-            Clock::Wall(_) => self.rx.recv_timeout(timeout),
+            Clock::Wall(_) | Clock::Manual(_) => self.rx.recv_timeout(timeout),
             Clock::Virtual(v) => {
                 let deadline = v.now() + timeout;
                 v.recv_loop(&self.rx, self.id, Some(deadline))
@@ -636,6 +659,157 @@ impl VirtualClock {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Manual clock + discrete-event primitives (macro-sim, DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+/// Simulated time owned by a single-threaded event loop. Monotone by
+/// construction: `set` never moves backwards (a stale `sleep_until` is a
+/// no-op, matching the other clocks).
+pub struct ManualClock {
+    nanos: AtomicU64,
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        ManualClock::new()
+    }
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock { nanos: AtomicU64::new(0) }
+    }
+
+    pub fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    /// Advance to `t` (no-op if already past — time never rewinds).
+    pub fn set(&self, t: Duration) {
+        let t = t.as_nanos() as u64;
+        self.nanos.fetch_max(t, Ordering::Relaxed);
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Deterministic discrete-event queue: events pop in (time, insertion
+/// sequence) order, so same-instant events drain in the exact order they
+/// were scheduled — no `Ord` requirement on the payload, no tie-break
+/// ambiguity between runs.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<QueueEntry<E>>,
+    seq: u64,
+}
+
+struct QueueEntry<E> {
+    at: Duration,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for QueueEntry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for QueueEntry<E> {}
+impl<E> PartialOrd for QueueEntry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for QueueEntry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute sim time `at`.
+    pub fn push(&mut self, at: Duration, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(QueueEntry { at, seq, event });
+    }
+
+    /// Earliest pending deadline, if any.
+    pub fn peek_at(&self) -> Option<Duration> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop the earliest event as `(at, event)`.
+    pub fn pop(&mut self) -> Option<(Duration, E)> {
+        self.heap.pop().map(|e| (e.at, e.event))
+    }
+}
+
+/// A recurring deadline with an explicit "never fired" state.
+///
+/// The naive pattern `now.saturating_sub(last) >= every` with `last`
+/// initialized to `Duration::ZERO` treats the epoch as a real previous
+/// firing: a worker provisioned at t=500ms fires its very first check
+/// immediately instead of one interval after birth. `Periodic` arms on
+/// the first `due` call (returning `false`) and fires every `every`
+/// thereafter, which is identical for t=0 workers and correct for
+/// late-provisioned ones.
+#[derive(Debug, Clone, Copy)]
+pub struct Periodic {
+    every: Duration,
+    /// `None` until the first `due` call arms it — "never happened" is a
+    /// real state, not an epoch timestamp.
+    last: Option<Duration>,
+}
+
+impl Periodic {
+    pub fn new(every: Duration) -> Periodic {
+        Periodic { every, last: None }
+    }
+
+    /// True when a full interval has elapsed since the last firing (or
+    /// since arming). Firing re-arms at `now`.
+    pub fn due(&mut self, now: Duration) -> bool {
+        match self.last {
+            None => {
+                self.last = Some(now);
+                false
+            }
+            Some(last) if now.saturating_sub(last) >= self.every => {
+                self.last = Some(now);
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    /// Forget the last firing (next `due` re-arms without firing).
+    pub fn reset(&mut self) {
+        self.last = None;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,6 +918,52 @@ mod tests {
         b.sort();
         assert_eq!(a, vec![0, 1, 2, 3]);
         assert_eq!(b, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn manual_clock_sets_and_never_rewinds() {
+        let c = Clock::manual();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.sleep(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+        c.sleep_until(Duration::from_millis(3)); // stale: no-op
+        assert_eq!(c.now(), Duration::from_millis(5));
+        c.sleep_until(Duration::from_secs(2));
+        assert_eq!(c.now(), Duration::from_secs(2));
+        let _g = c.register(); // no-op, like wall
+        c.shutdown(); // no-op
+    }
+
+    #[test]
+    fn event_queue_pops_in_time_then_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(Duration::from_millis(10), "b");
+        q.push(Duration::from_millis(5), "a");
+        q.push(Duration::from_millis(10), "c"); // same instant as "b"
+        assert_eq!(q.peek_at(), Some(Duration::from_millis(5)));
+        assert_eq!(q.pop(), Some((Duration::from_millis(5), "a")));
+        // Ties drain in scheduling order, not payload order.
+        assert_eq!(q.pop(), Some((Duration::from_millis(10), "b")));
+        assert_eq!(q.pop(), Some((Duration::from_millis(10), "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn periodic_arms_without_firing_then_fires_per_interval() {
+        let every = Duration::from_millis(10);
+        let mut p = Periodic::new(every);
+        // A worker born at t=500ms must NOT fire immediately (the old
+        // epoch-sentinel bug): first call arms only.
+        let birth = Duration::from_millis(500);
+        assert!(!p.due(birth));
+        assert!(!p.due(birth + Duration::from_millis(9)));
+        assert!(p.due(birth + Duration::from_millis(10)));
+        // Re-armed at the firing instant.
+        assert!(!p.due(birth + Duration::from_millis(19)));
+        assert!(p.due(birth + Duration::from_millis(20)));
+        p.reset();
+        assert!(!p.due(birth + Duration::from_millis(40)));
     }
 
     #[test]

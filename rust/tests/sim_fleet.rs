@@ -1,0 +1,263 @@
+//! tier1-fleet: fleet-scale macro-sim smoke, determinism, and
+//! cross-validation against the real-math harness.
+//!
+//! The macro-sim (`tarragon::sim`) replaces the data plane with cost
+//! accounting but drives the production router/scaler/ERT policies, so
+//! these tests assert three things: (1) an O(100)-worker fleet survives
+//! the full scenario-DSL fault vocabulary with nothing lost and every
+//! control-plane class detected, (2) runs are byte-deterministic, and
+//! (3) a small macro-sim run and the same scenario on the real harness
+//! both satisfy the same recovery budgets.
+//!
+//! The O(1000)-worker / 10^6-request replay is `#[ignore]`d (minutes of
+//! CPU): `cargo test --release --test sim_fleet -- --ignored`.
+
+use std::time::Duration;
+use tarragon::config::Config;
+use tarragon::metrics::export::prometheus_text;
+use tarragon::metrics::FailureClass;
+use tarragon::sim::{run_fleet, EventLevel, FleetConfig, TraceSpec};
+use tarragon::testing::scenario::{Scenario, ScheduledFault};
+use tarragon::testing::synthetic;
+
+/// Budgets shared with the real-harness scenario matrix
+/// (`rust/tests/scenarios.rs`): detection within the silence window +
+/// probe ladder, and a bounded end-to-end stall.
+const MAX_DETECT: Duration = Duration::from_millis(250);
+const MAX_STALL: Duration = Duration::from_secs(2);
+
+fn faults(lines: &[&str]) -> Vec<ScheduledFault> {
+    lines
+        .iter()
+        .map(|l| ScheduledFault::parse(l).expect("fault DSL line"))
+        .collect()
+}
+
+/// O(100) workers: 64 AWs + 32 EWs + replicated control plane, a bursty
+/// trace, and every fault verb the scenario DSL knows.
+fn smoke_cfg() -> FleetConfig {
+    let mut cfg = FleetConfig::new(64, 32);
+    cfg.scaler.enabled = true;
+    cfg.scaler.hot_threshold = 64;
+    cfg.scaler.cold_threshold = 0; // scale-in exercised via the DSL verb
+    cfg
+}
+
+fn smoke_faults() -> Vec<ScheduledFault> {
+    faults(&[
+        "at 0ms hotspot e7",
+        "at 1s sever aw1 ew2",
+        "at 2s kill aw3",
+        "at 2500ms kill store0",
+        "at 3s kill ew5",
+        "at 3500ms kill gateway1",
+        "at 4s respawn aw3",
+        "at 4500ms kill orch",
+        "at 5s drain aw10",
+        "at 5s scale_ew up",
+        "at 6s respawn ew5",
+        "at 7s migrate aw11 aw12",
+        "at 8s scale_ew down ew20",
+    ])
+}
+
+#[test]
+fn fleet_smoke_survives_the_full_fault_vocabulary() {
+    let trace = TraceSpec::bursty(400.0, Duration::from_secs(10), 20260807).generate();
+    let r = run_fleet(smoke_cfg(), &trace, &smoke_faults());
+
+    // Nothing lost: every submitted request finished or was rejected at
+    // admission, and the strict gateway ledger never saw an unpaired
+    // release.
+    assert_eq!(r.report.submitted, trace.len());
+    assert_eq!(r.report.finished + r.report.rejected, trace.len());
+    assert_eq!(r.unfinished, 0, "requests stranded at the horizon");
+    assert_eq!(r.unpaired_departures, 0, "gateway ledger lost pairing");
+    assert_eq!(r.report.aw_failures, 1);
+    assert_eq!(r.report.ew_failures, 1);
+    assert_eq!(r.report.store_failovers, 1);
+    assert_eq!(r.report.gateway_failovers, 1);
+    assert_eq!(r.report.orch_promotions, 1);
+    assert!(r.report.scale_outs >= 1, "scale_ew up must provision");
+    assert!(r.report.preemptions >= 1, "drain/migrate must preempt residents");
+
+    // Every control-plane failure class surfaced as a detected incident.
+    let classes: Vec<FailureClass> =
+        r.recovery.incidents.iter().map(|i| i.class).collect();
+    for want in [
+        FailureClass::Aw,
+        FailureClass::Ew,
+        FailureClass::Store,
+        FailureClass::Gateway,
+        FailureClass::Orch,
+    ] {
+        assert!(classes.contains(&want), "missing incident class {want:?}: {classes:?}");
+    }
+
+    // Detection is exact under the virtual clock: kill time + the
+    // configured silence-window + probe-ladder latency.
+    let detect = smoke_cfg().detection.as_secs_f64();
+    for (class, killed_at) in
+        [(FailureClass::Aw, 2.0), (FailureClass::Ew, 3.0)]
+    {
+        let inc = r
+            .recovery
+            .incidents
+            .iter()
+            .find(|i| i.class == class)
+            .expect("incident present");
+        let expected = killed_at + detect;
+        assert!(
+            (inc.t_detect_s - expected).abs() < 1e-6,
+            "{class:?} detected at {} expected {expected}",
+            inc.t_detect_s
+        );
+    }
+
+    // The standard exporters consume the macro-sim report unchanged.
+    let prom = prometheus_text(&r.report);
+    assert!(prom.contains("tarragon_aw_failures_total 1"));
+    assert!(prom.contains("tarragon_ew_failures_total 1"));
+    assert!(prom.contains("tarragon_store_failovers_total 1"));
+    let anatomy = r.recovery.render();
+    assert!(anatomy.contains("aw"), "recovery anatomy renders:\n{anatomy}");
+}
+
+#[test]
+fn fleet_runs_are_byte_deterministic() {
+    let spec = TraceSpec::multi_tenant(TraceSpec::diurnal(
+        100.0,
+        Duration::from_secs(8),
+        77,
+    ));
+    let trace = spec.generate();
+    let fs = faults(&["at 1s kill ew1", "at 2s kill aw2", "at 3s respawn ew1"]);
+    let mk = || {
+        let mut cfg = FleetConfig::new(16, 8);
+        cfg.scaler.enabled = true;
+        cfg.scaler.hot_threshold = 64;
+        cfg.scaler.cold_threshold = 0;
+        cfg
+    };
+    let a = run_fleet(mk(), &trace, &fs);
+    let b = run_fleet(mk(), &trace, &fs);
+    // Same config + trace + faults ⇒ the rendered event logs are
+    // byte-identical, not merely statistically similar.
+    assert_eq!(a.events.render(), b.events.render());
+    assert_eq!(a.report.finished, b.report.finished);
+    assert_eq!(a.report.preemptions, b.report.preemptions);
+    assert_eq!(a.sim_end, b.sim_end);
+    assert_eq!(a.unpaired_departures, 0);
+}
+
+#[test]
+fn macro_sim_and_real_harness_satisfy_the_same_recovery_budgets() {
+    // Real-math harness: 2 AWs x 2 EWs, kill ew0 mid-run (the same
+    // scenario the matrix in scenarios.rs asserts).
+    let (manifest, weights, _) = synthetic::ensure();
+    let mut cfg = Config::small_test();
+    cfg.transport.latency = Duration::from_millis(1);
+    cfg.transport.worker_extra_init = Duration::from_millis(200);
+    let resilience = cfg.resilience.clone();
+    let s = Scenario::new("xval-ew-kill", cfg)
+        .request(0, Duration::ZERO, vec![1, 2, 3, 4, 5, 6, 7, 8], 32)
+        .request(1, Duration::from_millis(5), vec![9, 10, 11], 32)
+        .fault("at 60ms kill ew0");
+    let real = s.run(manifest, weights);
+    assert!(real.completed, "real harness did not drain");
+    real.assert_recovery(1, MAX_DETECT, MAX_STALL);
+
+    // Macro-sim: same topology, same fault schedule, detection latency
+    // derived from the same ResilienceConfig.
+    let mut mcfg = FleetConfig::new(2, 2);
+    mcfg.detection = FleetConfig::detection_latency(&resilience);
+    let trace = vec![
+        tarragon::sim::SimRequest {
+            id: 0,
+            arrival: Duration::ZERO,
+            prompt_len: 8,
+            max_new: 32,
+            tenant: 0,
+        },
+        tarragon::sim::SimRequest {
+            id: 1,
+            arrival: Duration::from_millis(5),
+            prompt_len: 3,
+            max_new: 32,
+            tenant: 0,
+        },
+    ];
+    let sim = run_fleet(mcfg.clone(), &trace, &faults(&["at 60ms kill ew0"]));
+    assert_eq!(sim.report.finished, 2, "macro-sim lost a request");
+    assert_eq!(sim.report.ew_failures, 1);
+    assert_eq!(sim.unpaired_departures, 0);
+
+    // Cross-validation: both stacks confirm the same death class inside
+    // the same detection budget, and neither stalls past the cap.
+    let sim_inc = sim
+        .recovery
+        .incidents
+        .iter()
+        .find(|i| i.class == FailureClass::Ew)
+        .expect("macro-sim missed the EW incident");
+    let real_has_ew =
+        real.recovery.incidents.iter().any(|i| i.class == FailureClass::Ew);
+    assert!(real_has_ew, "real harness missed the EW incident:\n{}", real.recovery.render());
+    let sim_detect = sim_inc.t_detect_s - 0.060;
+    assert!(
+        (sim_detect - mcfg.detection.as_secs_f64()).abs() < 1e-6,
+        "macro detection drifted: {sim_detect}"
+    );
+    assert!(
+        sim_detect <= MAX_DETECT.as_secs_f64(),
+        "macro detection {sim_detect} outside the shared budget"
+    );
+    for inc in &sim.recovery.incidents {
+        for v in &inc.victims {
+            assert!(
+                v.total_stall_s <= MAX_STALL.as_secs_f64(),
+                "macro victim stalled {}s",
+                v.total_stall_s
+            );
+        }
+    }
+}
+
+/// The headline scale claim: O(1000) workers, O(10^6) requests, one
+/// process. Lifecycle event level keeps the log at ~5 events/request.
+#[test]
+#[ignore = "minutes of CPU; run with --release -- --ignored"]
+fn full_scale_fleet_replays_a_million_requests() {
+    let spec = TraceSpec::multi_tenant(TraceSpec::diurnal(
+        4100.0,
+        Duration::from_secs(250),
+        1_000_003,
+    ));
+    let trace = spec.generate();
+    assert!(
+        trace.len() >= 1_000_000,
+        "trace generator undershot: {}",
+        trace.len()
+    );
+    let mut cfg = FleetConfig::new(1000, 250);
+    cfg.event_level = EventLevel::Lifecycle;
+    let fs = faults(&[
+        "at 0ms hotspot e11",
+        "at 30s kill aw7",
+        "at 40s respawn aw7",
+        "at 60s kill ew3",
+        "at 80s respawn ew3",
+        "at 100s drain aw500",
+    ]);
+    let r = run_fleet(cfg, &trace, &fs);
+    assert_eq!(r.report.submitted, trace.len());
+    assert_eq!(r.report.finished + r.report.rejected, trace.len());
+    assert_eq!(r.unfinished, 0);
+    assert_eq!(r.unpaired_departures, 0);
+    assert_eq!(r.report.aw_failures, 1);
+    assert_eq!(r.report.ew_failures, 1);
+    let classes: Vec<FailureClass> =
+        r.recovery.incidents.iter().map(|i| i.class).collect();
+    assert!(classes.contains(&FailureClass::Aw));
+    assert!(classes.contains(&FailureClass::Ew));
+}
